@@ -1,0 +1,58 @@
+//! θ-threshold ablation (Figure 3 shape, small-n): sweeps the MARS
+//! logit-ratio threshold and prints the speedup/accuracy trade-off.
+//!
+//! ```sh
+//! cargo run --release --example ablation_theta -- [n_examples]
+//! ```
+
+use mars::bench::BenchCtx;
+use mars::datasets::Task;
+use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts`");
+        return Ok(());
+    }
+    let engine = DecodeEngine::new(Runtime::new(&dir)?);
+    let ctx = BenchCtx::new(&engine, n, 7);
+
+    let task = Task::Arith;
+    let base = ctx.baseline(task, 1.0)?;
+    println!(
+        "baseline (AR): acc={:.3} {:.1} tok/s\n",
+        base.quality.accuracy, base.mean_tok_per_s
+    );
+    println!("theta | speedup(sim) | speedup(wall) | tau  | accuracy | relaxed");
+    println!("------+--------------+---------------+------+----------+--------");
+    for theta in [0.80f32, 0.84, 0.88, 0.90, 0.92, 0.96, 0.995] {
+        let p = GenParams {
+            method: Method::EagleTree,
+            mars: true,
+            theta,
+            temperature: 1.0,
+            max_new: 96,
+            ..GenParams::default()
+        };
+        let e = ctx.run_task(task, &p)?;
+        println!(
+            "{theta:.3} | {:>11.2}x | {:>12.2}x | {:>4.2} | {:>8.3} | {:>6.0}",
+            e.speedup_sim(&base),
+            e.speedup_wall(&base),
+            e.tau,
+            e.quality.accuracy,
+            e.relaxed_total
+        );
+    }
+    println!(
+        "\nExpected shape (paper Fig. 3): speedup decreases monotonically \
+         with theta; accuracy peaks near theta = 0.9."
+    );
+    Ok(())
+}

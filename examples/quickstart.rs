@@ -1,0 +1,88 @@
+//! Quickstart: load the artifacts, generate with vanilla AR and with MARS,
+//! and compare τ / speed. Run after `make artifacts && cargo build`:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("artifacts not found at {} — run `make artifacts`", dir.display());
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    println!("runtime up ({:.1}s compile)", rt.compile_seconds);
+    let engine = DecodeEngine::new(rt);
+
+    let prompt = "Q: 37+58=?\nA: ";
+    println!("prompt: {prompt:?}\n");
+
+    // vanilla autoregressive baseline (the paper's 1.00x)
+    let ar = engine.generate(
+        prompt,
+        &GenParams {
+            method: Method::Ar,
+            temperature: 1.0,
+            max_new: 32,
+            seed: 1,
+            ..GenParams::default()
+        },
+    )?;
+    println!("AR        : {:?}", ar.text.trim());
+    println!(
+        "            {:.1} tok/s, {} rounds",
+        ar.tok_per_sec(),
+        ar.snapshot.rounds
+    );
+
+    // EAGLE-style speculative decoding, strict verification
+    let strict = engine.generate(
+        prompt,
+        &GenParams {
+            method: Method::EagleTree,
+            mars: false,
+            temperature: 1.0,
+            max_new: 32,
+            seed: 1,
+            ..GenParams::default()
+        },
+    )?;
+    println!("EAGLE     : {:?}", strict.text.trim());
+    println!(
+        "            {:.1} tok/s, tau={:.2}",
+        strict.tok_per_sec(),
+        strict.tau()
+    );
+
+    // + MARS margin-aware verification (the paper's contribution)
+    let mars = engine.generate(
+        prompt,
+        &GenParams {
+            method: Method::EagleTree,
+            mars: true,
+            theta: 0.9,
+            temperature: 1.0,
+            max_new: 32,
+            seed: 1,
+            ..GenParams::default()
+        },
+    )?;
+    println!("MARS      : {:?}", mars.text.trim());
+    println!(
+        "            {:.1} tok/s, tau={:.2}, relaxed tie-breaks={}",
+        mars.tok_per_sec(),
+        mars.tau(),
+        mars.snapshot.relaxed_accepts
+    );
+
+    println!(
+        "\nspeedup vs AR: EAGLE {:.2}x, MARS {:.2}x (wall-clock)",
+        strict.tok_per_sec() / ar.tok_per_sec(),
+        mars.tok_per_sec() / ar.tok_per_sec()
+    );
+    Ok(())
+}

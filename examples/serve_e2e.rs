@@ -1,0 +1,114 @@
+//! End-to-end serving driver (the validation run recorded in
+//! EXPERIMENTS.md): starts the router + replicas + TCP server, drives a
+//! mixed open-loop workload of batched requests across all five task
+//! families and both verification modes, and reports latency/throughput.
+//!
+//! ```sh
+//! cargo run --release --example serve_e2e -- [n_requests] [replicas]
+//! ```
+
+use std::sync::Arc;
+
+use mars::coordinator::router::{Router, RouterPolicy};
+use mars::coordinator::scheduler;
+use mars::coordinator::server;
+use mars::datasets::{dataset, Task};
+use mars::engine::{GenParams, Method};
+use mars::runtime::Artifacts;
+use mars::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let replicas: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts`");
+        return Ok(());
+    }
+
+    println!("starting router with {replicas} replica(s)...");
+    let router = Arc::new(Router::start(
+        &dir,
+        replicas,
+        4,
+        false,
+        RouterPolicy::LeastLoaded,
+    )?);
+
+    // TCP smoke: prove the wire protocol works end to end
+    let handle = server::serve(router.clone(), "127.0.0.1:0")?;
+    let addr = handle.addr.to_string();
+    let pong = server::client_roundtrip(&addr, r#"{"cmd": "ping"}"#)?;
+    println!("server up on {addr}, ping -> {}", pong.to_string_json());
+    let wire = server::client_roundtrip(
+        &addr,
+        "{\"prompt\": \"Q: 6+7=?\\nA: \", \"method\": \"eagle_tree\", \
+         \"mars\": true, \"max_new\": 16, \"seed\": 3}",
+    )?;
+    println!("wire request -> {}\n", wire.to_string_json());
+
+    // mixed workload: all tasks, alternating strict / MARS verification
+    let mut prompts = Vec::new();
+    for i in 0..n_requests {
+        let task = Task::all()[i % Task::all().len()];
+        let ex = &dataset(task, 1, 1000 + i as u64)[0];
+        let params = GenParams {
+            method: Method::EagleTree,
+            mars: i % 2 == 0,
+            temperature: 1.0,
+            max_new: 64,
+            seed: i as u64,
+            ..GenParams::default()
+        };
+        prompts.push((ex.prompt.clone(), params));
+    }
+
+    println!("driving {n_requests} requests (open loop, ~20 req/s)...");
+    let t0 = std::time::Instant::now();
+    let responses = scheduler::drive_open_loop(&router, &prompts, 20.0, 42);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lat = Summary::new();
+    let mut tau_mars = Summary::new();
+    let mut tau_strict = Summary::new();
+    let mut tokens = 0usize;
+    let mut errors = 0usize;
+    for (i, r) in responses.iter().enumerate() {
+        if !r.ok {
+            errors += 1;
+            continue;
+        }
+        tokens += r.tokens;
+        lat.push((r.decode_seconds + r.prefill_seconds) * 1e3);
+        if i % 2 == 0 {
+            tau_mars.push(r.tau);
+        } else {
+            tau_strict.push(r.tau);
+        }
+    }
+
+    println!("\n== serve_e2e results ==");
+    println!("requests: {} ok, {} errors", responses.len() - errors, errors);
+    println!("wall time: {wall:.2}s");
+    println!("throughput: {:.1} tok/s, {:.2} req/s",
+        tokens as f64 / wall, (responses.len() - errors) as f64 / wall);
+    println!(
+        "request latency ms: p50={:.0} p99={:.0} mean={:.0}",
+        lat.p50(),
+        lat.p99(),
+        lat.mean()
+    );
+    println!(
+        "tau: MARS={:.2} strict={:.2} (margin-aware verification accepts \
+         more per round)",
+        tau_mars.mean(),
+        tau_strict.mean()
+    );
+    println!(
+        "router metrics: {}",
+        router.metrics.snapshot_json().to_string_json()
+    );
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""AOT pipeline: lower every round program to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.
+
+Artifacts written to --out:
+    <name>.hlo.txt         one per executable (prefill, ar_step, rounds...)
+    state_layout.json      flat-state ABI (offsets, scalar ids, hash)
+    vocab.json             tokenizer spec
+    manifest.json          executable index: parameter lists, weight specs
+
+Usage: cd python && python -m compile.aot --weights ../artifacts/weights \
+           --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import rounds as R
+from . import state_spec as S
+from . import tokenizer
+from .train import load_model
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    # keep_unused: parameter lists must match the manifest exactly even if
+    # XLA could prune an unused weight (the rust side passes all of them)
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def weight_spec_structs(which: str):
+    return [f32(*shape) for _, shape in R.weight_specs(which)]
+
+
+EXECUTABLES = {
+    # name: (fn, extra-inputs [(name, shape)], weight families in order)
+    "prefill": (
+        R.prefill,
+        [("prompt", (M.P_MAX,)), ("cfg", (S.N_CFG,))],
+        ["target", "eagle", "sps"],
+    ),
+    "ar_step": (R.ar_step, [], ["target"]),
+    "sps_round": (R.sps_round, [], ["target", "sps"]),
+    "eagle_tree_round": (R.eagle_tree_round, [], ["target", "eagle"]),
+    "medusa_round": (R.medusa_round, [], ["target", "medusa"]),
+    "verify_ext_round": (
+        R.verify_ext_round, [("ext", (S.K_MAX + 1,))], ["target"]
+    ),
+    "extract": (R.extract, [], []),
+    "extract_probe": (R.extract_probe, [], []),
+}
+
+STATELESS = {"prefill"}  # no leading state argument
+
+
+def lower_all(out_dir: str) -> dict:
+    manifest = {"executables": {}, "weights": {}}
+    for fam in ("target", "eagle", "sps", "medusa"):
+        manifest["weights"][fam] = [
+            {"name": n, "shape": list(s)} for n, s in R.weight_specs(fam)
+        ]
+    for name, (fn, extras, fams) in EXECUTABLES.items():
+        specs = [] if name in STATELESS else [f32(S.STATE_LEN)]
+        specs += [f32(*shape) for _, shape in extras]
+        for fam in fams:
+            specs += weight_spec_structs(fam)
+        print(f"lowering {name} ({len(specs)} params)...", flush=True)
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "state_input": name not in STATELESS,
+            "extras": [
+                {"name": n, "shape": list(sh)} for n, sh in extras
+            ],
+            "weight_families": fams,
+            "hlo_bytes": len(text),
+        }
+        print(f"  -> {len(text) / 1e6:.2f} MB hlo text", flush=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights", required=True)
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # validate weights exist (the manifest records their file layout)
+    for fam, tmpl in (
+        ("target", R._TARGET_TREE), ("eagle", R._EAGLE_TREE),
+        ("sps", R._SPS_TREE), ("medusa", R._MEDUSA_TREE),
+    ):
+        load_model(os.path.join(args.weights, fam), tmpl)
+
+    manifest = lower_all(args.out)
+    manifest["model_cfgs"] = {
+        "target": M.TARGET_CFG.as_dict(),
+        "eagle": M.EAGLE_CFG.as_dict(),
+        "sps": M.DRAFT_CFG.as_dict(),
+        "medusa_heads": M.MEDUSA_HEADS,
+    }
+    manifest["use_pallas"] = R.USE_PALLAS
+    layout_doc = json.loads(S.layout_json())
+    manifest["state_hash"] = layout_doc["hash"]
+
+    with open(os.path.join(args.out, "state_layout.json"), "w") as f:
+        f.write(S.layout_json())
+    with open(os.path.join(args.out, "vocab.json"), "w") as f:
+        json.dump(tokenizer.vocab_spec(), f, indent=1)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("aot complete:", args.out)
+
+
+if __name__ == "__main__":
+    main()

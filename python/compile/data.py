@@ -1,0 +1,256 @@
+"""Synthetic task corpus — laptop-scale analogs of the paper's benchmarks.
+
+Five task families, chosen so that each carries the *metric family* of the
+corresponding benchmark in the MARS evaluation (see DESIGN.md §1.3):
+
+    arith  — GSM8K analog          exact-match accuracy on the final answer
+    code   — HumanEval/MBPP analog avg@k exact output match
+    chat   — MT-Bench/Alpaca analog judge score (target loglik + keywords)
+    sum    — CNN/DailyMail analog  ROUGE-L (lead-1 summarization convention)
+    mt     — WMT19 Zh-En analog    BLEU / chrF on a deterministic cipher
+
+Every example is `prompt -> completion`; training documents are
+`prompt + completion + EOS`. The same templates (not the same RNG) are
+re-implemented in `rust/src/datasets/` for serving-side evaluation.
+"""
+
+import random
+
+TASKS = ("arith", "code", "chat", "sum", "mt")
+
+# ---------------------------------------------------------------- arith ----
+
+
+def gen_arith(rng: random.Random) -> tuple[str, str]:
+    kind = rng.randrange(3)
+    if kind == 0:  # single op
+        a, b = rng.randrange(2, 99), rng.randrange(2, 99)
+        op = rng.choice(["+", "-", "*"])
+        if op == "-" and b > a:
+            a, b = b, a
+        if op == "*":
+            a, b = rng.randrange(2, 12), rng.randrange(2, 12)
+        val = eval(f"{a}{op}{b}")
+        return f"Q: {a}{op}{b}=?\nA: ", f"{val}\n"
+    if kind == 1:  # two-step with shown work (reasoning-trace analog)
+        a, b = rng.randrange(2, 9), rng.randrange(2, 9)
+        c = rng.randrange(2, 9)
+        inner = b + c
+        val = a * inner
+        return (
+            f"Q: {a}*({b}+{c})=?\nA: ",
+            f"{b}+{c}={inner}; {a}*{inner}={val}\n",
+        )
+    # chained additions
+    xs = [rng.randrange(1, 50) for _ in range(3)]
+    s1 = xs[0] + xs[1]
+    s2 = s1 + xs[2]
+    return (
+        f"Q: {xs[0]}+{xs[1]}+{xs[2]}=?\nA: ",
+        f"{xs[0]}+{xs[1]}={s1}; {s1}+{xs[2]}={s2}\n",
+    )
+
+
+def arith_answer(completion: str) -> str:
+    """Final answer = last integer in the completion."""
+    tail = completion.strip().replace(";", " ").split()
+    for tok in reversed(tail):
+        t = tok.split("=")[-1]
+        if t.lstrip("-").isdigit():
+            return t
+    return ""
+
+
+# ----------------------------------------------------------------- code ----
+
+_WORDS = [
+    "ab", "cat", "dog", "sun", "map", "key", "box", "red", "ice", "owl",
+    "pin", "fox", "jam", "log", "net", "orb", "paw", "rug", "sky", "toe",
+]
+
+
+def _code_eval(fn: str, args: list) -> str:
+    if fn == "rep":
+        return args[0] * args[1]
+    if fn == "rev":
+        return args[0][::-1]
+    if fn == "up":
+        return args[0].upper()
+    if fn == "cat":
+        return args[0] + args[1]
+    if fn == "zip2":
+        return "".join(a + b for a, b in zip(args[0], args[1]))
+    raise ValueError(fn)
+
+
+def gen_code(rng: random.Random) -> tuple[str, str]:
+    fn = rng.choice(["rep", "rev", "up", "cat", "zip2"])
+    w = rng.choice(_WORDS)
+    if fn == "rep":
+        n = rng.randrange(2, 5)
+        call, out = f"rep('{w}',{n})", _code_eval(fn, [w, n])
+    elif fn in ("cat", "zip2"):
+        w2 = rng.choice(_WORDS)
+        if fn == "zip2":
+            m = min(len(w), len(w2))
+            w, w2 = w[:m], w2[:m]
+        call, out = f"{fn}('{w}','{w2}')", _code_eval(fn, [w, w2])
+    else:
+        call, out = f"{fn}('{w}')", _code_eval(fn, [w])
+    return f">>> {call}\n", f"'{out}'\n"
+
+
+# ----------------------------------------------------------------- chat ----
+
+_KB = [
+    ("Zorland", "Mirefal"), ("Quovia", "Bruntal"), ("Aldora", "Seaphor"),
+    ("Vintria", "Caldus"), ("Norvand", "Tessily"), ("Ostrevia", "Palmyre"),
+    ("Kelluna", "Dorvane"), ("Merrowin", "Ashford"), ("Tallgard", "Rivermoor"),
+    ("Ulmstead", "Graypost"), ("Firelund", "Coldbay"), ("Westmarch", "Highfen"),
+]
+_COLORS = [
+    ("bryleaf", "green"), ("sunpetal", "yellow"), ("mooncap", "white"),
+    ("ashroot", "gray"), ("embervine", "red"), ("frostfern", "blue"),
+]
+_OPINIONS = [
+    ("the sea", "The sea is wide and calm at dawn."),
+    ("the forest", "The forest is quiet and full of tall trees."),
+    ("the city", "The city is busy and bright at night."),
+    ("the desert", "The desert is dry and still under the sun."),
+    ("the mountain", "The mountain is steep and cold at the top."),
+]
+
+
+def gen_chat(rng: random.Random) -> tuple[str, str]:
+    kind = rng.randrange(3)
+    if kind == 0:
+        c, cap = rng.choice(_KB)
+        return (
+            f"User: What is the capital of {c}?\nBot: ",
+            f"The capital of {c} is {cap}.\n",
+        )
+    if kind == 1:
+        plant, col = rng.choice(_COLORS)
+        return (
+            f"User: What color is the {plant} plant?\nBot: ",
+            f"The {plant} plant is {col}.\n",
+        )
+    topic, sent = rng.choice(_OPINIONS)
+    return (f"User: Write one sentence about {topic}.\nBot: ", sent + "\n")
+
+
+def chat_keywords(prompt: str, completion: str) -> list[str]:
+    """Keywords the judge checks for (ground-truth content words)."""
+    words = [w.strip(".?,'") for w in completion.split()]
+    return [w for w in words if w and w[0].isupper() or len(w) >= 5][:3]
+
+
+# ------------------------------------------------------------------ sum ----
+
+_SUBJ = ["The mayor", "A farmer", "The team", "One pilot", "The crew",
+         "A doctor", "The judge", "A singer", "The coach", "An actor"]
+_VERB = ["opened", "visited", "repaired", "sold", "found", "built",
+         "closed", "painted", "moved", "won"]
+_OBJ = ["the old bridge", "a small market", "the north road", "a red barn",
+        "the city hall", "a fishing boat", "the corn field", "a stone well",
+        "the town clock", "a long fence"]
+_WHEN = ["on Monday", "last week", "in the spring", "at noon",
+         "after the storm", "before dawn", "in early May", "this year"]
+
+
+def _sentence(rng: random.Random) -> str:
+    return (
+        f"{rng.choice(_SUBJ)} {rng.choice(_VERB)} {rng.choice(_OBJ)} "
+        f"{rng.choice(_WHEN)}."
+    )
+
+
+def gen_sum(rng: random.Random) -> tuple[str, str]:
+    n = rng.randrange(2, 4)
+    sents = [_sentence(rng) for _ in range(n)]
+    # lead-1 convention: the reference summary is the first sentence.
+    return ("Text: " + " ".join(sents) + "\nSummary: ", sents[0] + "\n")
+
+
+# ------------------------------------------------------------------- mt ----
+
+# Deterministic substitution cipher over lowercase letters (the "source
+# language"); translation = inverse mapping. Model learns char-level MT.
+_CIPHER_SHIFT = 7
+
+
+def cipher_encode(text: str) -> str:
+    out = []
+    for ch in text:
+        if "a" <= ch <= "z":
+            out.append(chr((ord(ch) - 97 + _CIPHER_SHIFT) % 26 + 97))
+        else:
+            out.append(ch)
+    return "".join(out)
+
+
+_MT_POOL = [
+    "the river runs past the mill",
+    "a cold wind moves the tall grass",
+    "the old man sells bread at the market",
+    "two boats wait near the stone pier",
+    "rain fell on the quiet village at night",
+    "the children walk to school along the canal",
+    "a gray cat sleeps on the warm roof",
+    "the train leaves the station before sunrise",
+    "farmers bring apples and corn to the square",
+    "lanterns light the narrow street in winter",
+    "the baker opens his shop at dawn",
+    "soldiers marched over the wooden bridge",
+    "a letter arrived from the far coast",
+    "the bell rings twice at the old tower",
+    "ships carry salt and wool across the bay",
+    "the girl paints small birds on paper",
+]
+
+
+def gen_mt(rng: random.Random) -> tuple[str, str]:
+    src = rng.choice(_MT_POOL)
+    # optionally recombine halves for variety
+    if rng.random() < 0.5:
+        other = rng.choice(_MT_POOL)
+        a, b = src.split()[: 4], other.split()[4:]
+        if b:
+            src = " ".join(a + b)
+    return (f"Translate: {cipher_encode(src)}\nOutput: ", src + "\n")
+
+
+# ------------------------------------------------------------- corpus ------
+
+_GENS = {
+    "arith": gen_arith,
+    "code": gen_code,
+    "chat": gen_chat,
+    "sum": gen_sum,
+    "mt": gen_mt,
+}
+
+
+def gen_example(task: str, rng: random.Random) -> tuple[str, str]:
+    return _GENS[task](rng)
+
+
+def gen_document(rng: random.Random) -> str:
+    task = rng.choice(TASKS)
+    p, c = gen_example(task, rng)
+    return p + c
+
+
+def token_stream(seed: int, seq_len: int, tokenizer):
+    """Infinite stream of packed training sequences (list[int] of seq_len+1).
+
+    Documents are concatenated with EOS separators and chunked; the +1 makes
+    (input, shifted-target) pairs trivial to slice.
+    """
+    rng = random.Random(seed)
+    buf: list[int] = []
+    while True:
+        while len(buf) < seq_len + 1:
+            buf.extend(tokenizer.encode(gen_document(rng)) + [tokenizer.EOS])
+        yield buf[: seq_len + 1]
+        buf = buf[seq_len:]

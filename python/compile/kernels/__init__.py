@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (interpret=True on this CPU image) + pure-jnp oracle.
+
+`top2` — blocked top-2 logit reduction over the vocab axis (the paper's
+bandwidth-bound verification hot spot).
+`mars_verify` — the margin-aware accept scan of Algorithm 1.
+`ref` — pure-jnp reference implementations used by pytest and, when
+`MARS_USE_PALLAS=0`, by the lowered rounds themselves (A/B artifact).
+"""
+
+from .top2 import top2_pallas  # noqa: F401
+from .mars_verify import mars_verify_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pallas kernel: the MARS margin-aware accept scan (paper Algorithm 1).
+
+Per verified position i (a chain position or a tree path step):
+
+    exact match    draft_i == tstar_i                       -> accept (1)
+    relaxation     draft_i == i2_i  and  r_i > theta
+                   and z1_i > 0 and z2_i > 0 and mars_on    -> accept (2)
+    otherwise      reject (0), scan stops at first reject
+
+`tstar` is the target's chosen token at that position (argmax when greedy,
+a temperature sample otherwise) — precomputed by the round program so the
+kernel stays RNG-free. The kernel also emits r_i for the probe ring.
+
+Outputs: flags [T] (0/1/2), r [T], m [1] (accepted prefix length).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _verify_kernel(z1_ref, z2_ref, i2_ref, tstar_ref, draft_ref, cfg_ref,
+                   flags_ref, r_ref, m_ref, *, t_max):
+    z1 = z1_ref[...]
+    z2 = z2_ref[...]
+    i2 = i2_ref[...]
+    tstar = tstar_ref[...]
+    draft = draft_ref[...]
+    theta = cfg_ref[0]
+    mars_on = cfg_ref[1]
+    k = cfg_ref[2].astype(jnp.int32)          # number of live positions
+
+    # margin ratio r = z2/z1, defined on the positive-dominant domain
+    safe = (z1 > 0.0) & (z2 > 0.0)
+    r = jnp.where(safe, z2 / jnp.maximum(z1, 1e-9), 0.0)
+
+    exact = draft == tstar
+    relaxed = (
+        (mars_on > 0.5)
+        & (draft == i2)
+        & safe
+        & (r > theta)
+        & jnp.logical_not(exact)
+    )
+    ok = exact | relaxed
+    live = jax.lax.broadcasted_iota(jnp.int32, (t_max,), 0) < k
+    ok = ok & live
+
+    # accepted prefix: positions before the first rejection
+    prefix = jnp.cumprod(ok.astype(jnp.int32))
+    flags = jnp.where(
+        prefix > 0, jnp.where(relaxed, 2, 1), 0
+    ).astype(jnp.float32)
+
+    flags_ref[...] = flags
+    r_ref[...] = r
+    m_ref[0] = jnp.sum(prefix).astype(jnp.float32)
+
+
+def mars_verify_pallas(z1, z2, i2, tstar, draft, theta, mars_on, k):
+    """Run the MARS accept scan. All inputs are 1-D of length T (i2, tstar,
+    draft int32; z1, z2 f32); theta/mars_on/k are scalars.
+
+    Returns (flags f32 [T] in {0,1,2}, r f32 [T], m f32 scalar).
+    """
+    t = z1.shape[0]
+    cfg = jnp.stack(
+        [
+            jnp.asarray(theta, jnp.float32),
+            jnp.asarray(mars_on, jnp.float32),
+            jnp.asarray(k, jnp.float32),
+        ]
+    )
+    kernel = functools.partial(_verify_kernel, t_max=t)
+    flags, r, m = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,  # CPU image: Mosaic custom-calls cannot run here
+    )(z1, z2, i2.astype(jnp.int32), tstar.astype(jnp.int32),
+      draft.astype(jnp.int32), cfg)
+    return flags, r, m[0]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+pytest checks `top2_pallas` / `mars_verify_pallas` against these across
+shape/θ sweeps; the lowered rounds can also be built against the oracle
+(MARS_USE_PALLAS=0) for an A/B artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def top2_ref(logits):
+    """Top-2 values/indices per row via lax.top_k."""
+    vals, idx = jax.lax.top_k(logits, 2)
+    return (
+        vals[:, 0],
+        vals[:, 1],
+        idx[:, 0].astype(jnp.int32),
+        idx[:, 1].astype(jnp.int32),
+    )
+
+
+def mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k):
+    """Reference accept scan — mirrors mars_verify.py exactly."""
+    t = z1.shape[0]
+    safe = (z1 > 0.0) & (z2 > 0.0)
+    r = jnp.where(safe, z2 / jnp.maximum(z1, 1e-9), 0.0)
+    i2 = i2.astype(jnp.int32)
+    tstar = tstar.astype(jnp.int32)
+    draft = draft.astype(jnp.int32)
+
+    exact = draft == tstar
+    relaxed = (
+        (jnp.asarray(mars_on, jnp.float32) > 0.5)
+        & (draft == i2)
+        & safe
+        & (r > jnp.asarray(theta, jnp.float32))
+        & jnp.logical_not(exact)
+    )
+    ok = (exact | relaxed) & (jnp.arange(t) < jnp.asarray(k, jnp.int32))
+    prefix = jnp.cumprod(ok.astype(jnp.int32))
+    flags = jnp.where(prefix > 0, jnp.where(relaxed, 2, 1), 0).astype(
+        jnp.float32
+    )
+    m = jnp.sum(prefix).astype(jnp.float32)
+    return flags, r, m

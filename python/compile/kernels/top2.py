@@ -1,0 +1,87 @@
+"""Pallas kernel: blocked top-2 reduction over the vocabulary axis.
+
+Input  logits [T, V]
+Output z1 [T], z2 [T], i1 [T], i2 [T]   (top-1/top-2 values and indices)
+
+The grid tiles the vocab axis; a running (z1, z2, i1, i2) accumulator lives
+in the output refs and is folded across tiles. On TPU the [T, VB] tile sits
+in VMEM and the reduction runs on the VPU — one pass over the logits,
+which is the roofline for this op (the jnp reference `top_k` does a sort
+per row). See DESIGN.md §8 for the VMEM/MXU accounting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _top2_kernel(x_ref, z1_ref, z2_ref, i1_ref, i2_ref, *, vb):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        z1_ref[...] = jnp.full_like(z1_ref, NEG)
+        z2_ref[...] = jnp.full_like(z2_ref, NEG)
+        i1_ref[...] = jnp.zeros_like(i1_ref)
+        i2_ref[...] = jnp.zeros_like(i2_ref)
+
+    x = x_ref[...]                                   # [T, VB] tile
+    t = x.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, vb), 1) + j * vb
+
+    # tile-local top-2
+    tz1 = jnp.max(x, axis=1)
+    ti1 = jnp.argmax(x, axis=1).astype(jnp.int32) + j * vb
+    masked = jnp.where(col == ti1[:, None], NEG, x)
+    tz2 = jnp.max(masked, axis=1)
+    ti2 = jnp.argmax(masked, axis=1).astype(jnp.int32) + j * vb
+
+    # fold with running accumulator: merge two sorted pairs
+    az1, az2 = z1_ref[...], z2_ref[...]
+    ai1, ai2 = i1_ref[...], i2_ref[...]
+
+    best1 = jnp.where(tz1 > az1, tz1, az1)
+    besti1 = jnp.where(tz1 > az1, ti1, ai1)
+    # candidate seconds: the loser of the firsts, and both seconds
+    lose1 = jnp.where(tz1 > az1, az1, tz1)
+    losei1 = jnp.where(tz1 > az1, ai1, ti1)
+    s = jnp.where(lose1 > az2, lose1, az2)
+    si = jnp.where(lose1 > az2, losei1, ai2)
+    best2 = jnp.where(tz2 > s, tz2, s)
+    besti2 = jnp.where(tz2 > s, ti2, si)
+
+    z1_ref[...] = best1
+    z2_ref[...] = best2
+    i1_ref[...] = besti1
+    i2_ref[...] = besti2
+
+
+def top2_pallas(logits, block_v: int = 128):
+    """Top-2 values/indices per row of `logits` [T, V] via a Pallas kernel."""
+    t, v = logits.shape
+    assert v % block_v == 0, (v, block_v)
+    grid = (v // block_v,)
+    kernel = functools.partial(_top2_kernel, vb=block_v)
+    z1, z2, i1, i2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, block_v), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((t,), lambda j: (0,)),
+            pl.BlockSpec((t,), lambda j: (0,)),
+            pl.BlockSpec((t,), lambda j: (0,)),
+            pl.BlockSpec((t,), lambda j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+        ],
+        interpret=True,  # CPU image: Mosaic custom-calls cannot run here
+    )(logits)
+    return z1, z2, i1, i2

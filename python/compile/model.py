@@ -1,0 +1,349 @@
+"""L2 — JAX model definitions: target LM, independent draft LM, EAGLE-style
+feature-conditioned draft head, and Medusa heads.
+
+Everything is written as pure functions over parameter pytrees (dicts with
+sorted keys) so that flattening order is deterministic for the rust loader.
+
+Cache-based block processing is the core primitive: `block_apply` consumes a
+block of T tokens at given cache *slots* with given absolute *positions* and
+an explicit [T, S_MAX] attention mask, writes K/V into the cache, and returns
+(logits, hiddens, new_cache). Chain decoding, tree verification and prefill
+are all expressed through it (see rounds.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import tokenizer
+
+# ----------------------------------------------------------- configs -------
+
+
+class ModelCfg:
+    """Static architecture hyper-parameters (baked into the HLO)."""
+
+    def __init__(self, vocab, d_model, n_layers, n_heads, d_head, d_ff, s_max):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_head = d_head
+        self.d_ff = d_ff
+        self.s_max = s_max
+
+    def as_dict(self):
+        return dict(
+            vocab=self.vocab, d_model=self.d_model, n_layers=self.n_layers,
+            n_heads=self.n_heads, d_head=self.d_head, d_ff=self.d_ff,
+            s_max=self.s_max,
+        )
+
+
+S_MAX = 352          # KV-cache capacity (prompt + generation + draft block)
+P_MAX = 160          # max prompt tokens
+OUT_MAX = 224        # max generated tokens
+
+TARGET_CFG = ModelCfg(tokenizer.VOCAB, 128, 4, 4, 32, 512, S_MAX)
+DRAFT_CFG = ModelCfg(tokenizer.VOCAB, 64, 2, 2, 32, 256, S_MAX)   # SpS LM
+EAGLE_CFG = ModelCfg(tokenizer.VOCAB, 128, 2, 4, 32, 512, S_MAX)  # draft head
+MEDUSA_HEADS = 4
+
+# ------------------------------------------------------------ init ---------
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_lm(cfg: ModelCfg, key) -> dict:
+    """Initialize a decoder-only LM. Tied embedding/unembedding."""
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    params = {
+        "emb": _dense_init(keys[0], (cfg.vocab, cfg.d_model), 0.02),
+        "pos": _dense_init(keys[1], (cfg.s_max, cfg.d_model), 0.02),
+        "lnf_g": jnp.ones((cfg.d_model,)),
+        "lnf_b": jnp.zeros((cfg.d_model,)),
+    }
+    for i in range(cfg.n_layers):
+        params[f"layer{i}"] = _init_layer(cfg, keys[3 + i])
+    return params
+
+
+def _init_layer(cfg: ModelCfg, key) -> dict:
+    k = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_ff
+    hk = cfg.n_heads * cfg.d_head
+    return {
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "wqkv": _dense_init(k[0], (d, 3 * hk)),
+        "bqkv": jnp.zeros((3 * hk,)),
+        "wo": _dense_init(k[1], (hk, d)),
+        "bo": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        "w1": _dense_init(k[2], (d, f)),
+        "b1": jnp.zeros((f,)),
+        "w2": _dense_init(k[3], (f, d)),
+        "b2": jnp.zeros((d,)),
+    }
+
+
+def init_eagle(cfg: ModelCfg, key, target_cfg: ModelCfg) -> dict:
+    """EAGLE-style drafter: fc([emb; feature]) -> small transformer."""
+    k = jax.random.split(key, 3 + cfg.n_layers)
+    params = {
+        "emb": _dense_init(k[0], (cfg.vocab, cfg.d_model), 0.02),
+        "pos": _dense_init(k[1], (cfg.s_max, cfg.d_model), 0.02),
+        "fc_w": _dense_init(k[2], (cfg.d_model + target_cfg.d_model, cfg.d_model)),
+        "fc_b": jnp.zeros((cfg.d_model,)),
+        "lnf_g": jnp.ones((cfg.d_model,)),
+        "lnf_b": jnp.zeros((cfg.d_model,)),
+        "unemb": _dense_init(k[0], (cfg.d_model, cfg.vocab), 0.02),
+    }
+    for i in range(cfg.n_layers):
+        params[f"layer{i}"] = _init_layer(cfg, k[3 + i])
+    return params
+
+
+def init_medusa(key, target_cfg: ModelCfg, n_heads: int = MEDUSA_HEADS) -> dict:
+    """Medusa: n residual heads over the target's final hidden state."""
+    d, v = target_cfg.d_model, target_cfg.vocab
+    ks = jax.random.split(key, 2 * n_heads)
+    params = {}
+    for h in range(n_heads):
+        params[f"head{h}_w1"] = _dense_init(ks[2 * h], (d, d))
+        params[f"head{h}_b1"] = jnp.zeros((d,))
+        params[f"head{h}_w2"] = _dense_init(ks[2 * h + 1], (d, v), 0.02)
+    return params
+
+
+# ------------------------------------------------------- primitives --------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def empty_cache(cfg: ModelCfg):
+    """KV cache: [n_layers, 2(kv), n_heads, s_max, d_head]."""
+    return jnp.zeros(
+        (cfg.n_layers, 2, cfg.n_heads, cfg.s_max, cfg.d_head), jnp.float32
+    )
+
+
+def _attn_block(cfg, layer, x, cache_l, slots, mask):
+    """One pre-LN attention + MLP layer over a block.
+
+    x:      [T, D] block activations
+    cache_l:[2, H, S, Dh] this layer's cache
+    slots:  [T] int32 cache rows where this block's K/V are written
+    mask:   [T, S] float {0,1} — which cache rows each block position may
+            attend to AFTER the block's own K/V have been written.
+    """
+    T = x.shape[0]
+    H, Dh = cfg.n_heads, cfg.d_head
+    h = layer_norm(x, layer["ln1_g"], layer["ln1_b"])
+    qkv = h @ layer["wqkv"] + layer["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(T, H, Dh).transpose(1, 0, 2)  # [H,T,Dh]
+    k = k.reshape(T, H, Dh).transpose(1, 0, 2)
+    v = v.reshape(T, H, Dh).transpose(1, 0, 2)
+
+    # scatter block K/V into cache rows `slots`
+    ck = cache_l[0].at[:, slots, :].set(k.transpose(0, 1, 2))  # [H,S,Dh]
+    cv = cache_l[1].at[:, slots, :].set(v)
+
+    scores = jnp.einsum("htd,hsd->hts", q, ck) / (Dh ** 0.5)
+    scores = jnp.where(mask[None, :, :] > 0, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hts,hsd->htd", probs, cv)
+    ctx = ctx.transpose(1, 0, 2).reshape(T, H * Dh)
+    x = x + ctx @ layer["wo"] + layer["bo"]
+
+    h2 = layer_norm(x, layer["ln2_g"], layer["ln2_b"])
+    x = x + jax.nn.gelu(h2 @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+    return x, jnp.stack([ck, cv])
+
+
+def block_apply(cfg: ModelCfg, params, cache, tokens, slots, positions, mask,
+                inputs_override=None):
+    """Run a T-token block through an LM with explicit cache slots/mask.
+
+    tokens:    [T] int32
+    slots:     [T] int32 cache rows (junk rows are fine — they are masked
+               and later overwritten; see DESIGN.md §1.2 rollback)
+    positions: [T] int32 absolute sequence positions (for pos-emb)
+    mask:      [T, S_MAX] float attend-permission matrix
+    inputs_override: optional [T, D] residual-stream inputs replacing the
+               token embedding (used by the EAGLE drafter).
+
+    Returns (logits [T, V], hidden [T, D], new_cache).
+    """
+    positions = jnp.clip(positions, 0, cfg.s_max - 1)
+    if inputs_override is None:
+        x = params["emb"][tokens] + params["pos"][positions]
+    else:
+        x = inputs_override + params["pos"][positions]
+    new_layers = []
+    for i in range(cfg.n_layers):
+        x, cl = _attn_block(cfg, params[f"layer{i}"], x, cache[i], slots, mask)
+        new_layers.append(cl)
+    new_cache = jnp.stack(new_layers)
+    h = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    if "unemb" in params:
+        logits = h @ params["unemb"]
+    else:
+        logits = h @ params["emb"].T  # tied
+    return logits, h, new_cache
+
+
+def eagle_inputs(eagle_params, tokens, feats):
+    """EAGLE drafter residual-stream inputs: fc([emb(tok); feature])."""
+    e = eagle_params["emb"][tokens]
+    x = jnp.concatenate([e, feats], axis=-1)
+    return x @ eagle_params["fc_w"] + eagle_params["fc_b"]
+
+
+def medusa_head_logits(medusa_params, feat, n_heads: int = MEDUSA_HEADS):
+    """All Medusa head logits for one feature vector. Returns [n_heads, V]."""
+    outs = []
+    for h in range(n_heads):
+        z = feat @ medusa_params[f"head{h}_w1"] + medusa_params[f"head{h}_b1"]
+        z = jax.nn.silu(z) + feat
+        outs.append(z @ medusa_params[f"head{h}_w2"])
+    return jnp.stack(outs)
+
+
+# -------------------------------------------------- training forward -------
+
+
+def causal_lm_logits(cfg: ModelCfg, params, tokens):
+    """Plain causal forward for training. tokens [B, T] -> (logits, hidden)."""
+    B, T = tokens.shape
+
+    def one(toks):
+        cache = empty_cache(cfg)
+        slots = jnp.arange(T, dtype=jnp.int32)
+        mask = (
+            (jnp.arange(cfg.s_max)[None, :] <= slots[:, None])
+            & (jnp.arange(cfg.s_max)[None, :] < T)
+        ).astype(jnp.float32)
+        logits, h, _ = block_apply(cfg, params, cache, toks, slots, slots, mask)
+        return logits, h
+
+    return jax.vmap(one)(tokens)
+
+
+def lm_loss(cfg: ModelCfg, params, batch):
+    """batch [B, T+1] -> mean CE of next-token prediction."""
+    inp, tgt = batch[:, :-1], batch[:, 1:]
+    logits, _ = causal_lm_logits(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def eagle_loss(cfg: ModelCfg, eagle_params, target_cfg, target_params, batch):
+    """Distill the EAGLE drafter.
+
+    Two terms, as in the EAGLE recipe:
+    * token KL — at position i the drafter sees (token_i, target feature_i)
+      and must match the target's distribution for token i+1;
+    * feature regression — the drafter's own hidden at position i must
+      approximate the target's feature at position i+1, because at draft
+      time (beyond the first speculated token) that hidden *is* the feature
+      fed to the next drafter step. Without this term the drafter is
+      out-of-distribution from the second tree level on (tau caps at ~2).
+    """
+    inp = batch[:, :-1]
+    t_logits, t_feats = causal_lm_logits(target_cfg, target_params, inp)
+    t_logits = jax.lax.stop_gradient(t_logits)
+    t_feats = jax.lax.stop_gradient(t_feats)
+    B, T = inp.shape
+
+    def one(toks, feats):
+        cache = empty_cache(cfg)
+        slots = jnp.arange(T, dtype=jnp.int32)
+        mask = (
+            (jnp.arange(cfg.s_max)[None, :] <= slots[:, None])
+            & (jnp.arange(cfg.s_max)[None, :] < T)
+        ).astype(jnp.float32)
+        x = eagle_inputs(eagle_params, toks, feats)
+        logits, hid, _ = block_apply(
+            cfg, eagle_params, cache, toks, slots, slots, mask,
+            inputs_override=x,
+        )
+        return logits, hid
+
+    d_logits, d_hid = jax.vmap(one)(inp, t_feats)
+    t_lp = jax.nn.log_softmax(t_logits, axis=-1)
+    d_lp = jax.nn.log_softmax(d_logits, axis=-1)
+    # forward KL(target || draft)
+    kl = jnp.mean(jnp.sum(jnp.exp(t_lp) * (t_lp - d_lp), axis=-1))
+    # feature regression: hidden_i ~ target feature_{i+1}
+    feat_mse = jnp.mean((d_hid[:, :-1] - t_feats[:, 1:]) ** 2)
+    return kl + 0.7 * feat_mse
+
+
+def medusa_loss(medusa_params, target_cfg, target_params, batch,
+                n_heads: int = MEDUSA_HEADS):
+    """Medusa head h at position i predicts token i+1+h (ground-truth CE)."""
+    inp = batch[:, :-1]
+    _, feats = causal_lm_logits(target_cfg, target_params, inp)
+    feats = jax.lax.stop_gradient(feats)
+    B, T = inp.shape
+    total = 0.0
+    for h in range(n_heads):
+        z = feats @ medusa_params[f"head{h}_w1"] + medusa_params[f"head{h}_b1"]
+        z = jax.nn.silu(z) + feats
+        logits = z @ medusa_params[f"head{h}_w2"]  # [B, T, V]
+        valid = T - 1 - h
+        if valid <= 0:
+            continue
+        tgt = batch[:, 1 + h: 1 + h + valid]
+        lp = jax.nn.log_softmax(logits[:, :valid], axis=-1)
+        ll = jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        total = total - jnp.mean(ll) * (0.8 ** h)
+    return total
+
+
+# ---------------------------------------------------- flatten helpers ------
+
+
+def flat_names(params: dict, prefix="") -> list:
+    """Deterministic flattening order: sorted nested dict keys."""
+    names = []
+    for k in sorted(params.keys()):
+        v = params[k]
+        if isinstance(v, dict):
+            names.extend(flat_names(v, prefix + k + "."))
+        else:
+            names.append(prefix + k)
+    return names
+
+
+def flat_values(params: dict) -> list:
+    vals = []
+    for k in sorted(params.keys()):
+        v = params[k]
+        if isinstance(v, dict):
+            vals.extend(flat_values(v))
+        else:
+            vals.append(v)
+    return vals
+
+
+def unflatten_like(params: dict, vals: list) -> dict:
+    it = iter(vals)
+
+    def rec(p):
+        out = {}
+        for k in sorted(p.keys()):
+            v = p[k]
+            out[k] = rec(v) if isinstance(v, dict) else next(it)
+        return out
+
+    return rec(params)

@@ -1,0 +1,901 @@
+"""L2 round programs — one JAX function per decode method.
+
+Every function has the signature
+
+    state' = round(state, *weight_arrays)
+
+over the flat f32 state of state_spec.py, and is lowered by aot.py into a
+standalone HLO-text artifact that the rust coordinator drives in a loop.
+Runtime knobs (temperature, θ, K, beam, MARS on/off, greedy) are *state
+scalars*, so a single artifact covers the paper's whole ablation grid.
+
+Methods:
+    prefill           build the initial state from a prompt
+    ar_step           vanilla autoregressive decoding (the 1.00x baseline)
+    sps_round         standard speculative sampling (Leviathan-style
+                      rejection sampling, independent draft LM) + MARS
+    eagle_tree_round  EAGLE-style feature-conditioned drafter with a
+                      beam-built draft tree (chain == beam 1); tree verify
+    medusa_round      Medusa heads with a static candidate tree
+    verify_ext_round  verify host-provided draft tokens (PLD / Lookahead);
+                      this is the pallas mars_verify kernel path
+    extract           state -> scalars ++ out-ring (cheap per-round pull)
+    extract_probe     state -> scalars ++ probe-ring (figures 1 & 4)
+
+KV rollback is positional (DESIGN.md §1.2): block rows are written at
+slots >= pos; acceptance only advances pos, junk rows are overwritten by
+the next round. Tree acceptance compacts the accepted path into contiguous
+rows with a gather before committing.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import state_spec as S
+from .kernels import mars_verify_pallas, top2_pallas, ref
+
+USE_PALLAS = os.environ.get("MARS_USE_PALLAS", "1") != "0"
+
+_TOP2 = (lambda x: top2_pallas(x)) if USE_PALLAS else ref.top2_ref
+
+NEG = -1e30
+
+
+def topk_iter(x, k):
+    """Iterative top-k via repeated argmax.
+
+    jax.lax.top_k lowers to the `topk(..., largest=true)` HLO op, which the
+    xla_extension 0.5.1 text parser (behind the rust `xla` crate) rejects.
+    k is tiny here (<= C_MAX/B_MAX = 4), so k argmax passes are cheap and
+    lower to plain reduce/iota ops that parse fine.
+
+    x: [..., V] -> (vals [..., k], idx [..., k] int32)
+    """
+    vals, idxs = [], []
+    cur = x
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        cur = jnp.where(
+            jax.nn.one_hot(i, x.shape[-1], dtype=bool), NEG, cur
+        )
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+# ------------------------------------------------------------ helpers ------
+
+
+def _key(v: S.View):
+    """Derive a fresh PRNG key from (seed, counter) and bump the counter."""
+    k = jax.random.fold_in(
+        jax.random.PRNGKey(7), v.geti("seed") * 65536 + v.geti("rng")
+    )
+    v.add("rng", 1.0)
+    return k
+
+
+def _sample_rows(v: S.View, dists):
+    """Sample one token per row of `dists` [R, V] at the state temperature.
+
+    Greedy (flag) -> argmax. Returns int32 [R].
+    """
+    g = jax.random.gumbel(_key(v), dists.shape)
+    temp = jnp.maximum(v.get("temp"), 1e-6)
+    stoch = jnp.argmax(dists / temp + g, axis=-1)
+    det = jnp.argmax(dists, axis=-1)
+    pick = jnp.where(v.get("greedy") > 0.5, det, stoch)
+    return pick.astype(jnp.int32)
+
+
+def _causal_mask(slots, limit):
+    """mask[i, j] = j <= slots[i] and j < limit-ish window. [T, S_MAX]."""
+    cols = jnp.arange(M.S_MAX)[None, :]
+    return (cols <= slots[:, None]).astype(jnp.float32)
+
+
+def _target_block(v, t_params, tokens, slots, positions, mask):
+    logits, hid, tkv = M.block_apply(
+        M.TARGET_CFG, t_params, v.tkv, tokens, slots, positions, mask
+    )
+    v.tkv = tkv
+    v.add("target_calls", 1.0)
+    return logits, hid
+
+
+def _eagle_block(v, e_params, tokens, feats, slots, positions, mask):
+    x = M.eagle_inputs(e_params, tokens, feats)
+    logits, hid, ekv = M.block_apply(
+        M.EAGLE_CFG, e_params, v.ekv, tokens, slots, positions, mask,
+        inputs_override=x,
+    )
+    v.ekv = ekv
+    v.add("draft_steps", 1.0)
+    return logits, hid
+
+
+def _sps_block(v, s_params, tokens, slots, positions, mask):
+    logits, hid, skv = M.block_apply(
+        M.DRAFT_CFG, s_params, v.skv, tokens, slots, positions, mask
+    )
+    v.skv = skv
+    v.add("draft_steps", 1.0)
+    return logits, hid
+
+
+def _catchup_eagle(v, e_params):
+    """Process tokens [w .. pos-1] through the drafter (teacher-forced with
+    true target features). Returns (drafter dist for position pos, drafter
+    hidden at pos-1). Idempotent re-processing of the last row keeps the
+    window logic uniform on the first round after prefill."""
+    n = v.geti("pos")
+    w = jnp.maximum(jnp.minimum(v.geti("eagle_pos"), n - 1), 0)
+    ln = n - w  # 1 .. CATCHUP_MAX
+    idx = w + jnp.arange(S.CATCHUP_MAX, dtype=jnp.int32)
+    idx_c = jnp.minimum(idx, M.S_MAX - 1)
+    toks = v.tokens[idx_c].astype(jnp.int32)
+    feats = v.feat[idx_c]
+    mask = _causal_mask(idx, n) * (
+        jnp.arange(S.CATCHUP_MAX)[:, None] < ln
+    ).astype(jnp.float32)
+    logits, hid = _eagle_block(v, e_params, toks, feats, idx_c, idx_c, mask)
+    last = jnp.minimum(ln - 1, S.CATCHUP_MAX - 1)
+    v.set("eagle_pos", n.astype(jnp.float32))
+    return logits[last], hid[last]
+
+
+def _catchup_sps(v, s_params):
+    """Same as _catchup_eagle for the independent SpS draft LM."""
+    n = v.geti("pos")
+    w = jnp.maximum(jnp.minimum(v.geti("sps_pos"), n - 1), 0)
+    ln = n - w
+    idx = w + jnp.arange(S.CATCHUP_MAX, dtype=jnp.int32)
+    idx_c = jnp.minimum(idx, M.S_MAX - 1)
+    toks = v.tokens[idx_c].astype(jnp.int32)
+    mask = _causal_mask(idx, n) * (
+        jnp.arange(S.CATCHUP_MAX)[:, None] < ln
+    ).astype(jnp.float32)
+    logits, _ = _sps_block(v, s_params, toks, idx_c, idx_c, mask)
+    last = jnp.minimum(ln - 1, S.CATCHUP_MAX - 1)
+    v.set("sps_pos", n.astype(jnp.float32))
+    return logits[last]
+
+
+def _probe_push(v, z1s, z2s, flags, count):
+    """Append `count` (z1, z2, flag) rows to the probe ring (drop overflow)."""
+    w = z1s.shape[0]
+    on = v.get("probe_on") > 0.5
+    base = v.geti("probe_len")
+    j = jnp.arange(w)
+    idx = jnp.where(
+        on & (j < count), base + j, S.PROBE_MAX + 1  # dropped
+    )
+    rows = jnp.stack([z1s, z2s, flags], axis=1)
+    v.probe = v.probe.at[idx, :].set(rows, mode="drop")
+    v.set(
+        "probe_len",
+        jnp.minimum(
+            v.get("probe_len") + jnp.where(on, count, 0).astype(jnp.float32),
+            float(S.PROBE_MAX),
+        ),
+    )
+
+
+def _commit(v, t_params, toks, m):
+    """Commit `m` accepted tokens + 1 final (correction/bonus) token.
+
+    toks: f32/int32 [CATCHUP_MAX] — toks[0..m-1] accepted (already in the
+    target cache at rows n..n+m-1), toks[m] the final token (not yet
+    processed). Handles EOS truncation, the final-token target step,
+    out-ring append, stop flags and stats.
+    """
+    n = v.geti("pos")
+    toks = toks.astype(jnp.int32)
+    j = jnp.arange(S.CATCHUP_MAX)
+    eos = v.geti("eos")
+    total = m + 1
+
+    # a finished state is inert: rounds become no-ops so the host may run
+    # several rounds blindly between extract() pulls (perf lever)
+    already_done = v.get("finished") > 0.5
+
+    # EOS truncation: keep tokens up to and including the first EOS
+    is_eos = (toks == eos) & (j < total)
+    any_eos = jnp.any(is_eos)
+    first_eos = jnp.argmax(is_eos)  # valid only if any_eos
+    new_count = jnp.where(any_eos, first_eos + 1, total)
+    new_count = jnp.where(already_done, 0, new_count)
+
+    # final token step (token toks[m] at slot n+m); junk if truncated early
+    fin_tok = toks[jnp.minimum(m, S.CATCHUP_MAX - 1)][None]
+    fin_slot = jnp.minimum(n + m, M.S_MAX - 1)[None]
+    mask = _causal_mask(fin_slot, n + m + 1)
+    logits, hid = _target_block(
+        v, t_params, fin_tok, fin_slot, fin_slot, mask
+    )
+    v.next_logits = jnp.where(already_done, v.next_logits, logits[0])
+    # the final token's feature must land in the feat cache too — the
+    # EAGLE drafter teacher-forces on it during the next catch-up
+    v.feat = v.feat.at[fin_slot[0]].set(
+        jnp.where(already_done, v.feat[fin_slot[0]], hid[0])
+    )
+
+    # sequence + out-ring bookkeeping
+    tok_idx = jnp.where(j < new_count, n + j, M.S_MAX + 1)
+    v.tokens = v.tokens.at[tok_idx].set(toks.astype(jnp.float32), mode="drop")
+    out_base = v.geti("out_len")
+    out_idx = jnp.where(j < new_count, out_base + j, M.OUT_MAX + 1)
+    v.out = v.out.at[out_idx].set(toks.astype(jnp.float32), mode="drop")
+
+    v.set("pos", (n + new_count).astype(jnp.float32))
+    new_out = out_base + new_count
+    v.set("out_len", jnp.minimum(new_out, M.OUT_MAX).astype(jnp.float32))
+    done = already_done | (
+        (any_eos & jnp.logical_not(already_done))
+        | (new_out >= v.geti("max_new"))
+        | (new_out >= M.OUT_MAX)
+        | (n + new_count + S.CATCHUP_MAX + S.NODES_MAX >= M.S_MAX)
+    )
+    v.set("finished", jnp.where(done, 1.0, 0.0))
+    v.add("rounds", jnp.where(already_done, 0.0, 1.0))
+    v.add("committed", new_count.astype(jnp.float32))
+    v.set("last_accept", m.astype(jnp.float32))
+    return new_count
+
+
+# ------------------------------------------------------------ prefill ------
+
+
+def prefill(prompt, cfg, *t_e_s_weights):
+    """Build the initial state. `prompt` f32 [P_MAX], `cfg` f32 [N_CFG]."""
+    nt = len(_TARGET_NAMES)
+    ne = len(_EAGLE_NAMES)
+    t_params = M.unflatten_like(_TARGET_TREE, list(t_e_s_weights[:nt]))
+    e_params = M.unflatten_like(_EAGLE_TREE, list(t_e_s_weights[nt:nt + ne]))
+    s_params = M.unflatten_like(_SPS_TREE, list(t_e_s_weights[nt + ne:]))
+
+    v = S.View(jnp.zeros((S.STATE_LEN,), jnp.float32))
+    for name in ("temp", "theta", "mars_on", "kdraft", "max_new", "eos",
+                 "beam", "branch", "probe_on", "greedy", "seed"):
+        v.set(name, cfg[S.CFG[name]])
+    plen = cfg[S.CFG["prompt_len"]].astype(jnp.int32)
+    plen = jnp.clip(plen, 1, M.P_MAX)
+    v.set("prompt_len", plen.astype(jnp.float32))
+    v.set("pos", plen.astype(jnp.float32))
+    v.set("eagle_pos", plen.astype(jnp.float32))
+    v.set("sps_pos", plen.astype(jnp.float32))
+
+    toks = prompt.astype(jnp.int32)
+    v.tokens = v.tokens.at[: M.P_MAX].set(
+        jnp.where(jnp.arange(M.P_MAX) < plen, prompt, 0.0)
+    )
+    slots = jnp.arange(M.P_MAX, dtype=jnp.int32)
+    live = (jnp.arange(M.P_MAX)[:, None] < plen).astype(jnp.float32)
+    mask = _causal_mask(slots, plen) * live
+
+    t_logits, t_hid = _target_block(v, t_params, toks, slots, slots, mask)
+    v.feat = v.feat.at[: M.P_MAX].set(t_hid)
+    v.next_logits = t_logits[plen - 1]
+
+    # drafter catch-up over the whole prompt
+    e_logits, _ = _eagle_block(v, e_params, toks, t_hid, slots, slots, mask)
+    s_logits, _ = _sps_block(v, s_params, toks, slots, slots, mask)
+    return v.pack()
+
+
+# ------------------------------------------------------------ ar_step ------
+
+
+def ar_step(state, *t_weights):
+    """One vanilla AR step: sample from next_logits, process, append."""
+    t_params = M.unflatten_like(_TARGET_TREE, list(t_weights))
+    v = S.View(state)
+    tok = _sample_rows(v, v.next_logits[None, :])[0]
+    toks = jnp.zeros((S.CATCHUP_MAX,), jnp.int32).at[0].set(tok)
+    _commit(v, t_params, toks, jnp.asarray(0, jnp.int32))
+    # AR emits exactly one token per round; rounds/committed stats still
+    # advance inside _commit, which is what tau excludes for the baseline.
+    return v.pack()
+
+
+# ------------------------------------------------------------- sps ---------
+
+
+def sps_round(state, *weights):
+    """Standard speculative sampling round (chain, independent draft LM).
+
+    Exact Leviathan rejection sampling when mars_on == 0; with MARS the
+    paper's relaxation is applied only on a rejection (accept the draft if
+    it is the target's top-2 and r > θ on the positive domain).
+    """
+    nt = len(_TARGET_NAMES)
+    t_params = M.unflatten_like(_TARGET_TREE, list(weights[:nt]))
+    s_params = M.unflatten_like(_SPS_TREE, list(weights[nt:]))
+    v = S.View(state)
+    n = v.geti("pos")
+    k_rt = jnp.clip(v.geti("kdraft"), 1, S.K_MAX)
+    temp = jnp.maximum(v.get("temp"), 1e-6)
+    greedy = v.get("greedy") > 0.5
+
+    q0 = _catchup_sps(v, s_params)
+
+    # ---- draft K tokens sequentially (dynamic bound while_loop) ----
+    gum = jax.random.gumbel(_key(v), (S.K_MAX, M.TARGET_CFG.vocab))
+
+    def draft_body(carry):
+        i, cur_logits, toks, qs, skv = carry
+        stoch = jnp.argmax(cur_logits / temp + gum[i], axis=-1)
+        det = jnp.argmax(cur_logits)
+        tok = jnp.where(greedy, det, stoch).astype(jnp.int32)
+        toks = toks.at[i].set(tok)
+        qs = qs.at[i].set(jax.nn.softmax(cur_logits / temp))
+        # one drafter step for the next draft position
+        slot = jnp.minimum(n + i, M.S_MAX - 1)[None]
+        mask = _causal_mask(slot, n + i + 1)
+        logits, _, skv2 = M.block_apply(
+            M.DRAFT_CFG, s_params, skv, tok[None], slot, slot, mask
+        )
+        return i + 1, logits[0], toks, qs, skv2
+
+    def draft_cond(carry):
+        return carry[0] < k_rt
+
+    toks0 = jnp.zeros((S.K_MAX,), jnp.int32)
+    qs0 = jnp.zeros((S.K_MAX, M.TARGET_CFG.vocab), jnp.float32)
+    _, _, d_toks, d_qs, skv = jax.lax.while_loop(
+        draft_cond, draft_body, (jnp.asarray(0, jnp.int32), q0, toks0, qs0,
+                                 v.skv)
+    )
+    v.skv = skv
+    v.add("draft_steps", k_rt.astype(jnp.float32))
+
+    # ---- target verify block over the K draft tokens ----
+    slots = jnp.minimum(n + jnp.arange(S.K_MAX, dtype=jnp.int32), M.S_MAX - 1)
+    live = (jnp.arange(S.K_MAX)[:, None] < k_rt).astype(jnp.float32)
+    mask = _causal_mask(slots, n + S.K_MAX) * live
+    t_logits, t_hid = _target_block(v, t_params, d_toks, slots, slots, mask)
+    v.feat = v.feat.at[slots, :].set(t_hid)
+
+    # dists[i] = target dist used to judge draft token i
+    dists = jnp.concatenate([v.next_logits[None, :], t_logits[:-1]], axis=0)
+    ps = jax.nn.softmax(dists / temp, axis=-1)
+    z1, z2, i1, i2 = _TOP2(dists)
+
+    u = jax.random.uniform(_key(v), (S.K_MAX,))
+    p_d = jnp.take_along_axis(ps, d_toks[:, None], axis=1)[:, 0]
+    q_d = jnp.take_along_axis(d_qs, d_toks[:, None], axis=1)[:, 0]
+    ratio = p_d / jnp.maximum(q_d, 1e-20)
+    strict_ok = jnp.where(
+        greedy, (d_toks == i1), u < jnp.minimum(ratio, 1.0)
+    )
+    safe = (z1 > 0.0) & (z2 > 0.0)
+    r = jnp.where(safe, z2 / jnp.maximum(z1, 1e-9), 0.0)
+    relaxed_ok = (
+        (v.get("mars_on") > 0.5)
+        & (d_toks == i2)
+        & safe
+        & (r > v.get("theta"))
+        & jnp.logical_not(strict_ok)
+    )
+    ok = (strict_ok | relaxed_ok) & (jnp.arange(S.K_MAX) < k_rt)
+    prefix = jnp.cumprod(ok.astype(jnp.int32))
+    m = jnp.sum(prefix)
+    flags = jnp.where(prefix > 0, jnp.where(relaxed_ok, 2.0, 1.0), 0.0)
+
+    # ---- correction / bonus token ----
+    stop_dist = dists[jnp.minimum(m, S.K_MAX - 1)]
+    stop_p = ps[jnp.minimum(m, S.K_MAX - 1)]
+    stop_q = d_qs[jnp.minimum(m, S.K_MAX - 1)]
+    resid = jnp.maximum(stop_p - stop_q, 0.0)
+    resid_ok = jnp.sum(resid) > 1e-9
+    resid = jnp.where(resid_ok, resid, stop_p)
+    g = jax.random.gumbel(_key(v), (M.TARGET_CFG.vocab,))
+    resid_tok = jnp.argmax(jnp.log(jnp.maximum(resid, 1e-30)) + g)
+    greedy_tok = jnp.argmax(stop_dist)
+    bonus_dist = t_logits[jnp.minimum(k_rt - 1, S.K_MAX - 1)]
+    gb = jax.random.gumbel(_key(v), (M.TARGET_CFG.vocab,))
+    bonus_tok = jnp.where(
+        greedy,
+        jnp.argmax(bonus_dist),
+        jnp.argmax(bonus_dist / temp + gb),
+    )
+    all_ok = m >= k_rt
+    fin = jnp.where(
+        all_ok, bonus_tok, jnp.where(greedy, greedy_tok, resid_tok)
+    ).astype(jnp.int32)
+
+    # stats + probe
+    v.add("exact_accepts", jnp.sum(flags == 1.0))
+    v.add("relaxed_accepts", jnp.sum(flags == 2.0))
+    v.add("rejects", jnp.where(all_ok, 0.0, 1.0))
+    v.add("bonus", jnp.where(all_ok, 1.0, 0.0))
+    probe_n = jnp.minimum(m + 1, k_rt)
+    _probe_push(v, z1, z2, flags, probe_n)
+
+    toks = jnp.zeros((S.CATCHUP_MAX,), jnp.int32)
+    toks = toks.at[: S.K_MAX].set(d_toks)
+    toks = toks.at[jnp.minimum(m, S.CATCHUP_MAX - 1)].set(fin)
+    _commit(v, t_params, toks, m)
+    return v.pack()
+
+
+# ------------------------------------------------- tree infrastructure -----
+
+
+def _tree_dists_and_walk(v, dists, node_tok, node_parent, node_level,
+                         node_alive, depth_rt):
+    """Walk the verified tree from the root (node 0), applying the MARS
+    margin-aware rule at every level. Node layout: B_MAX root-level slots
+    (only 0 live), then levels at stride B_MAX.
+
+    dists [NODES_TOT, V]: row i = target dist AT node i (its children are
+    judged against it). Returns (m, path, t_fin, flags, probe arrays).
+    """
+    ntot = dists.shape[0]
+    z1, z2, i1, i2 = _TOP2(dists)
+    tstar = _sample_rows(v, dists)
+    mars_on = v.get("mars_on") > 0.5
+    theta = v.get("theta")
+    node_idx = jnp.arange(ntot)
+
+    def body(l, carry):
+        cur, m, stopped, path, flags, pz1, pz2 = carry
+        is_child = (
+            (node_parent == cur)
+            & node_alive
+            & (node_level == l)
+        )
+        t_s = tstar[cur]
+        exact_hits = is_child & (node_tok == t_s)
+        any_exact = jnp.any(exact_hits)
+        exact_idx = jnp.argmax(exact_hits)
+
+        safe = (z1[cur] > 0.0) & (z2[cur] > 0.0)
+        r = jnp.where(safe, z2[cur] / jnp.maximum(z1[cur], 1e-9), 0.0)
+        relax_hits = is_child & (node_tok == i2[cur])
+        any_relax = (
+            mars_on & safe & (r > theta) & jnp.any(relax_hits)
+            & jnp.logical_not(any_exact)
+        )
+        relax_idx = jnp.argmax(relax_hits)
+
+        active = (l <= depth_rt) & jnp.logical_not(stopped)
+        accept = active & (any_exact | any_relax)
+        nxt = jnp.where(any_exact, exact_idx, relax_idx)
+        flag = jnp.where(
+            accept, jnp.where(any_exact, 1.0, 2.0), 0.0
+        )
+        path = path.at[l - 1].set(jnp.where(accept, nxt, -1))
+        flags = flags.at[l - 1].set(jnp.where(active, flag, -1.0))
+        pz1 = pz1.at[l - 1].set(z1[cur])
+        pz2 = pz2.at[l - 1].set(z2[cur])
+        cur = jnp.where(accept, nxt, cur)
+        m = m + jnp.where(accept, 1, 0)
+        stopped = stopped | (active & jnp.logical_not(accept))
+        return cur, m, stopped, path, flags, pz1, pz2
+
+    path0 = jnp.full((S.DEPTH_MAX,), -1, jnp.int32)
+    flags0 = jnp.full((S.DEPTH_MAX,), -1.0, jnp.float32)
+    pz0 = jnp.zeros((S.DEPTH_MAX,), jnp.float32)
+    cur, m, stopped, path, flags, pz1, pz2 = jax.lax.fori_loop(
+        1, S.DEPTH_MAX + 1, body,
+        (jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+         jnp.asarray(False), path0, flags0, pz0, pz0),
+    )
+    t_fin = tstar[cur]
+    return m, path, t_fin, flags, pz1, pz2, z1, z2
+
+
+def _tree_commit(v, t_params, node_tok, m, path, t_fin, flags, pz1, pz2,
+                 depth_rt):
+    """Compact the accepted path into contiguous cache rows and commit."""
+    n = v.geti("pos")
+    j = jnp.arange(S.DEPTH_MAX)
+    # block row of node index i is (i - B_MAX); path entries are node idx
+    src = jnp.where(path >= 0, n + path - S.B_MAX, n + j)
+    dst = n + j
+    perm = jnp.arange(M.S_MAX, dtype=jnp.int32)
+    perm = perm.at[jnp.minimum(dst, M.S_MAX - 1)].set(
+        jnp.minimum(src, M.S_MAX - 1)
+    )
+    # restore identity beyond m
+    perm = jnp.where(
+        (jnp.arange(M.S_MAX) >= n + m) & (jnp.arange(M.S_MAX) < n + S.DEPTH_MAX + 1),
+        jnp.arange(M.S_MAX), perm,
+    )
+    v.tkv = v.tkv[:, :, :, perm, :]
+    v.feat = v.feat[perm, :]
+
+    # stats + probe
+    live = flags >= 0.0
+    v.add("exact_accepts", jnp.sum(jnp.where(live & (flags == 1.0), 1.0, 0.0)))
+    v.add("relaxed_accepts", jnp.sum(jnp.where(live & (flags == 2.0), 1.0, 0.0)))
+    all_ok = m >= depth_rt
+    v.add("rejects", jnp.where(all_ok, 0.0, 1.0))
+    v.add("bonus", jnp.where(all_ok, 1.0, 0.0))
+    probe_n = jnp.minimum(m + 1, depth_rt)
+    pflags = jnp.where(flags < 0.0, 0.0, flags)
+    _probe_push(v, pz1, pz2, pflags, probe_n)
+
+    toks = jnp.zeros((S.CATCHUP_MAX,), jnp.int32)
+    path_tok = jnp.where(
+        path >= 0, node_tok[jnp.maximum(path, 0)], 0
+    ).astype(jnp.int32)
+    toks = toks.at[: S.DEPTH_MAX].set(path_tok)
+    toks = toks.at[jnp.minimum(m, S.CATCHUP_MAX - 1)].set(t_fin)
+    _commit(v, t_params, toks, m)
+
+
+# ------------------------------------------------------- eagle tree --------
+
+
+def eagle_tree_round(state, *weights):
+    """EAGLE-style drafter + beam draft tree + margin-aware tree verify.
+
+    beam == 1, branch == 1 reproduces EAGLE-chain; larger beams are the
+    static-shape analog of EAGLE-2/3 dynamic trees (DESIGN.md §4).
+    """
+    nt = len(_TARGET_NAMES)
+    t_params = M.unflatten_like(_TARGET_TREE, list(weights[:nt]))
+    e_params = M.unflatten_like(_EAGLE_TREE, list(weights[nt:]))
+    v = S.View(state)
+    n = v.geti("pos")
+    depth_rt = jnp.clip(v.geti("kdraft"), 1, S.DEPTH_MAX)
+    beam_rt = jnp.clip(v.geti("beam"), 1, S.B_MAX)
+    branch_rt = jnp.clip(v.geti("branch"), 1, S.C_MAX)
+
+    root_dlog, root_feat = _catchup_eagle(v, e_params)
+
+    ntot = S.NODES_MAX + S.B_MAX  # level-0 root slots + drafted nodes
+    node_tok = jnp.zeros((ntot,), jnp.int32)
+    node_parent = jnp.full((ntot,), -1, jnp.int32)
+    node_level = jnp.arange(ntot, dtype=jnp.int32) // S.B_MAX
+    node_cum = jnp.full((ntot,), NEG, jnp.float32).at[0].set(0.0)
+    node_alive = jnp.zeros((ntot,), bool).at[0].set(True)
+    node_feat = jnp.zeros((ntot, M.EAGLE_CFG.d_model), jnp.float32)
+    node_feat = node_feat.at[0].set(root_feat)
+    node_dlog = jnp.zeros((ntot, M.TARGET_CFG.vocab), jnp.float32)
+    node_dlog = node_dlog.at[0].set(root_dlog)
+
+    def level_body(l, carry):
+        (node_tok, node_parent, node_cum, node_alive, node_feat,
+         node_dlog, ekv) = carry
+        active = l <= depth_rt
+        f_rows = (l - 1) * S.B_MAX + jnp.arange(S.B_MAX)
+        f_dlog = node_dlog[f_rows]                     # [B, V]
+        f_cum = node_cum[f_rows]
+        f_alive = node_alive[f_rows]
+        f_logp = jax.nn.log_softmax(f_dlog, axis=-1)
+        vals, idxs = topk_iter(f_logp, S.C_MAX)        # [B, C]
+        cand_cum = f_cum[:, None] + vals
+        rank_ok = jnp.arange(S.C_MAX)[None, :] < branch_rt
+        cand_cum = jnp.where(
+            rank_ok & f_alive[:, None] & active, cand_cum, NEG
+        )
+        flat_cum = cand_cum.reshape(-1)
+        flat_tok = idxs.reshape(-1).astype(jnp.int32)
+        flat_par = jnp.repeat(f_rows, S.C_MAX)
+        top_vals, top_pos = topk_iter(flat_cum, S.B_MAX)
+        new_rows = l * S.B_MAX + jnp.arange(S.B_MAX)
+        sel_tok = flat_tok[top_pos]
+        sel_par = flat_par[top_pos].astype(jnp.int32)
+        sel_alive = (
+            (top_vals > NEG / 2)
+            & (jnp.arange(S.B_MAX) < beam_rt)
+            & active
+        )
+        node_tok = node_tok.at[new_rows].set(sel_tok)
+        node_parent = node_parent.at[new_rows].set(sel_par)
+        node_cum = node_cum.at[new_rows].set(
+            jnp.where(sel_alive, top_vals, NEG)
+        )
+        node_alive = node_alive.at[new_rows].set(sel_alive)
+
+        # drafter processes the new level (batch of B nodes, tree mask)
+        par_feat = node_feat[sel_par]
+        slots = jnp.minimum(n + new_rows - S.B_MAX, M.S_MAX - 1)
+        positions = jnp.minimum(n + l - 1, M.S_MAX - 1) * jnp.ones(
+            (S.B_MAX,), jnp.int32
+        )
+        # ancestors: walk parent chain (<= DEPTH_MAX hops)
+        anc_cols = _ancestor_mask(node_parent, new_rows, n)
+        committed = (jnp.arange(M.S_MAX)[None, :] < n).astype(jnp.float32)
+        self_col = jax.nn.one_hot(slots, M.S_MAX, dtype=jnp.float32)
+        mask = jnp.clip(committed + anc_cols + self_col, 0.0, 1.0)
+        x = M.eagle_inputs(e_params, sel_tok, par_feat)
+        logits, hid, ekv = M.block_apply(
+            M.EAGLE_CFG, e_params, ekv, sel_tok, slots, positions, mask,
+            inputs_override=x,
+        )
+        node_dlog = node_dlog.at[new_rows].set(logits)
+        node_feat = node_feat.at[new_rows].set(hid)
+        return (node_tok, node_parent, node_cum, node_alive, node_feat,
+                node_dlog, ekv)
+
+    # while_loop (not fori to DEPTH_MAX): levels beyond the runtime depth
+    # are dead, and skipping them saves ~30% of drafter compute at K=7
+    def level_cond(carry):
+        l = carry[0]
+        return l <= depth_rt
+
+    def level_step(carry):
+        l = carry[0]
+        rest = level_body(l, carry[1])
+        return (l + 1, rest)
+
+    (_, (node_tok, node_parent, node_cum, node_alive, node_feat, node_dlog,
+         ekv)) = jax.lax.while_loop(
+        level_cond, level_step,
+        (jnp.asarray(1, jnp.int32),
+         (node_tok, node_parent, node_cum, node_alive, node_feat, node_dlog,
+          v.ekv)),
+    )
+    v.ekv = ekv
+    v.add("draft_steps", depth_rt.astype(jnp.float32))
+
+    # ---- target verify over the drafted block ----
+    blk = jnp.arange(S.NODES_MAX)
+    rows = S.B_MAX + blk
+    toks_blk = node_tok[rows]
+    slots = jnp.minimum(n + blk, M.S_MAX - 1).astype(jnp.int32)
+    positions = jnp.minimum(n + node_level[rows] - 1, M.S_MAX - 1)
+    anc_cols = _ancestor_mask(node_parent, rows, n)
+    committed = (jnp.arange(M.S_MAX)[None, :] < n).astype(jnp.float32)
+    self_col = jax.nn.one_hot(slots, M.S_MAX, dtype=jnp.float32)
+    mask = jnp.clip(committed + anc_cols + self_col, 0.0, 1.0)
+    mask = mask * node_alive[rows][:, None].astype(jnp.float32)
+    t_logits, t_hid = _target_block(
+        v, t_params, toks_blk, slots, positions, mask
+    )
+    v.feat = v.feat.at[slots, :].set(t_hid)
+
+    dists = jnp.concatenate(
+        [jnp.broadcast_to(v.next_logits, (S.B_MAX, M.TARGET_CFG.vocab)),
+         t_logits], axis=0,
+    )
+    m, path, t_fin, flags, pz1, pz2, _, _ = _tree_dists_and_walk(
+        v, dists, node_tok, node_parent, node_level, node_alive, depth_rt
+    )
+    _tree_commit(v, t_params, node_tok, m, path, t_fin, flags, pz1, pz2,
+                 depth_rt)
+    return v.pack()
+
+
+def _ancestor_mask(node_parent, rows, n):
+    """[len(rows), S_MAX] — allowed in-block ancestor columns per node.
+
+    Walks each node's parent chain; root-level parents (< B_MAX) map to the
+    committed prefix and are excluded (already covered by col < n)."""
+    def chain(i):
+        def hop(_, carry):
+            cur, cols = carry
+            par = node_parent[jnp.maximum(cur, 0)]
+            is_block = (par >= S.B_MAX) & (cur >= 0)
+            slot = jnp.minimum(n + par - S.B_MAX, M.S_MAX - 1)
+            cols = jnp.where(
+                is_block,
+                cols + jax.nn.one_hot(slot, M.S_MAX, dtype=jnp.float32),
+                cols,
+            )
+            cur = jnp.where(cur >= 0, par, cur)
+            return cur, cols
+
+        cols0 = jnp.zeros((M.S_MAX,), jnp.float32)
+        _, cols = jax.lax.fori_loop(0, S.DEPTH_MAX, hop, (i, cols0))
+        return cols
+
+    return jax.vmap(chain)(rows.astype(jnp.int32))
+
+
+# ------------------------------------------------------------ medusa -------
+
+# Static Medusa candidate tree: (parent_node or -1 root, head, rank).
+# 14 nodes over 4 heads, mirroring the Medusa paper's pruned cartesian tree.
+_MEDUSA_TOPO = [
+    (-1, 0, 0), (-1, 0, 1), (-1, 0, 2), (-1, 0, 3),   # level 1: 0..3
+    (0, 1, 0), (0, 1, 1), (1, 1, 0), (1, 1, 1),       # level 2: 4..7
+    (4, 2, 0), (4, 2, 1), (5, 2, 0), (6, 2, 0),       # level 3: 8..11
+    (8, 3, 0), (8, 3, 1),                             # level 4: 12..13
+]
+MEDUSA_NODES = len(_MEDUSA_TOPO)
+_MEDUSA_DEPTH = 4
+
+
+def medusa_round(state, *weights):
+    """Medusa-style round: head candidates in a static tree + tree verify."""
+    nt = len(_TARGET_NAMES)
+    t_params = M.unflatten_like(_TARGET_TREE, list(weights[:nt]))
+    m_params = M.unflatten_like(_MEDUSA_TREE, list(weights[nt:]))
+    v = S.View(state)
+    n = v.geti("pos")
+    depth_rt = jnp.minimum(
+        jnp.clip(v.geti("kdraft"), 1, S.DEPTH_MAX), _MEDUSA_DEPTH
+    )
+
+    feat = v.feat[jnp.maximum(n - 1, 0)]
+    heads = M.medusa_head_logits(m_params, feat)      # [H, V]
+    v.add("draft_steps", 1.0)
+    max_rank = 4
+    _, topk_idx = topk_iter(heads, max_rank)          # [H, max_rank]
+
+    # map static topology into the shared walk/commit frame:
+    # node arrays sized B_MAX + NODES_MAX like the eagle tree.
+    ntot = S.NODES_MAX + S.B_MAX
+    topo_par = np.array([p for p, _, _ in _MEDUSA_TOPO], np.int32)
+    topo_head = np.array([h for _, h, _ in _MEDUSA_TOPO], np.int32)
+    topo_rank = np.array([r for _, _, r in _MEDUSA_TOPO], np.int32)
+    topo_level = topo_head + 1
+
+    # place medusa node j at frame row B_MAX + j; parent -1 -> root row 0
+    frame_rows = S.B_MAX + np.arange(MEDUSA_NODES)
+    par_rows = np.where(topo_par < 0, 0, S.B_MAX + topo_par).astype(np.int32)
+
+    node_tok = jnp.zeros((ntot,), jnp.int32)
+    node_tok = node_tok.at[jnp.asarray(frame_rows)].set(
+        topk_idx[jnp.asarray(topo_head), jnp.asarray(topo_rank)].astype(
+            jnp.int32
+        )
+    )
+    node_parent = jnp.full((ntot,), -1, jnp.int32)
+    node_parent = node_parent.at[jnp.asarray(frame_rows)].set(
+        jnp.asarray(par_rows)
+    )
+    node_level = jnp.zeros((ntot,), jnp.int32)
+    node_level = node_level.at[jnp.asarray(frame_rows)].set(
+        jnp.asarray(topo_level)
+    )
+    node_alive = jnp.zeros((ntot,), bool)
+    node_alive = node_alive.at[jnp.asarray(frame_rows)].set(
+        jnp.asarray(topo_level) <= depth_rt
+    )
+    node_alive = node_alive.at[0].set(True)
+
+    # target verify: medusa nodes occupy block rows 0..MEDUSA_NODES-1
+    blk = jnp.arange(S.NODES_MAX)
+    rows = S.B_MAX + blk
+    live_blk = blk < MEDUSA_NODES
+    toks_blk = node_tok[rows]
+    slots = jnp.minimum(n + blk, M.S_MAX - 1).astype(jnp.int32)
+    positions = jnp.minimum(
+        n + jnp.maximum(node_level[rows] - 1, 0), M.S_MAX - 1
+    )
+    anc_cols = _ancestor_mask(node_parent, rows, n)
+    committed = (jnp.arange(M.S_MAX)[None, :] < n).astype(jnp.float32)
+    self_col = jax.nn.one_hot(slots, M.S_MAX, dtype=jnp.float32)
+    mask = jnp.clip(committed + anc_cols + self_col, 0.0, 1.0)
+    mask = mask * (node_alive[rows] & live_blk)[:, None].astype(jnp.float32)
+    t_logits, t_hid = _target_block(
+        v, t_params, toks_blk, slots, positions, mask
+    )
+    v.feat = v.feat.at[slots, :].set(t_hid)
+
+    dists = jnp.concatenate(
+        [jnp.broadcast_to(v.next_logits, (S.B_MAX, M.TARGET_CFG.vocab)),
+         t_logits], axis=0,
+    )
+    m, path, t_fin, flags, pz1, pz2, _, _ = _tree_dists_and_walk(
+        v, dists, node_tok, node_parent, node_level, node_alive, depth_rt
+    )
+    _tree_commit(v, t_params, node_tok, m, path, t_fin, flags, pz1, pz2,
+                 depth_rt)
+    return v.pack()
+
+
+# -------------------------------------------------------- verify_ext -------
+
+
+def verify_ext_round(state, ext, *t_weights):
+    """Verify a host-provided draft chain (PLD / Lookahead drafts).
+
+    ext: f32 [K_MAX + 1] = [ext_len, tok_0 .. tok_{K_MAX-1}].
+    ext_len == 0 degenerates to one AR step (m = 0, emit target sample).
+    This path runs the pallas `mars_verify` kernel end to end.
+    """
+    t_params = M.unflatten_like(_TARGET_TREE, list(t_weights))
+    v = S.View(state)
+    n = v.geti("pos")
+    k_rt = jnp.clip(ext[0].astype(jnp.int32), 0, S.K_MAX)
+    d_toks = ext[1:].astype(jnp.int32)
+
+    slots = jnp.minimum(n + jnp.arange(S.K_MAX, dtype=jnp.int32), M.S_MAX - 1)
+    live = (jnp.arange(S.K_MAX)[:, None] < k_rt).astype(jnp.float32)
+    mask = _causal_mask(slots, n + S.K_MAX) * live
+    t_logits, t_hid = _target_block(v, t_params, d_toks, slots, slots, mask)
+    v.feat = v.feat.at[slots, :].set(t_hid)
+
+    dists = jnp.concatenate([v.next_logits[None, :], t_logits[:-1]], axis=0)
+    z1, z2, i1, i2 = _TOP2(dists)
+    tstar = _sample_rows(v, dists)
+
+    if USE_PALLAS:
+        flags, r, mf = mars_verify_pallas(
+            z1, z2, i2, tstar, d_toks, v.get("theta"), v.get("mars_on"),
+            k_rt,
+        )
+    else:
+        flags, r, mf = ref.mars_verify_ref(
+            z1, z2, i2, tstar, d_toks, v.get("theta"), v.get("mars_on"),
+            k_rt,
+        )
+    m = mf.astype(jnp.int32)
+
+    # final token: bonus (all accepted) or the target's own pick
+    bonus_dist = t_logits[jnp.maximum(jnp.minimum(k_rt - 1, S.K_MAX - 1), 0)]
+    gb = jax.random.gumbel(_key(v), (M.TARGET_CFG.vocab,))
+    temp = jnp.maximum(v.get("temp"), 1e-6)
+    bonus_tok = jnp.where(
+        v.get("greedy") > 0.5,
+        jnp.argmax(bonus_dist),
+        jnp.argmax(bonus_dist / temp + gb),
+    ).astype(jnp.int32)
+    all_ok = (m >= k_rt)
+    stop_tok = tstar[jnp.minimum(m, S.K_MAX - 1)]
+    fin = jnp.where(all_ok & (k_rt > 0), bonus_tok, stop_tok)
+
+    v.add("exact_accepts", jnp.sum(flags == 1.0))
+    v.add("relaxed_accepts", jnp.sum(flags == 2.0))
+    v.add("rejects", jnp.where(all_ok, 0.0, 1.0))
+    v.add("bonus", jnp.where(all_ok & (k_rt > 0), 1.0, 0.0))
+    probe_n = jnp.minimum(m + 1, jnp.maximum(k_rt, 1))
+    _probe_push(v, z1, z2, flags, probe_n)
+
+    toks = jnp.zeros((S.CATCHUP_MAX,), jnp.int32)
+    toks = toks.at[: S.K_MAX].set(d_toks)
+    toks = toks.at[jnp.minimum(m, S.CATCHUP_MAX - 1)].set(fin)
+    _commit(v, t_params, toks, m)
+    return v.pack()
+
+
+# ------------------------------------------------------------ extract ------
+
+
+def extract(state):
+    """Cheap per-round pull: scalars ++ out ring."""
+    lay = S.layout()
+    sc = state[: S.N_SCALARS]
+    o = lay["out"]
+    out = state[o["offset"]: o["offset"] + o["size"]]
+    return jnp.concatenate([sc, out])
+
+
+def extract_probe(state):
+    """Probe pull for figures 1 & 4: scalars ++ probe ring."""
+    lay = S.layout()
+    sc = state[: S.N_SCALARS]
+    p = lay["probe"]
+    probe = state[p["offset"]: p["offset"] + p["size"]]
+    return jnp.concatenate([sc, probe])
+
+
+# ------------------------------------------------- weight trees (static) ---
+# Template pytrees (shapes only) fixed at import time so flattening order is
+# deterministic; aot.py and the tests build real params with the same trees.
+
+_key0 = jax.random.PRNGKey(0)
+_TARGET_TREE = jax.eval_shape(lambda: M.init_lm(M.TARGET_CFG, _key0))
+_EAGLE_TREE = jax.eval_shape(
+    lambda: M.init_eagle(M.EAGLE_CFG, _key0, M.TARGET_CFG)
+)
+_SPS_TREE = jax.eval_shape(lambda: M.init_lm(M.DRAFT_CFG, _key0))
+_MEDUSA_TREE = jax.eval_shape(lambda: M.init_medusa(_key0, M.TARGET_CFG))
+
+_TARGET_NAMES = M.flat_names(_TARGET_TREE)
+_EAGLE_NAMES = M.flat_names(_EAGLE_TREE)
+_SPS_NAMES = M.flat_names(_SPS_TREE)
+_MEDUSA_NAMES = M.flat_names(_MEDUSA_TREE)
+
+
+def weight_specs(which: str):
+    """[(name, shape)] for a model family, in flattening order."""
+    tree = {
+        "target": _TARGET_TREE, "eagle": _EAGLE_TREE,
+        "sps": _SPS_TREE, "medusa": _MEDUSA_TREE,
+    }[which]
+    names = M.flat_names(tree)
+    vals = M.flat_values(tree)
+    return [(n, tuple(int(d) for d in x.shape)) for n, x in zip(names, vals)]

@@ -1,0 +1,185 @@
+"""The flat f32 decoding-state ABI shared between the JAX programs and the
+rust runtime.
+
+Every lowered executable is single-input-state / single-output-state (plus
+weight parameters): `state' = round(state, *weights)`. The state is one flat
+f32 vector so that the PJRT output buffer of one call can be fed directly as
+the input of the next with zero host traffic (see DESIGN.md §1.1 — Literal
+arguments cost 42 ms/call on this box, device buffers 0.5 ms).
+
+Token ids and counters are stored as f32 (exact for < 2^24).
+The layout is exported to artifacts/state_layout.json and mirrored by
+`rust/src/runtime/state.rs`; a layout hash guards against drift.
+"""
+
+import hashlib
+import json
+
+import jax.numpy as jnp
+
+from . import model as M
+
+# ----------------------------------------------------------- constants -----
+
+N_SCALARS = 64
+K_MAX = 16                 # max chain draft length
+B_MAX = 4                  # max tree beam width
+C_MAX = 4                  # max children per expansion
+DEPTH_MAX = 10             # max tree depth
+NODES_MAX = B_MAX * DEPTH_MAX
+CATCHUP_MAX = K_MAX + 2    # max tokens committed per round (K or depth, +1)
+PROBE_MAX = 1024
+PROBE_W = 3                # (z1, z2, flag)
+N_CFG = 16                 # prefill config vector length
+
+# scalar slot indices ---------------------------------------------------
+
+SCALARS = {
+    "pos": 0,             # target-cache logical length (committed tokens)
+    "eagle_pos": 1,       # EAGLE drafter processed length
+    "sps_pos": 2,         # SpS draft-LM processed length
+    "out_len": 3,         # generated tokens so far
+    "finished": 4,        # 0/1
+    "rng": 5,             # RNG counter (folded with seed)
+    "temp": 6,            # sampling temperature (0 => greedy)
+    "theta": 7,           # MARS logit-ratio threshold
+    "mars_on": 8,         # 0/1 — margin-aware relaxation enabled
+    "kdraft": 9,          # runtime chain draft length K <= K_MAX
+    "max_new": 10,        # generation budget
+    "eos": 11,            # EOS token id
+    "beam": 12,           # runtime tree beam b <= B_MAX
+    "branch": 13,         # runtime children per node c <= C_MAX
+    "probe_on": 14,       # record (z1, z2, flag) probe entries
+    "probe_len": 15,
+    "rounds": 16,         # draft-verify cycles executed
+    "committed": 17,      # tokens committed by rounds (for tau)
+    "target_calls": 18,   # target forward blocks
+    "draft_steps": 19,    # drafter forward blocks
+    "exact_accepts": 20,
+    "relaxed_accepts": 21,  # MARS tie-breaks taken
+    "rejects": 22,
+    "bonus": 23,          # all-accept bonus tokens
+    "prompt_len": 24,
+    "last_accept": 25,    # accepted length of the last round
+    "greedy": 26,         # 0/1 (temp == 0)
+    "seed": 27,
+}
+
+# prefill cfg vector indices -------------------------------------------
+
+CFG = {
+    "temp": 0, "theta": 1, "mars_on": 2, "kdraft": 3, "max_new": 4,
+    "eos": 5, "beam": 6, "branch": 7, "probe_on": 8, "greedy": 9,
+    "seed": 10, "prompt_len": 11,
+}
+
+# ------------------------------------------------------------- layout ------
+
+
+def _sections():
+    t, e, s = M.TARGET_CFG, M.EAGLE_CFG, M.DRAFT_CFG
+    tkv = t.n_layers * 2 * t.n_heads * t.s_max * t.d_head
+    ekv = e.n_layers * 2 * e.n_heads * e.s_max * e.d_head
+    skv = s.n_layers * 2 * s.n_heads * s.s_max * s.d_head
+    feat = t.s_max * t.d_model
+    return [
+        ("scalars", (N_SCALARS,)),
+        ("tokens", (M.S_MAX,)),
+        ("out", (M.OUT_MAX,)),
+        ("next_logits", (t.vocab,)),
+        ("probe", (PROBE_MAX, PROBE_W)),
+        ("tkv", (t.n_layers, 2, t.n_heads, t.s_max, t.d_head)),
+        ("feat", (t.s_max, t.d_model)),
+        ("ekv", (e.n_layers, 2, e.n_heads, e.s_max, e.d_head)),
+        ("skv", (s.n_layers, 2, s.n_heads, s.s_max, s.d_head)),
+    ]
+
+
+def layout() -> dict:
+    """name -> (offset, shape, size); plus total length."""
+    out = {}
+    off = 0
+    for name, shape in _sections():
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = {"offset": off, "shape": list(shape), "size": size}
+        off += size
+    out["__total__"] = off
+    return out
+
+
+STATE_LEN = layout()["__total__"]
+
+# extract vector: scalars ++ out ring
+EXTRACT_LEN = N_SCALARS + M.OUT_MAX
+# probe extract: scalars ++ probe ring
+EXTRACT_PROBE_LEN = N_SCALARS + PROBE_MAX * PROBE_W
+
+
+def layout_json() -> str:
+    lay = layout()
+    doc = {
+        "state_len": STATE_LEN,
+        "extract_len": EXTRACT_LEN,
+        "extract_probe_len": EXTRACT_PROBE_LEN,
+        "n_scalars": N_SCALARS,
+        "scalars": SCALARS,
+        "cfg": CFG,
+        "sections": {k: v for k, v in lay.items() if k != "__total__"},
+        "consts": {
+            "k_max": K_MAX, "b_max": B_MAX, "c_max": C_MAX,
+            "depth_max": DEPTH_MAX, "nodes_max": NODES_MAX,
+            "catchup_max": CATCHUP_MAX, "probe_max": PROBE_MAX,
+            "probe_w": PROBE_W, "n_cfg": N_CFG,
+            "p_max": M.P_MAX, "out_max": M.OUT_MAX, "s_max": M.S_MAX,
+            "vocab": M.TARGET_CFG.vocab,
+        },
+    }
+    doc["hash"] = hashlib.sha256(
+        json.dumps(doc, sort_keys=True).encode()
+    ).hexdigest()[:16]
+    return json.dumps(doc, indent=1, sort_keys=True)
+
+
+# ------------------------------------------------------ pack / unpack ------
+
+
+class View:
+    """Named views over the flat state inside a traced JAX program."""
+
+    def __init__(self, state):
+        self.flat = state
+        lay = layout()
+        self._lay = lay
+        for name, spec in lay.items():
+            if name == "__total__":
+                continue
+            off, size = spec["offset"], spec["size"]
+            arr = state[off: off + size].reshape(spec["shape"])
+            setattr(self, name, arr)
+
+    # scalar helpers -----------------------------------------------------
+    def get(self, name):
+        return self.scalars[SCALARS[name]]
+
+    def geti(self, name):
+        return self.scalars[SCALARS[name]].astype(jnp.int32)
+
+    def set(self, name, value):
+        self.scalars = self.scalars.at[SCALARS[name]].set(
+            jnp.asarray(value, jnp.float32)
+        )
+
+    def add(self, name, value):
+        self.scalars = self.scalars.at[SCALARS[name]].add(
+            jnp.asarray(value, jnp.float32)
+        )
+
+    def pack(self):
+        parts = []
+        for name, spec in self._lay.items():
+            if name == "__total__":
+                continue
+            parts.append(getattr(self, name).reshape(-1))
+        return jnp.concatenate(parts)

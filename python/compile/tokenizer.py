@@ -1,0 +1,65 @@
+"""Byte-level tokenizer shared (by specification) with the rust runtime.
+
+Vocabulary layout — must stay in sync with `rust/src/tokenizer/mod.rs`
+and is exported to `artifacts/vocab.json` by aot.py:
+
+    0        PAD
+    1        BOS
+    2        EOS
+    3        SEP   (unused by tasks, reserved)
+    4..98    printable ASCII 0x20..0x7E  (id = byte - 0x20 + 4)
+    99       NL    ('\n')
+    100..127 unused padding up to VOCAB = 128
+"""
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+NL_ID = 99
+VOCAB = 128
+_ASCII_LO, _ASCII_HI = 0x20, 0x7E
+_OFFSET = 4
+
+SPECIALS = {"<pad>": PAD, "<bos>": BOS, "<eos>": EOS, "<sep>": SEP}
+
+
+def encode(text: str, bos: bool = False, eos: bool = False) -> list[int]:
+    """Encode text to token ids. Unknown characters map to ' ' (space)."""
+    ids = [BOS] if bos else []
+    for ch in text:
+        b = ord(ch)
+        if ch == "\n":
+            ids.append(NL_ID)
+        elif _ASCII_LO <= b <= _ASCII_HI:
+            ids.append(b - _ASCII_LO + _OFFSET)
+        else:
+            ids.append(_OFFSET)  # space fallback
+    if eos:
+        ids.append(EOS)
+    return ids
+
+
+def decode(ids) -> str:
+    """Decode ids to text, skipping specials."""
+    out = []
+    for t in ids:
+        t = int(t)
+        if t == NL_ID:
+            out.append("\n")
+        elif _OFFSET <= t < _OFFSET + (_ASCII_HI - _ASCII_LO + 1):
+            out.append(chr(t - _OFFSET + _ASCII_LO))
+        # specials / padding ids are dropped
+    return "".join(out)
+
+
+def vocab_spec() -> dict:
+    """Machine-readable vocab description for artifacts/vocab.json."""
+    return {
+        "vocab_size": VOCAB,
+        "pad": PAD,
+        "bos": BOS,
+        "eos": EOS,
+        "sep": SEP,
+        "nl": NL_ID,
+        "ascii_lo": _ASCII_LO,
+        "ascii_hi": _ASCII_HI,
+        "ascii_offset": _OFFSET,
+    }

@@ -1,0 +1,185 @@
+"""Train the model family on the synthetic multi-task corpus.
+
+Models (see DESIGN.md §1.3 — the laptop-scale substitution for the paper's
+8B–235B targets):
+
+    target  — 4-layer / d128 char LM, the model being accelerated
+    sps     — 2-layer / d64 independent draft LM (standard SpS drafter)
+    eagle   — 2-layer / d128 feature-conditioned drafter, KL-distilled
+              from the target (EAGLE analog)
+    medusa  — 4 residual heads over target features (Medusa analog)
+
+Outputs raw f32 little-endian .bin files + a meta JSON per model under
+--out, consumed both by aot.py (to bake example inputs) and by the rust
+runtime (weight upload at engine start).
+
+Usage: cd python && python -m compile.train --out ../artifacts/weights
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from . import model as M
+from . import tokenizer
+
+SEQ = 128
+BATCH = 8
+
+
+def batches(seed: int):
+    stream = data.token_stream(seed, SEQ, tokenizer)
+    while True:
+        rows = [next(stream) for _ in range(BATCH)]
+        yield jnp.asarray(np.array(rows, np.int32))
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros(())}
+
+
+def adamw_update(params, grads, opt, lr, wd=0.01, b1=0.9, b2=0.95, eps=1e-8):
+    t = opt["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"],
+                     grads)
+    mh = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+    params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / (jnp.sqrt(vv) + eps) + wd * p),
+        params, mh, vh,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, peak=3e-3, warmup=50):
+    warm = peak * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def train_model(loss_fn, params, steps, seed, label, log_every=100):
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    gen = batches(seed)
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        lr = cosine_lr(i, steps)
+        params, opt, loss = step_fn(params, opt, next(gen), lr)
+        if i % log_every == 0 or i == steps - 1:
+            losses.append(float(loss))
+            print(
+                f"[{label}] step {i:5d}/{steps} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+def save_model(params, path_prefix: str, cfg=None):
+    names = M.flat_names(params)
+    vals = M.flat_values(params)
+    offsets, tensors = [], []
+    off = 0
+    for n, a in zip(names, vals):
+        a = np.asarray(a, np.float32)
+        tensors.append(a)
+        offsets.append(
+            {"name": n, "shape": list(a.shape), "offset": off,
+             "size": int(a.size)}
+        )
+        off += a.size
+    flat = np.concatenate([t.reshape(-1) for t in tensors])
+    flat.astype("<f4").tofile(path_prefix + ".bin")
+    meta = {"tensors": offsets, "total": int(flat.size)}
+    if cfg is not None:
+        meta["config"] = cfg.as_dict()
+    with open(path_prefix + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"saved {path_prefix}.bin ({flat.size * 4 / 1e6:.1f} MB)")
+
+
+def load_model(path_prefix: str, template) -> dict:
+    flat = np.fromfile(path_prefix + ".bin", dtype="<f4")
+    with open(path_prefix + ".json") as f:
+        meta = json.load(f)
+    vals = []
+    for t in meta["tensors"]:
+        a = flat[t["offset"]: t["offset"] + t["size"]].reshape(t["shape"])
+        vals.append(jnp.asarray(a))
+    return M.unflatten_like(template, vals)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--target-steps", type=int, default=1800)
+    ap.add_argument("--sps-steps", type=int, default=700)
+    ap.add_argument("--eagle-steps", type=int, default=800)
+    ap.add_argument("--medusa-steps", type=int, default=450)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    key = jax.random.PRNGKey(args.seed)
+    kt, ks, ke, km = jax.random.split(key, 4)
+    history = {}
+
+    # -- target LM ---------------------------------------------------------
+    target = M.init_lm(M.TARGET_CFG, kt)
+    target, hist = train_model(
+        lambda p, b: M.lm_loss(M.TARGET_CFG, p, b),
+        target, args.target_steps, seed=1, label="target",
+    )
+    history["target"] = hist
+    save_model(target, os.path.join(args.out, "target"), M.TARGET_CFG)
+
+    # -- independent SpS draft LM -----------------------------------------
+    sps = M.init_lm(M.DRAFT_CFG, ks)
+    sps, hist = train_model(
+        lambda p, b: M.lm_loss(M.DRAFT_CFG, p, b),
+        sps, args.sps_steps, seed=2, label="sps",
+    )
+    history["sps"] = hist
+    save_model(sps, os.path.join(args.out, "sps"), M.DRAFT_CFG)
+
+    # -- EAGLE drafter (KL distillation from the frozen target) -----------
+    eagle = M.init_eagle(M.EAGLE_CFG, ke, M.TARGET_CFG)
+    eagle, hist = train_model(
+        lambda p, b: M.eagle_loss(M.EAGLE_CFG, p, M.TARGET_CFG, target, b),
+        eagle, args.eagle_steps, seed=3, label="eagle",
+    )
+    history["eagle"] = hist
+    save_model(eagle, os.path.join(args.out, "eagle"), M.EAGLE_CFG)
+
+    # -- Medusa heads ------------------------------------------------------
+    medusa = M.init_medusa(km, M.TARGET_CFG)
+    medusa, hist = train_model(
+        lambda p, b: M.medusa_loss(p, M.TARGET_CFG, target, b),
+        medusa, args.medusa_steps, seed=4, label="medusa",
+    )
+    history["medusa"] = hist
+    save_model(medusa, os.path.join(args.out, "medusa"))
+
+    with open(os.path.join(args.out, "train_history.json"), "w") as f:
+        json.dump(history, f, indent=1)
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Pallas kernels vs the pure-jnp oracle — the L1 correctness signal.
+
+Hypothesis sweeps shapes, magnitudes and thresholds; seeded grids cover
+the edge cases the paper's Algorithm 1 depends on (ties, negative logits,
+theta boundaries).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import top2_pallas, mars_verify_pallas, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def random_logits(t, v, scale, rng=RNG):
+    return jnp.asarray(rng.normal(size=(t, v)).astype(np.float32) * scale)
+
+
+# ----------------------------------------------------------------- top2 ----
+
+
+@pytest.mark.parametrize("t", [1, 2, 7, 16, 41])
+@pytest.mark.parametrize("v", [128, 256, 512])
+def test_top2_matches_ref_shapes(t, v):
+    x = random_logits(t, v, 3.0)
+    got = top2_pallas(x)
+    want = ref.top2_ref(x)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("block_v", [64, 128, 256])
+def test_top2_block_sizes(block_v):
+    x = random_logits(8, 256, 2.0)
+    got = top2_pallas(x, block_v=block_v)
+    want = ref.top2_ref(x)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w))
+
+
+def test_top2_with_ties_prefers_lower_index():
+    x = jnp.zeros((3, 128), jnp.float32)
+    x = x.at[:, 5].set(2.0).at[:, 9].set(2.0)
+    z1, z2, i1, i2 = top2_pallas(x)
+    rz1, rz2, ri1, ri2 = ref.top2_ref(x)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(rz1))
+    np.testing.assert_allclose(np.asarray(z2), np.asarray(rz2))
+    assert np.all(np.asarray(i1) == np.asarray(ri1))
+
+
+def test_top2_negative_dominated():
+    x = random_logits(5, 128, 1.0) - 50.0
+    got = top2_pallas(x)
+    want = ref.top2_ref(x)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(1, 24),
+    scale=st.floats(0.1, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_top2_hypothesis(t, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, 128)).astype(np.float32) * scale)
+    z1, z2, i1, i2 = top2_pallas(x)
+    rz1, rz2, ri1, ri2 = ref.top2_ref(x)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(rz1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z2), np.asarray(rz2), rtol=1e-6)
+    # indices may differ only under exact value ties
+    same = np.asarray(i1) == np.asarray(ri1)
+    tied = np.isclose(np.asarray(z1), np.asarray(z2))
+    assert np.all(same | tied)
+
+
+# ---------------------------------------------------------------- verify ---
+
+
+def verify_case(t, theta, mars_on, k, seed=0, force=None):
+    rng = np.random.default_rng(seed)
+    z1 = jnp.asarray(np.abs(rng.normal(size=t)).astype(np.float32) + 0.5)
+    z2 = z1 * jnp.asarray(rng.uniform(0.3, 1.0, t).astype(np.float32))
+    i2 = jnp.asarray(rng.integers(0, 128, t), jnp.int32)
+    tstar = jnp.asarray(rng.integers(0, 128, t), jnp.int32)
+    if force == "exact":
+        draft = tstar
+    elif force == "top2":
+        draft = i2
+    else:
+        draft = jnp.where(
+            jnp.asarray(rng.uniform(size=t)) < 0.4, tstar, i2
+        ).astype(jnp.int32)
+    got = mars_verify_pallas(z1, z2, i2, tstar, draft, theta, mars_on, k)
+    want = ref.mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w))
+    return got
+
+
+@pytest.mark.parametrize("theta", [0.0, 0.5, 0.84, 0.9, 0.96, 1.0])
+@pytest.mark.parametrize("mars_on", [0.0, 1.0])
+def test_verify_matches_ref(theta, mars_on):
+    verify_case(16, theta, mars_on, 12, seed=7)
+
+
+def test_verify_exact_match_accepts_all():
+    flags, r, m = verify_case(8, 0.9, 0.0, 8, force="exact")
+    assert float(m) == 8.0
+    assert np.all(np.asarray(flags) == 1.0)
+
+
+def test_verify_theta_one_disables_relaxation():
+    # theta=1: r can never exceed it, so MARS == strict
+    flags_a, _, m_a = verify_case(16, 1.0, 1.0, 16, seed=3)
+    flags_b, _, m_b = verify_case(16, 1.0, 0.0, 16, seed=3)
+    np.testing.assert_allclose(np.asarray(flags_a), np.asarray(flags_b))
+    assert float(m_a) == float(m_b)
+
+
+def test_verify_theta_zero_mars_accepts_top2():
+    flags, r, m = verify_case(8, 0.0, 1.0, 8, force="top2")
+    # every draft is the top-2 token and all z are positive => all relaxed
+    # (except positions where top-2 happens to equal tstar -> exact)
+    assert float(m) == 8.0
+    assert np.all(np.isin(np.asarray(flags), [1.0, 2.0]))
+
+
+def test_verify_negative_logits_never_relax():
+    t = 8
+    z1 = jnp.full((t,), -1.0, jnp.float32)
+    z2 = jnp.full((t,), -1.1, jnp.float32)
+    i2 = jnp.arange(t, dtype=jnp.int32)
+    tstar = jnp.full((t,), 99, jnp.int32)
+    draft = i2  # matches top-2, but z1 < 0 => guard blocks relaxation
+    flags, r, m = mars_verify_pallas(z1, z2, i2, tstar, draft, 0.0, 1.0, t)
+    assert float(m) == 0.0
+    assert np.all(np.asarray(flags) == 0.0)
+    want = ref.mars_verify_ref(z1, z2, i2, tstar, draft, 0.0, 1.0, t)
+    np.testing.assert_allclose(np.asarray(flags), np.asarray(want[0]))
+
+
+def test_verify_stops_at_first_reject():
+    t = 6
+    z1 = jnp.ones((t,), jnp.float32) * 2.0
+    z2 = jnp.ones((t,), jnp.float32) * 1.0  # r = 0.5 < theta
+    i2 = jnp.full((t,), 7, jnp.int32)
+    tstar = jnp.full((t,), 3, jnp.int32)
+    draft = jnp.asarray([3, 3, 5, 3, 3, 3], jnp.int32)  # reject at pos 2
+    flags, r, m = mars_verify_pallas(z1, z2, i2, tstar, draft, 0.9, 1.0, t)
+    assert float(m) == 2.0
+    np.testing.assert_allclose(np.asarray(flags), [1, 1, 0, 0, 0, 0])
+
+
+def test_verify_k_limits_live_positions():
+    flags, r, m = verify_case(16, 0.9, 1.0, 4, force="exact")
+    assert float(m) == 4.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(1, 17),
+    theta=st.floats(0.0, 1.0),
+    mars_on=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_verify_hypothesis(t, theta, mars_on, seed):
+    k = max(1, t - 2)
+    verify_case(t, theta, mars_on, k, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_verify_monotone_in_theta(seed):
+    """Raising theta can only reduce the accepted prefix."""
+    prev = None
+    for theta in [0.0, 0.5, 0.9, 0.99, 1.0]:
+        _, _, m = verify_case(12, theta, 1.0, 12, seed=seed)
+        if prev is not None:
+            assert float(m) <= prev + 1e-9
+        prev = float(m)

@@ -1,0 +1,236 @@
+"""Round-program semantics: greedy losslessness and MARS behavior.
+
+The strongest single check in the repo: with MARS off and T=0, *every*
+speculative round program must emit exactly the sequence that vanilla
+greedy decoding of the target produces, token for token — speculative
+decoding with strict verification is lossless. With MARS on, deviations
+may only be margin-justified tie-breaks.
+
+Uses small randomly-initialized weights (fast); artifact-level equivalence
+against the trained weights is covered by the rust integration tests.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import rounds as R
+from compile import state_spec as S
+from compile import tokenizer as T
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(42)
+    kt, ke, ks, km = jax.random.split(key, 4)
+    target = M.init_lm(M.TARGET_CFG, kt)
+    eagle = M.init_eagle(M.EAGLE_CFG, ke, M.TARGET_CFG)
+    sps = M.init_lm(M.DRAFT_CFG, ks)
+    medusa = M.init_medusa(km, M.TARGET_CFG)
+    return {
+        "target": target,
+        "tw": M.flat_values(target),
+        "ew": M.flat_values(eagle),
+        "sw": M.flat_values(sps),
+        "mw": M.flat_values(medusa),
+        "prefill": jax.jit(R.prefill),
+        "ar": jax.jit(R.ar_step),
+        "sps": jax.jit(R.sps_round),
+        "tree": jax.jit(R.eagle_tree_round),
+        "medusa": jax.jit(R.medusa_round),
+        "ext": jax.jit(R.verify_ext_round),
+        "extract": jax.jit(R.extract),
+    }
+
+
+PROMPT = "Q: 12+34=?\nA: "
+MAXNEW = 20
+
+
+def make_cfg(**kw):
+    cfg = np.zeros(S.N_CFG, np.float32)
+    base = dict(
+        temp=0.0, greedy=1.0, theta=0.9, mars_on=0.0, kdraft=5,
+        max_new=MAXNEW, eos=T.EOS, beam=1, branch=1, probe_on=1.0,
+        seed=3, prompt_len=0,
+    )
+    base.update(kw)
+    for k, v in base.items():
+        cfg[S.CFG[k]] = v
+    return jnp.asarray(cfg)
+
+
+def start(world, **cfg_kw):
+    ids = T.encode(PROMPT)
+    prompt = np.zeros(M.P_MAX, np.float32)
+    prompt[: len(ids)] = ids
+    cfg = make_cfg(prompt_len=len(ids), **cfg_kw)
+    return world["prefill"](
+        jnp.asarray(prompt), cfg, *world["tw"], *world["ew"], *world["sw"]
+    )
+
+
+def drive(world, st, step, max_rounds=48):
+    for _ in range(max_rounds):
+        sc = np.asarray(st[: S.N_SCALARS])
+        if sc[S.SCALARS["finished"]] > 0:
+            break
+        st = step(st)
+    sc = np.asarray(st[: S.N_SCALARS])
+    lay = S.layout()["out"]
+    out = np.asarray(
+        st[lay["offset"]: lay["offset"] + lay["size"]]
+    ).astype(int)
+    n = int(sc[S.SCALARS["out_len"]])
+    return out[:n][:MAXNEW], sc, st
+
+
+@pytest.fixture(scope="module")
+def greedy_ref(world):
+    ids = T.encode(PROMPT)
+    toks = list(ids)
+    for _ in range(MAXNEW):
+        x = jnp.asarray([toks], jnp.int32)
+        logits, _ = M.causal_lm_logits(M.TARGET_CFG, world["target"], x)
+        nxt = int(jnp.argmax(logits[0, len(toks) - 1]))
+        toks.append(nxt)
+        if nxt == T.EOS:
+            break
+    return np.array(toks[len(ids):])
+
+
+def test_ar_greedy_matches_reference(world, greedy_ref):
+    st = start(world)
+    out, sc, _ = drive(world, st, lambda s: world["ar"](s, *world["tw"]))
+    np.testing.assert_array_equal(out, greedy_ref)
+
+
+def test_sps_greedy_lossless(world, greedy_ref):
+    st = start(world)
+    out, sc, _ = drive(
+        world, st, lambda s: world["sps"](s, *world["tw"], *world["sw"])
+    )
+    np.testing.assert_array_equal(out, greedy_ref)
+
+
+@pytest.mark.parametrize("beam,branch", [(1, 1), (2, 2), (4, 3)])
+def test_eagle_tree_greedy_lossless(world, greedy_ref, beam, branch):
+    st = start(world, beam=beam, branch=branch)
+    out, sc, _ = drive(
+        world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    np.testing.assert_array_equal(out, greedy_ref)
+
+
+def test_medusa_greedy_lossless(world, greedy_ref):
+    st = start(world, kdraft=4)
+    out, sc, _ = drive(
+        world, st, lambda s: world["medusa"](s, *world["tw"], *world["mw"])
+    )
+    np.testing.assert_array_equal(out, greedy_ref)
+
+
+def test_verify_ext_empty_draft_is_ar(world, greedy_ref):
+    ext = jnp.zeros((S.K_MAX + 1,), jnp.float32)
+    st = start(world)
+    out, sc, _ = drive(
+        world, st, lambda s: world["ext"](s, ext, *world["tw"])
+    )
+    np.testing.assert_array_equal(out, greedy_ref)
+
+
+def test_verify_ext_oracle_accepts_everything(world, greedy_ref):
+    st = start(world)
+    for _ in range(24):
+        sc = np.asarray(st[: S.N_SCALARS])
+        if sc[S.SCALARS["finished"]] > 0:
+            break
+        n = int(sc[S.SCALARS["out_len"]])
+        drafts = greedy_ref[n: n + 6]
+        e = np.zeros(S.K_MAX + 1, np.float32)
+        e[0] = len(drafts)
+        e[1: 1 + len(drafts)] = drafts
+        st = world["ext"](st, jnp.asarray(e), *world["tw"])
+    sc = np.asarray(st[: S.N_SCALARS])
+    lay = S.layout()["out"]
+    out = np.asarray(
+        st[lay["offset"]: lay["offset"] + lay["size"]]
+    ).astype(int)[: int(sc[S.SCALARS["out_len"]])][:MAXNEW]
+    np.testing.assert_array_equal(out, greedy_ref)
+    tau = sc[S.SCALARS["committed"]] / max(sc[S.SCALARS["rounds"]], 1)
+    assert tau > 4.0  # oracle drafts must be mostly accepted
+
+
+def test_mars_greedy_only_differs_by_tiebreaks(world, greedy_ref):
+    """With MARS on, any deviation must come with relaxed_accepts > 0."""
+    st = start(world, mars_on=1.0, theta=0.5)  # aggressive relaxation
+    out, sc, _ = drive(
+        world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    same = len(out) == len(greedy_ref) and np.array_equal(out, greedy_ref)
+    if not same:
+        assert sc[S.SCALARS["relaxed_accepts"]] > 0
+    # and with theta ~ 1 mars must be inert
+    st = start(world, mars_on=1.0, theta=0.9999)
+    out2, sc2, _ = drive(
+        world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    np.testing.assert_array_equal(out2, greedy_ref)
+    assert sc2[S.SCALARS["relaxed_accepts"]] == 0
+
+
+def test_finished_state_is_inert(world):
+    st = start(world)
+    out, sc, st = drive(world, st, lambda s: world["ar"](s, *world["tw"]))
+    assert sc[S.SCALARS["finished"]] > 0
+    before = np.asarray(st)
+    st2 = world["ar"](st, *world["tw"])
+    after = np.asarray(st2)
+    sc2 = after[: S.N_SCALARS]
+    assert sc2[S.SCALARS["out_len"]] == sc[S.SCALARS["out_len"]]
+    assert sc2[S.SCALARS["pos"]] == sc[S.SCALARS["pos"]]
+    assert sc2[S.SCALARS["rounds"]] == sc[S.SCALARS["rounds"]]
+    lay = S.layout()["out"]
+    np.testing.assert_array_equal(
+        before[lay["offset"]: lay["offset"] + lay["size"]],
+        after[lay["offset"]: lay["offset"] + lay["size"]],
+    )
+
+
+def test_sampling_reproducible_by_seed(world):
+    def run(seed):
+        st = start(world, temp=1.0, greedy=0.0, seed=seed)
+        out, _, _ = drive(
+            world, st, lambda s: world["sps"](s, *world["tw"], *world["sw"])
+        )
+        return out
+
+    a, b, c = run(5), run(5), run(6)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) > 0
+
+
+def test_probe_entries_recorded(world):
+    st = start(world, probe_on=1.0, mars_on=1.0, theta=0.5)
+    _, sc, st = drive(
+        world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    assert sc[S.SCALARS["probe_len"]] > 0
+    lay = S.layout()["probe"]
+    probe = np.asarray(
+        st[lay["offset"]: lay["offset"] + lay["size"]]
+    ).reshape(S.PROBE_MAX, S.PROBE_W)
+    n = int(sc[S.SCALARS["probe_len"]])
+    flags = probe[:n, 2]
+    assert np.all(np.isin(flags, [0.0, 1.0, 2.0]))
+
+
+def test_stats_tau_bounded_by_k_plus_one(world):
+    st = start(world, kdraft=5)
+    _, sc, _ = drive(
+        world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    tau = sc[S.SCALARS["committed"]] / max(sc[S.SCALARS["rounds"]], 1)
+    assert 0.0 < tau <= 6.0 + 1e-6

@@ -1,0 +1,147 @@
+"""State ABI + model shape/grad tests (L2 correctness below the rounds)."""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import state_spec as S
+
+
+def test_layout_sections_contiguous():
+    lay = S.layout()
+    off = 0
+    for name, spec in lay.items():
+        if name == "__total__":
+            continue
+        assert spec["offset"] == off, name
+        size = int(np.prod(spec["shape"]))
+        assert spec["size"] == size
+        off += size
+    assert lay["__total__"] == off == S.STATE_LEN
+
+
+def test_layout_json_stable_hash():
+    a = json.loads(S.layout_json())
+    b = json.loads(S.layout_json())
+    assert a["hash"] == b["hash"]
+    assert a["state_len"] == S.STATE_LEN
+    assert set(a["scalars"]) == set(S.SCALARS)
+
+
+def test_view_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(size=S.STATE_LEN).astype(np.float32))
+    v = S.View(flat)
+    out = v.pack()
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(flat))
+
+
+def test_view_scalar_set_get():
+    v = S.View(jnp.zeros((S.STATE_LEN,), jnp.float32))
+    v.set("pos", 42.0)
+    v.add("pos", 3.0)
+    assert float(v.get("pos")) == 45.0
+    assert int(v.geti("pos")) == 45
+    packed = v.pack()
+    assert float(packed[S.SCALARS["pos"]]) == 45.0
+
+
+def test_extract_lengths_consistent():
+    assert S.EXTRACT_LEN == S.N_SCALARS + M.OUT_MAX
+    assert S.EXTRACT_PROBE_LEN == S.N_SCALARS + S.PROBE_MAX * S.PROBE_W
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    key = jax.random.PRNGKey(0)
+    return M.init_lm(M.TARGET_CFG, key)
+
+
+def test_causal_forward_shapes(tiny_params):
+    toks = jnp.zeros((2, 10), jnp.int32)
+    logits, hidden = M.causal_lm_logits(M.TARGET_CFG, tiny_params, toks)
+    assert logits.shape == (2, 10, M.TARGET_CFG.vocab)
+    assert hidden.shape == (2, 10, M.TARGET_CFG.d_model)
+
+
+def test_causality(tiny_params):
+    """Changing a future token must not affect earlier logits."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(4, 99, (1, 12)), jnp.int32)
+    b = a.at[0, -1].set((int(a[0, -1]) + 1) % 99 + 4)
+    la, _ = M.causal_lm_logits(M.TARGET_CFG, tiny_params, a)
+    lb, _ = M.causal_lm_logits(M.TARGET_CFG, tiny_params, b)
+    np.testing.assert_allclose(
+        np.asarray(la[0, :-1]), np.asarray(lb[0, :-1]), atol=1e-5
+    )
+
+
+def test_block_apply_incremental_equals_full(tiny_params):
+    """Prefill + 1-token step == full forward (the cache correctness that
+    the whole serving path rests on)."""
+    cfg = M.TARGET_CFG
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(4, 99, 9), jnp.int32)
+
+    # full forward
+    full, _ = M.causal_lm_logits(cfg, tiny_params, toks[None])
+    want = np.asarray(full[0, -1])
+
+    # prefill 8, then step token 8
+    cache = M.empty_cache(cfg)
+    slots = jnp.arange(8, dtype=jnp.int32)
+    mask = (
+        (jnp.arange(cfg.s_max)[None, :] <= slots[:, None])
+        & (jnp.arange(cfg.s_max)[None, :] < 8)
+    ).astype(jnp.float32)
+    _, _, cache = M.block_apply(
+        cfg, tiny_params, cache, toks[:8], slots, slots, mask
+    )
+    slot = jnp.asarray([8], jnp.int32)
+    mask1 = (jnp.arange(cfg.s_max)[None, :] <= 8).astype(jnp.float32)
+    logits, _, _ = M.block_apply(
+        cfg, tiny_params, cache, toks[8:9], slot, slot, mask1
+    )
+    np.testing.assert_allclose(np.asarray(logits[0]), want, atol=2e-4)
+
+
+def test_lm_loss_decreases_one_step(tiny_params):
+    """One gradient step on a fixed batch reduces the loss (fwd+bwd sanity)."""
+    rng = np.random.default_rng(3)
+    batch = jnp.asarray(rng.integers(4, 99, (4, 33)), jnp.int32)
+    loss0, grads = jax.value_and_grad(
+        lambda p: M.lm_loss(M.TARGET_CFG, p, batch)
+    )(tiny_params)
+    stepped = jax.tree.map(lambda p, g: p - 0.05 * g, tiny_params, grads)
+    loss1 = M.lm_loss(M.TARGET_CFG, stepped, batch)
+    assert float(loss1) < float(loss0)
+
+
+def test_flatten_roundtrip(tiny_params):
+    names = M.flat_names(tiny_params)
+    vals = M.flat_values(tiny_params)
+    assert len(names) == len(vals)
+    rebuilt = M.unflatten_like(tiny_params, vals)
+    for a, b in zip(M.flat_values(rebuilt), vals):
+        assert a is b
+
+
+def test_medusa_heads_shapes():
+    key = jax.random.PRNGKey(4)
+    mp = M.init_medusa(key, M.TARGET_CFG)
+    feat = jnp.zeros((M.TARGET_CFG.d_model,), jnp.float32)
+    logits = M.medusa_head_logits(mp, feat)
+    assert logits.shape == (M.MEDUSA_HEADS, M.TARGET_CFG.vocab)
+
+
+def test_eagle_inputs_shapes():
+    key = jax.random.PRNGKey(5)
+    ep = M.init_eagle(M.EAGLE_CFG, key, M.TARGET_CFG)
+    toks = jnp.zeros((3,), jnp.int32)
+    feats = jnp.zeros((3, M.TARGET_CFG.d_model), jnp.float32)
+    x = M.eagle_inputs(ep, toks, feats)
+    assert x.shape == (3, M.EAGLE_CFG.d_model)

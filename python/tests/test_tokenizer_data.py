@@ -1,0 +1,85 @@
+"""Tokenizer + synthetic corpus tests (the python halves of the mirrored
+implementations; the rust halves have twin tests in rust/src)."""
+
+import random
+
+import pytest
+
+from compile import data, tokenizer
+
+
+def test_roundtrip_ascii():
+    s = "Q: 12+34=?\nA: 46\n"
+    assert tokenizer.decode(tokenizer.encode(s)) == s
+
+
+def test_vocab_bounds():
+    for ch in map(chr, range(0x20, 0x7F)):
+        ids = tokenizer.encode(ch)
+        assert len(ids) == 1 and 4 <= ids[0] < tokenizer.VOCAB
+
+
+def test_specials():
+    ids = tokenizer.encode("x", bos=True, eos=True)
+    assert ids[0] == tokenizer.BOS and ids[-1] == tokenizer.EOS
+    assert tokenizer.decode(ids) == "x"
+
+
+def test_newline_id():
+    assert tokenizer.encode("\n") == [tokenizer.NL_ID]
+
+
+def test_unknown_maps_to_space():
+    assert tokenizer.decode(tokenizer.encode("héllo")) == "h llo"
+
+
+def test_vocab_spec_pins_layout():
+    spec = tokenizer.vocab_spec()
+    assert spec["vocab_size"] == 128
+    assert spec["ascii_offset"] == 4
+    assert spec["nl"] == 99
+
+
+@pytest.mark.parametrize("task", data.TASKS)
+def test_generators_produce_prompt_completion(task):
+    rng = random.Random(5)
+    for _ in range(40):
+        p, c = data.gen_example(task, rng)
+        assert p and c.endswith("\n")
+        # everything must tokenize within the char vocab
+        ids = tokenizer.encode(p + c)
+        assert all(0 <= t < tokenizer.VOCAB for t in ids)
+
+
+def test_arith_answer_extraction():
+    assert data.arith_answer("4+5=9; 3*9=27\n") == "27"
+    assert data.arith_answer("95\n") == "95"
+    assert data.arith_answer("nothing") == ""
+
+
+def test_arith_answers_match_reference():
+    rng = random.Random(11)
+    for _ in range(60):
+        p, c = data.gen_arith(rng)
+        ans = data.arith_answer(c)
+        assert ans and c.strip().endswith(ans)
+
+
+def test_cipher_deterministic_and_shifted():
+    assert data.cipher_encode("abc") == "hij"
+    assert data.cipher_encode("xyz") == "efg"
+    assert data.cipher_encode("a b.") == "h i."
+
+
+def test_token_stream_packs_fixed_length():
+    stream = data.token_stream(0, 64, tokenizer)
+    for _ in range(5):
+        seq = next(stream)
+        assert len(seq) == 65
+        assert all(0 <= t < tokenizer.VOCAB for t in seq)
+
+
+def test_token_stream_deterministic():
+    a = [next(data.token_stream(3, 32, tokenizer)) for _ in range(1)]
+    b = [next(data.token_stream(3, 32, tokenizer)) for _ in range(1)]
+    assert a == b

@@ -1,0 +1,76 @@
+//! Shared micro-bench harness (criterion is not in the offline registry).
+//! `harness = false` benches call [`bench_fn`] which warms up, runs timed
+//! iterations, and prints mean / p50 / p99 like criterion's summary line.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// Time `f` adaptively: aim for ~`target_ms` of total measurement.
+pub fn bench_fn<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as u64;
+    let iters = ((target_ms as u128 * 1_000_000) / one as u128)
+        .clamp(5, 100_000) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: p(0.5),
+        p99_ns: p(0.99),
+    };
+    println!(
+        "{:40} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns)
+    );
+    r
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Artifacts present? Benches that need the model self-skip otherwise.
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("MARS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "[skip] artifacts not found at {} — run `make artifacts`",
+            dir.display()
+        );
+        None
+    }
+}

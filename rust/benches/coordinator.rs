@@ -1,0 +1,48 @@
+//! Coordinator benches: router submission overhead, metrics recording,
+//! scheduler queue ops — the L3 control plane must never be the
+//! bottleneck next to ~ms device rounds.
+
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::bench_fn;
+use mars::coordinator::metrics::{MetricsRegistry, RequestMetrics};
+use mars::util::stats::{LogHistogram, Summary};
+
+fn main() {
+    println!("== coordinator micro benches ==");
+
+    let reg = Arc::new(MetricsRegistry::new());
+    let m = RequestMetrics {
+        ok: true,
+        tokens: 64,
+        decode_seconds: 0.2,
+        prefill_seconds: 0.01,
+        queue_seconds: 0.001,
+        tau: 6.0,
+        relaxed_accepts: 3.0,
+    };
+    bench_fn("metrics_record", 200, || {
+        reg.record(m);
+    });
+    bench_fn("metrics_snapshot_json", 200, || {
+        std::hint::black_box(reg.snapshot_json().to_string_json());
+    });
+
+    bench_fn("summary_percentile/10k", 300, || {
+        let mut s = Summary::new();
+        for i in 0..10_000 {
+            s.push(i as f64);
+        }
+        std::hint::black_box(s.p99());
+    });
+
+    bench_fn("log_histogram_record/10k", 300, || {
+        let mut h = LogHistogram::default();
+        for i in 0..10_000u64 {
+            h.record(i as f64);
+        }
+        std::hint::black_box(h.quantile(0.99));
+    });
+}

@@ -1,0 +1,69 @@
+//! Runtime-layer benches (need artifacts): per-round dispatch cost for
+//! each executable, extract cost, resident-state vs hostloop — the §Perf
+//! numbers in EXPERIMENTS.md come from here.
+
+mod bench_util;
+
+use bench_util::{artifacts_dir, bench_fn};
+use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::runtime::Runtime;
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    println!("== runtime benches ==");
+    let rt = Runtime::new(&dir).expect("runtime");
+    println!("(compile at startup: {:.2}s)", rt.compile_seconds);
+
+    let prompt = mars::tokenizer::encode("Q: 12+34=?\nA: ");
+    let base = GenParams {
+        method: Method::EagleTree,
+        mars: true,
+        temperature: 1.0,
+        max_new: 48,
+        ..GenParams::default()
+    };
+
+    // per-round cost per method (resident state)
+    for (name, method) in [
+        ("ar_step", Method::Ar),
+        ("sps_round", Method::Sps),
+        ("eagle_tree_round", Method::EagleTree),
+        ("medusa_round", Method::Medusa),
+    ] {
+        let mut p = base.clone();
+        p.method = method;
+        let mut sess = rt.session(&prompt, &p).expect("session");
+        let exec = match method {
+            Method::Ar => "ar_step",
+            Method::Sps => "sps_round",
+            Method::Medusa => "medusa_round",
+            _ => "eagle_tree_round",
+        };
+        bench_fn(&format!("round/{name}"), 1500, || {
+            sess.round(exec).expect("round");
+        });
+        let _ = name;
+    }
+
+    // extract cost
+    {
+        let mut sess = rt.session(&prompt, &base).expect("session");
+        bench_fn("extract/snapshot", 800, || {
+            let s = sess.extract().expect("extract");
+            std::hint::black_box(s.out_len);
+        });
+    }
+
+    // resident vs hostloop end-to-end
+    let engine = DecodeEngine::new(Runtime::new(&dir).expect("rt"));
+    bench_fn("e2e/resident_state/48tok", 4000, || {
+        let r = engine.generate("Q: 12+34=?\nA: ", &base).expect("gen");
+        std::hint::black_box(r.tokens.len());
+    });
+    let mut engine_h = DecodeEngine::new(Runtime::new(&dir).expect("rt"));
+    engine_h.hostloop = true;
+    bench_fn("e2e/hostloop/48tok", 4000, || {
+        let r = engine_h.generate("Q: 12+34=?\nA: ", &base).expect("gen");
+        std::hint::black_box(r.tokens.len());
+    });
+}

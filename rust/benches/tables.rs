@@ -1,0 +1,23 @@
+//! End-to-end paper-table bench: a fast-n version of `mars bench all`
+//! wired into `cargo bench` so the whole Table 1 pipeline is exercised by
+//! the standard bench entrypoint. Full-size tables: `mars bench all`.
+
+mod bench_util;
+
+use bench_util::artifacts_dir;
+use mars::bench::{self, BenchCtx};
+use mars::engine::DecodeEngine;
+use mars::runtime::Runtime;
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    println!("== paper tables (reduced n; full run: mars bench all) ==");
+    let rt = Runtime::new(&dir).expect("runtime");
+    let engine = DecodeEngine::new(rt);
+    let mut ctx = BenchCtx::new(&engine, 4, 7);
+    ctx.max_new = 48;
+    ctx.out_dir = std::path::PathBuf::from("results/bench_quick");
+    bench::table1(&ctx).expect("table1");
+    bench::table6(&ctx).expect("table6");
+    bench::perf(&ctx, &dir).expect("perf");
+}

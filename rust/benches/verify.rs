@@ -1,0 +1,54 @@
+//! Micro-benchmarks of the host-side verification-adjacent hot paths:
+//! tokenizer, PLD n-gram lookup, lookahead pool, JSON codec, metrics.
+//! These are the L3 pieces that run per round outside the device.
+
+mod bench_util;
+
+use bench_util::bench_fn;
+use mars::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+use mars::util::json::Value;
+use mars::util::prng::Rng;
+
+fn main() {
+    println!("== verify/host-path micro benches ==");
+    let mut rng = Rng::new(1);
+    let history: Vec<u32> =
+        (0..2048).map(|_| rng.below(96) as u32 + 4).collect();
+
+    let mut pld = PldDrafter::default();
+    bench_fn("pld_draft/2k_history", 300, || {
+        let d = pld.draft(&history, 8);
+        std::hint::black_box(d);
+    });
+
+    let mut la = LookaheadDrafter::default();
+    la.observe(&history);
+    bench_fn("lookahead_draft/2k_history", 300, || {
+        let d = la.draft(&history, 8);
+        std::hint::black_box(d);
+    });
+    bench_fn("lookahead_observe/incremental", 300, || {
+        let mut la2 = LookaheadDrafter::default();
+        la2.observe(&history[..512]);
+        std::hint::black_box(la2.pool_len());
+    });
+
+    let text = "Q: 37+58=?\nA: 4+5=9; 3*9=27\n".repeat(8);
+    bench_fn("tokenizer_encode/224B", 200, || {
+        std::hint::black_box(mars::tokenizer::encode(&text));
+    });
+    let ids = mars::tokenizer::encode(&text);
+    bench_fn("tokenizer_decode/224tok", 200, || {
+        std::hint::black_box(mars::tokenizer::decode(&ids));
+    });
+
+    let payload = r#"{"prompt":"Q: 1+2=?\nA: ","method":"eagle_tree",
+        "mars":true,"theta":0.9,"temperature":1.0,"k":7,"max_new":64}"#;
+    bench_fn("json_parse/request", 200, || {
+        std::hint::black_box(Value::parse(payload).unwrap());
+    });
+    let v = Value::parse(payload).unwrap();
+    bench_fn("json_write/request", 200, || {
+        std::hint::black_box(v.to_string_json());
+    });
+}

@@ -1,0 +1,528 @@
+//! Benchmark harness — regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §3 experiment index).
+//!
+//! Speedups are reported two ways:
+//! * **wall** — measured wall-clock on this CPU-PJRT substrate;
+//! * **sim**  — the [`simclock`] cost model calibrated to the paper's
+//!   memory-bound H100 regime (one target forward per verify round
+//!   regardless of block width), which is the honest way to compare the
+//!   *shape* of Table 1 against an 8B-class deployment.
+//!
+//! Each `table*` / `fig*` function prints a markdown table and appends it
+//! to `results/<name>.md`.
+
+pub mod simclock;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::datasets::{dataset, Example, Task};
+use crate::engine::{DecodeEngine, GenParams, GenResult, Method};
+use crate::eval;
+use crate::util::stats::Summary;
+
+/// Shared bench context.
+pub struct BenchCtx<'a> {
+    pub engine: &'a DecodeEngine,
+    /// examples per task
+    pub n: usize,
+    pub seed: u64,
+    pub max_new: usize,
+    pub out_dir: PathBuf,
+    /// cache of AR baseline runs keyed by (task, temp-milli, seed)
+    baseline: std::cell::RefCell<BTreeMap<(Task, i64, u64), TaskEval>>,
+}
+
+impl<'a> BenchCtx<'a> {
+    pub fn new(engine: &'a DecodeEngine, n: usize, seed: u64) -> Self {
+        BenchCtx {
+            engine,
+            n,
+            seed,
+            max_new: 96,
+            out_dir: PathBuf::from("results"),
+            baseline: Default::default(),
+        }
+    }
+
+    fn params(&self, method: Method, mars: bool, temp: f32) -> GenParams {
+        GenParams {
+            method,
+            mars,
+            theta: 0.9,
+            temperature: temp,
+            k: 7,
+            beam: 2,
+            branch: 2,
+            max_new: self.max_new,
+            seed: self.seed,
+            probe: false,
+            extract_every: 1,
+        }
+    }
+
+    /// Run one method over one task's dataset.
+    pub fn run_task(
+        &self,
+        task: Task,
+        params: &GenParams,
+    ) -> Result<TaskEval> {
+        let examples = dataset(task, self.n, self.seed);
+        let mut decode_s = Summary::new();
+        let mut tok_s = Summary::new();
+        let mut tau = Summary::new();
+        let mut sim_units = Summary::new();
+        let mut quality = QualityAgg::default();
+        let mut relaxed = 0.0;
+        for (i, ex) in examples.iter().enumerate() {
+            let mut p = params.clone();
+            p.seed = self.seed * 1000 + i as u64;
+            let r = self.engine.generate(&ex.prompt, &p)?;
+            decode_s.push(r.decode_seconds);
+            if !r.tokens.is_empty() {
+                tok_s.push(r.tokens.len() as f64 / r.decode_seconds.max(1e-9));
+            }
+            if params.method.is_speculative() {
+                tau.push(r.tau());
+            }
+            sim_units.push(simclock::simulated_units(params.method, &r));
+            relaxed += r.snapshot.relaxed_accepts;
+            quality.add(ex, &r);
+        }
+        Ok(TaskEval {
+            task,
+            mean_decode_s: decode_s.mean(),
+            mean_tok_per_s: tok_s.mean(),
+            tau: tau.mean(),
+            sim_units_per_tok: sim_units.mean(),
+            quality: quality.finish(self.n),
+            relaxed_total: relaxed,
+        })
+    }
+
+    /// AR baseline for a task at a temperature (cached).
+    pub fn baseline(&self, task: Task, temp: f32) -> Result<TaskEval> {
+        let key = (task, (temp * 1000.0) as i64, self.seed);
+        if let Some(b) = self.baseline.borrow().get(&key) {
+            return Ok(b.clone());
+        }
+        let p = self.params(Method::Ar, false, temp);
+        let b = self.run_task(task, &p)?;
+        self.baseline.borrow_mut().insert(key, b.clone());
+        Ok(b)
+    }
+
+    /// Write a rendered table to results/<name>.md and stdout.
+    pub fn emit(&self, name: &str, content: &str) {
+        println!("{content}");
+        let _ = fs::create_dir_all(&self.out_dir);
+        let path = self.out_dir.join(format!("{name}.md"));
+        let _ = fs::write(&path, content);
+        eprintln!("[written {}]", path.display());
+    }
+}
+
+/// Per-(task, method) evaluation outcome.
+#[derive(Debug, Clone)]
+pub struct TaskEval {
+    pub task: Task,
+    pub mean_decode_s: f64,
+    pub mean_tok_per_s: f64,
+    pub tau: f64,
+    pub sim_units_per_tok: f64,
+    pub quality: Quality,
+    pub relaxed_total: f64,
+}
+
+impl TaskEval {
+    /// Wall-clock speedup vs a baseline eval (tokens/s ratio).
+    pub fn speedup_wall(&self, base: &TaskEval) -> f64 {
+        if base.mean_tok_per_s > 0.0 {
+            self.mean_tok_per_s / base.mean_tok_per_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Simulated speedup under the memory-bound cost model.
+    pub fn speedup_sim(&self, base: &TaskEval) -> f64 {
+        if self.sim_units_per_tok > 0.0 {
+            base.sim_units_per_tok / self.sim_units_per_tok
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Quality metrics aggregated per task (which ones are meaningful depends
+/// on the task; the tables pick the right column).
+#[derive(Debug, Clone, Default)]
+pub struct Quality {
+    pub accuracy: f64,
+    pub rouge_l: f64,
+    pub bleu: f64,
+    pub chrf: f64,
+    pub judge: f64,
+}
+
+#[derive(Default)]
+struct QualityAgg {
+    correct: f64,
+    rouge: f64,
+    judge: f64,
+    pairs: Vec<(String, String)>,
+}
+
+impl QualityAgg {
+    fn add(&mut self, ex: &Example, r: &GenResult) {
+        if eval::task_correct(ex, &r.text) {
+            self.correct += 1.0;
+        }
+        self.rouge += eval::rouge_l(&r.text, &ex.reference);
+        self.judge += eval::judge_score(ex, &r.text);
+        self.pairs
+            .push((r.text.trim().to_string(), ex.reference.trim().to_string()));
+    }
+
+    fn finish(self, n: usize) -> Quality {
+        let n = n.max(1) as f64;
+        Quality {
+            accuracy: self.correct / n,
+            rouge_l: self.rouge / n,
+            bleu: eval::corpus_bleu(&self.pairs),
+            chrf: eval::chrf::corpus_chrf(&self.pairs),
+            judge: self.judge / n,
+        }
+    }
+}
+
+// ------------------------------------------------------------ tables -------
+
+/// Method lineup of Table 1 (PLD/Lookahead/Medusa are the paper's
+/// baseline rows; MARS = EagleTree + relaxation).
+fn table1_rows() -> Vec<(&'static str, Method, bool)> {
+    vec![
+        ("SpS", Method::Sps, false),
+        ("Lookahead", Method::Lookahead, false),
+        ("PLD", Method::Pld, false),
+        ("Medusa", Method::Medusa, false),
+        ("EAGLE (chain)", Method::EagleChain, false),
+        ("EAGLE-3 (tree)", Method::EagleTree, false),
+        ("MARS", Method::EagleTree, true),
+    ]
+}
+
+/// Table 1: speedup + τ for every method × task at T = 1, K = 7, θ = 0.9.
+pub fn table1(ctx: &BenchCtx) -> Result<()> {
+    let temp = 1.0;
+    let mut out = String::new();
+    writeln!(out, "## Table 1 — overall performance (T=1, K=7, θ=0.9)\n")?;
+    writeln!(
+        out,
+        "| Method | {} | Mean |",
+        Task::all()
+            .iter()
+            .map(|t| format!("{} ↑spd/τ", t.paper_name()))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    )?;
+    writeln!(
+        out,
+        "|---|{}---|",
+        "---|".repeat(Task::all().len())
+    )?;
+    for (label, method, mars) in table1_rows() {
+        let mut cells = Vec::new();
+        let mut spd_acc = 0.0;
+        let mut tau_acc = 0.0;
+        for &task in Task::all() {
+            let base = ctx.baseline(task, temp)?;
+            let p = ctx.params(method, mars, temp);
+            let e = ctx.run_task(task, &p)?;
+            let spd = e.speedup_sim(&base);
+            let w = e.speedup_wall(&base);
+            cells.push(format!("{spd:.2}x ({w:.2}x) / {:.2}", e.tau));
+            spd_acc += spd;
+            tau_acc += e.tau;
+        }
+        let nt = Task::all().len() as f64;
+        writeln!(
+            out,
+            "| {label} | {} | {:.2}x / {:.2} |",
+            cells.join(" | "),
+            spd_acc / nt,
+            tau_acc / nt
+        )?;
+    }
+    writeln!(
+        out,
+        "\nspeedup = simclock (wall-clock in parens); τ = tokens per \
+         draft-verify cycle, ceiling K+1 = 8."
+    )?;
+    ctx.emit("table1", &out);
+    Ok(())
+}
+
+/// Table 2: temperature × draft-length ablation on arith + code.
+pub fn table2(ctx: &BenchCtx) -> Result<()> {
+    let temps = [0.2f32, 0.6, 1.0];
+    let ks = [6usize, 9, 12, 15];
+    let mut out = String::new();
+    writeln!(out, "## Table 2 — temperature & draft length K (MARS)\n")?;
+    for task in [Task::Arith, Task::Code] {
+        writeln!(out, "### {}\n", task.paper_name())?;
+        writeln!(out, "| K | {} |", temps
+            .iter()
+            .map(|t| format!("T={t} spd/τ/acc"))
+            .collect::<Vec<_>>()
+            .join(" | "))?;
+        writeln!(out, "|---|{}", "---|".repeat(temps.len()))?;
+        // baseline row
+        let mut brow = Vec::new();
+        for &t in &temps {
+            let b = ctx.baseline(task, t)?;
+            brow.push(format!("1.00x / - / {:.3}", b.quality.accuracy));
+        }
+        writeln!(out, "| base | {} |", brow.join(" | "))?;
+        for &k in &ks {
+            let mut cells = Vec::new();
+            for &t in &temps {
+                let base = ctx.baseline(task, t)?;
+                // chain method so K > 10 is exercised (tree depth caps at 10)
+                let mut p = ctx.params(Method::Sps, true, t);
+                p.k = k;
+                let e = ctx.run_task(task, &p)?;
+                cells.push(format!(
+                    "{:.2}x / {:.2} / {:.3}",
+                    e.speedup_sim(&base),
+                    e.tau,
+                    e.quality.accuracy
+                ));
+            }
+            writeln!(out, "| {k} | {} |", cells.join(" | "))?;
+        }
+        writeln!(out)?;
+    }
+    ctx.emit("table2", &out);
+    Ok(())
+}
+
+/// Table 3: ROUGE-L segment fidelity on the summarization task.
+pub fn table3(ctx: &BenchCtx) -> Result<()> {
+    let mut out = String::new();
+    writeln!(out, "## Table 3 — ROUGE-L on CNN/DM* (θ=0.9, K=7, T=1)\n")?;
+    writeln!(out, "| Method | ROUGE-L |")?;
+    writeln!(out, "|---|---|")?;
+    let base = ctx.baseline(Task::Sum, 1.0)?;
+    writeln!(out, "| Baseline (AR) | {:.4} |", base.quality.rouge_l)?;
+    for (label, method, mars) in [
+        ("EAGLE-3", Method::EagleTree, false),
+        ("MARS", Method::EagleTree, true),
+    ] {
+        let e = ctx.run_task(Task::Sum, &ctx.params(method, mars, 1.0))?;
+        writeln!(out, "| {label} | {:.4} |", e.quality.rouge_l)?;
+    }
+    ctx.emit("table3", &out);
+    Ok(())
+}
+
+/// Table 4: BLEU / chrF on the MT task across θ.
+pub fn table4(ctx: &BenchCtx) -> Result<()> {
+    let thetas = [0.84f32, 0.86, 0.88, 0.90, 0.92, 0.94, 0.96, 0.98];
+    let mut out = String::new();
+    writeln!(out, "## Table 4 — WMT19* BLEU/chrF vs θ (K=7, T=1)\n")?;
+    writeln!(out, "| Setting | BLEU | chrF | speedup(sim) |")?;
+    writeln!(out, "|---|---|---|---|")?;
+    let base = ctx.baseline(Task::Mt, 1.0)?;
+    writeln!(
+        out,
+        "| Baseline | {:.2} | {:.2} | 1.00x |",
+        base.quality.bleu, base.quality.chrf
+    )?;
+    let e3 = ctx.run_task(Task::Mt, &ctx.params(Method::EagleTree, false, 1.0))?;
+    writeln!(
+        out,
+        "| EAGLE-3 | {:.2} | {:.2} | {:.2}x |",
+        e3.quality.bleu,
+        e3.quality.chrf,
+        e3.speedup_sim(&base)
+    )?;
+    for &th in &thetas {
+        let mut p = ctx.params(Method::EagleTree, true, 1.0);
+        p.theta = th;
+        let e = ctx.run_task(Task::Mt, &p)?;
+        writeln!(
+            out,
+            "| θ={th:.2} | {:.2} | {:.2} | {:.2}x |",
+            e.quality.bleu,
+            e.quality.chrf,
+            e.speedup_sim(&base)
+        )?;
+    }
+    ctx.emit("table4", &out);
+    Ok(())
+}
+
+/// Table 5: MARS on vanilla SPD (framework-decoupled verification).
+pub fn table5(ctx: &BenchCtx) -> Result<()> {
+    let mut out = String::new();
+    writeln!(out, "## Table 5 — MARS in standard SPD (T=1, γ=6)\n")?;
+    writeln!(out, "| Task | Method | speedup(sim) | τ | quality |")?;
+    writeln!(out, "|---|---|---|---|---|")?;
+    for task in [Task::Arith, Task::Code, Task::Mt] {
+        let base = ctx.baseline(task, 1.0)?;
+        let q = |e: &TaskEval| match task {
+            Task::Mt => format!("BLEU {:.2}", e.quality.bleu),
+            _ => format!("acc {:.3}", e.quality.accuracy),
+        };
+        writeln!(
+            out,
+            "| {} | Baseline | 1.00x | - | {} |",
+            task.paper_name(),
+            q(&base)
+        )?;
+        for (label, mars) in [("SPD", false), ("SPD+MARS", true)] {
+            let mut p = ctx.params(Method::Sps, mars, 1.0);
+            p.k = 6;
+            let e = ctx.run_task(task, &p)?;
+            writeln!(
+                out,
+                "| {} | {label} | {:.2}x | {:.2} | {} |",
+                task.paper_name(),
+                e.speedup_sim(&base),
+                e.tau,
+                q(&e)
+            )?;
+        }
+    }
+    ctx.emit("table5", &out);
+    Ok(())
+}
+
+/// Table 6: greedy decoding (T=0, K=7).
+pub fn table6(ctx: &BenchCtx) -> Result<()> {
+    let mut out = String::new();
+    writeln!(out, "## Table 6 — greedy decoding (T=0, K=7)\n")?;
+    writeln!(out, "| Task | Method | speedup(sim) | τ | acc |")?;
+    writeln!(out, "|---|---|---|---|---|")?;
+    for task in [Task::Arith, Task::Code] {
+        let base = ctx.baseline(task, 0.0)?;
+        writeln!(
+            out,
+            "| {} | Baseline | 1.00x | - | {:.3} |",
+            task.paper_name(),
+            base.quality.accuracy
+        )?;
+        for (label, mars) in [("EAGLE-3", false), ("MARS", true)] {
+            let e = ctx.run_task(task, &ctx.params(Method::EagleTree, mars, 0.0))?;
+            writeln!(
+                out,
+                "| {} | {label} | {:.2}x | {:.2} | {:.3} |",
+                task.paper_name(),
+                e.speedup_sim(&base),
+                e.tau,
+                e.quality.accuracy
+            )?;
+        }
+    }
+    ctx.emit("table6", &out);
+    Ok(())
+}
+
+/// Table 7: judge scores on the chat task (MT-Bench analog).
+pub fn table7(ctx: &BenchCtx) -> Result<()> {
+    let mut out = String::new();
+    writeln!(out, "## Table 7 — chat quality, heuristic judge (T=1)\n")?;
+    writeln!(out, "| Method | judge (0-10) | acc(keywords) |")?;
+    writeln!(out, "|---|---|---|")?;
+    let base = ctx.baseline(Task::Chat, 1.0)?;
+    writeln!(
+        out,
+        "| Baseline | {:.2} | {:.3} |",
+        base.quality.judge, base.quality.accuracy
+    )?;
+    for (label, mars) in [("EAGLE-3", false), ("MARS", true)] {
+        let e = ctx.run_task(Task::Chat, &ctx.params(Method::EagleTree, mars, 1.0))?;
+        writeln!(
+            out,
+            "| {label} | {:.2} | {:.3} |",
+            e.quality.judge, e.quality.accuracy
+        )?;
+    }
+    ctx.emit("table7", &out);
+    Ok(())
+}
+
+/// Figure 3: θ sweep — accuracy + speedup, K ∈ {7, 10}.
+pub fn fig3(ctx: &BenchCtx) -> Result<()> {
+    let thetas = [0.84f32, 0.86, 0.88, 0.90, 0.92, 0.94, 0.96];
+    let mut out = String::new();
+    writeln!(out, "## Figure 3 — θ sweep (accuracy & speedup, T=1)\n")?;
+    for task in [Task::Code, Task::Arith] {
+        let base = ctx.baseline(task, 1.0)?;
+        for k in [7usize, 10] {
+            writeln!(out, "### {} K={k}\n", task.paper_name())?;
+            writeln!(out, "| θ | speedup(sim) | accuracy |")?;
+            writeln!(out, "|---|---|---|")?;
+            for &th in &thetas {
+                let mut p = ctx.params(Method::EagleTree, true, 1.0);
+                p.theta = th;
+                p.k = k;
+                let e = ctx.run_task(task, &p)?;
+                writeln!(
+                    out,
+                    "| {th:.2} | {:.2}x | {:.3} |",
+                    e.speedup_sim(&base),
+                    e.quality.accuracy
+                )?;
+            }
+            writeln!(out)?;
+        }
+    }
+    ctx.emit("fig3", &out);
+    Ok(())
+}
+
+/// §Perf runtime ablation: resident-state vs hostloop, extract frequency.
+pub fn perf(ctx: &BenchCtx, artifact_dir: &std::path::Path) -> Result<()> {
+    use crate::runtime::Runtime;
+    let mut out = String::new();
+    writeln!(out, "## §Perf — runtime ablation (eagle_tree, MARS, T=1)\n")?;
+    writeln!(out, "| runtime | tok/s | per-round device calls |")?;
+    writeln!(out, "|---|---|---|")?;
+    let examples = dataset(Task::Arith, ctx.n.min(8), ctx.seed);
+    for (label, hostloop, every) in [
+        ("hostloop (naive)", true, 1usize),
+        ("resident state", false, 1),
+        ("resident + extract/4", false, 4),
+    ] {
+        let rt = Runtime::new(artifact_dir)?;
+        let mut engine = DecodeEngine::new(rt);
+        engine.hostloop = hostloop;
+        let mut toks = 0usize;
+        let mut secs = 0.0;
+        let mut calls = 0u64;
+        let mut rounds = 0u64;
+        for ex in &examples {
+            let mut p = ctx.params(Method::EagleTree, true, 1.0);
+            p.extract_every = every;
+            let r = engine.generate(&ex.prompt, &p)?;
+            toks += r.tokens.len();
+            secs += r.decode_seconds;
+            calls += r.device_calls;
+            rounds += r.snapshot.rounds as u64;
+        }
+        writeln!(
+            out,
+            "| {label} | {:.1} | {:.2} |",
+            toks as f64 / secs.max(1e-9),
+            calls as f64 / rounds.max(1) as f64
+        )?;
+    }
+    ctx.emit("perf", &out);
+    Ok(())
+}

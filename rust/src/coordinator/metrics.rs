@@ -1,0 +1,155 @@
+//! Serving metrics registry: latency histograms, throughput counters and
+//! speculative-decoding acceptance statistics, shared across replicas via
+//! a mutex (recording is a handful of float ops; not hot enough to need
+//! sharding on this substrate).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::stats::{LogHistogram, Summary};
+
+#[derive(Debug, Default)]
+struct Inner {
+    started: Option<Instant>,
+    requests_ok: u64,
+    requests_err: u64,
+    tokens_out: u64,
+    decode_ms: Summary,
+    prefill_ms: Summary,
+    queue_ms: Summary,
+    ttft_ms: Summary,
+    per_token_us: LogHistogram,
+    tau: Summary,
+    relaxed: Summary,
+}
+
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+/// One request's measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestMetrics {
+    pub ok: bool,
+    pub tokens: usize,
+    pub decode_seconds: f64,
+    pub prefill_seconds: f64,
+    pub queue_seconds: f64,
+    pub tau: f64,
+    pub relaxed_accepts: f64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, m: RequestMetrics) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+        if !m.ok {
+            g.requests_err += 1;
+            return;
+        }
+        g.requests_ok += 1;
+        g.tokens_out += m.tokens as u64;
+        g.decode_ms.push(m.decode_seconds * 1e3);
+        g.prefill_ms.push(m.prefill_seconds * 1e3);
+        g.queue_ms.push(m.queue_seconds * 1e3);
+        g.ttft_ms
+            .push((m.queue_seconds + m.prefill_seconds) * 1e3);
+        if m.tokens > 0 {
+            g.per_token_us
+                .record(m.decode_seconds * 1e6 / m.tokens as f64);
+        }
+        if m.tau > 0.0 {
+            g.tau.push(m.tau);
+        }
+        g.relaxed.push(m.relaxed_accepts);
+    }
+
+    /// Aggregate snapshot as JSON (served by the `metrics` RPC and printed
+    /// by `mars serve` on shutdown).
+    pub fn snapshot_json(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        let mut o = Value::obj();
+        o.set("requests_ok", Value::Num(g.requests_ok as f64));
+        o.set("requests_err", Value::Num(g.requests_err as f64));
+        o.set("tokens_out", Value::Num(g.tokens_out as f64));
+        o.set(
+            "throughput_tok_s",
+            Value::Num(g.tokens_out as f64 / elapsed),
+        );
+        o.set(
+            "throughput_req_s",
+            Value::Num(g.requests_ok as f64 / elapsed),
+        );
+        o.set("decode_ms_p50", Value::Num(g.decode_ms.p50()));
+        o.set("decode_ms_p99", Value::Num(g.decode_ms.p99()));
+        o.set("decode_ms_mean", Value::Num(g.decode_ms.mean()));
+        o.set("prefill_ms_mean", Value::Num(g.prefill_ms.mean()));
+        o.set("queue_ms_p50", Value::Num(g.queue_ms.p50()));
+        o.set("queue_ms_p99", Value::Num(g.queue_ms.p99()));
+        o.set("ttft_ms_p50", Value::Num(g.ttft_ms.p50()));
+        o.set(
+            "per_token_us_p50",
+            Value::Num(g.per_token_us.quantile(0.5)),
+        );
+        o.set("tau_mean", Value::Num(g.tau.mean()));
+        o.set("relaxed_accepts_mean", Value::Num(g.relaxed.mean()));
+        o
+    }
+
+    pub fn requests_done(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.requests_ok + g.requests_err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(tokens: usize, decode: f64) -> RequestMetrics {
+        RequestMetrics {
+            ok: true,
+            tokens,
+            decode_seconds: decode,
+            prefill_seconds: 0.01,
+            queue_seconds: 0.002,
+            tau: 5.0,
+            relaxed_accepts: 2.0,
+        }
+    }
+
+    #[test]
+    fn records_and_aggregates() {
+        let r = MetricsRegistry::new();
+        r.record(m(10, 0.1));
+        r.record(m(30, 0.3));
+        let v = r.snapshot_json();
+        assert_eq!(v.get("requests_ok").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("tokens_out").unwrap().as_usize(), Some(40));
+        assert_eq!(v.get("tau_mean").unwrap().as_f64(), Some(5.0));
+        assert!(v.get("decode_ms_p99").unwrap().as_f64().unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn errors_counted_separately() {
+        let r = MetricsRegistry::new();
+        r.record(RequestMetrics { ok: false, ..m(0, 0.0) });
+        let v = r.snapshot_json();
+        assert_eq!(v.get("requests_err").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("requests_ok").unwrap().as_usize(), Some(0));
+        assert_eq!(r.requests_done(), 1);
+    }
+}

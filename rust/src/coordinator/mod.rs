@@ -1,0 +1,23 @@
+//! Coordinator — the serving layer (vLLM-router-shaped, DESIGN.md §5).
+//!
+//! Topology: [`Router`] → N engine replicas. Each replica is a dedicated
+//! OS thread that owns its own PJRT client, compiled executables and
+//! uploaded weights (PJRT handles are not `Send`; thread-ownership is the
+//! std-only equivalent of vLLM's per-GPU engine processes). A scheduler
+//! thread admits queued requests into per-replica slots (continuous
+//! batching across sequences), decode workers run rounds until
+//! EOS/length/cancel, and results stream back over channels or the
+//! line-JSON TCP protocol in [`server`].
+
+pub mod metrics;
+pub mod replica;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::MetricsRegistry;
+pub use replica::EngineReplica;
+pub use request::{Request, RequestId, Response};
+pub use router::{RouterPolicy, Router};
+pub use scheduler::Scheduler;

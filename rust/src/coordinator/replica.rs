@@ -1,0 +1,221 @@
+//! Engine replica: a dedicated OS thread owning one PJRT client.
+//!
+//! PJRT handles are not `Send`, so the `Runtime` is constructed *inside*
+//! the thread and never crosses it. The replica runs a continuous-batching
+//! loop: up to `slots` sequences are active at once and their rounds are
+//! interleaved round-robin over the single device — the CPU-PJRT analog of
+//! vLLM's iteration-level scheduling (cross-sequence GEMM batching is not
+//! expressible through the single-tuple-output xla crate; DESIGN.md §9.5).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{MetricsRegistry, RequestMetrics};
+use crate::coordinator::request::{Response, WorkItem};
+use crate::engine::SeqRunner;
+use crate::runtime::Runtime;
+
+pub struct EngineReplica {
+    pub id: usize,
+    handle: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    pub active: Arc<AtomicUsize>,
+    pub queued_hint: Arc<AtomicUsize>,
+}
+
+pub struct ReplicaConfig {
+    pub artifact_dir: PathBuf,
+    /// concurrent sequences interleaved on this replica
+    pub slots: usize,
+    pub hostloop: bool,
+}
+
+impl EngineReplica {
+    /// Spawn the replica thread. `ready` is signalled (with any startup
+    /// error) once the runtime has compiled its executables.
+    pub fn spawn(
+        id: usize,
+        cfg: ReplicaConfig,
+        work: Receiver<WorkItem>,
+        metrics: Arc<MetricsRegistry>,
+        ready: std::sync::mpsc::Sender<Result<(), String>>,
+    ) -> EngineReplica {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+        let queued_hint = Arc::new(AtomicUsize::new(0));
+        let sd = shutdown.clone();
+        let act = active.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("mars-replica-{id}"))
+            .spawn(move || {
+                let rt = match Runtime::new(&cfg.artifact_dir) {
+                    Ok(rt) => {
+                        let _ = ready.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                replica_loop(&rt, &cfg, &work, &metrics, &sd, &act);
+            })
+            .expect("spawn replica thread");
+        EngineReplica {
+            id,
+            handle: Some(handle),
+            shutdown,
+            active,
+            queued_hint,
+        }
+    }
+
+    /// Current load (active sequences) — used by least-loaded routing.
+    pub fn load(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+            + self.queued_hint.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EngineReplica {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+struct Active<'rt> {
+    runner: SeqRunner<'rt>,
+    item: WorkItem,
+    queued_at: Instant,
+    admitted_at: Instant,
+}
+
+fn replica_loop(
+    rt: &Runtime,
+    cfg: &ReplicaConfig,
+    work: &Receiver<WorkItem>,
+    metrics: &MetricsRegistry,
+    shutdown: &AtomicBool,
+    active_gauge: &AtomicUsize,
+) {
+    let mut active: Vec<Active<'_>> = Vec::new();
+    let slots = cfg.slots.max(1);
+    loop {
+        if shutdown.load(Ordering::Relaxed) && active.is_empty() {
+            return;
+        }
+        // ---- admission: fill free slots -------------------------------
+        while active.len() < slots {
+            let item = if active.is_empty() {
+                match work.recv_timeout(Duration::from_millis(50)) {
+                    Ok(i) => i,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        if active.is_empty() {
+                            return;
+                        }
+                        break;
+                    }
+                }
+            } else {
+                match work.try_recv() {
+                    Ok(i) => i,
+                    Err(_) => break,
+                }
+            };
+            let queued_at = Instant::now();
+            let toks = crate::tokenizer::encode(&item.request.prompt);
+            match SeqRunner::new(rt, &toks, &item.request.params, cfg.hostloop)
+            {
+                Ok(runner) => {
+                    active.push(Active {
+                        runner,
+                        item,
+                        queued_at,
+                        admitted_at: Instant::now(),
+                    });
+                    active_gauge.store(active.len(), Ordering::Relaxed);
+                }
+                Err(e) => {
+                    let resp = Response::from_error(
+                        item.request.id,
+                        &format!("prefill failed: {e:#}"),
+                    );
+                    metrics.record(RequestMetrics {
+                        ok: false,
+                        tokens: 0,
+                        decode_seconds: 0.0,
+                        prefill_seconds: 0.0,
+                        queue_seconds: 0.0,
+                        tau: 0.0,
+                        relaxed_accepts: 0.0,
+                    });
+                    let _ = item.reply.send(resp);
+                }
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+        // ---- one interleaved round per active sequence ----------------
+        let mut i = 0;
+        while i < active.len() {
+            let done = match active[i].runner.step() {
+                Ok(Some(result)) => {
+                    let a = &active[i];
+                    let resp =
+                        Response::from_result(a.item.request.id, &result);
+                    metrics.record(RequestMetrics {
+                        ok: true,
+                        tokens: result.tokens.len(),
+                        decode_seconds: result.decode_seconds,
+                        prefill_seconds: result.prefill_seconds,
+                        queue_seconds: a
+                            .admitted_at
+                            .duration_since(a.queued_at)
+                            .as_secs_f64(),
+                        tau: result.tau(),
+                        relaxed_accepts: result.snapshot.relaxed_accepts,
+                    });
+                    let _ = a.item.reply.send(resp);
+                    true
+                }
+                Ok(None) => false,
+                Err(e) => {
+                    let a = &active[i];
+                    let _ = a.item.reply.send(Response::from_error(
+                        a.item.request.id,
+                        &format!("decode failed: {e:#}"),
+                    ));
+                    metrics.record(RequestMetrics {
+                        ok: false,
+                        tokens: 0,
+                        decode_seconds: 0.0,
+                        prefill_seconds: 0.0,
+                        queue_seconds: 0.0,
+                        tau: 0.0,
+                        relaxed_accepts: 0.0,
+                    });
+                    true
+                }
+            };
+            if done {
+                active.swap_remove(i);
+                active_gauge.store(active.len(), Ordering::Relaxed);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Request/response types + the line-JSON wire encoding.
+
+use std::sync::mpsc::Sender;
+
+use crate::engine::{GenParams, GenResult, Method};
+use crate::util::json::Value;
+
+pub type RequestId = u64;
+
+/// A generation request as admitted by the scheduler.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: String,
+    pub params: GenParams,
+}
+
+/// Terminal response for a request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub text: String,
+    pub tokens: usize,
+    pub tau: f64,
+    pub decode_seconds: f64,
+    pub prefill_seconds: f64,
+    pub relaxed_accepts: f64,
+}
+
+impl Response {
+    pub fn from_result(id: RequestId, r: &GenResult) -> Response {
+        Response {
+            id,
+            ok: true,
+            error: None,
+            text: r.text.clone(),
+            tokens: r.tokens.len(),
+            tau: r.tau(),
+            decode_seconds: r.decode_seconds,
+            prefill_seconds: r.prefill_seconds,
+            relaxed_accepts: r.snapshot.relaxed_accepts,
+        }
+    }
+
+    pub fn from_error(id: RequestId, msg: &str) -> Response {
+        Response {
+            id,
+            ok: false,
+            error: Some(msg.to_string()),
+            text: String::new(),
+            tokens: 0,
+            tau: 0.0,
+            decode_seconds: 0.0,
+            prefill_seconds: 0.0,
+            relaxed_accepts: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("id", Value::Num(self.id as f64));
+        o.set("ok", Value::Bool(self.ok));
+        if let Some(e) = &self.error {
+            o.set("error", Value::Str(e.clone()));
+        }
+        o.set("text", Value::Str(self.text.clone()));
+        o.set("tokens", Value::Num(self.tokens as f64));
+        o.set("tau", Value::Num(self.tau));
+        o.set("decode_seconds", Value::Num(self.decode_seconds));
+        o.set("prefill_seconds", Value::Num(self.prefill_seconds));
+        o.set("relaxed_accepts", Value::Num(self.relaxed_accepts));
+        o
+    }
+}
+
+/// Wire format: one JSON object per line.
+/// `{"prompt": "...", "method": "eagle_tree", "mars": true, "theta": 0.9,
+///   "temperature": 1.0, "k": 7, "max_new": 128, "seed": 1}`
+pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
+    let prompt = v
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or("missing 'prompt'")?
+        .to_string();
+    let mut params = GenParams::default();
+    if let Some(m) = v.get("method").and_then(|m| m.as_str()) {
+        params.method =
+            Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
+    }
+    if let Some(b) = v.get("mars").and_then(|b| b.as_bool()) {
+        params.mars = b;
+    }
+    let fget = |k: &str| v.get(k).and_then(|x| x.as_f64());
+    if let Some(x) = fget("theta") {
+        params.theta = x as f32;
+    }
+    if let Some(x) = fget("temperature") {
+        params.temperature = x as f32;
+    }
+    if let Some(x) = fget("k") {
+        params.k = x as usize;
+    }
+    if let Some(x) = fget("beam") {
+        params.beam = x as usize;
+    }
+    if let Some(x) = fget("branch") {
+        params.branch = x as usize;
+    }
+    if let Some(x) = fget("max_new") {
+        params.max_new = x as usize;
+    }
+    if let Some(x) = fget("seed") {
+        params.seed = x as u64;
+    }
+    Ok(Request { id, prompt, params })
+}
+
+/// Work item flowing to a replica: the request plus its reply channel.
+pub struct WorkItem {
+    pub request: Request,
+    pub reply: Sender<Response>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal() {
+        let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
+        let r = parse_request_json(1, &v).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.params.method, Method::EagleTree);
+    }
+
+    #[test]
+    fn parses_full() {
+        let v = Value::parse(
+            r#"{"prompt": "x", "method": "sps", "mars": false,
+                "theta": 0.92, "temperature": 0.5, "k": 9, "max_new": 32,
+                "seed": 7}"#,
+        )
+        .unwrap();
+        let r = parse_request_json(2, &v).unwrap();
+        assert_eq!(r.params.method, Method::Sps);
+        assert!(!r.params.mars);
+        assert!((r.params.theta - 0.92).abs() < 1e-6);
+        assert_eq!(r.params.k, 9);
+        assert_eq!(r.params.seed, 7);
+    }
+
+    #[test]
+    fn rejects_bad_method() {
+        let v = Value::parse(r#"{"prompt": "x", "method": "warp"}"#).unwrap();
+        assert!(parse_request_json(3, &v).is_err());
+    }
+
+    #[test]
+    fn response_json_roundtrips() {
+        let resp = Response {
+            id: 9,
+            ok: true,
+            error: None,
+            text: "out".into(),
+            tokens: 3,
+            tau: 5.5,
+            decode_seconds: 0.25,
+            prefill_seconds: 0.05,
+            relaxed_accepts: 4.0,
+        };
+        let v = resp.to_json();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
+        assert_eq!(v.get("tau").unwrap().as_f64(), Some(5.5));
+    }
+}

@@ -1,0 +1,152 @@
+//! Router: fronts N engine replicas and assigns requests by policy.
+//! The vLLM-router analog (DESIGN.md §5): round-robin or least-loaded.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::MetricsRegistry;
+use crate::coordinator::replica::{EngineReplica, ReplicaConfig};
+use crate::coordinator::request::{Request, Response, WorkItem};
+use crate::engine::GenParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "rr" | "round_robin" | "round-robin" => Some(RouterPolicy::RoundRobin),
+            "ll" | "least_loaded" | "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
+pub struct Router {
+    replicas: Vec<EngineReplica>,
+    senders: Vec<Sender<WorkItem>>,
+    policy: RouterPolicy,
+    rr_next: AtomicUsize,
+    next_id: AtomicU64,
+    pub metrics: Arc<MetricsRegistry>,
+}
+
+impl Router {
+    /// Spin up `n_replicas` engine threads and wait until every runtime
+    /// has compiled its executables.
+    pub fn start(
+        artifact_dir: &Path,
+        n_replicas: usize,
+        slots: usize,
+        hostloop: bool,
+        policy: RouterPolicy,
+    ) -> Result<Router> {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let mut replicas = Vec::new();
+        let mut senders = Vec::new();
+        let mut readys: Vec<Receiver<Result<(), String>>> = Vec::new();
+        for id in 0..n_replicas.max(1) {
+            let (tx, rx) = channel::<WorkItem>();
+            let (ready_tx, ready_rx) = channel();
+            let rep = EngineReplica::spawn(
+                id,
+                ReplicaConfig {
+                    artifact_dir: artifact_dir.to_path_buf(),
+                    slots,
+                    hostloop,
+                },
+                rx,
+                metrics.clone(),
+                ready_tx,
+            );
+            replicas.push(rep);
+            senders.push(tx);
+            readys.push(ready_rx);
+        }
+        for (i, r) in readys.iter().enumerate() {
+            match r.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => bail!("replica {i} failed to start: {e}"),
+                Err(_) => bail!("replica {i} died during startup"),
+            }
+        }
+        Ok(Router {
+            replicas,
+            senders,
+            policy,
+            rr_next: AtomicUsize::new(0),
+            next_id: AtomicU64::new(1),
+            metrics,
+        })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn pick(&self) -> usize {
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed)
+                    % self.replicas.len()
+            }
+            RouterPolicy::LeastLoaded => self
+                .replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.load())
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(
+        &self,
+        prompt: &str,
+        params: GenParams,
+    ) -> Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let idx = self.pick();
+        self.replicas[idx]
+            .queued_hint
+            .fetch_add(1, Ordering::Relaxed);
+        let item = WorkItem {
+            request: Request { id, prompt: prompt.to_string(), params },
+            reply: tx,
+        };
+        // hint is decremented on admission approximation: the replica only
+        // tracks active slots, so decrement when the send succeeds — the
+        // queue-depth signal is best-effort by design.
+        if self.senders[idx].send(item).is_err() {
+            // replica gone: nothing else to do; receiver will hang up
+        }
+        self.replicas[idx]
+            .queued_hint
+            .fetch_sub(1, Ordering::Relaxed);
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn generate(&self, prompt: &str, params: GenParams) -> Response {
+        match self.submit(prompt, params).recv() {
+            Ok(r) => r,
+            Err(_) => Response::from_error(0, "replica dropped request"),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.senders.clear(); // disconnect queues
+        for r in &mut self.replicas {
+            r.stop();
+        }
+    }
+}

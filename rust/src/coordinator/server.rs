@@ -1,0 +1,153 @@
+//! Line-JSON TCP server: one JSON request object per line in, one JSON
+//! response per line out. std-only (tokio is not in the offline registry;
+//! a thread-per-connection accept loop over `std::net` is the honest
+//! equivalent for this CPU-bound backend).
+//!
+//! Protocol:
+//! ```text
+//! -> {"prompt": "...", "method": "eagle_tree", "mars": true, ...}
+//! <- {"id": 1, "ok": true, "text": "...", "tau": 6.1, ...}
+//! -> {"cmd": "metrics"}
+//! <- {"requests_ok": 10, "throughput_tok_s": ...}
+//! -> {"cmd": "shutdown"}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::request::parse_request_json;
+use crate::coordinator::router::Router;
+use crate::util::json::Value;
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Has a shutdown command been received?
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the accept loop so it notices the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve `router` on `bind` (e.g. "127.0.0.1:7071"). Returns immediately;
+/// connections are handled on their own threads. The router reference must
+/// outlive the server; use an `Arc<Router>`.
+pub fn serve(router: Arc<Router>, bind: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(bind)
+        .with_context(|| format!("binding {bind}"))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("mars-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let router = router.clone();
+                let stop3 = stop2.clone();
+                let _ = std::thread::Builder::new()
+                    .name("mars-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &router, &stop3);
+                    });
+            }
+        })?;
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Value::parse(&line) {
+            Err(e) => err_json(0, &format!("bad json: {e}")),
+            Ok(v) => {
+                if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) {
+                    match cmd {
+                        "metrics" => router.metrics.snapshot_json(),
+                        "ping" => {
+                            let mut o = Value::obj();
+                            o.set("pong", Value::Bool(true));
+                            o
+                        }
+                        "shutdown" => {
+                            stop.store(true, Ordering::Relaxed);
+                            let mut o = Value::obj();
+                            o.set("ok", Value::Bool(true));
+                            writeln!(writer, "{}", o.to_string_json())?;
+                            break;
+                        }
+                        other => err_json(0, &format!("unknown cmd '{other}'")),
+                    }
+                } else {
+                    match parse_request_json(0, &v) {
+                        Err(e) => err_json(0, &e),
+                        Ok(req) => {
+                            let resp =
+                                router.generate(&req.prompt, req.params);
+                            resp.to_json()
+                        }
+                    }
+                }
+            }
+        };
+        writeln!(writer, "{}", reply.to_string_json())?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn err_json(id: u64, msg: &str) -> Value {
+    let mut o = Value::obj();
+    o.set("id", Value::Num(id as f64));
+    o.set("ok", Value::Bool(false));
+    o.set("error", Value::Str(msg.to_string()));
+    o
+}
+
+/// Minimal client for tests/examples: send one request line, read reply.
+pub fn client_roundtrip(addr: &str, line: &str) -> Result<Value> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    Value::parse(&reply).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+}

@@ -1,0 +1,452 @@
+//! Synthetic evaluation datasets — the rust mirror of
+//! `python/compile/data.py` (same templates; seeds need not bit-match the
+//! python corpus, only the distribution).
+//!
+//! Task families map to the paper's benchmarks by *metric family*
+//! (DESIGN.md §1.3):
+//!
+//! | task  | paper benchmark | metric                    |
+//! |-------|-----------------|---------------------------|
+//! | arith | GSM8K           | exact-match final answer  |
+//! | code  | HumanEval/MBPP  | avg@k output match        |
+//! | chat  | MT-Bench/Alpaca | judge score               |
+//! | sum   | CNN/DailyMail   | ROUGE-L vs lead-1         |
+//! | mt    | WMT19 Zh-En     | BLEU / chrF               |
+
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Task {
+    Arith,
+    Code,
+    Chat,
+    Sum,
+    Mt,
+}
+
+impl Task {
+    pub fn all() -> &'static [Task] {
+        &[Task::Arith, Task::Code, Task::Chat, Task::Sum, Task::Mt]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Arith => "arith",
+            Task::Code => "code",
+            Task::Chat => "chat",
+            Task::Sum => "sum",
+            Task::Mt => "mt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Task> {
+        Some(match s {
+            "arith" | "gsm8k" => Task::Arith,
+            "code" | "humaneval" => Task::Code,
+            "chat" | "mtbench" | "alpaca" => Task::Chat,
+            "sum" | "cnndm" => Task::Sum,
+            "mt" | "wmt" | "wmt19" => Task::Mt,
+            _ => return None,
+        })
+    }
+
+    /// Paper benchmark this task substitutes for (table headers).
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Task::Arith => "GSM8K*",
+            Task::Code => "HumanEval*",
+            Task::Chat => "Alpaca*",
+            Task::Sum => "CNN/DM*",
+            Task::Mt => "WMT19*",
+        }
+    }
+}
+
+/// One evaluation example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub task: Task,
+    pub prompt: String,
+    /// gold completion (reference text for quality metrics)
+    pub reference: String,
+    /// gold final answer for exact-match tasks (arith/code)
+    pub answer: Option<String>,
+    /// keywords the chat judge checks
+    pub keywords: Vec<String>,
+}
+
+pub fn generate(task: Task, rng: &mut Rng) -> Example {
+    match task {
+        Task::Arith => gen_arith(rng),
+        Task::Code => gen_code(rng),
+        Task::Chat => gen_chat(rng),
+        Task::Sum => gen_sum(rng),
+        Task::Mt => gen_mt(rng),
+    }
+}
+
+pub fn dataset(task: Task, n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ 0xD00D ^ (task as u64) << 8);
+    (0..n).map(|_| generate(task, &mut rng)).collect()
+}
+
+// ------------------------------------------------------------- arith -------
+
+fn gen_arith(rng: &mut Rng) -> Example {
+    let kind = rng.usize_below(3);
+    let (prompt, completion) = match kind {
+        0 => {
+            let (mut a, mut b) =
+                (rng.range(2, 99), rng.range(2, 99));
+            let op = *rng.pick(&['+', '-', '*']);
+            if op == '-' && b > a {
+                std::mem::swap(&mut a, &mut b);
+            }
+            let (a, b) = if op == '*' {
+                (rng.range(2, 12), rng.range(2, 12))
+            } else {
+                (a, b)
+            };
+            let val = match op {
+                '+' => a + b,
+                '-' => a - b,
+                _ => a * b,
+            };
+            (format!("Q: {a}{op}{b}=?\nA: "), format!("{val}\n"))
+        }
+        1 => {
+            let (a, b, c) =
+                (rng.range(2, 9), rng.range(2, 9), rng.range(2, 9));
+            let inner = b + c;
+            let val = a * inner;
+            (
+                format!("Q: {a}*({b}+{c})=?\nA: "),
+                format!("{b}+{c}={inner}; {a}*{inner}={val}\n"),
+            )
+        }
+        _ => {
+            let xs: Vec<i64> =
+                (0..3).map(|_| rng.range(1, 50)).collect();
+            let s1 = xs[0] + xs[1];
+            let s2 = s1 + xs[2];
+            (
+                format!("Q: {}+{}+{}=?\nA: ", xs[0], xs[1], xs[2]),
+                format!("{}+{}={s1}; {s1}+{}={s2}\n", xs[0], xs[1], xs[2]),
+            )
+        }
+    };
+    let answer = arith_answer(&completion);
+    Example {
+        task: Task::Arith,
+        prompt,
+        reference: completion,
+        answer: Some(answer),
+        keywords: vec![],
+    }
+}
+
+/// Final answer = last integer in the completion (mirror of data.py).
+pub fn arith_answer(completion: &str) -> String {
+    let cleaned = completion.trim().replace(';', " ");
+    for tok in cleaned.split_whitespace().rev() {
+        let t = tok.rsplit('=').next().unwrap_or(tok);
+        let t2 = t.trim_start_matches('-');
+        if !t2.is_empty() && t2.chars().all(|c| c.is_ascii_digit()) {
+            return t.to_string();
+        }
+    }
+    String::new()
+}
+
+// -------------------------------------------------------------- code -------
+
+const WORDS: &[&str] = &[
+    "ab", "cat", "dog", "sun", "map", "key", "box", "red", "ice", "owl",
+    "pin", "fox", "jam", "log", "net", "orb", "paw", "rug", "sky", "toe",
+];
+
+fn zip2(a: &str, b: &str) -> String {
+    a.chars()
+        .zip(b.chars())
+        .flat_map(|(x, y)| [x, y])
+        .collect()
+}
+
+fn gen_code(rng: &mut Rng) -> Example {
+    let fns = ["rep", "rev", "up", "cat", "zip2"];
+    let f = *rng.pick(&fns);
+    let w = rng.pick(WORDS).to_string();
+    let (call, out) = match f {
+        "rep" => {
+            let n = rng.range(2, 5) as usize;
+            (format!("rep('{w}',{n})"), w.repeat(n))
+        }
+        "rev" => (format!("rev('{w}')"), w.chars().rev().collect()),
+        "up" => (format!("up('{w}')"), w.to_uppercase()),
+        "cat" => {
+            let w2 = rng.pick(WORDS).to_string();
+            (format!("cat('{w}','{w2}')"), format!("{w}{w2}"))
+        }
+        _ => {
+            let w2 = rng.pick(WORDS).to_string();
+            let m = w.len().min(w2.len());
+            let (a, b) = (&w[..m], &w2[..m]);
+            (format!("zip2('{a}','{b}')"), zip2(a, b))
+        }
+    };
+    Example {
+        task: Task::Code,
+        prompt: format!(">>> {call}\n"),
+        reference: format!("'{out}'\n"),
+        answer: Some(format!("'{out}'")),
+        keywords: vec![],
+    }
+}
+
+// -------------------------------------------------------------- chat -------
+
+const KB: &[(&str, &str)] = &[
+    ("Zorland", "Mirefal"), ("Quovia", "Bruntal"), ("Aldora", "Seaphor"),
+    ("Vintria", "Caldus"), ("Norvand", "Tessily"), ("Ostrevia", "Palmyre"),
+    ("Kelluna", "Dorvane"), ("Merrowin", "Ashford"), ("Tallgard", "Rivermoor"),
+    ("Ulmstead", "Graypost"), ("Firelund", "Coldbay"), ("Westmarch", "Highfen"),
+];
+const COLORS: &[(&str, &str)] = &[
+    ("bryleaf", "green"), ("sunpetal", "yellow"), ("mooncap", "white"),
+    ("ashroot", "gray"), ("embervine", "red"), ("frostfern", "blue"),
+];
+const OPINIONS: &[(&str, &str)] = &[
+    ("the sea", "The sea is wide and calm at dawn."),
+    ("the forest", "The forest is quiet and full of tall trees."),
+    ("the city", "The city is busy and bright at night."),
+    ("the desert", "The desert is dry and still under the sun."),
+    ("the mountain", "The mountain is steep and cold at the top."),
+];
+
+fn gen_chat(rng: &mut Rng) -> Example {
+    match rng.usize_below(3) {
+        0 => {
+            let (c, cap) = *rng.pick(KB);
+            Example {
+                task: Task::Chat,
+                prompt: format!("User: What is the capital of {c}?\nBot: "),
+                reference: format!("The capital of {c} is {cap}.\n"),
+                answer: None,
+                keywords: vec![c.to_string(), cap.to_string()],
+            }
+        }
+        1 => {
+            let (plant, col) = *rng.pick(COLORS);
+            Example {
+                task: Task::Chat,
+                prompt: format!("User: What color is the {plant} plant?\nBot: "),
+                reference: format!("The {plant} plant is {col}.\n"),
+                answer: None,
+                keywords: vec![plant.to_string(), col.to_string()],
+            }
+        }
+        _ => {
+            let (topic, sent) = *rng.pick(OPINIONS);
+            // judge keywords: content words of the gold sentence
+            let keywords: Vec<String> = sent
+                .split_whitespace()
+                .map(|w| w.trim_matches('.').to_string())
+                .filter(|w| w.len() >= 4 && w.chars().next().unwrap().is_lowercase())
+                .take(3)
+                .collect();
+            Example {
+                task: Task::Chat,
+                prompt: format!(
+                    "User: Write one sentence about {topic}.\nBot: "
+                ),
+                reference: format!("{sent}\n"),
+                answer: None,
+                keywords,
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- sum -------
+
+const SUBJ: &[&str] = &["The mayor", "A farmer", "The team", "One pilot",
+    "The crew", "A doctor", "The judge", "A singer", "The coach", "An actor"];
+const VERB: &[&str] = &["opened", "visited", "repaired", "sold", "found",
+    "built", "closed", "painted", "moved", "won"];
+const OBJ: &[&str] = &["the old bridge", "a small market", "the north road",
+    "a red barn", "the city hall", "a fishing boat", "the corn field",
+    "a stone well", "the town clock", "a long fence"];
+const WHEN: &[&str] = &["on Monday", "last week", "in the spring", "at noon",
+    "after the storm", "before dawn", "in early May", "this year"];
+
+fn sentence(rng: &mut Rng) -> String {
+    format!(
+        "{} {} {} {}.",
+        rng.pick(SUBJ),
+        rng.pick(VERB),
+        rng.pick(OBJ),
+        rng.pick(WHEN)
+    )
+}
+
+fn gen_sum(rng: &mut Rng) -> Example {
+    // 2 sentences keeps prompts inside the P_MAX=160 budget
+    let sents: Vec<String> = (0..2).map(|_| sentence(rng)).collect();
+    Example {
+        task: Task::Sum,
+        prompt: format!("Text: {}\nSummary: ", sents.join(" ")),
+        reference: format!("{}\n", sents[0]),
+        answer: None,
+        keywords: vec![],
+    }
+}
+
+// ---------------------------------------------------------------- mt -------
+
+const CIPHER_SHIFT: u8 = 7;
+
+/// Deterministic substitution cipher (the "source language").
+pub fn cipher_encode(text: &str) -> String {
+    text.chars()
+        .map(|c| {
+            if c.is_ascii_lowercase() {
+                (((c as u8 - b'a' + CIPHER_SHIFT) % 26) + b'a') as char
+            } else {
+                c
+            }
+        })
+        .collect()
+}
+
+const MT_POOL: &[&str] = &[
+    "the river runs past the mill",
+    "a cold wind moves the tall grass",
+    "the old man sells bread at the market",
+    "two boats wait near the stone pier",
+    "rain fell on the quiet village at night",
+    "the children walk to school along the canal",
+    "a gray cat sleeps on the warm roof",
+    "the train leaves the station before sunrise",
+    "farmers bring apples and corn to the square",
+    "lanterns light the narrow street in winter",
+    "the baker opens his shop at dawn",
+    "soldiers marched over the wooden bridge",
+    "a letter arrived from the far coast",
+    "the bell rings twice at the old tower",
+    "ships carry salt and wool across the bay",
+    "the girl paints small birds on paper",
+];
+
+fn gen_mt(rng: &mut Rng) -> Example {
+    let mut src = rng.pick(MT_POOL).to_string();
+    if rng.bool(0.5) {
+        let other = rng.pick(MT_POOL);
+        let a: Vec<&str> = src.split_whitespace().take(4).collect();
+        let b: Vec<&str> = other.split_whitespace().skip(4).collect();
+        if !b.is_empty() {
+            src = a
+                .into_iter()
+                .chain(b)
+                .collect::<Vec<_>>()
+                .join(" ");
+        }
+    }
+    Example {
+        task: Task::Mt,
+        prompt: format!("Translate: {}\nOutput: ", cipher_encode(&src)),
+        reference: format!("{src}\n"),
+        answer: None,
+        keywords: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = dataset(Task::Arith, 5, 42);
+        let b = dataset(Task::Arith, 5, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.reference, y.reference);
+        }
+    }
+
+    #[test]
+    fn arith_answers_consistent() {
+        for ex in dataset(Task::Arith, 50, 1) {
+            let ans = ex.answer.unwrap();
+            assert!(!ans.is_empty());
+            assert!(ex.reference.trim().ends_with(&ans), "{}", ex.reference);
+        }
+    }
+
+    #[test]
+    fn arith_answer_extracts_last_value() {
+        assert_eq!(arith_answer("4+5=9; 3*9=27\n"), "27");
+        assert_eq!(arith_answer("95\n"), "95");
+        assert_eq!(arith_answer("no digits"), "");
+    }
+
+    #[test]
+    fn cipher_is_reversible_shift() {
+        let enc = cipher_encode("abc xyz");
+        assert_eq!(enc, "hij efg");
+        // applying shift 26-7=19 more times inverts
+        let dec: String = enc
+            .chars()
+            .map(|c| {
+                if c.is_ascii_lowercase() {
+                    (((c as u8 - b'a' + 19) % 26) + b'a') as char
+                } else {
+                    c
+                }
+            })
+            .collect();
+        assert_eq!(dec, "abc xyz");
+    }
+
+    #[test]
+    fn code_outputs_match_semantics() {
+        for ex in dataset(Task::Code, 50, 2) {
+            let ans = ex.answer.unwrap();
+            assert!(ex.reference.trim() == ans);
+            assert!(ex.prompt.starts_with(">>> "));
+        }
+    }
+
+    #[test]
+    fn sum_reference_is_lead_sentence() {
+        for ex in dataset(Task::Sum, 20, 3) {
+            let body = ex.prompt.strip_prefix("Text: ").unwrap();
+            assert!(body.starts_with(ex.reference.trim()));
+        }
+    }
+
+    #[test]
+    fn prompts_fit_prompt_budget() {
+        // P_MAX = 160 in the default artifact build
+        for task in Task::all() {
+            for ex in dataset(*task, 100, 4) {
+                assert!(
+                    ex.prompt.len() <= 160,
+                    "{} prompt too long: {} chars",
+                    task.name(),
+                    ex.prompt.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_tasks_generate() {
+        for task in Task::all() {
+            let d = dataset(*task, 3, 9);
+            assert_eq!(d.len(), 3);
+            assert!(d.iter().all(|e| !e.prompt.is_empty()));
+            assert!(d.iter().all(|e| e.reference.ends_with('\n')));
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Decode engine: drives one request through prefill → rounds → extract.
+//!
+//! Method dispatch covers every row of the paper's Table 1:
+//!
+//! | method        | drafting                         | device program     |
+//! |---------------|----------------------------------|--------------------|
+//! | `Ar`          | — (1.00× baseline)               | `ar_step`          |
+//! | `Sps`         | independent draft LM, chain      | `sps_round`        |
+//! | `EagleChain`  | feature-conditioned head, chain  | `eagle_tree_round` (beam 1) |
+//! | `EagleTree`   | feature-conditioned head, tree   | `eagle_tree_round` |
+//! | `Medusa`      | multi-head static tree           | `medusa_round`     |
+//! | `Pld`         | host n-gram prompt lookup        | `verify_ext_round` |
+//! | `Lookahead`   | host n-gram pool (simplified)    | `verify_ext_round` |
+//!
+//! MARS is a *flag* ([`GenParams::mars`]), not a method: it changes only
+//! the accept/reject rule inside the device-side verification, exactly as
+//! in the paper.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::state::{ProbeDump, Snapshot};
+use crate::runtime::Runtime;
+#[allow(unused_imports)]
+use crate::runtime::Session;
+use crate::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+
+/// Decoding method (the paper's baselines + MARS host).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Ar,
+    Sps,
+    EagleChain,
+    EagleTree,
+    Medusa,
+    Pld,
+    Lookahead,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "ar" | "baseline" | "vanilla" => Method::Ar,
+            "sps" | "spd" => Method::Sps,
+            "eagle" | "eagle_chain" | "eagle-chain" => Method::EagleChain,
+            "eagle_tree" | "eagle-tree" | "eagle3" | "tree" => Method::EagleTree,
+            "medusa" => Method::Medusa,
+            "pld" => Method::Pld,
+            "lookahead" | "la" => Method::Lookahead,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Ar => "ar",
+            Method::Sps => "sps",
+            Method::EagleChain => "eagle_chain",
+            Method::EagleTree => "eagle_tree",
+            Method::Medusa => "medusa",
+            Method::Pld => "pld",
+            Method::Lookahead => "lookahead",
+        }
+    }
+
+    /// Does this method use draft-verify rounds (i.e. has a meaningful τ)?
+    pub fn is_speculative(&self) -> bool {
+        !matches!(self, Method::Ar)
+    }
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Ar,
+            Method::Sps,
+            Method::EagleChain,
+            Method::EagleTree,
+            Method::Medusa,
+            Method::Pld,
+            Method::Lookahead,
+        ]
+    }
+}
+
+/// Generation parameters for one request.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub method: Method,
+    /// MARS margin-aware relaxation on top of the method's verification
+    pub mars: bool,
+    /// logit-ratio threshold θ (paper default 0.9)
+    pub theta: f32,
+    /// sampling temperature; 0 = greedy
+    pub temperature: f32,
+    /// chain draft length / tree depth K
+    pub k: usize,
+    /// tree beam width (EagleTree)
+    pub beam: usize,
+    /// children per node (EagleTree)
+    pub branch: usize,
+    pub max_new: usize,
+    pub seed: u64,
+    /// record (z1, z2, flag) probe entries for figures 1/4
+    pub probe: bool,
+    /// pull a snapshot every N rounds (1 = exact stats; >1 trades stat
+    /// granularity for fewer device calls — §Perf lever)
+    pub extract_every: usize,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            method: Method::EagleTree,
+            mars: true,
+            theta: 0.9,
+            temperature: 1.0,
+            k: 7,
+            beam: 2,
+            branch: 2,
+            max_new: 160,
+            seed: 0,
+            probe: false,
+            extract_every: 1,
+        }
+    }
+}
+
+/// Result of one generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub tokens: Vec<u32>,
+    pub text: String,
+    /// wall-clock decode time (prefill excluded), seconds
+    pub decode_seconds: f64,
+    pub prefill_seconds: f64,
+    pub snapshot: Snapshot,
+    pub probe: Option<ProbeDump>,
+    pub device_calls: u64,
+}
+
+impl GenResult {
+    pub fn tau(&self) -> f64 {
+        self.snapshot.tau()
+    }
+
+    /// Tokens per second of decode.
+    pub fn tok_per_sec(&self) -> f64 {
+        if self.decode_seconds > 0.0 {
+            self.tokens.len() as f64 / self.decode_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// An in-flight sequence: prefillled session + host drafter + progress.
+///
+/// Exposes incremental [`SeqRunner::step`] so the coordinator's replicas
+/// can interleave many sequences over one device (continuous batching);
+/// [`DecodeEngine::generate`] is the run-to-completion convenience loop.
+pub struct SeqRunner<'a> {
+    sess: crate::runtime::Session<'a>,
+    params: GenParams,
+    exec: &'static str,
+    drafter: Option<Box<dyn HostDrafter + Send>>,
+    prompt: Vec<u32>,
+    history: Vec<u32>,
+    spins: usize,
+    round_cap: usize,
+    pub prefill_seconds: f64,
+    decode_started: Option<Instant>,
+    decode_seconds: f64,
+}
+
+impl<'a> SeqRunner<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        prompt: &[u32],
+        params: &GenParams,
+        hostloop: bool,
+    ) -> Result<Self> {
+        let mut params = params.clone();
+        if params.method == Method::EagleChain {
+            // chain decoding is the beam-1 degenerate tree
+            params.beam = 1;
+            params.branch = 1;
+        }
+        let t0 = Instant::now();
+        let mut sess = rt.session(prompt, &params)?;
+        if hostloop {
+            sess.set_hostloop(true)?;
+        }
+        let prefill_seconds = t0.elapsed().as_secs_f64();
+        let exec = match params.method {
+            Method::Ar => "ar_step",
+            Method::Sps => "sps_round",
+            Method::EagleChain | Method::EagleTree => "eagle_tree_round",
+            Method::Medusa => "medusa_round",
+            Method::Pld | Method::Lookahead => "verify_ext_round",
+        };
+        let drafter: Option<Box<dyn HostDrafter + Send>> = match params.method
+        {
+            Method::Pld => Some(Box::new(PldDrafter::default())),
+            Method::Lookahead => Some(Box::new(LookaheadDrafter::default())),
+            _ => None,
+        };
+        // generous hard cap: even tau=1 finishes within max_new rounds
+        let round_cap = params.max_new * 2 + 8;
+        Ok(SeqRunner {
+            sess,
+            params,
+            exec,
+            drafter,
+            prompt: prompt.to_vec(),
+            history: prompt.to_vec(),
+            spins: 0,
+            round_cap,
+            prefill_seconds,
+            decode_started: None,
+            decode_seconds: 0.0,
+        })
+    }
+
+    /// Run `extract_every` rounds + one snapshot pull. Returns the final
+    /// result once the sequence has finished.
+    pub fn step(&mut self) -> Result<Option<GenResult>> {
+        let t = Instant::now();
+        if self.decode_started.is_none() {
+            self.decode_started = Some(t);
+        }
+        let every = self.params.extract_every.max(1);
+        for _ in 0..every {
+            match &mut self.drafter {
+                Some(d) => {
+                    d.observe(&self.history);
+                    let drafts = d.draft(&self.history, self.params.k);
+                    self.sess.round_ext(&drafts)?;
+                }
+                None => self.sess.round(self.exec)?,
+            }
+            self.spins += 1;
+        }
+        let snap = self.sess.extract()?;
+        self.history = self.prompt.clone();
+        self.history.extend(&snap.tokens);
+        self.decode_seconds += t.elapsed().as_secs_f64();
+        if snap.finished || self.spins >= self.round_cap {
+            return Ok(Some(self.finalize(snap)?));
+        }
+        Ok(None)
+    }
+
+    fn finalize(&mut self, snap: Snapshot) -> Result<GenResult> {
+        let probe = if self.params.probe {
+            Some(self.sess.extract_probe()?)
+        } else {
+            None
+        };
+        // host-side truncation: rounds commit in chunks and may overshoot
+        let mut tokens = snap.tokens.clone();
+        tokens.truncate(self.params.max_new);
+        let text = crate::tokenizer::decode(&tokens);
+        Ok(GenResult {
+            tokens,
+            text,
+            decode_seconds: self.decode_seconds,
+            prefill_seconds: self.prefill_seconds,
+            snapshot: snap,
+            probe,
+            device_calls: self.sess.device_calls,
+        })
+    }
+}
+
+/// The decode engine: a thin, single-threaded driver over a [`Runtime`].
+pub struct DecodeEngine {
+    pub rt: Runtime,
+    /// force the naive host-roundtrip runtime (§Perf baseline)
+    pub hostloop: bool,
+}
+
+impl DecodeEngine {
+    pub fn new(rt: Runtime) -> Self {
+        DecodeEngine { rt, hostloop: false }
+    }
+
+    /// Generate a completion for a prompt string.
+    pub fn generate(&self, prompt: &str, params: &GenParams) -> Result<GenResult> {
+        let toks = crate::tokenizer::encode(prompt);
+        self.generate_tokens(&toks, params)
+    }
+
+    pub fn generate_tokens(
+        &self,
+        prompt: &[u32],
+        params: &GenParams,
+    ) -> Result<GenResult> {
+        let mut runner =
+            SeqRunner::new(&self.rt, prompt, params, self.hostloop)?;
+        loop {
+            if let Some(result) = runner.step()? {
+                return Ok(result);
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Task accuracy: exact-match for arith (GSM8K convention — final answer),
+//! exact output match for code (avg@k), keyword containment for chat.
+
+use crate::datasets::{arith_answer, Example, Task};
+
+/// Is a single generation correct for its task?
+pub fn task_correct(ex: &Example, generated: &str) -> bool {
+    match ex.task {
+        Task::Arith => {
+            let gold = ex.answer.as_deref().unwrap_or("");
+            !gold.is_empty() && arith_answer(generated) == gold
+        }
+        Task::Code => {
+            let gold = ex.answer.as_deref().unwrap_or("");
+            generated.lines().next().map(str::trim).unwrap_or("") == gold
+        }
+        Task::Chat => {
+            // all gold keywords present
+            !ex.keywords.is_empty()
+                && ex.keywords.iter().all(|k| generated.contains(k.as_str()))
+        }
+        // sum / mt report continuous quality metrics, not accuracy; a
+        // "correct" notion is still useful for sanity checks:
+        Task::Sum | Task::Mt => {
+            generated.trim().starts_with(ex.reference.trim())
+        }
+    }
+}
+
+/// Mean accuracy over (example, generations) pairs. Multiple generations
+/// per example are averaged (HumanEval's avg@k).
+pub fn task_accuracy(results: &[(&Example, Vec<String>)]) -> f64 {
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (ex, gens) in results {
+        if gens.is_empty() {
+            continue;
+        }
+        let ok = gens.iter().filter(|g| task_correct(ex, g)).count() as f64;
+        total += ok / gens.len() as f64;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::dataset;
+
+    #[test]
+    fn arith_correct_on_reference() {
+        for ex in dataset(Task::Arith, 20, 5) {
+            assert!(task_correct(&ex, &ex.reference), "{}", ex.reference);
+            assert!(!task_correct(&ex, "A: 99999\n"));
+        }
+    }
+
+    #[test]
+    fn code_requires_exact_line() {
+        for ex in dataset(Task::Code, 20, 6) {
+            assert!(task_correct(&ex, &ex.reference));
+            assert!(!task_correct(&ex, "'wrong'\n"));
+        }
+    }
+
+    #[test]
+    fn chat_checks_keywords() {
+        for ex in dataset(Task::Chat, 20, 7) {
+            assert!(task_correct(&ex, &ex.reference));
+        }
+    }
+
+    #[test]
+    fn avg_at_k_averages() {
+        let exs = dataset(Task::Arith, 1, 8);
+        let gold = exs[0].reference.clone();
+        let results = vec![(
+            &exs[0],
+            vec![gold.clone(), "nope".to_string(), gold.clone(), "x".into()],
+        )];
+        assert!((task_accuracy(&results) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_results_zero() {
+        assert_eq!(task_accuracy(&[]), 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Corpus BLEU-4 (Papineni et al., 2002): modified n-gram precision with
+//! brevity penalty, +1 smoothing on higher orders (standard sacrebleu-like
+//! "exp" smoothing simplification for short corpora).
+
+use std::collections::HashMap;
+
+fn ngram_counts<'a>(toks: &'a [&'a str], n: usize) -> HashMap<&'a [&'a str], usize> {
+    let mut m: HashMap<&[&str], usize> = HashMap::new();
+    if toks.len() >= n {
+        for i in 0..=toks.len() - n {
+            *m.entry(&toks[i..i + n]).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU over (candidate, reference) pairs, scaled to [0, 100].
+pub fn corpus_bleu(pairs: &[(String, String)]) -> f64 {
+    let max_n = 4;
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut cand_len = 0usize;
+    let mut ref_len = 0usize;
+    for (c, r) in pairs {
+        let ct: Vec<&str> = c.split_whitespace().collect();
+        let rt: Vec<&str> = r.split_whitespace().collect();
+        cand_len += ct.len();
+        ref_len += rt.len();
+        for n in 1..=max_n {
+            let cc = ngram_counts(&ct, n);
+            let rc = ngram_counts(&rt, n);
+            for (g, &cnt) in &cc {
+                let m = rc.get(g).copied().unwrap_or(0);
+                match_n[n - 1] += cnt.min(m);
+            }
+            total_n[n - 1] += ct.len().saturating_sub(n - 1);
+        }
+    }
+    if cand_len == 0 {
+        return 0.0;
+    }
+    let mut log_sum = 0.0;
+    for n in 0..max_n {
+        // +1 smoothing beyond unigrams to keep short corpora finite
+        let (m, t) = if n == 0 {
+            (match_n[0] as f64, total_n[0] as f64)
+        } else {
+            (match_n[n] as f64 + 1.0, total_n[n] as f64 + 1.0)
+        };
+        if m == 0.0 || t == 0.0 {
+            return 0.0;
+        }
+        log_sum += (m / t).ln();
+    }
+    let precision = (log_sum / max_n as f64).exp();
+    let bp = if cand_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / cand_len as f64).exp()
+    };
+    100.0 * precision * bp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(c: &str, r: &str) -> Vec<(String, String)> {
+        vec![(c.to_string(), r.to_string())]
+    }
+
+    #[test]
+    fn perfect_match_near_100() {
+        let b = corpus_bleu(&p(
+            "the river runs past the mill tonight",
+            "the river runs past the mill tonight",
+        ));
+        assert!(b > 90.0, "{b}");
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(corpus_bleu(&p("aa bb cc dd", "xx yy zz ww")), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_in_between() {
+        let b = corpus_bleu(&p(
+            "the cat sat on the mat today ok",
+            "the cat sat on a mat today ok",
+        ));
+        assert!(b > 20.0 && b < 95.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        let long_ref = "a b c d e f g h i j";
+        let short = corpus_bleu(&p("a b c", long_ref));
+        let full = corpus_bleu(&p(long_ref, long_ref));
+        assert!(short < full);
+    }
+
+    #[test]
+    fn empty_candidate_zero() {
+        assert_eq!(corpus_bleu(&p("", "a b")), 0.0);
+        assert_eq!(corpus_bleu(&[]), 0.0);
+    }
+}

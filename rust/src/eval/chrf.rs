@@ -1,0 +1,102 @@
+//! chrF (Popović, 2015): character n-gram F-β score, β = 2 as in the
+//! paper's Table 4, n-gram orders 1..6, uniform averaging.
+
+use std::collections::HashMap;
+
+fn char_ngrams(s: &str, n: usize) -> HashMap<String, usize> {
+    let chars: Vec<char> = s.chars().filter(|c| !c.is_whitespace()).collect();
+    let mut m = HashMap::new();
+    if chars.len() >= n {
+        for i in 0..=chars.len() - n {
+            let g: String = chars[i..i + n].iter().collect();
+            *m.entry(g).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// chrF(β) between candidate and reference, scaled to [0, 100].
+pub fn chrf_beta(candidate: &str, reference: &str, beta: f64) -> f64 {
+    let max_n = 6;
+    let mut f_sum = 0.0;
+    let mut orders = 0usize;
+    for n in 1..=max_n {
+        let cc = char_ngrams(candidate, n);
+        let rc = char_ngrams(reference, n);
+        let c_total: usize = cc.values().sum();
+        let r_total: usize = rc.values().sum();
+        if c_total == 0 && r_total == 0 {
+            continue;
+        }
+        orders += 1;
+        if c_total == 0 || r_total == 0 {
+            continue; // F = 0 for this order
+        }
+        let mut overlap = 0usize;
+        for (g, &cnt) in &cc {
+            overlap += cnt.min(rc.get(g).copied().unwrap_or(0));
+        }
+        if overlap == 0 {
+            continue;
+        }
+        let p = overlap as f64 / c_total as f64;
+        let r = overlap as f64 / r_total as f64;
+        let b2 = beta * beta;
+        f_sum += (1.0 + b2) * p * r / (b2 * p + r);
+    }
+    if orders == 0 {
+        return 0.0;
+    }
+    100.0 * f_sum / orders as f64
+}
+
+/// chrF with the paper's β = 2.
+pub fn chrf(candidate: &str, reference: &str) -> f64 {
+    chrf_beta(candidate, reference, 2.0)
+}
+
+/// Corpus chrF: average of segment scores (macro-average).
+pub fn corpus_chrf(pairs: &[(String, String)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().map(|(c, r)| chrf(c, r)).sum::<f64>() / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_100() {
+        assert!((chrf("abcdef", "abcdef") - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(chrf("aaaaaa", "zzzzzz"), 0.0);
+    }
+
+    #[test]
+    fn recall_weighted() {
+        // beta=2 weights recall: missing content hurts more than extra
+        let missing = chrf("the cat", "the cat sat on the mat");
+        let extra = chrf("the cat sat on the mat", "the cat");
+        assert!(extra > missing);
+    }
+
+    #[test]
+    fn whitespace_ignored() {
+        assert!((chrf("ab cd", "abcd") - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corpus_averages() {
+        let pairs = vec![
+            ("abc".to_string(), "abc".to_string()),
+            ("zzz".to_string(), "abc".to_string()),
+        ];
+        let c = corpus_chrf(&pairs);
+        assert!(c > 0.0 && c < 100.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! ROUGE-L: longest-common-subsequence F1 over whitespace tokens
+//! (Lin, 2004 — the variant reported for CNN/DailyMail in the paper's
+//! Table 3).
+
+fn lcs_len(a: &[&str], b: &[&str]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for x in a {
+        for (j, y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1 between a candidate and a reference.
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c: Vec<&str> = candidate.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    if c.is_empty() || r.is_empty() {
+        return 0.0;
+    }
+    let l = lcs_len(&c, &r) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let p = l / c.len() as f64;
+    let rec = l / r.len() as f64;
+    2.0 * p * rec / (p + rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_one() {
+        assert!((rouge_l("the cat sat", "the cat sat") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(rouge_l("aa bb", "cc dd"), 0.0);
+    }
+
+    #[test]
+    fn subsequence_scores() {
+        // lcs("the cat sat on mat", "the dog sat on a mat") = 4 words
+        let f = rouge_l("the cat sat on mat", "the dog sat on a mat");
+        let p = 4.0 / 5.0;
+        let r = 4.0 / 6.0;
+        let expect = 2.0 * p * r / (p + r);
+        assert!((f - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(rouge_l("", "x"), 0.0);
+        assert_eq!(rouge_l("x", ""), 0.0);
+    }
+
+    #[test]
+    fn order_matters() {
+        let a = rouge_l("a b c d", "a b c d");
+        let b = rouge_l("d c b a", "a b c d");
+        assert!(a > b);
+    }
+}

@@ -1,0 +1,28 @@
+//! MARS — Margin-Aware Speculative Verification: a rust/JAX/Pallas serving
+//! stack reproducing Song et al., ACL 2026.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt`, uploads model
+//!   weights once, threads the flat f32 decode state buffer-to-buffer.
+//! * [`engine`] — per-sequence decode sessions: prefill → rounds → extract,
+//!   with every decode method of the paper's evaluation (AR, SpS, EAGLE
+//!   chain/tree, Medusa, PLD, Lookahead) and the MARS verification rule as
+//!   a runtime flag.
+//! * [`coordinator`] — the serving layer: scheduler, engine workers,
+//!   line-JSON TCP server, router, metrics.
+//! * [`datasets`] / [`eval`] / [`bench`] — the paper's benchmark suite:
+//!   synthetic task analogs, quality metrics, and one harness per table
+//!   and figure of the evaluation section.
+
+pub mod bench;
+pub mod coordinator;
+pub mod datasets;
+pub mod engine;
+pub mod eval;
+pub mod runtime;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+
+pub use engine::{DecodeEngine, GenParams, GenResult, Method};
+pub use runtime::{Artifacts, Runtime};

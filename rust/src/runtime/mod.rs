@@ -1,0 +1,442 @@
+//! Runtime — the PJRT bridge (layer boundary between rust and the AOT'd
+//! JAX programs).
+//!
+//! Design constraints measured on this box (DESIGN.md §1.1):
+//! * `execute` with `Literal` args costs ~42 ms/call for MB-sized inputs;
+//!   `execute_b` with device-resident `PjRtBuffer`s costs ~0.5 ms. All hot
+//!   state therefore stays in device buffers, chained call-to-call.
+//! * Multi-output executables return a single tuple buffer that cannot be
+//!   split on device, so every round program is single-output (the packed
+//!   state vector) by construction.
+//!
+//! [`Runtime::session`] starts a device-resident decode; the deliberately
+//! naive [`Session::set_hostloop`] mode round-trips the full state through
+//! host memory every call and is kept as the §Perf "before" baseline.
+
+pub mod state;
+pub mod weights;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+use state::{Layout, ProbeDump, Snapshot};
+use weights::WeightFile;
+
+/// Parsed artifact directory: manifest + layout + vocab (no device objects).
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Value,
+    pub layout: Layout,
+    pub vocab: Value,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let read = |name: &str| -> Result<Value> {
+            let p = dir.join(name);
+            let text = fs::read_to_string(&p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            Value::parse(&text)
+                .map_err(|e| anyhow!("parsing {}: {e}", p.display()))
+        };
+        let manifest = read("manifest.json")?;
+        let layout_doc = read("state_layout.json")?;
+        let layout = Layout::from_json(&layout_doc)?;
+        let vocab = read("vocab.json")?;
+        crate::tokenizer::check_vocab_spec(&vocab)
+            .map_err(|e| anyhow!("{e}"))?;
+        let manifest_hash = manifest
+            .get("state_hash")
+            .and_then(|h| h.as_str())
+            .unwrap_or("");
+        if manifest_hash != layout.hash {
+            bail!(
+                "state layout hash mismatch: manifest {manifest_hash} vs \
+                 layout {}",
+                layout.hash
+            );
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), manifest, layout, vocab })
+    }
+
+    /// Default artifact location: `$MARS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MARS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if the artifact directory looks complete (used by tests to
+    /// self-skip when `make artifacts` has not run).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+            && dir.join("state_layout.json").exists()
+            && dir.join("weights/target.bin").exists()
+    }
+
+    pub fn executable_names(&self) -> Vec<String> {
+        self.manifest
+            .get("executables")
+            .and_then(|e| e.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    state_input: bool,
+    /// number of extra (non-state, non-weight) inputs
+    extras: Vec<(String, usize)>,
+    /// uploaded weight buffers, already in parameter order
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// A live PJRT CPU client with every executable compiled and all weight
+/// families resident on device. Owns all device objects — PJRT handles are
+/// not `Send`, so a `Runtime` must be created and used on one thread (the
+/// coordinator spawns one engine thread per replica; see `coordinator`).
+pub struct Runtime {
+    pub artifacts: Artifacts,
+    client: xla::PjRtClient,
+    execs: BTreeMap<String, Exec>,
+    /// wall time spent compiling HLO at startup
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let artifacts = Artifacts::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+
+        // load + verify weight families once, upload per executable below
+        let wdir = dir.join("weights");
+        let mut families: BTreeMap<String, WeightFile> = BTreeMap::new();
+        let manifest_weights = artifacts
+            .manifest
+            .get("weights")
+            .and_then(|w| w.as_obj())
+            .context("manifest weights")?;
+        for fam in manifest_weights.keys() {
+            let wf = WeightFile::load(&wdir, fam)?;
+            wf.check_against_manifest(&manifest_weights[fam])?;
+            families.insert(fam.clone(), wf);
+        }
+
+        let t0 = std::time::Instant::now();
+        let mut execs = BTreeMap::new();
+        let exec_manifest = artifacts
+            .manifest
+            .get("executables")
+            .and_then(|e| e.as_obj())
+            .context("manifest executables")?;
+        for (name, spec) in exec_manifest {
+            let file = spec.get("file").and_then(|f| f.as_str()).context("file")?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("path")?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+
+            let mut weight_bufs = Vec::new();
+            for fam in spec
+                .get("weight_families")
+                .and_then(|f| f.as_arr())
+                .context("weight_families")?
+            {
+                let fam = fam.as_str().context("family name")?;
+                let wf = &families[fam];
+                for t in &wf.tensors {
+                    let dims: Vec<usize> = t.shape.clone();
+                    let buf = client
+                        .buffer_from_host_buffer(
+                            wf.tensor_data(t),
+                            &dims,
+                            None,
+                        )
+                        .map_err(|e| anyhow!("upload {}: {e:?}", t.name))?;
+                    weight_bufs.push(buf);
+                }
+            }
+            let extras = spec
+                .get("extras")
+                .and_then(|f| f.as_arr())
+                .context("extras")?
+                .iter()
+                .map(|e| {
+                    let n = e.get("name").and_then(|v| v.as_str()).unwrap_or("");
+                    let sz: usize = e
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| {
+                            a.iter().map(|x| x.as_usize().unwrap_or(0)).product()
+                        })
+                        .unwrap_or(0);
+                    (n.to_string(), sz)
+                })
+                .collect();
+            execs.insert(
+                name.clone(),
+                Exec {
+                    exe,
+                    state_input: spec
+                        .get("state_input")
+                        .and_then(|b| b.as_bool())
+                        .unwrap_or(true),
+                    extras,
+                    weight_bufs,
+                },
+            );
+        }
+        Ok(Runtime {
+            artifacts,
+            client,
+            execs,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.artifacts.layout
+    }
+
+    pub fn has_exec(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    fn exec(&self, name: &str) -> Result<&Exec> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable '{name}' in artifacts"))
+    }
+
+    fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(|e| anyhow!("buffer upload: {e:?}"))
+    }
+
+    fn pull(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+    }
+
+    /// Run a named executable: args = [state?] ++ extras ++ weights.
+    /// Returns the single output buffer.
+    fn run(
+        &self,
+        name: &str,
+        state: Option<&xla::PjRtBuffer>,
+        extras: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let ex = self.exec(name)?;
+        if ex.state_input != state.is_some() {
+            bail!("{name}: state argument mismatch");
+        }
+        if ex.extras.len() != extras.len() {
+            bail!(
+                "{name}: expected {} extras, got {}",
+                ex.extras.len(),
+                extras.len()
+            );
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(1 + extras.len() + ex.weight_bufs.len());
+        if let Some(s) = state {
+            args.push(s);
+        }
+        args.extend_from_slice(extras);
+        args.extend(ex.weight_bufs.iter());
+        let mut outs = ex
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut replica = outs
+            .pop()
+            .filter(|r| !r.is_empty())
+            .ok_or_else(|| anyhow!("{name}: no output"))?;
+        Ok(replica.remove(0))
+    }
+
+    /// Start a decode session for one request.
+    pub fn session(
+        &self,
+        prompt_tokens: &[u32],
+        params: &crate::engine::GenParams,
+    ) -> Result<Session<'_>> {
+        let lay = self.layout();
+        let p_max = lay.konst("p_max");
+        if prompt_tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt_tokens.len() > p_max {
+            bail!("prompt too long: {} > {p_max}", prompt_tokens.len());
+        }
+        let mut prompt = vec![0f32; p_max];
+        for (i, &t) in prompt_tokens.iter().enumerate() {
+            prompt[i] = t as f32;
+        }
+        let n_cfg = lay.konst("n_cfg");
+        let mut cfg = vec![0f32; n_cfg];
+        let c = |name: &str| lay.cfg[name];
+        cfg[c("temp")] = params.temperature;
+        cfg[c("theta")] = params.theta;
+        cfg[c("mars_on")] = if params.mars { 1.0 } else { 0.0 };
+        cfg[c("kdraft")] = params.k as f32;
+        cfg[c("max_new")] = params.max_new as f32;
+        cfg[c("eos")] = crate::tokenizer::EOS as f32;
+        cfg[c("beam")] = params.beam as f32;
+        cfg[c("branch")] = params.branch as f32;
+        cfg[c("probe_on")] = if params.probe { 1.0 } else { 0.0 };
+        cfg[c("greedy")] = if params.temperature <= 0.0 { 1.0 } else { 0.0 };
+        cfg[c("seed")] = (params.seed % (1 << 24)) as f32;
+        cfg[c("prompt_len")] = prompt_tokens.len() as f32;
+
+        let prompt_buf = self.upload(&prompt)?;
+        let cfg_buf = self.upload(&cfg)?;
+        let state = self.run("prefill", None, &[&prompt_buf, &cfg_buf])?;
+        Ok(Session {
+            rt: self,
+            state: DeviceState::Buffer(state),
+            hostloop: false,
+            rounds_run: 0,
+            device_calls: 1,
+        })
+    }
+}
+
+enum DeviceState {
+    Buffer(xla::PjRtBuffer),
+    /// hostloop mode: the state lives on the host between calls
+    Host(Vec<f32>),
+}
+
+/// One in-flight decode: wraps the device-resident state and drives round
+/// executables. Borrows the runtime (single-threaded by construction).
+pub struct Session<'a> {
+    rt: &'a Runtime,
+    state: DeviceState,
+    hostloop: bool,
+    pub rounds_run: u64,
+    pub device_calls: u64,
+}
+
+impl<'a> Session<'a> {
+    /// Switch to the naive host-roundtrip runtime (§Perf baseline): the
+    /// state is pulled to host after every call and re-uploaded before the
+    /// next one.
+    pub fn set_hostloop(&mut self, on: bool) -> Result<()> {
+        if on == self.hostloop {
+            return Ok(());
+        }
+        self.hostloop = on;
+        self.state = match std::mem::replace(
+            &mut self.state,
+            DeviceState::Host(vec![]),
+        ) {
+            DeviceState::Buffer(b) if on => DeviceState::Host(self.rt.pull(&b)?),
+            DeviceState::Host(h) if !on => {
+                DeviceState::Buffer(self.rt.upload(&h)?)
+            }
+            other => other,
+        };
+        Ok(())
+    }
+
+    fn state_buf(&mut self) -> Result<xla::PjRtBuffer> {
+        match &self.state {
+            DeviceState::Buffer(_) => {
+                match std::mem::replace(
+                    &mut self.state,
+                    DeviceState::Host(vec![]),
+                ) {
+                    DeviceState::Buffer(b) => Ok(b),
+                    _ => unreachable!(),
+                }
+            }
+            DeviceState::Host(h) => {
+                self.device_calls += 1; // upload counts as traffic
+                self.rt.upload(h)
+            }
+        }
+    }
+
+    fn store_state(&mut self, buf: xla::PjRtBuffer) -> Result<()> {
+        if self.hostloop {
+            self.state = DeviceState::Host(self.rt.pull(&buf)?);
+        } else {
+            self.state = DeviceState::Buffer(buf);
+        }
+        Ok(())
+    }
+
+    /// Run one round of the named executable (no extra inputs).
+    pub fn round(&mut self, exec_name: &str) -> Result<()> {
+        let sb = self.state_buf()?;
+        let out = self.rt.run(exec_name, Some(&sb), &[])?;
+        self.device_calls += 1;
+        self.rounds_run += 1;
+        self.store_state(out)
+    }
+
+    /// Run one `verify_ext_round` with host-provided draft tokens.
+    pub fn round_ext(&mut self, drafts: &[u32]) -> Result<()> {
+        let lay = self.rt.layout();
+        let k_max = lay.konst("k_max");
+        let mut ext = vec![0f32; k_max + 1];
+        let n = drafts.len().min(k_max);
+        ext[0] = n as f32;
+        for i in 0..n {
+            ext[1 + i] = drafts[i] as f32;
+        }
+        let ext_buf = self.rt.upload(&ext)?;
+        let sb = self.state_buf()?;
+        let out = self.rt.run("verify_ext_round", Some(&sb), &[&ext_buf])?;
+        self.device_calls += 2;
+        self.rounds_run += 1;
+        self.store_state(out)
+    }
+
+    /// Pull the cheap per-round snapshot (scalars + out ring).
+    pub fn extract(&mut self) -> Result<Snapshot> {
+        let sb = self.state_buf()?;
+        let out = self.rt.run("extract", Some(&sb), &[])?;
+        self.device_calls += 1;
+        let raw = self.rt.pull(&out)?;
+        // state buffer was consumed as an arg; put it back
+        self.state = DeviceState::Buffer(sb);
+        if self.hostloop {
+            let b = match std::mem::replace(
+                &mut self.state,
+                DeviceState::Host(vec![]),
+            ) {
+                DeviceState::Buffer(b) => b,
+                _ => unreachable!(),
+            };
+            self.state = DeviceState::Host(self.rt.pull(&b)?);
+        }
+        Snapshot::decode(self.rt.layout(), &raw)
+    }
+
+    /// Pull the probe ring (figures 1 & 4).
+    pub fn extract_probe(&mut self) -> Result<ProbeDump> {
+        let sb = self.state_buf()?;
+        let out = self.rt.run("extract_probe", Some(&sb), &[])?;
+        self.device_calls += 1;
+        let raw = self.rt.pull(&out)?;
+        self.state = DeviceState::Buffer(sb);
+        ProbeDump::decode(self.rt.layout(), &raw)
+    }
+}

@@ -1,0 +1,293 @@
+//! Rust mirror of the flat f32 state ABI (`python/compile/state_spec.py`).
+//!
+//! The layout is *loaded* from `artifacts/state_layout.json` rather than
+//! hard-coded, and the scalar names this module relies on are validated at
+//! load time, so python-side layout changes fail fast instead of silently
+//! misreading offsets.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Scalar slots the rust side reads/writes (names must exist in the JSON).
+pub const REQUIRED_SCALARS: &[&str] = &[
+    "pos", "out_len", "finished", "temp", "theta", "mars_on", "kdraft",
+    "max_new", "eos", "beam", "branch", "probe_on", "probe_len", "rounds",
+    "committed", "target_calls", "draft_steps", "exact_accepts",
+    "relaxed_accepts", "rejects", "bonus", "prompt_len", "last_accept",
+    "greedy", "seed", "rng",
+];
+
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed state layout + ABI constants.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub state_len: usize,
+    pub extract_len: usize,
+    pub extract_probe_len: usize,
+    pub n_scalars: usize,
+    pub scalars: BTreeMap<String, usize>,
+    pub cfg: BTreeMap<String, usize>,
+    pub sections: BTreeMap<String, Section>,
+    pub consts: BTreeMap<String, usize>,
+    pub hash: String,
+}
+
+impl Layout {
+    pub fn from_json(doc: &Value) -> Result<Layout> {
+        let num = |v: &Value, k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("state_layout.json: missing {k}"))
+        };
+        let mut scalars = BTreeMap::new();
+        for (k, v) in doc
+            .get("scalars")
+            .and_then(|v| v.as_obj())
+            .context("scalars")?
+        {
+            scalars.insert(k.clone(), v.as_usize().context("scalar idx")?);
+        }
+        let mut cfg = BTreeMap::new();
+        for (k, v) in doc.get("cfg").and_then(|v| v.as_obj()).context("cfg")? {
+            cfg.insert(k.clone(), v.as_usize().context("cfg idx")?);
+        }
+        let mut sections = BTreeMap::new();
+        for (k, v) in doc
+            .get("sections")
+            .and_then(|v| v.as_obj())
+            .context("sections")?
+        {
+            let shape = v
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            sections.insert(
+                k.clone(),
+                Section {
+                    offset: num(v, "offset")?,
+                    size: num(v, "size")?,
+                    shape,
+                },
+            );
+        }
+        let mut consts = BTreeMap::new();
+        for (k, v) in doc
+            .get("consts")
+            .and_then(|v| v.as_obj())
+            .context("consts")?
+        {
+            consts.insert(k.clone(), v.as_usize().context("const")?);
+        }
+        let lay = Layout {
+            state_len: num(doc, "state_len")?,
+            extract_len: num(doc, "extract_len")?,
+            extract_probe_len: num(doc, "extract_probe_len")?,
+            n_scalars: num(doc, "n_scalars")?,
+            scalars,
+            cfg,
+            sections,
+            consts,
+            hash: doc
+                .get("hash")
+                .and_then(|h| h.as_str())
+                .unwrap_or("")
+                .to_string(),
+        };
+        for name in REQUIRED_SCALARS {
+            if !lay.scalars.contains_key(*name) {
+                bail!("state_layout.json lacks scalar '{name}'");
+            }
+        }
+        Ok(lay)
+    }
+
+    pub fn scalar(&self, name: &str) -> usize {
+        self.scalars[name]
+    }
+
+    pub fn konst(&self, name: &str) -> usize {
+        self.consts[name]
+    }
+}
+
+/// Decoded `extract()` output: the per-round snapshot the engine polls.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub pos: usize,
+    pub out_len: usize,
+    pub finished: bool,
+    pub rounds: f64,
+    pub committed: f64,
+    pub target_calls: f64,
+    pub draft_steps: f64,
+    pub exact_accepts: f64,
+    pub relaxed_accepts: f64,
+    pub rejects: f64,
+    pub bonus: f64,
+    pub last_accept: f64,
+    pub tokens: Vec<u32>,
+}
+
+impl Snapshot {
+    pub fn decode(lay: &Layout, raw: &[f32]) -> Result<Snapshot> {
+        if raw.len() != lay.extract_len {
+            bail!(
+                "extract length mismatch: got {}, want {}",
+                raw.len(),
+                lay.extract_len
+            );
+        }
+        let s = |name: &str| raw[lay.scalar(name)] as f64;
+        let out_len = s("out_len") as usize;
+        let out = &raw[lay.n_scalars..];
+        let tokens = out
+            .iter()
+            .take(out_len)
+            .map(|&x| x as u32)
+            .collect::<Vec<_>>();
+        Ok(Snapshot {
+            pos: s("pos") as usize,
+            out_len,
+            finished: s("finished") > 0.5,
+            rounds: s("rounds"),
+            committed: s("committed"),
+            target_calls: s("target_calls"),
+            draft_steps: s("draft_steps"),
+            exact_accepts: s("exact_accepts"),
+            relaxed_accepts: s("relaxed_accepts"),
+            rejects: s("rejects"),
+            bonus: s("bonus"),
+            last_accept: s("last_accept"),
+            tokens,
+        })
+    }
+
+    /// Average committed tokens per draft-verify cycle (the paper's tau).
+    pub fn tau(&self) -> f64 {
+        if self.rounds > 0.0 {
+            self.committed / self.rounds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Decoded `extract_probe()` output — (z1, z2, flag) rows for figures 1/4.
+#[derive(Debug, Clone, Default)]
+pub struct ProbeDump {
+    pub entries: Vec<ProbeEntry>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeEntry {
+    pub z1: f32,
+    pub z2: f32,
+    /// 0 = rejected, 1 = exact accept, 2 = MARS relaxed accept
+    pub flag: u8,
+}
+
+impl ProbeDump {
+    pub fn decode(lay: &Layout, raw: &[f32]) -> Result<ProbeDump> {
+        if raw.len() != lay.extract_probe_len {
+            bail!("extract_probe length mismatch: {}", raw.len());
+        }
+        let n = (raw[lay.scalar("probe_len")] as usize)
+            .min(lay.konst("probe_max"));
+        let w = lay.konst("probe_w");
+        let body = &raw[lay.n_scalars..];
+        let mut entries = Vec::with_capacity(n);
+        for i in 0..n {
+            entries.push(ProbeEntry {
+                z1: body[i * w],
+                z2: body[i * w + 1],
+                flag: body[i * w + 2] as u8,
+            });
+        }
+        Ok(ProbeDump { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_layout() -> Layout {
+        let json = r#"{
+          "state_len": 200, "extract_len": 72, "extract_probe_len": 112,
+          "n_scalars": 64,
+          "scalars": {"pos":0,"eagle_pos":1,"sps_pos":2,"out_len":3,
+            "finished":4,"rng":5,"temp":6,"theta":7,"mars_on":8,"kdraft":9,
+            "max_new":10,"eos":11,"beam":12,"branch":13,"probe_on":14,
+            "probe_len":15,"rounds":16,"committed":17,"target_calls":18,
+            "draft_steps":19,"exact_accepts":20,"relaxed_accepts":21,
+            "rejects":22,"bonus":23,"prompt_len":24,"last_accept":25,
+            "greedy":26,"seed":27},
+          "cfg": {"temp":0},
+          "sections": {"out": {"offset":64, "size":8, "shape":[8]}},
+          "consts": {"probe_max":16, "probe_w":3},
+          "hash": "abc"
+        }"#;
+        Layout::from_json(&Value::parse(json).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn snapshot_decodes() {
+        let lay = demo_layout();
+        let mut raw = vec![0f32; lay.extract_len];
+        raw[lay.scalar("pos")] = 12.0;
+        raw[lay.scalar("out_len")] = 3.0;
+        raw[lay.scalar("finished")] = 1.0;
+        raw[lay.scalar("rounds")] = 4.0;
+        raw[lay.scalar("committed")] = 10.0;
+        raw[64] = 30.0;
+        raw[65] = 31.0;
+        raw[66] = 2.0;
+        let snap = Snapshot::decode(&lay, &raw).unwrap();
+        assert_eq!(snap.tokens, vec![30, 31, 2]);
+        assert!(snap.finished);
+        assert!((snap.tau() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_rejects_bad_len() {
+        let lay = demo_layout();
+        assert!(Snapshot::decode(&lay, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn probe_decodes() {
+        let lay = demo_layout();
+        let mut raw = vec![0f32; lay.extract_probe_len];
+        raw[lay.scalar("probe_len")] = 2.0;
+        raw[64] = 5.0;
+        raw[65] = 4.5;
+        raw[66] = 2.0;
+        raw[67] = 3.0;
+        raw[68] = 1.0;
+        raw[69] = 0.0;
+        let p = ProbeDump::decode(&lay, &raw).unwrap();
+        assert_eq!(p.entries.len(), 2);
+        assert_eq!(p.entries[0].flag, 2);
+        assert_eq!(p.entries[1], ProbeEntry { z1: 3.0, z2: 1.0, flag: 0 });
+    }
+
+    #[test]
+    fn missing_scalar_fails() {
+        let json = r#"{"state_len":1,"extract_len":1,"extract_probe_len":1,
+          "n_scalars":1,"scalars":{"pos":0},"cfg":{},"sections":{},
+          "consts":{},"hash":""}"#;
+        assert!(Layout::from_json(&Value::parse(json).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Model weight loading: raw f32 little-endian `.bin` + `.json` metadata
+//! written by `python/compile/train.py`, validated against the shapes the
+//! AOT manifest recorded at lowering time.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One model family's flat weights + per-tensor metadata.
+#[derive(Debug, Clone)]
+pub struct WeightFile {
+    pub family: String,
+    pub tensors: Vec<TensorMeta>,
+    pub data: Vec<f32>,
+}
+
+impl WeightFile {
+    pub fn load(dir: &Path, family: &str) -> Result<WeightFile> {
+        let bin = dir.join(format!("{family}.bin"));
+        let meta_path = dir.join(format!("{family}.json"));
+        let bytes = fs::read(&bin)
+            .with_context(|| format!("reading {}", bin.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{}: size not a multiple of 4", bin.display());
+        }
+        let mut data = Vec::with_capacity(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let meta_text = fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let meta = Value::parse(&meta_text)
+            .with_context(|| format!("parsing {}", meta_path.display()))?;
+        let mut tensors = Vec::new();
+        for t in meta.get("tensors").and_then(|v| v.as_arr()).context("tensors")? {
+            tensors.push(TensorMeta {
+                name: t.get("name").and_then(|v| v.as_str()).context("name")?.into(),
+                shape: t
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .context("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: t.get("offset").and_then(|v| v.as_usize()).context("offset")?,
+                size: t.get("size").and_then(|v| v.as_usize()).context("size")?,
+            });
+        }
+        let total = meta.get("total").and_then(|v| v.as_usize()).context("total")?;
+        if total != data.len() {
+            bail!(
+                "{family}: meta total {total} != bin elements {}",
+                data.len()
+            );
+        }
+        Ok(WeightFile { family: family.to_string(), tensors, data })
+    }
+
+    pub fn tensor_data(&self, t: &TensorMeta) -> &[f32] {
+        &self.data[t.offset..t.offset + t.size]
+    }
+
+    /// Validate tensor names/shapes against the AOT manifest's record of
+    /// what the executables were lowered with.
+    pub fn check_against_manifest(&self, manifest_family: &Value) -> Result<()> {
+        let expect = manifest_family.as_arr().context("weights family")?;
+        if expect.len() != self.tensors.len() {
+            bail!(
+                "{}: manifest lists {} tensors, weight file has {}",
+                self.family,
+                expect.len(),
+                self.tensors.len()
+            );
+        }
+        for (e, t) in expect.iter().zip(&self.tensors) {
+            let name = e.get("name").and_then(|v| v.as_str()).unwrap_or("");
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().map(|x| x.as_usize().unwrap_or(0)).collect())
+                .unwrap_or_default();
+            if name != t.name || shape != t.shape {
+                bail!(
+                    "{}: tensor mismatch: manifest {name:?}{shape:?} vs \
+                     weights {:?}{:?}",
+                    self.family,
+                    t.name,
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_family(dir: &Path, fam: &str, vals: &[f32]) {
+        let mut f = fs::File::create(dir.join(format!("{fam}.bin"))).unwrap();
+        for v in vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        let meta = format!(
+            r#"{{"tensors": [{{"name": "w", "shape": [{}], "offset": 0,
+                 "size": {}}}], "total": {}}}"#,
+            vals.len(),
+            vals.len(),
+            vals.len()
+        );
+        fs::write(dir.join(format!("{fam}.json")), meta).unwrap();
+    }
+
+    #[test]
+    fn loads_roundtrip() {
+        let dir = std::env::temp_dir().join("mars_wtest");
+        fs::create_dir_all(&dir).unwrap();
+        write_family(&dir, "t1", &[1.5, -2.0, 3.25]);
+        let w = WeightFile::load(&dir, "t1").unwrap();
+        assert_eq!(w.tensors.len(), 1);
+        assert_eq!(w.tensor_data(&w.tensors[0]), &[1.5, -2.0, 3.25]);
+    }
+
+    #[test]
+    fn total_mismatch_fails() {
+        let dir = std::env::temp_dir().join("mars_wtest2");
+        fs::create_dir_all(&dir).unwrap();
+        write_family(&dir, "t2", &[1.0]);
+        fs::write(
+            dir.join("t2.json"),
+            r#"{"tensors": [], "total": 99}"#,
+        )
+        .unwrap();
+        assert!(WeightFile::load(&dir, "t2").is_err());
+    }
+
+    #[test]
+    fn manifest_check() {
+        let dir = std::env::temp_dir().join("mars_wtest3");
+        fs::create_dir_all(&dir).unwrap();
+        write_family(&dir, "t3", &[0.0; 4]);
+        let w = WeightFile::load(&dir, "t3").unwrap();
+        let ok = Value::parse(r#"[{"name": "w", "shape": [4]}]"#).unwrap();
+        assert!(w.check_against_manifest(&ok).is_ok());
+        let bad = Value::parse(r#"[{"name": "x", "shape": [4]}]"#).unwrap();
+        assert!(w.check_against_manifest(&bad).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Simplified Lookahead decoding (Fu et al., 2024).
+//!
+//! The original maintains an n-gram pool filled by Jacobi fixed-point
+//! iterations running alongside decoding. We keep the n-gram pool and its
+//! verification path but fill it from the observed generation history
+//! instead of Jacobi branches (documented deviation — DESIGN.md §9.4):
+//! on this substrate the Jacobi branch would share the single CPU device
+//! with the main decode and cannot run "for free" as it does on under-
+//! utilized GPUs.
+
+use std::collections::HashMap;
+
+use super::HostDrafter;
+
+pub struct LookaheadDrafter {
+    /// n-gram order of the pool keys
+    pub n: usize,
+    /// continuation length stored per key
+    pub g: usize,
+    pool: HashMap<Vec<u32>, Vec<u32>>,
+    seen: usize,
+    /// pool capacity (oldest entries are not evicted; inserts stop)
+    pub cap: usize,
+}
+
+impl Default for LookaheadDrafter {
+    fn default() -> Self {
+        LookaheadDrafter::new(3, 8, 4096)
+    }
+}
+
+impl LookaheadDrafter {
+    pub fn new(n: usize, g: usize, cap: usize) -> Self {
+        assert!(n >= 1 && g >= 1);
+        LookaheadDrafter { n, g, pool: HashMap::new(), seen: 0, cap }
+    }
+
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+impl HostDrafter for LookaheadDrafter {
+    fn observe(&mut self, history: &[u32]) {
+        // incrementally index new n-gram -> continuation pairs
+        let len = history.len();
+        if len < self.n + 1 {
+            return;
+        }
+        let start = self.seen.saturating_sub(self.n + self.g);
+        for i in start..len.saturating_sub(self.n) {
+            if self.pool.len() >= self.cap {
+                break;
+            }
+            let key = history[i..i + self.n].to_vec();
+            let cont_end = (i + self.n + self.g).min(len);
+            let cont = history[i + self.n..cont_end].to_vec();
+            if !cont.is_empty() {
+                // newest continuation wins (matches lookahead's refresh)
+                self.pool.insert(key, cont);
+            }
+        }
+        self.seen = len;
+    }
+
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+        if history.len() < self.n {
+            return Vec::new();
+        }
+        let key = &history[history.len() - self.n..];
+        match self.pool.get(key) {
+            Some(cont) => cont.iter().take(k).copied().collect(),
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_from_history() {
+        let mut d = LookaheadDrafter::new(2, 4, 100);
+        let h = vec![5, 6, 7, 8, 9, 5, 6];
+        d.observe(&h);
+        // key [5,6] -> continuation [7,8,9,...]
+        assert_eq!(d.draft(&h, 3), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn empty_without_observation() {
+        let mut d = LookaheadDrafter::new(2, 4, 100);
+        assert!(d.draft(&[1, 2, 3], 4).is_empty());
+    }
+
+    #[test]
+    fn incremental_observe() {
+        let mut d = LookaheadDrafter::new(2, 2, 100);
+        let mut h = vec![1, 2, 3];
+        d.observe(&h);
+        h.extend([4, 1, 2]);
+        d.observe(&h);
+        assert_eq!(d.draft(&h, 2), vec![3, 4]);
+        assert!(d.pool_len() >= 2);
+    }
+
+    #[test]
+    fn capacity_bounds_pool() {
+        let mut d = LookaheadDrafter::new(1, 1, 3);
+        let h: Vec<u32> = (0..100).collect();
+        d.observe(&h);
+        assert!(d.pool_len() <= 3);
+    }
+}

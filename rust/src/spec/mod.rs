@@ -1,0 +1,21 @@
+//! Host-side speculative drafting components.
+//!
+//! The model-based drafters (SpS LM, EAGLE head, Medusa heads) run inside
+//! the AOT'd device programs; the retrieval-based baselines of the paper's
+//! Table 1 — Prompt Lookup Decoding and (simplified) Lookahead — draft on
+//! the host from the token history and feed `verify_ext_round`.
+
+pub mod lookahead;
+pub mod pld;
+
+pub use lookahead::LookaheadDrafter;
+pub use pld::PldDrafter;
+
+/// A host drafter proposes up to `k` continuation tokens given the full
+/// token history (prompt ++ generated).
+pub trait HostDrafter {
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32>;
+
+    /// Observe newly committed tokens (for pool-building drafters).
+    fn observe(&mut self, _history: &[u32]) {}
+}

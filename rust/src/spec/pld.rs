@@ -1,0 +1,110 @@
+//! Prompt Lookup Decoding (Somasundaram et al., 2024): draft the
+//! continuation of the longest recent n-gram match found in the existing
+//! token history (prompt + generation). No model, no training — pure
+//! string matching, which is why it shines on summarization-style tasks
+//! (CNN/DM column of Table 1) and does little for open-ended chat.
+
+use super::HostDrafter;
+
+pub struct PldDrafter {
+    /// longest n-gram to try to match (tried longest-first)
+    pub max_ngram: usize,
+    /// shortest n-gram worth matching
+    pub min_ngram: usize,
+}
+
+impl Default for PldDrafter {
+    fn default() -> Self {
+        PldDrafter { max_ngram: 4, min_ngram: 2 }
+    }
+}
+
+impl PldDrafter {
+    pub fn new(min_ngram: usize, max_ngram: usize) -> Self {
+        assert!(min_ngram >= 1 && max_ngram >= min_ngram);
+        PldDrafter { max_ngram, min_ngram }
+    }
+
+    /// Find the continuation of the most recent earlier occurrence of the
+    /// history's tail n-gram; longest n wins, most recent match wins.
+    fn lookup(&self, history: &[u32], k: usize) -> Vec<u32> {
+        let len = history.len();
+        for n in (self.min_ngram..=self.max_ngram).rev() {
+            if len < n + 1 {
+                continue;
+            }
+            let tail = &history[len - n..];
+            // scan right-to-left over earlier positions
+            for start in (0..len - n).rev() {
+                if &history[start..start + n] == tail {
+                    let cont_from = start + n;
+                    let take = k.min(len - cont_from);
+                    if take == 0 {
+                        continue;
+                    }
+                    return history[cont_from..cont_from + take].to_vec();
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+impl HostDrafter for PldDrafter {
+    fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32> {
+        self.lookup(history, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_repeat() {
+        // history: "a b c d ... a b" -> draft "c d"
+        let h = vec![1, 2, 3, 4, 9, 9, 1, 2];
+        let mut d = PldDrafter::new(2, 4);
+        assert_eq!(d.draft(&h, 2), vec![3, 4]);
+    }
+
+    #[test]
+    fn longest_ngram_wins() {
+        // tail [2,3,4] matches at 0 (cont 5); tail [3,4] also matches.
+        let h = vec![2, 3, 4, 5, 0, 3, 4, 7, 2, 3, 4];
+        let mut d = PldDrafter::new(2, 4);
+        assert_eq!(d.draft(&h, 1), vec![5]);
+    }
+
+    #[test]
+    fn no_match_empty() {
+        let h = vec![1, 2, 3, 4, 5];
+        let mut d = PldDrafter::new(2, 4);
+        assert!(d.draft(&h, 4).is_empty());
+    }
+
+    #[test]
+    fn respects_k() {
+        let h = vec![1, 2, 3, 4, 5, 6, 1, 2];
+        let mut d = PldDrafter::new(2, 2);
+        // continuation may run into the repeated tail itself
+        assert_eq!(d.draft(&h, 10), vec![3, 4, 5, 6, 1, 2]);
+        assert_eq!(d.draft(&h, 1), vec![3]);
+    }
+
+    #[test]
+    fn short_history_safe() {
+        let mut d = PldDrafter::default();
+        assert!(d.draft(&[], 4).is_empty());
+        assert!(d.draft(&[1], 4).is_empty());
+        assert!(d.draft(&[1, 1], 4).is_empty());
+    }
+
+    #[test]
+    fn most_recent_match_preferred() {
+        // [1,2] occurs at 0 (cont 3) and at 4 (cont 7); recent wins.
+        let h = vec![1, 2, 3, 0, 1, 2, 7, 8, 1, 2];
+        let mut d = PldDrafter::new(2, 2);
+        assert_eq!(d.draft(&h, 1), vec![7]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Byte-level tokenizer — the rust mirror of `python/compile/tokenizer.py`.
+//!
+//! The vocab layout is fixed by specification (and double-checked against
+//! `artifacts/vocab.json` at engine start):
+//!
+//! ```text
+//! 0 PAD   1 BOS   2 EOS   3 SEP
+//! 4..98   printable ASCII 0x20..0x7E (id = byte - 0x20 + 4)
+//! 99      '\n'
+//! 100..127 unused padding up to VOCAB = 128
+//! ```
+
+use crate::util::json::Value;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const NL_ID: u32 = 99;
+pub const VOCAB: usize = 128;
+
+const ASCII_LO: u32 = 0x20;
+const ASCII_HI: u32 = 0x7E;
+const OFFSET: u32 = 4;
+
+/// Encode text to token ids; unknown characters map to space.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.chars()
+        .map(|c| {
+            let b = c as u32;
+            if c == '\n' {
+                NL_ID
+            } else if (ASCII_LO..=ASCII_HI).contains(&b) {
+                b - ASCII_LO + OFFSET
+            } else {
+                OFFSET // space fallback
+            }
+        })
+        .collect()
+}
+
+/// Decode ids to text; special/padding ids are dropped.
+pub fn decode(ids: &[u32]) -> String {
+    let mut out = String::with_capacity(ids.len());
+    for &t in ids {
+        if t == NL_ID {
+            out.push('\n');
+        } else if (OFFSET..OFFSET + (ASCII_HI - ASCII_LO + 1)).contains(&t) {
+            out.push(char::from_u32(t - OFFSET + ASCII_LO).unwrap());
+        }
+    }
+    out
+}
+
+/// Validate this implementation against the vocab.json emitted by aot.py.
+pub fn check_vocab_spec(spec: &Value) -> Result<(), String> {
+    let want = [
+        ("vocab_size", VOCAB as i64),
+        ("pad", PAD as i64),
+        ("bos", BOS as i64),
+        ("eos", EOS as i64),
+        ("nl", NL_ID as i64),
+        ("ascii_lo", ASCII_LO as i64),
+        ("ascii_hi", ASCII_HI as i64),
+        ("ascii_offset", OFFSET as i64),
+    ];
+    for (k, v) in want {
+        let got = spec
+            .get(k)
+            .and_then(|x| x.as_i64())
+            .ok_or_else(|| format!("vocab.json missing {k}"))?;
+        if got != v {
+            return Err(format!("vocab.json {k}: artifact {got} != rust {v}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Q: 12+34=?\nA: 46\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn newline_id() {
+        assert_eq!(encode("\n"), vec![NL_ID]);
+    }
+
+    #[test]
+    fn unknown_maps_to_space() {
+        assert_eq!(decode(&encode("héllo")), "h llo");
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        // id 40 = byte 0x20 + (40 - 4) = 'D'
+        assert_eq!(decode(&[BOS, 40, EOS, PAD]), "D");
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for id in encode("The quick ~ brown fox! 0123") {
+            assert!((id as usize) < VOCAB);
+        }
+    }
+
+    #[test]
+    fn matches_python_examples() {
+        // spot values pinned against the python implementation
+        assert_eq!(encode(" ")[0], 4);
+        assert_eq!(encode("~")[0], 0x7E - 0x20 + 4);
+        assert_eq!(encode("Q")[0], ('Q' as u32) - 0x20 + 4);
+    }
+}

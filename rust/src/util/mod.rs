@@ -1,0 +1,13 @@
+//! std-only substrate utilities.
+//!
+//! The offline registry only carries the `xla` crate's dependency tree
+//! (no serde / rand / clap / criterion), so the small infrastructure those
+//! crates would normally provide is implemented here: a JSON value type
+//! with parser and writer ([`json`]), a splitmix/PCG PRNG ([`prng`]), a
+//! tiny CLI flag parser ([`cli`]), and streaming statistics used by both
+//! the metrics registry and the bench harness ([`stats`]).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,177 @@
+//! Streaming statistics: mean/min/max accumulators, percentile summaries
+//! and a log-scaled latency histogram. Shared by the serving metrics
+//! registry and the bench harness (criterion is not in the offline
+//! registry; `benches/` use these primitives with `harness = false`).
+
+/// Simple accumulator with exact percentiles (stores samples).
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    /// q in [0,1]; nearest-rank on the sorted samples.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
+/// Fixed-bucket log2 histogram for lock-cheap hot-path recording
+/// (microseconds -> bucket = floor(log2(us))).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: vec![0; 40], count: 0, sum: 0.0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn record(&mut self, value: f64) {
+        let b = if value <= 1.0 {
+            0
+        } else {
+            (value.log2() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += value;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        (1u64 << self.buckets.len()) as f64
+    }
+}
+
+/// Format a mean±std cell the way the bench tables print it.
+pub fn fmt_ms(mean_ms: f64) -> String {
+    if mean_ms >= 100.0 {
+        format!("{:.0}ms", mean_ms)
+    } else if mean_ms >= 1.0 {
+        format!("{:.2}ms", mean_ms)
+    } else {
+        format!("{:.0}us", mean_ms * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut s = Summary::new();
+        s.push(10.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(1.0), 10.0);
+        assert_eq!(Summary::new().percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LogHistogram::default();
+        for i in 1..1000u64 {
+            h.record(i as f64);
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(0.99));
+        assert_eq!(h.count, 999);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_ms(0.5), "500us");
+        assert_eq!(fmt_ms(2.345), "2.35ms");
+        assert_eq!(fmt_ms(150.0), "150ms");
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration tests over the real artifacts (auto-skip when
+//! `make artifacts` has not run, so `cargo test` stays green on a fresh
+//! checkout).
+//!
+//! PJRT handles are not `Send`, so each test builds its own thread-local
+//! engine; the checks are grouped into three coarse tests to amortize the
+//! ~30 s executable-compilation cost.
+
+use std::path::PathBuf;
+
+use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::runtime::{Artifacts, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("MARS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if Artifacts::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+fn params(method: Method, mars: bool, temp: f32) -> GenParams {
+    GenParams {
+        method,
+        mars,
+        temperature: temp,
+        max_new: 24,
+        seed: 11,
+        ..GenParams::default()
+    }
+}
+
+#[test]
+fn artifacts_metadata_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let a = Artifacts::load(&dir).expect("artifacts load");
+    assert!(a.layout.state_len > 0);
+    for name in [
+        "prefill",
+        "ar_step",
+        "sps_round",
+        "eagle_tree_round",
+        "medusa_round",
+        "verify_ext_round",
+        "extract",
+        "extract_probe",
+    ] {
+        assert!(
+            a.executable_names().iter().any(|n| n == name),
+            "missing {name}"
+        );
+    }
+}
+
+/// All engine-level semantics in one test (single runtime build).
+#[test]
+fn engine_semantics_suite() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = DecodeEngine::new(Runtime::new(&dir).expect("runtime"));
+
+    // --- greedy losslessness: every method == AR at T=0 ----------------
+    let prompt = "Q: 21+17=?\nA: ";
+    let ar = engine
+        .generate(prompt, &params(Method::Ar, false, 0.0))
+        .expect("ar");
+    assert!(!ar.tokens.is_empty());
+    for method in [
+        Method::Sps,
+        Method::EagleChain,
+        Method::EagleTree,
+        Method::Medusa,
+        Method::Pld,
+        Method::Lookahead,
+    ] {
+        let r = engine
+            .generate(prompt, &params(method, false, 0.0))
+            .unwrap_or_else(|e| panic!("{method:?}: {e:#}"));
+        assert_eq!(
+            r.tokens, ar.tokens,
+            "{method:?} diverged from greedy AR: {:?} vs {:?}",
+            r.text, ar.text
+        );
+    }
+
+    // --- MARS at theta -> 1 is strict ----------------------------------
+    let strict = engine
+        .generate(prompt, &params(Method::EagleTree, false, 0.0))
+        .expect("strict");
+    let mut p = params(Method::EagleTree, true, 0.0);
+    p.theta = 0.9999;
+    let mars = engine.generate(prompt, &p).expect("mars");
+    assert_eq!(strict.tokens, mars.tokens);
+    assert_eq!(mars.snapshot.relaxed_accepts, 0.0);
+
+    // --- MARS never reduces tau ----------------------------------------
+    let mut tau_strict = 0.0;
+    let mut tau_mars = 0.0;
+    for (i, ex) in mars::datasets::dataset(mars::datasets::Task::Mt, 4, 3)
+        .iter()
+        .enumerate()
+    {
+        let mut p = params(Method::EagleTree, false, 1.0);
+        p.max_new = 48;
+        p.seed = i as u64;
+        tau_strict += engine.generate(&ex.prompt, &p).expect("s").tau();
+        p.mars = true;
+        tau_mars += engine.generate(&ex.prompt, &p).expect("m").tau();
+    }
+    assert!(
+        tau_mars >= tau_strict * 0.98,
+        "tau(MARS)={tau_mars} < tau(strict)={tau_strict}"
+    );
+
+    // --- sampling reproducibility --------------------------------------
+    let p = params(Method::Sps, true, 1.0);
+    let a = engine.generate("Q: 3+4=?\nA: ", &p).expect("a");
+    let b = engine.generate("Q: 3+4=?\nA: ", &p).expect("b");
+    assert_eq!(a.tokens, b.tokens);
+
+    // --- extract_every must not change tokens --------------------------
+    let mut p = params(Method::EagleTree, true, 1.0);
+    p.max_new = 32;
+    let a = engine.generate("Q: 12+7=?\nA: ", &p).expect("a");
+    p.extract_every = 4;
+    let b = engine.generate("Q: 12+7=?\nA: ", &p).expect("b");
+    assert_eq!(a.tokens, b.tokens, "blind rounds changed the output");
+
+    // --- probe entries flow to host ------------------------------------
+    let mut p = params(Method::EagleTree, true, 1.0);
+    p.probe = true;
+    p.max_new = 40;
+    let r = engine
+        .generate("Translate: aol ypcly\nOutput: ", &p)
+        .expect("probe run");
+    let probe = r.probe.expect("probe dump");
+    assert!(!probe.entries.is_empty());
+    for e in &probe.entries {
+        assert!(e.flag <= 2);
+        assert!(e.z1 >= e.z2, "top-1 logit below top-2: {e:?}");
+    }
+
+    // --- limits + errors ------------------------------------------------
+    let mut p = params(Method::EagleTree, true, 1.0);
+    p.max_new = 64;
+    let r = engine
+        .generate("Text: The crew painted a red barn at noon.\nSummary: ", &p)
+        .expect("limit");
+    assert!(r.tokens.len() <= 64);
+    assert!(engine.generate("", &params(Method::Ar, false, 0.0)).is_err());
+
+    // --- hostloop runtime must be output-identical ----------------------
+    let p = params(Method::EagleTree, true, 1.0);
+    let resident = engine.generate("Q: 8+13=?\nA: ", &p).expect("res");
+    drop(engine);
+    let rt = Runtime::new(&dir).expect("rt");
+    let mut hl = DecodeEngine::new(rt);
+    hl.hostloop = true;
+    let host = hl.generate("Q: 8+13=?\nA: ", &p).expect("host");
+    assert_eq!(resident.tokens, host.tokens);
+}
+
+#[test]
+fn router_end_to_end_over_tcp() {
+    use mars::coordinator::router::{Router, RouterPolicy};
+    use mars::coordinator::server;
+    use std::sync::Arc;
+    let Some(dir) = artifacts_dir() else { return };
+    let router = Arc::new(
+        Router::start(&dir, 1, 2, false, RouterPolicy::RoundRobin)
+            .expect("router"),
+    );
+    let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+    let addr = handle.addr.to_string();
+    let pong =
+        server::client_roundtrip(&addr, r#"{"cmd": "ping"}"#).expect("ping");
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+    let resp = server::client_roundtrip(
+        &addr,
+        "{\"prompt\": \"Q: 2+2=?\\nA: \", \"method\": \"eagle_tree\", \
+         \"mars\": true, \"max_new\": 12, \"seed\": 4}",
+    )
+    .expect("gen");
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert!(resp.get("tokens").and_then(|t| t.as_usize()).unwrap() > 0);
+    let metrics =
+        server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#).expect("m");
+    assert_eq!(
+        metrics.get("requests_ok").and_then(|v| v.as_usize()),
+        Some(1)
+    );
+}

@@ -1,0 +1,255 @@
+//! Hand-rolled property tests (proptest is not in the offline registry):
+//! seeded randomized checks of the verification rule, the host drafters,
+//! the eval metrics and the coordinator invariants. 200+ random cases per
+//! property, deterministic by seed.
+
+use mars::datasets::{dataset, Task};
+use mars::eval;
+use mars::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+use mars::util::json::Value;
+use mars::util::prng::Rng;
+
+/// Reference implementation of the MARS accept rule (paper Algorithm 1 +
+/// the positive-domain guard), mirrored from the device kernel for
+/// host-side property checking.
+fn mars_accept(
+    z1: f32,
+    z2: f32,
+    v1: u32,
+    v2: u32,
+    draft: u32,
+    theta: f32,
+    mars_on: bool,
+) -> u8 {
+    if draft == v1 {
+        return 1; // exact
+    }
+    if mars_on && draft == v2 && z1 > 0.0 && z2 > 0.0 && z2 / z1 > theta {
+        return 2; // relaxed
+    }
+    0
+}
+
+#[test]
+fn prop_mars_superset_of_strict() {
+    // anything strict accepts, MARS accepts too (flag may upgrade only
+    // from 0 to 2, never 1 to 0)
+    let mut rng = Rng::new(101);
+    for _ in 0..2000 {
+        let z1 = (rng.f64() * 20.0 - 4.0) as f32;
+        let z2 = z1 - (rng.f64() * 3.0) as f32;
+        let v1 = rng.below(128) as u32;
+        let v2 = rng.below(128) as u32;
+        let other = rng.below(128) as u32;
+        let draft = *rng.pick(&[v1, v2, other]);
+        let theta = rng.f64() as f32;
+        let strict = mars_accept(z1, z2, v1, v2, draft, theta, false);
+        let relaxed = mars_accept(z1, z2, v1, v2, draft, theta, true);
+        assert!(relaxed >= strict || (strict == 1 && relaxed == 1));
+        if strict == 1 {
+            assert_eq!(relaxed, 1);
+        }
+    }
+}
+
+#[test]
+fn prop_mars_monotone_in_theta() {
+    let mut rng = Rng::new(102);
+    for _ in 0..2000 {
+        let z1 = (rng.f64() * 10.0) as f32 + 0.1;
+        let z2 = z1 * (rng.f64() as f32);
+        let v2 = rng.below(128) as u32;
+        let v1 = 127 - v2;
+        let draft = v2;
+        let lo = (rng.f64() * 0.5) as f32;
+        let hi = lo + (rng.f64() * 0.5) as f32;
+        let a_lo = mars_accept(z1, z2, v1, v2, draft, lo, true);
+        let a_hi = mars_accept(z1, z2, v1, v2, draft, hi, true);
+        // accepting at the higher threshold implies accepting at the lower
+        if a_hi == 2 {
+            assert_eq!(a_lo, 2, "z1={z1} z2={z2} lo={lo} hi={hi}");
+        }
+    }
+}
+
+#[test]
+fn prop_mars_never_relaxes_nonpositive_logits() {
+    let mut rng = Rng::new(103);
+    for _ in 0..2000 {
+        let z1 = -(rng.f64() as f32) * 5.0;
+        let z2 = z1 - 0.01;
+        let v2 = 2 + rng.below(126) as u32; // distinct from v1 = 1
+        assert_eq!(
+            mars_accept(z1, z2, 1, v2, v2, 0.0, true),
+            0,
+            "relaxed on negative logits"
+        );
+    }
+}
+
+#[test]
+fn prop_pld_drafts_are_substrings_of_history() {
+    let mut rng = Rng::new(104);
+    for _ in 0..300 {
+        let len = 10 + rng.usize_below(200);
+        let vocab = 2 + rng.below(12) as u32; // small vocab => repeats
+        let history: Vec<u32> =
+            (0..len).map(|_| rng.below(vocab as u64) as u32).collect();
+        let mut d = PldDrafter::new(2, 4);
+        let k = 1 + rng.usize_below(8);
+        let draft = d.draft(&history, k);
+        assert!(draft.len() <= k);
+        if !draft.is_empty() {
+            // the draft must appear verbatim somewhere in the history
+            let found = history
+                .windows(draft.len())
+                .any(|w| w == draft.as_slice());
+            assert!(found, "draft {draft:?} not in history");
+        }
+    }
+}
+
+#[test]
+fn prop_lookahead_drafts_come_from_pool_continuations() {
+    let mut rng = Rng::new(105);
+    for _ in 0..200 {
+        let len = 20 + rng.usize_below(100);
+        let history: Vec<u32> =
+            (0..len).map(|_| rng.below(8) as u32).collect();
+        let mut d = LookaheadDrafter::new(3, 6, 1024);
+        d.observe(&history);
+        let draft = d.draft(&history, 6);
+        if !draft.is_empty() {
+            let mut joined = history[history.len() - 3..].to_vec();
+            joined.extend(&draft);
+            let found = history
+                .windows(joined.len().min(history.len()))
+                .any(|w| w == &joined[..w.len()]);
+            assert!(found, "pool continuation not grounded in history");
+        }
+    }
+}
+
+#[test]
+fn prop_rouge_bounds_and_identity() {
+    let mut rng = Rng::new(106);
+    let words = ["aa", "bb", "cc", "dd", "ee"];
+    for _ in 0..500 {
+        let n = 1 + rng.usize_below(12);
+        let a: Vec<&str> = (0..n).map(|_| *rng.pick(&words)).collect();
+        let m = 1 + rng.usize_below(12);
+        let b: Vec<&str> = (0..m).map(|_| *rng.pick(&words)).collect();
+        let sa = a.join(" ");
+        let sb = b.join(" ");
+        let f = eval::rouge_l(&sa, &sb);
+        assert!((0.0..=1.0).contains(&f));
+        assert!((eval::rouge_l(&sa, &sa) - 1.0).abs() < 1e-12);
+        // symmetry of F1
+        assert!((f - eval::rouge_l(&sb, &sa)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_chrf_bounds() {
+    let mut rng = Rng::new(107);
+    for _ in 0..300 {
+        let n = 1 + rng.usize_below(30);
+        let a: String = (0..n)
+            .map(|_| (b'a' + rng.below(6) as u8) as char)
+            .collect();
+        let b: String = (0..n)
+            .map(|_| (b'a' + rng.below(6) as u8) as char)
+            .collect();
+        let c = eval::chrf(&a, &b);
+        assert!((0.0..=100.0 + 1e-9).contains(&c), "{c}");
+        assert!((eval::chrf(&a, &a) - 100.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_bleu_perfect_geq_noisy() {
+    let mut rng = Rng::new(108);
+    let words = ["the", "cat", "sat", "on", "mat", "dog", "ran"];
+    for _ in 0..200 {
+        let n = 5 + rng.usize_below(10);
+        let r: Vec<&str> = (0..n).map(|_| *rng.pick(&words)).collect();
+        let reference = r.join(" ");
+        // corrupt one word
+        let mut c = r.clone();
+        let i = rng.usize_below(c.len());
+        c[i] = if c[i] == "the" { "dog" } else { "the" };
+        let candidate = c.join(" ");
+        let perfect =
+            eval::corpus_bleu(&[(reference.clone(), reference.clone())]);
+        let noisy = eval::corpus_bleu(&[(candidate, reference)]);
+        assert!(perfect >= noisy - 1e-9);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(109);
+    fn gen(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bool(0.5)),
+            2 => Value::Num((rng.f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let n = rng.usize_below(12);
+                Value::Str(
+                    (0..n)
+                        .map(|_| (0x20 + rng.below(95) as u8) as char)
+                        .collect(),
+                )
+            }
+            4 => Value::Arr(
+                (0..rng.usize_below(4)).map(|_| gen(rng, depth + 1)).collect(),
+            ),
+            _ => {
+                let mut o = Value::obj();
+                for i in 0..rng.usize_below(4) {
+                    o.set(&format!("k{i}"), gen(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+    for _ in 0..500 {
+        let v = gen(&mut rng, 0);
+        let text = v.to_string_json();
+        let back = Value::parse(&text).expect("roundtrip parse");
+        assert_eq!(v, back, "{text}");
+    }
+}
+
+#[test]
+fn prop_datasets_stable_across_calls() {
+    for task in Task::all() {
+        for seed in [0u64, 1, 99] {
+            let a = dataset(*task, 8, seed);
+            let b = dataset(*task, 8, seed);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.reference, y.reference);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_judge_reference_dominates_corruption() {
+    let mut rng = Rng::new(110);
+    for ex in dataset(Task::Chat, 30, 5) {
+        let good = eval::judge_score(&ex, &ex.reference);
+        // corrupt: drop keywords
+        let corrupted: String = ex
+            .reference
+            .split_whitespace()
+            .filter(|w| !ex.keywords.iter().any(|k| w.contains(k.as_str())))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let bad = eval::judge_score(&ex, &corrupted);
+        assert!(good >= bad, "{good} < {bad} for {:?}", ex.reference);
+        let _ = rng.next_u64();
+    }
+}
