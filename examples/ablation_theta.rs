@@ -9,6 +9,7 @@ use mars::bench::BenchCtx;
 use mars::datasets::Task;
 use mars::engine::{DecodeEngine, GenParams, Method};
 use mars::runtime::{Artifacts, Runtime};
+use mars::verify::VerifyPolicy;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args()
@@ -34,8 +35,7 @@ fn main() -> anyhow::Result<()> {
     for theta in [0.80f32, 0.84, 0.88, 0.90, 0.92, 0.96, 0.995] {
         let p = GenParams {
             method: Method::EagleTree,
-            mars: true,
-            theta,
+            policy: VerifyPolicy::Mars { theta },
             temperature: 1.0,
             max_new: 96,
             ..GenParams::default()

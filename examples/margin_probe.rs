@@ -10,6 +10,7 @@
 use mars::datasets::{dataset, Task};
 use mars::engine::{DecodeEngine, GenParams, Method};
 use mars::runtime::{Artifacts, Runtime};
+use mars::verify::{AcceptFlag, VerifyPolicy};
 
 fn main() -> anyhow::Result<()> {
     let dir = Artifacts::default_dir();
@@ -24,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         for (j, ex) in dataset(task, 4, 99).iter().enumerate() {
             let p = GenParams {
                 method: Method::EagleTree,
-                mars: true,
+                policy: VerifyPolicy::Mars { theta: 0.9 },
                 probe: true,
                 temperature: 1.0,
                 max_new: 64,
@@ -51,12 +52,12 @@ fn main() -> anyhow::Result<()> {
     let mut relaxed_total = 0;
     for e in &entries {
         let r = if e.z1 > 0.0 && e.z2 > 0.0 { e.z2 / e.z1 } else { 0.0 };
-        if e.flag == 2 {
+        if e.flag == AcceptFlag::Relaxed {
             relaxed_total += 1;
         }
         if r > 0.9 {
             in_zone += 1;
-            if e.flag == 2 {
+            if e.flag == AcceptFlag::Relaxed {
                 relaxed_in_zone += 1;
             }
         }
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
 
     // metric decoupling (Fig. 1c): logit ratio high, prob ratio anywhere
     let mut bands = [0usize; 5];
-    for e in entries.iter().filter(|e| e.flag == 2) {
+    for e in entries.iter().filter(|e| e.flag == AcceptFlag::Relaxed) {
         let pr = (e.z2 - e.z1).exp();
         let b = ((pr * 5.0) as usize).min(4);
         bands[b] += 1;

@@ -7,6 +7,7 @@
 
 use mars::engine::{DecodeEngine, GenParams, Method};
 use mars::runtime::{Artifacts, Runtime};
+use mars::verify::VerifyPolicy;
 
 fn main() -> anyhow::Result<()> {
     let dir = Artifacts::default_dir();
@@ -44,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         prompt,
         &GenParams {
             method: Method::EagleTree,
-            mars: false,
+            policy: VerifyPolicy::Strict,
             temperature: 1.0,
             max_new: 32,
             seed: 1,
@@ -63,8 +64,7 @@ fn main() -> anyhow::Result<()> {
         prompt,
         &GenParams {
             method: Method::EagleTree,
-            mars: true,
-            theta: 0.9,
+            policy: VerifyPolicy::Mars { theta: 0.9 },
             temperature: 1.0,
             max_new: 32,
             seed: 1,

@@ -2,11 +2,13 @@
 
 `top2` — blocked top-2 logit reduction over the vocab axis (the paper's
 bandwidth-bound verification hot spot).
-`mars_verify` — the margin-aware accept scan of Algorithm 1.
+`mars_verify` — the policy-driven accept scan of Algorithm 1, generalized
+over the `(policy_id, p0, p1)` verification-policy slot triple
+(`verify_pallas`; `mars_verify_pallas` is the legacy theta/mars_on shim).
 `ref` — pure-jnp reference implementations used by pytest and, when
 `MARS_USE_PALLAS=0`, by the lowered rounds themselves (A/B artifact).
 """
 
 from .top2 import top2_pallas  # noqa: F401
-from .mars_verify import mars_verify_pallas  # noqa: F401
+from .mars_verify import mars_verify_pallas, verify_pallas  # noqa: F401
 from . import ref  # noqa: F401

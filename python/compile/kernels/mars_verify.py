@@ -1,11 +1,22 @@
-"""Pallas kernel: the MARS margin-aware accept scan (paper Algorithm 1).
+"""Pallas kernel: the policy-driven accept scan (paper Algorithm 1,
+generalized over the verification-policy slot triple).
 
 Per verified position i (a chain position or a tree path step):
 
     exact match    draft_i == tstar_i                       -> accept (1)
-    relaxation     draft_i == i2_i  and  r_i > theta
-                   and z1_i > 0 and z2_i > 0 and mars_on    -> accept (2)
+    relaxation     draft_i == i2_i and the policy gate
+                   passes at position i                     -> accept (2)
     otherwise      reject (0), scan stops at first reject
+
+The policy gate is selected by `(policy_id, p0, p1)` — the same triple the
+rust `verify::VerifyPolicy` encodes (state_spec.POLICY_*):
+
+    strict  (0): never relax
+    mars    (1): z1 > 0 and z2 > 0 and z2/z1 > p0           (p0 = theta)
+    topk    (2): p0 >= 2 and z1 > 0 and z2 > 0 and
+                 z2/z1 > 1 - p1                             (p0 = k, p1 = eps;
+                 the pipeline materializes top-2 only, so k clamps to 2)
+    entropy (3): z1 - z2 < p0                               (p0 = h_max, nats)
 
 `tstar` is the target's chosen token at that position (argmax when greedy,
 a temperature sample otherwise) — precomputed by the round program so the
@@ -20,6 +31,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+POLICY_STRICT = 0.0
+POLICY_MARS = 1.0
+POLICY_TOPK = 2.0
+POLICY_ENTROPY = 3.0
+
 
 def _verify_kernel(z1_ref, z2_ref, i2_ref, tstar_ref, draft_ref, cfg_ref,
                    flags_ref, r_ref, m_ref, *, t_max):
@@ -28,20 +44,24 @@ def _verify_kernel(z1_ref, z2_ref, i2_ref, tstar_ref, draft_ref, cfg_ref,
     i2 = i2_ref[...]
     tstar = tstar_ref[...]
     draft = draft_ref[...]
-    theta = cfg_ref[0]
-    mars_on = cfg_ref[1]
-    k = cfg_ref[2].astype(jnp.int32)          # number of live positions
+    policy_id = cfg_ref[0]
+    p0 = cfg_ref[1]
+    p1 = cfg_ref[2]
+    k = cfg_ref[3].astype(jnp.int32)          # number of live positions
 
     # margin ratio r = z2/z1, defined on the positive-dominant domain
     safe = (z1 > 0.0) & (z2 > 0.0)
     r = jnp.where(safe, z2 / jnp.maximum(z1, 1e-9), 0.0)
 
     exact = draft == tstar
+    gate_mars = (policy_id == POLICY_MARS) & safe & (r > p0)
+    gate_topk = (
+        (policy_id == POLICY_TOPK) & (p0 >= 2.0) & safe & (r > 1.0 - p1)
+    )
+    gate_ent = (policy_id == POLICY_ENTROPY) & ((z1 - z2) < p0)
     relaxed = (
-        (mars_on > 0.5)
+        (gate_mars | gate_topk | gate_ent)
         & (draft == i2)
-        & safe
-        & (r > theta)
         & jnp.logical_not(exact)
     )
     ok = exact | relaxed
@@ -59,17 +79,18 @@ def _verify_kernel(z1_ref, z2_ref, i2_ref, tstar_ref, draft_ref, cfg_ref,
     m_ref[0] = jnp.sum(prefix).astype(jnp.float32)
 
 
-def mars_verify_pallas(z1, z2, i2, tstar, draft, theta, mars_on, k):
-    """Run the MARS accept scan. All inputs are 1-D of length T (i2, tstar,
-    draft int32; z1, z2 f32); theta/mars_on/k are scalars.
+def verify_pallas(z1, z2, i2, tstar, draft, policy_id, p0, p1, k):
+    """Run the policy accept scan. All inputs are 1-D of length T (i2,
+    tstar, draft int32; z1, z2 f32); policy_id/p0/p1/k are scalars.
 
     Returns (flags f32 [T] in {0,1,2}, r f32 [T], m f32 scalar).
     """
     t = z1.shape[0]
     cfg = jnp.stack(
         [
-            jnp.asarray(theta, jnp.float32),
-            jnp.asarray(mars_on, jnp.float32),
+            jnp.asarray(policy_id, jnp.float32),
+            jnp.asarray(p0, jnp.float32),
+            jnp.asarray(p1, jnp.float32),
             jnp.asarray(k, jnp.float32),
         ]
     )
@@ -85,3 +106,11 @@ def mars_verify_pallas(z1, z2, i2, tstar, draft, theta, mars_on, k):
     )(z1, z2, i2.astype(jnp.int32), tstar.astype(jnp.int32),
       draft.astype(jnp.int32), cfg)
     return flags, r, m[0]
+
+
+def mars_verify_pallas(z1, z2, i2, tstar, draft, theta, mars_on, k):
+    """Legacy entrypoint: the pre-policy (theta, mars_on) signature,
+    mapped onto the strict/mars policy ids."""
+    on = jnp.asarray(mars_on, jnp.float32) > 0.5
+    policy_id = jnp.where(on, POLICY_MARS, POLICY_STRICT)
+    return verify_pallas(z1, z2, i2, tstar, draft, policy_id, theta, 0.0, k)

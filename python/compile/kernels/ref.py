@@ -1,12 +1,19 @@
 """Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
 
-pytest checks `top2_pallas` / `mars_verify_pallas` against these across
-shape/θ sweeps; the lowered rounds can also be built against the oracle
-(MARS_USE_PALLAS=0) for an A/B artifact.
+pytest checks `top2_pallas` / `verify_pallas` against these across
+shape/policy sweeps; the lowered rounds can also be built against the
+oracle (MARS_USE_PALLAS=0) for an A/B artifact.
 """
 
 import jax
 import jax.numpy as jnp
+
+from .mars_verify import (
+    POLICY_ENTROPY,
+    POLICY_MARS,
+    POLICY_STRICT,
+    POLICY_TOPK,
+)
 
 
 def top2_ref(logits):
@@ -20,7 +27,7 @@ def top2_ref(logits):
     )
 
 
-def mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k):
+def verify_ref(z1, z2, i2, tstar, draft, policy_id, p0, p1, k):
     """Reference accept scan — mirrors mars_verify.py exactly."""
     t = z1.shape[0]
     safe = (z1 > 0.0) & (z2 > 0.0)
@@ -28,13 +35,19 @@ def mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k):
     i2 = i2.astype(jnp.int32)
     tstar = tstar.astype(jnp.int32)
     draft = draft.astype(jnp.int32)
+    policy_id = jnp.asarray(policy_id, jnp.float32)
+    p0 = jnp.asarray(p0, jnp.float32)
+    p1 = jnp.asarray(p1, jnp.float32)
 
     exact = draft == tstar
+    gate_mars = (policy_id == POLICY_MARS) & safe & (r > p0)
+    gate_topk = (
+        (policy_id == POLICY_TOPK) & (p0 >= 2.0) & safe & (r > 1.0 - p1)
+    )
+    gate_ent = (policy_id == POLICY_ENTROPY) & ((z1 - z2) < p0)
     relaxed = (
-        (jnp.asarray(mars_on, jnp.float32) > 0.5)
+        (gate_mars | gate_topk | gate_ent)
         & (draft == i2)
-        & safe
-        & (r > jnp.asarray(theta, jnp.float32))
         & jnp.logical_not(exact)
     )
     ok = (exact | relaxed) & (jnp.arange(t) < jnp.asarray(k, jnp.int32))
@@ -44,3 +57,10 @@ def mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k):
     )
     m = jnp.sum(prefix).astype(jnp.float32)
     return flags, r, m
+
+
+def mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k):
+    """Legacy entrypoint: (theta, mars_on) mapped onto policy ids."""
+    on = jnp.asarray(mars_on, jnp.float32) > 0.5
+    policy_id = jnp.where(on, POLICY_MARS, POLICY_STRICT)
+    return verify_ref(z1, z2, i2, tstar, draft, policy_id, theta, 0.0, k)

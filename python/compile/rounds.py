@@ -6,8 +6,10 @@ Every function has the signature
 
 over the flat f32 state of state_spec.py, and is lowered by aot.py into a
 standalone HLO-text artifact that the rust coordinator drives in a loop.
-Runtime knobs (temperature, θ, K, beam, MARS on/off, greedy) are *state
-scalars*, so a single artifact covers the paper's whole ablation grid.
+Runtime knobs (temperature, K, beam, greedy, and the verification-policy
+triple (policy_id, p0, p1) — see state_spec.py POLICY_*) are *state
+scalars*, so a single artifact covers the paper's whole ablation grid and
+every verification policy.
 
 Methods:
     prefill           build the initial state from a prompt
@@ -18,7 +20,7 @@ Methods:
                       beam-built draft tree (chain == beam 1); tree verify
     medusa_round      Medusa heads with a static candidate tree
     verify_ext_round  verify host-provided draft tokens (PLD / Lookahead);
-                      this is the pallas mars_verify kernel path
+                      this is the pallas verify-kernel path
     extract           state -> scalars ++ out-ring (cheap per-round pull)
     extract_probe     state -> scalars ++ probe-ring (figures 1 & 4)
 
@@ -36,7 +38,7 @@ import numpy as np
 
 from . import model as M
 from . import state_spec as S
-from .kernels import mars_verify_pallas, top2_pallas, ref
+from .kernels import verify_pallas, top2_pallas, ref
 
 USE_PALLAS = os.environ.get("MARS_USE_PALLAS", "1") != "0"
 
@@ -91,6 +93,34 @@ def _sample_rows(v: S.View, dists):
     det = jnp.argmax(dists, axis=-1)
     pick = jnp.where(v.get("greedy") > 0.5, det, stoch)
     return pick.astype(jnp.int32)
+
+
+def _relax_gate(v, z1, z2):
+    """Policy relaxation gate given the top-2 logits at a position.
+
+    Elementwise over arrays (or scalars). The gate decides whether the
+    target's *top-2 token* may be accepted without an exact match; the
+    token-identity check (draft == i2) is applied by the caller. Mirrors
+    rust/src/verify/mod.rs and kernels/mars_verify.py:
+
+        strict  (0): never
+        mars    (1): z1>0 and z2>0 and z2/z1 > p0
+        topk    (2): p0>=2 and z1>0 and z2>0 and z2/z1 > 1-p1
+                     (the device pipeline materializes top-2 only, so k is
+                     clamped to 2 on device; k>2 is host-reference-only)
+        entropy (3): z1-z2 < p0 — the top-2 entropy H(sigma(z1-z2)) is
+                     strictly decreasing in the logit gap, so an entropy
+                     floor is a gap ceiling in nats
+    """
+    pid = v.get("policy_id")
+    p0 = v.get("p0")
+    p1 = v.get("p1")
+    safe = (z1 > 0.0) & (z2 > 0.0)
+    r = jnp.where(safe, z2 / jnp.maximum(z1, 1e-9), 0.0)
+    mars = (pid == S.POLICY_MARS) & safe & (r > p0)
+    topk = (pid == S.POLICY_TOPK) & (p0 >= 2.0) & safe & (r > 1.0 - p1)
+    ent = (pid == S.POLICY_ENTROPY) & ((z1 - z2) < p0)
+    return mars | topk | ent
 
 
 def _causal_mask(slots, limit):
@@ -260,8 +290,8 @@ def prefill(prompt, cfg, *t_e_s_weights):
     s_params = M.unflatten_like(_SPS_TREE, list(t_e_s_weights[nt + ne:]))
 
     v = S.View(jnp.zeros((S.STATE_LEN,), jnp.float32))
-    for name in ("temp", "theta", "mars_on", "kdraft", "max_new", "eos",
-                 "beam", "branch", "probe_on", "greedy", "seed"):
+    for name in ("temp", "p0", "p1", "policy_id", "kdraft", "max_new",
+                 "eos", "beam", "branch", "probe_on", "greedy", "seed"):
         v.set(name, cfg[S.CFG[name]])
     plen = cfg[S.CFG["prompt_len"]].astype(jnp.int32)
     plen = jnp.clip(plen, 1, M.P_MAX)
@@ -309,9 +339,10 @@ def ar_step(state, *t_weights):
 def sps_round(state, *weights):
     """Standard speculative sampling round (chain, independent draft LM).
 
-    Exact Leviathan rejection sampling when mars_on == 0; with MARS the
-    paper's relaxation is applied only on a rejection (accept the draft if
-    it is the target's top-2 and r > θ on the positive domain).
+    Exact Leviathan rejection sampling under the strict policy; relaxed
+    policies apply their gate only on a rejection (accept the draft if it
+    is the target's top-2 and the policy gate passes — e.g. MARS: r > θ on
+    the positive domain).
     """
     nt = len(_TARGET_NAMES)
     t_params = M.unflatten_like(_TARGET_TREE, list(weights[:nt]))
@@ -373,13 +404,9 @@ def sps_round(state, *weights):
     strict_ok = jnp.where(
         greedy, (d_toks == i1), u < jnp.minimum(ratio, 1.0)
     )
-    safe = (z1 > 0.0) & (z2 > 0.0)
-    r = jnp.where(safe, z2 / jnp.maximum(z1, 1e-9), 0.0)
     relaxed_ok = (
-        (v.get("mars_on") > 0.5)
+        _relax_gate(v, z1, z2)
         & (d_toks == i2)
-        & safe
-        & (r > v.get("theta"))
         & jnp.logical_not(strict_ok)
     )
     ok = (strict_ok | relaxed_ok) & (jnp.arange(S.K_MAX) < k_rt)
@@ -429,8 +456,8 @@ def sps_round(state, *weights):
 
 def _tree_dists_and_walk(v, dists, node_tok, node_parent, node_level,
                          node_alive, depth_rt):
-    """Walk the verified tree from the root (node 0), applying the MARS
-    margin-aware rule at every level. Node layout: B_MAX root-level slots
+    """Walk the verified tree from the root (node 0), applying the
+    configured verification policy at every level. Node layout: B_MAX root-level slots
     (only 0 live), then levels at stride B_MAX.
 
     dists [NODES_TOT, V]: row i = target dist AT node i (its children are
@@ -439,8 +466,6 @@ def _tree_dists_and_walk(v, dists, node_tok, node_parent, node_level,
     ntot = dists.shape[0]
     z1, z2, i1, i2 = _TOP2(dists)
     tstar = _sample_rows(v, dists)
-    mars_on = v.get("mars_on") > 0.5
-    theta = v.get("theta")
     node_idx = jnp.arange(ntot)
 
     def body(l, carry):
@@ -455,11 +480,9 @@ def _tree_dists_and_walk(v, dists, node_tok, node_parent, node_level,
         any_exact = jnp.any(exact_hits)
         exact_idx = jnp.argmax(exact_hits)
 
-        safe = (z1[cur] > 0.0) & (z2[cur] > 0.0)
-        r = jnp.where(safe, z2[cur] / jnp.maximum(z1[cur], 1e-9), 0.0)
         relax_hits = is_child & (node_tok == i2[cur])
         any_relax = (
-            mars_on & safe & (r > theta) & jnp.any(relax_hits)
+            _relax_gate(v, z1[cur], z2[cur]) & jnp.any(relax_hits)
             & jnp.logical_not(any_exact)
         )
         relax_idx = jnp.argmax(relax_hits)
@@ -535,7 +558,7 @@ def _tree_commit(v, t_params, node_tok, m, path, t_fin, flags, pz1, pz2,
 
 
 def eagle_tree_round(state, *weights):
-    """EAGLE-style drafter + beam draft tree + margin-aware tree verify.
+    """EAGLE-style drafter + beam draft tree + policy tree verify.
 
     beam == 1, branch == 1 reproduces EAGLE-chain; larger beams are the
     static-shape analog of EAGLE-2/3 dynamic trees (DESIGN.md §4).
@@ -794,7 +817,7 @@ def verify_ext_round(state, ext, *t_weights):
 
     ext: f32 [K_MAX + 1] = [ext_len, tok_0 .. tok_{K_MAX-1}].
     ext_len == 0 degenerates to one AR step (m = 0, emit target sample).
-    This path runs the pallas `mars_verify` kernel end to end.
+    This path runs the pallas verify kernel end to end.
     """
     t_params = M.unflatten_like(_TARGET_TREE, list(t_weights))
     v = S.View(state)
@@ -813,14 +836,14 @@ def verify_ext_round(state, ext, *t_weights):
     tstar = _sample_rows(v, dists)
 
     if USE_PALLAS:
-        flags, r, mf = mars_verify_pallas(
-            z1, z2, i2, tstar, d_toks, v.get("theta"), v.get("mars_on"),
-            k_rt,
+        flags, r, mf = verify_pallas(
+            z1, z2, i2, tstar, d_toks, v.get("policy_id"), v.get("p0"),
+            v.get("p1"), k_rt,
         )
     else:
-        flags, r, mf = ref.mars_verify_ref(
-            z1, z2, i2, tstar, d_toks, v.get("theta"), v.get("mars_on"),
-            k_rt,
+        flags, r, mf = ref.verify_ref(
+            z1, z2, i2, tstar, d_toks, v.get("policy_id"), v.get("p0"),
+            v.get("p1"), k_rt,
         )
     m = mf.astype(jnp.int32)
 

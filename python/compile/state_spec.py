@@ -34,6 +34,19 @@ N_CFG = 16                 # prefill config vector length
 
 # scalar slot indices ---------------------------------------------------
 
+# Verification-policy slot triple (mirrored by rust/src/verify/mod.rs):
+#   policy_id  0 = strict, 1 = mars, 2 = topk, 3 = entropy
+#   p0, p1     per-policy parameters:
+#                mars    p0 = theta (logit-ratio threshold)
+#                topk    p0 = k (device clamps to 2), p1 = eps
+#                entropy p0 = h_max (top-2 logit-gap ceiling, nats)
+# One lowered artifact covers every policy — adding a policy is a new id,
+# not a new HLO program.
+POLICY_STRICT = 0.0
+POLICY_MARS = 1.0
+POLICY_TOPK = 2.0
+POLICY_ENTROPY = 3.0
+
 SCALARS = {
     "pos": 0,             # target-cache logical length (committed tokens)
     "eagle_pos": 1,       # EAGLE drafter processed length
@@ -42,8 +55,8 @@ SCALARS = {
     "finished": 4,        # 0/1
     "rng": 5,             # RNG counter (folded with seed)
     "temp": 6,            # sampling temperature (0 => greedy)
-    "theta": 7,           # MARS logit-ratio threshold
-    "mars_on": 8,         # 0/1 — margin-aware relaxation enabled
+    "p0": 7,              # verification-policy parameter 0
+    "policy_id": 8,       # verification policy id (see POLICY_*)
     "kdraft": 9,          # runtime chain draft length K <= K_MAX
     "max_new": 10,        # generation budget
     "eos": 11,            # EOS token id
@@ -56,21 +69,22 @@ SCALARS = {
     "target_calls": 18,   # target forward blocks
     "draft_steps": 19,    # drafter forward blocks
     "exact_accepts": 20,
-    "relaxed_accepts": 21,  # MARS tie-breaks taken
+    "relaxed_accepts": 21,  # policy relaxations taken (flag == 2)
     "rejects": 22,
     "bonus": 23,          # all-accept bonus tokens
     "prompt_len": 24,
     "last_accept": 25,    # accepted length of the last round
     "greedy": 26,         # 0/1 (temp == 0)
     "seed": 27,
+    "p1": 28,             # verification-policy parameter 1
 }
 
 # prefill cfg vector indices -------------------------------------------
 
 CFG = {
-    "temp": 0, "theta": 1, "mars_on": 2, "kdraft": 3, "max_new": 4,
+    "temp": 0, "p0": 1, "policy_id": 2, "kdraft": 3, "max_new": 4,
     "eos": 5, "beam": 6, "branch": 7, "probe_on": 8, "greedy": 9,
-    "seed": 10, "prompt_len": 11,
+    "seed": 10, "prompt_len": 11, "p1": 12,
 }
 
 # ------------------------------------------------------------- layout ------

@@ -2,16 +2,41 @@
 
 Hypothesis sweeps shapes, magnitudes and thresholds; seeded grids cover
 the edge cases the paper's Algorithm 1 depends on (ties, negative logits,
-theta boundaries).
+policy boundaries). Hypothesis is optional: when the container lacks it,
+the property sweeps self-skip and the seeded grids still run.
 """
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - offline container without dep
+    def _skip_deco(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
 
-from compile.kernels import top2_pallas, mars_verify_pallas, ref
+    given = settings = _skip_deco
+
+    class st:  # noqa: N801 - stand-in namespace, args unused when skipped
+        integers = staticmethod(lambda *a, **k: None)
+        floats = staticmethod(lambda *a, **k: None)
+        sampled_from = staticmethod(lambda *a, **k: None)
+
+from compile.kernels import (
+    mars_verify_pallas,
+    ref,
+    top2_pallas,
+    verify_pallas,
+)
+from compile.kernels.mars_verify import (
+    POLICY_ENTROPY,
+    POLICY_MARS,
+    POLICY_STRICT,
+    POLICY_TOPK,
+)
 
 RNG = np.random.default_rng(1234)
 
@@ -82,7 +107,8 @@ def test_top2_hypothesis(t, scale, seed):
 # ---------------------------------------------------------------- verify ---
 
 
-def verify_case(t, theta, mars_on, k, seed=0, force=None):
+def policy_case(t, policy_id, p0, p1, k, seed=0, force=None):
+    """Run kernel + oracle over a random case for one policy triple."""
     rng = np.random.default_rng(seed)
     z1 = jnp.asarray(np.abs(rng.normal(size=t)).astype(np.float32) + 0.5)
     z2 = z1 * jnp.asarray(rng.uniform(0.3, 1.0, t).astype(np.float32))
@@ -96,11 +122,17 @@ def verify_case(t, theta, mars_on, k, seed=0, force=None):
         draft = jnp.where(
             jnp.asarray(rng.uniform(size=t)) < 0.4, tstar, i2
         ).astype(jnp.int32)
-    got = mars_verify_pallas(z1, z2, i2, tstar, draft, theta, mars_on, k)
-    want = ref.mars_verify_ref(z1, z2, i2, tstar, draft, theta, mars_on, k)
+    got = verify_pallas(z1, z2, i2, tstar, draft, policy_id, p0, p1, k)
+    want = ref.verify_ref(z1, z2, i2, tstar, draft, policy_id, p0, p1, k)
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w))
     return got
+
+
+def verify_case(t, theta, mars_on, k, seed=0, force=None):
+    """Legacy-shaped case: (theta, mars_on) mapped onto policy ids."""
+    pid = POLICY_MARS if mars_on > 0.5 else POLICY_STRICT
+    return policy_case(t, pid, theta, 0.0, k, seed=seed, force=force)
 
 
 @pytest.mark.parametrize("theta", [0.0, 0.5, 0.84, 0.9, 0.96, 1.0])
@@ -184,3 +216,83 @@ def test_verify_monotone_in_theta(seed):
         if prev is not None:
             assert float(m) <= prev + 1e-9
         prev = float(m)
+
+
+# ------------------------------------------------------ policy families ---
+
+
+@pytest.mark.parametrize("policy_id,p0,p1", [
+    (POLICY_STRICT, 0.0, 0.0),
+    (POLICY_MARS, 0.9, 0.0),
+    (POLICY_TOPK, 2.0, 0.1),
+    (POLICY_TOPK, 1.0, 0.5),   # k < 2: relaxation disabled on device
+    (POLICY_ENTROPY, 1.5, 0.0),
+    (POLICY_ENTROPY, 0.0, 0.0),
+])
+def test_policy_kernel_matches_ref(policy_id, p0, p1):
+    for seed in [1, 7, 23]:
+        policy_case(16, policy_id, p0, p1, 12, seed=seed)
+
+
+def test_legacy_shim_equals_policy_form():
+    """mars_verify_pallas(theta, mars_on) == verify_pallas(policy triple)."""
+    rng = np.random.default_rng(5)
+    t = 16
+    z1 = jnp.asarray(np.abs(rng.normal(size=t)).astype(np.float32) + 0.5)
+    z2 = z1 * jnp.asarray(rng.uniform(0.3, 1.0, t).astype(np.float32))
+    i2 = jnp.asarray(rng.integers(0, 128, t), jnp.int32)
+    tstar = jnp.asarray(rng.integers(0, 128, t), jnp.int32)
+    draft = i2
+    for theta, mars_on, pid in [
+        (0.9, 1.0, POLICY_MARS),
+        (0.9, 0.0, POLICY_STRICT),
+    ]:
+        legacy = mars_verify_pallas(
+            z1, z2, i2, tstar, draft, theta, mars_on, t
+        )
+        new = verify_pallas(z1, z2, i2, tstar, draft, pid, theta, 0.0, t)
+        for a, b in zip(legacy, new):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_topk2_equals_mars_complement():
+    """topk(k=2, eps) must decide exactly like mars(theta = 1 - eps)."""
+    for seed in range(5):
+        for eps in [0.05, 0.1, 0.3]:
+            a = policy_case(
+                14, POLICY_TOPK, 2.0, eps, 14, seed=seed, force="top2"
+            )
+            b = policy_case(
+                14, POLICY_MARS, 1.0 - eps, 0.0, 14, seed=seed,
+                force="top2",
+            )
+            for x, y in zip(a, b):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+
+def test_entropy_gate_is_gap_ceiling():
+    t = 6
+    z1 = jnp.asarray([3.0, 3.0, 3.0, 3.0, 3.0, 3.0], jnp.float32)
+    z2 = jnp.asarray([2.9, 2.6, 1.0, 2.9, 2.9, 2.9], jnp.float32)
+    i2 = jnp.full((t,), 7, jnp.int32)
+    tstar = jnp.full((t,), 3, jnp.int32)
+    draft = i2  # every draft is the top-2 token
+    flags, r, m = verify_pallas(
+        z1, z2, i2, tstar, draft, POLICY_ENTROPY, 0.5, 0.0, t
+    )
+    # gaps: .1 .4 2.0 .1 .1 .1 -> first two relax, third rejects
+    assert float(m) == 2.0
+    np.testing.assert_allclose(np.asarray(flags), [2, 2, 0, 0, 0, 0])
+    # entropy relaxes regardless of sign (gap-based, no positivity guard)
+    flags2, _, m2 = verify_pallas(
+        z1 - 10.0, z2 - 10.0, i2, tstar, draft, POLICY_ENTROPY, 0.5, 0.0, t
+    )
+    assert float(m2) == 2.0
+
+
+def test_strict_policy_never_relaxes():
+    flags, _, m = policy_case(
+        12, POLICY_STRICT, 0.0, 0.0, 12, seed=11, force="top2"
+    )
+    # top-2 drafts under strict: only coincidental exact matches accept
+    assert np.all(np.isin(np.asarray(flags), [0.0, 1.0]))

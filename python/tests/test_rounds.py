@@ -52,9 +52,9 @@ MAXNEW = 20
 def make_cfg(**kw):
     cfg = np.zeros(S.N_CFG, np.float32)
     base = dict(
-        temp=0.0, greedy=1.0, theta=0.9, mars_on=0.0, kdraft=5,
-        max_new=MAXNEW, eos=T.EOS, beam=1, branch=1, probe_on=1.0,
-        seed=3, prompt_len=0,
+        temp=0.0, greedy=1.0, policy_id=S.POLICY_STRICT, p0=0.9, p1=0.0,
+        kdraft=5, max_new=MAXNEW, eos=T.EOS, beam=1, branch=1,
+        probe_on=1.0, seed=3, prompt_len=0,
     )
     base.update(kw)
     for k, v in base.items():
@@ -165,7 +165,8 @@ def test_verify_ext_oracle_accepts_everything(world, greedy_ref):
 
 def test_mars_greedy_only_differs_by_tiebreaks(world, greedy_ref):
     """With MARS on, any deviation must come with relaxed_accepts > 0."""
-    st = start(world, mars_on=1.0, theta=0.5)  # aggressive relaxation
+    # aggressive relaxation
+    st = start(world, policy_id=S.POLICY_MARS, p0=0.5)
     out, sc, _ = drive(
         world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
     )
@@ -173,12 +174,48 @@ def test_mars_greedy_only_differs_by_tiebreaks(world, greedy_ref):
     if not same:
         assert sc[S.SCALARS["relaxed_accepts"]] > 0
     # and with theta ~ 1 mars must be inert
-    st = start(world, mars_on=1.0, theta=0.9999)
+    st = start(world, policy_id=S.POLICY_MARS, p0=0.9999)
     out2, sc2, _ = drive(
         world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
     )
     np.testing.assert_array_equal(out2, greedy_ref)
     assert sc2[S.SCALARS["relaxed_accepts"]] == 0
+
+
+def test_policy_families_share_one_artifact(world, greedy_ref):
+    """Every policy id runs through the same round program; inert settings
+    must reproduce greedy, aggressive ones may only deviate with
+    relaxed_accepts > 0."""
+    inert = [
+        (S.POLICY_STRICT, 0.0, 0.0),
+        (S.POLICY_TOPK, 2.0, 0.0),      # eps = 0: ratio > 1 impossible
+        (S.POLICY_TOPK, 1.0, 0.9),      # k < 2 disables relaxation
+        (S.POLICY_ENTROPY, 0.0, 0.0),   # gap < 0 impossible
+    ]
+    for pid, p0, p1 in inert:
+        st = start(world, policy_id=pid, p0=p0, p1=p1)
+        out, sc, _ = drive(
+            world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+        )
+        np.testing.assert_array_equal(
+            out, greedy_ref, err_msg=f"policy {pid} p0={p0} p1={p1}"
+        )
+        assert sc[S.SCALARS["relaxed_accepts"]] == 0
+    aggressive = [
+        (S.POLICY_MARS, 0.3, 0.0),
+        (S.POLICY_TOPK, 2.0, 0.7),
+        (S.POLICY_ENTROPY, 3.0, 0.0),
+    ]
+    for pid, p0, p1 in aggressive:
+        st = start(world, policy_id=pid, p0=p0, p1=p1)
+        out, sc, _ = drive(
+            world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+        )
+        same = len(out) == len(greedy_ref) and np.array_equal(
+            out, greedy_ref
+        )
+        if not same:
+            assert sc[S.SCALARS["relaxed_accepts"]] > 0, (pid, p0, p1)
 
 
 def test_finished_state_is_inert(world):
@@ -213,7 +250,7 @@ def test_sampling_reproducible_by_seed(world):
 
 
 def test_probe_entries_recorded(world):
-    st = start(world, probe_on=1.0, mars_on=1.0, theta=0.5)
+    st = start(world, probe_on=1.0, policy_id=S.POLICY_MARS, p0=0.5)
     _, sc, st = drive(
         world, st, lambda s: world["tree"](s, *world["tw"], *world["ew"])
     )

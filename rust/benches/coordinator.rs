@@ -22,6 +22,7 @@ fn main() {
         queue_seconds: 0.001,
         tau: 6.0,
         relaxed_accepts: 3.0,
+        policy: "mars",
     };
     bench_fn("metrics_record", 200, || {
         reg.record(m);

@@ -17,7 +17,7 @@ fn main() {
     let prompt = mars::tokenizer::encode("Q: 12+34=?\nA: ");
     let base = GenParams {
         method: Method::EagleTree,
-        mars: true,
+        policy: mars::verify::VerifyPolicy::Mars { theta: 0.9 },
         temperature: 1.0,
         max_new: 48,
         ..GenParams::default()

@@ -1,6 +1,10 @@
 //! Micro-benchmarks of the host-side verification-adjacent hot paths:
-//! tokenizer, PLD n-gram lookup, lookahead pool, JSON codec, metrics.
+//! the policy layer (parse / JSON / slot codec / reference scan),
+//! tokenizer, PLD n-gram lookup, lookahead pool, JSON codec.
 //! These are the L3 pieces that run per round outside the device.
+//!
+//! The policy set is swept from one flag:
+//! `cargo bench --bench verify -- --policies strict,mars:0.9,topk:2,entropy:1.5`
 
 mod bench_util;
 
@@ -8,10 +12,83 @@ use bench_util::bench_fn;
 use mars::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
 use mars::util::json::Value;
 use mars::util::prng::Rng;
+use mars::verify::VerifyPolicy;
+
+/// `--policies a,b,c` from argv (cargo bench passes everything after `--`).
+fn sweep_from_args() -> Vec<VerifyPolicy> {
+    let default = "strict,mars:0.9,topk:2,entropy:1.5";
+    let args: Vec<String> = std::env::args().collect();
+    let spec = args
+        .iter()
+        .position(|a| a == "--policies")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| {
+            args.iter()
+                .find_map(|a| a.strip_prefix("--policies=").map(String::from))
+        })
+        .unwrap_or_else(|| default.to_string());
+    VerifyPolicy::parse_list(&spec).unwrap_or_else(|| {
+        eprintln!("bad --policies '{spec}', using default");
+        VerifyPolicy::parse_list(default).unwrap()
+    })
+}
 
 fn main() {
     println!("== verify/host-path micro benches ==");
     let mut rng = Rng::new(1);
+
+    // ---- policy layer, swept over the requested policies ---------------
+    let policies = sweep_from_args();
+    println!(
+        "policy sweep: {}",
+        policies
+            .iter()
+            .map(|p| p.label())
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    // synthetic verification rows: (tstar, top-4) + drafts
+    let t = 64usize;
+    let rows: Vec<(u32, Vec<(u32, f32)>)> = (0..t)
+        .map(|_| {
+            let z1 = rng.f64() as f32 * 8.0 + 0.5;
+            let top: Vec<(u32, f32)> = (0..4)
+                .map(|j| {
+                    (
+                        rng.below(128) as u32,
+                        z1 * (1.0 - 0.05 * j as f32),
+                    )
+                })
+                .collect();
+            (top[0].0, top)
+        })
+        .collect();
+    let drafts: Vec<u32> = rows
+        .iter()
+        .map(|(tstar, top)| if rng.bool(0.5) { *tstar } else { top[1].0 })
+        .collect();
+
+    for &p in &policies {
+        let label = p.label();
+        bench_fn(&format!("policy_scan/{label}/64pos"), 200, || {
+            std::hint::black_box(p.scan(&drafts, &rows));
+        });
+        bench_fn(&format!("policy_parse/{label}"), 100, || {
+            std::hint::black_box(VerifyPolicy::parse(&label));
+        });
+        bench_fn(&format!("policy_json_roundtrip/{label}"), 100, || {
+            let v = p.to_json();
+            let back = Value::parse(&v.to_string_json()).unwrap();
+            std::hint::black_box(VerifyPolicy::from_json(&back).unwrap());
+        });
+        bench_fn(&format!("policy_slots_roundtrip/{label}"), 100, || {
+            std::hint::black_box(
+                VerifyPolicy::decode_slots(p.encode_slots()).unwrap(),
+            );
+        });
+    }
+
+    // ---- host drafters --------------------------------------------------
     let history: Vec<u32> =
         (0..2048).map(|_| rng.below(96) as u32 + 4).collect();
 
@@ -33,6 +110,7 @@ fn main() {
         std::hint::black_box(la2.pool_len());
     });
 
+    // ---- tokenizer + wire codec ----------------------------------------
     let text = "Q: 37+58=?\nA: 4+5=9; 3*9=27\n".repeat(8);
     bench_fn("tokenizer_encode/224B", 200, || {
         std::hint::black_box(mars::tokenizer::encode(&text));
@@ -43,7 +121,7 @@ fn main() {
     });
 
     let payload = r#"{"prompt":"Q: 1+2=?\nA: ","method":"eagle_tree",
-        "mars":true,"theta":0.9,"temperature":1.0,"k":7,"max_new":64}"#;
+        "policy":{"mars":{"theta":0.9}},"temperature":1.0,"k":7,"max_new":64}"#;
     bench_fn("json_parse/request", 200, || {
         std::hint::black_box(Value::parse(payload).unwrap());
     });

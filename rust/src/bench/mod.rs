@@ -24,6 +24,7 @@ use crate::datasets::{dataset, Example, Task};
 use crate::engine::{DecodeEngine, GenParams, GenResult, Method};
 use crate::eval;
 use crate::util::stats::Summary;
+use crate::verify::VerifyPolicy;
 
 /// Shared bench context.
 pub struct BenchCtx<'a> {
@@ -49,11 +50,15 @@ impl<'a> BenchCtx<'a> {
         }
     }
 
-    fn params(&self, method: Method, mars: bool, temp: f32) -> GenParams {
+    pub fn params(
+        &self,
+        method: Method,
+        policy: VerifyPolicy,
+        temp: f32,
+    ) -> GenParams {
         GenParams {
             method,
-            mars,
-            theta: 0.9,
+            policy,
             temperature: temp,
             k: 7,
             beam: 2,
@@ -110,7 +115,7 @@ impl<'a> BenchCtx<'a> {
         if let Some(b) = self.baseline.borrow().get(&key) {
             return Ok(b.clone());
         }
-        let p = self.params(Method::Ar, false, temp);
+        let p = self.params(Method::Ar, VerifyPolicy::Strict, temp);
         let b = self.run_task(task, &p)?;
         self.baseline.borrow_mut().insert(key, b.clone());
         Ok(b)
@@ -203,16 +208,17 @@ impl QualityAgg {
 // ------------------------------------------------------------ tables -------
 
 /// Method lineup of Table 1 (PLD/Lookahead/Medusa are the paper's
-/// baseline rows; MARS = EagleTree + relaxation).
-fn table1_rows() -> Vec<(&'static str, Method, bool)> {
+/// baseline rows; MARS = EagleTree + the margin-aware policy).
+fn table1_rows() -> Vec<(&'static str, Method, VerifyPolicy)> {
+    let strict = VerifyPolicy::Strict;
     vec![
-        ("SpS", Method::Sps, false),
-        ("Lookahead", Method::Lookahead, false),
-        ("PLD", Method::Pld, false),
-        ("Medusa", Method::Medusa, false),
-        ("EAGLE (chain)", Method::EagleChain, false),
-        ("EAGLE-3 (tree)", Method::EagleTree, false),
-        ("MARS", Method::EagleTree, true),
+        ("SpS", Method::Sps, strict),
+        ("Lookahead", Method::Lookahead, strict),
+        ("PLD", Method::Pld, strict),
+        ("Medusa", Method::Medusa, strict),
+        ("EAGLE (chain)", Method::EagleChain, strict),
+        ("EAGLE-3 (tree)", Method::EagleTree, strict),
+        ("MARS", Method::EagleTree, VerifyPolicy::Mars { theta: 0.9 }),
     ]
 }
 
@@ -235,13 +241,13 @@ pub fn table1(ctx: &BenchCtx) -> Result<()> {
         "|---|{}---|",
         "---|".repeat(Task::all().len())
     )?;
-    for (label, method, mars) in table1_rows() {
+    for (label, method, policy) in table1_rows() {
         let mut cells = Vec::new();
         let mut spd_acc = 0.0;
         let mut tau_acc = 0.0;
         for &task in Task::all() {
             let base = ctx.baseline(task, temp)?;
-            let p = ctx.params(method, mars, temp);
+            let p = ctx.params(method, policy, temp);
             let e = ctx.run_task(task, &p)?;
             let spd = e.speedup_sim(&base);
             let w = e.speedup_wall(&base);
@@ -293,7 +299,8 @@ pub fn table2(ctx: &BenchCtx) -> Result<()> {
             for &t in &temps {
                 let base = ctx.baseline(task, t)?;
                 // chain method so K > 10 is exercised (tree depth caps at 10)
-                let mut p = ctx.params(Method::Sps, true, t);
+                let mut p =
+                    ctx.params(Method::Sps, VerifyPolicy::default(), t);
                 p.k = k;
                 let e = ctx.run_task(task, &p)?;
                 cells.push(format!(
@@ -319,11 +326,11 @@ pub fn table3(ctx: &BenchCtx) -> Result<()> {
     writeln!(out, "|---|---|")?;
     let base = ctx.baseline(Task::Sum, 1.0)?;
     writeln!(out, "| Baseline (AR) | {:.4} |", base.quality.rouge_l)?;
-    for (label, method, mars) in [
-        ("EAGLE-3", Method::EagleTree, false),
-        ("MARS", Method::EagleTree, true),
+    for (label, method, policy) in [
+        ("EAGLE-3", Method::EagleTree, VerifyPolicy::Strict),
+        ("MARS", Method::EagleTree, VerifyPolicy::Mars { theta: 0.9 }),
     ] {
-        let e = ctx.run_task(Task::Sum, &ctx.params(method, mars, 1.0))?;
+        let e = ctx.run_task(Task::Sum, &ctx.params(method, policy, 1.0))?;
         writeln!(out, "| {label} | {:.4} |", e.quality.rouge_l)?;
     }
     ctx.emit("table3", &out);
@@ -343,7 +350,10 @@ pub fn table4(ctx: &BenchCtx) -> Result<()> {
         "| Baseline | {:.2} | {:.2} | 1.00x |",
         base.quality.bleu, base.quality.chrf
     )?;
-    let e3 = ctx.run_task(Task::Mt, &ctx.params(Method::EagleTree, false, 1.0))?;
+    let e3 = ctx.run_task(
+        Task::Mt,
+        &ctx.params(Method::EagleTree, VerifyPolicy::Strict, 1.0),
+    )?;
     writeln!(
         out,
         "| EAGLE-3 | {:.2} | {:.2} | {:.2}x |",
@@ -352,8 +362,11 @@ pub fn table4(ctx: &BenchCtx) -> Result<()> {
         e3.speedup_sim(&base)
     )?;
     for &th in &thetas {
-        let mut p = ctx.params(Method::EagleTree, true, 1.0);
-        p.theta = th;
+        let p = ctx.params(
+            Method::EagleTree,
+            VerifyPolicy::Mars { theta: th },
+            1.0,
+        );
         let e = ctx.run_task(Task::Mt, &p)?;
         writeln!(
             out,
@@ -385,8 +398,11 @@ pub fn table5(ctx: &BenchCtx) -> Result<()> {
             task.paper_name(),
             q(&base)
         )?;
-        for (label, mars) in [("SPD", false), ("SPD+MARS", true)] {
-            let mut p = ctx.params(Method::Sps, mars, 1.0);
+        for (label, policy) in [
+            ("SPD", VerifyPolicy::Strict),
+            ("SPD+MARS", VerifyPolicy::Mars { theta: 0.9 }),
+        ] {
+            let mut p = ctx.params(Method::Sps, policy, 1.0);
             p.k = 6;
             let e = ctx.run_task(task, &p)?;
             writeln!(
@@ -417,8 +433,12 @@ pub fn table6(ctx: &BenchCtx) -> Result<()> {
             task.paper_name(),
             base.quality.accuracy
         )?;
-        for (label, mars) in [("EAGLE-3", false), ("MARS", true)] {
-            let e = ctx.run_task(task, &ctx.params(Method::EagleTree, mars, 0.0))?;
+        for (label, policy) in [
+            ("EAGLE-3", VerifyPolicy::Strict),
+            ("MARS", VerifyPolicy::Mars { theta: 0.9 }),
+        ] {
+            let e = ctx
+                .run_task(task, &ctx.params(Method::EagleTree, policy, 0.0))?;
             writeln!(
                 out,
                 "| {} | {label} | {:.2}x | {:.2} | {:.3} |",
@@ -445,8 +465,12 @@ pub fn table7(ctx: &BenchCtx) -> Result<()> {
         "| Baseline | {:.2} | {:.3} |",
         base.quality.judge, base.quality.accuracy
     )?;
-    for (label, mars) in [("EAGLE-3", false), ("MARS", true)] {
-        let e = ctx.run_task(Task::Chat, &ctx.params(Method::EagleTree, mars, 1.0))?;
+    for (label, policy) in [
+        ("EAGLE-3", VerifyPolicy::Strict),
+        ("MARS", VerifyPolicy::Mars { theta: 0.9 }),
+    ] {
+        let e = ctx
+            .run_task(Task::Chat, &ctx.params(Method::EagleTree, policy, 1.0))?;
         writeln!(
             out,
             "| {label} | {:.2} | {:.3} |",
@@ -469,8 +493,11 @@ pub fn fig3(ctx: &BenchCtx) -> Result<()> {
             writeln!(out, "| θ | speedup(sim) | accuracy |")?;
             writeln!(out, "|---|---|---|")?;
             for &th in &thetas {
-                let mut p = ctx.params(Method::EagleTree, true, 1.0);
-                p.theta = th;
+                let mut p = ctx.params(
+                    Method::EagleTree,
+                    VerifyPolicy::Mars { theta: th },
+                    1.0,
+                );
                 p.k = k;
                 let e = ctx.run_task(task, &p)?;
                 writeln!(
@@ -484,6 +511,52 @@ pub fn fig3(ctx: &BenchCtx) -> Result<()> {
         }
     }
     ctx.emit("fig3", &out);
+    Ok(())
+}
+
+/// Policy sweep: one row per [`VerifyPolicy`] × task — the scenario axis
+/// the `verify` subsystem opens up (`mars bench policies --policies
+/// strict,mars:0.9,topk:2,entropy:1.5`).
+pub fn policy_sweep(ctx: &BenchCtx, policies: &[VerifyPolicy]) -> Result<()> {
+    let temp = 1.0;
+    let tasks = [Task::Arith, Task::Code, Task::Mt];
+    let mut out = String::new();
+    writeln!(
+        out,
+        "## Policy sweep — verification policies on EAGLE-tree (T=1, K=7)\n"
+    )?;
+    writeln!(
+        out,
+        "| Policy | {} |",
+        tasks
+            .iter()
+            .map(|t| format!("{} spd/τ/acc/relaxed", t.paper_name()))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    )?;
+    writeln!(out, "|---|{}", "---|".repeat(tasks.len()))?;
+    for &policy in policies {
+        let mut cells = Vec::new();
+        for &task in &tasks {
+            let base = ctx.baseline(task, temp)?;
+            let e = ctx
+                .run_task(task, &ctx.params(Method::EagleTree, policy, temp))?;
+            cells.push(format!(
+                "{:.2}x / {:.2} / {:.3} / {:.0}",
+                e.speedup_sim(&base),
+                e.tau,
+                e.quality.accuracy,
+                e.relaxed_total
+            ));
+        }
+        writeln!(out, "| {} | {} |", policy.label(), cells.join(" | "))?;
+    }
+    writeln!(
+        out,
+        "\nStrict is the lossless floor (relaxed = 0 by construction); \
+         every other row trades acceptance for quality per its own knob."
+    )?;
+    ctx.emit("policy_sweep", &out);
     Ok(())
 }
 
@@ -508,7 +581,8 @@ pub fn perf(ctx: &BenchCtx, artifact_dir: &std::path::Path) -> Result<()> {
         let mut calls = 0u64;
         let mut rounds = 0u64;
         for ex in &examples {
-            let mut p = ctx.params(Method::EagleTree, true, 1.0);
+            let mut p =
+                ctx.params(Method::EagleTree, VerifyPolicy::default(), 1.0);
             p.extract_every = every;
             let r = engine.generate(&ex.prompt, &p)?;
             toks += r.tokens.len();

@@ -1,13 +1,25 @@
 //! Serving metrics registry: latency histograms, throughput counters and
 //! speculative-decoding acceptance statistics, shared across replicas via
 //! a mutex (recording is a handful of float ops; not hot enough to need
-//! sharding on this substrate).
+//! sharding on this substrate). Acceptance stats are additionally broken
+//! out per verification-policy family so a mixed-policy workload exposes
+//! the per-rule τ / relaxation picture.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::json::Value;
 use crate::util::stats::{LogHistogram, Summary};
+
+/// Per-policy-family aggregates (keyed by `VerifyPolicy::name`).
+#[derive(Debug, Default)]
+struct PolicyAgg {
+    requests: u64,
+    tokens: u64,
+    tau: Summary,
+    relaxed: Summary,
+}
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -22,6 +34,7 @@ struct Inner {
     per_token_us: LogHistogram,
     tau: Summary,
     relaxed: Summary,
+    by_policy: BTreeMap<&'static str, PolicyAgg>,
 }
 
 #[derive(Debug, Default)]
@@ -39,6 +52,8 @@ pub struct RequestMetrics {
     pub queue_seconds: f64,
     pub tau: f64,
     pub relaxed_accepts: f64,
+    /// verification-policy family (`VerifyPolicy::name`)
+    pub policy: &'static str,
 }
 
 impl MetricsRegistry {
@@ -70,6 +85,15 @@ impl MetricsRegistry {
             g.tau.push(m.tau);
         }
         g.relaxed.push(m.relaxed_accepts);
+        if !m.policy.is_empty() {
+            let p = g.by_policy.entry(m.policy).or_default();
+            p.requests += 1;
+            p.tokens += m.tokens as u64;
+            if m.tau > 0.0 {
+                p.tau.push(m.tau);
+            }
+            p.relaxed.push(m.relaxed_accepts);
+        }
     }
 
     /// Aggregate snapshot as JSON (served by the `metrics` RPC and printed
@@ -106,6 +130,16 @@ impl MetricsRegistry {
         );
         o.set("tau_mean", Value::Num(g.tau.mean()));
         o.set("relaxed_accepts_mean", Value::Num(g.relaxed.mean()));
+        let mut pol = Value::obj();
+        for (name, agg) in &g.by_policy {
+            let mut p = Value::obj();
+            p.set("requests", Value::Num(agg.requests as f64));
+            p.set("tokens", Value::Num(agg.tokens as f64));
+            p.set("tau_mean", Value::Num(agg.tau.mean()));
+            p.set("relaxed_mean", Value::Num(agg.relaxed.mean()));
+            pol.set(name, p);
+        }
+        o.set("policy", pol);
         o
     }
 
@@ -128,6 +162,7 @@ mod tests {
             queue_seconds: 0.002,
             tau: 5.0,
             relaxed_accepts: 2.0,
+            policy: "mars",
         }
     }
 
@@ -141,6 +176,31 @@ mod tests {
         assert_eq!(v.get("tokens_out").unwrap().as_usize(), Some(40));
         assert_eq!(v.get("tau_mean").unwrap().as_f64(), Some(5.0));
         assert!(v.get("decode_ms_p99").unwrap().as_f64().unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn per_policy_breakout() {
+        let r = MetricsRegistry::new();
+        r.record(m(10, 0.1));
+        r.record(RequestMetrics {
+            policy: "strict",
+            relaxed_accepts: 0.0,
+            ..m(20, 0.2)
+        });
+        let v = r.snapshot_json();
+        let pol = v.get("policy").unwrap();
+        assert_eq!(
+            pol.path(&["mars", "requests"]).unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            pol.path(&["strict", "tokens"]).unwrap().as_usize(),
+            Some(20)
+        );
+        assert_eq!(
+            pol.path(&["strict", "relaxed_mean"]).unwrap().as_f64(),
+            Some(0.0)
+        );
     }
 
     #[test]

@@ -20,4 +20,4 @@ pub use metrics::MetricsRegistry;
 pub use replica::EngineReplica;
 pub use request::{Request, RequestId, Response};
 pub use router::{RouterPolicy, Router};
-pub use scheduler::Scheduler;
+pub use scheduler::{Scheduler, SubmitTarget};

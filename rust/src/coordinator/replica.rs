@@ -97,8 +97,9 @@ impl Drop for EngineReplica {
 struct Active<'rt> {
     runner: SeqRunner<'rt>,
     item: WorkItem,
-    queued_at: Instant,
-    admitted_at: Instant,
+    /// submit → admission wait (stamped from `WorkItem::submitted_at`, so
+    /// the metric measures actual queue time, not prefill)
+    queue_seconds: f64,
 }
 
 fn replica_loop(
@@ -134,17 +135,13 @@ fn replica_loop(
                     Err(_) => break,
                 }
             };
-            let queued_at = Instant::now();
+            let queue_seconds =
+                Instant::now().duration_since(item.submitted_at).as_secs_f64();
             let toks = crate::tokenizer::encode(&item.request.prompt);
             match SeqRunner::new(rt, &toks, &item.request.params, cfg.hostloop)
             {
                 Ok(runner) => {
-                    active.push(Active {
-                        runner,
-                        item,
-                        queued_at,
-                        admitted_at: Instant::now(),
-                    });
+                    active.push(Active { runner, item, queue_seconds });
                     active_gauge.store(active.len(), Ordering::Relaxed);
                 }
                 Err(e) => {
@@ -157,9 +154,10 @@ fn replica_loop(
                         tokens: 0,
                         decode_seconds: 0.0,
                         prefill_seconds: 0.0,
-                        queue_seconds: 0.0,
+                        queue_seconds,
                         tau: 0.0,
                         relaxed_accepts: 0.0,
+                        policy: item.request.params.policy.name(),
                     });
                     let _ = item.reply.send(resp);
                 }
@@ -174,19 +172,21 @@ fn replica_loop(
             let done = match active[i].runner.step() {
                 Ok(Some(result)) => {
                     let a = &active[i];
-                    let resp =
-                        Response::from_result(a.item.request.id, &result);
+                    let policy = a.item.request.params.policy;
+                    let resp = Response::from_result(
+                        a.item.request.id,
+                        &result,
+                        policy,
+                    );
                     metrics.record(RequestMetrics {
                         ok: true,
                         tokens: result.tokens.len(),
                         decode_seconds: result.decode_seconds,
                         prefill_seconds: result.prefill_seconds,
-                        queue_seconds: a
-                            .admitted_at
-                            .duration_since(a.queued_at)
-                            .as_secs_f64(),
+                        queue_seconds: a.queue_seconds,
                         tau: result.tau(),
                         relaxed_accepts: result.snapshot.relaxed_accepts,
+                        policy: policy.name(),
                     });
                     let _ = a.item.reply.send(resp);
                     true
@@ -203,9 +203,10 @@ fn replica_loop(
                         tokens: 0,
                         decode_seconds: 0.0,
                         prefill_seconds: 0.0,
-                        queue_seconds: 0.0,
+                        queue_seconds: a.queue_seconds,
                         tau: 0.0,
                         relaxed_accepts: 0.0,
+                        policy: a.item.request.params.policy.name(),
                     });
                     true
                 }

@@ -1,9 +1,11 @@
 //! Request/response types + the line-JSON wire encoding.
 
 use std::sync::mpsc::Sender;
+use std::time::Instant;
 
 use crate::engine::{GenParams, GenResult, Method};
 use crate::util::json::Value;
+use crate::verify::VerifyPolicy;
 
 pub type RequestId = u64;
 
@@ -27,10 +29,16 @@ pub struct Response {
     pub decode_seconds: f64,
     pub prefill_seconds: f64,
     pub relaxed_accepts: f64,
+    /// verification-policy label (`VerifyPolicy::label`), e.g. `mars:0.9`
+    pub policy: String,
 }
 
 impl Response {
-    pub fn from_result(id: RequestId, r: &GenResult) -> Response {
+    pub fn from_result(
+        id: RequestId,
+        r: &GenResult,
+        policy: VerifyPolicy,
+    ) -> Response {
         Response {
             id,
             ok: true,
@@ -41,6 +49,7 @@ impl Response {
             decode_seconds: r.decode_seconds,
             prefill_seconds: r.prefill_seconds,
             relaxed_accepts: r.snapshot.relaxed_accepts,
+            policy: policy.label(),
         }
     }
 
@@ -55,6 +64,7 @@ impl Response {
             decode_seconds: 0.0,
             prefill_seconds: 0.0,
             relaxed_accepts: 0.0,
+            policy: String::new(),
         }
     }
 
@@ -71,13 +81,21 @@ impl Response {
         o.set("decode_seconds", Value::Num(self.decode_seconds));
         o.set("prefill_seconds", Value::Num(self.prefill_seconds));
         o.set("relaxed_accepts", Value::Num(self.relaxed_accepts));
+        if !self.policy.is_empty() {
+            o.set("policy", Value::Str(self.policy.clone()));
+        }
         o
     }
 }
 
 /// Wire format: one JSON object per line.
-/// `{"prompt": "...", "method": "eagle_tree", "mars": true, "theta": 0.9,
+/// `{"prompt": "...", "method": "eagle_tree",
+///   "policy": {"mars": {"theta": 0.9}},
 ///   "temperature": 1.0, "k": 7, "max_new": 128, "seed": 1}`
+///
+/// The `"policy"` value may also be a CLI string (`"mars:0.9"`); the
+/// legacy flat `"mars"` / `"theta"` keys still parse (to `Strict` /
+/// `Mars { theta }`) for old clients.
 pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     let prompt = v
         .get("prompt")
@@ -89,13 +107,10 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
         params.method =
             Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
     }
-    if let Some(b) = v.get("mars").and_then(|b| b.as_bool()) {
-        params.mars = b;
-    }
+    // clamp to device-executable form so the echoed policy label and the
+    // per-policy metrics describe the rule that actually ran
+    params.policy = VerifyPolicy::from_request(v)?.normalize_for_device();
     let fget = |k: &str| v.get(k).and_then(|x| x.as_f64());
-    if let Some(x) = fget("theta") {
-        params.theta = x as f32;
-    }
     if let Some(x) = fget("temperature") {
         params.temperature = x as f32;
     }
@@ -117,10 +132,13 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     Ok(Request { id, prompt, params })
 }
 
-/// Work item flowing to a replica: the request plus its reply channel.
+/// Work item flowing to a replica: the request, its reply channel, and the
+/// submission timestamp (stamped by the router so queue-wait metrics
+/// measure time spent waiting, not prefill).
 pub struct WorkItem {
     pub request: Request,
     pub reply: Sender<Response>,
+    pub submitted_at: Instant,
 }
 
 #[cfg(test)]
@@ -133,10 +151,61 @@ mod tests {
         let r = parse_request_json(1, &v).unwrap();
         assert_eq!(r.prompt, "hi");
         assert_eq!(r.params.method, Method::EagleTree);
+        assert_eq!(r.params.policy, VerifyPolicy::default());
     }
 
     #[test]
-    fn parses_full() {
+    fn parses_structured_policy() {
+        let v = Value::parse(
+            r#"{"prompt": "x", "method": "sps",
+                "policy": {"mars": {"theta": 0.92}}, "temperature": 0.5,
+                "k": 9, "max_new": 32, "seed": 7}"#,
+        )
+        .unwrap();
+        let r = parse_request_json(2, &v).unwrap();
+        assert_eq!(r.params.method, Method::Sps);
+        assert_eq!(r.params.policy, VerifyPolicy::Mars { theta: 0.92 });
+        assert_eq!(r.params.k, 9);
+        assert_eq!(r.params.seed, 7);
+    }
+
+    #[test]
+    fn parses_policy_string_and_new_families() {
+        for (text, want) in [
+            (r#"{"prompt":"x","policy":"strict"}"#, VerifyPolicy::Strict),
+            (
+                // k is clamped to the device's top-2 width at admission
+                r#"{"prompt":"x","policy":"topk:3:0.2"}"#,
+                VerifyPolicy::TopK { k: 2, eps: 0.2 },
+            ),
+            (
+                r#"{"prompt":"x","policy":{"entropy":{"h_max":1.5}}}"#,
+                VerifyPolicy::Entropy { h_max: 1.5 },
+            ),
+        ] {
+            let v = Value::parse(text).unwrap();
+            assert_eq!(
+                parse_request_json(1, &v).unwrap().params.policy,
+                want,
+                "{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_above_device_width_is_clamped_at_admission() {
+        // the device pipeline materializes top-2 only; the request layer
+        // clamps so the echoed label matches the rule that actually runs
+        let v = Value::parse(
+            r#"{"prompt":"x","policy":{"topk":{"k":5,"eps":0.3}}}"#,
+        )
+        .unwrap();
+        let r = parse_request_json(1, &v).unwrap();
+        assert_eq!(r.params.policy, VerifyPolicy::TopK { k: 2, eps: 0.3 });
+    }
+
+    #[test]
+    fn legacy_mars_theta_keys_round_trip() {
         let v = Value::parse(
             r#"{"prompt": "x", "method": "sps", "mars": false,
                 "theta": 0.92, "temperature": 0.5, "k": 9, "max_new": 32,
@@ -144,17 +213,25 @@ mod tests {
         )
         .unwrap();
         let r = parse_request_json(2, &v).unwrap();
-        assert_eq!(r.params.method, Method::Sps);
-        assert!(!r.params.mars);
-        assert!((r.params.theta - 0.92).abs() < 1e-6);
-        assert_eq!(r.params.k, 9);
-        assert_eq!(r.params.seed, 7);
+        assert_eq!(r.params.policy, VerifyPolicy::Strict);
+
+        let v = Value::parse(r#"{"prompt": "x", "mars": true, "theta": 0.92}"#)
+            .unwrap();
+        let r = parse_request_json(3, &v).unwrap();
+        assert_eq!(r.params.policy, VerifyPolicy::Mars { theta: 0.92 });
+        // and the parsed policy's own JSON form round-trips back to itself
+        let again =
+            VerifyPolicy::from_json(&r.params.policy.to_json()).unwrap();
+        assert_eq!(again, r.params.policy);
     }
 
     #[test]
-    fn rejects_bad_method() {
+    fn rejects_bad_method_and_policy() {
         let v = Value::parse(r#"{"prompt": "x", "method": "warp"}"#).unwrap();
         assert!(parse_request_json(3, &v).is_err());
+        let v =
+            Value::parse(r#"{"prompt": "x", "policy": "warp"}"#).unwrap();
+        assert!(parse_request_json(4, &v).is_err());
     }
 
     #[test]
@@ -169,9 +246,11 @@ mod tests {
             decode_seconds: 0.25,
             prefill_seconds: 0.05,
             relaxed_accepts: 4.0,
+            policy: "mars:0.9".into(),
         };
         let v = resp.to_json();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
         assert_eq!(v.get("tau").unwrap().as_f64(), Some(5.5));
+        assert_eq!(v.get("policy").unwrap().as_str(), Some("mars:0.9"));
     }
 }

@@ -122,6 +122,7 @@ impl Router {
         let item = WorkItem {
             request: Request { id, prompt: prompt.to_string(), params },
             reply: tx,
+            submitted_at: std::time::Instant::now(),
         };
         // hint is decremented on admission approximation: the replica only
         // tracks active slots, so decrement when the send succeeds — the

@@ -15,18 +15,39 @@ use crate::coordinator::router::Router;
 use crate::engine::GenParams;
 use crate::util::prng::Rng;
 
-/// Bounded FIFO with blocking push (backpressure) over the router.
-pub struct Scheduler<'r> {
-    router: &'r Router,
+/// Anything the scheduler can drain requests into. [`Router`] is the
+/// production target; tests substitute a mock so queue semantics are
+/// exercised without artifacts.
+pub trait SubmitTarget {
+    fn submit_item(
+        &self,
+        prompt: &str,
+        params: GenParams,
+    ) -> Receiver<Response>;
+}
+
+impl SubmitTarget for Router {
+    fn submit_item(
+        &self,
+        prompt: &str,
+        params: GenParams,
+    ) -> Receiver<Response> {
+        self.submit(prompt, params)
+    }
+}
+
+/// Bounded FIFO with blocking push (backpressure) over a submit target.
+pub struct Scheduler<'r, T: SubmitTarget = Router> {
+    target: &'r T,
     queue: Mutex<VecDeque<(String, GenParams)>>,
     capacity: usize,
     cv: Condvar,
 }
 
-impl<'r> Scheduler<'r> {
-    pub fn new(router: &'r Router, capacity: usize) -> Self {
+impl<'r, T: SubmitTarget> Scheduler<'r, T> {
+    pub fn new(target: &'r T, capacity: usize) -> Self {
         Scheduler {
-            router,
+            target,
             queue: Mutex::new(VecDeque::new()),
             capacity: capacity.max(1),
             cv: Condvar::new(),
@@ -43,7 +64,7 @@ impl<'r> Scheduler<'r> {
         self.cv.notify_all();
     }
 
-    /// Drain everything to the router, returning response receivers in
+    /// Drain everything to the target, returning response receivers in
     /// submission order.
     pub fn dispatch_all(&self) -> Vec<Receiver<Response>> {
         let mut q = self.queue.lock().unwrap();
@@ -52,7 +73,7 @@ impl<'r> Scheduler<'r> {
         drop(q);
         items
             .into_iter()
-            .map(|(p, g)| self.router.submit(&p, g))
+            .map(|(p, g)| self.target.submit_item(&p, g))
             .collect()
     }
 
@@ -96,23 +117,89 @@ pub fn drive_open_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::time::Duration;
 
-    // Scheduler logic is tested without a live router via the queue half.
-    struct Probe;
+    /// Mock target: replies instantly, tagging each response with its
+    /// submission sequence number so FIFO order is observable.
+    #[derive(Default)]
+    struct MockTarget {
+        submitted: AtomicU64,
+    }
+
+    impl SubmitTarget for MockTarget {
+        fn submit_item(
+            &self,
+            prompt: &str,
+            _params: GenParams,
+        ) -> Receiver<Response> {
+            let seq = self.submitted.fetch_add(1, Ordering::SeqCst);
+            let (tx, rx) = channel();
+            let mut resp = Response::from_error(seq, "mock");
+            resp.ok = true;
+            resp.error = None;
+            resp.text = prompt.to_string();
+            let _ = tx.send(resp);
+            rx
+        }
+    }
 
     #[test]
-    fn queue_capacity_and_order() {
-        // use a detached queue through the public API shape
-        let q: Mutex<VecDeque<(String, GenParams)>> =
-            Mutex::new(VecDeque::new());
-        {
-            let mut g = q.lock().unwrap();
-            g.push_back(("a".into(), GenParams::default()));
-            g.push_back(("b".into(), GenParams::default()));
+    fn dispatch_preserves_fifo_order() {
+        let target = MockTarget::default();
+        let sched = Scheduler::new(&target, 8);
+        for i in 0..5 {
+            sched.enqueue(format!("p{i}"), GenParams::default());
         }
-        let drained: Vec<_> =
-            q.lock().unwrap().drain(..).map(|(p, _)| p).collect();
-        assert_eq!(drained, vec!["a", "b"]);
-        let _ = Probe;
+        assert_eq!(sched.depth(), 5);
+        let responses: Vec<Response> = sched
+            .dispatch_all()
+            .into_iter()
+            .map(|rx| rx.recv().unwrap())
+            .collect();
+        assert_eq!(sched.depth(), 0);
+        for (i, r) in responses.iter().enumerate() {
+            // id carries the mock's submission sequence; text the prompt —
+            // both must match the enqueue order
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.text, format!("p{i}"));
+        }
+    }
+
+    #[test]
+    fn enqueue_blocks_at_capacity_until_dispatch() {
+        // the scheduler borrows its target; the spawned thread needs
+        // 'static, so give the mock a static lifetime
+        let target: &'static MockTarget =
+            Box::leak(Box::new(MockTarget::default()));
+        let sched = Arc::new(Scheduler::new(target, 2));
+
+        sched.enqueue("a".into(), GenParams::default());
+        sched.enqueue("b".into(), GenParams::default());
+        assert_eq!(sched.depth(), 2);
+
+        let s2 = sched.clone();
+        let blocked = Arc::new(AtomicU64::new(0));
+        let b2 = blocked.clone();
+        let h = std::thread::spawn(move || {
+            s2.enqueue("c".into(), GenParams::default());
+            b2.store(1, Ordering::SeqCst);
+        });
+        // the third enqueue must be blocked by backpressure
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(blocked.load(Ordering::SeqCst), 0, "enqueue did not block");
+        assert_eq!(sched.depth(), 2);
+
+        // draining frees capacity and unblocks the waiter
+        let first = sched.dispatch_all();
+        assert_eq!(first.len(), 2);
+        h.join().unwrap();
+        assert_eq!(blocked.load(Ordering::SeqCst), 1);
+        assert_eq!(sched.depth(), 1);
+        let rest = sched.dispatch_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].recv().unwrap().text, "c");
     }
 }

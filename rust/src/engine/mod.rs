@@ -12,9 +12,10 @@
 //! | `Pld`         | host n-gram prompt lookup        | `verify_ext_round` |
 //! | `Lookahead`   | host n-gram pool (simplified)    | `verify_ext_round` |
 //!
-//! MARS is a *flag* ([`GenParams::mars`]), not a method: it changes only
-//! the accept/reject rule inside the device-side verification, exactly as
-//! in the paper.
+//! MARS is a *verification policy* ([`GenParams::policy`]), not a method:
+//! it changes only the accept/reject rule inside the device-side
+//! verification, exactly as in the paper. Every policy of the
+//! [`crate::verify`] subsystem composes with every speculative method.
 
 use std::time::Instant;
 
@@ -25,6 +26,7 @@ use crate::runtime::Runtime;
 #[allow(unused_imports)]
 use crate::runtime::Session;
 use crate::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+use crate::verify::VerifyPolicy;
 
 /// Decoding method (the paper's baselines + MARS host).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -86,10 +88,10 @@ impl Method {
 #[derive(Debug, Clone)]
 pub struct GenParams {
     pub method: Method,
-    /// MARS margin-aware relaxation on top of the method's verification
-    pub mars: bool,
-    /// logit-ratio threshold θ (paper default 0.9)
-    pub theta: f32,
+    /// verification policy applied on top of the method's drafting
+    /// (`Strict` reproduces the lossless baseline rule; `Mars` is the
+    /// paper's margin-aware relaxation)
+    pub policy: VerifyPolicy,
     /// sampling temperature; 0 = greedy
     pub temperature: f32,
     /// chain draft length / tree depth K
@@ -111,8 +113,7 @@ impl Default for GenParams {
     fn default() -> Self {
         GenParams {
             method: Method::EagleTree,
-            mars: true,
-            theta: 0.9,
+            policy: VerifyPolicy::default(),
             temperature: 1.0,
             k: 7,
             beam: 2,

@@ -2,17 +2,22 @@
 //! stack reproducing Song et al., ACL 2026.
 //!
 //! Layer map (see DESIGN.md):
+//! * [`verify`] — the verification-policy subsystem: every accept rule
+//!   ([`verify::VerifyPolicy`]: `Strict`, `Mars`, `TopK`, `Entropy`) with
+//!   one canonical representation across CLI strings, request JSON, the
+//!   device `(policy_id, p0, p1)` config-slot triple, and a host-side
+//!   reference verifier used by the property tests.
 //! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt`, uploads model
 //!   weights once, threads the flat f32 decode state buffer-to-buffer.
 //! * [`engine`] — per-sequence decode sessions: prefill → rounds → extract,
 //!   with every decode method of the paper's evaluation (AR, SpS, EAGLE
-//!   chain/tree, Medusa, PLD, Lookahead) and the MARS verification rule as
-//!   a runtime flag.
+//!   chain/tree, Medusa, PLD, Lookahead); the verification policy is a
+//!   [`GenParams`] field, orthogonal to the method.
 //! * [`coordinator`] — the serving layer: scheduler, engine workers,
-//!   line-JSON TCP server, router, metrics.
+//!   line-JSON TCP server, router, per-policy metrics.
 //! * [`datasets`] / [`eval`] / [`bench`] — the paper's benchmark suite:
-//!   synthetic task analogs, quality metrics, and one harness per table
-//!   and figure of the evaluation section.
+//!   synthetic task analogs, quality metrics, one harness per table and
+//!   figure of the evaluation section, and a policy-sweep axis.
 
 pub mod bench;
 pub mod coordinator;
@@ -23,6 +28,8 @@ pub mod runtime;
 pub mod spec;
 pub mod tokenizer;
 pub mod util;
+pub mod verify;
 
 pub use engine::{DecodeEngine, GenParams, GenResult, Method};
 pub use runtime::{Artifacts, Runtime};
+pub use verify::{AcceptFlag, VerifyPolicy};

@@ -4,9 +4,9 @@
 //! mars info                          artifact + model summary
 //! mars generate --prompt "..."       one-shot generation
 //! mars serve --bind 127.0.0.1:7071   line-JSON TCP serving
-//! mars bench <table1..table7|fig3|perf|all>
+//! mars bench <table1..table7|fig3|policies|perf|all>
 //! mars analyze <fig1|fig4>           probe-ring dumps + ASCII plots
-//! mars eval --task arith --method eagle_tree [--mars]
+//! mars eval --task arith --method eagle_tree [--policy mars:0.9]
 //! ```
 
 use std::path::PathBuf;
@@ -21,6 +21,7 @@ use mars::datasets::{dataset, Task};
 use mars::engine::{DecodeEngine, GenParams, Method};
 use mars::runtime::{Artifacts, Runtime};
 use mars::util::cli::Args;
+use mars::verify::VerifyPolicy;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,13 +54,16 @@ USAGE: mars <cmd> [flags]
   info                       artifact + model summary
   generate --prompt TEXT     one-shot generation
       [--method ar|sps|eagle_chain|eagle_tree|medusa|pld|lookahead]
-      [--mars|--no-mars] [--theta 0.9] [--temperature 1.0] [--k 7]
-      [--beam 2] [--branch 2] [--max-new 128] [--seed 0] [--hostloop]
-  serve [--bind ADDR] [--replicas 1] [--slots 4] [--policy rr|ll]
-  bench table1|table2|table3|table4|table5|table6|table7|fig3|perf|all
+      [--policy strict|mars:0.9|topk:2:0.1|entropy:1.5]
+      [--mars|--no-mars] [--theta 0.9]   (legacy aliases for --policy)
+      [--temperature 1.0] [--k 7] [--beam 2] [--branch 2]
+      [--max-new 128] [--seed 0] [--hostloop]
+  serve [--bind ADDR] [--replicas 1] [--slots 4] [--route rr|ll]
+  bench table1|..|table7|fig3|perf|policies|all
       [--n 16] [--seed 7] [--max-new 96]
-  analyze fig1|fig4 [--n 24] [--theta 0.9]
-  eval --task arith|code|chat|sum|mt [--method M] [--mars] [--n 16]
+      [--policies strict,mars:0.9,topk:2,entropy:1.5]   (bench policies)
+  analyze fig1|fig4 [--n 24] [--policy mars:0.9]
+  eval --task arith|code|chat|sum|mt [--method M] [--policy P] [--n 16]
 
   global: --artifacts DIR (default ./artifacts or $MARS_ARTIFACTS)"
     );
@@ -71,18 +75,31 @@ fn artifact_dir(args: &Args) -> PathBuf {
         .unwrap_or_else(Artifacts::default_dir)
 }
 
+/// Resolve the verification policy: `--policy STR` wins; the legacy
+/// `--mars` / `--no-mars` / `--theta θ` flags still map onto
+/// `Mars { theta }` / `Strict`.
+fn policy_from_args(args: &Args) -> Result<VerifyPolicy> {
+    if let Some(s) = args.get("policy") {
+        return VerifyPolicy::parse(s)
+            .map(|p| p.normalize_for_device())
+            .ok_or_else(|| anyhow!("bad policy '{s}' (try strict|mars:0.9|topk:2:0.1|entropy:1.5)"));
+    }
+    if args.has("no-mars") {
+        return Ok(VerifyPolicy::Strict);
+    }
+    let theta = args.get_f64("theta", 0.9) as f32;
+    if args.has("mars") || args.get("theta").is_some() {
+        return Ok(VerifyPolicy::Mars { theta });
+    }
+    Ok(VerifyPolicy::default())
+}
+
 fn gen_params(args: &Args) -> Result<GenParams> {
     let mut p = GenParams::default();
     if let Some(m) = args.get("method") {
         p.method = Method::parse(m).ok_or_else(|| anyhow!("bad method {m}"))?;
     }
-    if args.has("no-mars") {
-        p.mars = false;
-    }
-    if args.has("mars") {
-        p.mars = true;
-    }
-    p.theta = args.get_f64("theta", p.theta as f64) as f32;
+    p.policy = policy_from_args(args)?;
     p.temperature = args.get_f64("temperature", p.temperature as f64) as f32;
     p.k = args.get_usize("k", p.k);
     p.beam = args.get_usize("beam", p.beam);
@@ -136,8 +153,11 @@ fn run(args: &Args) -> Result<()> {
             let bind = args.get_or("bind", "127.0.0.1:7071");
             let replicas = args.get_usize("replicas", 1);
             let slots = args.get_usize("slots", 4);
-            let policy = RouterPolicy::parse(&args.get_or("policy", "ll"))
-                .ok_or_else(|| anyhow!("bad policy"))?;
+            // routing policy is --route; --policy everywhere else means
+            // the verification policy, so it is not aliased here
+            let route = args.get_or("route", "ll");
+            let policy = RouterPolicy::parse(&route)
+                .ok_or_else(|| anyhow!("bad routing policy '{route}'"))?;
             let router = Arc::new(Router::start(
                 &dir,
                 replicas,
@@ -169,6 +189,18 @@ fn run(args: &Args) -> Result<()> {
             let mut ctx =
                 BenchCtx::new(&engine, args.get_usize("n", 16), args.get_usize("seed", 7) as u64);
             ctx.max_new = args.get_usize("max-new", 96);
+            let sweep = || -> Result<Vec<VerifyPolicy>> {
+                let spec = args
+                    .get("policies")
+                    .unwrap_or("strict,mars:0.9,topk:2,entropy:1.5");
+                VerifyPolicy::parse_list(spec)
+                    .map(|v| {
+                        v.into_iter()
+                            .map(|p| p.normalize_for_device())
+                            .collect()
+                    })
+                    .ok_or_else(|| anyhow!("bad --policies list '{spec}'"))
+            };
             match which {
                 "table1" => bench::table1(&ctx)?,
                 "table2" => bench::table2(&ctx)?,
@@ -179,6 +211,7 @@ fn run(args: &Args) -> Result<()> {
                 "table7" => bench::table7(&ctx)?,
                 "fig3" => bench::fig3(&ctx)?,
                 "perf" => bench::perf(&ctx, &dir)?,
+                "policies" => bench::policy_sweep(&ctx, &sweep()?)?,
                 "all" => {
                     bench::table1(&ctx)?;
                     bench::table2(&ctx)?;
@@ -188,6 +221,7 @@ fn run(args: &Args) -> Result<()> {
                     bench::table6(&ctx)?;
                     bench::table7(&ctx)?;
                     bench::fig3(&ctx)?;
+                    bench::policy_sweep(&ctx, &sweep()?)?;
                     bench::perf(&ctx, &dir)?;
                 }
                 other => bail!("unknown bench '{other}'"),
@@ -215,11 +249,11 @@ fn run(args: &Args) -> Result<()> {
             );
             let e = ctx.run_task(task, &params)?;
             println!(
-                "task={} method={} mars={} -> acc={:.3} rouge={:.3} \
+                "task={} method={} policy={} -> acc={:.3} rouge={:.3} \
                  bleu={:.2} chrf={:.2} judge={:.2} tau={:.2} tok/s={:.1}",
                 task.name(),
                 params.method.name(),
-                params.mars,
+                params.policy.label(),
                 e.quality.accuracy,
                 e.quality.rouge_l,
                 e.quality.bleu,
@@ -244,7 +278,10 @@ fn analyze(args: &Args, dir: &PathBuf, which: &str) -> Result<()> {
     let mut params = gen_params(args)?;
     params.probe = true;
     params.method = Method::EagleTree;
-    params.mars = true;
+    if !params.policy.is_relaxed() {
+        // the probe figures need relaxed acceptances to plot
+        params.policy = VerifyPolicy::default();
+    }
 
     let mut entries = Vec::new();
     for (i, task) in Task::all().iter().enumerate() {
@@ -265,7 +302,7 @@ fn analyze(args: &Args, dir: &PathBuf, which: &str) -> Result<()> {
         let pr = (e.z2 - e.z1).exp();
         csv.push_str(&format!(
             "{:.4},{:.4},{:.4},{:.5},{}\n",
-            e.z1, e.z2, r, pr, e.flag
+            e.z1, e.z2, r, pr, e.flag as u8
         ));
     }
     std::fs::write(&csv_path, &csv)?;
@@ -296,7 +333,9 @@ fn analyze(args: &Args, dir: &PathBuf, which: &str) -> Result<()> {
                 if in_band.is_empty() {
                     continue;
                 }
-                let cnt = |f: u8| in_band.iter().filter(|e| e.flag == f).count();
+                let cnt = |f: mars::verify::AcceptFlag| {
+                    in_band.iter().filter(|e| e.flag == f).count()
+                };
                 let mean_pr = in_band
                     .iter()
                     .map(|e| ((e.z2 - e.z1).exp()) as f64)
@@ -305,9 +344,9 @@ fn analyze(args: &Args, dir: &PathBuf, which: &str) -> Result<()> {
                 out.push_str(&format!(
                     "| {lo:.1}-{hi:.1} | {} | {} | {} | {} | {mean_pr:.3} |\n",
                     in_band.len(),
-                    cnt(1),
-                    cnt(2),
-                    cnt(0)
+                    cnt(mars::verify::AcceptFlag::Exact),
+                    cnt(mars::verify::AcceptFlag::Relaxed),
+                    cnt(mars::verify::AcceptFlag::Reject)
                 ));
             }
             out.push_str(

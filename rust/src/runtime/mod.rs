@@ -292,8 +292,10 @@ impl Runtime {
         let mut cfg = vec![0f32; n_cfg];
         let c = |name: &str| lay.cfg[name];
         cfg[c("temp")] = params.temperature;
-        cfg[c("theta")] = params.theta;
-        cfg[c("mars_on")] = if params.mars { 1.0 } else { 0.0 };
+        let [policy_id, p0, p1] = params.policy.encode_slots();
+        cfg[c("policy_id")] = policy_id;
+        cfg[c("p0")] = p0;
+        cfg[c("p1")] = p1;
         cfg[c("kdraft")] = params.k as f32;
         cfg[c("max_new")] = params.max_new as f32;
         cfg[c("eos")] = crate::tokenizer::EOS as f32;

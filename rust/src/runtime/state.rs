@@ -10,10 +10,13 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Value;
+use crate::verify::AcceptFlag;
 
 /// Scalar slots the rust side reads/writes (names must exist in the JSON).
+/// `policy_id`/`p0`/`p1` carry the [`crate::verify::VerifyPolicy`] slot
+/// triple (one HLO artifact covers every verification policy).
 pub const REQUIRED_SCALARS: &[&str] = &[
-    "pos", "out_len", "finished", "temp", "theta", "mars_on", "kdraft",
+    "pos", "out_len", "finished", "temp", "policy_id", "p0", "p1", "kdraft",
     "max_new", "eos", "beam", "branch", "probe_on", "probe_len", "rounds",
     "committed", "target_calls", "draft_steps", "exact_accepts",
     "relaxed_accepts", "rejects", "bonus", "prompt_len", "last_accept",
@@ -194,8 +197,8 @@ pub struct ProbeDump {
 pub struct ProbeEntry {
     pub z1: f32,
     pub z2: f32,
-    /// 0 = rejected, 1 = exact accept, 2 = MARS relaxed accept
-    pub flag: u8,
+    /// accept-flag taxonomy: rejected / exact / policy-relaxed accept
+    pub flag: AcceptFlag,
 }
 
 impl ProbeDump {
@@ -212,7 +215,7 @@ impl ProbeDump {
             entries.push(ProbeEntry {
                 z1: body[i * w],
                 z2: body[i * w + 1],
-                flag: body[i * w + 2] as u8,
+                flag: AcceptFlag::from_f32(body[i * w + 2]),
             });
         }
         Ok(ProbeDump { entries })
@@ -228,12 +231,12 @@ mod tests {
           "state_len": 200, "extract_len": 72, "extract_probe_len": 112,
           "n_scalars": 64,
           "scalars": {"pos":0,"eagle_pos":1,"sps_pos":2,"out_len":3,
-            "finished":4,"rng":5,"temp":6,"theta":7,"mars_on":8,"kdraft":9,
+            "finished":4,"rng":5,"temp":6,"p0":7,"policy_id":8,"kdraft":9,
             "max_new":10,"eos":11,"beam":12,"branch":13,"probe_on":14,
             "probe_len":15,"rounds":16,"committed":17,"target_calls":18,
             "draft_steps":19,"exact_accepts":20,"relaxed_accepts":21,
             "rejects":22,"bonus":23,"prompt_len":24,"last_accept":25,
-            "greedy":26,"seed":27},
+            "greedy":26,"seed":27,"p1":28},
           "cfg": {"temp":0},
           "sections": {"out": {"offset":64, "size":8, "shape":[8]}},
           "consts": {"probe_max":16, "probe_w":3},
@@ -279,8 +282,11 @@ mod tests {
         raw[69] = 0.0;
         let p = ProbeDump::decode(&lay, &raw).unwrap();
         assert_eq!(p.entries.len(), 2);
-        assert_eq!(p.entries[0].flag, 2);
-        assert_eq!(p.entries[1], ProbeEntry { z1: 3.0, z2: 1.0, flag: 0 });
+        assert_eq!(p.entries[0].flag, AcceptFlag::Relaxed);
+        assert_eq!(
+            p.entries[1],
+            ProbeEntry { z1: 3.0, z2: 1.0, flag: AcceptFlag::Reject }
+        );
     }
 
     #[test]

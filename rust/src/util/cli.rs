@@ -1,6 +1,9 @@
 //! Tiny CLI argument parser (clap is not in the offline registry).
 //!
 //! Grammar: `mars <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flag values are opaque strings here; structured values (e.g.
+//! `--policy mars:0.9` → `verify::VerifyPolicy`) are parsed by the
+//! consumer so this layer stays dependency-free.
 
 use std::collections::BTreeMap;
 
@@ -85,6 +88,16 @@ mod tests {
     fn equals_form() {
         let a = Args::parse(&sv(&["run", "--theta=0.9"]), &[]).unwrap();
         assert_eq!(a.get_f64("theta", 0.0), 0.9);
+    }
+
+    #[test]
+    fn policy_flag_passes_through_both_forms() {
+        let a = Args::parse(&sv(&["generate", "--policy", "mars:0.9"]), &[])
+            .unwrap();
+        assert_eq!(a.get("policy"), Some("mars:0.9"));
+        let b = Args::parse(&sv(&["generate", "--policy=topk:2:0.1"]), &[])
+            .unwrap();
+        assert_eq!(b.get("policy"), Some("topk:2:0.1"));
     }
 
     #[test]

@@ -1,0 +1,598 @@
+//! Verification policies — the one layer MARS actually changes.
+//!
+//! The paper's framing is that speculative decoding frameworks differ in
+//! *drafting* while the accept/reject rule is a small, swappable policy.
+//! This module makes that literal: every accept rule the stack supports is
+//! a [`VerifyPolicy`] variant with one canonical representation across
+//!
+//! * the CLI (`--policy mars:0.9`, see [`VerifyPolicy::parse`]),
+//! * the line-JSON protocol (`"policy": {"mars": {"theta": 0.9}}` plus the
+//!   legacy flat `"mars"/"theta"` keys, see [`VerifyPolicy::from_request`]),
+//! * the device config-slot triple `(policy_id, p0, p1)` consumed by the
+//!   lowered round programs (see [`VerifyPolicy::encode_slots`] and
+//!   `python/compile/state_spec.py`), and
+//! * a host-side reference verifier ([`VerifyPolicy::accept`],
+//!   [`VerifyPolicy::scan`]) that mirrors the Pallas kernel and anchors the
+//!   property tests.
+//!
+//! Policy semantics (relaxation always targets the target's top-2 token;
+//! an exact match with the target's own pick `t*` is always accepted):
+//!
+//! | id | variant              | relaxed accept of `draft == top2` when |
+//! |----|----------------------|-----------------------------------------|
+//! | 0  | `Strict`             | never (bit-identical to pre-policy `mars=false`) |
+//! | 1  | `Mars { theta }`     | `z1>0 && z2>0 && z2/z1 > theta`          |
+//! | 2  | `TopK { k, eps }`    | draft in target top-k and `zk>0 && zk/z1 > 1-eps` (device clamps k to 2 — the round programs materialize top-2 only) |
+//! | 3  | `Entropy { h_max }`  | `z1 - z2 < h_max` — the top-2 entropy `H(σ(z1-z2))` is strictly decreasing in the logit gap, so an entropy floor is a gap ceiling in nats |
+//!
+//! `TopK { 2, eps }` is definitionally `Mars { 1 - eps }`; the property
+//! suite pins that equivalence.
+
+use crate::util::json::Value;
+
+/// Device-slot policy ids (mirrored by `python/compile/state_spec.py`).
+pub const POLICY_ID_STRICT: f32 = 0.0;
+pub const POLICY_ID_MARS: f32 = 1.0;
+pub const POLICY_ID_TOPK: f32 = 2.0;
+pub const POLICY_ID_ENTROPY: f32 = 3.0;
+
+/// A pluggable speculative-verification accept rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VerifyPolicy {
+    /// Exact verification only — the lossless baseline rule.
+    Strict,
+    /// Margin-aware relaxation (the paper): accept the target's top-2
+    /// token when the top-2/top-1 logit ratio exceeds `theta` on the
+    /// positive domain.
+    Mars { theta: f32 },
+    /// Top-k relaxation: accept any of the target's top-k tokens whose
+    /// logit is within a relative `eps` of top-1 (positive domain).
+    TopK { k: usize, eps: f32 },
+    /// Entropy relaxation: accept the target's top-2 token while the
+    /// top-2 logit gap (nats) stays under `h_max`.
+    Entropy { h_max: f32 },
+}
+
+impl Default for VerifyPolicy {
+    /// The paper's headline setting.
+    fn default() -> Self {
+        VerifyPolicy::Mars { theta: 0.9 }
+    }
+}
+
+/// Outcome of verifying one drafted token (the accept-flag taxonomy that
+/// flows through probe rings, snapshots and metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum AcceptFlag {
+    Reject = 0,
+    Exact = 1,
+    /// Accepted by the policy's relaxation, not by exact match.
+    Relaxed = 2,
+}
+
+impl AcceptFlag {
+    pub fn from_f32(x: f32) -> AcceptFlag {
+        match x as u8 {
+            1 => AcceptFlag::Exact,
+            2 => AcceptFlag::Relaxed,
+            _ => AcceptFlag::Reject,
+        }
+    }
+
+    pub fn accepted(&self) -> bool {
+        !matches!(self, AcceptFlag::Reject)
+    }
+}
+
+impl VerifyPolicy {
+    /// Parse the CLI string form: `strict`, `mars[:theta]`, `topk[:k[:eps]]`,
+    /// `entropy[:h_max]`.
+    pub fn parse(s: &str) -> Option<VerifyPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        let mut parts = s.split(':');
+        let head = parts.next()?;
+        let p0 = parts.next();
+        let p1 = parts.next();
+        if parts.next().is_some() {
+            return None;
+        }
+        let f = |x: Option<&str>, d: f32| -> Option<f32> {
+            match x {
+                None => Some(d),
+                Some(t) => t.parse::<f32>().ok().filter(|v| v.is_finite()),
+            }
+        };
+        Some(match head {
+            "strict" | "exact" | "off" => {
+                if p0.is_some() {
+                    return None;
+                }
+                VerifyPolicy::Strict
+            }
+            "mars" | "margin" => {
+                if p1.is_some() {
+                    return None;
+                }
+                VerifyPolicy::Mars { theta: f(p0, 0.9)? }
+            }
+            "topk" | "top-k" => {
+                let k = match p0 {
+                    None => 2,
+                    Some(t) => t.parse::<usize>().ok().filter(|&k| k >= 1)?,
+                };
+                VerifyPolicy::TopK { k, eps: f(p1, 0.1)? }
+            }
+            "entropy" | "ent" => {
+                if p1.is_some() {
+                    return None;
+                }
+                VerifyPolicy::Entropy { h_max: f(p0, 1.5)? }
+            }
+            _ => return None,
+        })
+    }
+
+    /// Parse a comma-separated sweep list, e.g.
+    /// `strict,mars:0.9,topk:2,entropy:1.5`.
+    pub fn parse_list(s: &str) -> Option<Vec<VerifyPolicy>> {
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(VerifyPolicy::parse)
+            .collect::<Option<Vec<_>>>()
+            .filter(|v| !v.is_empty())
+    }
+
+    /// Family name (metrics label; stable across parameter values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifyPolicy::Strict => "strict",
+            VerifyPolicy::Mars { .. } => "mars",
+            VerifyPolicy::TopK { .. } => "topk",
+            VerifyPolicy::Entropy { .. } => "entropy",
+        }
+    }
+
+    /// Full CLI label; `parse(label())` round-trips the policy.
+    pub fn label(&self) -> String {
+        match self {
+            VerifyPolicy::Strict => "strict".to_string(),
+            VerifyPolicy::Mars { theta } => format!("mars:{theta}"),
+            VerifyPolicy::TopK { k, eps } => format!("topk:{k}:{eps}"),
+            VerifyPolicy::Entropy { h_max } => format!("entropy:{h_max}"),
+        }
+    }
+
+    /// Does this policy ever accept beyond exact matches?
+    pub fn is_relaxed(&self) -> bool {
+        !matches!(self, VerifyPolicy::Strict)
+    }
+
+    /// Normalize to what the device pipeline can actually execute: the
+    /// round programs materialize top-2 only, so `TopK { k > 2 }` clamps
+    /// to `k = 2`. Applied at the request/CLI boundary so the label a
+    /// response echoes (and metrics attribute) is the policy that ran;
+    /// the full top-k rule remains available host-side via
+    /// [`VerifyPolicy::accept`].
+    pub fn normalize_for_device(&self) -> VerifyPolicy {
+        match *self {
+            VerifyPolicy::TopK { k, eps } if k > 2 => {
+                VerifyPolicy::TopK { k: 2, eps }
+            }
+            p => p,
+        }
+    }
+
+    // ----------------------------------------------------- JSON codec ----
+
+    /// Wire form: `"strict"` | `{"mars": {"theta": θ}}` |
+    /// `{"topk": {"k": k, "eps": ε}}` | `{"entropy": {"h_max": h}}`.
+    pub fn to_json(&self) -> Value {
+        match self {
+            VerifyPolicy::Strict => Value::Str("strict".into()),
+            VerifyPolicy::Mars { theta } => {
+                let mut inner = Value::obj();
+                inner.set("theta", Value::Num(*theta as f64));
+                let mut o = Value::obj();
+                o.set("mars", inner);
+                o
+            }
+            VerifyPolicy::TopK { k, eps } => {
+                let mut inner = Value::obj();
+                inner.set("k", Value::Num(*k as f64));
+                inner.set("eps", Value::Num(*eps as f64));
+                let mut o = Value::obj();
+                o.set("topk", inner);
+                o
+            }
+            VerifyPolicy::Entropy { h_max } => {
+                let mut inner = Value::obj();
+                inner.set("h_max", Value::Num(*h_max as f64));
+                let mut o = Value::obj();
+                o.set("entropy", inner);
+                o
+            }
+        }
+    }
+
+    /// Parse the wire form produced by [`VerifyPolicy::to_json`]; a JSON
+    /// string is treated as the CLI form (so `"mars:0.9"` also works).
+    pub fn from_json(v: &Value) -> Result<VerifyPolicy, String> {
+        if let Some(s) = v.as_str() {
+            return VerifyPolicy::parse(s)
+                .ok_or_else(|| format!("unknown policy '{s}'"));
+        }
+        let obj = v
+            .as_obj()
+            .ok_or("policy must be a string or a one-key object")?;
+        if obj.len() != 1 {
+            return Err("policy object must have exactly one key".into());
+        }
+        let (key, body) = obj.iter().next().unwrap();
+        let num = |name: &str, d: f32| -> Result<f32, String> {
+            match body.get(name) {
+                None => Ok(d),
+                Some(x) => x
+                    .as_f64()
+                    .map(|f| f as f32)
+                    .filter(|f| f.is_finite())
+                    .ok_or_else(|| format!("policy.{key}.{name} not a number")),
+            }
+        };
+        match key.as_str() {
+            "strict" => Ok(VerifyPolicy::Strict),
+            "mars" => Ok(VerifyPolicy::Mars { theta: num("theta", 0.9)? }),
+            "topk" => {
+                let k = match body.get("k") {
+                    None => 2,
+                    Some(x) => x
+                        .as_usize()
+                        .filter(|&k| k >= 1)
+                        .ok_or("policy.topk.k must be a positive integer")?,
+                };
+                Ok(VerifyPolicy::TopK { k, eps: num("eps", 0.1)? })
+            }
+            "entropy" => {
+                Ok(VerifyPolicy::Entropy { h_max: num("h_max", 1.5)? })
+            }
+            other => Err(format!("unknown policy '{other}'")),
+        }
+    }
+
+    /// Resolve the policy of one request object: the `"policy"` key wins;
+    /// otherwise the legacy flat `"mars"` / `"theta"` keys are honored
+    /// (`mars=false` → `Strict`, `mars=true` or bare `theta` → `Mars`).
+    pub fn from_request(v: &Value) -> Result<VerifyPolicy, String> {
+        if let Some(p) = v.get("policy") {
+            return VerifyPolicy::from_json(p);
+        }
+        let theta = match v.get("theta") {
+            None => None,
+            Some(x) => Some(
+                x.as_f64()
+                    .map(|f| f as f32)
+                    .filter(|f| f.is_finite())
+                    .ok_or("'theta' not a number")?,
+            ),
+        };
+        match v.get("mars").and_then(|b| b.as_bool()) {
+            Some(false) => Ok(VerifyPolicy::Strict),
+            Some(true) => {
+                Ok(VerifyPolicy::Mars { theta: theta.unwrap_or(0.9) })
+            }
+            None => match theta {
+                Some(theta) => Ok(VerifyPolicy::Mars { theta }),
+                None => Ok(VerifyPolicy::default()),
+            },
+        }
+    }
+
+    // ------------------------------------------------ device encoding ----
+
+    /// Encode into the `(policy_id, p0, p1)` device config-slot triple
+    /// consumed by the round programs (one HLO artifact covers every
+    /// policy; see `python/compile/state_spec.py`).
+    pub fn encode_slots(&self) -> [f32; 3] {
+        match self {
+            VerifyPolicy::Strict => [POLICY_ID_STRICT, 0.0, 0.0],
+            VerifyPolicy::Mars { theta } => [POLICY_ID_MARS, *theta, 0.0],
+            VerifyPolicy::TopK { k, eps } => {
+                [POLICY_ID_TOPK, *k as f32, *eps]
+            }
+            VerifyPolicy::Entropy { h_max } => {
+                [POLICY_ID_ENTROPY, *h_max, 0.0]
+            }
+        }
+    }
+
+    /// Invert [`VerifyPolicy::encode_slots`].
+    pub fn decode_slots(slots: [f32; 3]) -> Result<VerifyPolicy, String> {
+        let [id, p0, p1] = slots;
+        match id as i64 {
+            0 => Ok(VerifyPolicy::Strict),
+            1 => Ok(VerifyPolicy::Mars { theta: p0 }),
+            2 => Ok(VerifyPolicy::TopK { k: p0 as usize, eps: p1 }),
+            3 => Ok(VerifyPolicy::Entropy { h_max: p0 }),
+            other => Err(format!("unknown policy_id {other}")),
+        }
+    }
+
+    // ------------------------------------------- reference verification --
+
+    /// Host-side reference accept rule for one position — mirrors the
+    /// device kernel (`python/compile/kernels/mars_verify.py`) and is the
+    /// ground truth for the property tests.
+    ///
+    /// `top` is the target's top logits at this position as
+    /// `(token, logit)` pairs, best first (at least top-2 for relaxed
+    /// policies; the device pipeline materializes exactly 2). `tstar` is
+    /// the target's own chosen token (argmax when greedy, else a sample).
+    pub fn accept(
+        &self,
+        draft: u32,
+        tstar: u32,
+        top: &[(u32, f32)],
+    ) -> AcceptFlag {
+        if draft == tstar {
+            return AcceptFlag::Exact;
+        }
+        let Some(&(_, z1)) = top.first() else {
+            return AcceptFlag::Reject;
+        };
+        let top2 = top.get(1);
+        let relaxed = match *self {
+            VerifyPolicy::Strict => false,
+            VerifyPolicy::Mars { theta } => top2.is_some_and(|&(i2, z2)| {
+                draft == i2 && z1 > 0.0 && z2 > 0.0 && z2 / z1 > theta
+            }),
+            VerifyPolicy::TopK { k, eps } => top
+                .iter()
+                .take(k)
+                .skip(1)
+                .any(|&(ij, zj)| {
+                    draft == ij && z1 > 0.0 && zj > 0.0 && zj / z1 > 1.0 - eps
+                }),
+            VerifyPolicy::Entropy { h_max } => {
+                top2.is_some_and(|&(i2, z2)| draft == i2 && z1 - z2 < h_max)
+            }
+        };
+        if relaxed {
+            AcceptFlag::Relaxed
+        } else {
+            AcceptFlag::Reject
+        }
+    }
+
+    /// Reference chain scan: verify drafted positions in order, stopping
+    /// at the first reject (paper Algorithm 1 shape). Each row of `rows`
+    /// is `(tstar, top)` for the matching draft position. Returns the
+    /// per-position flags and the accepted prefix length `m`.
+    pub fn scan(
+        &self,
+        drafts: &[u32],
+        rows: &[(u32, Vec<(u32, f32)>)],
+    ) -> (Vec<AcceptFlag>, usize) {
+        let n = drafts.len().min(rows.len());
+        let mut flags = vec![AcceptFlag::Reject; n];
+        let mut m = 0;
+        for i in 0..n {
+            let (tstar, top) = &rows[i];
+            let f = self.accept(drafts[i], *tstar, top);
+            if !f.accepted() {
+                break;
+            }
+            flags[i] = f;
+            m += 1;
+        }
+        (flags, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_family() {
+        assert_eq!(VerifyPolicy::parse("strict"), Some(VerifyPolicy::Strict));
+        assert_eq!(
+            VerifyPolicy::parse("mars:0.92"),
+            Some(VerifyPolicy::Mars { theta: 0.92 })
+        );
+        assert_eq!(
+            VerifyPolicy::parse("mars"),
+            Some(VerifyPolicy::Mars { theta: 0.9 })
+        );
+        assert_eq!(
+            VerifyPolicy::parse("topk:3:0.2"),
+            Some(VerifyPolicy::TopK { k: 3, eps: 0.2 })
+        );
+        assert_eq!(
+            VerifyPolicy::parse("topk:2"),
+            Some(VerifyPolicy::TopK { k: 2, eps: 0.1 })
+        );
+        assert_eq!(
+            VerifyPolicy::parse("entropy:1.5"),
+            Some(VerifyPolicy::Entropy { h_max: 1.5 })
+        );
+        assert_eq!(VerifyPolicy::parse("warp"), None);
+        assert_eq!(VerifyPolicy::parse("strict:0.5"), None);
+        assert_eq!(VerifyPolicy::parse("topk:0"), None);
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for p in [
+            VerifyPolicy::Strict,
+            VerifyPolicy::Mars { theta: 0.875 },
+            VerifyPolicy::TopK { k: 4, eps: 0.25 },
+            VerifyPolicy::Entropy { h_max: 0.75 },
+        ] {
+            assert_eq!(VerifyPolicy::parse(&p.label()), Some(p), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        for p in [
+            VerifyPolicy::Strict,
+            VerifyPolicy::Mars { theta: 0.9 },
+            VerifyPolicy::TopK { k: 2, eps: 0.5 },
+            VerifyPolicy::Entropy { h_max: 1.5 },
+        ] {
+            let v = p.to_json();
+            let text = v.to_string_json();
+            let back = Value::parse(&text).unwrap();
+            assert_eq!(VerifyPolicy::from_json(&back), Ok(p), "{text}");
+        }
+    }
+
+    #[test]
+    fn device_normalization_clamps_topk() {
+        assert_eq!(
+            VerifyPolicy::TopK { k: 5, eps: 0.3 }.normalize_for_device(),
+            VerifyPolicy::TopK { k: 2, eps: 0.3 }
+        );
+        for p in [
+            VerifyPolicy::Strict,
+            VerifyPolicy::Mars { theta: 0.9 },
+            VerifyPolicy::TopK { k: 2, eps: 0.1 },
+            VerifyPolicy::Entropy { h_max: 1.5 },
+        ] {
+            assert_eq!(p.normalize_for_device(), p);
+        }
+    }
+
+    #[test]
+    fn slots_round_trip() {
+        for p in [
+            VerifyPolicy::Strict,
+            VerifyPolicy::Mars { theta: 0.5 },
+            VerifyPolicy::TopK { k: 3, eps: 0.125 },
+            VerifyPolicy::Entropy { h_max: 2.0 },
+        ] {
+            assert_eq!(VerifyPolicy::decode_slots(p.encode_slots()), Ok(p));
+        }
+        assert!(VerifyPolicy::decode_slots([9.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn legacy_request_keys_map_to_policies() {
+        let strict = Value::parse(r#"{"mars": false, "theta": 0.7}"#).unwrap();
+        assert_eq!(
+            VerifyPolicy::from_request(&strict),
+            Ok(VerifyPolicy::Strict)
+        );
+        let mars = Value::parse(r#"{"mars": true, "theta": 0.7}"#).unwrap();
+        assert_eq!(
+            VerifyPolicy::from_request(&mars),
+            Ok(VerifyPolicy::Mars { theta: 0.7 })
+        );
+        let bare_theta = Value::parse(r#"{"theta": 0.85}"#).unwrap();
+        assert_eq!(
+            VerifyPolicy::from_request(&bare_theta),
+            Ok(VerifyPolicy::Mars { theta: 0.85 })
+        );
+        let none = Value::parse(r#"{}"#).unwrap();
+        assert_eq!(
+            VerifyPolicy::from_request(&none),
+            Ok(VerifyPolicy::default())
+        );
+        // the structured key wins over legacy keys
+        let both = Value::parse(
+            r#"{"policy": {"entropy": {"h_max": 1.0}}, "mars": true}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            VerifyPolicy::from_request(&both),
+            Ok(VerifyPolicy::Entropy { h_max: 1.0 })
+        );
+    }
+
+    #[test]
+    fn strict_accepts_only_exact() {
+        let p = VerifyPolicy::Strict;
+        let top = vec![(7, 3.0), (9, 2.9)];
+        assert_eq!(p.accept(7, 7, &top), AcceptFlag::Exact);
+        assert_eq!(p.accept(9, 7, &top), AcceptFlag::Reject);
+    }
+
+    #[test]
+    fn mars_relaxes_above_theta_on_positive_domain() {
+        let p = VerifyPolicy::Mars { theta: 0.9 };
+        assert_eq!(
+            p.accept(9, 7, &[(7, 3.0), (9, 2.9)]),
+            AcceptFlag::Relaxed
+        );
+        assert_eq!(
+            p.accept(9, 7, &[(7, 3.0), (9, 2.0)]),
+            AcceptFlag::Reject
+        );
+        // negative logits never relax
+        assert_eq!(
+            p.accept(9, 7, &[(7, -1.0), (9, -1.01)]),
+            AcceptFlag::Reject
+        );
+    }
+
+    #[test]
+    fn topk2_equals_mars_complement() {
+        let topk = VerifyPolicy::TopK { k: 2, eps: 0.1 };
+        let mars = VerifyPolicy::Mars { theta: 0.9 };
+        for (z1, z2) in [(3.0, 2.95), (3.0, 2.0), (1.0, 0.95), (-1.0, -2.0)]
+        {
+            let top = vec![(7u32, z1), (9u32, z2)];
+            for draft in [7u32, 9, 11] {
+                assert_eq!(
+                    topk.accept(draft, 7, &top),
+                    mars.accept(draft, 7, &top),
+                    "draft={draft} z1={z1} z2={z2}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_reaches_beyond_top2() {
+        let p = VerifyPolicy::TopK { k: 3, eps: 0.5 };
+        let top = vec![(7, 3.0), (9, 2.9), (11, 2.8)];
+        assert_eq!(p.accept(11, 7, &top), AcceptFlag::Relaxed);
+        let p2 = VerifyPolicy::TopK { k: 2, eps: 0.5 };
+        assert_eq!(p2.accept(11, 7, &top), AcceptFlag::Reject);
+    }
+
+    #[test]
+    fn entropy_gate_is_a_gap_ceiling() {
+        let p = VerifyPolicy::Entropy { h_max: 0.5 };
+        assert_eq!(
+            p.accept(9, 7, &[(7, 3.0), (9, 2.6)]),
+            AcceptFlag::Relaxed
+        );
+        assert_eq!(
+            p.accept(9, 7, &[(7, 3.0), (9, 2.4)]),
+            AcceptFlag::Reject
+        );
+    }
+
+    #[test]
+    fn scan_stops_at_first_reject() {
+        let p = VerifyPolicy::Mars { theta: 0.9 };
+        let rows: Vec<(u32, Vec<(u32, f32)>)> = vec![
+            (5, vec![(5, 3.0), (6, 1.0)]),
+            (5, vec![(5, 3.0), (8, 2.95)]),
+            (5, vec![(5, 3.0), (6, 1.0)]),
+            (5, vec![(5, 3.0), (6, 1.0)]),
+        ];
+        let (flags, m) = p.scan(&[5, 8, 9, 5], &rows);
+        assert_eq!(m, 2);
+        assert_eq!(
+            flags,
+            vec![
+                AcceptFlag::Exact,
+                AcceptFlag::Relaxed,
+                AcceptFlag::Reject,
+                AcceptFlag::Reject
+            ]
+        );
+    }
+}

@@ -10,6 +10,7 @@ use std::path::PathBuf;
 
 use mars::engine::{DecodeEngine, GenParams, Method};
 use mars::runtime::{Artifacts, Runtime};
+use mars::verify::{AcceptFlag, VerifyPolicy};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = std::env::var("MARS_ARTIFACTS")
@@ -23,10 +24,10 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn params(method: Method, mars: bool, temp: f32) -> GenParams {
+fn params(method: Method, policy: VerifyPolicy, temp: f32) -> GenParams {
     GenParams {
         method,
-        mars,
+        policy,
         temperature: temp,
         max_new: 24,
         seed: 11,
@@ -65,7 +66,7 @@ fn engine_semantics_suite() {
     // --- greedy losslessness: every method == AR at T=0 ----------------
     let prompt = "Q: 21+17=?\nA: ";
     let ar = engine
-        .generate(prompt, &params(Method::Ar, false, 0.0))
+        .generate(prompt, &params(Method::Ar, VerifyPolicy::Strict, 0.0))
         .expect("ar");
     assert!(!ar.tokens.is_empty());
     for method in [
@@ -77,7 +78,7 @@ fn engine_semantics_suite() {
         Method::Lookahead,
     ] {
         let r = engine
-            .generate(prompt, &params(method, false, 0.0))
+            .generate(prompt, &params(method, VerifyPolicy::Strict, 0.0))
             .unwrap_or_else(|e| panic!("{method:?}: {e:#}"));
         assert_eq!(
             r.tokens, ar.tokens,
@@ -86,15 +87,34 @@ fn engine_semantics_suite() {
         );
     }
 
-    // --- MARS at theta -> 1 is strict ----------------------------------
+    // --- Strict policy == MARS at theta -> 1, and never relaxes --------
     let strict = engine
-        .generate(prompt, &params(Method::EagleTree, false, 0.0))
+        .generate(prompt, &params(Method::EagleTree, VerifyPolicy::Strict, 0.0))
         .expect("strict");
-    let mut p = params(Method::EagleTree, true, 0.0);
-    p.theta = 0.9999;
+    assert_eq!(strict.snapshot.relaxed_accepts, 0.0);
+    let p = params(
+        Method::EagleTree,
+        VerifyPolicy::Mars { theta: 0.9999 },
+        0.0,
+    );
     let mars = engine.generate(prompt, &p).expect("mars");
     assert_eq!(strict.tokens, mars.tokens);
     assert_eq!(mars.snapshot.relaxed_accepts, 0.0);
+
+    // --- Strict is token-identical across policy encodings on a fixed
+    //     seed set: legacy-equivalent strict vs near-inert relaxed rules --
+    for (i, ex) in mars::datasets::dataset(mars::datasets::Task::Arith, 3, 9)
+        .iter()
+        .enumerate()
+    {
+        let mut ps = params(Method::EagleTree, VerifyPolicy::Strict, 1.0);
+        ps.seed = 100 + i as u64;
+        let a = engine.generate(&ex.prompt, &ps).expect("strict fixed");
+        ps.policy = VerifyPolicy::Mars { theta: 0.9999 };
+        let b = engine.generate(&ex.prompt, &ps).expect("inert mars");
+        assert_eq!(a.tokens, b.tokens, "strict != inert-mars on example {i}");
+        assert_eq!(a.snapshot.relaxed_accepts, 0.0);
+    }
 
     // --- MARS never reduces tau ----------------------------------------
     let mut tau_strict = 0.0;
@@ -103,11 +123,11 @@ fn engine_semantics_suite() {
         .iter()
         .enumerate()
     {
-        let mut p = params(Method::EagleTree, false, 1.0);
+        let mut p = params(Method::EagleTree, VerifyPolicy::Strict, 1.0);
         p.max_new = 48;
         p.seed = i as u64;
         tau_strict += engine.generate(&ex.prompt, &p).expect("s").tau();
-        p.mars = true;
+        p.policy = VerifyPolicy::Mars { theta: 0.9 };
         tau_mars += engine.generate(&ex.prompt, &p).expect("m").tau();
     }
     assert!(
@@ -116,13 +136,13 @@ fn engine_semantics_suite() {
     );
 
     // --- sampling reproducibility --------------------------------------
-    let p = params(Method::Sps, true, 1.0);
+    let p = params(Method::Sps, VerifyPolicy::default(), 1.0);
     let a = engine.generate("Q: 3+4=?\nA: ", &p).expect("a");
     let b = engine.generate("Q: 3+4=?\nA: ", &p).expect("b");
     assert_eq!(a.tokens, b.tokens);
 
     // --- extract_every must not change tokens --------------------------
-    let mut p = params(Method::EagleTree, true, 1.0);
+    let mut p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
     p.max_new = 32;
     let a = engine.generate("Q: 12+7=?\nA: ", &p).expect("a");
     p.extract_every = 4;
@@ -130,7 +150,7 @@ fn engine_semantics_suite() {
     assert_eq!(a.tokens, b.tokens, "blind rounds changed the output");
 
     // --- probe entries flow to host ------------------------------------
-    let mut p = params(Method::EagleTree, true, 1.0);
+    let mut p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
     p.probe = true;
     p.max_new = 40;
     let r = engine
@@ -139,21 +159,26 @@ fn engine_semantics_suite() {
     let probe = r.probe.expect("probe dump");
     assert!(!probe.entries.is_empty());
     for e in &probe.entries {
-        assert!(e.flag <= 2);
+        assert!(matches!(
+            e.flag,
+            AcceptFlag::Reject | AcceptFlag::Exact | AcceptFlag::Relaxed
+        ));
         assert!(e.z1 >= e.z2, "top-1 logit below top-2: {e:?}");
     }
 
     // --- limits + errors ------------------------------------------------
-    let mut p = params(Method::EagleTree, true, 1.0);
+    let mut p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
     p.max_new = 64;
     let r = engine
         .generate("Text: The crew painted a red barn at noon.\nSummary: ", &p)
         .expect("limit");
     assert!(r.tokens.len() <= 64);
-    assert!(engine.generate("", &params(Method::Ar, false, 0.0)).is_err());
+    assert!(engine
+        .generate("", &params(Method::Ar, VerifyPolicy::Strict, 0.0))
+        .is_err());
 
     // --- hostloop runtime must be output-identical ----------------------
-    let p = params(Method::EagleTree, true, 1.0);
+    let p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
     let resident = engine.generate("Q: 8+13=?\nA: ", &p).expect("res");
     drop(engine);
     let rt = Runtime::new(&dir).expect("rt");
@@ -178,6 +203,7 @@ fn router_end_to_end_over_tcp() {
     let pong =
         server::client_roundtrip(&addr, r#"{"cmd": "ping"}"#).expect("ping");
     assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+    // legacy flat keys over the wire must still map onto Mars{theta}
     let resp = server::client_roundtrip(
         &addr,
         "{\"prompt\": \"Q: 2+2=?\\nA: \", \"method\": \"eagle_tree\", \
@@ -186,10 +212,36 @@ fn router_end_to_end_over_tcp() {
     .expect("gen");
     assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
     assert!(resp.get("tokens").and_then(|t| t.as_usize()).unwrap() > 0);
+    assert_eq!(
+        resp.get("policy").and_then(|p| p.as_str()),
+        Some("mars:0.9")
+    );
+    // and the structured form works end to end
+    let resp2 = server::client_roundtrip(
+        &addr,
+        "{\"prompt\": \"Q: 2+2=?\\nA: \", \"method\": \"eagle_tree\", \
+         \"policy\": {\"topk\": {\"k\": 2, \"eps\": 0.1}}, \
+         \"max_new\": 12, \"seed\": 4}",
+    )
+    .expect("gen2");
+    assert_eq!(resp2.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(
+        resp2.get("policy").and_then(|p| p.as_str()),
+        Some("topk:2:0.1")
+    );
     let metrics =
         server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#).expect("m");
     assert_eq!(
         metrics.get("requests_ok").and_then(|v| v.as_usize()),
+        Some(2)
+    );
+    // per-policy breakout: one mars request, one topk request
+    assert_eq!(
+        metrics.path(&["policy", "mars", "requests"]).and_then(|v| v.as_usize()),
+        Some(1)
+    );
+    assert_eq!(
+        metrics.path(&["policy", "topk", "requests"]).and_then(|v| v.as_usize()),
         Some(1)
     );
 }

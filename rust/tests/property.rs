@@ -8,11 +8,12 @@ use mars::eval;
 use mars::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
 use mars::util::json::Value;
 use mars::util::prng::Rng;
+use mars::verify::{AcceptFlag, VerifyPolicy};
 
-/// Reference implementation of the MARS accept rule (paper Algorithm 1 +
-/// the positive-domain guard), mirrored from the device kernel for
-/// host-side property checking.
-fn mars_accept(
+/// The pre-refactor inline MARS accept rule (paper Algorithm 1 + the
+/// positive-domain guard), kept verbatim as the oracle that pins the
+/// `VerifyPolicy` reference verifier to the old `mars: bool` semantics.
+fn legacy_mars_accept(
     z1: f32,
     z2: f32,
     v1: u32,
@@ -28,6 +29,178 @@ fn mars_accept(
         return 2; // relaxed
     }
     0
+}
+
+fn mars_accept(
+    z1: f32,
+    z2: f32,
+    v1: u32,
+    v2: u32,
+    draft: u32,
+    theta: f32,
+    mars_on: bool,
+) -> u8 {
+    let policy = if mars_on {
+        VerifyPolicy::Mars { theta }
+    } else {
+        VerifyPolicy::Strict
+    };
+    // tstar == v1 here: the greedy case, where the target's pick is top-1
+    policy.accept(draft, v1, &[(v1, z1), (v2, z2)]) as u8
+}
+
+fn random_policy(rng: &mut Rng) -> VerifyPolicy {
+    match rng.below(4) {
+        0 => VerifyPolicy::Strict,
+        1 => VerifyPolicy::Mars {
+            theta: ((rng.f64() * 1000.0).round() / 1000.0) as f32,
+        },
+        2 => VerifyPolicy::TopK {
+            k: 1 + rng.usize_below(6),
+            eps: ((rng.f64() * 100.0).round() / 100.0) as f32,
+        },
+        _ => VerifyPolicy::Entropy {
+            h_max: ((rng.f64() * 4000.0).round() / 1000.0) as f32,
+        },
+    }
+}
+
+#[test]
+fn prop_policy_cli_label_round_trips() {
+    let mut rng = Rng::new(200);
+    for _ in 0..500 {
+        let p = random_policy(&mut rng);
+        let label = p.label();
+        assert_eq!(
+            VerifyPolicy::parse(&label),
+            Some(p),
+            "label {label:?} did not round-trip"
+        );
+    }
+}
+
+#[test]
+fn prop_policy_json_round_trips() {
+    let mut rng = Rng::new(201);
+    for _ in 0..500 {
+        let p = random_policy(&mut rng);
+        let text = p.to_json().to_string_json();
+        let back = Value::parse(&text).expect("policy json parses");
+        assert_eq!(
+            VerifyPolicy::from_json(&back),
+            Ok(p),
+            "json {text} did not round-trip"
+        );
+    }
+}
+
+#[test]
+fn prop_policy_slots_round_trip() {
+    let mut rng = Rng::new(202);
+    for _ in 0..500 {
+        let p = random_policy(&mut rng);
+        assert_eq!(VerifyPolicy::decode_slots(p.encode_slots()), Ok(p));
+    }
+}
+
+#[test]
+fn prop_legacy_request_keys_equal_policy_forms() {
+    // every legacy {mars, theta} pair parses to the policy whose own JSON
+    // round-trips to itself
+    let mut rng = Rng::new(203);
+    for _ in 0..300 {
+        let mars_on = rng.bool(0.5);
+        let theta = ((rng.f64() * 1000.0).round() / 1000.0) as f32;
+        let legacy = Value::parse(&format!(
+            "{{\"mars\": {mars_on}, \"theta\": {theta}}}"
+        ))
+        .expect("legacy json");
+        let p = VerifyPolicy::from_request(&legacy).expect("legacy parse");
+        let want = if mars_on {
+            VerifyPolicy::Mars { theta }
+        } else {
+            VerifyPolicy::Strict
+        };
+        assert_eq!(p, want);
+        let structured = p.to_json().to_string_json();
+        let back = Value::parse(&structured).unwrap();
+        assert_eq!(VerifyPolicy::from_json(&back), Ok(p));
+    }
+}
+
+#[test]
+fn prop_strict_policy_matches_legacy_mars_off() {
+    // bit-identity of the rule: the Strict policy decides exactly like the
+    // pre-refactor path with mars == false, over random inputs
+    let mut rng = Rng::new(204);
+    for _ in 0..2000 {
+        let z1 = (rng.f64() * 20.0 - 4.0) as f32;
+        let z2 = z1 - (rng.f64() * 3.0) as f32;
+        let v1 = rng.below(128) as u32;
+        let v2 = rng.below(128) as u32;
+        let other = rng.below(128) as u32;
+        let draft = *rng.pick(&[v1, v2, other]);
+        let theta = rng.f64() as f32;
+        let legacy = legacy_mars_accept(z1, z2, v1, v2, draft, theta, false);
+        let got = VerifyPolicy::Strict.accept(draft, v1, &[(v1, z1), (v2, z2)]);
+        assert_eq!(got as u8, legacy);
+        // and Mars{theta} decides exactly like mars == true
+        let legacy_on = legacy_mars_accept(z1, z2, v1, v2, draft, theta, true);
+        let got_on = VerifyPolicy::Mars { theta }
+            .accept(draft, v1, &[(v1, z1), (v2, z2)]);
+        assert_eq!(got_on as u8, legacy_on, "z1={z1} z2={z2} theta={theta}");
+    }
+}
+
+#[test]
+fn prop_topk2_equals_mars_complement() {
+    // TopK{2, eps} is definitionally Mars{1 - eps}
+    let mut rng = Rng::new(205);
+    for _ in 0..2000 {
+        let z1 = (rng.f64() * 20.0 - 4.0) as f32;
+        let z2 = z1 - (rng.f64() * 3.0) as f32;
+        let v1 = rng.below(64) as u32;
+        let v2 = 64 + rng.below(64) as u32;
+        let draft = *rng.pick(&[v1, v2, 200]);
+        let eps = (rng.f64() * 0.5) as f32;
+        let a = VerifyPolicy::TopK { k: 2, eps }
+            .accept(draft, v1, &[(v1, z1), (v2, z2)]);
+        let b = VerifyPolicy::Mars { theta: 1.0 - eps }
+            .accept(draft, v1, &[(v1, z1), (v2, z2)]);
+        assert_eq!(a, b, "z1={z1} z2={z2} eps={eps} draft={draft}");
+    }
+}
+
+#[test]
+fn prop_every_policy_accepts_exact_and_scan_is_prefix() {
+    let mut rng = Rng::new(206);
+    for _ in 0..300 {
+        let p = random_policy(&mut rng);
+        let n = 1 + rng.usize_below(12);
+        let rows: Vec<(u32, Vec<(u32, f32)>)> = (0..n)
+            .map(|_| {
+                let z1 = (rng.f64() * 10.0 - 2.0) as f32;
+                let v1 = rng.below(128) as u32;
+                let v2 = 128 + rng.below(128) as u32;
+                (v1, vec![(v1, z1), (v2, z1 - rng.f64() as f32)])
+            })
+            .collect();
+        // exact drafts: every policy must accept the full chain
+        let exact: Vec<u32> = rows.iter().map(|(t, _)| *t).collect();
+        let (flags, m) = p.scan(&exact, &rows);
+        assert_eq!(m, n, "{p:?} rejected an exact chain");
+        assert!(flags.iter().all(|f| *f == AcceptFlag::Exact));
+        // random drafts: accepted flags must form a prefix
+        let drafts: Vec<u32> = rows
+            .iter()
+            .map(|(t, top)| *rng.pick(&[*t, top[1].0, 999]))
+            .collect();
+        let (flags, m) = p.scan(&drafts, &rows);
+        assert!(m <= n);
+        for (i, f) in flags.iter().enumerate() {
+            assert_eq!(f.accepted(), i < m, "non-prefix accept in {p:?}");
+        }
+    }
 }
 
 #[test]
