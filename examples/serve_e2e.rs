@@ -1,7 +1,9 @@
 //! End-to-end serving driver (the validation run recorded in
-//! EXPERIMENTS.md): starts the router + replicas + TCP server, drives a
-//! mixed open-loop workload of batched requests across all five task
-//! families and both verification modes, and reports latency/throughput.
+//! EXPERIMENTS.md): starts the router + replicas + TCP server, smokes the
+//! streaming/pipelined wire protocol (client ids, per-round deltas),
+//! drives a mixed open-loop workload of batched requests across all five
+//! task families and both verification modes, and reports
+//! latency/throughput.
 //!
 //! ```sh
 //! cargo run --release --example serve_e2e -- [n_requests] [replicas]
@@ -45,10 +47,27 @@ fn main() -> anyhow::Result<()> {
     println!("server up on {addr}, ping -> {}", pong.to_string_json());
     let wire = server::client_roundtrip(
         &addr,
-        "{\"prompt\": \"Q: 6+7=?\\nA: \", \"method\": \"eagle_tree\", \
-         \"mars\": true, \"max_new\": 16, \"seed\": 3}",
+        "{\"id\": 1, \"prompt\": \"Q: 6+7=?\\nA: \", \
+         \"method\": \"eagle_tree\", \"policy\": {\"mars\": {\"theta\": 0.9}}, \
+         \"max_new\": 16, \"seed\": 3}",
     )?;
-    println!("wire request -> {}\n", wire.to_string_json());
+    println!("wire request -> {}", wire.to_string_json());
+
+    // streaming: deltas arrive per verify round, before the final reply
+    let (deltas, fin) = server::client_stream(
+        &addr,
+        "{\"id\": 2, \"prompt\": \"Q: 9+5=?\\nA: \", \"stream\": true, \
+         \"policy\": \"mars:0.9\", \"max_new\": 24, \"seed\": 5}",
+    )?;
+    let joined: String = deltas
+        .iter()
+        .filter_map(|d| d.get("delta").and_then(|s| s.as_str()))
+        .collect();
+    println!(
+        "stream request -> {} delta line(s), concatenated == final text: {}\n",
+        deltas.len(),
+        Some(joined.as_str()) == fin.get("text").and_then(|t| t.as_str())
+    );
 
     // mixed workload: all tasks, alternating strict / MARS verification
     let mut prompts = Vec::new();

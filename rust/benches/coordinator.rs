@@ -20,6 +20,7 @@ fn main() {
         decode_seconds: 0.2,
         prefill_seconds: 0.01,
         queue_seconds: 0.001,
+        ttft_seconds: 0.015,
         tau: 6.0,
         relaxed_accepts: 3.0,
         policy: "mars",

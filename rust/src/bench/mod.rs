@@ -10,7 +10,12 @@
 //!
 //! Each `table*` / `fig*` function prints a markdown table and appends it
 //! to `results/<name>.md`.
+//!
+//! Serving-latency benchmarks (TTFT/TPOT percentiles under open-loop
+//! load) live in [`serve`] and run against a live TCP server rather than
+//! a bare engine; see BENCHMARKS.md for the full target index.
 
+pub mod serve;
 pub mod simclock;
 
 use std::collections::BTreeMap;

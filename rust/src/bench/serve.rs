@@ -1,0 +1,345 @@
+//! `mars bench serve` — open-loop serving benchmark (DESIGN.md §3).
+//!
+//! Starts a router + TCP server in-process, then drives a Poisson
+//! arrival process over N real client connections (streaming requests,
+//! pipelined per connection) and reports the serving percentiles the
+//! speculative-decoding surveys compare methods by:
+//!
+//! * **TTFT** — send → first delta line (queue + prefill + first round);
+//! * **TPOT** — (last event − first delta) / (tokens − 1);
+//! * **throughput** — committed tokens / wall-clock, requests / second.
+//!
+//! The sweep axis is the verification policy (`--policies`): each policy
+//! gets its own wave of `n` requests at the same arrival rate, so the
+//! table isolates what the accept rule does to tail latency under load.
+//! Client-side measurements can be cross-checked against the server's
+//! own `{"cmd": "metrics"}` snapshot (TTFT there is measured
+//! submit → first commit, without the socket hop).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::router::{Router, RouterPolicy};
+use crate::coordinator::scheduler::exp_arrival_gap;
+use crate::coordinator::server;
+use crate::datasets::{dataset, Task};
+use crate::util::json::Value;
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+use crate::verify::VerifyPolicy;
+
+/// Configuration for one `mars bench serve` run.
+pub struct ServeBenchCfg {
+    /// Compiled-artifact directory (same as `mars serve --artifacts`).
+    pub artifact_dir: PathBuf,
+    /// Engine replicas behind the router.
+    pub replicas: usize,
+    /// Concurrent sequences interleaved per replica.
+    pub slots: usize,
+    /// Client TCP connections the load is spread over (round-robin).
+    pub connections: usize,
+    /// Requests per policy wave.
+    pub n_requests: usize,
+    /// Open-loop arrival rate, requests/second (Poisson).
+    pub rate_per_s: f64,
+    /// `max_new` per request.
+    pub max_new: usize,
+    /// Workload seed (prompts + arrival gaps).
+    pub seed: u64,
+    /// Verification policies swept, one table row each.
+    pub policies: Vec<VerifyPolicy>,
+    /// Where the rendered table lands (`results/serve.md`).
+    pub out_dir: PathBuf,
+}
+
+/// Client-side record of one request's lifecycle.
+#[derive(Debug, Clone)]
+struct ReqProbe {
+    sent_at: Instant,
+    first_delta: Option<Instant>,
+    last_event: Option<Instant>,
+    tokens: usize,
+    done: bool,
+    ok: bool,
+}
+
+type ProbeMap = Arc<Mutex<HashMap<u64, ReqProbe>>>;
+
+/// One benchmark client connection: a writer plus a reader thread that
+/// demultiplexes delta/reply lines by id into the shared probe map.
+struct BenchConn {
+    writer: TcpStream,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BenchConn {
+    fn connect(addr: &str, probes: ProbeMap) -> Result<BenchConn> {
+        let writer = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        let read_half = writer.try_clone()?;
+        let reader = std::thread::Builder::new()
+            .name("mars-bench-read".into())
+            .spawn(move || {
+                let buf = BufReader::new(read_half);
+                for line in buf.lines() {
+                    let Ok(line) = line else { break };
+                    let Ok(v) = Value::parse(&line) else { continue };
+                    let Some(id) =
+                        v.get("id").and_then(|x| x.as_f64()).map(|f| f as u64)
+                    else {
+                        continue;
+                    };
+                    let now = Instant::now();
+                    let mut g = probes.lock().unwrap();
+                    let Some(p) = g.get_mut(&id) else { continue };
+                    if v.get("delta").is_some()
+                        && v.get("done").and_then(|b| b.as_bool())
+                            == Some(false)
+                    {
+                        if p.first_delta.is_none() {
+                            p.first_delta = Some(now);
+                        }
+                        p.last_event = Some(now);
+                        if let Some(t) =
+                            v.get("tokens").and_then(|t| t.as_usize())
+                        {
+                            p.tokens = t;
+                        }
+                    } else if v.get("ok").is_some() {
+                        p.done = true;
+                        p.ok = v.get("ok").and_then(|b| b.as_bool())
+                            == Some(true);
+                        p.last_event = Some(now);
+                        if let Some(t) =
+                            v.get("tokens").and_then(|t| t.as_usize())
+                        {
+                            p.tokens = t;
+                        }
+                    }
+                }
+            })?;
+        Ok(BenchConn { writer, reader: Some(reader) })
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.writer, "{line}")?;
+        Ok(())
+    }
+}
+
+impl Drop for BenchConn {
+    fn drop(&mut self) {
+        let _ = self.writer.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-policy outcome row.
+struct PolicyRow {
+    label: String,
+    ok: usize,
+    err: usize,
+    ttft_ms: Summary,
+    tpot_ms: Summary,
+    tok_per_s: f64,
+    req_per_s: f64,
+}
+
+/// Run the full serving benchmark: one open-loop wave per policy against
+/// a live in-process server, rendered into the standard bench table
+/// machinery (`results/serve.md`).
+pub fn run(cfg: &ServeBenchCfg) -> Result<()> {
+    if cfg.connections == 0 || cfg.n_requests == 0 {
+        bail!("bench serve needs --connections >= 1 and --n >= 1");
+    }
+    println!(
+        "starting {} replica(s) x {} slot(s) for bench serve...",
+        cfg.replicas.max(1),
+        cfg.slots
+    );
+    let router = Arc::new(Router::start(
+        &cfg.artifact_dir,
+        cfg.replicas,
+        cfg.slots,
+        false,
+        RouterPolicy::LeastLoaded,
+    )?);
+    let handle = server::serve(router.clone(), "127.0.0.1:0")?;
+    let addr = handle.addr.to_string();
+
+    let mut rows = Vec::new();
+    for (pi, &policy) in cfg.policies.iter().enumerate() {
+        let row = drive_policy_wave(cfg, &addr, pi, policy)?;
+        println!(
+            "  {}: {} ok / {} err, ttft p50 {:.0} ms, tpot p50 {:.2} ms, \
+             {:.1} tok/s",
+            row.label,
+            row.ok,
+            row.err,
+            row.ttft_ms.p50(),
+            row.tpot_ms.p50(),
+            row.tok_per_s
+        );
+        rows.push(row);
+    }
+
+    let table = render_table(cfg, &rows);
+    println!("{table}");
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = cfg.out_dir.join("serve.md");
+    std::fs::write(&path, &table)
+        .with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("[written {}]", path.display());
+    eprintln!(
+        "server metrics: {}",
+        router.metrics.snapshot_json().to_string_json()
+    );
+    Ok(())
+}
+
+/// Drive one policy's open-loop wave over `cfg.connections` connections.
+fn drive_policy_wave(
+    cfg: &ServeBenchCfg,
+    addr: &str,
+    policy_idx: usize,
+    policy: VerifyPolicy,
+) -> Result<PolicyRow> {
+    let probes: ProbeMap = Arc::new(Mutex::new(HashMap::new()));
+    let mut conns = Vec::new();
+    for _ in 0..cfg.connections {
+        conns.push(BenchConn::connect(addr, probes.clone())?);
+    }
+    let mut rng = Rng::new(cfg.seed.wrapping_add(policy_idx as u64 * 7919));
+    let tasks = Task::all();
+    let wave_started = Instant::now();
+    let mut ids = Vec::new();
+    for i in 0..cfg.n_requests {
+        let id = (policy_idx as u64 + 1) * 100_000 + i as u64 + 1;
+        let task = tasks[i % tasks.len()];
+        let ex = &dataset(task, 1, cfg.seed.wrapping_add(i as u64))[0];
+        let mut o = Value::obj();
+        o.set("id", Value::Num(id as f64));
+        o.set("prompt", Value::Str(ex.prompt.clone()));
+        o.set("stream", Value::Bool(true));
+        o.set("policy", Value::Str(policy.label()));
+        o.set("max_new", Value::Num(cfg.max_new as f64));
+        o.set("seed", Value::Num(i as f64));
+        probes.lock().unwrap().insert(
+            id,
+            ReqProbe {
+                sent_at: Instant::now(),
+                first_delta: None,
+                last_event: None,
+                tokens: 0,
+                done: false,
+                ok: false,
+            },
+        );
+        conns[i % conns.len()].send_line(&o.to_string_json())?;
+        ids.push(id);
+        let gap = exp_arrival_gap(&mut rng, cfg.rate_per_s);
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+    }
+
+    // wait for every request of the wave (bounded: the workload is small
+    // and the replicas drain monotonically)
+    let deadline = Instant::now() + Duration::from_secs(600);
+    loop {
+        {
+            let g = probes.lock().unwrap();
+            if ids.iter().all(|id| g.get(id).is_some_and(|p| p.done)) {
+                break;
+            }
+        }
+        if Instant::now() > deadline {
+            bail!("bench serve wave timed out after 600 s");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let wall = wave_started.elapsed().as_secs_f64().max(1e-9);
+
+    let g = probes.lock().unwrap();
+    let mut row = PolicyRow {
+        label: policy.label(),
+        ok: 0,
+        err: 0,
+        ttft_ms: Summary::new(),
+        tpot_ms: Summary::new(),
+        tok_per_s: 0.0,
+        req_per_s: 0.0,
+    };
+    let mut tokens_total = 0usize;
+    for id in &ids {
+        let p = &g[id];
+        if !p.ok {
+            row.err += 1;
+            continue;
+        }
+        row.ok += 1;
+        tokens_total += p.tokens;
+        if let Some(first) = p.first_delta {
+            row.ttft_ms
+                .push(first.duration_since(p.sent_at).as_secs_f64() * 1e3);
+            if p.tokens > 1 {
+                if let Some(last) = p.last_event {
+                    let span = last.duration_since(first).as_secs_f64();
+                    row.tpot_ms
+                        .push(span * 1e3 / (p.tokens - 1) as f64);
+                }
+            }
+        }
+    }
+    row.tok_per_s = tokens_total as f64 / wall;
+    row.req_per_s = row.ok as f64 / wall;
+    Ok(row)
+}
+
+fn render_table(cfg: &ServeBenchCfg, rows: &[PolicyRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "## Serve — open-loop load, {} conns, {:.1} req/s Poisson, \
+         n={} per policy, max_new={}\n",
+        cfg.connections, cfg.rate_per_s, cfg.n_requests, cfg.max_new
+    );
+    let _ = writeln!(
+        out,
+        "| Policy | ok/err | TTFT p50 (ms) | TTFT p99 (ms) | \
+         TPOT p50 (ms) | TPOT p99 (ms) | tok/s | req/s |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {}/{} | {:.0} | {:.0} | {:.2} | {:.2} | {:.1} | {:.2} |",
+            r.label,
+            r.ok,
+            r.err,
+            r.ttft_ms.p50(),
+            r.ttft_ms.p99(),
+            r.tpot_ms.p50(),
+            r.tpot_ms.p99(),
+            r.tok_per_s,
+            r.req_per_s
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\nTTFT = send -> first streamed delta (client-side, includes the \
+         socket hop); TPOT = (last event - first delta)/(tokens-1). \
+         Wall-clock on this substrate — compare shapes across policies, \
+         not absolute numbers against the paper (see BENCHMARKS.md)."
+    );
+    out
+}

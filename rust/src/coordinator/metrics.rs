@@ -1,9 +1,12 @@
-//! Serving metrics registry: latency histograms, throughput counters and
-//! speculative-decoding acceptance statistics, shared across replicas via
-//! a mutex (recording is a handful of float ops; not hot enough to need
-//! sharding on this substrate). Acceptance stats are additionally broken
-//! out per verification-policy family so a mixed-policy workload exposes
-//! the per-rule τ / relaxation picture.
+//! Serving metrics registry: latency histograms (including the serving
+//! percentiles TTFT — submit → first committed token — and TPOT — decode
+//! time per output token), throughput counters and speculative-decoding
+//! acceptance statistics, shared across replicas via a mutex (recording
+//! is a handful of float ops; not hot enough to need sharding on this
+//! substrate). Acceptance stats are additionally broken out per
+//! verification-policy family so a mixed-policy workload exposes the
+//! per-rule τ / relaxation picture. `mars bench serve` reports the same
+//! quantities measured client-side (see BENCHMARKS.md).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -31,12 +34,14 @@ struct Inner {
     prefill_ms: Summary,
     queue_ms: Summary,
     ttft_ms: Summary,
+    tpot_ms: Summary,
     per_token_us: LogHistogram,
     tau: Summary,
     relaxed: Summary,
     by_policy: BTreeMap<&'static str, PolicyAgg>,
 }
 
+/// Shared serving-metrics registry (one per router, shared by replicas).
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     inner: Mutex<Inner>,
@@ -45,22 +50,34 @@ pub struct MetricsRegistry {
 /// One request's measurements.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestMetrics {
+    /// Whether the request completed successfully.
     pub ok: bool,
+    /// Committed output tokens.
     pub tokens: usize,
+    /// Wall-clock decode time (prefill excluded), seconds.
     pub decode_seconds: f64,
+    /// Wall-clock prefill time, seconds.
     pub prefill_seconds: f64,
+    /// Router-submit → replica-admission wait, seconds.
     pub queue_seconds: f64,
+    /// Router-submit → first committed token, seconds (the serving TTFT:
+    /// queue + prefill + first verify round).
+    pub ttft_seconds: f64,
+    /// Mean accepted tokens per draft-verify cycle.
     pub tau: f64,
+    /// Policy-relaxed acceptances across the generation.
     pub relaxed_accepts: f64,
     /// verification-policy family (`VerifyPolicy::name`)
     pub policy: &'static str,
 }
 
 impl MetricsRegistry {
+    /// Fresh, empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one finished request (errors count separately).
     pub fn record(&self, m: RequestMetrics) {
         let mut g = self.inner.lock().unwrap();
         if g.started.is_none() {
@@ -75,9 +92,10 @@ impl MetricsRegistry {
         g.decode_ms.push(m.decode_seconds * 1e3);
         g.prefill_ms.push(m.prefill_seconds * 1e3);
         g.queue_ms.push(m.queue_seconds * 1e3);
-        g.ttft_ms
-            .push((m.queue_seconds + m.prefill_seconds) * 1e3);
+        g.ttft_ms.push(m.ttft_seconds * 1e3);
         if m.tokens > 0 {
+            // TPOT: decode time amortized over committed tokens
+            g.tpot_ms.push(m.decode_seconds * 1e3 / m.tokens as f64);
             g.per_token_us
                 .record(m.decode_seconds * 1e6 / m.tokens as f64);
         }
@@ -124,6 +142,9 @@ impl MetricsRegistry {
         o.set("queue_ms_p50", Value::Num(g.queue_ms.p50()));
         o.set("queue_ms_p99", Value::Num(g.queue_ms.p99()));
         o.set("ttft_ms_p50", Value::Num(g.ttft_ms.p50()));
+        o.set("ttft_ms_p99", Value::Num(g.ttft_ms.p99()));
+        o.set("tpot_ms_p50", Value::Num(g.tpot_ms.p50()));
+        o.set("tpot_ms_p99", Value::Num(g.tpot_ms.p99()));
         o.set(
             "per_token_us_p50",
             Value::Num(g.per_token_us.quantile(0.5)),
@@ -143,6 +164,7 @@ impl MetricsRegistry {
         o
     }
 
+    /// Total requests recorded (ok + errors) — used by drain loops.
     pub fn requests_done(&self) -> u64 {
         let g = self.inner.lock().unwrap();
         g.requests_ok + g.requests_err
@@ -160,6 +182,7 @@ mod tests {
             decode_seconds: decode,
             prefill_seconds: 0.01,
             queue_seconds: 0.002,
+            ttft_seconds: 0.02,
             tau: 5.0,
             relaxed_accepts: 2.0,
             policy: "mars",
@@ -176,6 +199,14 @@ mod tests {
         assert_eq!(v.get("tokens_out").unwrap().as_usize(), Some(40));
         assert_eq!(v.get("tau_mean").unwrap().as_f64(), Some(5.0));
         assert!(v.get("decode_ms_p99").unwrap().as_f64().unwrap() >= 100.0);
+        // ttft is the measured submit→first-token time, 20 ms here
+        let ttft = v.get("ttft_ms_p50").unwrap().as_f64().unwrap();
+        assert!((ttft - 20.0).abs() < 1e-9, "{ttft}");
+        // tpot = decode / tokens = 10 ms/tok for both samples
+        for q in ["tpot_ms_p50", "tpot_ms_p99"] {
+            let tpot = v.get(q).unwrap().as_f64().unwrap();
+            assert!((tpot - 10.0).abs() < 1e-9, "{q} = {tpot}");
+        }
     }
 
     #[test]

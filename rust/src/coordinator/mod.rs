@@ -4,10 +4,21 @@
 //! OS thread that owns its own PJRT client, compiled executables and
 //! uploaded weights (PJRT handles are not `Send`; thread-ownership is the
 //! std-only equivalent of vLLM's per-GPU engine processes). A scheduler
-//! thread admits queued requests into per-replica slots (continuous
-//! batching across sequences), decode workers run rounds until
+//! admits queued requests into per-replica slots (continuous batching
+//! across sequences), replica decode loops run rounds until
 //! EOS/length/cancel, and results stream back over channels or the
 //! line-JSON TCP protocol in [`server`].
+//!
+//! The wire protocol is **pipelined and streaming**: requests carry
+//! client ids and complete out of order on one connection;
+//! `"stream": true` requests emit per-round
+//! [`StreamDelta`](request::StreamDelta) lines as verify rounds commit
+//! tokens; `{"cmd": "cancel", "id": N}` stops a request between rounds
+//! and returns the committed prefix. See the [`server`] module doc for
+//! the full protocol grammar and [`metrics`] for the TTFT/TPOT serving
+//! percentiles the `mars bench serve` load generator reports.
+
+#![warn(missing_docs)]
 
 pub mod metrics;
 pub mod replica;
@@ -18,6 +29,6 @@ pub mod server;
 
 pub use metrics::MetricsRegistry;
 pub use replica::EngineReplica;
-pub use request::{Request, RequestId, Response};
-pub use router::{RouterPolicy, Router};
+pub use request::{Request, RequestId, Response, StreamDelta, StreamSink};
+pub use router::{Router, RouterPolicy, SubmitHandle, SubmitOptions};
 pub use scheduler::{Scheduler, SubmitTarget};

@@ -15,22 +15,29 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{MetricsRegistry, RequestMetrics};
-use crate::coordinator::request::{Response, WorkItem};
+use crate::coordinator::request::{Response, StreamDelta, WorkItem};
 use crate::engine::SeqRunner;
 use crate::runtime::Runtime;
 
+/// Handle to one engine-replica thread (see the module doc).
 pub struct EngineReplica {
+    /// Replica index (stable over the router's lifetime).
     pub id: usize,
     handle: Option<JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
+    /// Gauge of currently active (admitted, undone) sequences.
     pub active: Arc<AtomicUsize>,
+    /// Best-effort count of submitted-but-not-admitted items.
     pub queued_hint: Arc<AtomicUsize>,
 }
 
+/// Startup configuration for one replica.
 pub struct ReplicaConfig {
+    /// Directory holding the compiled HLO artifacts.
     pub artifact_dir: PathBuf,
     /// concurrent sequences interleaved on this replica
     pub slots: usize,
+    /// Force the naive host-roundtrip runtime (§Perf baseline).
     pub hostloop: bool,
 }
 
@@ -80,6 +87,7 @@ impl EngineReplica {
             + self.queued_hint.load(Ordering::Relaxed)
     }
 
+    /// Signal shutdown and join the replica thread (drains active work).
     pub fn stop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
@@ -100,6 +108,9 @@ struct Active<'rt> {
     /// submit → admission wait (stamped from `WorkItem::submitted_at`, so
     /// the metric measures actual queue time, not prefill)
     queue_seconds: f64,
+    /// submit → first committed token (stamped after the first round that
+    /// commits); the honest serving TTFT, including queue + prefill
+    ttft_seconds: Option<f64>,
 }
 
 fn replica_loop(
@@ -118,7 +129,7 @@ fn replica_loop(
         }
         // ---- admission: fill free slots -------------------------------
         while active.len() < slots {
-            let item = if active.is_empty() {
+            let mut item = if active.is_empty() {
                 match work.recv_timeout(Duration::from_millis(50)) {
                     Ok(i) => i,
                     Err(RecvTimeoutError::Timeout) => break,
@@ -140,8 +151,39 @@ fn replica_loop(
             let toks = crate::tokenizer::encode(&item.request.prompt);
             match SeqRunner::new(rt, &toks, &item.request.params, cfg.hostloop)
             {
-                Ok(runner) => {
-                    active.push(Active { runner, item, queue_seconds });
+                Ok(mut runner) => {
+                    // thread the per-round commit callback: decode only
+                    // the newly committed tail (the byte-level tokenizer
+                    // decodes tokens independently, so tail decodes
+                    // concatenate to the full text) and push the delta
+                    // into the request's sink
+                    if let Some(mut sink) = item.stream.take() {
+                        let id = item.request.id;
+                        let mut seen_tokens = 0usize;
+                        runner.set_on_commit(Box::new(move |committed: &[u32]| {
+                            if committed.len() <= seen_tokens {
+                                return;
+                            }
+                            let delta = crate::tokenizer::decode(
+                                &committed[seen_tokens..],
+                            );
+                            seen_tokens = committed.len();
+                            // special ids decode to "" — nothing to send
+                            if !delta.is_empty() {
+                                sink(StreamDelta {
+                                    id,
+                                    delta,
+                                    tokens: committed.len(),
+                                });
+                            }
+                        }));
+                    }
+                    active.push(Active {
+                        runner,
+                        item,
+                        queue_seconds,
+                        ttft_seconds: None,
+                    });
                     active_gauge.store(active.len(), Ordering::Relaxed);
                 }
                 Err(e) => {
@@ -155,6 +197,7 @@ fn replica_loop(
                         decode_seconds: 0.0,
                         prefill_seconds: 0.0,
                         queue_seconds,
+                        ttft_seconds: 0.0,
                         tau: 0.0,
                         relaxed_accepts: 0.0,
                         policy: item.request.params.policy.name(),
@@ -169,21 +212,41 @@ fn replica_loop(
         // ---- one interleaved round per active sequence ----------------
         let mut i = 0;
         while i < active.len() {
-            let done = match active[i].runner.step() {
+            let a = &mut active[i];
+            // cooperative cancel: finalize with the committed prefix
+            // instead of stepping further
+            let canceled =
+                a.item.cancel.load(Ordering::Relaxed);
+            let step_res = if canceled {
+                a.runner.finish_early().map(Some)
+            } else {
+                a.runner.step()
+            };
+            if step_res.is_ok()
+                && a.ttft_seconds.is_none()
+                && a.runner.committed() > 0
+            {
+                a.ttft_seconds =
+                    Some(a.item.submitted_at.elapsed().as_secs_f64());
+            }
+            let done = match step_res {
                 Ok(Some(result)) => {
-                    let a = &active[i];
                     let policy = a.item.request.params.policy;
-                    let resp = Response::from_result(
+                    let mut resp = Response::from_result(
                         a.item.request.id,
                         &result,
                         policy,
                     );
+                    resp.canceled = canceled;
                     metrics.record(RequestMetrics {
                         ok: true,
                         tokens: result.tokens.len(),
                         decode_seconds: result.decode_seconds,
                         prefill_seconds: result.prefill_seconds,
                         queue_seconds: a.queue_seconds,
+                        ttft_seconds: a.ttft_seconds.unwrap_or(
+                            a.queue_seconds + result.prefill_seconds,
+                        ),
                         tau: result.tau(),
                         relaxed_accepts: result.snapshot.relaxed_accepts,
                         policy: policy.name(),
@@ -193,7 +256,6 @@ fn replica_loop(
                 }
                 Ok(None) => false,
                 Err(e) => {
-                    let a = &active[i];
                     let _ = a.item.reply.send(Response::from_error(
                         a.item.request.id,
                         &format!("decode failed: {e:#}"),
@@ -204,6 +266,7 @@ fn replica_loop(
                         decode_seconds: 0.0,
                         prefill_seconds: 0.0,
                         queue_seconds: a.queue_seconds,
+                        ttft_seconds: 0.0,
                         tau: 0.0,
                         relaxed_accepts: 0.0,
                         policy: a.item.request.params.policy.name(),

@@ -1,39 +1,115 @@
-//! Request/response types + the line-JSON wire encoding.
+//! Request/response types + the line-JSON wire encoding, including the
+//! streaming surface: [`StreamDelta`] events, the [`StreamSink`] callback
+//! threaded from the engine's round-commit hook to the connection writer,
+//! and the cooperative cancel flag carried by every [`WorkItem`].
 
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engine::{GenParams, GenResult, Method};
 use crate::util::json::Value;
 use crate::verify::VerifyPolicy;
 
+/// Identifier echoed on every reply and delta line. Client-assigned when
+/// the request carries an `"id"` field; router-assigned otherwise.
 pub type RequestId = u64;
+
+/// Highest client-assignable wire id (exclusive). Ids at or above this
+/// are reserved for server-assigned connection-local fallback ids, and
+/// everything below stays exactly representable in the f64 the JSON
+/// wire encoding carries.
+pub const CLIENT_ID_MAX: u64 = 1 << 52;
+
+/// Extract a well-formed client `"id"` from a wire object: present,
+/// finite, a non-negative integer, and below [`CLIENT_ID_MAX`].
+pub fn wire_id(v: &Value) -> Option<RequestId> {
+    v.get("id")
+        .and_then(|x| x.as_f64())
+        .filter(|f| {
+            f.is_finite()
+                && *f >= 0.0
+                && f.fract() == 0.0
+                && *f < CLIENT_ID_MAX as f64
+        })
+        .map(|f| f as RequestId)
+}
 
 /// A generation request as admitted by the scheduler.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Reply/delta correlation id (see [`RequestId`]).
     pub id: RequestId,
+    /// Raw prompt text (tokenized at replica admission).
     pub prompt: String,
+    /// Generation parameters, including the verification policy.
     pub params: GenParams,
+    /// Stream incremental `{"delta": ...}` lines as verify rounds commit
+    /// tokens (wire field `"stream": true`).
+    pub stream: bool,
 }
 
 /// Terminal response for a request.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Correlation id copied from the request.
     pub id: RequestId,
+    /// `false` when the request failed; see [`Response::error`].
     pub ok: bool,
+    /// Error message when `ok == false`.
     pub error: Option<String>,
+    /// Full decoded completion (partial when canceled).
     pub text: String,
+    /// Number of committed tokens.
     pub tokens: usize,
+    /// Mean accepted tokens per draft-verify cycle.
     pub tau: f64,
+    /// Wall-clock decode time (prefill excluded), seconds.
     pub decode_seconds: f64,
+    /// Wall-clock prefill time, seconds.
     pub prefill_seconds: f64,
+    /// Policy-relaxed acceptances across the whole generation.
     pub relaxed_accepts: f64,
     /// verification-policy label (`VerifyPolicy::label`), e.g. `mars:0.9`
     pub policy: String,
+    /// The request was canceled mid-generation (`{"cmd": "cancel"}`);
+    /// `text` holds whatever had committed by then.
+    pub canceled: bool,
 }
 
+/// One incremental streaming event: the text committed since the previous
+/// delta of the same request. Concatenating every delta of a request
+/// reproduces the final [`Response::text`] exactly.
+#[derive(Debug, Clone)]
+pub struct StreamDelta {
+    /// Correlation id copied from the request.
+    pub id: RequestId,
+    /// Newly committed text (possibly empty rounds are not emitted).
+    pub delta: String,
+    /// Total tokens committed so far, including this delta.
+    pub tokens: usize,
+}
+
+impl StreamDelta {
+    /// Wire form: `{"id": N, "delta": "...", "tokens": T, "done": false}`.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("id", Value::Num(self.id as f64));
+        o.set("delta", Value::Str(self.delta.clone()));
+        o.set("tokens", Value::Num(self.tokens as f64));
+        o.set("done", Value::Bool(false));
+        o
+    }
+}
+
+/// Per-round delta callback threaded from the replica's decode loop to
+/// whatever transport owns the request (the TCP connection writer in
+/// `server`, a collector in tests/benches).
+pub type StreamSink = Box<dyn FnMut(StreamDelta) + Send>;
+
 impl Response {
+    /// Build the success response for a finished generation.
     pub fn from_result(
         id: RequestId,
         r: &GenResult,
@@ -50,9 +126,11 @@ impl Response {
             prefill_seconds: r.prefill_seconds,
             relaxed_accepts: r.snapshot.relaxed_accepts,
             policy: policy.label(),
+            canceled: false,
         }
     }
 
+    /// Build an error response (`ok == false`).
     pub fn from_error(id: RequestId, msg: &str) -> Response {
         Response {
             id,
@@ -65,9 +143,11 @@ impl Response {
             prefill_seconds: 0.0,
             relaxed_accepts: 0.0,
             policy: String::new(),
+            canceled: false,
         }
     }
 
+    /// Wire form of the terminal reply line (one JSON object).
     pub fn to_json(&self) -> Value {
         let mut o = Value::obj();
         o.set("id", Value::Num(self.id as f64));
@@ -84,14 +164,22 @@ impl Response {
         if !self.policy.is_empty() {
             o.set("policy", Value::Str(self.policy.clone()));
         }
+        if self.canceled {
+            o.set("canceled", Value::Bool(true));
+        }
         o
     }
 }
 
 /// Wire format: one JSON object per line.
-/// `{"prompt": "...", "method": "eagle_tree",
-///   "policy": {"mars": {"theta": 0.9}},
+/// `{"id": 3, "prompt": "...", "method": "eagle_tree",
+///   "policy": {"mars": {"theta": 0.9}}, "stream": true,
 ///   "temperature": 1.0, "k": 7, "max_new": 128, "seed": 1}`
+///
+/// `"id"` (optional) overrides the fallback `id` argument and is echoed
+/// on every delta and the terminal reply — it is what lets a client
+/// pipeline many requests on one connection and match out-of-order
+/// completions. `"stream": true` requests incremental delta lines.
 ///
 /// The `"policy"` value may also be a CLI string (`"mars:0.9"`); the
 /// legacy flat `"mars"` / `"theta"` keys still parse (to `Strict` /
@@ -102,6 +190,16 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
         .and_then(|p| p.as_str())
         .ok_or("missing 'prompt'")?
         .to_string();
+    let id = match v.get("id") {
+        None => id,
+        Some(_) => wire_id(v).ok_or(
+            "'id' must be a non-negative integer below 2^52",
+        )?,
+    };
+    let stream = match v.get("stream") {
+        None => false,
+        Some(x) => x.as_bool().ok_or("'stream' must be a boolean")?,
+    };
     let mut params = GenParams::default();
     if let Some(m) = v.get("method").and_then(|m| m.as_str()) {
         params.method =
@@ -129,16 +227,25 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     if let Some(x) = fget("seed") {
         params.seed = x as u64;
     }
-    Ok(Request { id, prompt, params })
+    Ok(Request { id, prompt, params, stream })
 }
 
 /// Work item flowing to a replica: the request, its reply channel, and the
 /// submission timestamp (stamped by the router so queue-wait metrics
 /// measure time spent waiting, not prefill).
 pub struct WorkItem {
+    /// The admitted request.
     pub request: Request,
+    /// Channel carrying the single terminal [`Response`].
     pub reply: Sender<Response>,
+    /// Router-submit timestamp; queue wait and TTFT measure from here.
     pub submitted_at: Instant,
+    /// Per-round delta sink for `"stream": true` requests (taken by the
+    /// replica and handed to the engine's round-commit callback).
+    pub stream: Option<StreamSink>,
+    /// Cooperative cancel flag: the replica checks it between rounds and
+    /// finalizes early with the committed prefix when set.
+    pub cancel: Arc<AtomicBool>,
 }
 
 #[cfg(test)]
@@ -247,10 +354,64 @@ mod tests {
             prefill_seconds: 0.05,
             relaxed_accepts: 4.0,
             policy: "mars:0.9".into(),
+            canceled: false,
         };
         let v = resp.to_json();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
         assert_eq!(v.get("tau").unwrap().as_f64(), Some(5.5));
         assert_eq!(v.get("policy").unwrap().as_str(), Some("mars:0.9"));
+        // "canceled" only appears on canceled responses
+        assert!(v.get("canceled").is_none());
+        let mut c = resp.clone();
+        c.canceled = true;
+        assert_eq!(
+            c.to_json().get("canceled").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn parses_client_id_and_stream() {
+        let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
+        let r = parse_request_json(77, &v).unwrap();
+        assert_eq!(r.id, 77, "fallback id used when 'id' absent");
+        assert!(!r.stream);
+        let v = Value::parse(r#"{"id": 42, "prompt": "hi", "stream": true}"#)
+            .unwrap();
+        let r = parse_request_json(77, &v).unwrap();
+        assert_eq!(r.id, 42, "client id overrides the fallback");
+        assert!(r.stream);
+        for bad in [
+            r#"{"id": -3, "prompt": "hi"}"#,
+            r#"{"id": "x", "prompt": "hi"}"#,
+            r#"{"id": 1.5, "prompt": "hi"}"#,
+            // 2^52: the base of the reserved server-assigned id range
+            r#"{"id": 4503599627370496, "prompt": "hi"}"#,
+            r#"{"prompt": "hi", "stream": 1}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(parse_request_json(0, &v).is_err(), "{bad}");
+        }
+        // wire_id mirrors exactly those rules
+        assert_eq!(
+            wire_id(&Value::parse(r#"{"id": 9}"#).unwrap()),
+            Some(9)
+        );
+        assert_eq!(wire_id(&Value::parse(r#"{"id": 1.5}"#).unwrap()), None);
+        assert_eq!(
+            wire_id(
+                &Value::parse(r#"{"id": 4503599627370496}"#).unwrap()
+            ),
+            None
+        );
+    }
+
+    #[test]
+    fn stream_delta_wire_form() {
+        let d = StreamDelta { id: 5, delta: "ab".into(), tokens: 2 };
+        let v = d.to_json();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("delta").unwrap().as_str(), Some("ab"));
+        assert_eq!(v.get("done").unwrap().as_bool(), Some(false));
     }
 }

@@ -1,8 +1,12 @@
 //! Router: fronts N engine replicas and assigns requests by policy.
 //! The vLLM-router analog (DESIGN.md §5): round-robin or least-loaded.
+//! Submission is non-blocking ([`Router::submit_opts`]) and returns a
+//! [`SubmitHandle`] carrying the reply channel and the cooperative cancel
+//! flag; streaming requests additionally thread a per-round delta sink
+//! down to the replica's decode loop.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
@@ -10,16 +14,22 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::coordinator::replica::{EngineReplica, ReplicaConfig};
-use crate::coordinator::request::{Request, Response, WorkItem};
+use crate::coordinator::request::{
+    Request, RequestId, Response, StreamSink, WorkItem,
+};
 use crate::engine::GenParams;
 
+/// Replica-assignment policy (`--route rr|ll`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RouterPolicy {
+    /// Strict rotation across replicas.
     RoundRobin,
+    /// Pick the replica with the fewest active + queued sequences.
     LeastLoaded,
 }
 
 impl RouterPolicy {
+    /// Parse the CLI form (`rr`/`round_robin`, `ll`/`least_loaded`).
     pub fn parse(s: &str) -> Option<RouterPolicy> {
         match s {
             "rr" | "round_robin" | "round-robin" => Some(RouterPolicy::RoundRobin),
@@ -29,12 +39,35 @@ impl RouterPolicy {
     }
 }
 
+/// Per-submission options (see [`Router::submit_opts`]).
+#[derive(Default)]
+pub struct SubmitOptions {
+    /// Client-assigned correlation id echoed on replies and deltas;
+    /// `None` lets the router assign a unique internal id.
+    pub id: Option<RequestId>,
+    /// Per-round delta sink for streaming requests.
+    pub stream: Option<StreamSink>,
+}
+
+/// Live handle to one submitted request.
+pub struct SubmitHandle {
+    /// Receives the single terminal [`Response`].
+    pub rx: Receiver<Response>,
+    /// Cooperative cancel flag: set it (any ordering) and the replica
+    /// finalizes the request early with the committed prefix.
+    pub cancel: Arc<AtomicBool>,
+    /// The id replies and deltas will carry.
+    pub id: RequestId,
+}
+
+/// Front of the serving topology: owns the replicas and their queues.
 pub struct Router {
     replicas: Vec<EngineReplica>,
     senders: Vec<Sender<WorkItem>>,
     policy: RouterPolicy,
     rr_next: AtomicUsize,
     next_id: AtomicU64,
+    /// Shared serving-metrics registry (also served by `{"cmd":"metrics"}`).
     pub metrics: Arc<MetricsRegistry>,
 }
 
@@ -87,8 +120,15 @@ impl Router {
         })
     }
 
+    /// Number of replicas behind this router.
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Total active + queued sequences across every replica — what a
+    /// graceful shutdown polls down to zero before exiting.
+    pub fn active_total(&self) -> usize {
+        self.replicas.iter().map(|r| r.load()).sum()
     }
 
     fn pick(&self) -> usize {
@@ -107,22 +147,35 @@ impl Router {
         }
     }
 
-    /// Submit a request; the response arrives on the returned channel.
-    pub fn submit(
+    /// Submit a request without blocking the caller: the reply channel,
+    /// cancel flag and effective id come back in a [`SubmitHandle`]. This
+    /// is what lets one connection pipeline many in-flight requests.
+    pub fn submit_opts(
         &self,
         prompt: &str,
         params: GenParams,
-    ) -> Receiver<Response> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        opts: SubmitOptions,
+    ) -> SubmitHandle {
+        let id = opts
+            .id
+            .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
         let idx = self.pick();
         self.replicas[idx]
             .queued_hint
             .fetch_add(1, Ordering::Relaxed);
         let item = WorkItem {
-            request: Request { id, prompt: prompt.to_string(), params },
+            request: Request {
+                id,
+                prompt: prompt.to_string(),
+                params,
+                stream: opts.stream.is_some(),
+            },
             reply: tx,
             submitted_at: std::time::Instant::now(),
+            stream: opts.stream,
+            cancel: cancel.clone(),
         };
         // hint is decremented on admission approximation: the replica only
         // tracks active slots, so decrement when the send succeeds — the
@@ -133,7 +186,16 @@ impl Router {
         self.replicas[idx]
             .queued_hint
             .fetch_sub(1, Ordering::Relaxed);
-        rx
+        SubmitHandle { rx, cancel, id }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(
+        &self,
+        prompt: &str,
+        params: GenParams,
+    ) -> Receiver<Response> {
+        self.submit_opts(prompt, params, SubmitOptions::default()).rx
     }
 
     /// Submit and wait.
@@ -144,6 +206,27 @@ impl Router {
         }
     }
 
+    /// Submit-and-wait with a per-round delta sink: `stream` receives a
+    /// [`crate::coordinator::request::StreamDelta`] every time a verify
+    /// round commits new tokens, before the terminal response returns.
+    pub fn generate_streaming(
+        &self,
+        prompt: &str,
+        params: GenParams,
+        stream: StreamSink,
+    ) -> Response {
+        let h = self.submit_opts(
+            prompt,
+            params,
+            SubmitOptions { id: None, stream: Some(stream) },
+        );
+        match h.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Response::from_error(h.id, "replica dropped request"),
+        }
+    }
+
+    /// Disconnect the queues and join every replica (drains active work).
     pub fn shutdown(mut self) {
         self.senders.clear(); // disconnect queues
         for r in &mut self.replicas {

@@ -19,6 +19,7 @@ use crate::util::prng::Rng;
 /// production target; tests substitute a mock so queue semantics are
 /// exercised without artifacts.
 pub trait SubmitTarget {
+    /// Submit one request; the terminal response arrives on the channel.
     fn submit_item(
         &self,
         prompt: &str,
@@ -45,6 +46,7 @@ pub struct Scheduler<'r, T: SubmitTarget = Router> {
 }
 
 impl<'r, T: SubmitTarget> Scheduler<'r, T> {
+    /// Build a queue of `capacity` (≥ 1) in front of `target`.
     pub fn new(target: &'r T, capacity: usize) -> Self {
         Scheduler {
             target,
@@ -77,9 +79,22 @@ impl<'r, T: SubmitTarget> Scheduler<'r, T> {
             .collect()
     }
 
+    /// Current queue depth (enqueued, not yet dispatched).
     pub fn depth(&self) -> usize {
         self.queue.lock().unwrap().len()
     }
+}
+
+/// One exponential inter-arrival gap (seconds) for an open-loop Poisson
+/// process at `rate_per_s` requests/second, capped at 1 s so a low-rate
+/// sweep still finishes. Shared by [`drive_open_loop`] and the
+/// `mars bench serve` load generator.
+pub fn exp_arrival_gap(rng: &mut Rng, rate_per_s: f64) -> f64 {
+    if rate_per_s <= 0.0 {
+        return 0.0;
+    }
+    let u = rng.f64().max(1e-12);
+    (-u.ln() / rate_per_s).min(1.0)
 }
 
 /// Open-loop workload driver: submits `n` requests with exponential
@@ -95,13 +110,9 @@ pub fn drive_open_loop(
     let mut pending = Vec::new();
     for (prompt, params) in prompts {
         pending.push(router.submit(prompt, params.clone()));
-        if rate_per_s > 0.0 {
-            // exponential inter-arrival
-            let u = rng.f64().max(1e-12);
-            let gap = -u.ln() / rate_per_s;
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                gap.min(1.0),
-            ));
+        let gap = exp_arrival_gap(&mut rng, rate_per_s);
+        if gap > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(gap));
         }
     }
     pending

@@ -1,29 +1,88 @@
-//! Line-JSON TCP server: one JSON request object per line in, one JSON
-//! response per line out. std-only (tokio is not in the offline registry;
-//! a thread-per-connection accept loop over `std::net` is the honest
-//! equivalent for this CPU-bound backend).
+//! Line-JSON TCP server: JSON objects in, JSON objects out, one per line.
+//! std-only (tokio is not in the offline registry; a thread-per-connection
+//! accept loop over `std::net` is the honest equivalent for this CPU-bound
+//! backend). Cross-linked from DESIGN.md §5.
 //!
-//! Protocol:
+//! # Protocol
+//!
+//! Every line each way is one JSON object. Requests carry a client `"id"`
+//! that is echoed on every reply line; connections are **pipelined** —
+//! a client may send any number of requests without waiting, and replies
+//! complete **out of order** (match them by id). A request without an
+//! `"id"` gets a connection-local id assigned from a reserved high range
+//! (≥ 2^52, echoed as usual), so it can never collide with a
+//! client-assigned id on the same connection. Closing the connection
+//! cancels that connection's in-flight requests.
+//!
+//! ## Generation
+//!
 //! ```text
-//! -> {"prompt": "...", "method": "eagle_tree", "mars": true, ...}
-//! <- {"id": 1, "ok": true, "text": "...", "tau": 6.1, ...}
-//! -> {"cmd": "metrics"}
-//! <- {"requests_ok": 10, "throughput_tok_s": ...}
-//! -> {"cmd": "shutdown"}
+//! -> {"id": 1, "prompt": "...", "method": "eagle_tree",
+//!     "policy": {"mars": {"theta": 0.9}},   // or "mars:0.9" CLI string
+//!     "temperature": 1.0, "k": 7, "max_new": 128, "seed": 1}
+//! <- {"id": 1, "ok": true, "text": "...", "tokens": 42, "tau": 6.1,
+//!     "decode_seconds": ..., "prefill_seconds": ..., "relaxed_accepts": ...,
+//!     "policy": "mars:0.9"}
 //! ```
+//!
+//! The `"policy"` object selects the verification policy (see
+//! `crate::verify::VerifyPolicy::from_request`); the legacy flat
+//! `"mars"` / `"theta"` keys still parse for old clients. The echoed
+//! `"policy"` label is the rule that actually ran (device-normalized).
+//!
+//! ## Streaming
+//!
+//! `"stream": true` requests additionally emit one delta line per verify
+//! round that commits tokens, *before* the terminal reply:
+//!
+//! ```text
+//! -> {"id": 2, "prompt": "...", "stream": true, "max_new": 64}
+//! <- {"id": 2, "delta": "The", "tokens": 1, "done": false}
+//! <- {"id": 2, "delta": " cat", "tokens": 2, "done": false}
+//! <- {"id": 2, "ok": true, "text": "The cat", "done": true, ...}
+//! ```
+//!
+//! Concatenating the deltas of a request reproduces the final `"text"`
+//! exactly. The terminal line of a streaming request carries
+//! `"done": true`.
+//!
+//! ## Commands
+//!
+//! ```text
+//! -> {"cmd": "ping"}                  <- {"pong": true}
+//! -> {"cmd": "metrics"}               <- {"requests_ok": ..., "ttft_ms_p50": ...}
+//! -> {"cmd": "cancel", "id": 2}       <- {"cmd": "cancel", "id": 2, "ok": true}
+//! -> {"cmd": "shutdown"}              <- {"ok": true}
+//! ```
+//!
+//! `cancel` sets a cooperative flag on the in-flight request with that id
+//! (on this connection); the replica stops between rounds and the
+//! request's terminal reply arrives with `"canceled": true` and the text
+//! committed so far. The ack's `"ok"` is `false` when the id is unknown
+//! or already complete. `shutdown` stops the accept loop and drains:
+//! in-flight requests on every connection run to completion and their
+//! replies are flushed before the connection closes (`mars serve` polls
+//! [`Router::active_total`] down to zero, bounded at 60 s, before
+//! exiting).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::request::parse_request_json;
-use crate::coordinator::router::Router;
+use crate::coordinator::request::{
+    parse_request_json, wire_id, StreamSink, CLIENT_ID_MAX,
+};
+use crate::coordinator::router::{Router, SubmitOptions};
 use crate::util::json::Value;
 
+/// Handle to a running server (dropping it stops the accept loop).
 pub struct ServerHandle {
+    /// Bound address (useful with `--bind 127.0.0.1:0`).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -35,6 +94,8 @@ impl ServerHandle {
         self.stop.load(Ordering::Relaxed)
     }
 
+    /// Stop accepting connections and join the accept thread. Open
+    /// connections finish their in-flight requests (graceful drain).
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // poke the accept loop so it notices the flag
@@ -80,58 +141,214 @@ pub fn serve(router: Arc<Router>, bind: &str) -> Result<ServerHandle> {
     Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
 }
 
+/// In-flight requests of one connection: id → cancel flag. Shared between
+/// the reader (registers, cancels) and the per-request waiter threads
+/// (deregister on completion).
+type Inflight = Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>;
+
+/// Requests without a client `"id"` get connection-local ids from this
+/// reserved base. Client ids are validated below [`CLIENT_ID_MAX`]
+/// (`request::wire_id`), so the two namespaces cannot collide in the
+/// `Inflight` map, and both stay within the f64-exact integer range the
+/// wire encoding needs.
+const CONN_ID_BASE: u64 = CLIENT_ID_MAX;
+
 fn handle_conn(
     stream: TcpStream,
     router: &Router,
     stop: &AtomicBool,
 ) -> Result<()> {
-    let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+    let reader = BufReader::new(stream.try_clone()?);
+    // Dedicated writer thread: serializes reply/delta lines from the many
+    // in-flight requests of this connection onto the socket.
+    let (wtx, wrx) = channel::<String>();
+    let mut wstream = stream;
+    let writer = std::thread::Builder::new()
+        .name("mars-conn-write".into())
+        .spawn(move || {
+            for line in wrx {
+                if writeln!(wstream, "{line}").is_err() {
+                    break; // client gone; drain remaining sends cheaply
+                }
+            }
+        })?;
+    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+    let mut next_conn_id: u64 = 0;
+
     for line in reader.lines() {
-        let line = line?;
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match Value::parse(&line) {
-            Err(e) => err_json(0, &format!("bad json: {e}")),
+        if stop.load(Ordering::Relaxed) {
+            break; // server shutting down: stop reading, drain below
+        }
+        match Value::parse(&line) {
+            Err(e) => {
+                let _ = wtx
+                    .send(err_json(0, &format!("bad json: {e}")).to_string_json());
+            }
             Ok(v) => {
                 if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) {
-                    match cmd {
-                        "metrics" => router.metrics.snapshot_json(),
-                        "ping" => {
-                            let mut o = Value::obj();
-                            o.set("pong", Value::Bool(true));
-                            o
-                        }
-                        "shutdown" => {
-                            stop.store(true, Ordering::Relaxed);
-                            let mut o = Value::obj();
-                            o.set("ok", Value::Bool(true));
-                            writeln!(writer, "{}", o.to_string_json())?;
-                            break;
-                        }
-                        other => err_json(0, &format!("unknown cmd '{other}'")),
+                    let shutdown =
+                        handle_cmd(cmd, &v, router, &inflight, stop, &wtx);
+                    if shutdown {
+                        break;
                     }
                 } else {
-                    match parse_request_json(0, &v) {
-                        Err(e) => err_json(0, &e),
-                        Ok(req) => {
-                            let resp =
-                                router.generate(&req.prompt, req.params);
-                            resp.to_json()
-                        }
-                    }
+                    next_conn_id += 1;
+                    let fallback_id = CONN_ID_BASE + next_conn_id;
+                    submit_request(
+                        &v,
+                        fallback_id,
+                        router,
+                        &inflight,
+                        &wtx,
+                    );
                 }
             }
-        };
-        writeln!(writer, "{}", reply.to_string_json())?;
-        if stop.load(Ordering::Relaxed) {
-            break;
         }
     }
-    let _ = peer;
+    // Client hung up (as opposed to a server shutdown, which drains):
+    // cancel whatever is still in flight so replicas stop burning rounds
+    // for a reader that no longer exists.
+    if !stop.load(Ordering::Relaxed) {
+        for flag in inflight.lock().unwrap().values() {
+            flag.store(true, Ordering::Relaxed);
+        }
+    }
+    // Graceful drain: waiter threads hold wtx clones, so the writer stays
+    // alive until every in-flight request has sent its terminal reply.
+    drop(wtx);
+    let _ = writer.join();
     Ok(())
+}
+
+/// Handle one `{"cmd": ...}` line. Returns `true` on shutdown.
+fn handle_cmd(
+    cmd: &str,
+    v: &Value,
+    router: &Router,
+    inflight: &Inflight,
+    stop: &AtomicBool,
+    wtx: &Sender<String>,
+) -> bool {
+    let reply = match cmd {
+        "metrics" => router.metrics.snapshot_json(),
+        "ping" => {
+            let mut o = Value::obj();
+            o.set("pong", Value::Bool(true));
+            o
+        }
+        "cancel" => {
+            let id = wire_id(v);
+            let found = match id {
+                None => false,
+                Some(id) => match inflight.lock().unwrap().get(&id) {
+                    Some(flag) => {
+                        flag.store(true, Ordering::Relaxed);
+                        true
+                    }
+                    None => false,
+                },
+            };
+            let mut o = Value::obj();
+            o.set("cmd", Value::Str("cancel".into()));
+            o.set("id", Value::Num(id.unwrap_or(0) as f64));
+            o.set("ok", Value::Bool(found));
+            o
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::Relaxed);
+            let mut o = Value::obj();
+            o.set("ok", Value::Bool(true));
+            let _ = wtx.send(o.to_string_json());
+            return true;
+        }
+        other => err_json(0, &format!("unknown cmd '{other}'")),
+    };
+    let _ = wtx.send(reply.to_string_json());
+    false
+}
+
+/// Parse and submit one generation request; replies (and deltas, when
+/// streaming) flow back through the connection's writer channel without
+/// blocking the read loop.
+fn submit_request(
+    v: &Value,
+    fallback_id: u64,
+    router: &Router,
+    inflight: &Inflight,
+    wtx: &Sender<String>,
+) {
+    let req = match parse_request_json(fallback_id, v) {
+        Err(e) => {
+            // echo the client's own id when it sent a valid one, even
+            // though the rest of the request failed to parse — a
+            // pipelining client correlates errors by id like any reply
+            let id = wire_id(v).unwrap_or(fallback_id);
+            let _ = wtx.send(err_json(id, &e).to_string_json());
+            return;
+        }
+        Ok(req) => req,
+    };
+    let id = req.id;
+    let streaming = req.stream;
+    // a duplicate in-flight id would clobber the first request's cancel
+    // flag in the map and make the two replies uncorrelatable — reject
+    if inflight.lock().unwrap().contains_key(&id) {
+        let _ = wtx.send(
+            err_json(id, "duplicate in-flight id").to_string_json(),
+        );
+        return;
+    }
+    let sink: Option<StreamSink> = if streaming {
+        let dtx = wtx.clone();
+        Some(Box::new(move |delta: crate::coordinator::request::StreamDelta| {
+            let _ = dtx.send(delta.to_json().to_string_json());
+        }))
+    } else {
+        None
+    };
+    let handle = router.submit_opts(
+        &req.prompt,
+        req.params,
+        SubmitOptions { id: Some(id), stream: sink },
+    );
+    inflight.lock().unwrap().insert(id, handle.cancel.clone());
+    // Per-request waiter: forwards the terminal reply once the replica is
+    // done. Cheap (one blocked thread per in-flight request) and keeps
+    // the read loop free to accept more pipelined requests.
+    let wtx2 = wtx.clone();
+    let inflight2 = inflight.clone();
+    let cancel = handle.cancel.clone();
+    let spawned = std::thread::Builder::new()
+        .name("mars-conn-wait".into())
+        .spawn(move || {
+            let resp = handle.rx.recv().unwrap_or_else(|_| {
+                crate::coordinator::request::Response::from_error(
+                    id,
+                    "replica dropped request",
+                )
+            });
+            inflight2.lock().unwrap().remove(&id);
+            let mut o = resp.to_json();
+            if streaming {
+                o.set("done", Value::Bool(true));
+            }
+            let _ = wtx2.send(o.to_string_json());
+        });
+    if spawned.is_err() {
+        // no waiter means no one would ever forward the terminal reply:
+        // cancel the already-submitted work, deregister, and tell the
+        // client rather than leaving its id hanging forever
+        cancel.store(true, Ordering::Relaxed);
+        inflight.lock().unwrap().remove(&id);
+        let _ = wtx.send(
+            err_json(id, "server busy: could not spawn reply waiter")
+                .to_string_json(),
+        );
+    }
 }
 
 fn err_json(id: u64, msg: &str) -> Value {
@@ -150,4 +367,27 @@ pub fn client_roundtrip(addr: &str, line: &str) -> Result<Value> {
     let mut reply = String::new();
     reader.read_line(&mut reply)?;
     Value::parse(&reply).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+}
+
+/// Streaming client helper: send one `"stream": true` request line and
+/// collect every delta line until the terminal reply (`"done": true` or
+/// an error line). Returns `(deltas, final_reply)` — the deltas in
+/// arrival order, all observed strictly before the final reply.
+pub fn client_stream(addr: &str, line: &str) -> Result<(Vec<Value>, Value)> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
+    let reader = BufReader::new(stream);
+    let mut deltas = Vec::new();
+    for reply in reader.lines() {
+        let reply = reply?;
+        let v = Value::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+        let done = v.get("done").and_then(|b| b.as_bool()).unwrap_or(false);
+        if v.get("delta").is_some() && !done {
+            deltas.push(v);
+        } else {
+            return Ok((deltas, v));
+        }
+    }
+    anyhow::bail!("connection closed before the terminal reply")
 }

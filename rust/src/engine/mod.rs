@@ -168,10 +168,22 @@ pub struct SeqRunner<'a> {
     history: Vec<u32>,
     spins: usize,
     round_cap: usize,
+    /// Wall-clock prefill time, seconds (stamped in [`SeqRunner::new`]).
     pub prefill_seconds: f64,
     decode_started: Option<Instant>,
     decode_seconds: f64,
+    /// Round-commit callback: invoked after every snapshot pull whose
+    /// committed prefix grew, with the full committed token slice
+    /// (clamped to `max_new`, exactly like the final result).
+    on_commit: Option<OnCommit>,
+    /// Tokens already reported through `on_commit`.
+    reported: usize,
 }
+
+/// Round-commit callback type (see [`SeqRunner::set_on_commit`]). The
+/// argument is the *entire* committed token prefix, not just the new
+/// tail, so sinks can diff text without tracking token state.
+pub type OnCommit = Box<dyn FnMut(&[u32]) + Send>;
 
 impl<'a> SeqRunner<'a> {
     pub fn new(
@@ -219,7 +231,24 @@ impl<'a> SeqRunner<'a> {
             prefill_seconds,
             decode_started: None,
             decode_seconds: 0.0,
+            on_commit: None,
+            reported: 0,
         })
+    }
+
+    /// Install the round-commit callback driving token streaming: after
+    /// every [`SeqRunner::step`] that commits new tokens, `cb` receives
+    /// the full committed prefix (clamped to `max_new`). Concatenating
+    /// the text deltas a sink derives from successive calls reproduces
+    /// the final [`GenResult::text`] exactly (the byte-level tokenizer
+    /// decodes each token independently, so prefixes are stable).
+    pub fn set_on_commit(&mut self, cb: OnCommit) {
+        self.on_commit = Some(cb);
+    }
+
+    /// Tokens committed so far (clamped to `max_new`).
+    pub fn committed(&self) -> usize {
+        (self.history.len() - self.prompt.len()).min(self.params.max_new)
     }
 
     /// Run `extract_every` rounds + one snapshot pull. Returns the final
@@ -245,10 +274,32 @@ impl<'a> SeqRunner<'a> {
         self.history = self.prompt.clone();
         self.history.extend(&snap.tokens);
         self.decode_seconds += t.elapsed().as_secs_f64();
+        self.fire_on_commit(&snap);
         if snap.finished || self.spins >= self.round_cap {
             return Ok(Some(self.finalize(snap)?));
         }
         Ok(None)
+    }
+
+    /// Finalize mid-flight with whatever has committed (the cancel path:
+    /// no further rounds run; the result mirrors a natural finish except
+    /// the text may be a prefix).
+    pub fn finish_early(&mut self) -> Result<GenResult> {
+        let snap = self.sess.extract()?;
+        self.history = self.prompt.clone();
+        self.history.extend(&snap.tokens);
+        self.fire_on_commit(&snap);
+        self.finalize(snap)
+    }
+
+    fn fire_on_commit(&mut self, snap: &Snapshot) {
+        let n = snap.tokens.len().min(self.params.max_new);
+        if n > self.reported {
+            if let Some(cb) = &mut self.on_commit {
+                cb(&snap.tokens[..n]);
+            }
+            self.reported = n;
+        }
     }
 
     fn finalize(&mut self, snap: Snapshot) -> Result<GenResult> {

@@ -14,10 +14,13 @@
 //!   chain/tree, Medusa, PLD, Lookahead); the verification policy is a
 //!   [`GenParams`] field, orthogonal to the method.
 //! * [`coordinator`] — the serving layer: scheduler, engine workers,
-//!   line-JSON TCP server, router, per-policy metrics.
+//!   router, per-policy metrics (TTFT/TPOT percentiles), and a
+//!   streaming, pipelined line-JSON TCP server (client ids, per-round
+//!   deltas, cancel, graceful drain — see `coordinator::server`).
 //! * [`datasets`] / [`eval`] / [`bench`] — the paper's benchmark suite:
 //!   synthetic task analogs, quality metrics, one harness per table and
-//!   figure of the evaluation section, and a policy-sweep axis.
+//!   figure of the evaluation section, a policy-sweep axis, and the
+//!   `bench serve` open-loop serving-latency harness (BENCHMARKS.md).
 
 pub mod bench;
 pub mod coordinator;

@@ -59,9 +59,12 @@ USAGE: mars <cmd> [flags]
       [--temperature 1.0] [--k 7] [--beam 2] [--branch 2]
       [--max-new 128] [--seed 0] [--hostloop]
   serve [--bind ADDR] [--replicas 1] [--slots 4] [--route rr|ll]
-  bench table1|..|table7|fig3|perf|policies|all
+      line-JSON protocol: pipelined ids, \"stream\": true deltas,
+      {\"cmd\": \"cancel\", \"id\": N} — see coordinator/server.rs docs
+  bench table1|..|table7|fig3|perf|policies|serve|all
       [--n 16] [--seed 7] [--max-new 96]
-      [--policies strict,mars:0.9,topk:2,entropy:1.5]   (bench policies)
+      [--policies strict,mars:0.9,topk:2,entropy:1.5]   (policies/serve)
+      [--connections 4] [--rate 8.0] [--replicas 1] [--slots 4]  (serve)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
   eval --task arith|code|chat|sum|mt [--method M] [--policy P] [--n 16]
 
@@ -167,11 +170,25 @@ fn run(args: &Args) -> Result<()> {
             )?);
             let handle = server::serve(router.clone(), &bind)?;
             println!("serving on {} ({} replicas)", handle.addr, replicas);
-            println!("protocol: one JSON object per line; {{\"cmd\":\"shutdown\"}} to stop");
+            println!(
+                "protocol: one JSON object per line; pipelined \"id\"s, \
+                 \"stream\": true for deltas, {{\"cmd\":\"cancel\",\"id\":N}}, \
+                 {{\"cmd\":\"shutdown\"}} to stop (drains in-flight work)"
+            );
             // block until the shutdown command flips the flag
             while !handle.stopped() {
                 std::thread::sleep(std::time::Duration::from_millis(200));
             }
+            // graceful drain: let in-flight sequences finish (bounded) so
+            // every connection flushes its terminal replies before exit
+            let t0 = std::time::Instant::now();
+            while router.active_total() > 0
+                && t0.elapsed() < std::time::Duration::from_secs(60)
+            {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            // one beat for connection writer threads to flush the socket
+            std::thread::sleep(std::time::Duration::from_millis(100));
             println!(
                 "metrics: {}",
                 router.metrics.snapshot_json().to_string_json()
@@ -184,11 +201,6 @@ fn run(args: &Args) -> Result<()> {
                 .first()
                 .map(|s| s.as_str())
                 .unwrap_or("all");
-            let rt = Runtime::new(&dir)?;
-            let engine = DecodeEngine::new(rt);
-            let mut ctx =
-                BenchCtx::new(&engine, args.get_usize("n", 16), args.get_usize("seed", 7) as u64);
-            ctx.max_new = args.get_usize("max-new", 96);
             let sweep = || -> Result<Vec<VerifyPolicy>> {
                 let spec = args
                     .get("policies")
@@ -201,6 +213,29 @@ fn run(args: &Args) -> Result<()> {
                     })
                     .ok_or_else(|| anyhow!("bad --policies list '{spec}'"))
             };
+            // the serving benchmark owns its own router/replicas (each
+            // replica builds a Runtime), so handle it before the bare
+            // single-engine context below
+            if which == "serve" {
+                let cfg = bench::serve::ServeBenchCfg {
+                    artifact_dir: dir.clone(),
+                    replicas: args.get_usize("replicas", 1),
+                    slots: args.get_usize("slots", 4),
+                    connections: args.get_usize("connections", 4),
+                    n_requests: args.get_usize("n", 24),
+                    rate_per_s: args.get_f64("rate", 8.0),
+                    max_new: args.get_usize("max-new", 48),
+                    seed: args.get_usize("seed", 7) as u64,
+                    policies: sweep()?,
+                    out_dir: PathBuf::from("results"),
+                };
+                return bench::serve::run(&cfg);
+            }
+            let rt = Runtime::new(&dir)?;
+            let engine = DecodeEngine::new(rt);
+            let mut ctx =
+                BenchCtx::new(&engine, args.get_usize("n", 16), args.get_usize("seed", 7) as u64);
+            ctx.max_new = args.get_usize("max-new", 96);
             match which {
                 "table1" => bench::table1(&ctx)?,
                 "table2" => bench::table2(&ctx)?,

@@ -28,12 +28,19 @@
 //! `TopK { 2, eps }` is definitionally `Mars { 1 - eps }`; the property
 //! suite pins that equivalence.
 
+#![warn(missing_docs)]
+
 use crate::util::json::Value;
 
-/// Device-slot policy ids (mirrored by `python/compile/state_spec.py`).
+// Device-slot policy ids (mirrored by `python/compile/state_spec.py`).
+
+/// Device-slot id of [`VerifyPolicy::Strict`].
 pub const POLICY_ID_STRICT: f32 = 0.0;
+/// Device-slot id of [`VerifyPolicy::Mars`].
 pub const POLICY_ID_MARS: f32 = 1.0;
+/// Device-slot id of [`VerifyPolicy::TopK`].
 pub const POLICY_ID_TOPK: f32 = 2.0;
+/// Device-slot id of [`VerifyPolicy::Entropy`].
 pub const POLICY_ID_ENTROPY: f32 = 3.0;
 
 /// A pluggable speculative-verification accept rule.
@@ -65,13 +72,16 @@ impl Default for VerifyPolicy {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum AcceptFlag {
+    /// Draft token rejected; the chain scan stops here.
     Reject = 0,
+    /// Draft token matched the target's own pick exactly.
     Exact = 1,
     /// Accepted by the policy's relaxation, not by exact match.
     Relaxed = 2,
 }
 
 impl AcceptFlag {
+    /// Decode the device-side f32 flag (0/1/2; anything else rejects).
     pub fn from_f32(x: f32) -> AcceptFlag {
         match x as u8 {
             1 => AcceptFlag::Exact,
@@ -80,6 +90,7 @@ impl AcceptFlag {
         }
     }
 
+    /// Was the token accepted (exactly or via relaxation)?
     pub fn accepted(&self) -> bool {
         !matches!(self, AcceptFlag::Reject)
     }

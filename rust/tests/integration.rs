@@ -235,6 +235,9 @@ fn router_end_to_end_over_tcp() {
         metrics.get("requests_ok").and_then(|v| v.as_usize()),
         Some(2)
     );
+    // serving percentiles are exported
+    assert!(metrics.get("ttft_ms_p99").is_some());
+    assert!(metrics.get("tpot_ms_p50").is_some());
     // per-policy breakout: one mars request, one topk request
     assert_eq!(
         metrics.path(&["policy", "mars", "requests"]).and_then(|v| v.as_usize()),
@@ -244,4 +247,104 @@ fn router_end_to_end_over_tcp() {
         metrics.path(&["policy", "topk", "requests"]).and_then(|v| v.as_usize()),
         Some(1)
     );
+
+    // ---- pipelining: two requests on one connection, out-of-order ids --
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut sock =
+            std::net::TcpStream::connect(&addr).expect("connect");
+        // the long request first: with 2 slots both interleave and the
+        // 2-token request must complete (and reply) before the long one
+        let batch = "{\"id\": 101, \"prompt\": \"Text: The crew painted a \
+                     red barn at noon.\\nSummary: \", \
+                     \"max_new\": 64, \"seed\": 1}\n\
+                     {\"id\": 102, \"prompt\": \"Q: 2+2=?\\nA: \", \
+                     \"max_new\": 2, \"seed\": 1}\n";
+        sock.write_all(batch.as_bytes()).expect("write batch");
+        let mut reader = BufReader::new(sock);
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read reply");
+            let v = mars::util::json::Value::parse(&line).expect("json");
+            assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+            got.push(v.get("id").and_then(|x| x.as_usize()).unwrap());
+        }
+        assert_eq!(
+            got,
+            vec![102, 101],
+            "pipelined replies must complete out of submission order"
+        );
+    }
+
+    // ---- streaming: deltas arrive before the final reply and
+    //      concatenate to exactly the final text ------------------------
+    {
+        let (deltas, fin) = server::client_stream(
+            &addr,
+            "{\"id\": 7, \"prompt\": \"Q: 13+8=?\\nA: \", \"stream\": true, \
+             \"policy\": \"mars:0.9\", \"max_new\": 24, \"seed\": 2}",
+        )
+        .expect("stream");
+        assert!(!deltas.is_empty(), "no streamed deltas before the reply");
+        assert_eq!(fin.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(fin.get("done").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(fin.get("id").and_then(|x| x.as_usize()), Some(7));
+        let joined: String = deltas
+            .iter()
+            .map(|d| {
+                assert_eq!(d.get("id").and_then(|x| x.as_usize()), Some(7));
+                assert_eq!(
+                    d.get("done").and_then(|b| b.as_bool()),
+                    Some(false)
+                );
+                d.get("delta").and_then(|s| s.as_str()).unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(
+            Some(joined.as_str()),
+            fin.get("text").and_then(|t| t.as_str()),
+            "deltas must concatenate to the final text"
+        );
+    }
+
+    // ---- cancel mid-generation: the terminal reply carries the
+    //      committed prefix and canceled = true -------------------------
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut sock =
+            std::net::TcpStream::connect(&addr).expect("connect");
+        // request + cancel in one batch: the cancel is processed while
+        // the (very long) request is still in its first rounds
+        let batch = "{\"id\": 301, \"prompt\": \"Tell me a story. \", \
+                     \"max_new\": 2048, \"seed\": 3}\n\
+                     {\"cmd\": \"cancel\", \"id\": 301}\n";
+        sock.write_all(batch.as_bytes()).expect("write batch");
+        let mut reader = BufReader::new(sock);
+        let mut ack_ok = None;
+        let mut fin = None;
+        while fin.is_none() {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read reply");
+            let v = mars::util::json::Value::parse(&line).expect("json");
+            if v.get("cmd").and_then(|c| c.as_str()) == Some("cancel") {
+                ack_ok = v.get("ok").and_then(|b| b.as_bool());
+            } else {
+                fin = Some(v);
+            }
+        }
+        assert_eq!(ack_ok, Some(true), "cancel ack must find the request");
+        let fin = fin.unwrap();
+        assert_eq!(fin.get("id").and_then(|x| x.as_usize()), Some(301));
+        assert_eq!(fin.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(
+            fin.get("canceled").and_then(|b| b.as_bool()),
+            Some(true),
+            "reply must be flagged canceled: {}",
+            fin.to_string_json()
+        );
+        // far fewer tokens than max_new committed before the cancel hit
+        let tokens = fin.get("tokens").and_then(|t| t.as_usize()).unwrap();
+        assert!(tokens < 2048, "cancel did not stop generation: {tokens}");
+    }
 }

@@ -104,6 +104,50 @@ fn prop_policy_slots_round_trip() {
 }
 
 #[test]
+fn prop_request_json_round_trips_wire_fields() {
+    // the full request wire surface (id, stream, policy, method, sampling
+    // knobs) survives a JSON encode → parse_request_json round trip
+    use mars::coordinator::request::parse_request_json;
+    use mars::engine::Method;
+    let mut rng = Rng::new(207);
+    for _ in 0..400 {
+        let id = rng.below(1_000_000);
+        let stream = rng.bool(0.5);
+        let policy = random_policy(&mut rng);
+        let method = *rng.pick(Method::all());
+        let k = 1 + rng.usize_below(12);
+        let max_new = 1 + rng.usize_below(256);
+        let seed = rng.below(1u64 << 40);
+        let mut o = Value::obj();
+        o.set("id", Value::Num(id as f64));
+        o.set("prompt", Value::Str("Q: 1+1=?\nA: ".into()));
+        if stream {
+            o.set("stream", Value::Bool(true));
+        }
+        o.set("policy", Value::Str(policy.label()));
+        o.set("method", Value::Str(method.name().into()));
+        o.set("k", Value::Num(k as f64));
+        o.set("max_new", Value::Num(max_new as f64));
+        o.set("seed", Value::Num(seed as f64));
+        let text = o.to_string_json();
+        let back = Value::parse(&text).expect("request json parses");
+        let req = parse_request_json(0, &back)
+            .unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(req.id, id, "{text}");
+        assert_eq!(req.stream, stream, "{text}");
+        assert_eq!(
+            req.params.policy,
+            policy.normalize_for_device(),
+            "{text}"
+        );
+        assert_eq!(req.params.method, method, "{text}");
+        assert_eq!(req.params.k, k, "{text}");
+        assert_eq!(req.params.max_new, max_new, "{text}");
+        assert_eq!(req.params.seed, seed, "{text}");
+    }
+}
+
+#[test]
 fn prop_legacy_request_keys_equal_policy_forms() {
     // every legacy {mars, theta} pair parses to the policy whose own JSON
     // round-trips to itself

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Documentation cross-reference check (run by the CI docs job):
+# every `§N[.M]` reference inside rust doc comments must resolve to a
+# DESIGN.md heading, so module docs can't drift from the layer map.
+# Named references like `§Perf` are prose, not headings, and are ignored.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+python3 - <<'EOF'
+import pathlib
+import re
+import sys
+
+design = pathlib.Path("DESIGN.md").read_text()
+headings = set(re.findall(r"^#+\s+§([0-9]+(?:\.[0-9]+)?)\b", design, re.M))
+bad = []
+for path in sorted(pathlib.Path("rust/src").rglob("*.rs")):
+    for line_no, line in enumerate(path.read_text().splitlines(), 1):
+        stripped = line.lstrip()
+        if not (stripped.startswith("//!") or stripped.startswith("///")):
+            continue
+        for ref in re.findall(r"§([0-9]+(?:\.[0-9]+)?)", line):
+            if ref not in headings:
+                bad.append(
+                    f"{path}:{line_no}: §{ref} is not a DESIGN.md heading"
+                )
+print("DESIGN.md § headings:", ", ".join(sorted(headings)))
+if bad:
+    print("\n".join(bad))
+    sys.exit(1)
+print("ok: every § reference in rust doc comments resolves")
+EOF
