@@ -7,7 +7,7 @@
 
 use mars::bench::BenchCtx;
 use mars::datasets::Task;
-use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::engine::{DecodeEngine, GenParams, SpecMethod};
 use mars::runtime::{Artifacts, Runtime};
 use mars::verify::VerifyPolicy;
 
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     println!("------+--------------+---------------+------+----------+--------");
     for theta in [0.80f32, 0.84, 0.88, 0.90, 0.92, 0.96, 0.995] {
         let p = GenParams {
-            method: Method::EagleTree,
+            method: SpecMethod::default(),
             policy: VerifyPolicy::Mars { theta },
             temperature: 1.0,
             max_new: 96,

@@ -8,7 +8,7 @@
 //! ```
 
 use mars::datasets::{dataset, Task};
-use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::engine::{DecodeEngine, GenParams, SpecMethod};
 use mars::runtime::{Artifacts, Runtime};
 use mars::verify::{AcceptFlag, VerifyPolicy};
 
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     for (i, &task) in Task::all().iter().enumerate() {
         for (j, ex) in dataset(task, 4, 99).iter().enumerate() {
             let p = GenParams {
-                method: Method::EagleTree,
+                method: SpecMethod::default(),
                 policy: VerifyPolicy::Mars { theta: 0.9 },
                 probe: true,
                 temperature: 1.0,

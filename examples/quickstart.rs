@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::engine::{DecodeEngine, GenParams, SpecMethod};
 use mars::runtime::{Artifacts, Runtime};
 use mars::verify::VerifyPolicy;
 
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let ar = engine.generate(
         prompt,
         &GenParams {
-            method: Method::Ar,
+            method: SpecMethod::Ar,
             temperature: 1.0,
             max_new: 32,
             seed: 1,
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let strict = engine.generate(
         prompt,
         &GenParams {
-            method: Method::EagleTree,
+            method: SpecMethod::default(),
             policy: VerifyPolicy::Strict,
             temperature: 1.0,
             max_new: 32,
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let mars = engine.generate(
         prompt,
         &GenParams {
-            method: Method::EagleTree,
+            method: SpecMethod::default(),
             policy: VerifyPolicy::Mars { theta: 0.9 },
             temperature: 1.0,
             max_new: 32,

@@ -15,7 +15,7 @@ use mars::coordinator::router::{Router, RouterPolicy};
 use mars::coordinator::scheduler;
 use mars::coordinator::server;
 use mars::datasets::{dataset, Task};
-use mars::engine::{GenParams, Method};
+use mars::engine::{GenParams, SpecMethod};
 use mars::runtime::Artifacts;
 use mars::verify::VerifyPolicy;
 use mars::util::stats::Summary;
@@ -82,8 +82,15 @@ fn main() -> anyhow::Result<()> {
             2 => VerifyPolicy::TopK { k: 2, eps: 0.1 },
             _ => VerifyPolicy::Entropy { h_max: 1.5 },
         };
+        // rotate the drafting method too, so the per-method metrics
+        // breakout has something to show alongside the per-policy one
+        let method = match i % 3 {
+            0 => SpecMethod::default(),
+            1 => SpecMethod::Sps { k: 6 },
+            _ => SpecMethod::Pld { min_ngram: 2, max_ngram: 4, k: 7 },
+        };
         let params = GenParams {
-            method: Method::EagleTree,
+            method,
             policy,
             temperature: 1.0,
             max_new: 64,

@@ -24,6 +24,7 @@ fn main() {
         tau: 6.0,
         relaxed_accepts: 3.0,
         policy: "mars",
+        method: "eagle_tree",
     };
     bench_fn("metrics_record", 200, || {
         reg.record(m);

@@ -5,7 +5,7 @@
 mod bench_util;
 
 use bench_util::{artifacts_dir, bench_fn};
-use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::engine::{DecodeEngine, GenParams, SpecMethod};
 use mars::runtime::Runtime;
 
 fn main() {
@@ -16,33 +16,29 @@ fn main() {
 
     let prompt = mars::tokenizer::encode("Q: 12+34=?\nA: ");
     let base = GenParams {
-        method: Method::EagleTree,
+        method: SpecMethod::default(),
         policy: mars::verify::VerifyPolicy::Mars { theta: 0.9 },
         temperature: 1.0,
         max_new: 48,
         ..GenParams::default()
     };
 
-    // per-round cost per method (resident state)
-    for (name, method) in [
-        ("ar_step", Method::Ar),
-        ("sps_round", Method::Sps),
-        ("eagle_tree_round", Method::EagleTree),
-        ("medusa_round", Method::Medusa),
-    ] {
+    // per-round cost of every device-drafted method in the registry.
+    // Host drafters go through round_ext (covered by the verify bench's
+    // drafter section); eagle_chain is skipped so `eagle_tree_round` is
+    // timed at the full default tree config, not the degenerate beam-1
+    // chain that shares its executable.
+    for method in SpecMethod::all_defaults() {
+        let exec = method.exec_name();
+        if exec == "verify_ext_round" || method.name() == "eagle_chain" {
+            continue;
+        }
         let mut p = base.clone();
         p.method = method;
         let mut sess = rt.session(&prompt, &p).expect("session");
-        let exec = match method {
-            Method::Ar => "ar_step",
-            Method::Sps => "sps_round",
-            Method::Medusa => "medusa_round",
-            _ => "eagle_tree_round",
-        };
-        bench_fn(&format!("round/{name}"), 1500, || {
+        bench_fn(&format!("round/{exec}"), 1500, || {
             sess.round(exec).expect("round");
         });
-        let _ = name;
     }
 
     // extract cost

@@ -9,7 +9,9 @@
 mod bench_util;
 
 use bench_util::bench_fn;
-use mars::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+use mars::spec::{
+    HostDrafter, LookaheadDrafter, PldDrafter, SpecMethod, METHODS,
+};
 use mars::util::json::Value;
 use mars::util::prng::Rng;
 use mars::verify::VerifyPolicy;
@@ -85,6 +87,19 @@ fn main() {
             std::hint::black_box(
                 VerifyPolicy::decode_slots(p.encode_slots()).unwrap(),
             );
+        });
+    }
+
+    // ---- method-descriptor codecs (one per registry row) ----------------
+    for info in METHODS {
+        let label = info.default.label();
+        bench_fn(&format!("method_parse/{}", info.name), 100, || {
+            std::hint::black_box(SpecMethod::parse(&label));
+        });
+        bench_fn(&format!("method_json_roundtrip/{}", info.name), 100, || {
+            let v = info.default.to_json();
+            let back = Value::parse(&v.to_string_json()).unwrap();
+            std::hint::black_box(SpecMethod::from_json(&back).unwrap());
         });
     }
 

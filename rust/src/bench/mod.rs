@@ -26,8 +26,9 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::datasets::{dataset, Example, Task};
-use crate::engine::{DecodeEngine, GenParams, GenResult, Method};
+use crate::engine::{DecodeEngine, GenParams, GenResult, SpecMethod};
 use crate::eval;
+use crate::spec::METHODS;
 use crate::util::stats::Summary;
 use crate::verify::VerifyPolicy;
 
@@ -55,9 +56,11 @@ impl<'a> BenchCtx<'a> {
         }
     }
 
+    /// Bench-standard [`GenParams`] for one descriptor × policy × temp
+    /// (the descriptor carries every drafting knob).
     pub fn params(
         &self,
-        method: Method,
+        method: SpecMethod,
         policy: VerifyPolicy,
         temp: f32,
     ) -> GenParams {
@@ -65,9 +68,6 @@ impl<'a> BenchCtx<'a> {
             method,
             policy,
             temperature: temp,
-            k: 7,
-            beam: 2,
-            branch: 2,
             max_new: self.max_new,
             seed: self.seed,
             probe: false,
@@ -120,7 +120,7 @@ impl<'a> BenchCtx<'a> {
         if let Some(b) = self.baseline.borrow().get(&key) {
             return Ok(b.clone());
         }
-        let p = self.params(Method::Ar, VerifyPolicy::Strict, temp);
+        let p = self.params(SpecMethod::Ar, VerifyPolicy::Strict, temp);
         let b = self.run_task(task, &p)?;
         self.baseline.borrow_mut().insert(key, b.clone());
         Ok(b)
@@ -212,19 +212,21 @@ impl QualityAgg {
 
 // ------------------------------------------------------------ tables -------
 
-/// Method lineup of Table 1 (PLD/Lookahead/Medusa are the paper's
-/// baseline rows; MARS = EagleTree + the margin-aware policy).
-fn table1_rows() -> Vec<(&'static str, Method, VerifyPolicy)> {
-    let strict = VerifyPolicy::Strict;
-    vec![
-        ("SpS", Method::Sps, strict),
-        ("Lookahead", Method::Lookahead, strict),
-        ("PLD", Method::Pld, strict),
-        ("Medusa", Method::Medusa, strict),
-        ("EAGLE (chain)", Method::EagleChain, strict),
-        ("EAGLE-3 (tree)", Method::EagleTree, strict),
-        ("MARS", Method::EagleTree, VerifyPolicy::Mars { theta: 0.9 }),
-    ]
+/// Method lineup of Table 1, straight from the descriptor registry
+/// (every speculative family under strict verification), plus the MARS
+/// row = the default tree descriptor + the margin-aware policy.
+fn table1_rows() -> Vec<(&'static str, SpecMethod, VerifyPolicy)> {
+    let mut rows: Vec<(&'static str, SpecMethod, VerifyPolicy)> = METHODS
+        .iter()
+        .filter(|m| m.default.is_speculative())
+        .map(|m| (m.paper_label, m.default, VerifyPolicy::Strict))
+        .collect();
+    rows.push((
+        "MARS",
+        SpecMethod::default(),
+        VerifyPolicy::Mars { theta: 0.9 },
+    ));
+    rows
 }
 
 /// Table 1: speedup + τ for every method × task at T = 1, K = 7, θ = 0.9.
@@ -304,9 +306,11 @@ pub fn table2(ctx: &BenchCtx) -> Result<()> {
             for &t in &temps {
                 let base = ctx.baseline(task, t)?;
                 // chain method so K > 10 is exercised (tree depth caps at 10)
-                let mut p =
-                    ctx.params(Method::Sps, VerifyPolicy::default(), t);
-                p.k = k;
+                let p = ctx.params(
+                    SpecMethod::Sps { k },
+                    VerifyPolicy::default(),
+                    t,
+                );
                 let e = ctx.run_task(task, &p)?;
                 cells.push(format!(
                     "{:.2}x / {:.2} / {:.3}",
@@ -332,8 +336,12 @@ pub fn table3(ctx: &BenchCtx) -> Result<()> {
     let base = ctx.baseline(Task::Sum, 1.0)?;
     writeln!(out, "| Baseline (AR) | {:.4} |", base.quality.rouge_l)?;
     for (label, method, policy) in [
-        ("EAGLE-3", Method::EagleTree, VerifyPolicy::Strict),
-        ("MARS", Method::EagleTree, VerifyPolicy::Mars { theta: 0.9 }),
+        ("EAGLE-3", SpecMethod::default(), VerifyPolicy::Strict),
+        (
+            "MARS",
+            SpecMethod::default(),
+            VerifyPolicy::Mars { theta: 0.9 },
+        ),
     ] {
         let e = ctx.run_task(Task::Sum, &ctx.params(method, policy, 1.0))?;
         writeln!(out, "| {label} | {:.4} |", e.quality.rouge_l)?;
@@ -357,7 +365,7 @@ pub fn table4(ctx: &BenchCtx) -> Result<()> {
     )?;
     let e3 = ctx.run_task(
         Task::Mt,
-        &ctx.params(Method::EagleTree, VerifyPolicy::Strict, 1.0),
+        &ctx.params(SpecMethod::default(), VerifyPolicy::Strict, 1.0),
     )?;
     writeln!(
         out,
@@ -368,7 +376,7 @@ pub fn table4(ctx: &BenchCtx) -> Result<()> {
     )?;
     for &th in &thetas {
         let p = ctx.params(
-            Method::EagleTree,
+            SpecMethod::default(),
             VerifyPolicy::Mars { theta: th },
             1.0,
         );
@@ -407,8 +415,7 @@ pub fn table5(ctx: &BenchCtx) -> Result<()> {
             ("SPD", VerifyPolicy::Strict),
             ("SPD+MARS", VerifyPolicy::Mars { theta: 0.9 }),
         ] {
-            let mut p = ctx.params(Method::Sps, policy, 1.0);
-            p.k = 6;
+            let p = ctx.params(SpecMethod::Sps { k: 6 }, policy, 1.0);
             let e = ctx.run_task(task, &p)?;
             writeln!(
                 out,
@@ -443,7 +450,7 @@ pub fn table6(ctx: &BenchCtx) -> Result<()> {
             ("MARS", VerifyPolicy::Mars { theta: 0.9 }),
         ] {
             let e = ctx
-                .run_task(task, &ctx.params(Method::EagleTree, policy, 0.0))?;
+                .run_task(task, &ctx.params(SpecMethod::default(), policy, 0.0))?;
             writeln!(
                 out,
                 "| {} | {label} | {:.2}x | {:.2} | {:.3} |",
@@ -474,8 +481,10 @@ pub fn table7(ctx: &BenchCtx) -> Result<()> {
         ("EAGLE-3", VerifyPolicy::Strict),
         ("MARS", VerifyPolicy::Mars { theta: 0.9 }),
     ] {
-        let e = ctx
-            .run_task(Task::Chat, &ctx.params(Method::EagleTree, policy, 1.0))?;
+        let e = ctx.run_task(
+            Task::Chat,
+            &ctx.params(SpecMethod::default(), policy, 1.0),
+        )?;
         writeln!(
             out,
             "| {label} | {:.2} | {:.3} |",
@@ -498,12 +507,11 @@ pub fn fig3(ctx: &BenchCtx) -> Result<()> {
             writeln!(out, "| θ | speedup(sim) | accuracy |")?;
             writeln!(out, "|---|---|---|")?;
             for &th in &thetas {
-                let mut p = ctx.params(
-                    Method::EagleTree,
+                let p = ctx.params(
+                    SpecMethod::default().with_overrides(Some(k), None, None),
                     VerifyPolicy::Mars { theta: th },
                     1.0,
                 );
-                p.k = k;
                 let e = ctx.run_task(task, &p)?;
                 writeln!(
                     out,
@@ -519,47 +527,65 @@ pub fn fig3(ctx: &BenchCtx) -> Result<()> {
     Ok(())
 }
 
-/// Policy sweep: one row per [`VerifyPolicy`] × task — the scenario axis
-/// the `verify` subsystem opens up (`mars bench policies --policies
-/// strict,mars:0.9,topk:2,entropy:1.5`).
-pub fn policy_sweep(ctx: &BenchCtx, policies: &[VerifyPolicy]) -> Result<()> {
+/// Method × policy sweep: one row per [`SpecMethod`] × [`VerifyPolicy`]
+/// combination — the two scenario axes the `spec` and `verify` subsystems
+/// open up (`mars bench policies --methods sps:k=6,eagle_tree --policies
+/// strict,mars:0.9`). Defaults sweep every speculative family in the
+/// descriptor registry; nothing is hand-listed.
+pub fn policy_sweep(
+    ctx: &BenchCtx,
+    methods: &[SpecMethod],
+    policies: &[VerifyPolicy],
+) -> Result<()> {
     let temp = 1.0;
     let tasks = [Task::Arith, Task::Code, Task::Mt];
     let mut out = String::new();
     writeln!(
         out,
-        "## Policy sweep — verification policies on EAGLE-tree (T=1, K=7)\n"
+        "## Method × policy sweep — drafting descriptors × verification \
+         policies (T=1)\n"
     )?;
     writeln!(
         out,
-        "| Policy | {} |",
+        "| Method | Policy | {} |",
         tasks
             .iter()
             .map(|t| format!("{} spd/τ/acc/relaxed", t.paper_name()))
             .collect::<Vec<_>>()
             .join(" | ")
     )?;
-    writeln!(out, "|---|{}", "---|".repeat(tasks.len()))?;
-    for &policy in policies {
-        let mut cells = Vec::new();
-        for &task in &tasks {
-            let base = ctx.baseline(task, temp)?;
-            let e = ctx
-                .run_task(task, &ctx.params(Method::EagleTree, policy, temp))?;
-            cells.push(format!(
-                "{:.2}x / {:.2} / {:.3} / {:.0}",
-                e.speedup_sim(&base),
-                e.tau,
-                e.quality.accuracy,
-                e.relaxed_total
-            ));
+    writeln!(out, "|---|---|{}", "---|".repeat(tasks.len()))?;
+    for &method in methods {
+        for &policy in policies {
+            let mut cells = Vec::new();
+            for &task in &tasks {
+                let base = ctx.baseline(task, temp)?;
+                let e =
+                    ctx.run_task(task, &ctx.params(method, policy, temp))?;
+                cells.push(format!(
+                    "{:.2}x / {:.2} / {:.3} / {:.0}",
+                    e.speedup_sim(&base),
+                    e.tau,
+                    e.quality.accuracy,
+                    e.relaxed_total
+                ));
+            }
+            // full labels, not family names: a sweep may carry several
+            // descriptors of one family (sps:k=4 vs sps:k=12)
+            writeln!(
+                out,
+                "| {} | {} | {} |",
+                method.label(),
+                policy.label(),
+                cells.join(" | ")
+            )?;
         }
-        writeln!(out, "| {} | {} |", policy.label(), cells.join(" | "))?;
     }
     writeln!(
         out,
         "\nStrict is the lossless floor (relaxed = 0 by construction); \
-         every other row trades acceptance for quality per its own knob."
+         every other policy row trades acceptance for quality per its own \
+         knob, composed with every drafting method in the registry."
     )?;
     ctx.emit("policy_sweep", &out);
     Ok(())
@@ -587,7 +613,7 @@ pub fn perf(ctx: &BenchCtx, artifact_dir: &std::path::Path) -> Result<()> {
         let mut rounds = 0u64;
         for ex in &examples {
             let mut p =
-                ctx.params(Method::EagleTree, VerifyPolicy::default(), 1.0);
+                ctx.params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
             p.extract_every = every;
             let r = engine.generate(&ex.prompt, &p)?;
             toks += r.tokens.len();

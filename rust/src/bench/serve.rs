@@ -9,9 +9,11 @@
 //! * **TPOT** — (last event − first delta) / (tokens − 1);
 //! * **throughput** — committed tokens / wall-clock, requests / second.
 //!
-//! The sweep axis is the verification policy (`--policies`): each policy
-//! gets its own wave of `n` requests at the same arrival rate, so the
-//! table isolates what the accept rule does to tail latency under load.
+//! The sweep axes are the drafting method (`--methods`, descriptor
+//! grammar) and the verification policy (`--policies`): each method ×
+//! policy combination gets its own wave of `n` requests at the same
+//! arrival rate, so the table isolates what the drafter and the accept
+//! rule each do to tail latency under load.
 //! Client-side measurements can be cross-checked against the server's
 //! own `{"cmd": "metrics"}` snapshot (TTFT there is measured
 //! submit → first commit, without the socket hop).
@@ -29,6 +31,7 @@ use crate::coordinator::router::{Router, RouterPolicy};
 use crate::coordinator::scheduler::exp_arrival_gap;
 use crate::coordinator::server;
 use crate::datasets::{dataset, Task};
+use crate::engine::SpecMethod;
 use crate::util::json::Value;
 use crate::util::prng::Rng;
 use crate::util::stats::Summary;
@@ -44,7 +47,7 @@ pub struct ServeBenchCfg {
     pub slots: usize,
     /// Client TCP connections the load is spread over (round-robin).
     pub connections: usize,
-    /// Requests per policy wave.
+    /// Requests per wave.
     pub n_requests: usize,
     /// Open-loop arrival rate, requests/second (Poisson).
     pub rate_per_s: f64,
@@ -52,7 +55,9 @@ pub struct ServeBenchCfg {
     pub max_new: usize,
     /// Workload seed (prompts + arrival gaps).
     pub seed: u64,
-    /// Verification policies swept, one table row each.
+    /// Drafting-method descriptors swept (one wave per method × policy).
+    pub methods: Vec<SpecMethod>,
+    /// Verification policies swept (one wave per method × policy).
     pub policies: Vec<VerifyPolicy>,
     /// Where the rendered table lands (`results/serve.md`).
     pub out_dir: PathBuf,
@@ -142,7 +147,7 @@ impl Drop for BenchConn {
     }
 }
 
-/// Per-policy outcome row.
+/// Per-wave (method × policy) outcome row.
 struct PolicyRow {
     label: String,
     ok: usize,
@@ -153,12 +158,15 @@ struct PolicyRow {
     req_per_s: f64,
 }
 
-/// Run the full serving benchmark: one open-loop wave per policy against
-/// a live in-process server, rendered into the standard bench table
-/// machinery (`results/serve.md`).
+/// Run the full serving benchmark: one open-loop wave per method ×
+/// policy combination against a live in-process server, rendered into
+/// the standard bench table machinery (`results/serve.md`).
 pub fn run(cfg: &ServeBenchCfg) -> Result<()> {
     if cfg.connections == 0 || cfg.n_requests == 0 {
         bail!("bench serve needs --connections >= 1 and --n >= 1");
+    }
+    if cfg.methods.is_empty() || cfg.policies.is_empty() {
+        bail!("bench serve needs at least one --methods / --policies entry");
     }
     println!(
         "starting {} replica(s) x {} slot(s) for bench serve...",
@@ -176,8 +184,13 @@ pub fn run(cfg: &ServeBenchCfg) -> Result<()> {
     let addr = handle.addr.to_string();
 
     let mut rows = Vec::new();
-    for (pi, &policy) in cfg.policies.iter().enumerate() {
-        let row = drive_policy_wave(cfg, &addr, pi, policy)?;
+    let waves: Vec<(SpecMethod, VerifyPolicy)> = cfg
+        .methods
+        .iter()
+        .flat_map(|&m| cfg.policies.iter().map(move |&p| (m, p)))
+        .collect();
+    for (wi, &(method, policy)) in waves.iter().enumerate() {
+        let row = drive_wave(cfg, &addr, wi, method, policy)?;
         println!(
             "  {}: {} ok / {} err, ttft p50 {:.0} ms, tpot p50 {:.2} ms, \
              {:.1} tok/s",
@@ -205,11 +218,13 @@ pub fn run(cfg: &ServeBenchCfg) -> Result<()> {
     Ok(())
 }
 
-/// Drive one policy's open-loop wave over `cfg.connections` connections.
-fn drive_policy_wave(
+/// Drive one method × policy open-loop wave over `cfg.connections`
+/// connections.
+fn drive_wave(
     cfg: &ServeBenchCfg,
     addr: &str,
-    policy_idx: usize,
+    wave_idx: usize,
+    method: SpecMethod,
     policy: VerifyPolicy,
 ) -> Result<PolicyRow> {
     let probes: ProbeMap = Arc::new(Mutex::new(HashMap::new()));
@@ -217,18 +232,19 @@ fn drive_policy_wave(
     for _ in 0..cfg.connections {
         conns.push(BenchConn::connect(addr, probes.clone())?);
     }
-    let mut rng = Rng::new(cfg.seed.wrapping_add(policy_idx as u64 * 7919));
+    let mut rng = Rng::new(cfg.seed.wrapping_add(wave_idx as u64 * 7919));
     let tasks = Task::all();
     let wave_started = Instant::now();
     let mut ids = Vec::new();
     for i in 0..cfg.n_requests {
-        let id = (policy_idx as u64 + 1) * 100_000 + i as u64 + 1;
+        let id = (wave_idx as u64 + 1) * 100_000 + i as u64 + 1;
         let task = tasks[i % tasks.len()];
         let ex = &dataset(task, 1, cfg.seed.wrapping_add(i as u64))[0];
         let mut o = Value::obj();
         o.set("id", Value::Num(id as f64));
         o.set("prompt", Value::Str(ex.prompt.clone()));
         o.set("stream", Value::Bool(true));
+        o.set("method", Value::Str(method.label()));
         o.set("policy", Value::Str(policy.label()));
         o.set("max_new", Value::Num(cfg.max_new as f64));
         o.set("seed", Value::Num(i as f64));
@@ -270,7 +286,7 @@ fn drive_policy_wave(
 
     let g = probes.lock().unwrap();
     let mut row = PolicyRow {
-        label: policy.label(),
+        label: format!("{} / {}", method.label(), policy.label()),
         ok: 0,
         err: 0,
         ttft_ms: Summary::new(),
@@ -310,12 +326,12 @@ fn render_table(cfg: &ServeBenchCfg, rows: &[PolicyRow]) -> String {
     let _ = writeln!(
         out,
         "## Serve — open-loop load, {} conns, {:.1} req/s Poisson, \
-         n={} per policy, max_new={}\n",
+         n={} per wave, max_new={}\n",
         cfg.connections, cfg.rate_per_s, cfg.n_requests, cfg.max_new
     );
     let _ = writeln!(
         out,
-        "| Policy | ok/err | TTFT p50 (ms) | TTFT p99 (ms) | \
+        "| Method / Policy | ok/err | TTFT p50 (ms) | TTFT p99 (ms) | \
          TPOT p50 (ms) | TPOT p99 (ms) | tok/s | req/s |"
     );
     let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
@@ -338,8 +354,9 @@ fn render_table(cfg: &ServeBenchCfg, rows: &[PolicyRow]) -> String {
         out,
         "\nTTFT = send -> first streamed delta (client-side, includes the \
          socket hop); TPOT = (last event - first delta)/(tokens-1). \
-         Wall-clock on this substrate — compare shapes across policies, \
-         not absolute numbers against the paper (see BENCHMARKS.md)."
+         Wall-clock on this substrate — compare shapes across rows \
+         (method vs method, policy vs policy), not absolute numbers \
+         against the paper (see BENCHMARKS.md)."
     );
     out
 }

@@ -15,29 +15,30 @@
 //! claims of Table 1 (ordering, rough factors) are made under this model;
 //! wall-clock numbers are reported alongside.
 
-use crate::engine::{GenResult, Method};
+use crate::engine::{GenResult, SpecMethod};
 
 /// Cost of one target forward (any block width ≤ K+1): the unit.
 pub const TARGET_FORWARD: f64 = 1.0;
 
-/// Per-draft-step cost as a fraction of a target forward.
-pub fn draft_step_cost(method: Method) -> f64 {
+/// Per-draft-step cost as a fraction of a target forward (keyed by the
+/// descriptor's family; knob values don't change the per-step ratio).
+pub fn draft_step_cost(method: SpecMethod) -> f64 {
     match method {
-        Method::Sps => 0.12,
-        Method::EagleChain | Method::EagleTree => 0.05,
-        Method::Medusa => 0.02,
+        SpecMethod::Sps { .. } => 0.12,
+        SpecMethod::EagleChain { .. } | SpecMethod::EagleTree { .. } => 0.05,
+        SpecMethod::Medusa { .. } => 0.02,
         // host-side drafting is free on the accelerator
-        Method::Pld | Method::Lookahead => 0.0,
-        Method::Ar => 0.0,
+        SpecMethod::Pld { .. } | SpecMethod::Lookahead { .. } => 0.0,
+        SpecMethod::Ar => 0.0,
     }
 }
 
 /// Simulated cost units per generated token for one finished request.
-pub fn simulated_units(method: Method, r: &GenResult) -> f64 {
+pub fn simulated_units(method: SpecMethod, r: &GenResult) -> f64 {
     let tokens = r.tokens.len().max(1) as f64;
     let units = match method {
         // AR: one target forward per token
-        Method::Ar => tokens * TARGET_FORWARD,
+        SpecMethod::Ar => tokens * TARGET_FORWARD,
         _ => {
             // one verify forward per round (the commit step is fused into
             // the next round's block in production systems)
@@ -75,14 +76,14 @@ mod tests {
     #[test]
     fn ar_is_one_unit_per_token() {
         let r = result(50, 50.0, 0.0);
-        assert!((simulated_units(Method::Ar, &r) - 1.0).abs() < 1e-12);
+        assert!((simulated_units(SpecMethod::Ar, &r) - 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn speculative_beats_ar_when_tau_high() {
         // 50 tokens in 10 rounds (tau 5), 7 eagle draft steps per round
         let r = result(50, 10.0, 70.0);
-        let u = simulated_units(Method::EagleTree, &r);
+        let u = simulated_units(SpecMethod::default(), &r);
         assert!(u < 0.5, "units {u}"); // > 2x speedup
     }
 
@@ -90,14 +91,17 @@ mod tests {
     fn tau_one_is_slower_than_ar() {
         // one committed token per round: SD degenerates
         let r = result(10, 10.0, 70.0);
-        let u = simulated_units(Method::Sps, &r);
+        let u = simulated_units(SpecMethod::Sps { k: 7 }, &r);
         assert!(u > 1.0, "units {u}");
     }
 
     #[test]
     fn host_drafters_cost_only_verify() {
         let r = result(40, 10.0, 0.0);
-        let u = simulated_units(Method::Pld, &r);
+        let u = simulated_units(
+            SpecMethod::Pld { min_ngram: 2, max_ngram: 4, k: 7 },
+            &r,
+        );
         assert!((u - 0.25).abs() < 1e-12);
     }
 }

@@ -5,7 +5,9 @@
 //! is a handful of float ops; not hot enough to need sharding on this
 //! substrate). Acceptance stats are additionally broken out per
 //! verification-policy family so a mixed-policy workload exposes the
-//! per-rule τ / relaxation picture. `mars bench serve` reports the same
+//! per-rule τ / relaxation picture, and per speculative-method family
+//! (`SpecMethod::name`) so a mixed-method workload exposes the per-
+//! drafter τ / TTFT picture. `mars bench serve` reports the same
 //! quantities measured client-side (see BENCHMARKS.md).
 
 use std::collections::BTreeMap;
@@ -24,6 +26,15 @@ struct PolicyAgg {
     relaxed: Summary,
 }
 
+/// Per-method-family aggregates (keyed by `SpecMethod::name`).
+#[derive(Debug, Default)]
+struct MethodAgg {
+    requests: u64,
+    tokens: u64,
+    tau: Summary,
+    ttft_ms: Summary,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     started: Option<Instant>,
@@ -39,6 +50,7 @@ struct Inner {
     tau: Summary,
     relaxed: Summary,
     by_policy: BTreeMap<&'static str, PolicyAgg>,
+    by_method: BTreeMap<&'static str, MethodAgg>,
 }
 
 /// Shared serving-metrics registry (one per router, shared by replicas).
@@ -69,6 +81,8 @@ pub struct RequestMetrics {
     pub relaxed_accepts: f64,
     /// verification-policy family (`VerifyPolicy::name`)
     pub policy: &'static str,
+    /// speculative-method family (`SpecMethod::name`)
+    pub method: &'static str,
 }
 
 impl MetricsRegistry {
@@ -111,6 +125,15 @@ impl MetricsRegistry {
                 p.tau.push(m.tau);
             }
             p.relaxed.push(m.relaxed_accepts);
+        }
+        if !m.method.is_empty() {
+            let a = g.by_method.entry(m.method).or_default();
+            a.requests += 1;
+            a.tokens += m.tokens as u64;
+            if m.tau > 0.0 {
+                a.tau.push(m.tau);
+            }
+            a.ttft_ms.push(m.ttft_seconds * 1e3);
         }
     }
 
@@ -161,6 +184,17 @@ impl MetricsRegistry {
             pol.set(name, p);
         }
         o.set("policy", pol);
+        let mut met = Value::obj();
+        for (name, agg) in &g.by_method {
+            let mut m = Value::obj();
+            m.set("requests", Value::Num(agg.requests as f64));
+            m.set("tokens", Value::Num(agg.tokens as f64));
+            m.set("tau_mean", Value::Num(agg.tau.mean()));
+            m.set("ttft_ms_p50", Value::Num(agg.ttft_ms.p50()));
+            m.set("ttft_ms_p99", Value::Num(agg.ttft_ms.p99()));
+            met.set(name, m);
+        }
+        o.set("method", met);
         o
     }
 
@@ -186,6 +220,7 @@ mod tests {
             tau: 5.0,
             relaxed_accepts: 2.0,
             policy: "mars",
+            method: "eagle_tree",
         }
     }
 
@@ -207,6 +242,34 @@ mod tests {
             let tpot = v.get(q).unwrap().as_f64().unwrap();
             assert!((tpot - 10.0).abs() < 1e-9, "{q} = {tpot}");
         }
+    }
+
+    #[test]
+    fn per_method_breakout() {
+        let r = MetricsRegistry::new();
+        r.record(m(10, 0.1));
+        r.record(RequestMetrics { method: "pld", tau: 2.0, ..m(20, 0.2) });
+        let v = r.snapshot_json();
+        let met = v.get("method").unwrap();
+        assert_eq!(
+            met.path(&["eagle_tree", "requests"]).unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            met.path(&["pld", "tokens"]).unwrap().as_usize(),
+            Some(20)
+        );
+        assert_eq!(
+            met.path(&["pld", "tau_mean"]).unwrap().as_f64(),
+            Some(2.0)
+        );
+        // ttft breakout: both samples stamped 20 ms in m()
+        let ttft = met
+            .path(&["eagle_tree", "ttft_ms_p50"])
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((ttft - 20.0).abs() < 1e-9, "{ttft}");
     }
 
     #[test]

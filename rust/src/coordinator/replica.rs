@@ -201,6 +201,7 @@ fn replica_loop(
                         tau: 0.0,
                         relaxed_accepts: 0.0,
                         policy: item.request.params.policy.name(),
+                        method: item.request.params.method.name(),
                     });
                     let _ = item.reply.send(resp);
                 }
@@ -231,11 +232,11 @@ fn replica_loop(
             }
             let done = match step_res {
                 Ok(Some(result)) => {
-                    let policy = a.item.request.params.policy;
+                    let params = &a.item.request.params;
                     let mut resp = Response::from_result(
                         a.item.request.id,
                         &result,
-                        policy,
+                        params,
                     );
                     resp.canceled = canceled;
                     metrics.record(RequestMetrics {
@@ -249,7 +250,8 @@ fn replica_loop(
                         ),
                         tau: result.tau(),
                         relaxed_accepts: result.snapshot.relaxed_accepts,
-                        policy: policy.name(),
+                        policy: params.policy.name(),
+                        method: params.method.name(),
                     });
                     let _ = a.item.reply.send(resp);
                     true
@@ -270,6 +272,7 @@ fn replica_loop(
                         tau: 0.0,
                         relaxed_accepts: 0.0,
                         policy: a.item.request.params.policy.name(),
+                        method: a.item.request.params.method.name(),
                     });
                     true
                 }

@@ -8,7 +8,8 @@ use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::engine::{GenParams, GenResult, Method};
+use crate::engine::{GenParams, GenResult};
+use crate::spec::SpecMethod;
 use crate::util::json::Value;
 use crate::verify::VerifyPolicy;
 
@@ -73,6 +74,9 @@ pub struct Response {
     pub relaxed_accepts: f64,
     /// verification-policy label (`VerifyPolicy::label`), e.g. `mars:0.9`
     pub policy: String,
+    /// method descriptor label (`SpecMethod::label`) that actually ran,
+    /// e.g. `eagle_tree:k=7,beam=2,branch=2`
+    pub method: String,
     /// The request was canceled mid-generation (`{"cmd": "cancel"}`);
     /// `text` holds whatever had committed by then.
     pub canceled: bool,
@@ -109,11 +113,12 @@ impl StreamDelta {
 pub type StreamSink = Box<dyn FnMut(StreamDelta) + Send>;
 
 impl Response {
-    /// Build the success response for a finished generation.
+    /// Build the success response for a finished generation, echoing the
+    /// method and policy labels that actually ran.
     pub fn from_result(
         id: RequestId,
         r: &GenResult,
-        policy: VerifyPolicy,
+        params: &GenParams,
     ) -> Response {
         Response {
             id,
@@ -125,7 +130,8 @@ impl Response {
             decode_seconds: r.decode_seconds,
             prefill_seconds: r.prefill_seconds,
             relaxed_accepts: r.snapshot.relaxed_accepts,
-            policy: policy.label(),
+            policy: params.policy.label(),
+            method: params.method.label(),
             canceled: false,
         }
     }
@@ -143,6 +149,7 @@ impl Response {
             prefill_seconds: 0.0,
             relaxed_accepts: 0.0,
             policy: String::new(),
+            method: String::new(),
             canceled: false,
         }
     }
@@ -164,6 +171,9 @@ impl Response {
         if !self.policy.is_empty() {
             o.set("policy", Value::Str(self.policy.clone()));
         }
+        if !self.method.is_empty() {
+            o.set("method", Value::Str(self.method.clone()));
+        }
         if self.canceled {
             o.set("canceled", Value::Bool(true));
         }
@@ -172,18 +182,22 @@ impl Response {
 }
 
 /// Wire format: one JSON object per line.
-/// `{"id": 3, "prompt": "...", "method": "eagle_tree",
+/// `{"id": 3, "prompt": "...", "method": {"eagle_tree": {"k": 7}},
 ///   "policy": {"mars": {"theta": 0.9}}, "stream": true,
-///   "temperature": 1.0, "k": 7, "max_new": 128, "seed": 1}`
+///   "temperature": 1.0, "max_new": 128, "seed": 1}`
 ///
 /// `"id"` (optional) overrides the fallback `id` argument and is echoed
 /// on every delta and the terminal reply — it is what lets a client
 /// pipeline many requests on one connection and match out-of-order
 /// completions. `"stream": true` requests incremental delta lines.
 ///
-/// The `"policy"` value may also be a CLI string (`"mars:0.9"`); the
-/// legacy flat `"mars"` / `"theta"` keys still parse (to `Strict` /
-/// `Mars { theta }`) for old clients.
+/// The `"method"` value may be a structured one-key object, a CLI string
+/// (`"eagle_tree:k=7,beam=2"`), or a legacy bare family name
+/// (`"eagle_tree"`); the legacy flat `"k"` / `"beam"` / `"branch"` keys
+/// still override the descriptor's matching knobs for old clients (see
+/// `SpecMethod::from_request`). Likewise the `"policy"` value may be a
+/// CLI string (`"mars:0.9"`) and the legacy flat `"mars"` / `"theta"`
+/// keys still parse (to `Strict` / `Mars { theta }`).
 pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     let prompt = v
         .get("prompt")
@@ -200,26 +214,16 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
         None => false,
         Some(x) => x.as_bool().ok_or("'stream' must be a boolean")?,
     };
-    let mut params = GenParams::default();
-    if let Some(m) = v.get("method").and_then(|m| m.as_str()) {
-        params.method =
-            Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
-    }
-    // clamp to device-executable form so the echoed policy label and the
-    // per-policy metrics describe the rule that actually ran
-    params.policy = VerifyPolicy::from_request(v)?.normalize_for_device();
+    // the policy is clamped to device-executable form so the echoed
+    // label and the per-policy metrics describe the rule that actually ran
+    let mut params = GenParams {
+        method: SpecMethod::from_request(v)?,
+        policy: VerifyPolicy::from_request(v)?.normalize_for_device(),
+        ..GenParams::default()
+    };
     let fget = |k: &str| v.get(k).and_then(|x| x.as_f64());
     if let Some(x) = fget("temperature") {
         params.temperature = x as f32;
-    }
-    if let Some(x) = fget("k") {
-        params.k = x as usize;
-    }
-    if let Some(x) = fget("beam") {
-        params.beam = x as usize;
-    }
-    if let Some(x) = fget("branch") {
-        params.branch = x as usize;
     }
     if let Some(x) = fget("max_new") {
         params.max_new = x as usize;
@@ -257,7 +261,7 @@ mod tests {
         let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
         let r = parse_request_json(1, &v).unwrap();
         assert_eq!(r.prompt, "hi");
-        assert_eq!(r.params.method, Method::EagleTree);
+        assert_eq!(r.params.method, SpecMethod::default());
         assert_eq!(r.params.policy, VerifyPolicy::default());
     }
 
@@ -270,10 +274,33 @@ mod tests {
         )
         .unwrap();
         let r = parse_request_json(2, &v).unwrap();
-        assert_eq!(r.params.method, Method::Sps);
+        assert_eq!(r.params.method, SpecMethod::Sps { k: 9 });
         assert_eq!(r.params.policy, VerifyPolicy::Mars { theta: 0.92 });
-        assert_eq!(r.params.k, 9);
         assert_eq!(r.params.seed, 7);
+    }
+
+    #[test]
+    fn legacy_and_structured_method_forms_are_identical() {
+        // the acceptance pin: the legacy flat form and the structured
+        // descriptor form must produce byte-identical GenParams
+        let legacy = Value::parse(
+            r#"{"prompt": "x", "method": "eagle_tree", "k": 7}"#,
+        )
+        .unwrap();
+        let structured = Value::parse(
+            r#"{"prompt": "x", "method": {"eagle_tree": {"k": 7}}}"#,
+        )
+        .unwrap();
+        let a = parse_request_json(1, &legacy).unwrap();
+        let b = parse_request_json(1, &structured).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(format!("{:?}", a.params), format!("{:?}", b.params));
+        // the CLI-string wire form lands on the same descriptor too
+        let cli = Value::parse(
+            r#"{"prompt": "x", "method": "eagle_tree:k=7"}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_request_json(1, &cli).unwrap().params, a.params);
     }
 
     #[test]
@@ -321,6 +348,7 @@ mod tests {
         .unwrap();
         let r = parse_request_json(2, &v).unwrap();
         assert_eq!(r.params.policy, VerifyPolicy::Strict);
+        assert_eq!(r.params.method, SpecMethod::Sps { k: 9 });
 
         let v = Value::parse(r#"{"prompt": "x", "mars": true, "theta": 0.92}"#)
             .unwrap();
@@ -354,12 +382,17 @@ mod tests {
             prefill_seconds: 0.05,
             relaxed_accepts: 4.0,
             policy: "mars:0.9".into(),
+            method: "eagle_tree:k=7,beam=2,branch=2".into(),
             canceled: false,
         };
         let v = resp.to_json();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
         assert_eq!(v.get("tau").unwrap().as_f64(), Some(5.5));
         assert_eq!(v.get("policy").unwrap().as_str(), Some("mars:0.9"));
+        assert_eq!(
+            v.get("method").unwrap().as_str(),
+            Some("eagle_tree:k=7,beam=2,branch=2")
+        );
         // "canceled" only appears on canceled responses
         assert!(v.get("canceled").is_none());
         let mut c = resp.clone();

@@ -17,18 +17,24 @@
 //! ## Generation
 //!
 //! ```text
-//! -> {"id": 1, "prompt": "...", "method": "eagle_tree",
+//! -> {"id": 1, "prompt": "...", "method": {"eagle_tree": {"k": 7}},
 //!     "policy": {"mars": {"theta": 0.9}},   // or "mars:0.9" CLI string
-//!     "temperature": 1.0, "k": 7, "max_new": 128, "seed": 1}
+//!     "temperature": 1.0, "max_new": 128, "seed": 1}
 //! <- {"id": 1, "ok": true, "text": "...", "tokens": 42, "tau": 6.1,
 //!     "decode_seconds": ..., "prefill_seconds": ..., "relaxed_accepts": ...,
-//!     "policy": "mars:0.9"}
+//!     "policy": "mars:0.9", "method": "eagle_tree:k=7,beam=2,branch=2"}
 //! ```
 //!
-//! The `"policy"` object selects the verification policy (see
+//! The `"method"` value selects the drafting descriptor (see
+//! `crate::spec::SpecMethod::from_request`): a structured one-key
+//! object, a CLI string (`"eagle_tree:k=7,beam=2"`), or a legacy bare
+//! family name; the legacy flat `"k"` / `"beam"` / `"branch"` keys
+//! still override the matching knobs for old clients. The `"policy"`
+//! object selects the verification policy (see
 //! `crate::verify::VerifyPolicy::from_request`); the legacy flat
 //! `"mars"` / `"theta"` keys still parse for old clients. The echoed
-//! `"policy"` label is the rule that actually ran (device-normalized).
+//! `"policy"` / `"method"` labels are what actually ran
+//! (device-normalized policy, full descriptor label).
 //!
 //! ## Streaming
 //!

@@ -1,21 +1,28 @@
 //! Decode engine: drives one request through prefill → rounds → extract.
 //!
-//! Method dispatch covers every row of the paper's Table 1:
+//! Method dispatch covers every row of the paper's Table 1 through the
+//! [`SpecMethod`] descriptor registry (`crate::spec::METHODS`,
+//! DESIGN.md §7):
 //!
-//! | method        | drafting                         | device program     |
-//! |---------------|----------------------------------|--------------------|
-//! | `Ar`          | — (1.00× baseline)               | `ar_step`          |
-//! | `Sps`         | independent draft LM, chain      | `sps_round`        |
-//! | `EagleChain`  | feature-conditioned head, chain  | `eagle_tree_round` (beam 1) |
-//! | `EagleTree`   | feature-conditioned head, tree   | `eagle_tree_round` |
-//! | `Medusa`      | multi-head static tree           | `medusa_round`     |
-//! | `Pld`         | host n-gram prompt lookup        | `verify_ext_round` |
-//! | `Lookahead`   | host n-gram pool (simplified)    | `verify_ext_round` |
+//! | descriptor                         | drafting                         | device program     |
+//! |------------------------------------|----------------------------------|--------------------|
+//! | `ar`                               | — (1.00× baseline)               | `ar_step`          |
+//! | `sps:k=7`                          | independent draft LM, chain      | `sps_round`        |
+//! | `eagle_chain:k=7`                  | feature-conditioned head, chain  | `eagle_tree_round` (beam 1) |
+//! | `eagle_tree:k=7,beam=2,branch=2`   | feature-conditioned head, tree   | `eagle_tree_round` |
+//! | `medusa:k=4`                       | multi-head static tree           | `medusa_round`     |
+//! | `pld:min=2,max=4,k=7`              | host n-gram prompt lookup        | `verify_ext_round` |
+//! | `lookahead:n=3,g=8,cap=4096,k=7`   | host n-gram pool (simplified)    | `verify_ext_round` |
 //!
 //! MARS is a *verification policy* ([`GenParams::policy`]), not a method:
 //! it changes only the accept/reject rule inside the device-side
 //! verification, exactly as in the paper. Every policy of the
-//! [`crate::verify`] subsystem composes with every speculative method.
+//! [`crate::verify`] subsystem composes with every [`SpecMethod`]; the
+//! engine never matches on method variants — it asks the descriptor for a
+//! [`DraftSource`] and the runtime lowers the descriptor's knobs to
+//! config slots.
+
+#![warn(missing_docs)]
 
 use std::time::Instant;
 
@@ -25,82 +32,26 @@ use crate::runtime::state::{ProbeDump, Snapshot};
 use crate::runtime::Runtime;
 #[allow(unused_imports)]
 use crate::runtime::Session;
-use crate::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+use crate::spec::DraftSource;
+pub use crate::spec::SpecMethod;
 use crate::verify::VerifyPolicy;
 
-/// Decoding method (the paper's baselines + MARS host).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Method {
-    Ar,
-    Sps,
-    EagleChain,
-    EagleTree,
-    Medusa,
-    Pld,
-    Lookahead,
-}
-
-impl Method {
-    pub fn parse(s: &str) -> Option<Method> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "ar" | "baseline" | "vanilla" => Method::Ar,
-            "sps" | "spd" => Method::Sps,
-            "eagle" | "eagle_chain" | "eagle-chain" => Method::EagleChain,
-            "eagle_tree" | "eagle-tree" | "eagle3" | "tree" => Method::EagleTree,
-            "medusa" => Method::Medusa,
-            "pld" => Method::Pld,
-            "lookahead" | "la" => Method::Lookahead,
-            _ => return None,
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Ar => "ar",
-            Method::Sps => "sps",
-            Method::EagleChain => "eagle_chain",
-            Method::EagleTree => "eagle_tree",
-            Method::Medusa => "medusa",
-            Method::Pld => "pld",
-            Method::Lookahead => "lookahead",
-        }
-    }
-
-    /// Does this method use draft-verify rounds (i.e. has a meaningful τ)?
-    pub fn is_speculative(&self) -> bool {
-        !matches!(self, Method::Ar)
-    }
-
-    pub fn all() -> &'static [Method] {
-        &[
-            Method::Ar,
-            Method::Sps,
-            Method::EagleChain,
-            Method::EagleTree,
-            Method::Medusa,
-            Method::Pld,
-            Method::Lookahead,
-        ]
-    }
-}
-
-/// Generation parameters for one request.
-#[derive(Debug, Clone)]
+/// Generation parameters for one request. Everything method-shaped lives
+/// inside the [`SpecMethod`] descriptor; everything here is orthogonal to
+/// the drafting method.
+#[derive(Debug, Clone, PartialEq)]
 pub struct GenParams {
-    pub method: Method,
+    /// Speculative-decoding method descriptor (family + drafting knobs).
+    pub method: SpecMethod,
     /// verification policy applied on top of the method's drafting
     /// (`Strict` reproduces the lossless baseline rule; `Mars` is the
     /// paper's margin-aware relaxation)
     pub policy: VerifyPolicy,
     /// sampling temperature; 0 = greedy
     pub temperature: f32,
-    /// chain draft length / tree depth K
-    pub k: usize,
-    /// tree beam width (EagleTree)
-    pub beam: usize,
-    /// children per node (EagleTree)
-    pub branch: usize,
+    /// Generation budget (committed tokens are truncated to this).
     pub max_new: usize,
+    /// Sampling seed (folded into the device RNG counter).
     pub seed: u64,
     /// record (z1, z2, flag) probe entries for figures 1/4
     pub probe: bool,
@@ -112,12 +63,9 @@ pub struct GenParams {
 impl Default for GenParams {
     fn default() -> Self {
         GenParams {
-            method: Method::EagleTree,
+            method: SpecMethod::default(),
             policy: VerifyPolicy::default(),
             temperature: 1.0,
-            k: 7,
-            beam: 2,
-            branch: 2,
             max_new: 160,
             seed: 0,
             probe: false,
@@ -129,17 +77,24 @@ impl Default for GenParams {
 /// Result of one generation.
 #[derive(Debug, Clone)]
 pub struct GenResult {
+    /// Committed output tokens (truncated to `max_new`).
     pub tokens: Vec<u32>,
+    /// Decoded completion text.
     pub text: String,
     /// wall-clock decode time (prefill excluded), seconds
     pub decode_seconds: f64,
+    /// Wall-clock prefill time, seconds.
     pub prefill_seconds: f64,
+    /// Final device snapshot (acceptance stats, rounds, counters).
     pub snapshot: Snapshot,
+    /// Probe-ring dump when [`GenParams::probe`] was set.
     pub probe: Option<ProbeDump>,
+    /// Total device executions this request issued.
     pub device_calls: u64,
 }
 
 impl GenResult {
+    /// Mean accepted tokens per draft-verify cycle.
     pub fn tau(&self) -> f64 {
         self.snapshot.tau()
     }
@@ -154,16 +109,18 @@ impl GenResult {
     }
 }
 
-/// An in-flight sequence: prefillled session + host drafter + progress.
+/// An in-flight sequence: prefilled session + draft source + progress.
 ///
 /// Exposes incremental [`SeqRunner::step`] so the coordinator's replicas
 /// can interleave many sequences over one device (continuous batching);
 /// [`DecodeEngine::generate`] is the run-to-completion convenience loop.
+/// The per-request [`DraftSource`] is built from the [`SpecMethod`]
+/// descriptor, so drafting knobs (`pld:min=3,max=5`, `lookahead:cap=64`)
+/// configure the actual drafter instead of being ignored.
 pub struct SeqRunner<'a> {
     sess: crate::runtime::Session<'a>,
     params: GenParams,
-    exec: &'static str,
-    drafter: Option<Box<dyn HostDrafter + Send>>,
+    source: Box<dyn DraftSource>,
     prompt: Vec<u32>,
     history: Vec<u32>,
     spins: usize,
@@ -186,44 +143,28 @@ pub struct SeqRunner<'a> {
 pub type OnCommit = Box<dyn FnMut(&[u32]) + Send>;
 
 impl<'a> SeqRunner<'a> {
+    /// Prefill `prompt` and set up the per-request draft source from the
+    /// method descriptor.
     pub fn new(
         rt: &'a Runtime,
         prompt: &[u32],
         params: &GenParams,
         hostloop: bool,
     ) -> Result<Self> {
-        let mut params = params.clone();
-        if params.method == Method::EagleChain {
-            // chain decoding is the beam-1 degenerate tree
-            params.beam = 1;
-            params.branch = 1;
-        }
+        let params = params.clone();
         let t0 = Instant::now();
         let mut sess = rt.session(prompt, &params)?;
         if hostloop {
             sess.set_hostloop(true)?;
         }
         let prefill_seconds = t0.elapsed().as_secs_f64();
-        let exec = match params.method {
-            Method::Ar => "ar_step",
-            Method::Sps => "sps_round",
-            Method::EagleChain | Method::EagleTree => "eagle_tree_round",
-            Method::Medusa => "medusa_round",
-            Method::Pld | Method::Lookahead => "verify_ext_round",
-        };
-        let drafter: Option<Box<dyn HostDrafter + Send>> = match params.method
-        {
-            Method::Pld => Some(Box::new(PldDrafter::default())),
-            Method::Lookahead => Some(Box::new(LookaheadDrafter::default())),
-            _ => None,
-        };
+        let source = params.method.draft_source();
         // generous hard cap: even tau=1 finishes within max_new rounds
         let round_cap = params.max_new * 2 + 8;
         Ok(SeqRunner {
             sess,
             params,
-            exec,
-            drafter,
+            source,
             prompt: prompt.to_vec(),
             history: prompt.to_vec(),
             spins: 0,
@@ -260,13 +201,9 @@ impl<'a> SeqRunner<'a> {
         }
         let every = self.params.extract_every.max(1);
         for _ in 0..every {
-            match &mut self.drafter {
-                Some(d) => {
-                    d.observe(&self.history);
-                    let drafts = d.draft(&self.history, self.params.k);
-                    self.sess.round_ext(&drafts)?;
-                }
-                None => self.sess.round(self.exec)?,
+            match self.source.next_drafts(&self.history) {
+                Some(drafts) => self.sess.round_ext(&drafts)?,
+                None => self.sess.round(self.source.exec_name())?,
             }
             self.spins += 1;
         }
@@ -326,12 +263,14 @@ impl<'a> SeqRunner<'a> {
 
 /// The decode engine: a thin, single-threaded driver over a [`Runtime`].
 pub struct DecodeEngine {
+    /// The runtime this engine drives (owned; one engine per device).
     pub rt: Runtime,
     /// force the naive host-roundtrip runtime (§Perf baseline)
     pub hostloop: bool,
 }
 
 impl DecodeEngine {
+    /// Wrap a runtime in the run-to-completion driver.
     pub fn new(rt: Runtime) -> Self {
         DecodeEngine { rt, hostloop: false }
     }
@@ -342,6 +281,7 @@ impl DecodeEngine {
         self.generate_tokens(&toks, params)
     }
 
+    /// Generate a completion for pre-tokenized input.
     pub fn generate_tokens(
         &self,
         prompt: &[u32],

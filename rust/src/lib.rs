@@ -7,12 +7,19 @@
 //!   one canonical representation across CLI strings, request JSON, the
 //!   device `(policy_id, p0, p1)` config-slot triple, and a host-side
 //!   reference verifier used by the property tests.
+//! * [`spec`] — the drafting subsystem, mirror image of [`verify`]: every
+//!   decode method of the paper's evaluation (AR, SpS, EAGLE chain/tree,
+//!   Medusa, PLD, Lookahead) is a [`spec::SpecMethod`] descriptor carrying
+//!   its drafting knobs, registered once in [`spec::METHODS`], with one
+//!   codec per surface (CLI string, request JSON, device config slots)
+//!   and a [`spec::DraftSource`] unifying device-coupled and host
+//!   drafters.
 //! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt`, uploads model
 //!   weights once, threads the flat f32 decode state buffer-to-buffer.
-//! * [`engine`] — per-sequence decode sessions: prefill → rounds → extract,
-//!   with every decode method of the paper's evaluation (AR, SpS, EAGLE
-//!   chain/tree, Medusa, PLD, Lookahead); the verification policy is a
-//!   [`GenParams`] field, orthogonal to the method.
+//! * [`engine`] — per-sequence decode sessions: prefill → rounds →
+//!   extract, driving whatever [`spec::DraftSource`] the request's
+//!   descriptor builds; the verification policy is a [`GenParams`] field,
+//!   orthogonal to the method.
 //! * [`coordinator`] — the serving layer: scheduler, engine workers,
 //!   router, per-policy metrics (TTFT/TPOT percentiles), and a
 //!   streaming, pipelined line-JSON TCP server (client ids, per-round
@@ -33,6 +40,7 @@ pub mod tokenizer;
 pub mod util;
 pub mod verify;
 
-pub use engine::{DecodeEngine, GenParams, GenResult, Method};
+pub use engine::{DecodeEngine, GenParams, GenResult};
 pub use runtime::{Artifacts, Runtime};
+pub use spec::{DraftSource, SpecMethod, METHODS};
 pub use verify::{AcceptFlag, VerifyPolicy};

@@ -18,7 +18,7 @@ use mars::bench::{self, BenchCtx};
 use mars::coordinator::router::{Router, RouterPolicy};
 use mars::coordinator::server;
 use mars::datasets::{dataset, Task};
-use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::engine::{DecodeEngine, GenParams, SpecMethod};
 use mars::runtime::{Artifacts, Runtime};
 use mars::util::cli::Args;
 use mars::verify::VerifyPolicy;
@@ -53,16 +53,19 @@ USAGE: mars <cmd> [flags]
 
   info                       artifact + model summary
   generate --prompt TEXT     one-shot generation
-      [--method ar|sps|eagle_chain|eagle_tree|medusa|pld|lookahead]
+      [--method ar|sps:k=7|eagle_chain:k=7|eagle_tree:k=7,beam=2,branch=2
+               |medusa:k=4|pld:min=2,max=4,k=7|lookahead:n=3,g=8,cap=4096,k=7]
+      [--k 7] [--beam 2] [--branch 2]    (legacy aliases for --method knobs)
       [--policy strict|mars:0.9|topk:2:0.1|entropy:1.5]
       [--mars|--no-mars] [--theta 0.9]   (legacy aliases for --policy)
-      [--temperature 1.0] [--k 7] [--beam 2] [--branch 2]
-      [--max-new 128] [--seed 0] [--hostloop]
+      [--temperature 1.0] [--max-new 128] [--seed 0] [--hostloop]
   serve [--bind ADDR] [--replicas 1] [--slots 4] [--route rr|ll]
       line-JSON protocol: pipelined ids, \"stream\": true deltas,
-      {\"cmd\": \"cancel\", \"id\": N} — see coordinator/server.rs docs
+      {{\"cmd\": \"cancel\", \"id\": N}} — see coordinator/server.rs docs
   bench table1|..|table7|fig3|perf|policies|serve|all
       [--n 16] [--seed 7] [--max-new 96]
+      [--methods sps:k=6,eagle_tree,pld]      (policies/serve; default:
+          every speculative method in the registry / the default tree)
       [--policies strict,mars:0.9,topk:2,entropy:1.5]   (policies/serve)
       [--connections 4] [--rate 8.0] [--replicas 1] [--slots 4]  (serve)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
@@ -97,21 +100,35 @@ fn policy_from_args(args: &Args) -> Result<VerifyPolicy> {
     Ok(VerifyPolicy::default())
 }
 
+/// Resolve the method descriptor: `--method STR` (full descriptor
+/// grammar) wins the family; the legacy `--k` / `--beam` / `--branch`
+/// flags then override the descriptor's matching knobs.
+fn method_from_args(args: &Args) -> Result<SpecMethod> {
+    let mut m = match args.get("method") {
+        None => SpecMethod::default(),
+        Some(s) => SpecMethod::parse(s).ok_or_else(|| {
+            anyhow!(
+                "bad method '{s}' (try ar|sps:k=7|eagle_tree:k=7,beam=2,\
+                 branch=2|medusa|pld:min=2,max=4|lookahead:n=3,g=8)"
+            )
+        })?,
+    };
+    let ov = |key: &str| args.get(key).and_then(|s| s.parse::<usize>().ok());
+    m = m.with_overrides(ov("k"), ov("beam"), ov("branch"));
+    Ok(m)
+}
+
 fn gen_params(args: &Args) -> Result<GenParams> {
-    let mut p = GenParams::default();
-    if let Some(m) = args.get("method") {
-        p.method = Method::parse(m).ok_or_else(|| anyhow!("bad method {m}"))?;
-    }
-    p.policy = policy_from_args(args)?;
-    p.temperature = args.get_f64("temperature", p.temperature as f64) as f32;
-    p.k = args.get_usize("k", p.k);
-    p.beam = args.get_usize("beam", p.beam);
-    p.branch = args.get_usize("branch", p.branch);
-    p.max_new = args.get_usize("max-new", p.max_new);
-    p.seed = args.get_usize("seed", p.seed as usize) as u64;
-    p.probe = args.has("probe");
-    p.extract_every = args.get_usize("extract-every", 1);
-    Ok(p)
+    let d = GenParams::default();
+    Ok(GenParams {
+        method: method_from_args(args)?,
+        policy: policy_from_args(args)?,
+        temperature: args.get_f64("temperature", d.temperature as f64) as f32,
+        max_new: args.get_usize("max-new", d.max_new),
+        seed: args.get_usize("seed", d.seed as usize) as u64,
+        probe: args.has("probe"),
+        extract_every: args.get_usize("extract-every", 1),
+    })
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -213,6 +230,16 @@ fn run(args: &Args) -> Result<()> {
                     })
                     .ok_or_else(|| anyhow!("bad --policies list '{spec}'"))
             };
+            // `--methods` sweep list (descriptor grammar); the default
+            // differs per target: `policies` sweeps every speculative
+            // family in the registry, `serve` drives the default tree
+            let msweep = |default: Vec<SpecMethod>| -> Result<Vec<SpecMethod>> {
+                match args.get("methods") {
+                    None => Ok(default),
+                    Some(spec) => SpecMethod::parse_list(spec)
+                        .ok_or_else(|| anyhow!("bad --methods list '{spec}'")),
+                }
+            };
             // the serving benchmark owns its own router/replicas (each
             // replica builds a Runtime), so handle it before the bare
             // single-engine context below
@@ -226,6 +253,7 @@ fn run(args: &Args) -> Result<()> {
                     rate_per_s: args.get_f64("rate", 8.0),
                     max_new: args.get_usize("max-new", 48),
                     seed: args.get_usize("seed", 7) as u64,
+                    methods: msweep(vec![SpecMethod::default()])?,
                     policies: sweep()?,
                     out_dir: PathBuf::from("results"),
                 };
@@ -246,7 +274,11 @@ fn run(args: &Args) -> Result<()> {
                 "table7" => bench::table7(&ctx)?,
                 "fig3" => bench::fig3(&ctx)?,
                 "perf" => bench::perf(&ctx, &dir)?,
-                "policies" => bench::policy_sweep(&ctx, &sweep()?)?,
+                "policies" => bench::policy_sweep(
+                    &ctx,
+                    &msweep(SpecMethod::speculative_defaults())?,
+                    &sweep()?,
+                )?,
                 "all" => {
                     bench::table1(&ctx)?;
                     bench::table2(&ctx)?;
@@ -256,7 +288,11 @@ fn run(args: &Args) -> Result<()> {
                     bench::table6(&ctx)?;
                     bench::table7(&ctx)?;
                     bench::fig3(&ctx)?;
-                    bench::policy_sweep(&ctx, &sweep()?)?;
+                    bench::policy_sweep(
+                        &ctx,
+                        &msweep(SpecMethod::speculative_defaults())?,
+                        &sweep()?,
+                    )?;
                     bench::perf(&ctx, &dir)?;
                 }
                 other => bail!("unknown bench '{other}'"),
@@ -287,7 +323,7 @@ fn run(args: &Args) -> Result<()> {
                 "task={} method={} policy={} -> acc={:.3} rouge={:.3} \
                  bleu={:.2} chrf={:.2} judge={:.2} tau={:.2} tok/s={:.1}",
                 task.name(),
-                params.method.name(),
+                params.method.label(),
                 params.policy.label(),
                 e.quality.accuracy,
                 e.quality.rouge_l,
@@ -312,7 +348,7 @@ fn analyze(args: &Args, dir: &PathBuf, which: &str) -> Result<()> {
     let n = args.get_usize("n", 24);
     let mut params = gen_params(args)?;
     params.probe = true;
-    params.method = Method::EagleTree;
+    params.method = SpecMethod::default();
     if !params.policy.is_relaxed() {
         // the probe figures need relaxed acceptances to plot
         params.policy = VerifyPolicy::default();

@@ -296,11 +296,15 @@ impl Runtime {
         cfg[c("policy_id")] = policy_id;
         cfg[c("p0")] = p0;
         cfg[c("p1")] = p1;
-        cfg[c("kdraft")] = params.k as f32;
+        // method lowering: the descriptor's knobs become config slots
+        // (the method identity lowers to the executable name; see
+        // `SpecMethod::encode_slots` / `SpecMethod::exec_name`)
+        let [kdraft, beam, branch] = params.method.encode_slots();
+        cfg[c("kdraft")] = kdraft;
         cfg[c("max_new")] = params.max_new as f32;
         cfg[c("eos")] = crate::tokenizer::EOS as f32;
-        cfg[c("beam")] = params.beam as f32;
-        cfg[c("branch")] = params.branch as f32;
+        cfg[c("beam")] = beam;
+        cfg[c("branch")] = branch;
         cfg[c("probe_on")] = if params.probe { 1.0 } else { 0.0 };
         cfg[c("greedy")] = if params.temperature <= 0.0 { 1.0 } else { 0.0 };
         cfg[c("seed")] = (params.seed % (1 << 24)) as f32;

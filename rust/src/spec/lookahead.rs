@@ -12,6 +12,10 @@ use std::collections::HashMap;
 
 use super::HostDrafter;
 
+/// Simplified-lookahead drafter: an n-gram → continuation pool filled
+/// from the observed history. Built from a
+/// [`super::SpecMethod::Lookahead`] descriptor via
+/// [`super::SpecMethod::draft_source`].
 pub struct LookaheadDrafter {
     /// n-gram order of the pool keys
     pub n: usize,
@@ -30,11 +34,14 @@ impl Default for LookaheadDrafter {
 }
 
 impl LookaheadDrafter {
+    /// Build a pool of `n`-gram keys with `g`-token continuations, capped
+    /// at `cap` entries.
     pub fn new(n: usize, g: usize, cap: usize) -> Self {
         assert!(n >= 1 && g >= 1);
         LookaheadDrafter { n, g, pool: HashMap::new(), seen: 0, cap }
     }
 
+    /// Number of n-gram entries currently in the pool.
     pub fn pool_len(&self) -> usize {
         self.pool.len()
     }

@@ -1,9 +1,34 @@
-//! Host-side speculative drafting components.
+//! Speculative-drafting subsystem — descriptors, registry, drafters.
 //!
-//! The model-based drafters (SpS LM, EAGLE head, Medusa heads) run inside
-//! the AOT'd device programs; the retrieval-based baselines of the paper's
-//! Table 1 — Prompt Lookup Decoding and (simplified) Lookahead — draft on
-//! the host from the token history and feed `verify_ext_round`.
+//! The mirror image of [`crate::verify`] (DESIGN.md §7): where PR 1 made
+//! the *accept rule* a pluggable [`crate::verify::VerifyPolicy`], this
+//! module makes the *drafting side* a pluggable [`SpecMethod`] descriptor
+//! carrying every per-method knob, with one canonical representation
+//! across
+//!
+//! * the CLI (`--method eagle_tree:k=7,beam=2,branch=2`, see
+//!   [`SpecMethod::parse`]),
+//! * the line-JSON protocol (`"method": {"eagle_tree": {"k": 7}}` plus
+//!   the legacy bare string `"method": "eagle_tree"` and the flat
+//!   `"k"`/`"beam"`/`"branch"` wire knobs, see
+//!   [`SpecMethod::from_request`]),
+//! * the device config-slot lowering `(kdraft, beam, branch)` consumed by
+//!   the round programs (see [`SpecMethod::encode_slots`] and
+//!   `python/compile/state_spec.py` — the method *identity* lowers to the
+//!   executable name, [`SpecMethod::exec_name`], since each method is a
+//!   separate AOT'd program), and
+//! * a [`DraftSource`] built from the descriptor
+//!   ([`SpecMethod::draft_source`]) that unifies device-coupled drafting
+//!   (SpS LM, EAGLE head, Medusa heads run inside the lowered programs)
+//!   with host-side retrieval drafting (PLD, Lookahead feed
+//!   `verify_ext_round`).
+//!
+//! Every method is registered once in the [`METHODS`] table; the engine,
+//! the request layer, the CLI and the bench sweeps iterate that table
+//! instead of re-listing variants. Adding a method = one enum variant +
+//! one table row (+ its round program).
+
+#![warn(missing_docs)]
 
 pub mod lookahead;
 pub mod pld;
@@ -11,11 +36,790 @@ pub mod pld;
 pub use lookahead::LookaheadDrafter;
 pub use pld::PldDrafter;
 
+use crate::util::json::Value;
+
 /// A host drafter proposes up to `k` continuation tokens given the full
 /// token history (prompt ++ generated).
 pub trait HostDrafter {
+    /// Propose up to `k` draft tokens continuing `history`.
     fn draft(&mut self, history: &[u32], k: usize) -> Vec<u32>;
 
     /// Observe newly committed tokens (for pool-building drafters).
     fn observe(&mut self, _history: &[u32]) {}
+}
+
+/// One request's drafting engine, built from a [`SpecMethod`] descriptor
+/// (see [`SpecMethod::draft_source`]). Unifies the two drafting shapes of
+/// the paper's Table 1: model-based drafters that run *inside* the AOT'd
+/// device program, and host-side retrieval drafters that propose tokens
+/// for `verify_ext_round`.
+pub trait DraftSource: Send {
+    /// Name of the device executable driven each round.
+    fn exec_name(&self) -> &'static str;
+
+    /// Host-proposed draft tokens for the next round, or `None` when
+    /// drafting happens inside the device program itself. An empty vec
+    /// degenerates to one AR step on device.
+    fn next_drafts(&mut self, history: &[u32]) -> Option<Vec<u32>>;
+}
+
+/// Device-coupled drafting: the round program drafts internally.
+struct DeviceDraft {
+    exec: &'static str,
+}
+
+impl DraftSource for DeviceDraft {
+    fn exec_name(&self) -> &'static str {
+        self.exec
+    }
+
+    fn next_drafts(&mut self, _history: &[u32]) -> Option<Vec<u32>> {
+        None
+    }
+}
+
+/// Host drafting: a [`HostDrafter`] proposes up to `k` tokens per round,
+/// verified by `verify_ext_round`.
+struct HostDraft {
+    exec: &'static str,
+    k: usize,
+    drafter: Box<dyn HostDrafter + Send>,
+}
+
+impl DraftSource for HostDraft {
+    fn exec_name(&self) -> &'static str {
+        self.exec
+    }
+
+    fn next_drafts(&mut self, history: &[u32]) -> Option<Vec<u32>> {
+        self.drafter.observe(history);
+        Some(self.drafter.draft(history, self.k))
+    }
+}
+
+/// A speculative-decoding method descriptor: the method family plus every
+/// per-method drafting knob (the paper's Table 1 lineup). The old flat
+/// `Method` enum + loose `GenParams { k, beam, branch }` knobs collapsed
+/// into this one value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpecMethod {
+    /// Vanilla autoregressive decoding — the 1.00× baseline (no τ).
+    Ar,
+    /// Standard speculative sampling: independent draft LM, chain of `k`
+    /// tokens per round (Leviathan et al.).
+    Sps {
+        /// Chain draft length per round (device clamps to `K_MAX`).
+        k: usize,
+    },
+    /// EAGLE-style feature-conditioned head, chain decoding — the beam-1
+    /// degenerate tree.
+    EagleChain {
+        /// Chain depth per round (device clamps to `DEPTH_MAX`).
+        depth: usize,
+    },
+    /// EAGLE-style feature-conditioned head over a static beam tree.
+    EagleTree {
+        /// Tree depth per round (device clamps to `DEPTH_MAX`).
+        depth: usize,
+        /// Beam width (device clamps to `B_MAX`).
+        beam: usize,
+        /// Children per expanded node (device clamps to `C_MAX`).
+        branch: usize,
+    },
+    /// Medusa-style multi-head static tree.
+    Medusa {
+        /// Tree depth (device clamps to the head count).
+        depth: usize,
+    },
+    /// Prompt Lookup Decoding: host n-gram match over the history.
+    Pld {
+        /// Shortest n-gram worth matching.
+        min_ngram: usize,
+        /// Longest n-gram to try (longest-first).
+        max_ngram: usize,
+        /// Max draft tokens proposed per round.
+        k: usize,
+    },
+    /// Simplified Lookahead: host n-gram pool filled from the observed
+    /// history (DESIGN.md §9.4).
+    Lookahead {
+        /// N-gram order of the pool keys.
+        n: usize,
+        /// Continuation length stored per key.
+        g: usize,
+        /// Pool capacity (inserts stop when full).
+        cap: usize,
+        /// Max draft tokens proposed per round.
+        k: usize,
+    },
+}
+
+impl Default for SpecMethod {
+    /// The paper's headline configuration: EAGLE tree, K=7, beam 2.
+    fn default() -> Self {
+        SpecMethod::EagleTree { depth: 7, beam: 2, branch: 2 }
+    }
+}
+
+/// One registry row: everything the stack needs to know about a method
+/// family without matching on the enum.
+pub struct MethodInfo {
+    /// Canonical short name — the metrics label and bench table key.
+    pub name: &'static str,
+    /// Row label used by the paper-table benches.
+    pub paper_label: &'static str,
+    /// Accepted CLI/JSON spelling aliases (lowercase).
+    pub aliases: &'static [&'static str],
+    /// The family's default descriptor (all knobs at paper defaults).
+    pub default: SpecMethod,
+    /// One-line description for usage text.
+    pub summary: &'static str,
+}
+
+/// The single method registry: `engine`, `coordinator/request`, `main`
+/// and `bench` iterate this table instead of re-listing enum variants.
+pub const METHODS: &[MethodInfo] = &[
+    MethodInfo {
+        name: "ar",
+        paper_label: "Baseline (AR)",
+        aliases: &["baseline", "vanilla"],
+        default: SpecMethod::Ar,
+        summary: "vanilla autoregressive decoding (1.00x baseline)",
+    },
+    MethodInfo {
+        name: "sps",
+        paper_label: "SpS",
+        aliases: &["spd"],
+        default: SpecMethod::Sps { k: 7 },
+        summary: "independent draft LM, chain speculative sampling",
+    },
+    MethodInfo {
+        name: "eagle_chain",
+        paper_label: "EAGLE (chain)",
+        aliases: &["eagle", "eagle-chain"],
+        default: SpecMethod::EagleChain { depth: 7 },
+        summary: "feature-conditioned EAGLE head, chain decoding",
+    },
+    MethodInfo {
+        name: "eagle_tree",
+        paper_label: "EAGLE-3 (tree)",
+        aliases: &["eagle-tree", "eagle3", "tree"],
+        default: SpecMethod::EagleTree { depth: 7, beam: 2, branch: 2 },
+        summary: "feature-conditioned EAGLE head over a static beam tree",
+    },
+    MethodInfo {
+        name: "medusa",
+        paper_label: "Medusa",
+        aliases: &[],
+        default: SpecMethod::Medusa { depth: 4 },
+        summary: "multi-head static candidate tree",
+    },
+    MethodInfo {
+        name: "pld",
+        paper_label: "PLD",
+        aliases: &[],
+        default: SpecMethod::Pld { min_ngram: 2, max_ngram: 4, k: 7 },
+        summary: "host prompt-lookup n-gram drafting",
+    },
+    MethodInfo {
+        name: "lookahead",
+        paper_label: "Lookahead",
+        aliases: &["la"],
+        default: SpecMethod::Lookahead { n: 3, g: 8, cap: 4096, k: 7 },
+        summary: "host n-gram pool drafting (simplified lookahead)",
+    },
+];
+
+/// Resolve a lowercase family name or alias to its registry row.
+fn lookup(name: &str) -> Option<&'static MethodInfo> {
+    METHODS
+        .iter()
+        .find(|m| m.name == name || m.aliases.contains(&name))
+}
+
+impl SpecMethod {
+    /// Parse the CLI string form: `family[:knob=v,knob=v,...]`, e.g.
+    /// `eagle_tree:k=7,beam=2,branch=2`, `pld:min=3,max=5`, `sps:k=6`,
+    /// or a bare family name / alias (`eagle3`, `la`) for the defaults.
+    ///
+    /// Knobs per family: `sps: k`; `eagle_chain: k|depth`;
+    /// `eagle_tree: k|depth, beam, branch`; `medusa: k|depth`;
+    /// `pld: min|min_ngram, max|max_ngram, k`;
+    /// `lookahead: n, g, cap, k`; `ar` takes none.
+    pub fn parse(s: &str) -> Option<SpecMethod> {
+        let s = s.trim().to_ascii_lowercase();
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s.as_str(), None),
+        };
+        let mut m = lookup(head)?.default;
+        if let Some(args) = args {
+            for pair in args.split(',') {
+                let (key, val) = pair.trim().split_once('=')?;
+                let val: usize = val.trim().parse().ok()?;
+                m = m.set_knob(key.trim(), val)?;
+            }
+        }
+        if m.validate().is_err() {
+            return None;
+        }
+        Some(m)
+    }
+
+    /// Parse a comma-separated sweep list, e.g.
+    /// `sps:k=6,eagle_tree:k=7,beam=4,pld`. A segment containing `=` but
+    /// no `:` is a knob continuation of the previous method (commas do
+    /// double duty as list and knob separators).
+    pub fn parse_list(s: &str) -> Option<Vec<SpecMethod>> {
+        let mut items: Vec<String> = Vec::new();
+        for seg in s.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            if seg.contains('=') && !seg.contains(':') {
+                let prev = items.last_mut()?;
+                // first knob after a bare family name opens with ':'
+                prev.push(if prev.contains(':') { ',' } else { ':' });
+                prev.push_str(seg);
+            } else {
+                items.push(seg.to_string());
+            }
+        }
+        items
+            .iter()
+            .map(|i| SpecMethod::parse(i))
+            .collect::<Option<Vec<_>>>()
+            .filter(|v| !v.is_empty())
+    }
+
+    /// Apply one parsed `key=value` knob; `None` when the family has no
+    /// such knob.
+    fn set_knob(self, key: &str, val: usize) -> Option<SpecMethod> {
+        use SpecMethod::*;
+        Some(match (self, key) {
+            (Sps { .. }, "k") => Sps { k: val },
+            (EagleChain { .. }, "k" | "depth") => EagleChain { depth: val },
+            (EagleTree { beam, branch, .. }, "k" | "depth") => {
+                EagleTree { depth: val, beam, branch }
+            }
+            (EagleTree { depth, branch, .. }, "beam") => {
+                EagleTree { depth, beam: val, branch }
+            }
+            (EagleTree { depth, beam, .. }, "branch") => {
+                EagleTree { depth, beam, branch: val }
+            }
+            (Medusa { .. }, "k" | "depth") => Medusa { depth: val },
+            (Pld { max_ngram, k, .. }, "min" | "min_ngram") => {
+                Pld { min_ngram: val, max_ngram, k }
+            }
+            (Pld { min_ngram, k, .. }, "max" | "max_ngram") => {
+                Pld { min_ngram, max_ngram: val, k }
+            }
+            (Pld { min_ngram, max_ngram, .. }, "k") => {
+                Pld { min_ngram, max_ngram, k: val }
+            }
+            (Lookahead { g, cap, k, .. }, "n") => Lookahead { n: val, g, cap, k },
+            (Lookahead { n, cap, k, .. }, "g") => Lookahead { n, g: val, cap, k },
+            (Lookahead { n, g, k, .. }, "cap") => {
+                Lookahead { n, g, cap: val, k }
+            }
+            (Lookahead { n, g, cap, .. }, "k") => {
+                Lookahead { n, g, cap, k: val }
+            }
+            _ => return None,
+        })
+    }
+
+    /// Check descriptor invariants (what the drafter constructors assert).
+    pub fn validate(&self) -> Result<(), String> {
+        use SpecMethod::*;
+        let ok = match *self {
+            Ar => true,
+            Sps { k } => k >= 1,
+            EagleChain { depth } => depth >= 1,
+            EagleTree { depth, beam, branch } => {
+                depth >= 1 && beam >= 1 && branch >= 1
+            }
+            Medusa { depth } => depth >= 1,
+            Pld { min_ngram, max_ngram, k } => {
+                min_ngram >= 1 && max_ngram >= min_ngram && k >= 1
+            }
+            Lookahead { n, g, k, .. } => n >= 1 && g >= 1 && k >= 1,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(format!("invalid {} parameters", self.name()))
+        }
+    }
+
+    /// Canonical family name (metrics label and bench table key; stable
+    /// across knob values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecMethod::Ar => "ar",
+            SpecMethod::Sps { .. } => "sps",
+            SpecMethod::EagleChain { .. } => "eagle_chain",
+            SpecMethod::EagleTree { .. } => "eagle_tree",
+            SpecMethod::Medusa { .. } => "medusa",
+            SpecMethod::Pld { .. } => "pld",
+            SpecMethod::Lookahead { .. } => "lookahead",
+        }
+    }
+
+    /// This method's registry row.
+    pub fn info(&self) -> &'static MethodInfo {
+        // every variant has a row; the registry test pins this
+        METHODS.iter().find(|m| m.name == self.name()).unwrap()
+    }
+
+    /// Full CLI label; `parse(label())` round-trips the descriptor.
+    pub fn label(&self) -> String {
+        match *self {
+            SpecMethod::Ar => "ar".to_string(),
+            SpecMethod::Sps { k } => format!("sps:k={k}"),
+            SpecMethod::EagleChain { depth } => format!("eagle_chain:k={depth}"),
+            SpecMethod::EagleTree { depth, beam, branch } => {
+                format!("eagle_tree:k={depth},beam={beam},branch={branch}")
+            }
+            SpecMethod::Medusa { depth } => format!("medusa:k={depth}"),
+            SpecMethod::Pld { min_ngram, max_ngram, k } => {
+                format!("pld:min={min_ngram},max={max_ngram},k={k}")
+            }
+            SpecMethod::Lookahead { n, g, cap, k } => {
+                format!("lookahead:n={n},g={g},cap={cap},k={k}")
+            }
+        }
+    }
+
+    /// Does this method use draft-verify rounds (i.e. has a meaningful τ)?
+    pub fn is_speculative(&self) -> bool {
+        !matches!(self, SpecMethod::Ar)
+    }
+
+    /// Default descriptors of every registered family, registry order.
+    pub fn all_defaults() -> Vec<SpecMethod> {
+        METHODS.iter().map(|m| m.default).collect()
+    }
+
+    /// Default descriptors of every speculative family (no `ar`).
+    pub fn speculative_defaults() -> Vec<SpecMethod> {
+        METHODS
+            .iter()
+            .map(|m| m.default)
+            .filter(|m| m.is_speculative())
+            .collect()
+    }
+
+    // ----------------------------------------------------- JSON codec ----
+
+    /// Wire form: `"ar"` for the knobless baseline, else a one-key object
+    /// like `{"eagle_tree": {"k": 7, "beam": 2, "branch": 2}}`.
+    pub fn to_json(&self) -> Value {
+        let one = |family: &str, fields: &[(&str, usize)]| -> Value {
+            let mut inner = Value::obj();
+            for (name, val) in fields {
+                inner.set(name, Value::Num(*val as f64));
+            }
+            let mut o = Value::obj();
+            o.set(family, inner);
+            o
+        };
+        match *self {
+            SpecMethod::Ar => Value::Str("ar".into()),
+            SpecMethod::Sps { k } => one("sps", &[("k", k)]),
+            SpecMethod::EagleChain { depth } => {
+                one("eagle_chain", &[("k", depth)])
+            }
+            SpecMethod::EagleTree { depth, beam, branch } => one(
+                "eagle_tree",
+                &[("k", depth), ("beam", beam), ("branch", branch)],
+            ),
+            SpecMethod::Medusa { depth } => one("medusa", &[("k", depth)]),
+            SpecMethod::Pld { min_ngram, max_ngram, k } => one(
+                "pld",
+                &[("min_ngram", min_ngram), ("max_ngram", max_ngram), ("k", k)],
+            ),
+            SpecMethod::Lookahead { n, g, cap, k } => one(
+                "lookahead",
+                &[("n", n), ("g", g), ("cap", cap), ("k", k)],
+            ),
+        }
+    }
+
+    /// Parse the wire form produced by [`SpecMethod::to_json`]; a JSON
+    /// string is treated as the CLI form (so `"eagle_tree:k=7"` and the
+    /// legacy bare `"sps"` both work). Object bodies may omit knobs —
+    /// missing knobs take the family defaults.
+    pub fn from_json(v: &Value) -> Result<SpecMethod, String> {
+        if let Some(s) = v.as_str() {
+            return SpecMethod::parse(s)
+                .ok_or_else(|| format!("unknown method '{s}'"));
+        }
+        let obj = v
+            .as_obj()
+            .ok_or("method must be a string or a one-key object")?;
+        if obj.len() != 1 {
+            return Err("method object must have exactly one key".into());
+        }
+        let (key, body) = obj.iter().next().unwrap();
+        let info = lookup(&key.to_ascii_lowercase())
+            .ok_or_else(|| format!("unknown method '{key}'"))?;
+        let mut m = info.default;
+        let body = body
+            .as_obj()
+            .ok_or_else(|| format!("method.{key} parameters must be an object"))?;
+        for (pk, pv) in body {
+            let val = pv
+                .as_f64()
+                .filter(|f| f.is_finite() && *f >= 0.0 && f.fract() == 0.0)
+                .map(|f| f as usize)
+                .ok_or_else(|| {
+                    format!("method.{key}.{pk} must be a non-negative integer")
+                })?;
+            m = m.set_knob(pk, val).ok_or_else(|| {
+                format!("unknown {} parameter '{pk}'", info.name)
+            })?;
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Resolve the method of one request object: the `"method"` key (a
+    /// structured object, a CLI string, or a legacy bare family name);
+    /// absent means the default. The legacy flat `"k"` / `"beam"` /
+    /// `"branch"` wire knobs then override the descriptor's matching
+    /// knobs, so `{"method": "eagle_tree", "k": 7}` and
+    /// `{"method": {"eagle_tree": {"k": 7}}}` produce identical params.
+    pub fn from_request(v: &Value) -> Result<SpecMethod, String> {
+        let base = match v.get("method") {
+            Some(m) => SpecMethod::from_json(m)?,
+            None => SpecMethod::default(),
+        };
+        let knob = |name: &str| -> Result<Option<usize>, String> {
+            match v.get(name) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_f64()
+                    .filter(|f| f.is_finite() && *f >= 0.0)
+                    .map(|f| Some(f as usize))
+                    .ok_or_else(|| {
+                        format!("'{name}' must be a non-negative number")
+                    }),
+            }
+        };
+        Ok(base.with_overrides(knob("k")?, knob("beam")?, knob("branch")?))
+    }
+
+    /// Apply the legacy flat `--k` / `--beam` / `--branch` knobs onto this
+    /// descriptor: `k` maps to the family's primary length knob (chain
+    /// length, tree depth, or host draft length), `beam`/`branch` apply to
+    /// the tree method only. Knobs a family does not have are ignored, and
+    /// values are passed through unvalidated — exactly the leniency of the
+    /// pre-descriptor flat `GenParams` fields (unused knobs never reached
+    /// the round programs; device-read slots are clamped on device). The
+    /// structured forms ([`SpecMethod::parse`] / [`SpecMethod::from_json`])
+    /// are strict instead.
+    pub fn with_overrides(
+        self,
+        k: Option<usize>,
+        beam: Option<usize>,
+        branch: Option<usize>,
+    ) -> SpecMethod {
+        let mut m = self;
+        for (knob, val) in [("k", k), ("beam", beam), ("branch", branch)] {
+            if let Some(val) = val {
+                m = m.set_knob(knob, val).unwrap_or(m);
+            }
+        }
+        m
+    }
+
+    // ------------------------------------------------ device lowering ----
+
+    /// Name of the AOT'd round program this method drives. The method
+    /// identity lowers to the executable (each method is a separate HLO
+    /// artifact); the knobs lower to config slots
+    /// ([`SpecMethod::encode_slots`]).
+    pub fn exec_name(&self) -> &'static str {
+        match self {
+            SpecMethod::Ar => "ar_step",
+            SpecMethod::Sps { .. } => "sps_round",
+            SpecMethod::EagleChain { .. } | SpecMethod::EagleTree { .. } => {
+                "eagle_tree_round"
+            }
+            SpecMethod::Medusa { .. } => "medusa_round",
+            SpecMethod::Pld { .. } | SpecMethod::Lookahead { .. } => {
+                "verify_ext_round"
+            }
+        }
+    }
+
+    /// Encode into the `(kdraft, beam, branch)` config-slot triple the
+    /// round programs read (see `python/compile/state_spec.py`). Chain
+    /// methods lower to the degenerate `beam = branch = 1` tree; host
+    /// drafters keep their knobs host-side (the device reads the per-round
+    /// `ext` draft count instead of `kdraft`), so they lower the draft
+    /// budget only. The device clamps every slot to its static bound.
+    pub fn encode_slots(&self) -> [f32; 3] {
+        match *self {
+            SpecMethod::Ar => [0.0, 1.0, 1.0],
+            SpecMethod::Sps { k } => [k as f32, 1.0, 1.0],
+            SpecMethod::EagleChain { depth } => [depth as f32, 1.0, 1.0],
+            SpecMethod::EagleTree { depth, beam, branch } => {
+                [depth as f32, beam as f32, branch as f32]
+            }
+            SpecMethod::Medusa { depth } => [depth as f32, 1.0, 1.0],
+            SpecMethod::Pld { k, .. } => [k as f32, 1.0, 1.0],
+            SpecMethod::Lookahead { k, .. } => [k as f32, 1.0, 1.0],
+        }
+    }
+
+    // -------------------------------------------------------- drafting ---
+
+    /// Build this request's [`DraftSource`] from the descriptor — the one
+    /// construction point for host drafters, so per-request knobs like
+    /// `pld:min=3,max=5` actually reach the drafter (`SeqRunner` used to
+    /// hard-code `::default()` here).
+    pub fn draft_source(&self) -> Box<dyn DraftSource> {
+        match *self {
+            SpecMethod::Pld { min_ngram, max_ngram, k } => Box::new(HostDraft {
+                exec: self.exec_name(),
+                k,
+                drafter: Box::new(PldDrafter::new(min_ngram, max_ngram)),
+            }),
+            SpecMethod::Lookahead { n, g, cap, k } => Box::new(HostDraft {
+                exec: self.exec_name(),
+                k,
+                drafter: Box::new(LookaheadDrafter::new(n, g, cap)),
+            }),
+            m => Box::new(DeviceDraft { exec: m.exec_name() }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_consistent() {
+        for info in METHODS {
+            assert_eq!(info.default.name(), info.name, "{}", info.name);
+            assert!(info.default.validate().is_ok(), "{}", info.name);
+            // every alias resolves back to the same row
+            for alias in info.aliases {
+                assert_eq!(
+                    SpecMethod::parse(alias),
+                    Some(info.default),
+                    "{alias}"
+                );
+            }
+            assert_eq!(SpecMethod::parse(info.name), Some(info.default));
+        }
+        assert_eq!(SpecMethod::all_defaults().len(), METHODS.len());
+        assert_eq!(
+            SpecMethod::speculative_defaults().len(),
+            METHODS.len() - 1
+        );
+    }
+
+    #[test]
+    fn parse_covers_every_family_and_knob() {
+        assert_eq!(SpecMethod::parse("ar"), Some(SpecMethod::Ar));
+        assert_eq!(
+            SpecMethod::parse("sps:k=6"),
+            Some(SpecMethod::Sps { k: 6 })
+        );
+        assert_eq!(
+            SpecMethod::parse("eagle_chain:depth=5"),
+            Some(SpecMethod::EagleChain { depth: 5 })
+        );
+        assert_eq!(
+            SpecMethod::parse("eagle_tree:k=9,beam=3,branch=4"),
+            Some(SpecMethod::EagleTree { depth: 9, beam: 3, branch: 4 })
+        );
+        assert_eq!(
+            SpecMethod::parse("eagle_tree:beam=1"),
+            Some(SpecMethod::EagleTree { depth: 7, beam: 1, branch: 2 })
+        );
+        assert_eq!(
+            SpecMethod::parse("medusa:k=2"),
+            Some(SpecMethod::Medusa { depth: 2 })
+        );
+        assert_eq!(
+            SpecMethod::parse("pld:min=3,max=5"),
+            Some(SpecMethod::Pld { min_ngram: 3, max_ngram: 5, k: 7 })
+        );
+        assert_eq!(
+            SpecMethod::parse("lookahead:n=2,g=4,cap=64,k=5"),
+            Some(SpecMethod::Lookahead { n: 2, g: 4, cap: 64, k: 5 })
+        );
+        // rejects: unknown family, unknown knob, malformed pair, invalid
+        assert_eq!(SpecMethod::parse("warp"), None);
+        assert_eq!(SpecMethod::parse("ar:k=7"), None);
+        assert_eq!(SpecMethod::parse("sps:beam=2"), None);
+        assert_eq!(SpecMethod::parse("sps:k"), None);
+        assert_eq!(SpecMethod::parse("sps:k=0"), None);
+        assert_eq!(SpecMethod::parse("pld:min=5,max=2"), None);
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for info in METHODS {
+            let d = info.default;
+            assert_eq!(SpecMethod::parse(&d.label()), Some(d), "{:?}", d);
+        }
+        let custom = SpecMethod::Lookahead { n: 2, g: 3, cap: 17, k: 4 };
+        assert_eq!(SpecMethod::parse(&custom.label()), Some(custom));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        for info in METHODS {
+            let d = info.default;
+            let text = d.to_json().to_string_json();
+            let back = Value::parse(&text).unwrap();
+            assert_eq!(SpecMethod::from_json(&back), Ok(d), "{text}");
+        }
+        // partial object bodies take family defaults for missing knobs
+        let v = Value::parse(r#"{"eagle_tree": {"k": 9}}"#).unwrap();
+        assert_eq!(
+            SpecMethod::from_json(&v),
+            Ok(SpecMethod::EagleTree { depth: 9, beam: 2, branch: 2 })
+        );
+        let v = Value::parse(r#"{"pld": {}}"#).unwrap();
+        assert_eq!(
+            SpecMethod::from_json(&v),
+            Ok(SpecMethod::Pld { min_ngram: 2, max_ngram: 4, k: 7 })
+        );
+        // rejects
+        for bad in [
+            r#"{"warp": {}}"#,
+            r#"{"sps": {"beam": 2}}"#,
+            r#"{"sps": {"k": 1.5}}"#,
+            r#"{"sps": 7}"#,
+            r#"{"sps": {}, "pld": {}}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(SpecMethod::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn request_legacy_flat_knobs_override() {
+        let legacy =
+            Value::parse(r#"{"method": "eagle_tree", "k": 9, "beam": 3}"#)
+                .unwrap();
+        let structured = Value::parse(
+            r#"{"method": {"eagle_tree": {"k": 9, "beam": 3}}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            SpecMethod::from_request(&legacy),
+            SpecMethod::from_request(&structured)
+        );
+        // knobs a family does not have are ignored, like the old flat
+        // GenParams fields the round programs never read
+        let v = Value::parse(r#"{"method": "sps", "k": 6, "beam": 5}"#)
+            .unwrap();
+        assert_eq!(
+            SpecMethod::from_request(&v),
+            Ok(SpecMethod::Sps { k: 6 })
+        );
+        // absent method -> default descriptor, still overridable
+        let v = Value::parse(r#"{"k": 11}"#).unwrap();
+        assert_eq!(
+            SpecMethod::from_request(&v),
+            Ok(SpecMethod::EagleTree { depth: 11, beam: 2, branch: 2 })
+        );
+    }
+
+    #[test]
+    fn parse_list_handles_knob_commas() {
+        let list =
+            SpecMethod::parse_list("sps:k=6,eagle_tree:k=7,beam=4,pld")
+                .unwrap();
+        assert_eq!(
+            list,
+            vec![
+                SpecMethod::Sps { k: 6 },
+                SpecMethod::EagleTree { depth: 7, beam: 4, branch: 2 },
+                SpecMethod::Pld { min_ngram: 2, max_ngram: 4, k: 7 },
+            ]
+        );
+        // a knob continuation directly after a bare family name
+        assert_eq!(
+            SpecMethod::parse_list("eagle_tree,beam=4,pld"),
+            Some(vec![
+                SpecMethod::EagleTree { depth: 7, beam: 4, branch: 2 },
+                SpecMethod::Pld { min_ngram: 2, max_ngram: 4, k: 7 },
+            ])
+        );
+        assert_eq!(SpecMethod::parse_list("beam=4"), None);
+        assert_eq!(SpecMethod::parse_list(""), None);
+    }
+
+    #[test]
+    fn slots_lower_chain_as_degenerate_tree() {
+        assert_eq!(
+            SpecMethod::EagleChain { depth: 5 }.encode_slots(),
+            [5.0, 1.0, 1.0]
+        );
+        assert_eq!(
+            SpecMethod::EagleTree { depth: 7, beam: 2, branch: 3 }
+                .encode_slots(),
+            [7.0, 2.0, 3.0]
+        );
+        assert_eq!(SpecMethod::Sps { k: 6 }.encode_slots(), [6.0, 1.0, 1.0]);
+        assert_eq!(SpecMethod::Ar.encode_slots(), [0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn exec_names_cover_every_family() {
+        for info in METHODS {
+            let exec = info.default.exec_name();
+            assert!(!exec.is_empty(), "{}", info.name);
+        }
+        assert_eq!(SpecMethod::default().exec_name(), "eagle_tree_round");
+        assert_eq!(
+            SpecMethod::parse("pld").unwrap().exec_name(),
+            "verify_ext_round"
+        );
+    }
+
+    #[test]
+    fn descriptor_knobs_reach_the_pld_drafter() {
+        // regression for the hard-coded PldDrafter::default() in
+        // SeqRunner::new: the tail 2-gram [1, 2] repeats (match at 0,
+        // continuation [3, 4, ...]) but no 3-gram repeats, so narrowing
+        // min_ngram from 2 to 3 must change what gets drafted.
+        let h = [1u32, 2, 3, 4, 9, 9, 1, 2];
+        let mut default = SpecMethod::parse("pld").unwrap().draft_source();
+        let drafted = default.next_drafts(&h).expect("pld drafts on host");
+        assert_eq!(drafted, vec![3, 4, 9, 9, 1, 2]);
+        let mut narrow =
+            SpecMethod::parse("pld:min=3,max=5").unwrap().draft_source();
+        let drafted = narrow.next_drafts(&h).expect("pld drafts on host");
+        assert!(drafted.is_empty(), "min=3 must kill the 2-gram match");
+        // and the k knob bounds the proposal length
+        let mut short =
+            SpecMethod::parse("pld:k=2").unwrap().draft_source();
+        assert_eq!(short.next_drafts(&h), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn descriptor_knobs_reach_the_lookahead_drafter() {
+        let h = [5u32, 6, 7, 8, 9, 5, 6];
+        let mut src = SpecMethod::parse("lookahead:n=2,g=4,cap=100,k=3")
+            .unwrap()
+            .draft_source();
+        // next_drafts observes the history, then keys the pool on the tail
+        assert_eq!(src.next_drafts(&h), Some(vec![7, 8, 9]));
+        // device-coupled methods draft inside the round program
+        let mut dev = SpecMethod::default().draft_source();
+        assert_eq!(dev.next_drafts(&h), None);
+        assert_eq!(dev.exec_name(), "eagle_tree_round");
+    }
 }

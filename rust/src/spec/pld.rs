@@ -6,6 +6,10 @@
 
 use super::HostDrafter;
 
+/// Prompt-lookup drafter: proposes the continuation of the most recent
+/// earlier occurrence of the history's tail n-gram. Built from a
+/// [`super::SpecMethod::Pld`] descriptor via
+/// [`super::SpecMethod::draft_source`].
 pub struct PldDrafter {
     /// longest n-gram to try to match (tried longest-first)
     pub max_ngram: usize,
@@ -20,6 +24,7 @@ impl Default for PldDrafter {
 }
 
 impl PldDrafter {
+    /// Build a drafter matching n-grams of length `min_ngram..=max_ngram`.
     pub fn new(min_ngram: usize, max_ngram: usize) -> Self {
         assert!(min_ngram >= 1 && max_ngram >= min_ngram);
         PldDrafter { max_ngram, min_ngram }

@@ -8,8 +8,9 @@
 
 use std::path::PathBuf;
 
-use mars::engine::{DecodeEngine, GenParams, Method};
+use mars::engine::{DecodeEngine, GenParams, SpecMethod};
 use mars::runtime::{Artifacts, Runtime};
+use mars::spec::METHODS;
 use mars::verify::{AcceptFlag, VerifyPolicy};
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -24,7 +25,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn params(method: Method, policy: VerifyPolicy, temp: f32) -> GenParams {
+fn params(method: SpecMethod, policy: VerifyPolicy, temp: f32) -> GenParams {
     GenParams {
         method,
         policy,
@@ -66,17 +67,11 @@ fn engine_semantics_suite() {
     // --- greedy losslessness: every method == AR at T=0 ----------------
     let prompt = "Q: 21+17=?\nA: ";
     let ar = engine
-        .generate(prompt, &params(Method::Ar, VerifyPolicy::Strict, 0.0))
+        .generate(prompt, &params(SpecMethod::Ar, VerifyPolicy::Strict, 0.0))
         .expect("ar");
     assert!(!ar.tokens.is_empty());
-    for method in [
-        Method::Sps,
-        Method::EagleChain,
-        Method::EagleTree,
-        Method::Medusa,
-        Method::Pld,
-        Method::Lookahead,
-    ] {
+    // every speculative descriptor in the registry, at its defaults
+    for method in SpecMethod::speculative_defaults() {
         let r = engine
             .generate(prompt, &params(method, VerifyPolicy::Strict, 0.0))
             .unwrap_or_else(|e| panic!("{method:?}: {e:#}"));
@@ -86,14 +81,18 @@ fn engine_semantics_suite() {
             r.text, ar.text
         );
     }
+    assert_eq!(SpecMethod::speculative_defaults().len(), METHODS.len() - 1);
 
     // --- Strict policy == MARS at theta -> 1, and never relaxes --------
     let strict = engine
-        .generate(prompt, &params(Method::EagleTree, VerifyPolicy::Strict, 0.0))
+        .generate(
+            prompt,
+            &params(SpecMethod::default(), VerifyPolicy::Strict, 0.0),
+        )
         .expect("strict");
     assert_eq!(strict.snapshot.relaxed_accepts, 0.0);
     let p = params(
-        Method::EagleTree,
+        SpecMethod::default(),
         VerifyPolicy::Mars { theta: 0.9999 },
         0.0,
     );
@@ -107,7 +106,7 @@ fn engine_semantics_suite() {
         .iter()
         .enumerate()
     {
-        let mut ps = params(Method::EagleTree, VerifyPolicy::Strict, 1.0);
+        let mut ps = params(SpecMethod::default(), VerifyPolicy::Strict, 1.0);
         ps.seed = 100 + i as u64;
         let a = engine.generate(&ex.prompt, &ps).expect("strict fixed");
         ps.policy = VerifyPolicy::Mars { theta: 0.9999 };
@@ -123,7 +122,7 @@ fn engine_semantics_suite() {
         .iter()
         .enumerate()
     {
-        let mut p = params(Method::EagleTree, VerifyPolicy::Strict, 1.0);
+        let mut p = params(SpecMethod::default(), VerifyPolicy::Strict, 1.0);
         p.max_new = 48;
         p.seed = i as u64;
         tau_strict += engine.generate(&ex.prompt, &p).expect("s").tau();
@@ -136,13 +135,13 @@ fn engine_semantics_suite() {
     );
 
     // --- sampling reproducibility --------------------------------------
-    let p = params(Method::Sps, VerifyPolicy::default(), 1.0);
+    let p = params(SpecMethod::Sps { k: 7 }, VerifyPolicy::default(), 1.0);
     let a = engine.generate("Q: 3+4=?\nA: ", &p).expect("a");
     let b = engine.generate("Q: 3+4=?\nA: ", &p).expect("b");
     assert_eq!(a.tokens, b.tokens);
 
     // --- extract_every must not change tokens --------------------------
-    let mut p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
+    let mut p = params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
     p.max_new = 32;
     let a = engine.generate("Q: 12+7=?\nA: ", &p).expect("a");
     p.extract_every = 4;
@@ -150,7 +149,7 @@ fn engine_semantics_suite() {
     assert_eq!(a.tokens, b.tokens, "blind rounds changed the output");
 
     // --- probe entries flow to host ------------------------------------
-    let mut p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
+    let mut p = params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
     p.probe = true;
     p.max_new = 40;
     let r = engine
@@ -167,18 +166,18 @@ fn engine_semantics_suite() {
     }
 
     // --- limits + errors ------------------------------------------------
-    let mut p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
+    let mut p = params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
     p.max_new = 64;
     let r = engine
         .generate("Text: The crew painted a red barn at noon.\nSummary: ", &p)
         .expect("limit");
     assert!(r.tokens.len() <= 64);
     assert!(engine
-        .generate("", &params(Method::Ar, VerifyPolicy::Strict, 0.0))
+        .generate("", &params(SpecMethod::Ar, VerifyPolicy::Strict, 0.0))
         .is_err());
 
     // --- hostloop runtime must be output-identical ----------------------
-    let p = params(Method::EagleTree, VerifyPolicy::default(), 1.0);
+    let p = params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
     let resident = engine.generate("Q: 8+13=?\nA: ", &p).expect("res");
     drop(engine);
     let rt = Runtime::new(&dir).expect("rt");
@@ -216,6 +215,11 @@ fn router_end_to_end_over_tcp() {
         resp.get("policy").and_then(|p| p.as_str()),
         Some("mars:0.9")
     );
+    // the reply echoes the full descriptor label that actually ran
+    assert_eq!(
+        resp.get("method").and_then(|m| m.as_str()),
+        Some("eagle_tree:k=7,beam=2,branch=2")
+    );
     // and the structured form works end to end
     let resp2 = server::client_roundtrip(
         &addr,
@@ -247,6 +251,14 @@ fn router_end_to_end_over_tcp() {
         metrics.path(&["policy", "topk", "requests"]).and_then(|v| v.as_usize()),
         Some(1)
     );
+    // per-method breakout: both requests ran the eagle_tree family
+    assert_eq!(
+        metrics
+            .path(&["method", "eagle_tree", "requests"])
+            .and_then(|v| v.as_usize()),
+        Some(2)
+    );
+    assert!(metrics.path(&["method", "eagle_tree", "ttft_ms_p50"]).is_some());
 
     // ---- pipelining: two requests on one connection, out-of-order ids --
     {

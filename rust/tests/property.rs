@@ -5,7 +5,9 @@
 
 use mars::datasets::{dataset, Task};
 use mars::eval;
-use mars::spec::{HostDrafter, LookaheadDrafter, PldDrafter};
+use mars::spec::{
+    HostDrafter, LookaheadDrafter, PldDrafter, SpecMethod, METHODS,
+};
 use mars::util::json::Value;
 use mars::util::prng::Rng;
 use mars::verify::{AcceptFlag, VerifyPolicy};
@@ -65,6 +67,140 @@ fn random_policy(rng: &mut Rng) -> VerifyPolicy {
     }
 }
 
+fn random_method(rng: &mut Rng) -> SpecMethod {
+    match rng.below(7) {
+        0 => SpecMethod::Ar,
+        1 => SpecMethod::Sps { k: 1 + rng.usize_below(16) },
+        2 => SpecMethod::EagleChain { depth: 1 + rng.usize_below(10) },
+        3 => SpecMethod::EagleTree {
+            depth: 1 + rng.usize_below(10),
+            beam: 1 + rng.usize_below(4),
+            branch: 1 + rng.usize_below(4),
+        },
+        4 => SpecMethod::Medusa { depth: 1 + rng.usize_below(4) },
+        5 => {
+            let min_ngram = 1 + rng.usize_below(4);
+            SpecMethod::Pld {
+                min_ngram,
+                max_ngram: min_ngram + rng.usize_below(4),
+                k: 1 + rng.usize_below(16),
+            }
+        }
+        _ => SpecMethod::Lookahead {
+            n: 1 + rng.usize_below(5),
+            g: 1 + rng.usize_below(10),
+            cap: 1 + rng.usize_below(8192),
+            k: 1 + rng.usize_below(16),
+        },
+    }
+}
+
+#[test]
+fn prop_method_cli_label_round_trips() {
+    let mut rng = Rng::new(300);
+    for _ in 0..500 {
+        let m = random_method(&mut rng);
+        let label = m.label();
+        assert_eq!(
+            SpecMethod::parse(&label),
+            Some(m),
+            "label {label:?} did not round-trip"
+        );
+    }
+}
+
+#[test]
+fn prop_method_json_round_trips() {
+    let mut rng = Rng::new(301);
+    for _ in 0..500 {
+        let m = random_method(&mut rng);
+        let text = m.to_json().to_string_json();
+        let back = Value::parse(&text).expect("method json parses");
+        assert_eq!(
+            SpecMethod::from_json(&back),
+            Ok(m),
+            "json {text} did not round-trip"
+        );
+    }
+}
+
+#[test]
+fn prop_method_cli_json_name_agree() {
+    // CLI string ↔ JSON object ↔ canonical name: the three surfaces of
+    // one descriptor always agree
+    let mut rng = Rng::new(302);
+    for _ in 0..300 {
+        let m = random_method(&mut rng);
+        let via_cli = SpecMethod::parse(&m.label()).unwrap();
+        let json = Value::parse(&m.to_json().to_string_json()).unwrap();
+        let via_json = SpecMethod::from_json(&json).unwrap();
+        assert_eq!(via_cli, via_json);
+        assert_eq!(via_cli.name(), m.name());
+        assert_eq!(m.info().name, m.name());
+    }
+}
+
+#[test]
+fn prop_legacy_method_strings_and_flat_knobs_pin() {
+    // every legacy bare "method" string and --k/--beam/--branch flag
+    // combination still parses, and the flat wire form equals the
+    // structured descriptor form built from the same knobs
+    let mut rng = Rng::new(303);
+    let legacy_names = [
+        "ar", "baseline", "vanilla", "sps", "spd", "eagle", "eagle_chain",
+        "eagle_tree", "eagle3", "tree", "medusa", "pld", "lookahead", "la",
+    ];
+    for _ in 0..400 {
+        let name = *rng.pick(&legacy_names);
+        let with_k = rng.bool(0.5);
+        let with_beam = rng.bool(0.5);
+        let with_branch = rng.bool(0.5);
+        let k = 1 + rng.usize_below(16);
+        let beam = 1 + rng.usize_below(4);
+        let branch = 1 + rng.usize_below(4);
+        let mut o = Value::obj();
+        o.set("method", Value::Str(name.into()));
+        if with_k {
+            o.set("k", Value::Num(k as f64));
+        }
+        if with_beam {
+            o.set("beam", Value::Num(beam as f64));
+        }
+        if with_branch {
+            o.set("branch", Value::Num(branch as f64));
+        }
+        let got = SpecMethod::from_request(&o)
+            .unwrap_or_else(|e| panic!("{}: {e}", o.to_string_json()));
+        // oracle: family default + the same overrides applied directly
+        let base = SpecMethod::parse(name).expect(name);
+        let want = base.with_overrides(
+            with_k.then_some(k),
+            with_beam.then_some(beam),
+            with_branch.then_some(branch),
+        );
+        assert_eq!(got, want, "{}", o.to_string_json());
+        // and the parsed descriptor's own JSON form round-trips to itself
+        let structured =
+            Value::parse(&got.to_json().to_string_json()).unwrap();
+        assert_eq!(SpecMethod::from_json(&structured), Ok(got));
+    }
+}
+
+#[test]
+fn prop_registry_defaults_parse_from_every_alias() {
+    for info in METHODS {
+        for spelling in
+            std::iter::once(&info.name).chain(info.aliases.iter())
+        {
+            assert_eq!(
+                SpecMethod::parse(spelling),
+                Some(info.default),
+                "{spelling}"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_policy_cli_label_round_trips() {
     let mut rng = Rng::new(200);
@@ -106,16 +242,15 @@ fn prop_policy_slots_round_trip() {
 #[test]
 fn prop_request_json_round_trips_wire_fields() {
     // the full request wire surface (id, stream, policy, method, sampling
-    // knobs) survives a JSON encode → parse_request_json round trip
+    // knobs) survives a JSON encode → parse_request_json round trip; the
+    // method is carried either as its CLI label or its structured object
     use mars::coordinator::request::parse_request_json;
-    use mars::engine::Method;
     let mut rng = Rng::new(207);
     for _ in 0..400 {
         let id = rng.below(1_000_000);
         let stream = rng.bool(0.5);
         let policy = random_policy(&mut rng);
-        let method = *rng.pick(Method::all());
-        let k = 1 + rng.usize_below(12);
+        let method = random_method(&mut rng);
         let max_new = 1 + rng.usize_below(256);
         let seed = rng.below(1u64 << 40);
         let mut o = Value::obj();
@@ -125,8 +260,11 @@ fn prop_request_json_round_trips_wire_fields() {
             o.set("stream", Value::Bool(true));
         }
         o.set("policy", Value::Str(policy.label()));
-        o.set("method", Value::Str(method.name().into()));
-        o.set("k", Value::Num(k as f64));
+        if rng.bool(0.5) {
+            o.set("method", Value::Str(method.label()));
+        } else {
+            o.set("method", method.to_json());
+        }
         o.set("max_new", Value::Num(max_new as f64));
         o.set("seed", Value::Num(seed as f64));
         let text = o.to_string_json();
@@ -141,7 +279,6 @@ fn prop_request_json_round_trips_wire_fields() {
             "{text}"
         );
         assert_eq!(req.params.method, method, "{text}");
-        assert_eq!(req.params.k, k, "{text}");
         assert_eq!(req.params.max_new, max_new, "{text}");
         assert_eq!(req.params.seed, seed, "{text}");
     }
