@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         4,
         false,
         RouterPolicy::LeastLoaded,
+        mars::cache::CacheConfig::default(),
     )?);
 
     // TCP smoke: prove the wire protocol works end to end

@@ -56,6 +56,11 @@ EXECUTABLES = {
         [("prompt", (M.P_MAX,)), ("cfg", (S.N_CFG,))],
         ["target", "eagle", "sps"],
     ),
+    "prefill_ext": (
+        R.prefill_ext,
+        [("ext", (M.P_MAX + 1,))],
+        ["target", "eagle", "sps"],
+    ),
     "ar_step": (R.ar_step, [], ["target"]),
     "sps_round": (R.sps_round, [], ["target", "sps"]),
     "eagle_tree_round": (R.eagle_tree_round, [], ["target", "eagle"]),

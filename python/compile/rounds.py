@@ -13,6 +13,8 @@ every verification policy.
 
 Methods:
     prefill           build the initial state from a prompt
+    prefill_ext       extend a restored prefix-cache snapshot with the
+                      uncached token suffix (DESIGN.md §8)
     ar_step           vanilla autoregressive decoding (the 1.00x baseline)
     sps_round         standard speculative sampling (Leviathan-style
                       rejection sampling, independent draft LM) + MARS
@@ -315,6 +317,63 @@ def prefill(prompt, cfg, *t_e_s_weights):
     # drafter catch-up over the whole prompt
     e_logits, _ = _eagle_block(v, e_params, toks, t_hid, slots, slots, mask)
     s_logits, _ = _sps_block(v, s_params, toks, slots, slots, mask)
+    return v.pack()
+
+
+# -------------------------------------------------------- prefill_ext ------
+
+
+def prefill_ext(state, ext, *t_e_s_weights):
+    """Extend a prefilled state with a token suffix (prefix-cache reuse).
+
+    `ext` f32 [P_MAX + 1] = [n, tok_0 .. tok_{P_MAX-1}]: the suffix of a
+    prompt whose first `pos` tokens the state already encodes (a restored
+    PrefixCache snapshot — DESIGN.md §8, restamped host-side by
+    rust/src/runtime/state.rs before upload). Rows pos..pos+n-1 run
+    through the target and both drafters exactly as `prefill` would have
+    processed them, so `prefill(prefix ++ suffix)` and
+    `prefill_ext(prefill(prefix), suffix)` agree on every live row; the
+    rust side skips this call entirely on full-prompt hits (n == 0).
+    """
+    nt = len(_TARGET_NAMES)
+    ne = len(_EAGLE_NAMES)
+    t_params = M.unflatten_like(_TARGET_TREE, list(t_e_s_weights[:nt]))
+    e_params = M.unflatten_like(_EAGLE_TREE, list(t_e_s_weights[nt:nt + ne]))
+    s_params = M.unflatten_like(_SPS_TREE, list(t_e_s_weights[nt + ne:]))
+
+    v = S.View(state)
+    old = v.geti("pos")
+    n = jnp.clip(ext[0].astype(jnp.int32), 0, M.P_MAX)
+    n = jnp.minimum(n, M.P_MAX - old)  # whole prompt shares the budget
+    new_len = old + n
+
+    j = jnp.arange(M.P_MAX, dtype=jnp.int32)
+    toks = ext[1:].astype(jnp.int32)
+    live = j < n
+    slots = jnp.minimum(old + j, M.S_MAX - 1)
+    # suffix tokens land in the context ring at rows old..old+n-1
+    tok_idx = jnp.where(live, old + j, M.S_MAX + 1)
+    v.tokens = v.tokens.at[tok_idx].set(toks.astype(jnp.float32), mode="drop")
+
+    # target over the suffix block: each row attends to the whole cached
+    # prefix plus the suffix rows before it (dead lanes masked out, their
+    # KV writes land at junk rows >= new_len, same as prefill's padding)
+    mask = _causal_mask(slots, new_len) * live.astype(jnp.float32)[:, None]
+    t_logits, t_hid = _target_block(v, t_params, toks, slots, slots, mask)
+    feat_idx = jnp.where(live, old + j, M.S_MAX + 1)
+    v.feat = v.feat.at[feat_idx].set(t_hid, mode="drop")
+    last = jnp.clip(n - 1, 0, M.P_MAX - 1)
+    v.next_logits = jnp.where(n > 0, t_logits[last], v.next_logits)
+
+    # drafter catch-up over the suffix (teacher-forced, as in prefill)
+    _eagle_block(v, e_params, toks, t_hid, slots, slots, mask)
+    _sps_block(v, s_params, toks, slots, slots, mask)
+
+    new_f = new_len.astype(jnp.float32)
+    v.set("pos", new_f)
+    v.set("eagle_pos", new_f)
+    v.set("sps_pos", new_f)
+    v.set("prompt_len", new_f)
     return v.pack()
 
 

@@ -36,6 +36,7 @@ def world():
         "sw": M.flat_values(sps),
         "mw": M.flat_values(medusa),
         "prefill": jax.jit(R.prefill),
+        "pext": jax.jit(R.prefill_ext),
         "ar": jax.jit(R.ar_step),
         "sps": jax.jit(R.sps_round),
         "tree": jax.jit(R.eagle_tree_round),
@@ -161,6 +162,83 @@ def test_verify_ext_oracle_accepts_everything(world, greedy_ref):
     np.testing.assert_array_equal(out, greedy_ref)
     tau = sc[S.SCALARS["committed"]] / max(sc[S.SCALARS["rounds"]], 1)
     assert tau > 4.0  # oracle drafts must be mostly accepted
+
+
+def _prefill_ids(world, ids, **cfg_kw):
+    prompt = np.zeros(M.P_MAX, np.float32)
+    prompt[: len(ids)] = ids
+    cfg = make_cfg(prompt_len=len(ids), **cfg_kw)
+    return world["prefill"](
+        jnp.asarray(prompt), cfg, *world["tw"], *world["ew"], *world["sw"]
+    )
+
+
+@pytest.mark.parametrize("split", [4, 9])
+def test_prefill_ext_matches_cold_prefill(world, split):
+    """prefill_ext(prefill(prefix), suffix) == prefill(prefix ++ suffix)
+    on every live row: the scalar positions agree, next_logits agree, and
+    greedy decode from the two states is token-identical (the prefix-cache
+    reuse contract — DESIGN.md §8)."""
+    ids = T.encode(PROMPT)
+    assert 0 < split < len(ids)
+    cold = _prefill_ids(world, ids)
+    warm0 = _prefill_ids(world, ids[:split])
+    e = np.zeros(M.P_MAX + 1, np.float32)
+    suffix = ids[split:]
+    e[0] = len(suffix)
+    e[1: 1 + len(suffix)] = suffix
+    warm = world["pext"](
+        warm0, jnp.asarray(e), *world["tw"], *world["ew"], *world["sw"]
+    )
+
+    csc = np.asarray(cold[: S.N_SCALARS])
+    wsc = np.asarray(warm[: S.N_SCALARS])
+    for name in ("pos", "eagle_pos", "sps_pos", "prompt_len"):
+        assert csc[S.SCALARS[name]] == wsc[S.SCALARS[name]], name
+    lay = S.layout()
+    for sec in ("tokens", "next_logits"):
+        o = lay[sec]
+        a = np.asarray(cold[o["offset"]: o["offset"] + o["size"]])
+        b = np.asarray(warm[o["offset"]: o["offset"] + o["size"]])
+        if sec == "tokens":
+            np.testing.assert_array_equal(a[: len(ids)], b[: len(ids)])
+        else:
+            np.testing.assert_allclose(a, b, atol=1e-4)
+    fo = lay["feat"]
+    d = M.TARGET_CFG.d_model
+    a = np.asarray(cold[fo["offset"]: fo["offset"] + fo["size"]])
+    b = np.asarray(warm[fo["offset"]: fo["offset"] + fo["size"]])
+    np.testing.assert_allclose(
+        a[: len(ids) * d], b[: len(ids) * d], atol=1e-4
+    )
+
+    # the decisive check: greedy decode from either state is identical
+    out_c, _, _ = drive(
+        world, cold, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    out_w, _, _ = drive(
+        world, warm, lambda s: world["tree"](s, *world["tw"], *world["ew"])
+    )
+    np.testing.assert_array_equal(out_c, out_w)
+
+
+def test_prefill_ext_empty_suffix_keeps_position(world):
+    ids = T.encode(PROMPT)
+    st = _prefill_ids(world, ids)
+    e = np.zeros(M.P_MAX + 1, np.float32)
+    st2 = world["pext"](
+        st, jnp.asarray(e), *world["tw"], *world["ew"], *world["sw"]
+    )
+    a = np.asarray(st[: S.N_SCALARS])
+    b = np.asarray(st2[: S.N_SCALARS])
+    for name in ("pos", "prompt_len"):
+        assert a[S.SCALARS[name]] == b[S.SCALARS[name]], name
+    lay = S.layout()["next_logits"]
+    np.testing.assert_allclose(
+        np.asarray(st[lay["offset"]: lay["offset"] + lay["size"]]),
+        np.asarray(st2[lay["offset"]: lay["offset"] + lay["size"]]),
+        atol=1e-5,
+    )
 
 
 def test_mars_greedy_only_differs_by_tiebreaks(world, greedy_ref):

@@ -72,6 +72,7 @@ impl<'a> BenchCtx<'a> {
             seed: self.seed,
             probe: false,
             extract_every: 1,
+            cache: true,
         }
     }
 

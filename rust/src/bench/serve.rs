@@ -9,14 +9,25 @@
 //! * **TPOT** — (last event − first delta) / (tokens − 1);
 //! * **throughput** — committed tokens / wall-clock, requests / second.
 //!
-//! The sweep axes are the drafting method (`--methods`, descriptor
-//! grammar) and the verification policy (`--policies`): each method ×
-//! policy combination gets its own wave of `n` requests at the same
-//! arrival rate, so the table isolates what the drafter and the accept
-//! rule each do to tail latency under load.
+//! Two scenarios share the harness (`--scenario`):
+//!
+//! * **sweep** (default) — the drafting method (`--methods`, descriptor
+//!   grammar) × verification policy (`--policies`) grid: each
+//!   combination gets its own wave of `n` requests at the same arrival
+//!   rate, so the table isolates what the drafter and the accept rule
+//!   each do to tail latency under load.
+//! * **chat** — `n` multi-turn conversations over shared system prompts
+//!   ([`crate::datasets::chat_conversations`]): conversations arrive
+//!   open-loop, each turn's prompt extends the previous turn + answer
+//!   byte-for-byte, and the same workload runs twice — prefix cache on
+//!   vs off (DESIGN.md §8) — reporting TTFT/TPOT plus the prefill cost
+//!   of follow-up turns in wall-clock *and* simclock units
+//!   ([`super::simclock::prefill_units`]).
+//!
 //! Client-side measurements can be cross-checked against the server's
 //! own `{"cmd": "metrics"}` snapshot (TTFT there is measured
-//! submit → first commit, without the socket hop).
+//! submit → first commit, without the socket hop; the `"cache"` object
+//! carries the server-side hit-rate/tokens-saved/bytes-resident gauges).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write as _};
@@ -27,15 +38,35 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::CacheConfig;
 use crate::coordinator::router::{Router, RouterPolicy};
 use crate::coordinator::scheduler::exp_arrival_gap;
 use crate::coordinator::server;
-use crate::datasets::{dataset, Task};
+use crate::datasets::{chat_conversations, dataset, Task};
 use crate::engine::SpecMethod;
 use crate::util::json::Value;
 use crate::util::prng::Rng;
 use crate::util::stats::Summary;
 use crate::verify::VerifyPolicy;
+
+/// Cap on `--max-new` in the `chat` scenario: answers must stay short
+/// enough that a whole multi-turn conversation fits the `P_MAX` prompt
+/// budget of the default artifact build (see
+/// `datasets::chat_conversations`).
+pub const CHAT_MAX_NEW_CAP: usize = 12;
+
+/// Which workload shape `mars bench serve` drives (`--scenario`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeScenario {
+    /// Method × policy grid of independent single-turn requests.
+    Sweep,
+    /// Multi-turn conversations over shared system prompts, run once
+    /// with the prefix cache on and once off.
+    Chat {
+        /// User turns per conversation.
+        turns: usize,
+    },
+}
 
 /// Configuration for one `mars bench serve` run.
 pub struct ServeBenchCfg {
@@ -45,9 +76,11 @@ pub struct ServeBenchCfg {
     pub replicas: usize,
     /// Concurrent sequences interleaved per replica.
     pub slots: usize,
-    /// Client TCP connections the load is spread over (round-robin).
+    /// Client TCP connections the sweep scenario spreads its load over
+    /// (round-robin). The `chat` scenario ignores it: each turn opens a
+    /// fresh connection, like a real chat client's request cycle.
     pub connections: usize,
-    /// Requests per wave.
+    /// Requests per wave (`chat`: conversations per wave).
     pub n_requests: usize,
     /// Open-loop arrival rate, requests/second (Poisson).
     pub rate_per_s: f64,
@@ -59,6 +92,12 @@ pub struct ServeBenchCfg {
     pub methods: Vec<SpecMethod>,
     /// Verification policies swept (one wave per method × policy).
     pub policies: Vec<VerifyPolicy>,
+    /// Workload shape (`sweep` grid vs multi-turn `chat`).
+    pub scenario: ServeScenario,
+    /// Per-replica prefix-cache budget (`--cache-mb`) for the `chat`
+    /// scenario's cache-on wave. The sweep scenario always runs cache-off
+    /// so every wave's prefills are uniformly cold and rows compare.
+    pub cache_mb: usize,
     /// Where the rendered table lands (`results/serve.md`).
     pub out_dir: PathBuf,
 }
@@ -158,13 +197,21 @@ struct PolicyRow {
     req_per_s: f64,
 }
 
-/// Run the full serving benchmark: one open-loop wave per method ×
-/// policy combination against a live in-process server, rendered into
+/// Run the serving benchmark for the configured scenario, rendered into
 /// the standard bench table machinery (`results/serve.md`).
 pub fn run(cfg: &ServeBenchCfg) -> Result<()> {
     if cfg.connections == 0 || cfg.n_requests == 0 {
         bail!("bench serve needs --connections >= 1 and --n >= 1");
     }
+    match cfg.scenario {
+        ServeScenario::Sweep => run_sweep(cfg),
+        ServeScenario::Chat { turns } => run_chat(cfg, turns),
+    }
+}
+
+/// The method × policy grid: one open-loop wave per combination against
+/// a live in-process server.
+fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
     if cfg.methods.is_empty() || cfg.policies.is_empty() {
         bail!("bench serve needs at least one --methods / --policies entry");
     }
@@ -173,12 +220,16 @@ pub fn run(cfg: &ServeBenchCfg) -> Result<()> {
         cfg.replicas.max(1),
         cfg.slots
     );
+    // prefix cache OFF: every wave replays the same seeded prompts, so a
+    // shared warm cache would hand later waves full-prompt hits and skew
+    // the cross-wave TTFT comparison the sweep table exists for
     let router = Arc::new(Router::start(
         &cfg.artifact_dir,
         cfg.replicas,
         cfg.slots,
         false,
         RouterPolicy::LeastLoaded,
+        CacheConfig::disabled(),
     )?);
     let handle = server::serve(router.clone(), "127.0.0.1:0")?;
     let addr = handle.addr.to_string();
@@ -318,6 +369,370 @@ fn drive_wave(
     row.tok_per_s = tokens_total as f64 / wall;
     row.req_per_s = row.ok as f64 / wall;
     Ok(row)
+}
+
+// ------------------------------------------------------- chat scenario ----
+
+/// Client-side record of one conversation turn.
+struct TurnProbe {
+    ok: bool,
+    /// send → first streamed delta, ms
+    ttft_ms: Option<f64>,
+    /// (last event − first delta) / (tokens − 1), ms
+    tpot_ms: Option<f64>,
+    tokens: usize,
+    prompt_tokens: usize,
+    /// `"cached_tokens"` echoed by the server (prefix-cache reuse)
+    cached_tokens: usize,
+    /// server-side wall prefill, seconds (echoed on the reply)
+    prefill_seconds: f64,
+    /// final text — the next turn's prompt extends it verbatim
+    text: String,
+}
+
+/// Send one streaming turn on a fresh connection and time its lifecycle.
+fn drive_turn(
+    addr: &str,
+    id: u64,
+    prompt: &str,
+    max_new: usize,
+    method: SpecMethod,
+    policy: VerifyPolicy,
+) -> Result<TurnProbe> {
+    let mut o = Value::obj();
+    o.set("id", Value::Num(id as f64));
+    o.set("prompt", Value::Str(prompt.to_string()));
+    o.set("method", Value::Str(method.label()));
+    o.set("policy", Value::Str(policy.label()));
+    o.set("stream", Value::Bool(true));
+    o.set("max_new", Value::Num(max_new as f64));
+    o.set("temperature", Value::Num(0.0)); // turns must be reproducible
+    o.set("seed", Value::Num((id % 1000) as f64));
+    let mut probe = TurnProbe {
+        ok: false,
+        ttft_ms: None,
+        tpot_ms: None,
+        tokens: 0,
+        prompt_tokens: crate::tokenizer::encode(prompt).len(),
+        cached_tokens: 0,
+        prefill_seconds: 0.0,
+        text: String::new(),
+    };
+    let sent = Instant::now();
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting {addr}"))?;
+    writeln!(stream, "{}", o.to_string_json())?;
+    let reader = BufReader::new(stream);
+    let mut first_delta: Option<Instant> = None;
+    let mut last_event: Option<Instant> = None;
+    for line in reader.lines() {
+        let line = line?;
+        let v = Value::parse(&line)
+            .map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+        let now = Instant::now();
+        let done = v.get("done").and_then(|b| b.as_bool()).unwrap_or(false);
+        if v.get("delta").is_some() && !done {
+            if first_delta.is_none() {
+                first_delta = Some(now);
+                probe.ttft_ms =
+                    Some(now.duration_since(sent).as_secs_f64() * 1e3);
+            }
+            last_event = Some(now);
+            continue;
+        }
+        // terminal reply
+        probe.ok = v.get("ok").and_then(|b| b.as_bool()) == Some(true);
+        probe.tokens =
+            v.get("tokens").and_then(|t| t.as_usize()).unwrap_or(0);
+        probe.cached_tokens = v
+            .get("cached_tokens")
+            .and_then(|t| t.as_usize())
+            .unwrap_or(0);
+        probe.prefill_seconds = v
+            .get("prefill_seconds")
+            .and_then(|t| t.as_f64())
+            .unwrap_or(0.0);
+        probe.text = v
+            .get("text")
+            .and_then(|t| t.as_str())
+            .unwrap_or("")
+            .to_string();
+        if let (Some(first), Some(last)) =
+            (first_delta, last_event.or(Some(now)))
+        {
+            if probe.tokens > 1 {
+                probe.tpot_ms = Some(
+                    last.duration_since(first).as_secs_f64() * 1e3
+                        / (probe.tokens - 1) as f64,
+                );
+            }
+        }
+        return Ok(probe);
+    }
+    bail!("connection closed before the terminal reply")
+}
+
+/// Per-wave (cache on/off) chat outcome.
+struct ChatRow {
+    label: String,
+    ok: usize,
+    err: usize,
+    ttft_ms: Summary,
+    tpot_ms: Summary,
+    /// follow-up turns only (turn >= 1): where prefix reuse can land
+    follow_prefill_ms: Summary,
+    follow_cached_tok: Summary,
+    follow_sim_units: Summary,
+    first_sim_units: Summary,
+    tok_per_s: f64,
+}
+
+/// The multi-turn chat scenario: the same conversation workload twice —
+/// prefix cache on, then off — under `prefix_affinity` routing, so the
+/// two rows isolate exactly what prefix reuse does to follow-up turns.
+fn run_chat(cfg: &ServeBenchCfg, turns: usize) -> Result<()> {
+    // the chat scenario isolates reuse, not the method x policy grid: it
+    // drives ONE method and ONE policy (the first of each sweep list) so
+    // the cache-on and cache-off rows differ in exactly one thing
+    let method = *cfg.methods.first().unwrap_or(&SpecMethod::default());
+    let policy = *cfg.policies.first().unwrap_or(&VerifyPolicy::Strict);
+    if cfg.methods.len() > 1 || cfg.policies.len() > 1 {
+        println!(
+            "note: --scenario chat runs a single method x policy \
+             combination; using {} / {}",
+            method.label(),
+            policy.label()
+        );
+    }
+    let on_mb = if cfg.cache_mb == 0 {
+        // the scenario's whole point is the on-vs-off comparison, so the
+        // on wave needs a budget — say so instead of silently overriding
+        // the flag's documented "0 disables" meaning
+        println!(
+            "note: --scenario chat always runs a cache-on wave; \
+             --cache-mb 0 replaced by the {} MB default",
+            crate::cache::DEFAULT_CACHE_MB
+        );
+        crate::cache::DEFAULT_CACHE_MB
+    } else {
+        cfg.cache_mb
+    };
+    // one clamp, shared by the workers and the rendered header: answers
+    // must stay short enough that a whole conversation fits P_MAX
+    let max_new = cfg.max_new.min(CHAT_MAX_NEW_CAP);
+    let waves = [
+        ("cache on", CacheConfig::with_mb(on_mb)),
+        ("cache off", CacheConfig::disabled()),
+    ];
+    let mut rows = Vec::new();
+    for (label, cache) in waves {
+        println!(
+            "starting {} replica(s) x {} slot(s) for chat wave '{label}' \
+             ({})...",
+            cfg.replicas.max(1),
+            cfg.slots,
+            cache.label()
+        );
+        let router = Arc::new(Router::start(
+            &cfg.artifact_dir,
+            cfg.replicas,
+            cfg.slots,
+            false,
+            RouterPolicy::PrefixAffinity,
+            cache,
+        )?);
+        let handle = server::serve(router.clone(), "127.0.0.1:0")?;
+        let addr = handle.addr.to_string();
+        let row =
+            drive_chat_wave(cfg, &addr, label, turns, max_new, method, policy)?;
+        println!(
+            "  {label}: {} ok / {} err turns, ttft p50 {:.0} ms, \
+             follow-up prefill {:.1} ms / {:.2} sim units, \
+             cached {:.1} tok/turn",
+            row.ok,
+            row.err,
+            row.ttft_ms.p50(),
+            row.follow_prefill_ms.mean(),
+            row.follow_sim_units.mean(),
+            row.follow_cached_tok.mean(),
+        );
+        eprintln!(
+            "  server metrics ({label}): {}",
+            router.metrics.snapshot_json().to_string_json()
+        );
+        rows.push(row);
+    }
+
+    let table = render_chat_table(cfg, turns, max_new, method, policy, &rows);
+    println!("{table}");
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = cfg.out_dir.join("serve.md");
+    std::fs::write(&path, &table)
+        .with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("[written {}]", path.display());
+    Ok(())
+}
+
+/// Drive one chat wave: conversations arrive open-loop (Poisson); inside
+/// a conversation the turns are closed-loop — turn t+1's prompt extends
+/// turn t's prompt + answer verbatim, like a real chat client.
+fn drive_chat_wave(
+    cfg: &ServeBenchCfg,
+    addr: &str,
+    label: &str,
+    turns: usize,
+    max_new: usize,
+    method: SpecMethod,
+    policy: VerifyPolicy,
+) -> Result<ChatRow> {
+    let convs = chat_conversations(cfg.n_requests, turns, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let wave_started = Instant::now();
+    let mut workers = Vec::new();
+    let mut start_delay = 0.0f64;
+    for (ci, conv) in convs.into_iter().enumerate() {
+        start_delay += exp_arrival_gap(&mut rng, cfg.rate_per_s);
+        let addr = addr.to_string();
+        let worker = std::thread::Builder::new()
+            .name(format!("mars-chat-{ci}"))
+            .spawn(move || -> Vec<Option<TurnProbe>> {
+                std::thread::sleep(Duration::from_secs_f64(start_delay));
+                let mut answers: Vec<String> = Vec::new();
+                let mut probes = Vec::new();
+                for t in 0..conv.turns.len() {
+                    let prompt = conv.prompt(t, &answers);
+                    let id = (ci as u64 + 1) * 1000 + t as u64;
+                    match drive_turn(&addr, id, &prompt, max_new, method, policy)
+                    {
+                        Ok(p) if p.ok => {
+                            answers.push(p.text.clone());
+                            probes.push(Some(p));
+                        }
+                        Ok(p) => {
+                            probes.push(Some(p));
+                            break; // lost turn: abandon the conversation
+                        }
+                        Err(_) => {
+                            probes.push(None);
+                            break;
+                        }
+                    }
+                }
+                probes
+            })?;
+        workers.push(worker);
+    }
+
+    let mut row = ChatRow {
+        label: label.to_string(),
+        ok: 0,
+        err: 0,
+        ttft_ms: Summary::new(),
+        tpot_ms: Summary::new(),
+        follow_prefill_ms: Summary::new(),
+        follow_cached_tok: Summary::new(),
+        follow_sim_units: Summary::new(),
+        first_sim_units: Summary::new(),
+        tok_per_s: 0.0,
+    };
+    let mut tokens_total = 0usize;
+    for w in workers {
+        let probes = w.join().unwrap_or_default();
+        for (t, p) in probes.into_iter().enumerate() {
+            let Some(p) = p else {
+                row.err += 1;
+                continue;
+            };
+            if !p.ok {
+                row.err += 1;
+                continue;
+            }
+            row.ok += 1;
+            tokens_total += p.tokens;
+            if let Some(ttft) = p.ttft_ms {
+                row.ttft_ms.push(ttft);
+            }
+            if let Some(tpot) = p.tpot_ms {
+                row.tpot_ms.push(tpot);
+            }
+            let uncached = p.prompt_tokens.saturating_sub(p.cached_tokens);
+            let sim = super::simclock::prefill_units(uncached);
+            if t == 0 {
+                row.first_sim_units.push(sim);
+            } else {
+                row.follow_prefill_ms.push(p.prefill_seconds * 1e3);
+                row.follow_cached_tok.push(p.cached_tokens as f64);
+                row.follow_sim_units.push(sim);
+            }
+        }
+    }
+    let wall = wave_started.elapsed().as_secs_f64().max(1e-9);
+    row.tok_per_s = tokens_total as f64 / wall;
+    Ok(row)
+}
+
+fn render_chat_table(
+    cfg: &ServeBenchCfg,
+    turns: usize,
+    max_new: usize,
+    method: SpecMethod,
+    policy: VerifyPolicy,
+    rows: &[ChatRow],
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "## Serve — multi-turn chat scenario: {} conversations x {turns} \
+         turns, {:.1} conv/s Poisson, max_new={max_new}, {} / {}, \
+         prefix_affinity routing\n",
+        cfg.n_requests,
+        cfg.rate_per_s,
+        method.label(),
+        policy.label()
+    );
+    let _ = writeln!(
+        out,
+        "| Cache | turns ok/err | TTFT p50 (ms) | TTFT p99 (ms) | \
+         TPOT p50 (ms) | first-turn prefill sim units | follow-up \
+         prefill ms | follow-up cached tok/turn | follow-up prefill sim \
+         units | tok/s |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {}/{} | {:.0} | {:.0} | {:.2} | {:.2} | {:.1} | \
+             {:.1} | {:.2} | {:.1} |",
+            r.label,
+            r.ok,
+            r.err,
+            r.ttft_ms.p50(),
+            r.ttft_ms.p99(),
+            r.tpot_ms.p50(),
+            r.first_sim_units.mean(),
+            r.follow_prefill_ms.mean(),
+            r.follow_cached_tok.mean(),
+            r.follow_sim_units.mean(),
+            r.tok_per_s
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\nEach turn's prompt extends the previous turn + answer \
+         byte-for-byte, so with the cache on, follow-up turns restore \
+         the shared prefix from the replica's snapshot store and prefill \
+         only the new turn (`cached tok/turn` > 0 and `prefill sim \
+         units` — simclock blocks of {} tokens per target forward — \
+         drop vs the cache-off row). First turns start cold unless an \
+         identical first-turn prompt already ran (the system/question \
+         pools are small on purpose). Wall-clock prefill ms on this \
+         substrate also carries the snapshot upload (~MB state vector), \
+         so the sim column is the paper-regime number; see \
+         BENCHMARKS.md.",
+        super::simclock::PREFILL_BLOCK_TOKENS
+    );
+    out
 }
 
 fn render_table(cfg: &ServeBenchCfg, rows: &[PolicyRow]) -> String {

@@ -20,6 +20,21 @@ use crate::engine::{GenResult, SpecMethod};
 /// Cost of one target forward (any block width ≤ K+1): the unit.
 pub const TARGET_FORWARD: f64 = 1.0;
 
+/// Tokens one prefill target forward chews through in the memory-bound
+/// regime — the same K+1 block width the decode model assumes (K = 7).
+pub const PREFILL_BLOCK_TOKENS: f64 = 8.0;
+
+/// Simulated prefill cost for `uncached_tokens` of prompt: chunked target
+/// forwards over the tokens that actually need prefilling, i.e. the
+/// prompt minus whatever the prefix cache restored (DESIGN.md §8). This
+/// is the simclock quantity the `chat` serve scenario compares cache-on
+/// vs cache-off by — wall-clock prefill on this substrate is dominated
+/// by per-call PJRT overhead, so the cost model is the honest lens for
+/// the paper-regime saving.
+pub fn prefill_units(uncached_tokens: usize) -> f64 {
+    (uncached_tokens as f64 / PREFILL_BLOCK_TOKENS).ceil() * TARGET_FORWARD
+}
+
 /// Per-draft-step cost as a fraction of a target forward (keyed by the
 /// descriptor's family; knob values don't change the per-step ratio).
 pub fn draft_step_cost(method: SpecMethod) -> f64 {
@@ -62,6 +77,7 @@ mod tests {
             text: String::new(),
             decode_seconds: 1.0,
             prefill_seconds: 0.0,
+            prefill_cached_tokens: 0,
             snapshot: Snapshot {
                 rounds,
                 draft_steps,
@@ -93,6 +109,18 @@ mod tests {
         let r = result(10, 10.0, 70.0);
         let u = simulated_units(SpecMethod::Sps { k: 7 }, &r);
         assert!(u > 1.0, "units {u}");
+    }
+
+    #[test]
+    fn prefill_units_scale_with_uncached_suffix() {
+        assert_eq!(prefill_units(0), 0.0);
+        assert_eq!(prefill_units(1), 1.0);
+        assert_eq!(prefill_units(8), 1.0);
+        assert_eq!(prefill_units(9), 2.0);
+        // a 120-token prompt with a 96-token cached prefix costs only
+        // the 24-token suffix: 3 blocks instead of 15
+        assert_eq!(prefill_units(120 - 96), 3.0);
+        assert_eq!(prefill_units(120), 15.0);
     }
 
     #[test]

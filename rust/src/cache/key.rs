@@ -1,0 +1,132 @@
+//! Prefix keying: an incremental chain hash over token prefixes.
+//!
+//! The cache key of a prefix `t[..l]` is the FNV-1a fold of its tokens in
+//! order, so every prefix length of a prompt hashes in one left-to-right
+//! pass ([`PrefixHasher`]) — the store probes all `l` candidate lengths of
+//! a lookup in O(|prompt|) total. A 64-bit hash is an index, not an
+//! identity: the store confirms every candidate by token equality before
+//! reuse (DESIGN.md §8), so a collision can cost a probe, never a wrong
+//! state restore.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one byte into an FNV-1a running hash.
+#[inline]
+fn fold_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// Extend a prefix hash by one token (little-endian byte fold), so
+/// `chain_hash(chain_hash(h, a), b)` is the hash of the prefix `.. a b`.
+#[inline]
+pub fn chain_hash(prev: u64, token: u32) -> u64 {
+    token
+        .to_le_bytes()
+        .iter()
+        .fold(prev, |h, &b| fold_byte(h, b))
+}
+
+/// Hash a full token prefix from the empty-prefix basis.
+pub fn prefix_hash(tokens: &[u32]) -> u64 {
+    tokens.iter().fold(FNV_OFFSET, |h, &t| chain_hash(h, t))
+}
+
+/// Incremental left-to-right prefix hasher: after `push(t_i)`, `hash()`
+/// equals `prefix_hash(&tokens[..=i])`.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixHasher {
+    h: u64,
+}
+
+impl PrefixHasher {
+    /// Start at the empty prefix.
+    pub fn new() -> PrefixHasher {
+        PrefixHasher { h: FNV_OFFSET }
+    }
+
+    /// Fold the next token of the prefix.
+    pub fn push(&mut self, token: u32) -> u64 {
+        self.h = chain_hash(self.h, token);
+        self.h
+    }
+
+    /// Hash of the prefix folded so far.
+    pub fn hash(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for PrefixHasher {
+    fn default() -> Self {
+        PrefixHasher::new()
+    }
+}
+
+/// Cap on the prompt-head bytes the `prefix_affinity` router policy
+/// hashes (guards against pathological single-line prompts).
+pub const AFFINITY_PREFIX_BYTES: usize = 48;
+
+/// Hash the routing head of a prompt for `RouterPolicy::PrefixAffinity`:
+/// the first line (through its `\n` — the system-prompt line every turn
+/// of a conversation repeats verbatim), capped at
+/// [`AFFINITY_PREFIX_BYTES`]. Every later turn of a conversation extends
+/// its first turn byte-for-byte, so all of them hash to the same replica
+/// — the one whose per-replica prefix cache holds that conversation's
+/// snapshots (DESIGN.md §8) — and conversations sharing a system prompt
+/// co-locate, concentrating the shared-prefix hits.
+pub fn affinity_hash(prompt: &str) -> u64 {
+    let bytes = prompt.as_bytes();
+    let line = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .map(|i| i + 1)
+        .unwrap_or(bytes.len());
+    bytes[..line.min(AFFINITY_PREFIX_BYTES)]
+        .iter()
+        .fold(FNV_OFFSET, |h, &b| fold_byte(h, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_matches_batch() {
+        let toks = [3u32, 0, 917, 42, 42, 7];
+        let mut hasher = PrefixHasher::new();
+        for l in 0..toks.len() {
+            assert_eq!(hasher.hash(), prefix_hash(&toks[..l]), "prefix {l}");
+            hasher.push(toks[l]);
+        }
+        assert_eq!(hasher.hash(), prefix_hash(&toks));
+    }
+
+    #[test]
+    fn order_and_length_sensitive() {
+        assert_ne!(prefix_hash(&[1, 2]), prefix_hash(&[2, 1]));
+        assert_ne!(prefix_hash(&[1, 2]), prefix_hash(&[1, 2, 0]));
+        assert_ne!(prefix_hash(&[]), prefix_hash(&[0]));
+    }
+
+    #[test]
+    fn affinity_follows_the_system_line() {
+        // all turns of one conversation repeat the system line verbatim,
+        // whatever their total length — they must hash identically
+        let turn1 = "Sys: be brief.\nU: capital of Zorland?\nB:";
+        let turn2 = "Sys: be brief.\nU: capital of Zorland?\nB: Mirefal\n\
+                     U: and of Quovia?\nB:";
+        assert_eq!(affinity_hash(turn1), affinity_hash(turn2));
+        // a different system prompt routes elsewhere
+        assert_ne!(
+            affinity_hash(turn1),
+            affinity_hash("Sys: verbose.\nU: capital of Zorland?\nB:")
+        );
+        // single-line prompts hash their capped head and stay stable
+        let long = "x".repeat(AFFINITY_PREFIX_BYTES + 20);
+        let longer = format!("{long}yyy");
+        assert_eq!(affinity_hash(&long), affinity_hash(&longer));
+    }
+}

@@ -1,0 +1,122 @@
+//! Prefix-reuse state cache — the fourth peer subsystem beside [`verify`],
+//! [`spec`] and the serving layers (DESIGN.md §8).
+//!
+//! The dominant production traffic shape — multi-turn chat over a shared
+//! system prompt — re-sends token prefixes that an earlier request on the
+//! same replica already prefilled. Because the whole decode state is one
+//! flat f32 vector (DESIGN.md §1.1), a snapshot is a buffer pull and a
+//! restore is a restamp + upload: the [`PrefixCache`] keeps those
+//! snapshots keyed by an incremental token chain hash
+//! ([`key::prefix_hash`]) with token-equality confirmation, LRU-evicted
+//! under a byte budget, and a new request prefills only the suffix past
+//! its longest cached prefix (`prefill_ext`; full-prompt hits skip
+//! prefill entirely and work on any artifact set).
+//!
+//! One configuration surface, matching the house one-codec-per-surface
+//! convention of §6/§7:
+//!
+//! | surface      | form                                                  |
+//! |--------------|-------------------------------------------------------|
+//! | CLI          | `--cache-mb 256` (0 disables) on `serve` / `bench serve` |
+//! | request JSON | `"cache": false` opts one request out of reuse        |
+//! | router       | `--route prefix` — [`key::affinity_hash`] pins a conversation to one replica |
+//! | metrics      | `"cache"` object: hit rate, tokens saved, bytes resident |
+//!
+//! Caches are **per replica** and single-threaded, like the `Runtime`
+//! they snapshot — PJRT handles are not `Send`, so replica-local reuse +
+//! prefix-affinity routing is the whole consistency story: there is no
+//! cross-replica invalidation to get wrong. Verification policies and
+//! drafting methods are orthogonal to reuse (the restamp re-encodes the
+//! request's own config slots), so the cache composes with every
+//! [`crate::verify::VerifyPolicy`] × [`crate::spec::SpecMethod`]
+//! combination; the correctness pin is cached-vs-cold token identity at
+//! T=0 (tests/integration.rs, tests/property.rs).
+//!
+//! [`verify`]: crate::verify
+//! [`spec`]: crate::spec
+
+#![warn(missing_docs)]
+
+pub mod key;
+pub mod store;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub use store::{CacheStats, PrefixCache};
+
+/// A replica-thread-local shared handle to its [`PrefixCache`]: every
+/// active [`crate::engine::SeqRunner`] of the replica borrows the one
+/// store at snapshot/restore points (`Rc`, not `Arc` — the cache never
+/// crosses the replica thread, exactly like the runtime it snapshots).
+pub type SharedPrefixCache = Rc<RefCell<PrefixCache>>;
+
+/// Default snapshot budget when `--cache-mb` is not given.
+pub const DEFAULT_CACHE_MB: usize = 256;
+
+/// Prefix-cache configuration carried from the CLI to each replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Master switch (individual requests can still opt out with the
+    /// wire field `"cache": false`).
+    pub enabled: bool,
+    /// Resident-snapshot budget per replica, in bytes.
+    pub budget_bytes: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig::with_mb(DEFAULT_CACHE_MB)
+    }
+}
+
+impl CacheConfig {
+    /// Enabled config with an `mb` megabyte budget; `0` disables (the
+    /// `--cache-mb 0` spelling of off).
+    pub fn with_mb(mb: usize) -> CacheConfig {
+        CacheConfig {
+            enabled: mb > 0,
+            budget_bytes: mb.saturating_mul(1 << 20),
+        }
+    }
+
+    /// The disabled config.
+    pub fn disabled() -> CacheConfig {
+        CacheConfig { enabled: false, budget_bytes: 0 }
+    }
+
+    /// Canonical label for bench rows and logs: `cache:256mb` / `cache:off`.
+    pub fn label(&self) -> String {
+        if self.enabled {
+            format!("cache:{}mb", self.budget_bytes >> 20)
+        } else {
+            "cache:off".to_string()
+        }
+    }
+
+    /// Build the per-replica store (`None` when disabled).
+    pub fn build(&self) -> Option<SharedPrefixCache> {
+        self.enabled.then(|| {
+            Rc::new(RefCell::new(PrefixCache::new(self.budget_bytes)))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_mb_and_labels() {
+        let on = CacheConfig::with_mb(64);
+        assert!(on.enabled);
+        assert_eq!(on.budget_bytes, 64 << 20);
+        assert_eq!(on.label(), "cache:64mb");
+        let off = CacheConfig::with_mb(0);
+        assert!(!off.enabled);
+        assert_eq!(off.label(), "cache:off");
+        assert!(CacheConfig::disabled().build().is_none());
+        assert!(on.build().is_some());
+        assert_eq!(CacheConfig::default(), CacheConfig::with_mb(256));
+    }
+}

@@ -1,0 +1,354 @@
+//! The per-replica prefix-cache store: chain-hash keyed state snapshots,
+//! token-equality confirmed, LRU-evicted under a byte budget.
+//!
+//! Entries are full flat-state snapshots (DESIGN.md §1.1 — single-buffer
+//! state makes snapshot/restore a buffer copy plus the `pos` scalar), so
+//! resident bytes are dominated by `state_len * 4` per entry and the
+//! budget is the knob that matters (`--cache-mb`). Lookup probes every
+//! prefix length of the prompt through the incremental chain hash and
+//! returns the *longest* token-confirmed hit; a hash collision can cost a
+//! probe, never a wrong restore.
+
+use std::collections::HashMap;
+
+use super::key::PrefixHasher;
+
+/// One cached snapshot: the exact token prefix it encodes plus the flat
+/// device state pulled after that prefix was prefilled/committed.
+struct CacheEntry {
+    tokens: Vec<u32>,
+    state: Vec<f32>,
+    /// LRU clock value of the last insert/hit touching this entry.
+    last_used: u64,
+}
+
+impl CacheEntry {
+    fn bytes(&self) -> usize {
+        self.state.len() * 4 + self.tokens.len() * 4
+    }
+}
+
+/// Monotonic counters the store keeps about itself; published per replica
+/// into the serving metrics (`coordinator::metrics` `"cache"` object) and
+/// printed by `mars bench serve --scenario chat`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that returned a reusable prefix.
+    pub hits: u64,
+    /// Lookups that found nothing usable.
+    pub misses: u64,
+    /// Snapshots stored (refreshing an identical prefix counts).
+    pub insertions: u64,
+    /// Entries dropped by LRU eviction or budget rejection.
+    pub evictions: u64,
+    /// Prompt tokens served from cache instead of prefilled.
+    pub tokens_saved: u64,
+    /// Bytes currently resident (gauge, not monotonic).
+    pub bytes_resident: u64,
+    /// Entries currently resident (gauge, not monotonic).
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0 when none happened yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Prefix-reuse state cache for one engine replica (single-threaded by
+/// construction, like the `Runtime` it snapshots — PJRT handles are not
+/// `Send`, so neither are the replicas' caches shared).
+pub struct PrefixCache {
+    /// chain hash → entries whose token prefix folds to that hash
+    /// (a bucket, because a 64-bit hash is an index, not an identity)
+    buckets: HashMap<u64, Vec<CacheEntry>>,
+    budget_bytes: usize,
+    bytes_resident: usize,
+    /// LRU clock: bumped on every insert and confirmed hit.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    tokens_saved: u64,
+}
+
+impl PrefixCache {
+    /// Empty cache with `budget_bytes` of snapshot capacity.
+    pub fn new(budget_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            buckets: HashMap::new(),
+            budget_bytes,
+            bytes_resident: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            tokens_saved: 0,
+        }
+    }
+
+    /// Bytes currently resident (always <= the budget).
+    pub fn bytes_resident(&self) -> usize {
+        self.bytes_resident
+    }
+
+    /// Entries currently resident.
+    pub fn entries(&self) -> usize {
+        self.buckets.values().map(|b| b.len()).sum()
+    }
+
+    /// Counter/gauge snapshot for the metrics registry.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            tokens_saved: self.tokens_saved,
+            bytes_resident: self.bytes_resident as u64,
+            entries: self.entries() as u64,
+        }
+    }
+
+    /// Store (or refresh) the snapshot of a token prefix. A snapshot too
+    /// large for the whole budget is rejected rather than evicting
+    /// everything for an entry that could never stay.
+    pub fn insert(&mut self, tokens: &[u32], state: Vec<f32>) {
+        if tokens.is_empty() {
+            return;
+        }
+        self.insert_at(super::key::prefix_hash(tokens), tokens, state);
+    }
+
+    /// [`PrefixCache::insert`] with the bucket hash supplied by the
+    /// caller — the seam the collision tests force mismatched buckets
+    /// through; production code always derives it from `tokens`.
+    fn insert_at(&mut self, hash: u64, tokens: &[u32], state: Vec<f32>) {
+        self.tick += 1;
+        let entry = CacheEntry {
+            tokens: tokens.to_vec(),
+            state,
+            last_used: self.tick,
+        };
+        let bytes = entry.bytes();
+        if bytes > self.budget_bytes {
+            self.evictions += 1;
+            return;
+        }
+        let bucket = self.buckets.entry(hash).or_default();
+        if let Some(old) = bucket.iter_mut().find(|e| e.tokens == tokens) {
+            self.bytes_resident -= old.bytes();
+            *old = entry;
+        } else {
+            bucket.push(entry);
+        }
+        self.bytes_resident += bytes;
+        self.insertions += 1;
+        self.evict_to_budget();
+    }
+
+    /// Longest token-confirmed cached prefix of `prompt`, or `None`.
+    /// Returns the matched length and a copy of the snapshot (the caller
+    /// restamps and uploads it; the resident copy stays intact).
+    /// `full_only` restricts the search to an exact whole-prompt hit —
+    /// what the engine asks for when the artifact set lacks the
+    /// `prefill_ext` suffix program.
+    pub fn lookup(
+        &mut self,
+        prompt: &[u32],
+        full_only: bool,
+    ) -> Option<(usize, Vec<f32>)> {
+        let mut hasher = PrefixHasher::new();
+        let mut best: Option<(usize, u64)> = None;
+        for (i, &t) in prompt.iter().enumerate() {
+            let h = hasher.push(t);
+            let l = i + 1;
+            if full_only && l != prompt.len() {
+                continue;
+            }
+            let confirmed = self
+                .buckets
+                .get(&h)
+                .is_some_and(|b| b.iter().any(|e| e.tokens == prompt[..l]));
+            if confirmed {
+                best = Some((l, h));
+            }
+        }
+        let (l, h) = best?;
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self
+            .buckets
+            .get_mut(&h)
+            .and_then(|b| b.iter_mut().find(|e| e.tokens == prompt[..l]))
+            .expect("confirmed entry vanished");
+        entry.last_used = tick;
+        self.hits += 1;
+        self.tokens_saved += l as u64;
+        Some((l, entry.state.clone()))
+    }
+
+    /// Record a lookup that was never attempted as a miss (keeps hit-rate
+    /// honest when the caller bails before probing, e.g. empty prompts).
+    pub fn note_miss(&mut self) {
+        self.misses += 1;
+    }
+
+    /// Rescind the accounting of a hit whose restore then failed (the
+    /// engine fell back to a cold prefill): the hit becomes a miss and
+    /// its `tokens_saved` are taken back, so the published hit rate and
+    /// savings only ever describe reuse that actually happened.
+    pub fn rescind_hit(&mut self, tokens_saved: usize) {
+        self.hits = self.hits.saturating_sub(1);
+        self.misses += 1;
+        self.tokens_saved =
+            self.tokens_saved.saturating_sub(tokens_saved as u64);
+    }
+
+    /// Evict least-recently-used entries until resident bytes fit the
+    /// budget again.
+    fn evict_to_budget(&mut self) {
+        while self.bytes_resident > self.budget_bytes {
+            let Some((&hash, idx)) = self
+                .buckets
+                .iter()
+                .flat_map(|(h, b)| {
+                    b.iter().enumerate().map(move |(i, e)| ((h, i), e))
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|((h, i), _)| (h, i))
+            else {
+                return;
+            };
+            let bucket = self.buckets.get_mut(&hash).expect("bucket");
+            let victim = bucket.remove(idx);
+            self.bytes_resident -= victim.bytes();
+            self.evictions += 1;
+            if bucket.is_empty() {
+                self.buckets.remove(&hash);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(len: usize, fill: f32) -> Vec<f32> {
+        vec![fill; len]
+    }
+
+    #[test]
+    fn lookup_returns_longest_confirmed_prefix() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.insert(&[1, 2], state(8, 0.2));
+        c.insert(&[1, 2, 3, 4], state(8, 0.4));
+        c.insert(&[9, 9], state(8, 0.9));
+        let (l, s) = c.lookup(&[1, 2, 3, 4, 5, 6], false).expect("hit");
+        assert_eq!(l, 4);
+        assert_eq!(s, state(8, 0.4));
+        let (l, s) = c.lookup(&[1, 2, 7], false).expect("short hit");
+        assert_eq!(l, 2);
+        assert_eq!(s, state(8, 0.2));
+        assert!(c.lookup(&[2, 1], false).is_none());
+        assert_eq!(c.stats().hits, 2);
+        assert_eq!(c.stats().tokens_saved, 6);
+    }
+
+    #[test]
+    fn full_only_rejects_partial_hits() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.insert(&[1, 2], state(4, 0.5));
+        assert!(c.lookup(&[1, 2, 3], true).is_none());
+        assert_eq!(c.lookup(&[1, 2], true).map(|(l, _)| l), Some(2));
+    }
+
+    #[test]
+    fn hash_collision_prefix_is_not_reused() {
+        let mut c = PrefixCache::new(1 << 20);
+        // force tokens [7, 8] into the bucket that [1, 2, 3]'s prefix
+        // hash resolves to — exactly the wrong-restore a collision would
+        // cause if lookup trusted the hash alone
+        let collide = super::super::key::prefix_hash(&[1, 2, 3]);
+        c.insert_at(collide, &[7, 8], state(4, 0.7));
+        assert!(
+            c.lookup(&[1, 2, 3], false).is_none(),
+            "colliding bucket must fail token-equality confirmation"
+        );
+        // the honest owner of those tokens still hits
+        assert!(c.lookup(&[7, 8], false).is_some());
+    }
+
+    #[test]
+    fn lru_never_exceeds_budget_and_evicts_oldest() {
+        // each entry: 64*4 state + 1*4 token = 260 bytes; budget fits 2
+        let mut c = PrefixCache::new(600);
+        c.insert(&[1], state(64, 0.1));
+        c.insert(&[2], state(64, 0.2));
+        assert!(c.bytes_resident() <= 600);
+        assert_eq!(c.entries(), 2);
+        // touch [1] so [2] becomes the LRU victim
+        assert!(c.lookup(&[1], false).is_some());
+        c.insert(&[3], state(64, 0.3));
+        assert!(c.bytes_resident() <= 600);
+        assert_eq!(c.entries(), 2);
+        assert!(c.lookup(&[2], false).is_none(), "LRU entry survived");
+        assert!(c.lookup(&[1], false).is_some());
+        assert!(c.lookup(&[3], false).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_snapshot_is_rejected_not_destructive() {
+        let mut c = PrefixCache::new(100);
+        c.insert(&[1], state(8, 0.1)); // 36 bytes, fits
+        c.insert(&[2, 3], state(1024, 0.9)); // alone exceeds the budget
+        assert!(c.bytes_resident() <= 100);
+        assert!(c.lookup(&[1], false).is_some(), "resident entry evicted");
+        assert!(c.lookup(&[2, 3], false).is_none());
+    }
+
+    #[test]
+    fn refresh_replaces_in_place() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.insert(&[5, 6], state(8, 0.1));
+        c.insert(&[5, 6], state(8, 0.7));
+        assert_eq!(c.entries(), 1);
+        let (_, s) = c.lookup(&[5, 6], false).expect("hit");
+        assert_eq!(s, state(8, 0.7));
+    }
+
+    #[test]
+    fn rescinded_hit_counts_as_a_miss() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.insert(&[1, 2, 3], state(8, 0.3));
+        let (l, _) = c.lookup(&[1, 2, 3, 4], false).expect("hit");
+        assert_eq!((c.stats().hits, c.stats().tokens_saved), (1, 3));
+        c.rescind_hit(l);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.tokens_saved), (0, 1, 0));
+        assert!(s.hit_rate() < 1e-9);
+    }
+
+    #[test]
+    fn stats_gauges_track_residency() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert_eq!(c.stats(), CacheStats::default());
+        c.insert(&[1, 2], state(16, 0.0));
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes_resident, 16 * 4 + 2 * 4);
+        c.note_miss();
+        assert_eq!(c.stats().misses, 1);
+        assert!(c.stats().hit_rate() < 1e-9);
+    }
+}

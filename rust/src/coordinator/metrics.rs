@@ -7,13 +7,16 @@
 //! verification-policy family so a mixed-policy workload exposes the
 //! per-rule τ / relaxation picture, and per speculative-method family
 //! (`SpecMethod::name`) so a mixed-method workload exposes the per-
-//! drafter τ / TTFT picture. `mars bench serve` reports the same
+//! drafter τ / TTFT picture, and per-replica prefix-cache gauges
+//! (hits/misses/tokens-saved/bytes-resident — DESIGN.md §8) summed into
+//! one `"cache"` object. `mars bench serve` reports the same
 //! quantities measured client-side (see BENCHMARKS.md).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::cache::CacheStats;
 use crate::util::json::Value;
 use crate::util::stats::{LogHistogram, Summary};
 
@@ -51,6 +54,9 @@ struct Inner {
     relaxed: Summary,
     by_policy: BTreeMap<&'static str, PolicyAgg>,
     by_method: BTreeMap<&'static str, MethodAgg>,
+    /// Latest prefix-cache stats per replica (each replica owns its own
+    /// store — DESIGN.md §8 — and republishes after every admission).
+    cache_by_replica: BTreeMap<usize, CacheStats>,
 }
 
 /// Shared serving-metrics registry (one per router, shared by replicas).
@@ -137,6 +143,16 @@ impl MetricsRegistry {
         }
     }
 
+    /// Publish one replica's prefix-cache stats (the replica re-sends its
+    /// whole [`CacheStats`] gauge set; the registry keeps the latest per
+    /// replica and sums across replicas in [`snapshot_json`]).
+    ///
+    /// [`snapshot_json`]: MetricsRegistry::snapshot_json
+    pub fn record_cache(&self, replica: usize, stats: CacheStats) {
+        let mut g = self.inner.lock().unwrap();
+        g.cache_by_replica.insert(replica, stats);
+    }
+
     /// Aggregate snapshot as JSON (served by the `metrics` RPC and printed
     /// by `mars serve` on shutdown).
     pub fn snapshot_json(&self) -> Value {
@@ -195,6 +211,26 @@ impl MetricsRegistry {
             met.set(name, m);
         }
         o.set("method", met);
+        let mut agg = CacheStats::default();
+        for s in g.cache_by_replica.values() {
+            agg.hits += s.hits;
+            agg.misses += s.misses;
+            agg.insertions += s.insertions;
+            agg.evictions += s.evictions;
+            agg.tokens_saved += s.tokens_saved;
+            agg.bytes_resident += s.bytes_resident;
+            agg.entries += s.entries;
+        }
+        let mut cache = Value::obj();
+        cache.set("hits", Value::Num(agg.hits as f64));
+        cache.set("misses", Value::Num(agg.misses as f64));
+        cache.set("hit_rate", Value::Num(agg.hit_rate()));
+        cache.set("tokens_saved", Value::Num(agg.tokens_saved as f64));
+        cache.set("insertions", Value::Num(agg.insertions as f64));
+        cache.set("evictions", Value::Num(agg.evictions as f64));
+        cache.set("bytes_resident", Value::Num(agg.bytes_resident as f64));
+        cache.set("entries", Value::Num(agg.entries as f64));
+        o.set("cache", cache);
         o
     }
 
@@ -295,6 +331,32 @@ mod tests {
             pol.path(&["strict", "relaxed_mean"]).unwrap().as_f64(),
             Some(0.0)
         );
+    }
+
+    #[test]
+    fn cache_gauges_sum_across_replicas() {
+        let r = MetricsRegistry::new();
+        let one = CacheStats {
+            hits: 3,
+            misses: 1,
+            insertions: 4,
+            evictions: 0,
+            tokens_saved: 120,
+            bytes_resident: 1000,
+            entries: 4,
+        };
+        r.record_cache(0, one);
+        r.record_cache(1, CacheStats { hits: 1, misses: 3, ..one });
+        // a replica republishing replaces its previous gauge set
+        r.record_cache(0, one);
+        let v = r.snapshot_json();
+        let c = v.get("cache").unwrap();
+        assert_eq!(c.get("hits").unwrap().as_usize(), Some(4));
+        assert_eq!(c.get("misses").unwrap().as_usize(), Some(4));
+        assert_eq!(c.get("tokens_saved").unwrap().as_usize(), Some(240));
+        assert_eq!(c.get("bytes_resident").unwrap().as_usize(), Some(2000));
+        let rate = c.get("hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.5).abs() < 1e-9, "{rate}");
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cache::{CacheConfig, SharedPrefixCache};
 use crate::coordinator::metrics::{MetricsRegistry, RequestMetrics};
 use crate::coordinator::request::{Response, StreamDelta, WorkItem};
 use crate::engine::SeqRunner;
@@ -27,7 +28,10 @@ pub struct EngineReplica {
     shutdown: Arc<AtomicBool>,
     /// Gauge of currently active (admitted, undone) sequences.
     pub active: Arc<AtomicUsize>,
-    /// Best-effort count of submitted-but-not-admitted items.
+    /// Submitted-but-not-admitted items: incremented by the router at
+    /// submit, decremented by this replica's admission ack (after the
+    /// item lands in an active slot or errors out), so `load()` counts
+    /// queued backlog exactly instead of "best effort".
     pub queued_hint: Arc<AtomicUsize>,
 }
 
@@ -39,6 +43,10 @@ pub struct ReplicaConfig {
     pub slots: usize,
     /// Force the naive host-roundtrip runtime (§Perf baseline).
     pub hostloop: bool,
+    /// Prefix-cache configuration: the store is built *inside* the
+    /// replica thread and never leaves it, like the runtime it snapshots
+    /// (DESIGN.md §8).
+    pub cache: CacheConfig,
 }
 
 impl EngineReplica {
@@ -56,6 +64,7 @@ impl EngineReplica {
         let queued_hint = Arc::new(AtomicUsize::new(0));
         let sd = shutdown.clone();
         let act = active.clone();
+        let queued = queued_hint.clone();
         let handle = std::thread::Builder::new()
             .name(format!("mars-replica-{id}"))
             .spawn(move || {
@@ -69,7 +78,12 @@ impl EngineReplica {
                         return;
                     }
                 };
-                replica_loop(&rt, &cfg, &work, &metrics, &sd, &act);
+                let ctl = LoopCtl {
+                    shutdown: &sd,
+                    active: &act,
+                    queued: &queued,
+                };
+                replica_loop(id, &rt, &cfg, &work, &metrics, &ctl);
             })
             .expect("spawn replica thread");
         EngineReplica {
@@ -113,18 +127,33 @@ struct Active<'rt> {
     ttft_seconds: Option<f64>,
 }
 
+/// Shutdown flag + load gauges shared with the [`EngineReplica`] handle.
+struct LoopCtl<'a> {
+    shutdown: &'a AtomicBool,
+    active: &'a AtomicUsize,
+    /// submitted-but-not-admitted items (see [`EngineReplica::queued_hint`])
+    queued: &'a AtomicUsize,
+}
+
 fn replica_loop(
+    id: usize,
     rt: &Runtime,
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
     metrics: &MetricsRegistry,
-    shutdown: &AtomicBool,
-    active_gauge: &AtomicUsize,
+    ctl: &LoopCtl<'_>,
 ) {
     let mut active: Vec<Active<'_>> = Vec::new();
     let slots = cfg.slots.max(1);
+    // the prefix cache lives and dies on this thread, like the runtime
+    let cache: Option<SharedPrefixCache> = cfg.cache.build();
+    let publish_cache = |cache: &Option<SharedPrefixCache>| {
+        if let Some(c) = cache {
+            metrics.record_cache(id, c.borrow().stats());
+        }
+    };
     loop {
-        if shutdown.load(Ordering::Relaxed) && active.is_empty() {
+        if ctl.shutdown.load(Ordering::Relaxed) && active.is_empty() {
             return;
         }
         // ---- admission: fill free slots -------------------------------
@@ -149,8 +178,19 @@ fn replica_loop(
             let queue_seconds =
                 Instant::now().duration_since(item.submitted_at).as_secs_f64();
             let toks = crate::tokenizer::encode(&item.request.prompt);
-            match SeqRunner::new(rt, &toks, &item.request.params, cfg.hostloop)
-            {
+            let req_cache = if item.request.params.cache {
+                cache.clone()
+            } else {
+                None
+            };
+            let admitted = SeqRunner::new_with_cache(
+                rt,
+                &toks,
+                &item.request.params,
+                cfg.hostloop,
+                req_cache,
+            );
+            match admitted {
                 Ok(mut runner) => {
                     // thread the per-round commit callback: decode only
                     // the newly committed tail (the byte-level tokenizer
@@ -184,7 +224,7 @@ fn replica_loop(
                         queue_seconds,
                         ttft_seconds: None,
                     });
-                    active_gauge.store(active.len(), Ordering::Relaxed);
+                    ctl.active.store(active.len(), Ordering::Relaxed);
                 }
                 Err(e) => {
                     let resp = Response::from_error(
@@ -206,6 +246,11 @@ fn replica_loop(
                     let _ = item.reply.send(resp);
                 }
             }
+            // admission ack: only now does the item stop counting as
+            // queued — the active gauge (or the error reply) already
+            // reflects it, so `load()` never dips mid-admission
+            ctl.queued.fetch_sub(1, Ordering::Relaxed);
+            publish_cache(&cache);
         }
         if active.is_empty() {
             continue;
@@ -279,7 +324,10 @@ fn replica_loop(
             };
             if done {
                 active.swap_remove(i);
-                active_gauge.store(active.len(), Ordering::Relaxed);
+                ctl.active.store(active.len(), Ordering::Relaxed);
+                // finalize exported a fresh context snapshot — publish
+                // the new residency/hit gauges
+                publish_cache(&cache);
             } else {
                 i += 1;
             }

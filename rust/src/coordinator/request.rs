@@ -80,6 +80,9 @@ pub struct Response {
     /// The request was canceled mid-generation (`{"cmd": "cancel"}`);
     /// `text` holds whatever had committed by then.
     pub canceled: bool,
+    /// Prompt tokens restored from the replica's prefix cache instead of
+    /// prefilled (wire field `"cached_tokens"`, emitted when > 0).
+    pub cached_tokens: usize,
 }
 
 /// One incremental streaming event: the text committed since the previous
@@ -133,6 +136,7 @@ impl Response {
             policy: params.policy.label(),
             method: params.method.label(),
             canceled: false,
+            cached_tokens: r.prefill_cached_tokens,
         }
     }
 
@@ -151,6 +155,7 @@ impl Response {
             policy: String::new(),
             method: String::new(),
             canceled: false,
+            cached_tokens: 0,
         }
     }
 
@@ -176,6 +181,9 @@ impl Response {
         }
         if self.canceled {
             o.set("canceled", Value::Bool(true));
+        }
+        if self.cached_tokens > 0 {
+            o.set("cached_tokens", Value::Num(self.cached_tokens as f64));
         }
         o
     }
@@ -214,6 +222,10 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
         None => false,
         Some(x) => x.as_bool().ok_or("'stream' must be a boolean")?,
     };
+    let cache = match v.get("cache") {
+        None => true,
+        Some(x) => x.as_bool().ok_or("'cache' must be a boolean")?,
+    };
     // the policy is clamped to device-executable form so the echoed
     // label and the per-policy metrics describe the rule that actually ran
     let mut params = GenParams {
@@ -231,6 +243,7 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     if let Some(x) = fget("seed") {
         params.seed = x as u64;
     }
+    params.cache = cache;
     Ok(Request { id, prompt, params, stream })
 }
 
@@ -384,6 +397,7 @@ mod tests {
             policy: "mars:0.9".into(),
             method: "eagle_tree:k=7,beam=2,branch=2".into(),
             canceled: false,
+            cached_tokens: 0,
         };
         let v = resp.to_json();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
@@ -401,6 +415,24 @@ mod tests {
             c.to_json().get("canceled").and_then(|b| b.as_bool()),
             Some(true)
         );
+        // "cached_tokens" only appears when the prefix cache served rows
+        assert!(v.get("cached_tokens").is_none());
+        let mut w = resp.clone();
+        w.cached_tokens = 12;
+        assert_eq!(
+            w.to_json().get("cached_tokens").and_then(|t| t.as_usize()),
+            Some(12)
+        );
+    }
+
+    #[test]
+    fn parses_cache_opt_out() {
+        let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert!(parse_request_json(1, &v).unwrap().params.cache);
+        let v = Value::parse(r#"{"prompt": "hi", "cache": false}"#).unwrap();
+        assert!(!parse_request_json(1, &v).unwrap().params.cache);
+        let v = Value::parse(r#"{"prompt": "hi", "cache": 1}"#).unwrap();
+        assert!(parse_request_json(1, &v).is_err());
     }
 
     #[test]

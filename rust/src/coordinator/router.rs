@@ -1,9 +1,14 @@
 //! Router: fronts N engine replicas and assigns requests by policy.
-//! The vLLM-router analog (DESIGN.md §5): round-robin or least-loaded.
-//! Submission is non-blocking ([`Router::submit_opts`]) and returns a
-//! [`SubmitHandle`] carrying the reply channel and the cooperative cancel
-//! flag; streaming requests additionally thread a per-round delta sink
-//! down to the replica's decode loop.
+//! The vLLM-router analog (DESIGN.md §5): round-robin, least-loaded, or
+//! prefix-affinity (hash the prompt head to the replica whose prefix
+//! cache holds that conversation's snapshots — caches are per-replica
+//! because PJRT handles are not `Send`; DESIGN.md §8). Submission is
+//! non-blocking ([`Router::submit_opts`]) and returns a [`SubmitHandle`]
+//! carrying the reply channel and the cooperative cancel flag; streaming
+//! requests additionally thread a per-round delta sink down to the
+//! replica's decode loop. Load accounting is exact: `queued_hint` is
+//! incremented at submit and decremented by the replica's admission ack,
+//! so `LeastLoaded` sees queued backlog, not just active slots.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -19,22 +24,54 @@ use crate::coordinator::request::{
 };
 use crate::engine::GenParams;
 
-/// Replica-assignment policy (`--route rr|ll`).
+/// Replica-assignment policy (`--route rr|ll|prefix`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RouterPolicy {
     /// Strict rotation across replicas.
     RoundRobin,
     /// Pick the replica with the fewest active + queued sequences.
     LeastLoaded,
+    /// Hash the prompt head ([`crate::cache::key::affinity_hash`]) so
+    /// every turn of one conversation lands on the replica whose prefix
+    /// cache already holds its snapshots.
+    PrefixAffinity,
 }
 
 impl RouterPolicy {
-    /// Parse the CLI form (`rr`/`round_robin`, `ll`/`least_loaded`).
+    /// Parse the CLI form (`rr`/`round_robin`, `ll`/`least_loaded`,
+    /// `prefix`/`prefix_affinity`/`pa`).
     pub fn parse(s: &str) -> Option<RouterPolicy> {
         match s {
             "rr" | "round_robin" | "round-robin" => Some(RouterPolicy::RoundRobin),
             "ll" | "least_loaded" | "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            "prefix" | "prefix_affinity" | "prefix-affinity" | "pa" => {
+                Some(RouterPolicy::PrefixAffinity)
+            }
             _ => None,
+        }
+    }
+}
+
+/// Pure replica-choice rule — unit-testable without live replicas.
+/// `loads` are active + queued counts per replica, `rr` the round-robin
+/// ticket, `prompt` the request text (only `PrefixAffinity` reads it).
+pub fn pick_replica(
+    policy: RouterPolicy,
+    loads: &[usize],
+    rr: usize,
+    prompt: &str,
+) -> usize {
+    let n = loads.len().max(1);
+    match policy {
+        RouterPolicy::RoundRobin => rr % n,
+        RouterPolicy::LeastLoaded => loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+        RouterPolicy::PrefixAffinity => {
+            (crate::cache::key::affinity_hash(prompt) % n as u64) as usize
         }
     }
 }
@@ -80,6 +117,7 @@ impl Router {
         slots: usize,
         hostloop: bool,
         policy: RouterPolicy,
+        cache: crate::cache::CacheConfig,
     ) -> Result<Router> {
         let metrics = Arc::new(MetricsRegistry::new());
         let mut replicas = Vec::new();
@@ -94,6 +132,7 @@ impl Router {
                     artifact_dir: artifact_dir.to_path_buf(),
                     slots,
                     hostloop,
+                    cache,
                 },
                 rx,
                 metrics.clone(),
@@ -131,20 +170,19 @@ impl Router {
         self.replicas.iter().map(|r| r.load()).sum()
     }
 
-    fn pick(&self) -> usize {
-        match self.policy {
-            RouterPolicy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed)
-                    % self.replicas.len()
-            }
-            RouterPolicy::LeastLoaded => self
-                .replicas
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, r)| r.load())
-                .map(|(i, _)| i)
-                .unwrap_or(0),
-        }
+    /// Per-replica active + queued load (exact: queued items stay
+    /// counted until the replica's admission ack).
+    pub fn loads(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.load()).collect()
+    }
+
+    fn pick(&self, prompt: &str) -> usize {
+        pick_replica(
+            self.policy,
+            &self.loads(),
+            self.rr_next.fetch_add(1, Ordering::Relaxed),
+            prompt,
+        )
     }
 
     /// Submit a request without blocking the caller: the reply channel,
@@ -161,7 +199,7 @@ impl Router {
             .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
-        let idx = self.pick();
+        let idx = self.pick(prompt);
         self.replicas[idx]
             .queued_hint
             .fetch_add(1, Ordering::Relaxed);
@@ -177,15 +215,18 @@ impl Router {
             stream: opts.stream,
             cancel: cancel.clone(),
         };
-        // hint is decremented on admission approximation: the replica only
-        // tracks active slots, so decrement when the send succeeds — the
-        // queue-depth signal is best-effort by design.
+        // the hint stays up until the replica's admission ack (it
+        // decrements after moving the item into an active slot, or after
+        // replying with a prefill error), so least-loaded routing sees
+        // queued backlog exactly — a burst spreads instead of piling onto
+        // the first replica whose gauges had not caught up yet
         if self.senders[idx].send(item).is_err() {
-            // replica gone: nothing else to do; receiver will hang up
+            // replica gone: the receiver hung up and will never ack —
+            // undo the hint so the dead replica doesn't look loaded
+            self.replicas[idx]
+                .queued_hint
+                .fetch_sub(1, Ordering::Relaxed);
         }
-        self.replicas[idx]
-            .queued_hint
-            .fetch_sub(1, Ordering::Relaxed);
         SubmitHandle { rx, cancel, id }
     }
 
@@ -232,5 +273,76 @@ impl Router {
         for r in &mut self.replicas {
             r.stop();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_picks_the_min_under_skew() {
+        // the queued_hint regression shape: replica 0 has a backlog that
+        // only exact accounting exposes — the pick must not tie-break to 0
+        assert_eq!(
+            pick_replica(RouterPolicy::LeastLoaded, &[5, 0], 0, ""),
+            1
+        );
+        assert_eq!(
+            pick_replica(RouterPolicy::LeastLoaded, &[3, 2, 7, 1], 0, ""),
+            3
+        );
+        // ties go to the first minimum (stable)
+        assert_eq!(
+            pick_replica(RouterPolicy::LeastLoaded, &[2, 2, 2], 9, ""),
+            0
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        for rr in 0..6 {
+            assert_eq!(
+                pick_replica(RouterPolicy::RoundRobin, &[0, 0, 0], rr, ""),
+                rr % 3
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_affinity_pins_conversations() {
+        let loads = [0usize; 4];
+        let turn1 = "Sys: be brief.\nU: capital of Zorland?\nB:";
+        let turn2 = "Sys: be brief.\nU: capital of Zorland?\nB: Mirefal\n\
+                     U: and of Quovia?\nB:";
+        let a = pick_replica(RouterPolicy::PrefixAffinity, &loads, 0, turn1);
+        let b = pick_replica(RouterPolicy::PrefixAffinity, &loads, 7, turn2);
+        assert_eq!(a, b, "later turns must follow their conversation");
+        assert!(a < 4);
+        // load skew must not move an affinity pick
+        let c = pick_replica(
+            RouterPolicy::PrefixAffinity,
+            &[9, 9, 9, 9],
+            0,
+            turn1,
+        );
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn route_grammar_parses() {
+        assert_eq!(RouterPolicy::parse("rr"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(
+            RouterPolicy::parse("ll"),
+            Some(RouterPolicy::LeastLoaded)
+        );
+        for s in ["prefix", "prefix_affinity", "prefix-affinity", "pa"] {
+            assert_eq!(
+                RouterPolicy::parse(s),
+                Some(RouterPolicy::PrefixAffinity),
+                "{s}"
+            );
+        }
+        assert_eq!(RouterPolicy::parse("warp"), None);
     }
 }

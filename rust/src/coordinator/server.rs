@@ -25,6 +25,10 @@
 //!     "policy": "mars:0.9", "method": "eagle_tree:k=7,beam=2,branch=2"}
 //! ```
 //!
+//! A reply additionally carries `"cached_tokens"` when the replica's
+//! prefix cache (DESIGN.md §8) restored part of the prompt instead of
+//! prefilling it; `"cache": false` opts a request out of reuse.
+//!
 //! The `"method"` value selects the drafting descriptor (see
 //! `crate::spec::SpecMethod::from_request`): a structured one-key
 //! object, a CLI string (`"eagle_tree:k=7,beam=2"`), or a legacy bare

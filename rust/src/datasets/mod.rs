@@ -360,6 +360,80 @@ fn gen_mt(rng: &mut Rng) -> Example {
     }
 }
 
+// ------------------------------------------------------- conversations ----
+
+/// System prompts shared *across* conversations (a small pool on
+/// purpose: conversations drawing the same system line share a cacheable
+/// prefix and co-locate under `prefix_affinity` routing — DESIGN.md §8).
+const SYSTEMS: &[&str] = &[
+    "Sys: kb bot, be terse.\n",
+    "Sys: one-line answers.\n",
+    "Sys: short replies only.\n",
+    "Sys: answer briefly.\n",
+];
+
+/// One synthetic multi-turn chat conversation: a shared system prompt
+/// plus short user turns over the chat knowledge base. Turn prompts are
+/// built so that each one *extends the previous turn's prompt + answer
+/// byte-for-byte* — exactly the traffic shape the prefix cache and the
+/// `chat` serve scenario exploit.
+#[derive(Debug, Clone)]
+pub struct Conversation {
+    /// System line every turn of this conversation starts with.
+    pub system: String,
+    /// User turns, each already formatted as `U: ...?\nB:`.
+    pub turns: Vec<String>,
+}
+
+impl Conversation {
+    /// Serving prompt of turn `t` (0-based) given the answers to the
+    /// previous turns: `system ++ turn_0 ++ answer_0 ++ "\n" ++ ... ++
+    /// turn_t`. With `answers` as the verbatim reply texts, the turn-`t`
+    /// prompt is a strict byte prefix of the turn-`t+1` prompt.
+    pub fn prompt(&self, t: usize, answers: &[String]) -> String {
+        let mut p = self.system.clone();
+        for i in 0..t {
+            p.push_str(&self.turns[i]);
+            if let Some(a) = answers.get(i) {
+                p.push_str(a);
+            }
+            p.push('\n');
+        }
+        p.push_str(&self.turns[t]);
+        p
+    }
+}
+
+/// Generate `n` multi-turn conversations of `turns` short user turns
+/// each (seed-deterministic). Prompts are kept terse so a 3-turn
+/// conversation with short answers stays inside the `P_MAX` prompt
+/// budget of the default artifact build.
+pub fn chat_conversations(n: usize, turns: usize, seed: u64) -> Vec<Conversation> {
+    let mut rng = Rng::new(seed ^ 0xC0A7);
+    (0..n)
+        .map(|_| {
+            let system = rng.pick(SYSTEMS).to_string();
+            let turns = (0..turns.max(1))
+                .map(|_| match rng.usize_below(3) {
+                    0 => {
+                        let (c, _) = *rng.pick(KB);
+                        format!("U: capital of {c}?\nB:")
+                    }
+                    1 => {
+                        let (plant, _) = *rng.pick(COLORS);
+                        format!("U: color of {plant}?\nB:")
+                    }
+                    _ => {
+                        let (topic, _) = *rng.pick(OPINIONS);
+                        format!("U: describe {topic}.\nB:")
+                    }
+                })
+                .collect();
+            Conversation { system, turns }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -437,6 +511,48 @@ mod tests {
                     ex.prompt.len()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn conversations_deterministic_and_turn_prompts_nest() {
+        let a = chat_conversations(6, 3, 5);
+        let b = chat_conversations(6, 3, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.system, y.system);
+            assert_eq!(x.turns, y.turns);
+        }
+        // the cacheable-prefix contract: turn t's prompt extended by its
+        // answer is a byte prefix of turn t+1's prompt
+        let answers =
+            vec![" Mirefal".to_string(), " green".to_string()];
+        for conv in &a {
+            for t in 1..conv.turns.len() {
+                let prev = conv.prompt(t - 1, &answers);
+                let next = conv.prompt(t, &answers);
+                let grown = format!("{prev}{}\n", answers[t - 1]);
+                assert!(
+                    next.starts_with(&grown),
+                    "turn {t} does not extend turn {}: {next:?}",
+                    t - 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conversations_fit_prompt_budget_with_short_answers() {
+        // P_MAX = 160 in the default artifact build; the chat serve
+        // scenario runs max_new <= 12 so answers stay ~12 bytes
+        let answer = "x".repeat(12);
+        for conv in chat_conversations(20, 3, 9) {
+            let answers = vec![answer.clone(); 3];
+            let last = conv.prompt(2, &answers);
+            assert!(
+                last.len() <= 160,
+                "3-turn prompt too long ({}): {last:?}",
+                last.len()
+            );
         }
     }
 

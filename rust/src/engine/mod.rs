@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cache::SharedPrefixCache;
 use crate::runtime::state::{ProbeDump, Snapshot};
 use crate::runtime::Runtime;
 #[allow(unused_imports)]
@@ -58,6 +59,9 @@ pub struct GenParams {
     /// pull a snapshot every N rounds (1 = exact stats; >1 trades stat
     /// granularity for fewer device calls — §Perf lever)
     pub extract_every: usize,
+    /// opt this request into prefix-cache reuse when its replica carries
+    /// a cache (wire field `"cache": false` opts out; see `crate::cache`)
+    pub cache: bool,
 }
 
 impl Default for GenParams {
@@ -70,6 +74,7 @@ impl Default for GenParams {
             seed: 0,
             probe: false,
             extract_every: 1,
+            cache: true,
         }
     }
 }
@@ -85,6 +90,10 @@ pub struct GenResult {
     pub decode_seconds: f64,
     /// Wall-clock prefill time, seconds.
     pub prefill_seconds: f64,
+    /// Prompt tokens restored from a prefix-cache snapshot instead of
+    /// prefilled (0 on a cold prefill; the suffix past this count is all
+    /// the prefill work this request actually did).
+    pub prefill_cached_tokens: usize,
     /// Final device snapshot (acceptance stats, rounds, counters).
     pub snapshot: Snapshot,
     /// Probe-ring dump when [`GenParams::probe`] was set.
@@ -127,6 +136,12 @@ pub struct SeqRunner<'a> {
     round_cap: usize,
     /// Wall-clock prefill time, seconds (stamped in [`SeqRunner::new`]).
     pub prefill_seconds: f64,
+    /// Prompt tokens restored from the replica's prefix cache (stamped
+    /// next to [`SeqRunner::prefill_seconds`]; 0 on a cold prefill).
+    pub prefill_cached_tokens: usize,
+    /// The replica's prefix cache, kept for the post-commit snapshot
+    /// export in [`SeqRunner::finalize`] (`None` = no reuse).
+    cache: Option<SharedPrefixCache>,
     decode_started: Option<Instant>,
     decode_seconds: f64,
     /// Round-commit callback: invoked after every snapshot pull whose
@@ -151,11 +166,67 @@ impl<'a> SeqRunner<'a> {
         params: &GenParams,
         hostloop: bool,
     ) -> Result<Self> {
+        SeqRunner::new_with_cache(rt, prompt, params, hostloop, None)
+    }
+
+    /// [`SeqRunner::new`] with the replica's prefix cache: the longest
+    /// cached state prefix of `prompt` is restored instead of prefilled
+    /// (partial hits additionally need the `prefill_ext` artifact —
+    /// without it only exact full-prompt hits restore), and fresh
+    /// snapshots are exported back after prefill and after the final
+    /// commit so follow-up turns extending this context hit too. A failed
+    /// restore falls back to a cold prefill: the cache accelerates
+    /// requests, it never fails them.
+    pub fn new_with_cache(
+        rt: &'a Runtime,
+        prompt: &[u32],
+        params: &GenParams,
+        hostloop: bool,
+        cache: Option<SharedPrefixCache>,
+    ) -> Result<Self> {
         let params = params.clone();
         let t0 = Instant::now();
-        let mut sess = rt.session(prompt, &params)?;
+        let full_only = !rt.supports_suffix_prefill();
+        let hit = cache.as_ref().and_then(|c| {
+            let mut c = c.borrow_mut();
+            let hit = c.lookup(prompt, full_only);
+            if hit.is_none() {
+                c.note_miss();
+            }
+            hit
+        });
+        let mut prefill_cached_tokens = 0;
+        let mut sess = match hit {
+            Some((l, state)) => {
+                match rt.session_from_state(&state, l, prompt, &params) {
+                    Ok(s) => {
+                        prefill_cached_tokens = l;
+                        s
+                    }
+                    Err(_) => {
+                        // the fallback is a cold prefill: take the hit's
+                        // accounting back so metrics only report reuse
+                        // that actually happened
+                        if let Some(c) = &cache {
+                            c.borrow_mut().rescind_hit(l);
+                        }
+                        rt.session(prompt, &params)?
+                    }
+                }
+            }
+            None => rt.session(prompt, &params)?,
+        };
         if hostloop {
             sess.set_hostloop(true)?;
+        }
+        // snapshot the freshly prefilled prompt for future requests
+        // (skipped when the whole prompt was already cached)
+        if let Some(c) = &cache {
+            if prefill_cached_tokens < prompt.len() {
+                if let Ok(state) = sess.export_state() {
+                    c.borrow_mut().insert(prompt, state);
+                }
+            }
         }
         let prefill_seconds = t0.elapsed().as_secs_f64();
         let source = params.method.draft_source();
@@ -170,6 +241,8 @@ impl<'a> SeqRunner<'a> {
             spins: 0,
             round_cap,
             prefill_seconds,
+            prefill_cached_tokens,
+            cache,
             decode_started: None,
             decode_seconds: 0.0,
             on_commit: None,
@@ -245,6 +318,26 @@ impl<'a> SeqRunner<'a> {
         } else {
             None
         };
+        // snapshot the whole committed context for follow-up turns: a
+        // multi-turn client's next prompt extends exactly these tokens.
+        // The guards pin the key to the device's own row count (out-ring
+        // overflow would desynchronize key and state) and to the
+        // *client-visible* tokens: a chunked final round may overshoot
+        // max_new, and a key carrying tokens the truncated reply never
+        // showed could not prefix-match any follow-up prompt — skip the
+        // export instead of caching a dead entry.
+        if let Some(c) = &self.cache {
+            if !snap.tokens.is_empty()
+                && snap.tokens.len() <= self.params.max_new
+                && snap.pos == self.prompt.len() + snap.tokens.len()
+            {
+                let mut key = self.prompt.clone();
+                key.extend(&snap.tokens);
+                if let Ok(state) = self.sess.export_state() {
+                    c.borrow_mut().insert(&key, state);
+                }
+            }
+        }
         // host-side truncation: rounds commit in chunks and may overshoot
         let mut tokens = snap.tokens.clone();
         tokens.truncate(self.params.max_new);
@@ -254,6 +347,7 @@ impl<'a> SeqRunner<'a> {
             text,
             decode_seconds: self.decode_seconds,
             prefill_seconds: self.prefill_seconds,
+            prefill_cached_tokens: self.prefill_cached_tokens,
             snapshot: snap,
             probe,
             device_calls: self.sess.device_calls,

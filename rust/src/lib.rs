@@ -14,8 +14,15 @@
 //!   codec per surface (CLI string, request JSON, device config slots)
 //!   and a [`spec::DraftSource`] unifying device-coupled and host
 //!   drafters.
+//! * [`cache`] — the prefix-reuse subsystem: per-replica
+//!   [`cache::PrefixCache`] of flat-state snapshots keyed by a token
+//!   chain hash with token-equality confirmation, LRU-evicted under a
+//!   byte budget, so multi-turn chat over a shared prefix prefills only
+//!   the suffix (restored full-prompt hits skip prefill entirely).
 //! * [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt`, uploads model
-//!   weights once, threads the flat f32 decode state buffer-to-buffer.
+//!   weights once, threads the flat f32 decode state buffer-to-buffer;
+//!   `session_from_state` resumes a cached snapshot and `prefill_ext`
+//!   extends it with the uncached token suffix.
 //! * [`engine`] — per-sequence decode sessions: prefill → rounds →
 //!   extract, driving whatever [`spec::DraftSource`] the request's
 //!   descriptor builds; the verification policy is a [`GenParams`] field,
@@ -30,6 +37,7 @@
 //!   `bench serve` open-loop serving-latency harness (BENCHMARKS.md).
 
 pub mod bench;
+pub mod cache;
 pub mod coordinator;
 pub mod datasets;
 pub mod engine;
@@ -40,6 +48,7 @@ pub mod tokenizer;
 pub mod util;
 pub mod verify;
 
+pub use cache::{CacheConfig, PrefixCache};
 pub use engine::{DecodeEngine, GenParams, GenResult};
 pub use runtime::{Artifacts, Runtime};
 pub use spec::{DraftSource, SpecMethod, METHODS};

@@ -27,7 +27,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(
         &argv,
-        &["mars", "no-mars", "hostloop", "probe", "quiet", "help"],
+        &["mars", "no-mars", "hostloop", "probe", "quiet", "help", "no-cache"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -59,15 +59,19 @@ USAGE: mars <cmd> [flags]
       [--policy strict|mars:0.9|topk:2:0.1|entropy:1.5]
       [--mars|--no-mars] [--theta 0.9]   (legacy aliases for --policy)
       [--temperature 1.0] [--max-new 128] [--seed 0] [--hostloop]
-  serve [--bind ADDR] [--replicas 1] [--slots 4] [--route rr|ll]
+  serve [--bind ADDR] [--replicas 1] [--slots 4] [--route rr|ll|prefix]
+      [--cache-mb 256]   per-replica prefix-cache budget (0 disables)
       line-JSON protocol: pipelined ids, \"stream\": true deltas,
-      {{\"cmd\": \"cancel\", \"id\": N}} — see coordinator/server.rs docs
+      \"cache\": false opt-out, {{\"cmd\": \"cancel\", \"id\": N}} —
+      see coordinator/server.rs docs
   bench table1|..|table7|fig3|perf|policies|serve|all
       [--n 16] [--seed 7] [--max-new 96]
       [--methods sps:k=6,eagle_tree,pld]      (policies/serve; default:
           every speculative method in the registry / the default tree)
       [--policies strict,mars:0.9,topk:2,entropy:1.5]   (policies/serve)
       [--connections 4] [--rate 8.0] [--replicas 1] [--slots 4]  (serve)
+      [--scenario sweep|chat] [--turns 3] [--cache-mb 256]        (serve;
+          chat = multi-turn conversations, cache-on vs cache-off waves)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
   eval --task arith|code|chat|sum|mt [--method M] [--policy P] [--n 16]
 
@@ -128,6 +132,7 @@ fn gen_params(args: &Args) -> Result<GenParams> {
         seed: args.get_usize("seed", d.seed as usize) as u64,
         probe: args.has("probe"),
         extract_every: args.get_usize("extract-every", 1),
+        cache: !args.has("no-cache"),
     })
 }
 
@@ -178,12 +183,16 @@ fn run(args: &Args) -> Result<()> {
             let route = args.get_or("route", "ll");
             let policy = RouterPolicy::parse(&route)
                 .ok_or_else(|| anyhow!("bad routing policy '{route}'"))?;
+            let cache = mars::cache::CacheConfig::with_mb(
+                args.get_usize("cache-mb", mars::cache::DEFAULT_CACHE_MB),
+            );
             let router = Arc::new(Router::start(
                 &dir,
                 replicas,
                 slots,
                 args.has("hostloop"),
                 policy,
+                cache,
             )?);
             let handle = server::serve(router.clone(), &bind)?;
             println!("serving on {} ({} replicas)", handle.addr, replicas);
@@ -244,6 +253,14 @@ fn run(args: &Args) -> Result<()> {
             // replica builds a Runtime), so handle it before the bare
             // single-engine context below
             if which == "serve" {
+                let scenario = match args.get_or("scenario", "sweep").as_str()
+                {
+                    "sweep" | "mix" => bench::serve::ServeScenario::Sweep,
+                    "chat" => bench::serve::ServeScenario::Chat {
+                        turns: args.get_usize("turns", 3),
+                    },
+                    other => bail!("unknown serve scenario '{other}'"),
+                };
                 let cfg = bench::serve::ServeBenchCfg {
                     artifact_dir: dir.clone(),
                     replicas: args.get_usize("replicas", 1),
@@ -255,6 +272,9 @@ fn run(args: &Args) -> Result<()> {
                     seed: args.get_usize("seed", 7) as u64,
                     methods: msweep(vec![SpecMethod::default()])?,
                     policies: sweep()?,
+                    scenario,
+                    cache_mb: args
+                        .get_usize("cache-mb", mars::cache::DEFAULT_CACHE_MB),
                     out_dir: PathBuf::from("results"),
                 };
                 return bench::serve::run(&cfg);

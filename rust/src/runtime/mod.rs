@@ -12,6 +12,9 @@
 //! [`Runtime::session`] starts a device-resident decode; the deliberately
 //! naive [`Session::set_hostloop`] mode round-trips the full state through
 //! host memory every call and is kept as the §Perf "before" baseline.
+//! [`Runtime::session_from_state`] instead resumes a prefix-cache
+//! snapshot ([`Session::export_state`]) and prefills only the uncached
+//! token suffix via the `prefill_ext` artifact (DESIGN.md §8).
 
 pub mod state;
 pub mod weights;
@@ -270,24 +273,15 @@ impl Runtime {
         Ok(replica.remove(0))
     }
 
-    /// Start a decode session for one request.
-    pub fn session(
+    /// Build the prefill `cfg` vector for one request (shared by cold
+    /// [`Runtime::session`] and the prefix-cache resume path, whose host
+    /// restamp mirrors the cfg→scalar copy the device `prefill` performs).
+    fn cfg_vector(
         &self,
-        prompt_tokens: &[u32],
+        prompt_len: usize,
         params: &crate::engine::GenParams,
-    ) -> Result<Session<'_>> {
+    ) -> Vec<f32> {
         let lay = self.layout();
-        let p_max = lay.konst("p_max");
-        if prompt_tokens.is_empty() {
-            bail!("empty prompt");
-        }
-        if prompt_tokens.len() > p_max {
-            bail!("prompt too long: {} > {p_max}", prompt_tokens.len());
-        }
-        let mut prompt = vec![0f32; p_max];
-        for (i, &t) in prompt_tokens.iter().enumerate() {
-            prompt[i] = t as f32;
-        }
         let n_cfg = lay.konst("n_cfg");
         let mut cfg = vec![0f32; n_cfg];
         let c = |name: &str| lay.cfg[name];
@@ -308,7 +302,29 @@ impl Runtime {
         cfg[c("probe_on")] = if params.probe { 1.0 } else { 0.0 };
         cfg[c("greedy")] = if params.temperature <= 0.0 { 1.0 } else { 0.0 };
         cfg[c("seed")] = (params.seed % (1 << 24)) as f32;
-        cfg[c("prompt_len")] = prompt_tokens.len() as f32;
+        cfg[c("prompt_len")] = prompt_len as f32;
+        cfg
+    }
+
+    /// Start a decode session for one request.
+    pub fn session(
+        &self,
+        prompt_tokens: &[u32],
+        params: &crate::engine::GenParams,
+    ) -> Result<Session<'_>> {
+        let lay = self.layout();
+        let p_max = lay.konst("p_max");
+        if prompt_tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt_tokens.len() > p_max {
+            bail!("prompt too long: {} > {p_max}", prompt_tokens.len());
+        }
+        let mut prompt = vec![0f32; p_max];
+        for (i, &t) in prompt_tokens.iter().enumerate() {
+            prompt[i] = t as f32;
+        }
+        let cfg = self.cfg_vector(prompt_tokens.len(), params);
 
         let prompt_buf = self.upload(&prompt)?;
         let cfg_buf = self.upload(&cfg)?;
@@ -319,6 +335,76 @@ impl Runtime {
             hostloop: false,
             rounds_run: 0,
             device_calls: 1,
+        })
+    }
+
+    /// Can this artifact set extend a restored snapshot with a token
+    /// suffix? Older artifact builds lack `prefill_ext`; on those the
+    /// prefix cache still serves exact full-prompt hits (restore is a
+    /// restamp + upload, no device program needed).
+    pub fn supports_suffix_prefill(&self) -> bool {
+        self.has_exec("prefill_ext")
+    }
+
+    /// Resume a prefix-cache snapshot as a fresh session (DESIGN.md §8):
+    /// restamp the request's cfg scalars onto the cached state host-side
+    /// ([`state::restamp_resumed`]), upload it, and run `prefill_ext`
+    /// over the uncached suffix `prompt_tokens[cached_len..]` (skipped
+    /// entirely when the whole prompt was cached).
+    pub fn session_from_state(
+        &self,
+        cached: &[f32],
+        cached_len: usize,
+        prompt_tokens: &[u32],
+        params: &crate::engine::GenParams,
+    ) -> Result<Session<'_>> {
+        let lay = self.layout();
+        let p_max = lay.konst("p_max");
+        if cached.len() != lay.state_len {
+            bail!(
+                "cached state length {} != layout state_len {}",
+                cached.len(),
+                lay.state_len
+            );
+        }
+        if cached_len == 0 || cached_len > prompt_tokens.len() {
+            bail!(
+                "cached prefix {} outside prompt of {} tokens",
+                cached_len,
+                prompt_tokens.len()
+            );
+        }
+        if prompt_tokens.len() > p_max {
+            bail!("prompt too long: {} > {p_max}", prompt_tokens.len());
+        }
+        let suffix = &prompt_tokens[cached_len..];
+        if !suffix.is_empty() && !self.supports_suffix_prefill() {
+            bail!("artifacts lack 'prefill_ext' (partial prefix reuse)");
+        }
+        let mut state = cached.to_vec();
+        let cfg = self.cfg_vector(prompt_tokens.len(), params);
+        state::restamp_resumed(lay, &mut state, &cfg);
+
+        let state_buf = self.upload(&state)?;
+        let mut device_calls = 1; // the MB-sized state upload is traffic
+        let state_buf = if suffix.is_empty() {
+            state_buf
+        } else {
+            let mut ext = vec![0f32; p_max + 1];
+            ext[0] = suffix.len() as f32;
+            for (i, &t) in suffix.iter().enumerate() {
+                ext[1 + i] = t as f32;
+            }
+            let ext_buf = self.upload(&ext)?;
+            device_calls += 1;
+            self.run("prefill_ext", Some(&state_buf), &[&ext_buf])?
+        };
+        Ok(Session {
+            rt: self,
+            state: DeviceState::Buffer(state_buf),
+            hostloop: false,
+            rounds_run: 0,
+            device_calls,
         })
     }
 }
@@ -434,6 +520,16 @@ impl<'a> Session<'a> {
             self.state = DeviceState::Host(self.rt.pull(&b)?);
         }
         Snapshot::decode(self.rt.layout(), &raw)
+    }
+
+    /// Pull the full flat state vector to host — the prefix-cache
+    /// snapshot (DESIGN.md §8). One literal transfer, no device program;
+    /// the session keeps decoding from the same buffer afterwards.
+    pub fn export_state(&mut self) -> Result<Vec<f32>> {
+        match &self.state {
+            DeviceState::Buffer(b) => self.rt.pull(b),
+            DeviceState::Host(h) => Ok(h.clone()),
+        }
     }
 
     /// Pull the probe ring (figures 1 & 4).

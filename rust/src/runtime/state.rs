@@ -125,6 +125,43 @@ impl Layout {
     }
 }
 
+/// Per-request scalars zeroed when a prefix-cache snapshot is resumed as
+/// a new request (DESIGN.md §8): output bookkeeping, the RNG counter and
+/// every accounting counter restart from zero, exactly as a cold
+/// `prefill` leaves them. The device-progress scalars (`pos`,
+/// `eagle_pos`, `sps_pos`) and every KV/feature section are what the
+/// cache exists to keep, so they are *not* listed here.
+pub const RESUME_RESET_SCALARS: &[&str] = &[
+    "out_len",
+    "finished",
+    "rng",
+    "probe_len",
+    "rounds",
+    "committed",
+    "target_calls",
+    "draft_steps",
+    "exact_accepts",
+    "relaxed_accepts",
+    "rejects",
+    "bonus",
+    "last_accept",
+];
+
+/// Restamp a cached state snapshot for reuse as a fresh request: copy
+/// every cfg-slot value onto its state scalar (the host mirror of the
+/// cfg→scalar copy the device `prefill` performs, so the snapshot runs
+/// under the *new* request's temperature/policy/method/seed), then zero
+/// the [`RESUME_RESET_SCALARS`]. Everything else — `pos`/`eagle_pos`/
+/// `sps_pos` and all KV/feature/token sections — is left untouched.
+pub fn restamp_resumed(lay: &Layout, state: &mut [f32], cfg: &[f32]) {
+    for (name, &ci) in &lay.cfg {
+        state[lay.scalar(name)] = cfg[ci];
+    }
+    for name in RESUME_RESET_SCALARS {
+        state[lay.scalar(name)] = 0.0;
+    }
+}
+
 /// Decoded `extract()` output: the per-round snapshot the engine polls.
 #[derive(Debug, Clone, Default)]
 pub struct Snapshot {
@@ -287,6 +324,53 @@ mod tests {
             p.entries[1],
             ProbeEntry { z1: 3.0, z2: 1.0, flag: AcceptFlag::Reject }
         );
+    }
+
+    #[test]
+    fn restamp_resumed_keeps_progress_and_sections() {
+        // a layout whose cfg maps several names (the demo layout above
+        // only carries temp) — mirrors the real CFG table shape
+        let json = r#"{
+          "state_len": 200, "extract_len": 72, "extract_probe_len": 112,
+          "n_scalars": 64,
+          "scalars": {"pos":0,"eagle_pos":1,"sps_pos":2,"out_len":3,
+            "finished":4,"rng":5,"temp":6,"p0":7,"policy_id":8,"kdraft":9,
+            "max_new":10,"eos":11,"beam":12,"branch":13,"probe_on":14,
+            "probe_len":15,"rounds":16,"committed":17,"target_calls":18,
+            "draft_steps":19,"exact_accepts":20,"relaxed_accepts":21,
+            "rejects":22,"bonus":23,"prompt_len":24,"last_accept":25,
+            "greedy":26,"seed":27,"p1":28},
+          "cfg": {"temp":0,"p0":1,"policy_id":2,"kdraft":3,"max_new":4,
+            "seed":5,"prompt_len":6,"p1":7},
+          "sections": {"out": {"offset":64, "size":8, "shape":[8]}},
+          "consts": {"probe_max":16, "probe_w":3},
+          "hash": "abc"
+        }"#;
+        let lay = Layout::from_json(&Value::parse(json).unwrap()).unwrap();
+        let mut state = vec![0.5f32; 200];
+        state[lay.scalar("pos")] = 17.0;
+        state[lay.scalar("eagle_pos")] = 17.0;
+        state[lay.scalar("sps_pos")] = 16.0;
+        state[lay.scalar("rounds")] = 9.0;
+        state[lay.scalar("out_len")] = 5.0;
+        state[lay.scalar("finished")] = 1.0;
+        let cfg = [0.7f32, 0.9, 1.0, 7.0, 32.0, 11.0, 21.0, 0.25];
+        restamp_resumed(&lay, &mut state, &cfg);
+        // progress scalars and sections survive exactly
+        assert_eq!(state[lay.scalar("pos")], 17.0);
+        assert_eq!(state[lay.scalar("eagle_pos")], 17.0);
+        assert_eq!(state[lay.scalar("sps_pos")], 16.0);
+        assert_eq!(state[64], 0.5, "section content must be untouched");
+        // cfg values land on their scalar slots
+        assert_eq!(state[lay.scalar("temp")], 0.7);
+        assert_eq!(state[lay.scalar("policy_id")], 1.0);
+        assert_eq!(state[lay.scalar("p1")], 0.25);
+        assert_eq!(state[lay.scalar("prompt_len")], 21.0);
+        assert_eq!(state[lay.scalar("seed")], 11.0);
+        // per-request counters restart from zero
+        for name in RESUME_RESET_SCALARS {
+            assert_eq!(state[lay.scalar(name)], 0.0, "{name}");
+        }
     }
 
     #[test]

@@ -43,6 +43,7 @@ fn artifacts_metadata_consistent() {
     assert!(a.layout.state_len > 0);
     for name in [
         "prefill",
+        "prefill_ext",
         "ar_step",
         "sps_round",
         "eagle_tree_round",
@@ -176,6 +177,73 @@ fn engine_semantics_suite() {
         .generate("", &params(SpecMethod::Ar, VerifyPolicy::Strict, 0.0))
         .is_err());
 
+    // --- prefix-cache reuse: warm decode token-identical to cold (T=0),
+    //     every policy family x a chain and a tree drafter --------------
+    {
+        use mars::cache::PrefixCache;
+        use mars::engine::SeqRunner;
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let drive = |runner: &mut SeqRunner<'_>| loop {
+            if let Some(r) = runner.step().expect("step") {
+                return r;
+            }
+        };
+        let turn1 = "Sys: short.\nU: 21+17?\nB:";
+        for policy in [
+            VerifyPolicy::Strict,
+            VerifyPolicy::Mars { theta: 0.9 },
+            VerifyPolicy::TopK { k: 2, eps: 0.1 },
+            VerifyPolicy::Entropy { h_max: 1.0 },
+        ] {
+            for method in [
+                SpecMethod::EagleChain { depth: 7 },
+                SpecMethod::default(), // the default eagle tree
+            ] {
+                let p = params(method, policy, 0.0);
+                let cache = Rc::new(RefCell::new(PrefixCache::new(64 << 20)));
+                // turn 1 warms the cache (prefill + final-commit snapshots)
+                let t1 = mars::tokenizer::encode(turn1);
+                let mut r = SeqRunner::new_with_cache(
+                    &engine.rt,
+                    &t1,
+                    &p,
+                    false,
+                    Some(cache.clone()),
+                )
+                .expect("turn 1");
+                let first = drive(&mut r);
+                assert_eq!(first.prefill_cached_tokens, 0, "cold turn 1");
+                // turn 2 extends turn 1 + its answer byte-for-byte
+                let turn2 = format!("{turn1}{}\nU: 3+4?\nB:", first.text);
+                let t2 = mars::tokenizer::encode(&turn2);
+                let mut cold =
+                    SeqRunner::new(&engine.rt, &t2, &p, false).expect("cold");
+                let cold = drive(&mut cold);
+                let mut warm = SeqRunner::new_with_cache(
+                    &engine.rt,
+                    &t2,
+                    &p,
+                    false,
+                    Some(cache.clone()),
+                )
+                .expect("warm");
+                let warm = drive(&mut warm);
+                assert!(
+                    warm.prefill_cached_tokens > 0,
+                    "{method:?}/{policy:?}: turn 2 missed the cache"
+                );
+                assert_eq!(
+                    warm.tokens, cold.tokens,
+                    "{method:?}/{policy:?}: cached-prefix decode diverged \
+                     from cold at T=0: {:?} vs {:?}",
+                    warm.text, cold.text
+                );
+                assert!(cache.borrow().stats().tokens_saved > 0);
+            }
+        }
+    }
+
     // --- hostloop runtime must be output-identical ----------------------
     let p = params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
     let resident = engine.generate("Q: 8+13=?\nA: ", &p).expect("res");
@@ -194,8 +262,15 @@ fn router_end_to_end_over_tcp() {
     use std::sync::Arc;
     let Some(dir) = artifacts_dir() else { return };
     let router = Arc::new(
-        Router::start(&dir, 1, 2, false, RouterPolicy::RoundRobin)
-            .expect("router"),
+        Router::start(
+            &dir,
+            1,
+            2,
+            false,
+            RouterPolicy::RoundRobin,
+            mars::cache::CacheConfig::default(),
+        )
+        .expect("router"),
     );
     let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
     let addr = handle.addr.to_string();
@@ -233,32 +308,75 @@ fn router_end_to_end_over_tcp() {
         resp2.get("policy").and_then(|p| p.as_str()),
         Some("topk:2:0.1")
     );
+    // identical prompt again: the replica's prefix cache serves the whole
+    // prompt and the reply says so
+    let resp3 = server::client_roundtrip(
+        &addr,
+        "{\"prompt\": \"Q: 2+2=?\\nA: \", \"method\": \"eagle_tree\", \
+         \"mars\": true, \"max_new\": 12, \"seed\": 4}",
+    )
+    .expect("gen3");
+    assert_eq!(resp3.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert!(
+        resp3
+            .get("cached_tokens")
+            .and_then(|t| t.as_usize())
+            .unwrap_or(0)
+            > 0,
+        "repeat prompt missed the prefix cache: {}",
+        resp3.to_string_json()
+    );
+    assert_eq!(resp3.get("tokens"), resp.get("tokens"));
+    // opting out must force a cold prefill
+    let resp4 = server::client_roundtrip(
+        &addr,
+        "{\"prompt\": \"Q: 2+2=?\\nA: \", \"method\": \"eagle_tree\", \
+         \"mars\": true, \"max_new\": 12, \"seed\": 4, \"cache\": false}",
+    )
+    .expect("gen4");
+    assert!(resp4.get("cached_tokens").is_none());
     let metrics =
         server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#).expect("m");
     assert_eq!(
         metrics.get("requests_ok").and_then(|v| v.as_usize()),
-        Some(2)
+        Some(4)
     );
     // serving percentiles are exported
     assert!(metrics.get("ttft_ms_p99").is_some());
     assert!(metrics.get("tpot_ms_p50").is_some());
-    // per-policy breakout: one mars request, one topk request
+    // per-policy breakout: three mars requests, one topk request
     assert_eq!(
         metrics.path(&["policy", "mars", "requests"]).and_then(|v| v.as_usize()),
-        Some(1)
+        Some(3)
     );
     assert_eq!(
         metrics.path(&["policy", "topk", "requests"]).and_then(|v| v.as_usize()),
         Some(1)
     );
-    // per-method breakout: both requests ran the eagle_tree family
+    // per-method breakout: every request ran the eagle_tree family
     assert_eq!(
         metrics
             .path(&["method", "eagle_tree", "requests"])
             .and_then(|v| v.as_usize()),
-        Some(2)
+        Some(4)
     );
     assert!(metrics.path(&["method", "eagle_tree", "ttft_ms_p50"]).is_some());
+    // prefix-cache counters are exported (DESIGN.md §8): the repeat
+    // prompt above hit, the opt-out and first runs missed
+    assert!(
+        metrics.path(&["cache", "hits"]).and_then(|v| v.as_usize())
+            >= Some(1),
+        "cache hits missing: {}",
+        metrics.to_string_json()
+    );
+    assert!(
+        metrics
+            .path(&["cache", "tokens_saved"])
+            .and_then(|v| v.as_usize())
+            >= Some(1)
+    );
+    assert!(metrics.path(&["cache", "hit_rate"]).is_some());
+    assert!(metrics.path(&["cache", "bytes_resident"]).is_some());
 
     // ---- pipelining: two requests on one connection, out-of-order ids --
     {

@@ -607,3 +607,306 @@ fn prop_judge_reference_dominates_corruption() {
         let _ = rng.next_u64();
     }
 }
+
+// ------------------------------------------------------- prefix cache ------
+
+#[test]
+fn prop_chain_hash_incremental_matches_batch() {
+    let mut rng = Rng::new(640);
+    for _ in 0..200 {
+        let n = rng.usize_below(40);
+        let toks: Vec<u32> =
+            (0..n).map(|_| rng.below(300) as u32).collect();
+        let mut hasher = mars::cache::key::PrefixHasher::new();
+        for l in 0..=n {
+            assert_eq!(
+                hasher.hash(),
+                mars::cache::key::prefix_hash(&toks[..l]),
+                "prefix {l} of {toks:?}"
+            );
+            if l < n {
+                hasher.push(toks[l]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_lookup_returns_longest_true_prefix() {
+    // tiny token alphabet on purpose: token-level prefix collisions are
+    // the common case, so the longest-match logic actually gets exercised
+    let mut rng = Rng::new(641);
+    for case in 0..60 {
+        let mut cache = mars::cache::PrefixCache::new(1 << 20);
+        let mut stored: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..rng.usize_below(12) {
+            let n = 1 + rng.usize_below(8);
+            let toks: Vec<u32> =
+                (0..n).map(|_| rng.below(3) as u32).collect();
+            cache.insert(&toks, vec![toks.len() as f32; 4]);
+            stored.push(toks);
+        }
+        for _ in 0..20 {
+            let n = rng.usize_below(10);
+            let query: Vec<u32> =
+                (0..n).map(|_| rng.below(3) as u32).collect();
+            let oracle = stored
+                .iter()
+                .filter(|s| query.starts_with(s))
+                .map(|s| s.len())
+                .max();
+            let got = cache.lookup(&query, false);
+            assert_eq!(
+                got.as_ref().map(|(l, _)| *l),
+                oracle,
+                "case {case}: query {query:?} stored {stored:?}"
+            );
+            if let Some((l, state)) = got {
+                // the snapshot handed back is the matched entry's own
+                assert_eq!(state, vec![l as f32; 4]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_lru_never_exceeds_budget() {
+    let mut rng = Rng::new(642);
+    for _ in 0..40 {
+        let budget = 256 + rng.usize_below(2048);
+        let mut cache = mars::cache::PrefixCache::new(budget);
+        for _ in 0..60 {
+            match rng.below(3) {
+                0 | 1 => {
+                    let n = 1 + rng.usize_below(6);
+                    let toks: Vec<u32> =
+                        (0..n).map(|_| rng.below(50) as u32).collect();
+                    let state = vec![0.5f32; rng.usize_below(120)];
+                    cache.insert(&toks, state);
+                }
+                _ => {
+                    let n = rng.usize_below(8);
+                    let q: Vec<u32> =
+                        (0..n).map(|_| rng.below(50) as u32).collect();
+                    let _ = cache.lookup(&q, false);
+                }
+            }
+            assert!(
+                cache.bytes_resident() <= budget,
+                "resident {} > budget {budget}",
+                cache.bytes_resident()
+            );
+            let s = cache.stats();
+            assert_eq!(s.bytes_resident, cache.bytes_resident() as u64);
+            assert_eq!(s.entries, cache.entries() as u64);
+        }
+    }
+}
+
+#[test]
+fn prop_restamp_resumed_roundtrips_layout_and_pos() {
+    use mars::runtime::state::{
+        restamp_resumed, Layout, RESUME_RESET_SCALARS,
+    };
+    let json = r#"{
+      "state_len": 300, "extract_len": 72, "extract_probe_len": 112,
+      "n_scalars": 64,
+      "scalars": {"pos":0,"eagle_pos":1,"sps_pos":2,"out_len":3,
+        "finished":4,"rng":5,"temp":6,"p0":7,"policy_id":8,"kdraft":9,
+        "max_new":10,"eos":11,"beam":12,"branch":13,"probe_on":14,
+        "probe_len":15,"rounds":16,"committed":17,"target_calls":18,
+        "draft_steps":19,"exact_accepts":20,"relaxed_accepts":21,
+        "rejects":22,"bonus":23,"prompt_len":24,"last_accept":25,
+        "greedy":26,"seed":27,"p1":28},
+      "cfg": {"temp":0,"p0":1,"policy_id":2,"kdraft":3,"max_new":4,
+        "eos":5,"beam":6,"branch":7,"probe_on":8,"greedy":9,"seed":10,
+        "prompt_len":11,"p1":12},
+      "sections": {"out": {"offset":64, "size":8, "shape":[8]},
+        "tkv": {"offset":72, "size":228, "shape":[228]}},
+      "consts": {"probe_max":16, "probe_w":3, "n_cfg":16},
+      "hash": "prop"
+    }"#;
+    let lay = Layout::from_json(&Value::parse(json).unwrap()).unwrap();
+    let mut rng = Rng::new(643);
+    for _ in 0..100 {
+        let snapshot: Vec<f32> =
+            (0..300).map(|_| rng.f64() as f32).collect();
+        let cfg: Vec<f32> = (0..16).map(|_| rng.f64() as f32).collect();
+        let mut state = snapshot.clone();
+        restamp_resumed(&lay, &mut state, &cfg);
+        // pos family survives bit-exactly
+        for name in ["pos", "eagle_pos", "sps_pos"] {
+            assert_eq!(state[lay.scalar(name)], snapshot[lay.scalar(name)]);
+        }
+        // every section survives bit-exactly (only scalars change)
+        for sec in lay.sections.values() {
+            assert_eq!(
+                &state[sec.offset..sec.offset + sec.size],
+                &snapshot[sec.offset..sec.offset + sec.size]
+            );
+        }
+        // cfg values land on their named scalars
+        for (name, &ci) in &lay.cfg {
+            assert_eq!(state[lay.scalar(name)], cfg[ci], "{name}");
+        }
+        // per-request counters are zeroed
+        for name in RESUME_RESET_SCALARS {
+            assert_eq!(state[lay.scalar(name)], 0.0, "{name}");
+        }
+    }
+}
+
+/// Host-reference decode harness for the reuse-correctness pin: a
+/// deterministic synthetic target (top-2 logits are a pure function of
+/// the token history via the cache's own chain hash), drafted either as
+/// a chain or as a 2-branch tree, verified by the *host reference
+/// verifier* (`VerifyPolicy::scan`). Commits mirror Algorithm 1: the
+/// accepted prefix plus the target's pick at the first reject (bonus =
+/// the target pick after a fully accepted chain).
+mod host_reference_decode {
+    use super::*;
+
+    const VOCAB: u32 = 24;
+
+    /// Synthetic target: (tstar, top-2 rows) at the position after
+    /// `history` — deterministic, so decode is a pure function of the
+    /// token history and cached-prefix reuse must be output-invariant.
+    pub fn target_row(history: &[u32]) -> (u32, Vec<(u32, f32)>) {
+        let h = mars::cache::key::prefix_hash(history);
+        let v1 = (h % VOCAB as u64) as u32;
+        let mut v2 = ((h >> 17) % VOCAB as u64) as u32;
+        if v2 == v1 {
+            v2 = (v2 + 1) % VOCAB;
+        }
+        let z1 = 0.5 + ((h >> 32) % 64) as f32 / 16.0; // 0.5 .. 4.4
+        let ratio = ((h >> 40) % 100) as f32 / 100.0; // 0 .. 0.99
+        (v1, vec![(v1, z1), (v2, z1 * ratio)])
+    }
+
+    /// Chain drafter: k tokens, teacher-forced on its own continuations,
+    /// drawn from the target family but salted — near-miss drafts that
+    /// exercise exact, relaxed and reject paths.
+    pub fn draft_chain(history: &[u32], k: usize, salt: u64) -> Vec<u32> {
+        let mut ctx = history.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..k {
+            let h = mars::cache::key::prefix_hash(&ctx) ^ salt;
+            let (v1, _) = target_row(&ctx);
+            // mostly the target's own pick, sometimes a salted miss
+            let tok = if h % 4 == 0 {
+                (h % VOCAB as u64) as u32
+            } else {
+                v1
+            };
+            out.push(tok);
+            ctx.push(tok);
+        }
+        out
+    }
+
+    /// One verify round over a drafted chain: scan, commit the accepted
+    /// prefix + the target's pick at the cut (paper Algorithm 1 shape).
+    fn round(history: &mut Vec<u32>, drafts: &[u32], policy: VerifyPolicy) {
+        let mut rows = Vec::new();
+        let mut ctx = history.clone();
+        for &d in drafts {
+            rows.push(target_row(&ctx));
+            ctx.push(d);
+        }
+        let (_, m) = policy.scan(drafts, &rows);
+        history.extend(&drafts[..m]);
+        // bonus/correction token: the target's pick after the accepted
+        // prefix (recompute when the scan cut the chain short)
+        let fin = if m == drafts.len() {
+            target_row(history).0
+        } else {
+            rows[m].0
+        };
+        history.push(fin);
+    }
+
+    /// Decode `max_new` tokens from `prompt`; `tree` drafts two salted
+    /// branches per round and verifies the better one.
+    pub fn decode(
+        prompt: &[u32],
+        policy: VerifyPolicy,
+        tree: bool,
+        max_new: usize,
+    ) -> Vec<u32> {
+        let mut history = prompt.to_vec();
+        while history.len() < prompt.len() + max_new {
+            let drafts = if tree {
+                // two branches; verify the one the scan accepts deeper
+                let a = draft_chain(&history, 4, 0x5A17);
+                let b = draft_chain(&history, 4, 0xB0B5);
+                let score = |d: &[u32]| {
+                    let mut ctx = history.clone();
+                    let mut rows = Vec::new();
+                    for &t in d {
+                        rows.push(target_row(&ctx));
+                        ctx.push(t);
+                    }
+                    policy.scan(d, &rows).1
+                };
+                if score(&b) > score(&a) {
+                    b
+                } else {
+                    a
+                }
+            } else {
+                draft_chain(&history, 5, 0x5A17)
+            };
+            round(&mut history, &drafts, policy);
+        }
+        history[prompt.len()..].to_vec()
+    }
+}
+
+#[test]
+fn prop_cached_prefix_decode_token_identical_on_host_reference() {
+    // every policy family x a chain and a tree drafter: decoding with a
+    // restored cached prefix must be token-identical to a cold decode at
+    // T=0 (the host reference analog of the integration-test pin)
+    let policies = [
+        VerifyPolicy::Strict,
+        VerifyPolicy::Mars { theta: 0.6 },
+        VerifyPolicy::TopK { k: 2, eps: 0.4 },
+        VerifyPolicy::Entropy { h_max: 1.0 },
+    ];
+    let mut rng = Rng::new(644);
+    for case in 0..30 {
+        let plen = 6 + rng.usize_below(10);
+        let prompt: Vec<u32> =
+            (0..plen).map(|_| rng.below(24) as u32).collect();
+        let cut = 1 + rng.usize_below(plen - 1);
+        for policy in policies {
+            for tree in [false, true] {
+                let cold =
+                    host_reference_decode::decode(&prompt, policy, tree, 12);
+
+                // warm path: the cache stores the prefix "state" (for
+                // the host reference the state IS the token history);
+                // restore it, confirm the matched length, and resume
+                let mut cache = mars::cache::PrefixCache::new(1 << 20);
+                cache.insert(
+                    &prompt[..cut],
+                    prompt[..cut].iter().map(|&t| t as f32).collect(),
+                );
+                let (l, state) =
+                    cache.lookup(&prompt, false).expect("prefix hit");
+                assert!(l >= cut, "lookup lost the stored prefix");
+                let mut history: Vec<u32> =
+                    state.iter().map(|&f| f as u32).collect();
+                assert_eq!(&history[..], &prompt[..l]);
+                history.extend(&prompt[l..]); // "suffix prefill"
+                let warm = host_reference_decode::decode(
+                    &history, policy, tree, 12,
+                );
+                assert_eq!(
+                    cold, warm,
+                    "case {case}: policy {policy:?} tree={tree} cut={cut}"
+                );
+            }
+        }
+    }
+}
