@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         false,
         RouterPolicy::LeastLoaded,
         mars::cache::CacheConfig::default(),
+        1,
     )?);
 
     // TCP smoke: prove the wire protocol works end to end

@@ -68,6 +68,14 @@ EXECUTABLES = {
     "verify_ext_round": (
         R.verify_ext_round, [("ext", (S.K_MAX + 1,))], ["target"]
     ),
+    # round packing (DESIGN.md §9.6): fused multi-round variants; `pack`
+    # is the host's per-call round budget, clamped on device
+    "ar_multi": (R.ar_multi, [("pack", (1,))], ["target"]),
+    "sps_multi": (R.sps_multi, [("pack", (1,))], ["target", "sps"]),
+    "eagle_tree_multi": (
+        R.eagle_tree_multi, [("pack", (1,))], ["target", "eagle"]
+    ),
+    "medusa_multi": (R.medusa_multi, [("pack", (1,))], ["target", "medusa"]),
     "extract": (R.extract, [], []),
     "extract_probe": (R.extract_probe, [], []),
 }

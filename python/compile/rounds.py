@@ -23,8 +23,25 @@ Methods:
     medusa_round      Medusa heads with a static candidate tree
     verify_ext_round  verify host-provided draft tokens (PLD / Lookahead);
                       this is the pallas verify-kernel path
+    ar_multi          up to `pack` fused ar_step rounds per device call
+    sps_multi         up to `pack` fused sps_round rounds per device call
+    eagle_tree_multi  up to `pack` fused eagle_tree_round rounds per call
+    medusa_multi      up to `pack` fused medusa_round rounds per call
     extract           state -> scalars ++ out-ring (cheap per-round pull)
     extract_probe     state -> scalars ++ probe-ring (figures 1 & 4)
+
+Round packing (`*_multi`): the per-call dispatch tax (~0.5 ms `execute_b`
+per round + one `extract` pull, DESIGN.md §1.1) is pure overhead the
+paper's math never pays, so each device-coupled method also lowers a
+fused variant that wraps its round body in a `lax.while_loop` running up
+to `pack` rounds on-device. `pack` is a one-float extra input (the host's
+adaptive controller shrinks it near the generation budget); the device
+additionally caps it by the `rounds_per_call` cfg/state scalar and
+`PACK_MAX`, and exits the loop the moment `finished` flips — every stop
+condition (EOS, `max_new`, out-ring and context capacity) is folded into
+that flag by `_commit`, so a packed call never runs overrun rounds.
+Host-drafted methods (PLD / Lookahead) need fresh drafts each round and
+keep the single-round `verify_ext_round` path.
 
 KV rollback is positional (DESIGN.md §1.2): block rows are written at
 slots >= pos; acceptance only advances pos, junk rows are overwritten by
@@ -293,7 +310,8 @@ def prefill(prompt, cfg, *t_e_s_weights):
 
     v = S.View(jnp.zeros((S.STATE_LEN,), jnp.float32))
     for name in ("temp", "p0", "p1", "policy_id", "kdraft", "max_new",
-                 "eos", "beam", "branch", "probe_on", "greedy", "seed"):
+                 "eos", "beam", "branch", "probe_on", "greedy", "seed",
+                 "rounds_per_call"):
         v.set(name, cfg[S.CFG[name]])
     plen = cfg[S.CFG["prompt_len"]].astype(jnp.int32)
     plen = jnp.clip(plen, 1, M.P_MAX)
@@ -931,6 +949,62 @@ def verify_ext_round(state, ext, *t_weights):
     toks = toks.at[jnp.minimum(m, S.CATCHUP_MAX - 1)].set(fin)
     _commit(v, t_params, toks, m)
     return v.pack()
+
+
+# ------------------------------------------------------ round packing ------
+
+
+def _packed(round_fn, state, pack):
+    """Run up to `pack` rounds of `round_fn` on-device.
+
+    `pack` f32 [1]: the host's per-call round budget (its adaptive
+    controller shrinks it as the sequence nears `max_new`). The device
+    caps it by the `rounds_per_call` state scalar (the configured pack,
+    0 = uncapped) and `PACK_MAX`, and exits as soon as `finished` flips —
+    `_commit` folds every stop condition (EOS, `max_new`, out-ring and
+    context capacity) into that flag, so no overrun round ever runs.
+    Each fused round is bit-identical to one standalone round call: the
+    loop body *is* the single-round program.
+    """
+    n_req = jnp.clip(pack[0].astype(jnp.int32), 1, S.PACK_MAX)
+    cap = state[S.SCALARS["rounds_per_call"]].astype(jnp.int32)
+    cap = jnp.where(cap >= 1, jnp.minimum(cap, S.PACK_MAX), n_req)
+    n = jnp.minimum(n_req, cap)
+
+    def cond(carry):
+        i, st = carry
+        return (i < n) & (st[S.SCALARS["finished"]] < 0.5)
+
+    def body(carry):
+        i, st = carry
+        return i + 1, round_fn(st)
+
+    _, st = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), state)
+    )
+    return st
+
+
+def ar_multi(state, pack, *t_weights):
+    """Up to `pack` fused `ar_step` rounds per device call."""
+    return _packed(lambda st: ar_step(st, *t_weights), state, pack)
+
+
+def sps_multi(state, pack, *weights):
+    """Up to `pack` fused `sps_round` rounds per device call."""
+    return _packed(lambda st: sps_round(st, *weights), state, pack)
+
+
+def eagle_tree_multi(state, pack, *weights):
+    """Up to `pack` fused `eagle_tree_round` rounds per device call
+    (covers both the chain and tree descriptors, like the base program).
+    """
+    return _packed(lambda st: eagle_tree_round(st, *weights), state, pack)
+
+
+def medusa_multi(state, pack, *weights):
+    """Up to `pack` fused `medusa_round` rounds per device call."""
+    return _packed(lambda st: medusa_round(st, *weights), state, pack)
 
 
 # ------------------------------------------------------------ extract ------

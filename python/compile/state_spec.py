@@ -31,6 +31,7 @@ CATCHUP_MAX = K_MAX + 2    # max tokens committed per round (K or depth, +1)
 PROBE_MAX = 1024
 PROBE_W = 3                # (z1, z2, flag)
 N_CFG = 16                 # prefill config vector length
+PACK_MAX = 32              # max draft-verify rounds fused per device call
 
 # scalar slot indices ---------------------------------------------------
 
@@ -77,6 +78,7 @@ SCALARS = {
     "greedy": 26,         # 0/1 (temp == 0)
     "seed": 27,
     "p1": 28,             # verification-policy parameter 1
+    "rounds_per_call": 29,  # configured pack cap for *_multi programs
 }
 
 # prefill cfg vector indices -------------------------------------------
@@ -84,7 +86,7 @@ SCALARS = {
 CFG = {
     "temp": 0, "p0": 1, "policy_id": 2, "kdraft": 3, "max_new": 4,
     "eos": 5, "beam": 6, "branch": 7, "probe_on": 8, "greedy": 9,
-    "seed": 10, "prompt_len": 11, "p1": 12,
+    "seed": 10, "prompt_len": 11, "p1": 12, "rounds_per_call": 13,
 }
 
 # ------------------------------------------------------------- layout ------
@@ -145,7 +147,7 @@ def layout_json() -> str:
             "k_max": K_MAX, "b_max": B_MAX, "c_max": C_MAX,
             "depth_max": DEPTH_MAX, "nodes_max": NODES_MAX,
             "catchup_max": CATCHUP_MAX, "probe_max": PROBE_MAX,
-            "probe_w": PROBE_W, "n_cfg": N_CFG,
+            "probe_w": PROBE_W, "n_cfg": N_CFG, "pack_max": PACK_MAX,
             "p_max": M.P_MAX, "out_max": M.OUT_MAX, "s_max": M.S_MAX,
             "vocab": M.TARGET_CFG.vocab,
         },

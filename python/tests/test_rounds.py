@@ -42,6 +42,10 @@ def world():
         "tree": jax.jit(R.eagle_tree_round),
         "medusa": jax.jit(R.medusa_round),
         "ext": jax.jit(R.verify_ext_round),
+        "ar_multi": jax.jit(R.ar_multi),
+        "sps_multi": jax.jit(R.sps_multi),
+        "tree_multi": jax.jit(R.eagle_tree_multi),
+        "medusa_multi": jax.jit(R.medusa_multi),
         "extract": jax.jit(R.extract),
     }
 
@@ -55,7 +59,7 @@ def make_cfg(**kw):
     base = dict(
         temp=0.0, greedy=1.0, policy_id=S.POLICY_STRICT, p0=0.9, p1=0.0,
         kdraft=5, max_new=MAXNEW, eos=T.EOS, beam=1, branch=1,
-        probe_on=1.0, seed=3, prompt_len=0,
+        probe_on=1.0, seed=3, prompt_len=0, rounds_per_call=0,
     )
     base.update(kw)
     for k, v in base.items():
@@ -340,6 +344,99 @@ def test_probe_entries_recorded(world):
     n = int(sc[S.SCALARS["probe_len"]])
     flags = probe[:n, 2]
     assert np.all(np.isin(flags, [0.0, 1.0, 2.0]))
+
+
+# ------------------------------------------------------ round packing ------
+
+# (family, multi key, single key, weight-list keys, extra cfg)
+_PACK_CASES = [
+    ("ar", "ar_multi", "ar", ("tw",), {}),
+    ("sps", "sps_multi", "sps", ("tw", "sw"), {}),
+    ("tree", "tree_multi", "tree", ("tw", "ew"), dict(beam=2, branch=2)),
+    ("medusa", "medusa_multi", "medusa", ("tw", "mw"), dict(kdraft=4)),
+]
+
+
+def _pack_arr(n):
+    return jnp.asarray([float(n)], jnp.float32)
+
+
+def _drive_packed(world, st, multi, wkeys, pack, max_calls=48):
+    """Run packed calls until finished; returns (out, scalars)."""
+    ws = [w for k in wkeys for w in world[k]]
+    for _ in range(max_calls):
+        sc = np.asarray(st[: S.N_SCALARS])
+        if sc[S.SCALARS["finished"]] > 0:
+            break
+        st = world[multi](st, _pack_arr(pack), *ws)
+    sc = np.asarray(st[: S.N_SCALARS])
+    lay = S.layout()["out"]
+    out = np.asarray(
+        st[lay["offset"]: lay["offset"] + lay["size"]]
+    ).astype(int)
+    n = int(sc[S.SCALARS["out_len"]])
+    return out[:n][:MAXNEW], sc, st
+
+
+@pytest.mark.parametrize("fam,multi,single,wkeys,extra", _PACK_CASES)
+@pytest.mark.parametrize("temp", [0.0, 1.0])
+def test_packed_rounds_token_identical(world, fam, multi, single, wkeys,
+                                       extra, temp):
+    """pack > 1 must be token-identical to single rounds at T=0 and T=1:
+    the fused loop body IS the single-round program, so output, RNG
+    consumption and the round counter all agree exactly."""
+    kw = dict(extra)
+    if temp > 0:
+        kw.update(temp=temp, greedy=0.0, seed=9)
+    ws = [w for k in wkeys for w in world[k]]
+    out_1, sc_1, _ = drive(
+        world, start(world, **kw), lambda s: world[single](s, *ws)
+    )
+    out_p, sc_p, _ = _drive_packed(
+        world, start(world, **kw), multi, wkeys, pack=4
+    )
+    np.testing.assert_array_equal(out_p, out_1, err_msg=f"{fam} T={temp}")
+    assert sc_p[S.SCALARS["rounds"]] == sc_1[S.SCALARS["rounds"]], fam
+    assert sc_p[S.SCALARS["committed"]] == sc_1[S.SCALARS["committed"]]
+
+
+def test_packed_call_stops_at_finished(world):
+    """One oversized packed call: the device loop must exit at the stop
+    flag (EOS / max_new via _commit), never spinning overrun rounds —
+    the adaptive-shrink boundary at the generation budget."""
+    out_1, sc_1, _ = drive(
+        world, start(world), lambda s: world["ar"](s, *world["tw"])
+    )
+    st = start(world)
+    st = world["ar_multi"](st, _pack_arr(S.PACK_MAX), *world["tw"])
+    sc = np.asarray(st[: S.N_SCALARS])
+    assert sc[S.SCALARS["finished"]] > 0
+    # exactly as many rounds as the budget needed, not PACK_MAX
+    assert sc[S.SCALARS["rounds"]] == sc_1[S.SCALARS["rounds"]]
+    lay = S.layout()["out"]
+    out = np.asarray(
+        st[lay["offset"]: lay["offset"] + lay["size"]]
+    ).astype(int)[: int(sc[S.SCALARS["out_len"]])][:MAXNEW]
+    np.testing.assert_array_equal(out, out_1)
+    # a further packed call on the finished state is inert
+    st2 = world["ar_multi"](st, _pack_arr(4), *world["tw"])
+    sc2 = np.asarray(st2[: S.N_SCALARS])
+    assert sc2[S.SCALARS["rounds"]] == sc[S.SCALARS["rounds"]]
+    assert sc2[S.SCALARS["out_len"]] == sc[S.SCALARS["out_len"]]
+
+
+def test_packed_call_respects_cfg_cap(world):
+    """The rounds_per_call cfg slot caps the per-call pack input on
+    device: a huge `pack` argument may not run more rounds per call than
+    the configured cap."""
+    st = start(world, rounds_per_call=2)
+    st = world["ar_multi"](st, _pack_arr(S.PACK_MAX), *world["tw"])
+    sc = np.asarray(st[: S.N_SCALARS])
+    assert sc[S.SCALARS["rounds"]] == 2.0
+    # and pack=1 under any cap degenerates to exactly one round
+    st = world["ar_multi"](st, _pack_arr(1), *world["tw"])
+    sc = np.asarray(st[: S.N_SCALARS])
+    assert sc[S.SCALARS["rounds"]] == 3.0
 
 
 def test_stats_tau_bounded_by_k_plus_one(world):

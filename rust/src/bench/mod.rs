@@ -72,6 +72,7 @@ impl<'a> BenchCtx<'a> {
             seed: self.seed,
             probe: false,
             extract_every: 1,
+            rounds_per_call: 1,
             cache: true,
         }
     }
@@ -589,6 +590,242 @@ pub fn policy_sweep(
          knob, composed with every drafting method in the registry."
     )?;
     ctx.emit("policy_sweep", &out);
+    Ok(())
+}
+
+// ----------------------------------------------------- packing sweep -------
+
+/// One (method, policy, pack) wave of [`packing`].
+struct PackRow {
+    method: SpecMethod,
+    policy: VerifyPolicy,
+    pack: usize,
+    ok: usize,
+    tok_per_s: f64,
+    calls_per_tok: f64,
+    tau: f64,
+    ttft_ms: Summary,
+    tpot_ms: Summary,
+}
+
+/// `mars bench packing` — the round-packing sweep (DESIGN.md §9.6):
+/// `rounds_per_call` × method × policy, reporting tok/s, **device calls
+/// per generated token** (the dispatch tax packing exists to amortize),
+/// τ, and TTFT/TPOT percentiles. Renders `results/packing.md` and
+/// refreshes the machine-readable `BENCH_packing.json` perf trajectory
+/// so future PRs can diff the numbers.
+pub fn packing(
+    ctx: &BenchCtx,
+    methods: &[SpecMethod],
+    policies: &[VerifyPolicy],
+    packs: &[usize],
+) -> Result<()> {
+    use crate::engine::SeqRunner;
+    use std::time::Instant;
+    if methods.is_empty() || policies.is_empty() || packs.is_empty() {
+        anyhow::bail!("bench packing needs methods, policies and packs");
+    }
+    // Sum has the longest gold completions of the synthetic tasks, so
+    // decodes run enough rounds for the dispatch amortization (the whole
+    // point of the sweep) to show; short-answer tasks (arith) can finish
+    // in 2-3 rounds, where a pack has nothing left to fuse.
+    let task = Task::Sum;
+    // the vs-pack=1 column (and the acceptance gate) divides by the
+    // unpacked baseline — carry one even when --packs omitted it, and
+    // say so rather than rendering a silent column of 0.00x
+    let mut packs = packs.to_vec();
+    if !packs.contains(&1) {
+        println!("  note: adding the pack=1 baseline to the sweep");
+        packs.insert(0, 1);
+    }
+    // clamp to the artifact's device bound and dedup: SeqRunner clamps
+    // the same way, so a row keyed above pack_max would publish numbers
+    // for a pack that never ran into the committed perf trajectory
+    let pack_max = ctx
+        .engine
+        .rt
+        .layout()
+        .consts
+        .get("pack_max")
+        .copied()
+        .unwrap_or(1)
+        .max(1);
+    let mut seen = std::collections::BTreeSet::new();
+    let packs: Vec<usize> = packs
+        .into_iter()
+        .map(|p| {
+            if p > pack_max {
+                println!(
+                    "  note: pack={p} clamped to device pack_max={pack_max}"
+                );
+            }
+            p.min(pack_max)
+        })
+        .filter(|p| seen.insert(*p))
+        .collect();
+    let examples = dataset(task, ctx.n, ctx.seed);
+    let mut rows: Vec<PackRow> = Vec::new();
+    for &method in methods {
+        for &policy in policies {
+            for &pack in &packs {
+                let mut row = PackRow {
+                    method,
+                    policy,
+                    pack,
+                    ok: 0,
+                    tok_per_s: 0.0,
+                    calls_per_tok: 0.0,
+                    tau: 0.0,
+                    ttft_ms: Summary::new(),
+                    tpot_ms: Summary::new(),
+                };
+                let mut tokens = 0usize;
+                let mut calls = 0u64;
+                let mut secs = 0.0;
+                let mut tau = Summary::new();
+                for (i, ex) in examples.iter().enumerate() {
+                    let mut p = ctx.params(method, policy, 1.0);
+                    p.rounds_per_call = pack;
+                    p.seed = ctx.seed * 1000 + i as u64;
+                    let toks = crate::tokenizer::encode(&ex.prompt);
+                    let t0 = Instant::now();
+                    let mut runner =
+                        SeqRunner::new(&ctx.engine.rt, &toks, &p, false)?;
+                    let mut first: Option<Instant> = None;
+                    let r = loop {
+                        let done = runner.step()?;
+                        if first.is_none() && runner.committed() > 0 {
+                            first = Some(Instant::now());
+                        }
+                        if let Some(r) = done {
+                            break r;
+                        }
+                    };
+                    if r.tokens.is_empty() {
+                        continue;
+                    }
+                    row.ok += 1;
+                    let ttft = first
+                        .map(|f| f.duration_since(t0).as_secs_f64())
+                        .unwrap_or(0.0);
+                    row.ttft_ms.push(ttft * 1e3);
+                    if r.tokens.len() > 1 {
+                        let span = r.prefill_seconds + r.decode_seconds;
+                        let rest = (span - ttft).max(0.0);
+                        row.tpot_ms
+                            .push(rest * 1e3 / (r.tokens.len() - 1) as f64);
+                    }
+                    tokens += r.tokens.len();
+                    calls += r.device_calls;
+                    secs += r.decode_seconds;
+                    if method.is_speculative() {
+                        tau.push(r.tau());
+                    }
+                }
+                row.tok_per_s = tokens as f64 / secs.max(1e-9);
+                row.calls_per_tok = calls as f64 / tokens.max(1) as f64;
+                row.tau = tau.mean();
+                println!(
+                    "  {} / {} / pack={pack}: {:.2} calls/tok, {:.1} tok/s",
+                    method.label(),
+                    policy.label(),
+                    row.calls_per_tok,
+                    row.tok_per_s
+                );
+                rows.push(row);
+            }
+        }
+    }
+
+    // rendered table
+    let mut out = String::new();
+    writeln!(
+        out,
+        "## Round packing — device calls per generated token vs \
+         rounds_per_call ({}, n={}, max_new={}, T=1)\n",
+        task.paper_name(),
+        ctx.n,
+        ctx.max_new
+    )?;
+    writeln!(
+        out,
+        "| Method | Policy | pack | calls/tok | vs pack=1 | tok/s | τ | \
+         TTFT p50 (ms) | TTFT p99 (ms) | TPOT p50 (ms) | TPOT p99 (ms) |"
+    )?;
+    writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|")?;
+    for r in &rows {
+        // the pack=1 row of the same method × policy is the baseline the
+        // call-reduction column (and the acceptance gate) divides by
+        let base = rows
+            .iter()
+            .find(|b| {
+                b.method == r.method && b.policy == r.policy && b.pack == 1
+            })
+            .map(|b| b.calls_per_tok)
+            .unwrap_or(0.0);
+        let ratio = if r.calls_per_tok > 0.0 && base > 0.0 {
+            base / r.calls_per_tok
+        } else {
+            0.0
+        };
+        writeln!(
+            out,
+            "| {} | {} | {} | {:.2} | {:.2}x | {:.1} | {:.2} | {:.0} | \
+             {:.0} | {:.2} | {:.2} |",
+            r.method.label(),
+            r.policy.label(),
+            r.pack,
+            r.calls_per_tok,
+            ratio,
+            r.tok_per_s,
+            r.tau,
+            r.ttft_ms.p50(),
+            r.ttft_ms.p99(),
+            r.tpot_ms.p50(),
+            r.tpot_ms.p99()
+        )?;
+    }
+    writeln!(
+        out,
+        "\ncalls/tok counts every `execute_b` dispatch and buffer upload \
+         the request issued (prefill included), divided by committed \
+         tokens — the pure dispatch tax the paper's math never pays \
+         (DESIGN.md §1.1: ~0.5 ms/call). `vs pack=1` is the reduction \
+         against the same method × policy unpacked; packing leaves \
+         tokens untouched (the equivalence pins), so tok/s gains are \
+         dispatch savings only. TTFT stays flat by construction: the \
+         first turn of every sequence runs unpacked."
+    )?;
+    ctx.emit("packing", &out);
+
+    // machine-readable trajectory for PR-to-PR diffing
+    use crate::util::json::Value as J;
+    let mut doc = J::obj();
+    doc.set("schema", J::Num(1.0));
+    doc.set("task", J::Str(task.name().into()));
+    doc.set("n", J::Num(ctx.n as f64));
+    doc.set("seed", J::Num(ctx.seed as f64));
+    doc.set("max_new", J::Num(ctx.max_new as f64));
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = J::obj();
+        o.set("method", J::Str(r.method.label()));
+        o.set("policy", J::Str(r.policy.label()));
+        o.set("pack", J::Num(r.pack as f64));
+        o.set("ok", J::Num(r.ok as f64));
+        o.set("device_calls_per_token", J::Num(r.calls_per_tok));
+        o.set("tok_per_s", J::Num(r.tok_per_s));
+        o.set("tau", J::Num(r.tau));
+        o.set("ttft_ms_p50", J::Num(r.ttft_ms.p50()));
+        o.set("ttft_ms_p99", J::Num(r.ttft_ms.p99()));
+        o.set("tpot_ms_p50", J::Num(r.tpot_ms.p50()));
+        o.set("tpot_ms_p99", J::Num(r.tpot_ms.p99()));
+        arr.push(o);
+    }
+    doc.set("packing", J::Arr(arr));
+    let json_path = std::path::Path::new("BENCH_packing.json");
+    fs::write(json_path, doc.to_string_json())?;
+    eprintln!("[written {}]", json_path.display());
     Ok(())
 }
 

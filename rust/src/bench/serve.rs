@@ -230,6 +230,7 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
         false,
         RouterPolicy::LeastLoaded,
         CacheConfig::disabled(),
+        1,
     )?);
     let handle = server::serve(router.clone(), "127.0.0.1:0")?;
     let addr = handle.addr.to_string();
@@ -540,6 +541,7 @@ fn run_chat(cfg: &ServeBenchCfg, turns: usize) -> Result<()> {
             false,
             RouterPolicy::PrefixAffinity,
             cache,
+            1,
         )?);
         let handle = server::serve(router.clone(), "127.0.0.1:0")?;
         let addr = handle.addr.to_string();

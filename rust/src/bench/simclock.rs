@@ -14,11 +14,26 @@
 //! `base_units / method_units` is the simulated speedup. The *shape*
 //! claims of Table 1 (ordering, rough factors) are made under this model;
 //! wall-clock numbers are reported alongside.
+//!
+//! The model also charges a per-dispatch overhead ([`DISPATCH_OVERHEAD`]
+//! units per device call): launch/dispatch cost is real on every
+//! substrate (CUDA launch + scheduling on a GPU, ~0.5 ms `execute_b`
+//! here — DESIGN.md §1.1) and is exactly what round packing
+//! (DESIGN.md §9.6) amortizes, so a cost model without it would report
+//! identical "speedups" for a packed and an unpacked run and hide the
+//! stack's largest remaining wall-clock lever.
 
 use crate::engine::{GenResult, SpecMethod};
 
 /// Cost of one target forward (any block width ≤ K+1): the unit.
 pub const TARGET_FORWARD: f64 = 1.0;
+
+/// Per-device-dispatch overhead in target-forward units: each
+/// `execute_b` call (round, packed round, extract, upload) pays this on
+/// top of its compute. 0.05 ≈ a launch tax of 5% of a memory-bound
+/// decode forward — conservative for the H100 regime the model targets
+/// and far below the ~30% this CPU-PJRT substrate actually pays.
+pub const DISPATCH_OVERHEAD: f64 = 0.05;
 
 /// Tokens one prefill target forward chews through in the memory-bound
 /// regime — the same K+1 block width the decode model assumes (K = 7).
@@ -49,9 +64,13 @@ pub fn draft_step_cost(method: SpecMethod) -> f64 {
 }
 
 /// Simulated cost units per generated token for one finished request.
+/// Compute (target forwards + scaled draft steps) plus the per-dispatch
+/// tax: [`DISPATCH_OVERHEAD`] × the device calls the request actually
+/// issued, so packed runs (fewer dispatches for the same rounds) earn
+/// their call-count savings in simulated units too.
 pub fn simulated_units(method: SpecMethod, r: &GenResult) -> f64 {
     let tokens = r.tokens.len().max(1) as f64;
-    let units = match method {
+    let compute = match method {
         // AR: one target forward per token
         SpecMethod::Ar => tokens * TARGET_FORWARD,
         _ => {
@@ -62,7 +81,7 @@ pub fn simulated_units(method: SpecMethod, r: &GenResult) -> f64 {
             verify + draft
         }
     };
-    units / tokens
+    (compute + r.device_calls as f64 * DISPATCH_OVERHEAD) / tokens
 }
 
 #[cfg(test)]
@@ -91,8 +110,37 @@ mod tests {
 
     #[test]
     fn ar_is_one_unit_per_token() {
+        // zero dispatches recorded -> pure compute: exactly 1 unit/token
         let r = result(50, 50.0, 0.0);
         assert!((simulated_units(SpecMethod::Ar, &r) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dispatch_overhead_pins_ar_at_pack_1_as_baseline() {
+        // the regression pin for the per-dispatch term: unpacked AR
+        // issues 2 dispatches per token (one round + one extract), so
+        // the baseline costs exactly 1 + 2 * DISPATCH_OVERHEAD per token
+        let mut r = result(50, 50.0, 0.0);
+        r.device_calls = 2 * 50;
+        let want = 1.0 + 2.0 * DISPATCH_OVERHEAD;
+        let got = simulated_units(SpecMethod::Ar, &r);
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn packing_earns_its_call_savings_in_simulated_units() {
+        // same rounds and tokens, 8 rounds fused per dispatch: only the
+        // dispatch term shrinks, by the call-count ratio
+        let mut unpacked = result(48, 48.0, 0.0);
+        unpacked.device_calls = 2 * 48; // round + extract per round
+        let mut packed = result(48, 48.0, 0.0);
+        packed.device_calls = 2 * 48 / 8; // one call + extract per 8
+        let a = simulated_units(SpecMethod::Ar, &unpacked);
+        let b = simulated_units(SpecMethod::Ar, &packed);
+        assert!(b < a, "packed {b} not cheaper than unpacked {a}");
+        let diff = a - b;
+        let want = (2.0 - 0.25) * DISPATCH_OVERHEAD;
+        assert!((diff - want).abs() < 1e-12, "diff {diff}, want {want}");
     }
 
     #[test]

@@ -10,14 +10,19 @@
 //! probe, never a wrong restore.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::key::PrefixHasher;
 
 /// One cached snapshot: the exact token prefix it encodes plus the flat
-/// device state pulled after that prefix was prefilled/committed.
+/// device state pulled after that prefix was prefilled/committed. The
+/// state is an `Arc<[f32]>` so a lookup hit hands back a shared handle
+/// (refcount bump) instead of memcpy-ing the multi-MB vector on the hot
+/// chat path; the resident copy is immutable by construction — the
+/// restore path restamps its *own* working copy before upload.
 struct CacheEntry {
     tokens: Vec<u32>,
-    state: Vec<f32>,
+    state: Arc<[f32]>,
     /// LRU clock value of the last insert/hit touching this entry.
     last_used: u64,
 }
@@ -135,7 +140,7 @@ impl PrefixCache {
         self.tick += 1;
         let entry = CacheEntry {
             tokens: tokens.to_vec(),
-            state,
+            state: state.into(),
             last_used: self.tick,
         };
         let bytes = entry.bytes();
@@ -156,8 +161,9 @@ impl PrefixCache {
     }
 
     /// Longest token-confirmed cached prefix of `prompt`, or `None`.
-    /// Returns the matched length and a copy of the snapshot (the caller
-    /// restamps and uploads it; the resident copy stays intact).
+    /// Returns the matched length and a shared handle to the snapshot —
+    /// a refcount bump, not a copy: the caller restamps its own working
+    /// copy before upload, so the resident snapshot stays immutable.
     /// `full_only` restricts the search to an exact whole-prompt hit —
     /// what the engine asks for when the artifact set lacks the
     /// `prefill_ext` suffix program.
@@ -165,7 +171,7 @@ impl PrefixCache {
         &mut self,
         prompt: &[u32],
         full_only: bool,
-    ) -> Option<(usize, Vec<f32>)> {
+    ) -> Option<(usize, Arc<[f32]>)> {
         let mut hasher = PrefixHasher::new();
         let mut best: Option<(usize, u64)> = None;
         for (i, &t) in prompt.iter().enumerate() {
@@ -255,10 +261,10 @@ mod tests {
         c.insert(&[9, 9], state(8, 0.9));
         let (l, s) = c.lookup(&[1, 2, 3, 4, 5, 6], false).expect("hit");
         assert_eq!(l, 4);
-        assert_eq!(s, state(8, 0.4));
+        assert_eq!(&s[..], &state(8, 0.4)[..]);
         let (l, s) = c.lookup(&[1, 2, 7], false).expect("short hit");
         assert_eq!(l, 2);
-        assert_eq!(s, state(8, 0.2));
+        assert_eq!(&s[..], &state(8, 0.2)[..]);
         assert!(c.lookup(&[2, 1], false).is_none());
         assert_eq!(c.stats().hits, 2);
         assert_eq!(c.stats().tokens_saved, 6);
@@ -324,7 +330,18 @@ mod tests {
         c.insert(&[5, 6], state(8, 0.7));
         assert_eq!(c.entries(), 1);
         let (_, s) = c.lookup(&[5, 6], false).expect("hit");
-        assert_eq!(s, state(8, 0.7));
+        assert_eq!(&s[..], &state(8, 0.7)[..]);
+    }
+
+    #[test]
+    fn lookup_hits_share_one_allocation() {
+        // the zero-copy contract: two hits on one entry return handles
+        // to the same resident snapshot, not fresh copies
+        let mut c = PrefixCache::new(1 << 20);
+        c.insert(&[4, 2], state(32, 0.4));
+        let (_, a) = c.lookup(&[4, 2], false).expect("hit");
+        let (_, b) = c.lookup(&[4, 2, 9], false).expect("hit");
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
     }
 
     #[test]

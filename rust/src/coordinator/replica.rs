@@ -6,6 +6,14 @@
 //! interleaved round-robin over the single device — the CPU-PJRT analog of
 //! vLLM's iteration-level scheduling (cross-sequence GEMM batching is not
 //! expressible through the single-tuple-output xla crate; DESIGN.md §9.5).
+//!
+//! The loop is packing-aware (DESIGN.md §9.6): one interleave turn is one
+//! *device call*, which under round packing fuses up to `rounds_per_call`
+//! draft-verify rounds — so a packed slot holds the device pack× longer
+//! per turn. Admission therefore caps streaming slots at 1 (per-round
+//! delta granularity) and the engine's adaptive controller runs every
+//! sequence's first turn unpacked (TTFT p99) and shrinks the pack near
+//! the generation budget.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -47,6 +55,15 @@ pub struct ReplicaConfig {
     /// replica thread and never leaves it, like the runtime it snapshots
     /// (DESIGN.md §8).
     pub cache: CacheConfig,
+    /// Server-side round-packing default (`--pack`, DESIGN.md §9.6):
+    /// requests whose wire object omitted `"rounds_per_call"` fuse up
+    /// to this many rounds per device dispatch (an explicit
+    /// `"rounds_per_call": 1` opts out instead of inheriting this). A
+    /// packed step holds the device pack× longer per
+    /// interleave turn, so the loop caps streaming slots at 1 (delta
+    /// granularity) and the engine's controller caps the first turn of
+    /// every sequence at 1 (TTFT p99).
+    pub pack: usize,
 }
 
 impl EngineReplica {
@@ -183,6 +200,15 @@ fn replica_loop(
             } else {
                 None
             };
+            // packing-aware admission (DESIGN.md §9.6): the server
+            // `--pack` default applies only to requests that did not
+            // pin "rounds_per_call" themselves (an explicit 1 opts out
+            // of packing on a packed server)
+            if !item.request.pack_specified
+                && item.request.params.rounds_per_call <= 1
+            {
+                item.request.params.rounds_per_call = cfg.pack.max(1);
+            }
             let admitted = SeqRunner::new_with_cache(
                 rt,
                 &toks,
@@ -192,6 +218,17 @@ fn replica_loop(
             );
             match admitted {
                 Ok(mut runner) => {
+                    // streaming slots never pack: a fused call would
+                    // collapse per-round deltas into one chunk and hold
+                    // the device pack× longer before the next delta
+                    if item.request.stream {
+                        runner.set_pack_cap(1);
+                    }
+                    // the reply echoes the packing that actually runs —
+                    // 1 (suppressed) for streaming-capped slots, host
+                    // drafters and artifacts without *_multi programs
+                    item.request.params.rounds_per_call =
+                        runner.effective_rounds_per_call();
                     // thread the per-round commit callback: decode only
                     // the newly committed tail (the byte-level tokenizer
                     // decodes tokens independently, so tail decodes

@@ -49,6 +49,12 @@ pub struct Request {
     /// Stream incremental `{"delta": ...}` lines as verify rounds commit
     /// tokens (wire field `"stream": true`).
     pub stream: bool,
+    /// The request carried its own `"rounds_per_call"` / `"pack"` wire
+    /// field (even an explicit 1, which opts *out* of packing on a
+    /// `--pack` server). When `false` the replica applies its server
+    /// default. Programmatic submissions set `true`: their
+    /// [`GenParams`] are authoritative as given.
+    pub pack_specified: bool,
 }
 
 /// Terminal response for a request.
@@ -83,6 +89,12 @@ pub struct Response {
     /// Prompt tokens restored from the replica's prefix cache instead of
     /// prefilled (wire field `"cached_tokens"`, emitted when > 0).
     pub cached_tokens: usize,
+    /// Effective round-packing budget the request ran under — after the
+    /// `--pack` server default, streaming cap, capability fallback and
+    /// `PACK_MAX` clamp (wire field `"rounds_per_call"`, emitted when
+    /// > 1; the first call of any sequence still runs unpacked, the
+    /// TTFT guard of DESIGN.md §9.6).
+    pub rounds_per_call: usize,
 }
 
 /// One incremental streaming event: the text committed since the previous
@@ -137,6 +149,7 @@ impl Response {
             method: params.method.label(),
             canceled: false,
             cached_tokens: r.prefill_cached_tokens,
+            rounds_per_call: params.rounds_per_call,
         }
     }
 
@@ -156,6 +169,7 @@ impl Response {
             method: String::new(),
             canceled: false,
             cached_tokens: 0,
+            rounds_per_call: 1,
         }
     }
 
@@ -185,6 +199,12 @@ impl Response {
         if self.cached_tokens > 0 {
             o.set("cached_tokens", Value::Num(self.cached_tokens as f64));
         }
+        if self.rounds_per_call > 1 {
+            o.set(
+                "rounds_per_call",
+                Value::Num(self.rounds_per_call as f64),
+            );
+        }
         o
     }
 }
@@ -206,6 +226,12 @@ impl Response {
 /// `SpecMethod::from_request`). Likewise the `"policy"` value may be a
 /// CLI string (`"mars:0.9"`) and the legacy flat `"mars"` / `"theta"`
 /// keys still parse (to `Strict` / `Mars { theta }`).
+///
+/// `"rounds_per_call"` (alias `"pack"`) opts the request into round
+/// packing: up to N draft-verify rounds fused per device dispatch
+/// (DESIGN.md §9.6). Absent means the server's `--pack` default;
+/// streaming requests are capped to 1 by the replica so every round
+/// still emits its delta, and the reply echoes the effective value.
 pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     let prompt = v
         .get("prompt")
@@ -243,8 +269,20 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     if let Some(x) = fget("seed") {
         params.seed = x as u64;
     }
+    // round packing: `"rounds_per_call"` (alias `"pack"`) fuses up to N
+    // draft-verify rounds per device dispatch (DESIGN.md §9.6); an
+    // explicit 1 opts out of the server's `--pack` default
+    let pack_field = v.get("rounds_per_call").or_else(|| v.get("pack"));
+    let pack_specified = pack_field.is_some();
+    if let Some(x) = pack_field {
+        params.rounds_per_call = x
+            .as_f64()
+            .filter(|f| f.is_finite() && *f >= 1.0 && f.fract() == 0.0)
+            .map(|f| f as usize)
+            .ok_or("'rounds_per_call' must be a positive integer")?;
+    }
     params.cache = cache;
-    Ok(Request { id, prompt, params, stream })
+    Ok(Request { id, prompt, params, stream, pack_specified })
 }
 
 /// Work item flowing to a replica: the request, its reply channel, and the
@@ -398,6 +436,7 @@ mod tests {
             method: "eagle_tree:k=7,beam=2,branch=2".into(),
             canceled: false,
             cached_tokens: 0,
+            rounds_per_call: 1,
         };
         let v = resp.to_json();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
@@ -423,6 +462,48 @@ mod tests {
             w.to_json().get("cached_tokens").and_then(|t| t.as_usize()),
             Some(12)
         );
+        // "rounds_per_call" only appears when the request actually packed
+        assert!(v.get("rounds_per_call").is_none());
+        let mut p = resp.clone();
+        p.rounds_per_call = 8;
+        assert_eq!(
+            p.to_json()
+                .get("rounds_per_call")
+                .and_then(|t| t.as_usize()),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn parses_rounds_per_call_and_pack_alias() {
+        // absent: defaults apply AND the replica may overlay its --pack
+        let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
+        let r = parse_request_json(1, &v).unwrap();
+        assert_eq!(r.params.rounds_per_call, 1);
+        assert!(!r.pack_specified);
+        let v = Value::parse(r#"{"prompt": "hi", "rounds_per_call": 8}"#)
+            .unwrap();
+        let r = parse_request_json(1, &v).unwrap();
+        assert_eq!(r.params.rounds_per_call, 8);
+        assert!(r.pack_specified);
+        let v = Value::parse(r#"{"prompt": "hi", "pack": 4}"#).unwrap();
+        assert_eq!(parse_request_json(1, &v).unwrap().params.rounds_per_call, 4);
+        // an explicit 1 is still "specified": it opts the request out of
+        // packing on a --pack server rather than inheriting the default
+        let v = Value::parse(r#"{"prompt": "hi", "rounds_per_call": 1}"#)
+            .unwrap();
+        let r = parse_request_json(1, &v).unwrap();
+        assert_eq!(r.params.rounds_per_call, 1);
+        assert!(r.pack_specified);
+        for bad in [
+            r#"{"prompt": "hi", "rounds_per_call": 0}"#,
+            r#"{"prompt": "hi", "rounds_per_call": 2.5}"#,
+            r#"{"prompt": "hi", "rounds_per_call": "x"}"#,
+            r#"{"prompt": "hi", "pack": -1}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(parse_request_json(1, &v).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -84,6 +84,10 @@ pub struct SubmitOptions {
     pub id: Option<RequestId>,
     /// Per-round delta sink for streaming requests.
     pub stream: Option<StreamSink>,
+    /// The caller pinned `GenParams::rounds_per_call` itself (a wire
+    /// request carried `"rounds_per_call"`/`"pack"`, even an explicit
+    /// 1): the replica must not apply its `--pack` server default.
+    pub pack_specified: bool,
 }
 
 /// Live handle to one submitted request.
@@ -110,7 +114,9 @@ pub struct Router {
 
 impl Router {
     /// Spin up `n_replicas` engine threads and wait until every runtime
-    /// has compiled its executables.
+    /// has compiled its executables. `pack` is the server-side round
+    /// packing default (`--pack`, DESIGN.md §9.6) replicas apply to
+    /// requests that don't carry their own `"rounds_per_call"`.
     pub fn start(
         artifact_dir: &Path,
         n_replicas: usize,
@@ -118,6 +124,7 @@ impl Router {
         hostloop: bool,
         policy: RouterPolicy,
         cache: crate::cache::CacheConfig,
+        pack: usize,
     ) -> Result<Router> {
         let metrics = Arc::new(MetricsRegistry::new());
         let mut replicas = Vec::new();
@@ -133,6 +140,7 @@ impl Router {
                     slots,
                     hostloop,
                     cache,
+                    pack,
                 },
                 rx,
                 metrics.clone(),
@@ -209,6 +217,7 @@ impl Router {
                 prompt: prompt.to_string(),
                 params,
                 stream: opts.stream.is_some(),
+                pack_specified: opts.pack_specified,
             },
             reply: tx,
             submitted_at: std::time::Instant::now(),
@@ -231,12 +240,16 @@ impl Router {
     }
 
     /// Submit a request; the response arrives on the returned channel.
+    /// Programmatic [`GenParams`] are authoritative as given — the
+    /// replica's `--pack` server default is a *wire* convenience and is
+    /// not overlaid here.
     pub fn submit(
         &self,
         prompt: &str,
         params: GenParams,
     ) -> Receiver<Response> {
-        self.submit_opts(prompt, params, SubmitOptions::default()).rx
+        let opts = SubmitOptions { pack_specified: true, ..Default::default() };
+        self.submit_opts(prompt, params, opts).rx
     }
 
     /// Submit and wait.
@@ -259,7 +272,11 @@ impl Router {
         let h = self.submit_opts(
             prompt,
             params,
-            SubmitOptions { id: None, stream: Some(stream) },
+            SubmitOptions {
+                stream: Some(stream),
+                pack_specified: true,
+                ..Default::default()
+            },
         );
         match h.rx.recv() {
             Ok(r) => r,

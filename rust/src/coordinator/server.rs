@@ -29,6 +29,18 @@
 //! prefix cache (DESIGN.md §8) restored part of the prompt instead of
 //! prefilling it; `"cache": false` opts a request out of reuse.
 //!
+//! `"rounds_per_call"` (alias `"pack"`) opts a request into round
+//! packing (DESIGN.md §9.6): up to N draft-verify rounds fused per
+//! device dispatch. Absent means the server's `--pack` default applies;
+//! an explicit `1` opts out of packing entirely. Streaming requests
+//! always run unpacked (per-round deltas), as do host-drafted methods
+//! and artifact sets without the fused programs — the reply echoes
+//! `"rounds_per_call"` only when the request's *effective* packing
+//! budget (after the server default, streaming cap, capability fallback
+//! and `PACK_MAX` clamp) was > 1. Note the first call of every sequence
+//! runs unpacked regardless (TTFT guard), so a generation that finishes
+//! in one call issues no packed dispatch even when the echo is > 1.
+//!
 //! The `"method"` value selects the drafting descriptor (see
 //! `crate::spec::SpecMethod::from_request`): a structured one-key
 //! object, a CLI string (`"eagle_tree:k=7,beam=2"`), or a legacy bare
@@ -323,7 +335,11 @@ fn submit_request(
     let handle = router.submit_opts(
         &req.prompt,
         req.params,
-        SubmitOptions { id: Some(id), stream: sink },
+        SubmitOptions {
+            id: Some(id),
+            stream: sink,
+            pack_specified: req.pack_specified,
+        },
     );
     inflight.lock().unwrap().insert(id, handle.cancel.clone());
     // Per-request waiter: forwards the terminal reply once the replica is

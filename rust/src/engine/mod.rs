@@ -14,6 +14,13 @@
 //! | `pld:min=2,max=4,k=7`              | host n-gram prompt lookup        | `verify_ext_round` |
 //! | `lookahead:n=3,g=8,cap=4096,k=7`   | host n-gram pool (simplified)    | `verify_ext_round` |
 //!
+//! Round packing ([`GenParams::rounds_per_call`] > 1, DESIGN.md §9.6)
+//! swaps the device program for the method's fused `*_multi` variant
+//! ([`SpecMethod::multi_exec_name`]) running up to N rounds per dispatch
+//! with one `extract` per packed call — token-identical to the unpacked
+//! path, minus the per-round dispatch tax. Host-drafted methods and
+//! artifacts without the `*_multi` programs fall back to single rounds.
+//!
 //! MARS is a *verification policy* ([`GenParams::policy`]), not a method:
 //! it changes only the accept/reject rule inside the device-side
 //! verification, exactly as in the paper. Every policy of the
@@ -57,8 +64,18 @@ pub struct GenParams {
     /// record (z1, z2, flag) probe entries for figures 1/4
     pub probe: bool,
     /// pull a snapshot every N rounds (1 = exact stats; >1 trades stat
-    /// granularity for fewer device calls — §Perf lever)
+    /// granularity for fewer device calls — §Perf lever). Ignored while
+    /// round packing is active ([`GenParams::rounds_per_call`] > 1 on a
+    /// packable method): a packed call already amortizes the snapshot
+    /// to one `extract` per fused pack.
     pub extract_every: usize,
+    /// Rounds fused per device dispatch (round packing, DESIGN.md §9.6;
+    /// CLI `--pack`, wire `"rounds_per_call"`). 1 = the classic
+    /// one-dispatch-per-round path; > 1 drives the method's `*_multi`
+    /// program with one `extract` per packed call, adaptively shrunk
+    /// near the generation budget. Host-drafted methods and artifact
+    /// sets without the `*_multi` programs fall back to 1.
+    pub rounds_per_call: usize,
     /// opt this request into prefix-cache reuse when its replica carries
     /// a cache (wire field `"cache": false` opts out; see `crate::cache`)
     pub cache: bool,
@@ -74,9 +91,37 @@ impl Default for GenParams {
             seed: 0,
             probe: false,
             extract_every: 1,
+            rounds_per_call: 1,
             cache: true,
         }
     }
+}
+
+/// The adaptive pack controller (pure, property-tested): how many rounds
+/// the next packed call should fuse given the configured pack, an
+/// external cap (the replica caps streaming slots at 1 to keep per-round
+/// delta granularity), and generation progress. Packs aggressively
+/// mid-sequence, but:
+///
+/// * **TTFT guard** — the first call after prefill always runs a single
+///   round, so the time to the first committed token never stretches by
+///   the pack factor;
+/// * **budget shrink** — every round commits at least one token, so a
+///   pack larger than the remaining `max_new` budget is guaranteed
+///   overrun work; the pack shrinks to the remainder as the sequence
+///   approaches its budget (the device additionally exits its fused loop
+///   at the stop flag, so this bounds even the worst case twice).
+pub fn effective_pack(
+    configured: usize,
+    cap: usize,
+    committed: usize,
+    max_new: usize,
+) -> usize {
+    let pack = configured.clamp(1, cap.max(1));
+    if committed == 0 {
+        return 1;
+    }
+    pack.min(max_new.saturating_sub(committed).max(1))
 }
 
 /// Result of one generation.
@@ -130,6 +175,15 @@ pub struct SeqRunner<'a> {
     sess: crate::runtime::Session<'a>,
     params: GenParams,
     source: Box<dyn DraftSource>,
+    /// The method's fused multi-round program, resolved once at
+    /// construction: `Some` only when the request packs
+    /// (`rounds_per_call > 1`), the method is device-coupled, and the
+    /// artifact set carries the `*_multi` executable (capability
+    /// detection — old artifacts fall back to single rounds).
+    multi_exec: Option<&'static str>,
+    /// External pack cap ([`SeqRunner::set_pack_cap`]): the replica caps
+    /// streaming slots at 1 so every round still emits its delta.
+    pack_cap: usize,
     prompt: Vec<u32>,
     history: Vec<u32>,
     spins: usize,
@@ -184,7 +238,19 @@ impl<'a> SeqRunner<'a> {
         hostloop: bool,
         cache: Option<SharedPrefixCache>,
     ) -> Result<Self> {
-        let params = params.clone();
+        let mut params = params.clone();
+        // the device clamps its fused loop to the artifact's PACK_MAX;
+        // clamp the host knob to the same bound so the round accounting
+        // (`spins`), the lowered cfg slot and the echoed value all
+        // describe rounds the device can actually run. Artifact sets
+        // that predate packing carry no `pack_max` const (and no
+        // `*_multi` programs) — treat their bound as 1.
+        if params.rounds_per_call > 1 {
+            let pack_max =
+                rt.layout().consts.get("pack_max").copied().unwrap_or(1);
+            params.rounds_per_call =
+                params.rounds_per_call.min(pack_max.max(1));
+        }
         let t0 = Instant::now();
         let full_only = !rt.supports_suffix_prefill();
         let hit = cache.as_ref().and_then(|c| {
@@ -230,12 +296,22 @@ impl<'a> SeqRunner<'a> {
         }
         let prefill_seconds = t0.elapsed().as_secs_f64();
         let source = params.method.draft_source();
+        let multi_exec = if params.rounds_per_call > 1 {
+            params
+                .method
+                .multi_exec_name()
+                .filter(|name| rt.supports_round_packing(name))
+        } else {
+            None
+        };
         // generous hard cap: even tau=1 finishes within max_new rounds
         let round_cap = params.max_new * 2 + 8;
         Ok(SeqRunner {
             sess,
             params,
             source,
+            multi_exec,
+            pack_cap: usize::MAX,
             prompt: prompt.to_vec(),
             history: prompt.to_vec(),
             spins: 0,
@@ -265,20 +341,72 @@ impl<'a> SeqRunner<'a> {
         (self.history.len() - self.prompt.len()).min(self.params.max_new)
     }
 
-    /// Run `extract_every` rounds + one snapshot pull. Returns the final
-    /// result once the sequence has finished.
+    /// Cap the pack externally (packing-aware scheduling): the replica
+    /// sets 1 on streaming slots so every verify round still emits its
+    /// delta, and a packed step never holds the device R× longer than
+    /// the slot's latency contract allows.
+    pub fn set_pack_cap(&mut self, cap: usize) {
+        self.pack_cap = cap.max(1);
+    }
+
+    /// The steady-state packing this sequence actually runs: the
+    /// configured `rounds_per_call` bounded by the external cap, or 1
+    /// when the method or artifact set cannot pack at all (host
+    /// drafters, pre-`*_multi` artifacts). This — not the requested
+    /// knob — is what the serving layer echoes as `"rounds_per_call"`.
+    pub fn effective_rounds_per_call(&self) -> usize {
+        if self.multi_exec.is_none() {
+            1
+        } else {
+            self.params.rounds_per_call.clamp(1, self.pack_cap)
+        }
+    }
+
+    /// The pack the next step will request (1 on the unpacked path).
+    pub fn next_pack(&self) -> usize {
+        if self.multi_exec.is_none() {
+            return 1;
+        }
+        effective_pack(
+            self.params.rounds_per_call,
+            self.pack_cap,
+            self.committed(),
+            self.params.max_new,
+        )
+    }
+
+    /// Run one device turn + one snapshot pull: `extract_every` rounds on
+    /// the classic path, or one fused `*_multi` call of up to
+    /// [`SeqRunner::next_pack`] rounds when the request packs — either
+    /// way `extract` runs once per turn, not once per round. Returns the
+    /// final result once the sequence has finished.
     pub fn step(&mut self) -> Result<Option<GenResult>> {
         let t = Instant::now();
         if self.decode_started.is_none() {
             self.decode_started = Some(t);
         }
-        let every = self.params.extract_every.max(1);
-        for _ in 0..every {
-            match self.source.next_drafts(&self.history) {
-                Some(drafts) => self.sess.round_ext(&drafts)?,
-                None => self.sess.round(self.source.exec_name())?,
+        match self.multi_exec {
+            Some(exec) => {
+                let pack = self.next_pack();
+                if pack > 1 {
+                    self.sess.round_packed(exec, pack)?;
+                } else {
+                    // a single round needs no pack argument — drive the
+                    // plain program (also what the TTFT guard runs)
+                    self.sess.round(self.source.exec_name())?;
+                }
+                self.spins += pack;
             }
-            self.spins += 1;
+            None => {
+                let every = self.params.extract_every.max(1);
+                for _ in 0..every {
+                    match self.source.next_drafts(&self.history) {
+                        Some(drafts) => self.sess.round_ext(&drafts)?,
+                        None => self.sess.round(self.source.exec_name())?,
+                    }
+                    self.spins += 1;
+                }
+            }
         }
         let snap = self.sess.extract()?;
         self.history = self.prompt.clone();
@@ -388,5 +516,39 @@ impl DecodeEngine {
                 return Ok(result);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_pack_guards_ttft() {
+        // the first call after prefill is always a single round
+        assert_eq!(effective_pack(8, usize::MAX, 0, 64), 1);
+        assert_eq!(effective_pack(1, usize::MAX, 0, 64), 1);
+        // once committed, the configured pack applies
+        assert_eq!(effective_pack(8, usize::MAX, 1, 64), 8);
+    }
+
+    #[test]
+    fn effective_pack_shrinks_at_the_budget_boundary() {
+        // remaining budget bounds the pack: every round commits >= 1
+        // token, so packs past the remainder are guaranteed overrun
+        assert_eq!(effective_pack(8, usize::MAX, 60, 64), 4);
+        assert_eq!(effective_pack(8, usize::MAX, 63, 64), 1);
+        // at/past the budget the caller finalizes; never return 0
+        assert_eq!(effective_pack(8, usize::MAX, 64, 64), 1);
+        assert_eq!(effective_pack(8, usize::MAX, 80, 64), 1);
+    }
+
+    #[test]
+    fn effective_pack_respects_external_cap() {
+        // the replica's streaming cap wins over the configured pack
+        assert_eq!(effective_pack(8, 1, 10, 64), 1);
+        assert_eq!(effective_pack(8, 4, 10, 64), 4);
+        // degenerate inputs clamp instead of panicking
+        assert_eq!(effective_pack(0, 0, 10, 64), 1);
     }
 }

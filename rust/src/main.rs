@@ -4,7 +4,7 @@
 //! mars info                          artifact + model summary
 //! mars generate --prompt "..."       one-shot generation
 //! mars serve --bind 127.0.0.1:7071   line-JSON TCP serving
-//! mars bench <table1..table7|fig3|policies|perf|all>
+//! mars bench <table1..table7|fig3|policies|packing|perf|serve|all>
 //! mars analyze <fig1|fig4>           probe-ring dumps + ASCII plots
 //! mars eval --task arith --method eagle_tree [--policy mars:0.9]
 //! ```
@@ -59,16 +59,22 @@ USAGE: mars <cmd> [flags]
       [--policy strict|mars:0.9|topk:2:0.1|entropy:1.5]
       [--mars|--no-mars] [--theta 0.9]   (legacy aliases for --policy)
       [--temperature 1.0] [--max-new 128] [--seed 0] [--hostloop]
+      [--pack 1]   rounds fused per device call (round packing)
   serve [--bind ADDR] [--replicas 1] [--slots 4] [--route rr|ll|prefix]
       [--cache-mb 256]   per-replica prefix-cache budget (0 disables)
+      [--pack 1]   server default rounds_per_call (requests override
+          with \"rounds_per_call\"; streaming slots always run unpacked)
       line-JSON protocol: pipelined ids, \"stream\": true deltas,
       \"cache\": false opt-out, {{\"cmd\": \"cancel\", \"id\": N}} —
       see coordinator/server.rs docs
-  bench table1|..|table7|fig3|perf|policies|serve|all
+  bench table1|..|table7|fig3|perf|policies|packing|serve|all
       [--n 16] [--seed 7] [--max-new 96]
-      [--methods sps:k=6,eagle_tree,pld]      (policies/serve; default:
-          every speculative method in the registry / the default tree)
-      [--policies strict,mars:0.9,topk:2,entropy:1.5]   (policies/serve)
+      [--methods sps:k=6,eagle_tree,pld]      (policies/packing/serve;
+          defaults: every speculative method in the registry /
+          sps + eagle_tree / the default tree)
+      [--policies strict,mars:0.9,topk:2,entropy:1.5]   (policies/
+          packing/serve; packing defaults to strict,mars:0.9)
+      [--packs 1,2,4,8,16]   rounds_per_call sweep list     (packing)
       [--connections 4] [--rate 8.0] [--replicas 1] [--slots 4]  (serve)
       [--scenario sweep|chat] [--turns 3] [--cache-mb 256]        (serve;
           chat = multi-turn conversations, cache-on vs cache-off waves)
@@ -132,6 +138,7 @@ fn gen_params(args: &Args) -> Result<GenParams> {
         seed: args.get_usize("seed", d.seed as usize) as u64,
         probe: args.has("probe"),
         extract_every: args.get_usize("extract-every", 1),
+        rounds_per_call: args.get_usize("pack", d.rounds_per_call).max(1),
         cache: !args.has("no-cache"),
     })
 }
@@ -193,6 +200,7 @@ fn run(args: &Args) -> Result<()> {
                 args.has("hostloop"),
                 policy,
                 cache,
+                args.get_usize("pack", 1).max(1),
             )?);
             let handle = server::serve(router.clone(), &bind)?;
             println!("serving on {} ({} replicas)", handle.addr, replicas);
@@ -299,6 +307,35 @@ fn run(args: &Args) -> Result<()> {
                     &msweep(SpecMethod::speculative_defaults())?,
                     &sweep()?,
                 )?,
+                "packing" => {
+                    // the dispatch-tax sweep wants a tight default grid:
+                    // the two acceptance families x the two headline
+                    // policies (override with --methods / --policies)
+                    let spec = args.get_or("packs", "1,2,4,8,16");
+                    let packs: Vec<usize> = spec
+                        .split(',')
+                        .map(|s| {
+                            s.trim().parse::<usize>().ok().filter(|&p| p >= 1)
+                        })
+                        .collect::<Option<Vec<usize>>>()
+                        .ok_or_else(|| anyhow!("bad --packs list '{spec}'"))?;
+                    let policies = match args.get("policies") {
+                        None => vec![
+                            VerifyPolicy::Strict,
+                            VerifyPolicy::Mars { theta: 0.9 },
+                        ],
+                        Some(_) => sweep()?,
+                    };
+                    bench::packing(
+                        &ctx,
+                        &msweep(vec![
+                            SpecMethod::Sps { k: 7 },
+                            SpecMethod::default(),
+                        ])?,
+                        &policies,
+                        &packs,
+                    )?
+                }
                 "all" => {
                     bench::table1(&ctx)?;
                     bench::table2(&ctx)?;

@@ -303,6 +303,12 @@ impl Runtime {
         cfg[c("greedy")] = if params.temperature <= 0.0 { 1.0 } else { 0.0 };
         cfg[c("seed")] = (params.seed % (1 << 24)) as f32;
         cfg[c("prompt_len")] = prompt_len as f32;
+        // round packing (DESIGN.md §9.6): the configured pack cap; old
+        // artifact layouts predate the slot, so write it only when known
+        // (those artifacts lack the *_multi programs anyway)
+        if let Some(&ci) = lay.cfg.get("rounds_per_call") {
+            cfg[ci] = params.rounds_per_call as f32;
+        }
         cfg
     }
 
@@ -329,13 +335,14 @@ impl Runtime {
         let prompt_buf = self.upload(&prompt)?;
         let cfg_buf = self.upload(&cfg)?;
         let state = self.run("prefill", None, &[&prompt_buf, &cfg_buf])?;
-        Ok(Session {
-            rt: self,
-            state: DeviceState::Buffer(state),
-            hostloop: false,
-            rounds_run: 0,
-            device_calls: 1,
-        })
+        Ok(Session::wrap(self, DeviceState::Buffer(state), 1))
+    }
+
+    /// Does this artifact set carry the fused multi-round program
+    /// `exec_name` (round packing)? Older builds lack the `*_multi`
+    /// variants; callers fall back to the single-round path.
+    pub fn supports_round_packing(&self, exec_name: &str) -> bool {
+        self.has_exec(exec_name)
     }
 
     /// Can this artifact set extend a restored snapshot with a token
@@ -399,13 +406,7 @@ impl Runtime {
             device_calls += 1;
             self.run("prefill_ext", Some(&state_buf), &[&ext_buf])?
         };
-        Ok(Session {
-            rt: self,
-            state: DeviceState::Buffer(state_buf),
-            hostloop: false,
-            rounds_run: 0,
-            device_calls,
-        })
+        Ok(Session::wrap(self, DeviceState::Buffer(state_buf), device_calls))
     }
 }
 
@@ -421,11 +422,40 @@ pub struct Session<'a> {
     rt: &'a Runtime,
     state: DeviceState,
     hostloop: bool,
+    /// Cached `pack` argument of the last [`Session::round_packed`] call:
+    /// the one-float budget buffer is reuploaded only when the adaptive
+    /// controller changes the value, not every call.
+    pack_buf: Option<(usize, xla::PjRtBuffer)>,
+    /// Preallocated staging vector for `round_ext` draft uploads (reused
+    /// across rounds instead of a fresh `Vec<f32>` per call).
+    ext_staging: Vec<f32>,
+    /// Device buffer holding `ext_staging`'s last uploaded contents; kept
+    /// so an unchanged draft vector (above all the empty draft) skips the
+    /// re-upload entirely.
+    ext_buf: Option<xla::PjRtBuffer>,
+    /// Rounds driven so far. Packed calls count their *requested* budget
+    /// (the device may exit the fused loop early at a stop flag), so this
+    /// is an upper bound used for loop caps, not an exact round count —
+    /// the state's own `rounds` scalar is exact.
     pub rounds_run: u64,
+    /// Device executions + buffer uploads this session issued.
     pub device_calls: u64,
 }
 
 impl<'a> Session<'a> {
+    fn wrap(rt: &'a Runtime, state: DeviceState, device_calls: u64) -> Self {
+        Session {
+            rt,
+            state,
+            hostloop: false,
+            pack_buf: None,
+            ext_staging: Vec::new(),
+            ext_buf: None,
+            rounds_run: 0,
+            device_calls,
+        }
+    }
+
     /// Switch to the naive host-roundtrip runtime (§Perf baseline): the
     /// state is pulled to host after every call and re-uploaded before the
     /// next one.
@@ -483,20 +513,65 @@ impl<'a> Session<'a> {
         self.store_state(out)
     }
 
-    /// Run one `verify_ext_round` with host-provided draft tokens.
-    pub fn round_ext(&mut self, drafts: &[u32]) -> Result<()> {
-        let lay = self.rt.layout();
-        let k_max = lay.konst("k_max");
-        let mut ext = vec![0f32; k_max + 1];
-        let n = drafts.len().min(k_max);
-        ext[0] = n as f32;
-        for i in 0..n {
-            ext[1 + i] = drafts[i] as f32;
+    /// Run one fused multi-round call of a `*_multi` executable: up to
+    /// `rounds` draft-verify rounds per dispatch (round packing,
+    /// DESIGN.md §9.6). The device exits the fused loop early once the
+    /// sequence finishes, so over-asking costs nothing; the one-float
+    /// budget buffer is cached and reuploaded only when `rounds` changes.
+    pub fn round_packed(&mut self, exec_name: &str, rounds: usize) -> Result<()> {
+        let rounds = rounds.max(1);
+        let reuse = matches!(&self.pack_buf, Some((v, _)) if *v == rounds);
+        if !reuse {
+            let buf = self.rt.upload(&[rounds as f32])?;
+            self.device_calls += 1;
+            self.pack_buf = Some((rounds, buf));
         }
-        let ext_buf = self.rt.upload(&ext)?;
         let sb = self.state_buf()?;
-        let out = self.rt.run("verify_ext_round", Some(&sb), &[&ext_buf])?;
-        self.device_calls += 2;
+        let out = {
+            let (_, pack_buf) =
+                self.pack_buf.as_ref().expect("pack buffer present");
+            self.rt.run(exec_name, Some(&sb), &[pack_buf])?
+        };
+        self.device_calls += 1;
+        self.rounds_run += rounds as u64;
+        self.store_state(out)
+    }
+
+    /// Run one `verify_ext_round` with host-provided draft tokens. The
+    /// staging vector is preallocated once and the device buffer is
+    /// reuploaded only when the draft contents actually changed (empty
+    /// and repeated drafts ride the previous upload for free).
+    pub fn round_ext(&mut self, drafts: &[u32]) -> Result<()> {
+        let k_max = self.rt.layout().konst("k_max");
+        if self.ext_staging.len() != k_max + 1 {
+            self.ext_staging = vec![0f32; k_max + 1];
+            self.ext_buf = None;
+        }
+        let n = drafts.len().min(k_max);
+        let mut changed = self.ext_buf.is_none();
+        let (len_slot, body) =
+            self.ext_staging.split_first_mut().expect("staging nonempty");
+        if *len_slot != n as f32 {
+            *len_slot = n as f32;
+            changed = true;
+        }
+        for (i, slot) in body.iter_mut().enumerate() {
+            let v = if i < n { drafts[i] as f32 } else { 0.0 };
+            if *slot != v {
+                *slot = v;
+                changed = true;
+            }
+        }
+        if changed {
+            self.ext_buf = Some(self.rt.upload(&self.ext_staging)?);
+            self.device_calls += 1;
+        }
+        let sb = self.state_buf()?;
+        let out = {
+            let ext_buf = self.ext_buf.as_ref().expect("ext buffer present");
+            self.rt.run("verify_ext_round", Some(&sb), &[ext_buf])?
+        };
+        self.device_calls += 1;
         self.rounds_run += 1;
         self.store_state(out)
     }

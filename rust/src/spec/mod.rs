@@ -556,6 +556,24 @@ impl SpecMethod {
         }
     }
 
+    /// Name of the fused multi-round program (round packing, DESIGN.md
+    /// §9.6) that runs up to `rounds_per_call` rounds of this method per
+    /// dispatch, or `None` for host-drafted families (PLD / Lookahead
+    /// need fresh host drafts every round, so they cannot pack). Callers
+    /// must still gate on `Runtime::has_exec` — older artifact sets
+    /// predate the `*_multi` variants and fall back to single rounds.
+    pub fn multi_exec_name(&self) -> Option<&'static str> {
+        match self {
+            SpecMethod::Ar => Some("ar_multi"),
+            SpecMethod::Sps { .. } => Some("sps_multi"),
+            SpecMethod::EagleChain { .. } | SpecMethod::EagleTree { .. } => {
+                Some("eagle_tree_multi")
+            }
+            SpecMethod::Medusa { .. } => Some("medusa_multi"),
+            SpecMethod::Pld { .. } | SpecMethod::Lookahead { .. } => None,
+        }
+    }
+
     /// Encode into the `(kdraft, beam, branch)` config-slot triple the
     /// round programs read (see `python/compile/state_spec.py`). Chain
     /// methods lower to the degenerate `beam = branch = 1` tree; host
@@ -787,6 +805,32 @@ mod tests {
             SpecMethod::parse("pld").unwrap().exec_name(),
             "verify_ext_round"
         );
+    }
+
+    #[test]
+    fn multi_exec_names_cover_device_coupled_families() {
+        // every device-coupled method has a fused variant named after its
+        // round program; host-drafted families pack nothing
+        for info in METHODS {
+            let base = info.default.exec_name();
+            match info.default.multi_exec_name() {
+                Some(multi) => assert_eq!(
+                    multi,
+                    format!(
+                        "{}_multi",
+                        base.trim_end_matches("_round").trim_end_matches("_step")
+                    ),
+                    "{}",
+                    info.name
+                ),
+                None => assert_eq!(base, "verify_ext_round", "{}", info.name),
+            }
+        }
+        assert_eq!(
+            SpecMethod::EagleChain { depth: 5 }.multi_exec_name(),
+            Some("eagle_tree_multi")
+        );
+        assert_eq!(SpecMethod::Ar.multi_exec_name(), Some("ar_multi"));
     }
 
     #[test]

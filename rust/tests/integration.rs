@@ -49,6 +49,10 @@ fn artifacts_metadata_consistent() {
         "eagle_tree_round",
         "medusa_round",
         "verify_ext_round",
+        "ar_multi",
+        "sps_multi",
+        "eagle_tree_multi",
+        "medusa_multi",
         "extract",
         "extract_probe",
     ] {
@@ -148,6 +152,67 @@ fn engine_semantics_suite() {
     p.extract_every = 4;
     let b = engine.generate("Q: 12+7=?\nA: ", &p).expect("b");
     assert_eq!(a.tokens, b.tokens, "blind rounds changed the output");
+
+    // --- round packing: packed decode is token-identical to unpacked
+    //     across every method family x every verify policy, T=0 and T=1
+    //     (the fused loop body IS the single-round program) -------------
+    for method in SpecMethod::all_defaults() {
+        for policy in [
+            VerifyPolicy::Strict,
+            VerifyPolicy::Mars { theta: 0.9 },
+            VerifyPolicy::TopK { k: 2, eps: 0.1 },
+            VerifyPolicy::Entropy { h_max: 1.0 },
+        ] {
+            for temp in [0.0f32, 1.0] {
+                let mut p = params(method, policy, temp);
+                p.max_new = 32;
+                let unpacked =
+                    engine.generate(prompt, &p).unwrap_or_else(|e| {
+                        panic!("{method:?}/{policy:?} unpacked: {e:#}")
+                    });
+                p.rounds_per_call = 8;
+                let packed =
+                    engine.generate(prompt, &p).unwrap_or_else(|e| {
+                        panic!("{method:?}/{policy:?} packed: {e:#}")
+                    });
+                assert_eq!(
+                    packed.tokens, unpacked.tokens,
+                    "{method:?}/{policy:?}/T={temp}: packed decode \
+                     diverged: {:?} vs {:?}",
+                    packed.text, unpacked.text
+                );
+                assert_eq!(
+                    packed.snapshot.rounds, unpacked.snapshot.rounds,
+                    "{method:?}/{policy:?}/T={temp}: round counts differ"
+                );
+                // device-coupled methods must actually amortize calls;
+                // host drafters have no fused program and fall back
+                if method.multi_exec_name().is_some()
+                    && unpacked.snapshot.rounds >= 4.0
+                {
+                    assert!(
+                        packed.device_calls < unpacked.device_calls,
+                        "{method:?}/{policy:?}/T={temp}: packing saved \
+                         no device calls ({} vs {})",
+                        packed.device_calls,
+                        unpacked.device_calls
+                    );
+                }
+            }
+        }
+    }
+
+    // --- adaptive shrink at the max_new boundary: a packed run may not
+    //     commit past the budget any differently than an unpacked run --
+    {
+        let mut p = params(SpecMethod::default(), VerifyPolicy::default(), 0.0);
+        p.max_new = 5; // smaller than one default pack
+        let unpacked = engine.generate(prompt, &p).expect("boundary unpacked");
+        p.rounds_per_call = 16;
+        let packed = engine.generate(prompt, &p).expect("boundary packed");
+        assert_eq!(packed.tokens, unpacked.tokens);
+        assert!(packed.tokens.len() <= 5);
+    }
 
     // --- probe entries flow to host ------------------------------------
     let mut p = params(SpecMethod::default(), VerifyPolicy::default(), 1.0);
@@ -261,6 +326,10 @@ fn router_end_to_end_over_tcp() {
     use mars::coordinator::server;
     use std::sync::Arc;
     let Some(dir) = artifacts_dir() else { return };
+    // pack=4 server default: wire requests without "rounds_per_call"
+    // run packed (exercising cache x packing composition throughout),
+    // an explicit 1 opts out, streaming stays per-round — all pinned
+    // below
     let router = Arc::new(
         Router::start(
             &dir,
@@ -269,6 +338,7 @@ fn router_end_to_end_over_tcp() {
             false,
             RouterPolicy::RoundRobin,
             mars::cache::CacheConfig::default(),
+            4,
         )
         .expect("router"),
     );
@@ -476,5 +546,112 @@ fn router_end_to_end_over_tcp() {
         // far fewer tokens than max_new committed before the cancel hit
         let tokens = fin.get("tokens").and_then(|t| t.as_usize()).unwrap();
         assert!(tokens < 2048, "cancel did not stop generation: {tokens}");
+    }
+
+    // ---- round packing over the wire: a packed request is
+    //      token-identical to unpacked and echoes the effective pack ----
+    {
+        let base = "{\"prompt\": \"Q: 9+5=?\\nA: \", \"method\": \
+                    \"eagle_tree\", \"policy\": \"mars:0.9\", \
+                    \"max_new\": 16, \"seed\": 6, \"cache\": false";
+        // explicit "rounds_per_call": 1 must opt out of the server's
+        // --pack 4 default — truly unpacked, nothing echoed
+        let unpacked = server::client_roundtrip(
+            &addr,
+            &format!("{base}, \"rounds_per_call\": 1}}"),
+        )
+        .expect("unpacked");
+        assert_eq!(unpacked.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert!(
+            unpacked.get("rounds_per_call").is_none(),
+            "explicit 1 must opt out of the server pack default: {}",
+            unpacked.to_string_json()
+        );
+        // omitting the field inherits the server default — echoed as 4
+        let defaulted =
+            server::client_roundtrip(&addr, &format!("{base}}}"))
+                .expect("defaulted");
+        assert_eq!(
+            defaulted.get("rounds_per_call").and_then(|v| v.as_usize()),
+            Some(4),
+            "server --pack default must apply and echo: {}",
+            defaulted.to_string_json()
+        );
+        assert_eq!(
+            defaulted.get("text").and_then(|t| t.as_str()),
+            unpacked.get("text").and_then(|t| t.as_str()),
+            "server-default packing diverged from opt-out"
+        );
+        let packed = server::client_roundtrip(
+            &addr,
+            &format!("{base}, \"rounds_per_call\": 8}}"),
+        )
+        .expect("packed");
+        assert_eq!(packed.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(
+            packed.get("rounds_per_call").and_then(|v| v.as_usize()),
+            Some(8),
+            "reply must echo the effective pack: {}",
+            packed.to_string_json()
+        );
+        assert_eq!(
+            packed.get("text").and_then(|t| t.as_str()),
+            unpacked.get("text").and_then(|t| t.as_str()),
+            "packed decode diverged over the wire"
+        );
+        // an absurd pack is clamped to the artifact's PACK_MAX on the
+        // host (the device clamps its loop the same way), the echo
+        // reports the clamped value, and generation is still complete
+        // and token-identical — not truncated by round-cap overcounting
+        let huge = server::client_roundtrip(
+            &addr,
+            &format!("{base}, \"rounds_per_call\": 1000}}"),
+        )
+        .expect("huge pack");
+        assert_eq!(
+            huge.get("rounds_per_call").and_then(|v| v.as_usize()),
+            Some(32),
+            "host must clamp the pack to PACK_MAX: {}",
+            huge.to_string_json()
+        );
+        assert_eq!(
+            huge.get("text").and_then(|t| t.as_str()),
+            unpacked.get("text").and_then(|t| t.as_str()),
+            "clamped huge pack diverged"
+        );
+        // streaming under a pack request: the replica caps the slot at 1
+        // (no echo — packing did not run) and per-round delta reassembly
+        // still reproduces the final text exactly
+        let (deltas, fin) = server::client_stream(
+            &addr,
+            "{\"id\": 9, \"prompt\": \"Q: 9+5=?\\nA: \", \"method\": \
+             \"eagle_tree\", \"policy\": \"mars:0.9\", \"stream\": true, \
+             \"rounds_per_call\": 8, \"max_new\": 16, \"seed\": 6, \
+             \"cache\": false}",
+        )
+        .expect("packed stream");
+        assert!(!deltas.is_empty());
+        assert!(
+            fin.get("rounds_per_call").is_none(),
+            "streaming slots must not pack: {}",
+            fin.to_string_json()
+        );
+        let joined: String = deltas
+            .iter()
+            .map(|d| {
+                d.get("delta").and_then(|s| s.as_str()).unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(
+            Some(joined.as_str()),
+            fin.get("text").and_then(|t| t.as_str()),
+            "streamed deltas must concatenate to the final text under \
+             pack caps"
+        );
+        assert_eq!(
+            fin.get("text").and_then(|t| t.as_str()),
+            unpacked.get("text").and_then(|t| t.as_str()),
+            "streamed packed request diverged from unpacked"
+        );
     }
 }

@@ -608,6 +608,45 @@ fn prop_judge_reference_dominates_corruption() {
     }
 }
 
+// ------------------------------------------------------- round packing -----
+
+#[test]
+fn prop_effective_pack_invariants() {
+    // the adaptive pack controller (engine::effective_pack): always in
+    // [1, configured∧cap], 1 before the first commit (TTFT guard), and
+    // never larger than the remaining budget (every round commits >= 1
+    // token, so a bigger pack is guaranteed overrun work)
+    use mars::engine::effective_pack;
+    let mut rng = Rng::new(645);
+    for _ in 0..2000 {
+        let configured = rng.usize_below(40);
+        let cap = if rng.bool(0.3) { 1 } else { usize::MAX };
+        let max_new = 1 + rng.usize_below(300);
+        let committed = rng.usize_below(max_new + 50);
+        let pack = effective_pack(configured, cap, committed, max_new);
+        assert!(pack >= 1);
+        assert!(pack <= configured.max(1));
+        assert!(pack <= cap);
+        if committed == 0 {
+            assert_eq!(pack, 1, "first call must run a single round");
+        } else if committed < max_new {
+            assert!(
+                pack <= max_new - committed,
+                "pack {pack} overruns remaining {} (configured \
+                 {configured})",
+                max_new - committed
+            );
+        } else {
+            assert_eq!(pack, 1, "past the budget only the minimum runs");
+        }
+        // monotone in progress: approaching the budget never grows the pack
+        if committed >= 1 && committed + 1 <= max_new + 49 {
+            let next = effective_pack(configured, cap, committed + 1, max_new);
+            assert!(next <= pack.max(1));
+        }
+    }
+}
+
 // ------------------------------------------------------- prefix cache ------
 
 #[test]
@@ -663,7 +702,8 @@ fn prop_cache_lookup_returns_longest_true_prefix() {
             );
             if let Some((l, state)) = got {
                 // the snapshot handed back is the matched entry's own
-                assert_eq!(state, vec![l as f32; 4]);
+                // (a shared Arc handle — zero-copy on the hot path)
+                assert_eq!(&state[..], &vec![l as f32; 4][..]);
             }
         }
     }
