@@ -78,9 +78,50 @@ EXECUTABLES = {
     "medusa_multi": (R.medusa_multi, [("pack", (1,))], ["target", "medusa"]),
     "extract": (R.extract, [], []),
     "extract_probe": (R.extract_probe, [], []),
+    # cross-sequence batching (DESIGN.md §9.5): BATCH_MAX stacked states
+    # per dispatch; finished lanes are whole-lane selected back (masked
+    # no-ops), per-lane cfg rides in each lane's own scalars
+    "ar_batch": (R.ar_batch, [], ["target"]),
+    "sps_batch": (R.sps_batch, [], ["target", "sps"]),
+    "eagle_tree_batch": (R.eagle_tree_batch, [], ["target", "eagle"]),
+    "medusa_batch": (R.medusa_batch, [], ["target", "medusa"]),
+    "verify_ext_batch": (
+        R.verify_ext_batch,
+        [("ext", (S.BATCH_MAX * (S.K_MAX + 1),))],
+        ["target"],
+    ),
+    # batched round packing (§9.5 x §9.6): per-lane round budgets
+    "ar_batch_multi": (
+        R.ar_batch_multi, [("pack", (S.BATCH_MAX,))], ["target"]
+    ),
+    "sps_batch_multi": (
+        R.sps_batch_multi, [("pack", (S.BATCH_MAX,))], ["target", "sps"]
+    ),
+    "eagle_tree_batch_multi": (
+        R.eagle_tree_batch_multi,
+        [("pack", (S.BATCH_MAX,))],
+        ["target", "eagle"],
+    ),
+    "medusa_batch_multi": (
+        R.medusa_batch_multi, [("pack", (S.BATCH_MAX,))], ["target", "medusa"]
+    ),
+    # admission splices (device-to-device, no host traffic)
+    "batch_join": (
+        R.batch_join, [("lane", (S.STATE_LEN,)), ("slot", (1,))], []
+    ),
+    "batch_slot": (R.batch_slot, [("slot", (1,))], []),
+    "extract_batch": (R.extract_batch, [], []),
 }
 
 STATELESS = {"prefill"}  # no leading state argument
+
+# leading state argument is the stacked batch state, not a solo state
+BATCH_STATE = {
+    "ar_batch", "sps_batch", "eagle_tree_batch", "medusa_batch",
+    "verify_ext_batch", "ar_batch_multi", "sps_batch_multi",
+    "eagle_tree_batch_multi", "medusa_batch_multi",
+    "batch_join", "batch_slot", "extract_batch",
+}
 
 
 def lower_all(out_dir: str) -> dict:
@@ -90,7 +131,12 @@ def lower_all(out_dir: str) -> dict:
             {"name": n, "shape": list(s)} for n, s in R.weight_specs(fam)
         ]
     for name, (fn, extras, fams) in EXECUTABLES.items():
-        specs = [] if name in STATELESS else [f32(S.STATE_LEN)]
+        if name in STATELESS:
+            specs = []
+        elif name in BATCH_STATE:
+            specs = [f32(S.BATCH_STATE_LEN)]
+        else:
+            specs = [f32(S.STATE_LEN)]
         specs += [f32(*shape) for _, shape in extras]
         for fam in fams:
             specs += weight_spec_structs(fam)
@@ -102,6 +148,7 @@ def lower_all(out_dir: str) -> dict:
         manifest["executables"][name] = {
             "file": f"{name}.hlo.txt",
             "state_input": name not in STATELESS,
+            "batched": name in BATCH_STATE,
             "extras": [
                 {"name": n, "shape": list(sh)} for n, sh in extras
             ],

@@ -29,6 +29,14 @@ Methods:
     medusa_multi      up to `pack` fused medusa_round rounds per call
     extract           state -> scalars ++ out-ring (cheap per-round pull)
     extract_probe     state -> scalars ++ probe-ring (figures 1 & 4)
+    *_batch           one round for each of BATCH_MAX stacked sequences
+                      per dispatch (DESIGN.md §9.5); finished lanes are
+                      whole-lane selected back, i.e. masked no-ops
+    *_batch_multi     batched x packed: per-lane round budgets
+    verify_ext_batch  batched host-draft verification (per-lane drafts)
+    batch_join        splice a solo state into a batch lane (admission)
+    batch_slot        extract one lane as a solo state (leave/snapshot)
+    extract_batch     per-lane scalars ++ out-ring, one device call
 
 Round packing (`*_multi`): the per-call dispatch tax (~0.5 ms `execute_b`
 per round + one `extract` pull, DESIGN.md §1.1) is pure overhead the
@@ -1005,6 +1013,172 @@ def eagle_tree_multi(state, pack, *weights):
 def medusa_multi(state, pack, *weights):
     """Up to `pack` fused `medusa_round` rounds per device call."""
     return _packed(lambda st: medusa_round(st, *weights), state, pack)
+
+
+# ------------------------------------------- cross-sequence batching -------
+#
+# DESIGN.md §9.5: the `*_batch` programs stack BATCH_MAX independent flat
+# states into one vector [BATCH_MAX * STATE_LEN] and vmap the single-round
+# body over the leading batch dimension, so B sequences draft-and-verify
+# in ONE device dispatch. Every runtime knob is already a per-lane state
+# scalar (temperature, seed/rng, the verification-policy triple, the
+# method slots, rounds_per_call), so mixed per-slot configurations share
+# a dispatch for free; only the method *identity* (the program) must
+# match across lanes (batches group by method family).
+#
+# Masked no-op guarantee: a lane whose pre-round `finished` flag is set
+# is BIT-FROZEN — the whole-lane select below discards everything the
+# vmapped body computed for it (including rng/stat/probe writes), so a
+# retired or empty lane can ride along indefinitely without perturbing
+# itself or any live lane, and batched decode stays token-identical to
+# solo decode per lane. Empty slots are seeded with zeros + finished = 1.
+
+
+def _batch_lanes(state):
+    """[BATCH_MAX * STATE_LEN] -> lanes [BATCH_MAX, STATE_LEN]."""
+    return state.reshape(S.BATCH_MAX, S.STATE_LEN)
+
+
+def _batch_select(old_lanes, new_lanes):
+    """Freeze lanes whose pre-round `finished` flag was already set."""
+    done = old_lanes[:, S.SCALARS["finished"]] > 0.5
+    return jnp.where(done[:, None], old_lanes, new_lanes)
+
+
+def _batched(round_fn, state):
+    """One round of `round_fn` on every live lane, one dispatch."""
+    lanes = _batch_lanes(state)
+    new = jax.vmap(round_fn)(lanes)
+    return _batch_select(lanes, new).reshape(-1)
+
+
+def _packed_batch(round_fn, state, pack):
+    """Up to `pack[b]` rounds of `round_fn` per lane, one dispatch.
+
+    `pack` f32 [BATCH_MAX]: PER-LANE round budgets, so the host's
+    adaptive controller (`engine::effective_pack`) keeps its semantics
+    per slot — a lane on its TTFT-guarded first call runs one round
+    while its neighbors pack, and a lane near its `max_new` budget
+    shrinks independently. Each lane is additionally capped by its own
+    `rounds_per_call` scalar and PACK_MAX (exactly `_packed`'s clamps),
+    and freezes the moment its `finished` flips or its budget is spent;
+    the loop exits when no lane is active. Per lane, the round sequence
+    is token-identical to the solo `*_multi` program's (vmapped matmuls
+    may reassociate float reductions, but every decode decision agrees).
+    """
+    lanes = _batch_lanes(state)
+    n_req = jnp.clip(pack.astype(jnp.int32), 1, S.PACK_MAX)
+    cap = lanes[:, S.SCALARS["rounds_per_call"]].astype(jnp.int32)
+    cap = jnp.where(cap >= 1, jnp.minimum(cap, S.PACK_MAX), n_req)
+    n = jnp.minimum(n_req, cap)
+
+    def active(i, cur):
+        return (i < n) & (cur[:, S.SCALARS["finished"]] < 0.5)
+
+    def cond(carry):
+        i, cur = carry
+        return jnp.any(active(i, cur))
+
+    def body(carry):
+        i, cur = carry
+        new = jax.vmap(round_fn)(cur)
+        live = active(i, cur)
+        cur = jnp.where(live[:, None], new, cur)
+        return i + 1, cur
+
+    _, lanes = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), lanes)
+    )
+    return lanes.reshape(-1)
+
+
+def ar_batch(state, *t_weights):
+    """One `ar_step` round per live lane, one dispatch."""
+    return _batched(lambda st: ar_step(st, *t_weights), state)
+
+
+def sps_batch(state, *weights):
+    """One `sps_round` per live lane, one dispatch."""
+    return _batched(lambda st: sps_round(st, *weights), state)
+
+
+def eagle_tree_batch(state, *weights):
+    """One `eagle_tree_round` per live lane, one dispatch."""
+    return _batched(lambda st: eagle_tree_round(st, *weights), state)
+
+
+def medusa_batch(state, *weights):
+    """One `medusa_round` per live lane, one dispatch."""
+    return _batched(lambda st: medusa_round(st, *weights), state)
+
+
+def verify_ext_batch(state, ext, *t_weights):
+    """One `verify_ext_round` per live lane with per-lane host drafts.
+
+    ext: f32 [BATCH_MAX * (K_MAX + 1)] — lane b's draft vector at
+    b*(K_MAX+1), same [len, tok...] encoding as `verify_ext_round`.
+    Host-drafted families need fresh drafts every round, so there is no
+    packed variant (exactly the solo fallback rule).
+    """
+    lanes = _batch_lanes(state)
+    exts = ext.reshape(S.BATCH_MAX, S.K_MAX + 1)
+    new = jax.vmap(lambda st, e: verify_ext_round(st, e, *t_weights))(
+        lanes, exts
+    )
+    return _batch_select(lanes, new).reshape(-1)
+
+
+def ar_batch_multi(state, pack, *t_weights):
+    """Up to `pack[b]` fused `ar_step` rounds per lane per dispatch."""
+    return _packed_batch(lambda st: ar_step(st, *t_weights), state, pack)
+
+
+def sps_batch_multi(state, pack, *weights):
+    """Up to `pack[b]` fused `sps_round` rounds per lane per dispatch."""
+    return _packed_batch(lambda st: sps_round(st, *weights), state, pack)
+
+
+def eagle_tree_batch_multi(state, pack, *weights):
+    """Up to `pack[b]` fused `eagle_tree_round` rounds per lane per
+    dispatch (covers chain and tree descriptors, like the base program).
+    """
+    return _packed_batch(
+        lambda st: eagle_tree_round(st, *weights), state, pack
+    )
+
+
+def medusa_batch_multi(state, pack, *weights):
+    """Up to `pack[b]` fused `medusa_round` rounds per lane per dispatch."""
+    return _packed_batch(lambda st: medusa_round(st, *weights), state, pack)
+
+
+def batch_join(state, lane, slot):
+    """Install a solo state into lane `slot` of the batch state.
+
+    `lane` f32 [STATE_LEN] is a freshly prefilled (or cache-restored)
+    solo state already resident on device — continuous-batching admission
+    is a device-to-device splice, no host traffic. `slot` f32 [1].
+    """
+    b = jnp.clip(slot[0].astype(jnp.int32), 0, S.BATCH_MAX - 1)
+    lanes = _batch_lanes(state)
+    lanes = jax.lax.dynamic_update_slice(lanes, lane[None, :], (b, 0))
+    return lanes.reshape(-1)
+
+
+def batch_slot(state, slot):
+    """Extract lane `slot` of the batch state as a solo state.
+
+    The leave-side of admission: the returned [STATE_LEN] buffer feeds
+    `extract_probe`, snapshot export, or a `*_round` program directly.
+    """
+    b = jnp.clip(slot[0].astype(jnp.int32), 0, S.BATCH_MAX - 1)
+    lanes = _batch_lanes(state)
+    return jax.lax.dynamic_slice(lanes, (b, 0), (1, S.STATE_LEN))[0]
+
+
+def extract_batch(state):
+    """Per-lane cheap pull: BATCH_MAX x (scalars ++ out ring), one call."""
+    return jax.vmap(extract)(_batch_lanes(state)).reshape(-1)
 
 
 # ------------------------------------------------------------ extract ------

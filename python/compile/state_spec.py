@@ -32,6 +32,7 @@ PROBE_MAX = 1024
 PROBE_W = 3                # (z1, z2, flag)
 N_CFG = 16                 # prefill config vector length
 PACK_MAX = 32              # max draft-verify rounds fused per device call
+BATCH_MAX = 8              # max sequences per batched dispatch (§9.5)
 
 # scalar slot indices ---------------------------------------------------
 
@@ -132,6 +133,13 @@ EXTRACT_LEN = N_SCALARS + M.OUT_MAX
 # probe extract: scalars ++ probe ring
 EXTRACT_PROBE_LEN = N_SCALARS + PROBE_MAX * PROBE_W
 
+# cross-sequence batching (DESIGN.md §9.5): the `*_batch` programs run
+# BATCH_MAX independent flat states stacked into one vector; per-lane
+# knobs (policy triple, method slots, temp, seed, rounds_per_call) live
+# in each lane's own scalars, so mixed configs share a dispatch.
+BATCH_STATE_LEN = BATCH_MAX * STATE_LEN
+EXTRACT_BATCH_LEN = BATCH_MAX * EXTRACT_LEN
+
 
 def layout_json() -> str:
     lay = layout()
@@ -148,6 +156,7 @@ def layout_json() -> str:
             "depth_max": DEPTH_MAX, "nodes_max": NODES_MAX,
             "catchup_max": CATCHUP_MAX, "probe_max": PROBE_MAX,
             "probe_w": PROBE_W, "n_cfg": N_CFG, "pack_max": PACK_MAX,
+            "batch_max": BATCH_MAX,
             "p_max": M.P_MAX, "out_max": M.OUT_MAX, "s_max": M.S_MAX,
             "vocab": M.TARGET_CFG.vocab,
         },

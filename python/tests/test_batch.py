@@ -1,0 +1,329 @@
+"""Cross-sequence batching semantics (DESIGN.md §9.5).
+
+The contract the rust `BatchRunner` builds on: stacking B independent
+flat states and stepping them with a `*_batch` program is per lane
+*token-identical* to driving each state alone with the matching solo
+round program — same committed tokens, same round/accept/RNG counters —
+mixed per-lane configs (policy, temperature, seed, pack budget)
+included. (Bit-identity of the float tails is not promised: vmapped
+matmuls may reassociate reductions at the ~1e-6 level; every decode
+*decision* must still agree.) A finished or empty lane is a masked
+no-op returned bit-for-bit, never perturbing itself or its neighbors.
+
+Uses small randomly-initialized weights (fast); artifact-level batched
+equivalence is covered by the rust integration tests.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import rounds as R
+from compile import state_spec as S
+from compile import tokenizer as T
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(42)
+    kt, ke, ks, km = jax.random.split(key, 4)
+    target = M.init_lm(M.TARGET_CFG, kt)
+    eagle = M.init_eagle(M.EAGLE_CFG, ke, M.TARGET_CFG)
+    sps = M.init_lm(M.DRAFT_CFG, ks)
+    medusa = M.init_medusa(km, M.TARGET_CFG)
+    return {
+        "target": target,
+        "tw": M.flat_values(target),
+        "ew": M.flat_values(eagle),
+        "sw": M.flat_values(sps),
+        "mw": M.flat_values(medusa),
+        "prefill": jax.jit(R.prefill),
+        "ar": jax.jit(R.ar_step),
+        "sps": jax.jit(R.sps_round),
+        "tree": jax.jit(R.eagle_tree_round),
+        "medusa": jax.jit(R.medusa_round),
+        "ext": jax.jit(R.verify_ext_round),
+        "ar_multi": jax.jit(R.ar_multi),
+        "ar_batch": jax.jit(R.ar_batch),
+        "sps_batch": jax.jit(R.sps_batch),
+        "tree_batch": jax.jit(R.eagle_tree_batch),
+        "medusa_batch": jax.jit(R.medusa_batch),
+        "ext_batch": jax.jit(R.verify_ext_batch),
+        "ar_batch_multi": jax.jit(R.ar_batch_multi),
+        "sps_batch_multi": jax.jit(R.sps_batch_multi),
+        "batch_join": jax.jit(R.batch_join),
+        "batch_slot": jax.jit(R.batch_slot),
+        "extract": jax.jit(R.extract),
+        "extract_batch": jax.jit(R.extract_batch),
+    }
+
+
+PROMPT = "Q: 12+34=?\nA: "
+MAXNEW = 20
+
+
+def make_cfg(**kw):
+    cfg = np.zeros(S.N_CFG, np.float32)
+    base = dict(
+        temp=0.0, greedy=1.0, policy_id=S.POLICY_STRICT, p0=0.9, p1=0.0,
+        kdraft=5, max_new=MAXNEW, eos=T.EOS, beam=1, branch=1,
+        probe_on=1.0, seed=3, prompt_len=0, rounds_per_call=0,
+    )
+    base.update(kw)
+    for k, v in base.items():
+        cfg[S.CFG[k]] = v
+    return jnp.asarray(cfg)
+
+
+def start(world, prompt=PROMPT, **cfg_kw):
+    ids = T.encode(prompt)
+    buf = np.zeros(M.P_MAX, np.float32)
+    buf[: len(ids)] = ids
+    cfg = make_cfg(prompt_len=len(ids), **cfg_kw)
+    return world["prefill"](
+        jnp.asarray(buf), cfg, *world["tw"], *world["ew"], *world["sw"]
+    )
+
+
+def out_of(state):
+    sc = np.asarray(state[: S.N_SCALARS])
+    lay = S.layout()["out"]
+    out = np.asarray(
+        state[lay["offset"]: lay["offset"] + lay["size"]]
+    ).astype(int)
+    return out[: int(sc[S.SCALARS["out_len"]])][:MAXNEW], sc
+
+
+def drive(world, st, step, max_rounds=48):
+    for _ in range(max_rounds):
+        sc = np.asarray(st[: S.N_SCALARS])
+        if sc[S.SCALARS["finished"]] > 0:
+            break
+        st = step(st)
+    out, sc = out_of(st)
+    return out, sc, st
+
+
+def stack(states):
+    """Stack solo states into a batch state; empty slots inert (finished)."""
+    lanes = np.zeros((S.BATCH_MAX, S.STATE_LEN), np.float32)
+    lanes[:, S.SCALARS["finished"]] = 1.0
+    for i, st in enumerate(states):
+        lanes[i] = np.asarray(st)
+    return jnp.asarray(lanes.reshape(-1))
+
+
+def lanes_of(bst):
+    return np.asarray(bst).reshape(S.BATCH_MAX, S.STATE_LEN)
+
+
+def drive_batched(world, bst, step, max_rounds=48):
+    for _ in range(max_rounds):
+        fin = lanes_of(bst)[:, S.SCALARS["finished"]]
+        if (fin > 0).all():
+            break
+        bst = step(bst)
+    return bst
+
+
+# every decision-bearing scalar: committed tokens, counters, stats, RNG
+_DECISION_SCALARS = [
+    "pos", "out_len", "finished", "rng", "rounds", "committed",
+    "target_calls", "draft_steps", "exact_accepts", "relaxed_accepts",
+    "rejects", "bonus", "last_accept", "probe_len",
+]
+
+
+def assert_lane_matches_solo(lane, ref_state, msg):
+    out_b, sc_b = out_of(lane)
+    out_s, sc_s = out_of(np.asarray(ref_state))
+    np.testing.assert_array_equal(out_b, out_s, err_msg=msg)
+    for name in _DECISION_SCALARS:
+        assert sc_b[S.SCALARS[name]] == sc_s[S.SCALARS[name]], (msg, name)
+
+
+# (family, batch key, single key, weight-list keys, extra cfg)
+_BATCH_CASES = [
+    ("ar", "ar_batch", "ar", ("tw",), {}),
+    ("sps", "sps_batch", "sps", ("tw", "sw"), {}),
+    ("tree", "tree_batch", "tree", ("tw", "ew"), dict(beam=2, branch=2)),
+    ("medusa", "medusa_batch", "medusa", ("tw", "mw"), dict(kdraft=4)),
+]
+
+
+@pytest.mark.parametrize("fam,batch,single,wkeys,extra", _BATCH_CASES)
+@pytest.mark.parametrize("temp", [0.0, 1.0])
+def test_batched_token_identical_to_solo(world, fam, batch, single, wkeys,
+                                         extra, temp):
+    """Per-lane token identity to solo decode, with per-lane mixed
+    configs: each lane carries its own policy / seed / temperature in its
+    scalars, so one batched dispatch serves all of them at once."""
+    lane_cfgs = [
+        dict(extra),
+        dict(extra, policy_id=S.POLICY_MARS, p0=0.5, seed=7),
+        dict(extra, policy_id=S.POLICY_TOPK, p0=2.0, p1=0.4, seed=11),
+    ]
+    if temp > 0:
+        for i, kw in enumerate(lane_cfgs):
+            kw.update(temp=temp, greedy=0.0, seed=20 + i)
+    ws = [w for k in wkeys for w in world[k]]
+
+    solo = []
+    for kw in lane_cfgs:
+        _, _, st = drive(
+            world, start(world, **kw), lambda s: world[single](s, *ws)
+        )
+        solo.append(np.asarray(st))
+
+    bst = stack([start(world, **kw) for kw in lane_cfgs])
+    bst = drive_batched(world, bst, lambda s: world[batch](s, *ws))
+    lanes = lanes_of(bst)
+    for i, ref in enumerate(solo):
+        assert_lane_matches_solo(
+            lanes[i], ref, f"{fam} lane {i} T={temp}"
+        )
+
+
+def test_empty_and_finished_lanes_are_bit_frozen(world):
+    """Masked no-op pin: a lane whose `finished` flag is set before the
+    round — whether a retired sequence or a never-occupied zero slot — is
+    returned bit-for-bit, and live lanes decode as if alone."""
+    _, _, done = drive(
+        world, start(world), lambda s: world["ar"](s, *world["tw"])
+    )
+    assert np.asarray(done)[S.SCALARS["finished"]] > 0
+    out_solo, sc_solo, _ = drive(
+        world, start(world, seed=5), lambda s: world["ar"](s, *world["tw"])
+    )
+
+    bst = stack([done, start(world, seed=5)])
+    before = lanes_of(bst).copy()
+    bst = drive_batched(world, bst, lambda s: world["ar_batch"](s, *world["tw"]))
+    lanes = lanes_of(bst)
+    # lane 0 (finished) and lanes 2.. (empty) are untouched
+    np.testing.assert_array_equal(lanes[0], before[0])
+    for b in range(2, S.BATCH_MAX):
+        np.testing.assert_array_equal(lanes[b], before[b], err_msg=f"lane {b}")
+    # lane 1 decoded exactly as it would alone
+    out, sc = out_of(lanes[1])
+    np.testing.assert_array_equal(out, out_solo)
+    assert sc[S.SCALARS["rounds"]] == sc_solo[S.SCALARS["rounds"]]
+
+
+def test_batch_join_at_round_boundary_restores_state(world):
+    """Continuous-batching admission pin: splicing a freshly prefilled
+    solo state into a lane between rounds, then continuing batched, gives
+    exactly the solo decode — and `batch_slot` reads the lane back
+    bit-for-bit (the leave side)."""
+    ws = world["tw"]
+    bst = stack([start(world)])
+    for _ in range(2):
+        bst = world["ar_batch"](bst, *ws)
+
+    joiner = start(world, seed=13)
+    bst = world["batch_join"](
+        bst, joiner, jnp.asarray([1.0], jnp.float32)
+    )
+    np.testing.assert_array_equal(
+        lanes_of(bst)[1], np.asarray(joiner)
+    )
+
+    bst = drive_batched(world, bst, lambda s: world["ar_batch"](s, *ws))
+    _, _, ref0 = drive(world, start(world), lambda s: world["ar"](s, *ws))
+    _, _, ref1 = drive(world, joiner, lambda s: world["ar"](s, *ws))
+    assert_lane_matches_solo(lanes_of(bst)[0], ref0, "incumbent lane")
+    assert_lane_matches_solo(lanes_of(bst)[1], ref1, "joined lane")
+
+    # leave side: batch_slot pulls the lane unchanged
+    lane = world["batch_slot"](bst, jnp.asarray([1.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(lane), lanes_of(bst)[1])
+
+
+def test_batch_multi_per_lane_pack_budgets(world):
+    """Batched round packing: each lane takes its own pack budget and
+    rounds_per_call cap, and per lane the result is token-identical to
+    the solo `*_multi` drive with that budget."""
+    cfgs = [dict(), dict(seed=4), dict(rounds_per_call=2, seed=8)]
+    packs = [1.0, 4.0, float(S.PACK_MAX)]
+
+    solo = []
+    for kw, p in zip(cfgs, packs):
+        st = start(world, **kw)
+        for _ in range(48):
+            if np.asarray(st[: S.N_SCALARS])[S.SCALARS["finished"]] > 0:
+                break
+            st = world["ar_multi"](
+                st, jnp.asarray([p], jnp.float32), *world["tw"]
+            )
+        solo.append(np.asarray(st))
+
+    bst = stack([start(world, **kw) for kw in cfgs])
+    pack = np.ones(S.BATCH_MAX, np.float32)
+    pack[: len(packs)] = packs
+    bst = drive_batched(
+        world, bst,
+        lambda s: world["ar_batch_multi"](s, jnp.asarray(pack), *world["tw"]),
+    )
+    lanes = lanes_of(bst)
+    for i, ref in enumerate(solo):
+        assert_lane_matches_solo(lanes[i], ref, f"lane {i}")
+
+
+def test_verify_ext_batch_per_lane_drafts(world):
+    """Host-drafted batching: lane 0 gets empty drafts (degenerates to
+    AR), lane 1 gets oracle drafts from its own greedy tail — both must
+    land on the same greedy output, and lane 1 must accept at depth."""
+    out_ref, _, _ = drive(
+        world, start(world), lambda s: world["ar"](s, *world["tw"])
+    )
+    bst = stack([start(world), start(world)])
+    kw = S.K_MAX + 1
+    for _ in range(48):
+        lanes = lanes_of(bst)
+        fin = lanes[:, S.SCALARS["finished"]]
+        if (fin > 0).all():
+            break
+        ext = np.zeros(S.BATCH_MAX * kw, np.float32)
+        n1 = int(lanes[1, S.SCALARS["out_len"]])
+        drafts = out_ref[n1: n1 + 6]
+        ext[kw] = len(drafts)
+        ext[kw + 1: kw + 1 + len(drafts)] = drafts
+        bst = world["ext_batch"](bst, jnp.asarray(ext), *world["tw"])
+    lanes = lanes_of(bst)
+    for b in (0, 1):
+        out, sc = out_of(lanes[b])
+        np.testing.assert_array_equal(out, out_ref, err_msg=f"lane {b}")
+    sc1 = lanes[1, : S.N_SCALARS]
+    tau = sc1[S.SCALARS["committed"]] / max(sc1[S.SCALARS["rounds"]], 1)
+    assert tau > 4.0  # oracle drafts mostly accepted
+    # and lane 1 finished in fewer rounds than the AR lane
+    assert sc1[S.SCALARS["rounds"]] < lanes[0, S.SCALARS["rounds"]]
+
+
+def test_extract_batch_matches_per_lane_extract(world):
+    sts = [start(world), start(world, seed=5)]
+    bst = stack(sts)
+    got = np.asarray(world["extract_batch"](bst)).reshape(
+        S.BATCH_MAX, S.EXTRACT_LEN
+    )
+    lanes = lanes_of(bst)
+    for b in range(S.BATCH_MAX):
+        ref = np.asarray(world["extract"](jnp.asarray(lanes[b])))
+        np.testing.assert_array_equal(got[b], ref, err_msg=f"lane {b}")
+
+
+def test_all_batch_programs_aot_lower(world):
+    """Every `*_batch` executable lowers through the real AOT path
+    (stablehlo -> HLO text via the xla_extension parser) with the exact
+    manifest specs — the shape contract the rust runtime loads."""
+    for name in sorted(aot.BATCH_STATE):
+        fn, extras, fams = aot.EXECUTABLES[name]
+        specs = [aot.f32(S.BATCH_STATE_LEN)]
+        specs += [aot.f32(*shape) for _, shape in extras]
+        for fam in fams:
+            specs += aot.weight_spec_structs(fam)
+        text = aot.to_hlo_text(fn, specs)
+        assert "ENTRY" in text, name

@@ -829,6 +829,256 @@ pub fn packing(
     Ok(())
 }
 
+// ------------------------------------------------------- batch sweep -------
+
+/// One (method, policy, B) wave of [`batch`].
+struct BatchWaveRow {
+    method: SpecMethod,
+    policy: VerifyPolicy,
+    b: usize,
+    ok: usize,
+    tok_per_s: f64,
+    /// amortized device dispatches per token (Σ `dispatch_share` /
+    /// tokens): each shared dispatch contributes exactly 1 across its
+    /// occupied lanes, so this is the replica-level dispatch tax
+    calls_per_tok: f64,
+    tau: f64,
+    ttft_ms: Summary,
+    tpot_ms: Summary,
+}
+
+/// `mars bench batch` — the cross-sequence batching sweep (DESIGN.md
+/// §9.5): occupancy B × method × policy on the Sum task, every wave
+/// keeping B lanes live in one [`crate::engine::BatchRunner`] (requests
+/// join as lanes retire, continuous-batching style). Reports
+/// tok/s/replica (total tokens over the wave's wall-clock — lanes
+/// overlap, so per-lane decode seconds would double-count), amortized
+/// **device dispatches per token**, τ, and TTFT/TPOT percentiles.
+/// Renders `results/batch.md` and refreshes `BENCH_batch.json`.
+pub fn batch(
+    ctx: &BenchCtx,
+    methods: &[SpecMethod],
+    policies: &[VerifyPolicy],
+    batches: &[usize],
+) -> Result<()> {
+    use crate::engine::BatchRunner;
+    use std::time::Instant;
+    if methods.is_empty() || policies.is_empty() || batches.is_empty() {
+        anyhow::bail!("bench batch needs methods, policies and batches");
+    }
+    if !ctx.engine.rt.supports_batching() {
+        anyhow::bail!(
+            "artifacts lack the *_batch programs (recompile with \
+             python/compile/aot.py)"
+        );
+    }
+    // Sum runs enough rounds per request for occupancy amortization to
+    // show (same reasoning as the packing sweep)
+    let task = Task::Sum;
+    // the vs B=1 column and the acceptance gate divide by the solo wave
+    let mut batches = batches.to_vec();
+    if !batches.contains(&1) {
+        println!("  note: adding the B=1 baseline to the sweep");
+        batches.insert(0, 1);
+    }
+    let batch_max = ctx.engine.rt.layout().batch_max().max(1);
+    let mut seen = std::collections::BTreeSet::new();
+    let batches: Vec<usize> = batches
+        .into_iter()
+        .map(|b| {
+            if b > batch_max {
+                println!(
+                    "  note: B={b} clamped to device batch_max={batch_max}"
+                );
+            }
+            b.min(batch_max)
+        })
+        .filter(|b| seen.insert(*b))
+        .collect();
+    let examples = dataset(task, ctx.n, ctx.seed);
+    let mut rows: Vec<BatchWaveRow> = Vec::new();
+    for &method in methods {
+        for &policy in policies {
+            for &b in &batches {
+                let mut row = BatchWaveRow {
+                    method,
+                    policy,
+                    b,
+                    ok: 0,
+                    tok_per_s: 0.0,
+                    calls_per_tok: 0.0,
+                    tau: 0.0,
+                    ttft_ms: Summary::new(),
+                    tpot_ms: Summary::new(),
+                };
+                let mut runner = BatchRunner::new(&ctx.engine.rt)?;
+                let nmax = runner.batch_max();
+                let mut admit_t: Vec<Option<Instant>> = vec![None; nmax];
+                let mut first_t: Vec<Option<Instant>> = vec![None; nmax];
+                let mut next = 0usize;
+                let mut done = 0usize;
+                let mut tokens = 0usize;
+                let mut share = 0.0f64;
+                let mut tau = Summary::new();
+                let t0 = Instant::now();
+                while done < examples.len() {
+                    // keep B lanes live: admit as soon as a slot frees
+                    while runner.occupancy() < b
+                        && next < examples.len()
+                        && runner.has_free_slot()
+                    {
+                        let mut p = ctx.params(method, policy, 1.0);
+                        p.seed = ctx.seed * 1000 + next as u64;
+                        let toks =
+                            crate::tokenizer::encode(&examples[next].prompt);
+                        let slot = runner.admit(&toks, &p, None)?;
+                        admit_t[slot] = Some(Instant::now());
+                        first_t[slot] = None;
+                        next += 1;
+                    }
+                    for (slot, r) in runner.step()? {
+                        done += 1;
+                        let admitted =
+                            admit_t[slot].take().expect("lane was admitted");
+                        let first = first_t[slot]
+                            .take()
+                            .unwrap_or_else(Instant::now);
+                        if r.tokens.is_empty() {
+                            continue;
+                        }
+                        row.ok += 1;
+                        let ttft =
+                            first.duration_since(admitted).as_secs_f64();
+                        row.ttft_ms.push(ttft * 1e3);
+                        if r.tokens.len() > 1 {
+                            let rest = first.elapsed().as_secs_f64();
+                            row.tpot_ms
+                                .push(rest * 1e3 / (r.tokens.len() - 1) as f64);
+                        }
+                        tokens += r.tokens.len();
+                        share += r.dispatch_share;
+                        if method.is_speculative() {
+                            tau.push(r.tau());
+                        }
+                    }
+                    // stamp first-commit on the survivors
+                    for slot in 0..nmax {
+                        if admit_t[slot].is_some()
+                            && first_t[slot].is_none()
+                            && runner.committed(slot) > 0
+                        {
+                            first_t[slot] = Some(Instant::now());
+                        }
+                    }
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                row.tok_per_s = tokens as f64 / wall.max(1e-9);
+                row.calls_per_tok = share / tokens.max(1) as f64;
+                row.tau = tau.mean();
+                println!(
+                    "  {} / {} / B={b}: {:.2} calls/tok, {:.1} tok/s",
+                    method.label(),
+                    policy.label(),
+                    row.calls_per_tok,
+                    row.tok_per_s
+                );
+                rows.push(row);
+            }
+        }
+    }
+
+    // rendered table
+    let mut out = String::new();
+    writeln!(
+        out,
+        "## Cross-sequence batching — amortized dispatches per token vs \
+         occupancy B ({}, n={}, max_new={}, T=1)\n",
+        task.paper_name(),
+        ctx.n,
+        ctx.max_new
+    )?;
+    writeln!(
+        out,
+        "| Method | Policy | B | calls/tok | vs B=1 | tok/s/replica | τ | \
+         TTFT p50 (ms) | TTFT p99 (ms) | TPOT p50 (ms) | TPOT p99 (ms) |"
+    )?;
+    writeln!(out, "|---|---|---|---|---|---|---|---|---|---|---|")?;
+    for r in &rows {
+        let base = rows
+            .iter()
+            .find(|x| {
+                x.method == r.method && x.policy == r.policy && x.b == 1
+            })
+            .map(|x| x.calls_per_tok)
+            .unwrap_or(0.0);
+        let ratio = if r.calls_per_tok > 0.0 && base > 0.0 {
+            base / r.calls_per_tok
+        } else {
+            0.0
+        };
+        writeln!(
+            out,
+            "| {} | {} | {} | {:.2} | {:.2}x | {:.1} | {:.2} | {:.0} | \
+             {:.0} | {:.2} | {:.2} |",
+            r.method.label(),
+            r.policy.label(),
+            r.b,
+            r.calls_per_tok,
+            ratio,
+            r.tok_per_s,
+            r.tau,
+            r.ttft_ms.p50(),
+            r.ttft_ms.p99(),
+            r.tpot_ms.p50(),
+            r.tpot_ms.p99()
+        )?;
+    }
+    writeln!(
+        out,
+        "\ncalls/tok is the *amortized* dispatch count (Σ dispatch_share / \
+         tokens): every shared round dispatch contributes exactly 1 \
+         across its occupied lanes, prefill + join splices stay dedicated \
+         — so B=4 should land near a quarter of B=1 plus the admission \
+         tax. tok/s/replica divides total committed tokens by the wave's \
+         wall-clock (lanes overlap; per-lane decode seconds would \
+         double-count). Batched lanes commit the same tokens as solo runs \
+         at T=0 (the equivalence pins in tests), so every gain is \
+         dispatch amortization, not different decoding."
+    )?;
+    ctx.emit("batch", &out);
+
+    // machine-readable trajectory for PR-to-PR diffing
+    use crate::util::json::Value as J;
+    let mut doc = J::obj();
+    doc.set("schema", J::Num(1.0));
+    doc.set("task", J::Str(task.name().into()));
+    doc.set("n", J::Num(ctx.n as f64));
+    doc.set("seed", J::Num(ctx.seed as f64));
+    doc.set("max_new", J::Num(ctx.max_new as f64));
+    doc.set("batch_max", J::Num(batch_max as f64));
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = J::obj();
+        o.set("method", J::Str(r.method.label()));
+        o.set("policy", J::Str(r.policy.label()));
+        o.set("batch", J::Num(r.b as f64));
+        o.set("ok", J::Num(r.ok as f64));
+        o.set("dispatches_per_token", J::Num(r.calls_per_tok));
+        o.set("tok_per_s_replica", J::Num(r.tok_per_s));
+        o.set("tau", J::Num(r.tau));
+        o.set("ttft_ms_p50", J::Num(r.ttft_ms.p50()));
+        o.set("ttft_ms_p99", J::Num(r.ttft_ms.p99()));
+        o.set("tpot_ms_p50", J::Num(r.tpot_ms.p50()));
+        o.set("tpot_ms_p99", J::Num(r.tpot_ms.p99()));
+        arr.push(o);
+    }
+    doc.set("batch", J::Arr(arr));
+    let json_path = std::path::Path::new("BENCH_batch.json");
+    fs::write(json_path, doc.to_string_json())?;
+    eprintln!("[written {}]", json_path.display());
+    Ok(())
+}
+
 /// §Perf runtime ablation: resident-state vs hostloop, extract frequency.
 pub fn perf(ctx: &BenchCtx, artifact_dir: &std::path::Path) -> Result<()> {
     use crate::runtime::Runtime;

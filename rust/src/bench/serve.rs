@@ -76,6 +76,10 @@ pub struct ServeBenchCfg {
     pub replicas: usize,
     /// Concurrent sequences interleaved per replica.
     pub slots: usize,
+    /// Cross-sequence batch width per replica (`--batch`, DESIGN.md
+    /// §9.5): > 1 engages the replicas' batched loop when the artifacts
+    /// carry the `*_batch` programs; 1 keeps the interleaved loop.
+    pub batch: usize,
     /// Client TCP connections the sweep scenario spreads its load over
     /// (round-robin). The `chat` scenario ignores it: each turn opens a
     /// fresh connection, like a real chat client's request cycle.
@@ -216,9 +220,14 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
         bail!("bench serve needs at least one --methods / --policies entry");
     }
     println!(
-        "starting {} replica(s) x {} slot(s) for bench serve...",
+        "starting {} replica(s) x {} slot(s){} for bench serve...",
         cfg.replicas.max(1),
-        cfg.slots
+        cfg.slots,
+        if cfg.batch > 1 {
+            format!(", batch={}", cfg.batch)
+        } else {
+            String::new()
+        }
     );
     // prefix cache OFF: every wave replays the same seeded prompts, so a
     // shared warm cache would hand later waves full-prompt hits and skew
@@ -231,6 +240,7 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
         RouterPolicy::LeastLoaded,
         CacheConfig::disabled(),
         1,
+        cfg.batch.max(1),
     )?);
     let handle = server::serve(router.clone(), "127.0.0.1:0")?;
     let addr = handle.addr.to_string();
@@ -542,6 +552,7 @@ fn run_chat(cfg: &ServeBenchCfg, turns: usize) -> Result<()> {
             RouterPolicy::PrefixAffinity,
             cache,
             1,
+            cfg.batch.max(1),
         )?);
         let handle = server::serve(router.clone(), "127.0.0.1:0")?;
         let addr = handle.addr.to_string();

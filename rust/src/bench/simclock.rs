@@ -21,7 +21,11 @@
 //! here — DESIGN.md §1.1) and is exactly what round packing
 //! (DESIGN.md §9.6) amortizes, so a cost model without it would report
 //! identical "speedups" for a packed and an unpacked run and hide the
-//! stack's largest remaining wall-clock lever.
+//! stack's largest remaining wall-clock lever. The overhead is per
+//! *device* dispatch: cross-sequence batching (DESIGN.md §9.5) shares
+//! one dispatch across every occupied lane, so the model charges each
+//! request its amortized [`GenResult::dispatch_share`] (Σ 1/occupancy),
+//! not its raw `device_calls`.
 
 use crate::engine::{GenResult, SpecMethod};
 
@@ -65,9 +69,15 @@ pub fn draft_step_cost(method: SpecMethod) -> f64 {
 
 /// Simulated cost units per generated token for one finished request.
 /// Compute (target forwards + scaled draft steps) plus the per-dispatch
-/// tax: [`DISPATCH_OVERHEAD`] × the device calls the request actually
-/// issued, so packed runs (fewer dispatches for the same rounds) earn
-/// their call-count savings in simulated units too.
+/// tax: [`DISPATCH_OVERHEAD`] × the request's *amortized* dispatch count
+/// ([`GenResult::dispatch_share`]). The overhead is paid once per
+/// *device* dispatch, not once per sequence-dispatch: under
+/// cross-sequence batching (DESIGN.md §9.5) a dispatch steps every
+/// occupied lane, so each lane is charged `1 / occupancy` of it —
+/// charging full `device_calls` per lane would bill a B=4 batch four
+/// launch taxes for one launch. On the solo path `dispatch_share ==
+/// device_calls` and nothing changes; packed runs (fewer dispatches for
+/// the same rounds) earn their call-count savings the same way.
 pub fn simulated_units(method: SpecMethod, r: &GenResult) -> f64 {
     let tokens = r.tokens.len().max(1) as f64;
     let compute = match method {
@@ -81,7 +91,7 @@ pub fn simulated_units(method: SpecMethod, r: &GenResult) -> f64 {
             verify + draft
         }
     };
-    (compute + r.device_calls as f64 * DISPATCH_OVERHEAD) / tokens
+    (compute + r.dispatch_share * DISPATCH_OVERHEAD) / tokens
 }
 
 #[cfg(test)]
@@ -105,7 +115,15 @@ mod tests {
             },
             probe: None,
             device_calls: 0,
+            dispatch_share: 0.0,
         }
+    }
+
+    /// Stamp a solo run's dispatch counters (occupancy 1: share == calls).
+    fn with_calls(mut r: GenResult, calls: u64) -> GenResult {
+        r.device_calls = calls;
+        r.dispatch_share = calls as f64;
+        r
     }
 
     #[test]
@@ -120,21 +138,38 @@ mod tests {
         // the regression pin for the per-dispatch term: unpacked AR
         // issues 2 dispatches per token (one round + one extract), so
         // the baseline costs exactly 1 + 2 * DISPATCH_OVERHEAD per token
-        let mut r = result(50, 50.0, 0.0);
-        r.device_calls = 2 * 50;
+        let r = with_calls(result(50, 50.0, 0.0), 2 * 50);
         let want = 1.0 + 2.0 * DISPATCH_OVERHEAD;
         let got = simulated_units(SpecMethod::Ar, &r);
         assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
     }
 
     #[test]
+    fn batching_amortizes_dispatch_overhead_across_occupied_slots() {
+        // the §9.5 regression pin, next to the ar-at-pack-1 baseline
+        // above: same per-lane dispatch participation (2 per token), but
+        // at B=4 each dispatch served 4 lanes, so the lane's amortized
+        // share is a quarter — 1 + 2 * DISPATCH_OVERHEAD / 4 per token.
+        // The old model charged DISPATCH_OVERHEAD per sequence-dispatch
+        // (device_calls), billing four launch taxes for one launch.
+        let mut r = result(50, 50.0, 0.0);
+        r.device_calls = 2 * 50; // lane participated in 100 dispatches
+        r.dispatch_share = 2.0 * 50.0 / 4.0; // each shared 4 ways
+        let want = 1.0 + 2.0 * DISPATCH_OVERHEAD / 4.0;
+        let got = simulated_units(SpecMethod::Ar, &r);
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        // and the B=4 lane is strictly cheaper than the solo baseline
+        let solo = with_calls(result(50, 50.0, 0.0), 2 * 50);
+        assert!(got < simulated_units(SpecMethod::Ar, &solo));
+    }
+
+    #[test]
     fn packing_earns_its_call_savings_in_simulated_units() {
         // same rounds and tokens, 8 rounds fused per dispatch: only the
         // dispatch term shrinks, by the call-count ratio
-        let mut unpacked = result(48, 48.0, 0.0);
-        unpacked.device_calls = 2 * 48; // round + extract per round
-        let mut packed = result(48, 48.0, 0.0);
-        packed.device_calls = 2 * 48 / 8; // one call + extract per 8
+        let unpacked = with_calls(result(48, 48.0, 0.0), 2 * 48);
+        // one call + extract per 8 rounds
+        let packed = with_calls(result(48, 48.0, 0.0), 2 * 48 / 8);
         let a = simulated_units(SpecMethod::Ar, &unpacked);
         let b = simulated_units(SpecMethod::Ar, &packed);
         assert!(b < a, "packed {b} not cheaper than unpacked {a}");

@@ -54,6 +54,12 @@ struct Inner {
     relaxed: Summary,
     by_policy: BTreeMap<&'static str, PolicyAgg>,
     by_method: BTreeMap<&'static str, MethodAgg>,
+    /// Batch-occupancy histogram (DESIGN.md §9.5): how many batched
+    /// dispatches ran with N occupied lanes. Solo/interleaved replicas
+    /// record nothing here; under `--batch` every round dispatch counts
+    /// once, so the distribution shows how full the batch actually ran
+    /// (the amortization factor the occupancy sweep measures).
+    occupancy: BTreeMap<usize, u64>,
     /// Latest prefix-cache stats per replica (each replica owns its own
     /// store — DESIGN.md §8 — and republishes after every admission).
     cache_by_replica: BTreeMap<usize, CacheStats>,
@@ -141,6 +147,18 @@ impl MetricsRegistry {
             }
             a.ttft_ms.push(m.ttft_seconds * 1e3);
         }
+    }
+
+    /// Record one batched device dispatch that ran with `occupied` live
+    /// lanes (DESIGN.md §9.5). Called by the replica's batched loop once
+    /// per round dispatch; the resulting histogram is the occupancy
+    /// distribution the `"batch"` snapshot object reports.
+    pub fn record_occupancy(&self, occupied: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+        *g.occupancy.entry(occupied).or_insert(0) += 1;
     }
 
     /// Publish one replica's prefix-cache stats (the replica re-sends its
@@ -231,6 +249,28 @@ impl MetricsRegistry {
         cache.set("bytes_resident", Value::Num(agg.bytes_resident as f64));
         cache.set("entries", Value::Num(agg.entries as f64));
         o.set("cache", cache);
+        let dispatches: u64 = g.occupancy.values().sum();
+        if dispatches > 0 {
+            let lane_rounds: u64 = g
+                .occupancy
+                .iter()
+                .map(|(occ, n)| *occ as u64 * n)
+                .sum();
+            let mut hist = Value::obj();
+            for (occ, n) in &g.occupancy {
+                hist.set(&occ.to_string(), Value::Num(*n as f64));
+            }
+            let mut batch = Value::obj();
+            batch.set("dispatches", Value::Num(dispatches as f64));
+            // mean occupied lanes per dispatch — the §9.5 amortization
+            // factor (device_calls/token shrinks by roughly this)
+            batch.set(
+                "occupancy_mean",
+                Value::Num(lane_rounds as f64 / dispatches as f64),
+            );
+            batch.set("occupancy_hist", hist);
+            o.set("batch", batch);
+        }
         o
     }
 
@@ -357,6 +397,25 @@ mod tests {
         assert_eq!(c.get("bytes_resident").unwrap().as_usize(), Some(2000));
         let rate = c.get("hit_rate").unwrap().as_f64().unwrap();
         assert!((rate - 0.5).abs() < 1e-9, "{rate}");
+    }
+
+    #[test]
+    fn occupancy_histogram_tracks_batched_dispatches() {
+        let r = MetricsRegistry::new();
+        // no batched dispatches recorded -> no "batch" object at all
+        assert!(r.snapshot_json().get("batch").is_none());
+        for occ in [1, 4, 4, 4, 3] {
+            r.record_occupancy(occ);
+        }
+        let v = r.snapshot_json();
+        let b = v.get("batch").unwrap();
+        assert_eq!(b.get("dispatches").unwrap().as_usize(), Some(5));
+        let mean = b.get("occupancy_mean").unwrap().as_f64().unwrap();
+        assert!((mean - 16.0 / 5.0).abs() < 1e-9, "{mean}");
+        let hist = b.get("occupancy_hist").unwrap();
+        assert_eq!(hist.get("4").unwrap().as_usize(), Some(3));
+        assert_eq!(hist.get("1").unwrap().as_usize(), Some(1));
+        assert!(hist.get("2").is_none());
     }
 
     #[test]

@@ -1,20 +1,36 @@
 //! Engine replica: a dedicated OS thread owning one PJRT client.
 //!
 //! PJRT handles are not `Send`, so the `Runtime` is constructed *inside*
-//! the thread and never crosses it. The replica runs a continuous-batching
-//! loop: up to `slots` sequences are active at once and their rounds are
-//! interleaved round-robin over the single device — the CPU-PJRT analog of
-//! vLLM's iteration-level scheduling (cross-sequence GEMM batching is not
-//! expressible through the single-tuple-output xla crate; DESIGN.md §9.5).
+//! the thread and never crosses it. The replica runs one of two
+//! continuous-batching loops:
 //!
-//! The loop is packing-aware (DESIGN.md §9.6): one interleave turn is one
-//! *device call*, which under round packing fuses up to `rounds_per_call`
-//! draft-verify rounds — so a packed slot holds the device pack× longer
-//! per turn. Admission therefore caps streaming slots at 1 (per-round
-//! delta granularity) and the engine's adaptive controller runs every
-//! sequence's first turn unpacked (TTFT p99) and shrinks the pack near
-//! the generation budget.
+//! * **Interleaved** (default, `--batch 1` or artifacts without the
+//!   `*_batch` programs): up to `slots` sequences are active at once and
+//!   their rounds are interleaved round-robin over the single device —
+//!   iteration-level scheduling, one sequence per dispatch.
+//! * **Batched** (`--batch N` on batching-capable artifacts, DESIGN.md
+//!   §9.5): one [`BatchRunner`] steps every live lane in a *single*
+//!   device dispatch over the stacked state. Requests join at round
+//!   boundaries (solo cache-aware prefill, then a `batch_join` splice)
+//!   and leave at round boundaries (vLLM-style), so the dispatch
+//!   overhead and the round's GEMMs amortize across the occupancy,
+//!   which [`MetricsRegistry::record_occupancy`] histograms per
+//!   dispatch. One dispatch runs one program, so lanes must share a
+//!   method *family* ([`SpecMethod::batch_exec_name`]); admission is
+//!   FIFO with family-mismatch skip-ahead ([`plan_admissions`]) —
+//!   knobs, policies and temperatures are per-lane state and always
+//!   mix.
+//!
+//! Both loops are packing-aware (DESIGN.md §9.6): one turn is one
+//! *device call*, which under round packing fuses up to
+//! `rounds_per_call` draft-verify rounds — so a packed slot holds the
+//! device pack× longer per turn. Admission therefore caps streaming
+//! slots at 1 (per-round delta granularity) and the engine's adaptive
+//! controller runs every sequence's first turn unpacked (TTFT p99) and
+//! shrinks the pack near the generation budget; in the batched loop the
+//! pack budget is *per-lane* (`*_batch_multi`).
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
@@ -25,7 +41,7 @@ use std::time::{Duration, Instant};
 use crate::cache::{CacheConfig, SharedPrefixCache};
 use crate::coordinator::metrics::{MetricsRegistry, RequestMetrics};
 use crate::coordinator::request::{Response, StreamDelta, WorkItem};
-use crate::engine::SeqRunner;
+use crate::engine::{BatchRunner, SeqRunner};
 use crate::runtime::Runtime;
 
 /// Handle to one engine-replica thread (see the module doc).
@@ -64,6 +80,13 @@ pub struct ReplicaConfig {
     /// granularity) and the engine's controller caps the first turn of
     /// every sequence at 1 (TTFT p99).
     pub pack: usize,
+    /// Cross-sequence batch width (`--batch`, DESIGN.md §9.5): when > 1
+    /// and the artifacts carry the `*_batch` programs, the replica runs
+    /// the batched loop with up to this many lanes live per dispatch
+    /// (clamped to the layout's `batch_max`). 1 (or 0) keeps the
+    /// interleaved loop; so do pre-batching artifact sets, silently —
+    /// capability is detected, not configured.
+    pub batch: usize,
 }
 
 impl EngineReplica {
@@ -153,6 +176,40 @@ struct LoopCtl<'a> {
 }
 
 fn replica_loop(
+    id: usize,
+    rt: &Runtime,
+    cfg: &ReplicaConfig,
+    work: &Receiver<WorkItem>,
+    metrics: &MetricsRegistry,
+    ctl: &LoopCtl<'_>,
+) {
+    // capability-gated dispatch (module doc): `--batch N` only engages
+    // the batched loop on artifact sets that carry the `*_batch`
+    // programs; everything else serves exactly as before
+    if cfg.batch > 1 && rt.supports_batching() {
+        batched_loop(id, rt, cfg, work, metrics, ctl)
+    } else {
+        interleaved_loop(id, rt, cfg, work, metrics, ctl)
+    }
+}
+
+/// Error-path metrics for a request that never produced tokens.
+fn failed_metrics(item: &WorkItem, queue_seconds: f64) -> RequestMetrics {
+    RequestMetrics {
+        ok: false,
+        tokens: 0,
+        decode_seconds: 0.0,
+        prefill_seconds: 0.0,
+        queue_seconds,
+        ttft_seconds: 0.0,
+        tau: 0.0,
+        relaxed_accepts: 0.0,
+        policy: item.request.params.policy.name(),
+        method: item.request.params.method.name(),
+    }
+}
+
+fn interleaved_loop(
     id: usize,
     rt: &Runtime,
     cfg: &ReplicaConfig,
@@ -268,18 +325,7 @@ fn replica_loop(
                         item.request.id,
                         &format!("prefill failed: {e:#}"),
                     );
-                    metrics.record(RequestMetrics {
-                        ok: false,
-                        tokens: 0,
-                        decode_seconds: 0.0,
-                        prefill_seconds: 0.0,
-                        queue_seconds,
-                        ttft_seconds: 0.0,
-                        tau: 0.0,
-                        relaxed_accepts: 0.0,
-                        policy: item.request.params.policy.name(),
-                        method: item.request.params.method.name(),
-                    });
+                    metrics.record(failed_metrics(&item, queue_seconds));
                     let _ = item.reply.send(resp);
                 }
             }
@@ -344,18 +390,7 @@ fn replica_loop(
                         a.item.request.id,
                         &format!("decode failed: {e:#}"),
                     ));
-                    metrics.record(RequestMetrics {
-                        ok: false,
-                        tokens: 0,
-                        decode_seconds: 0.0,
-                        prefill_seconds: 0.0,
-                        queue_seconds: a.queue_seconds,
-                        ttft_seconds: 0.0,
-                        tau: 0.0,
-                        relaxed_accepts: 0.0,
-                        policy: a.item.request.params.policy.name(),
-                        method: a.item.request.params.method.name(),
-                    });
+                    metrics.record(failed_metrics(&a.item, a.queue_seconds));
                     true
                 }
             };
@@ -369,5 +404,364 @@ fn replica_loop(
                 i += 1;
             }
         }
+    }
+}
+
+/// Pure admission planner for the batched loop: given the occupancy,
+/// the lane budget, the running family (`None` = empty batch) and the
+/// queued requests' batched-program families in arrival order, return
+/// the queue indices to admit at this round boundary, ascending.
+///
+/// Invariants (property-tested in `tests/property.rs`):
+/// * never over-admits — at most `slots - occupancy` indices;
+/// * every admitted index shares one family (the running one when the
+///   batch is non-empty — one dispatch runs one program);
+/// * FIFO within a family — an index is skipped only for family
+///   mismatch, never while an earlier same-family arrival waits;
+/// * no starvation of the queue head: when the batch is empty and a
+///   slot is free, index 0 is always admitted, so once the batch drains
+///   the oldest waiter defines the next family.
+pub fn plan_admissions<'q>(
+    occupancy: usize,
+    slots: usize,
+    running_family: Option<&'q str>,
+    queued: &[&'q str],
+) -> Vec<usize> {
+    let mut free = slots.saturating_sub(occupancy);
+    let mut family = running_family;
+    let mut admit = Vec::new();
+    for (i, fam) in queued.iter().enumerate() {
+        if free == 0 {
+            break;
+        }
+        if let Some(f) = family {
+            if f != *fam {
+                continue;
+            }
+        }
+        family = Some(fam);
+        admit.push(i);
+        free -= 1;
+    }
+    admit
+}
+
+/// Per-slot request bookkeeping for the batched loop (the device-side
+/// lane state lives inside the [`BatchRunner`]).
+struct BatchLane {
+    item: WorkItem,
+    /// submit → admission wait
+    queue_seconds: f64,
+    /// submit → first committed token (stamped after the dispatch that
+    /// first commits)
+    ttft_seconds: Option<f64>,
+}
+
+/// Send the final response + metrics for one finished batched lane.
+fn deliver_batched(
+    lane: BatchLane,
+    result: anyhow::Result<crate::engine::GenResult>,
+    canceled: bool,
+    metrics: &MetricsRegistry,
+) {
+    match result {
+        Ok(result) => {
+            let params = &lane.item.request.params;
+            let mut resp =
+                Response::from_result(lane.item.request.id, &result, params);
+            resp.canceled = canceled;
+            // TTFT is stamped by the loop after the dispatch that first
+            // commits; a lane that finished in its first dispatch gets
+            // stamped here instead, and a lane that never committed
+            // falls back to queue + prefill (same as the solo loop)
+            let ttft = lane.ttft_seconds.unwrap_or_else(|| {
+                if result.tokens.is_empty() {
+                    lane.queue_seconds + result.prefill_seconds
+                } else {
+                    lane.item.submitted_at.elapsed().as_secs_f64()
+                }
+            });
+            metrics.record(RequestMetrics {
+                ok: true,
+                tokens: result.tokens.len(),
+                decode_seconds: result.decode_seconds,
+                prefill_seconds: result.prefill_seconds,
+                queue_seconds: lane.queue_seconds,
+                ttft_seconds: ttft,
+                tau: result.tau(),
+                relaxed_accepts: result.snapshot.relaxed_accepts,
+                policy: params.policy.name(),
+                method: params.method.name(),
+            });
+            let _ = lane.item.reply.send(resp);
+        }
+        Err(e) => {
+            metrics.record(failed_metrics(&lane.item, lane.queue_seconds));
+            let _ = lane.item.reply.send(Response::from_error(
+                lane.item.request.id,
+                &format!("decode failed: {e:#}"),
+            ));
+        }
+    }
+}
+
+/// The §9.5 batched loop: one [`BatchRunner`] steps every live lane per
+/// device dispatch; requests join and leave at round boundaries (see
+/// the module doc for the admission contract).
+fn batched_loop(
+    id: usize,
+    rt: &Runtime,
+    cfg: &ReplicaConfig,
+    work: &Receiver<WorkItem>,
+    metrics: &MetricsRegistry,
+    ctl: &LoopCtl<'_>,
+) {
+    let mut runner = match BatchRunner::new(rt) {
+        Ok(r) => r,
+        Err(e) => {
+            // supports_batching() said yes but the session bring-up
+            // failed — serve interleaved rather than killing the replica
+            eprintln!(
+                "replica {id}: batch session failed ({e:#}); \
+                 serving interleaved"
+            );
+            return interleaved_loop(id, rt, cfg, work, metrics, ctl);
+        }
+    };
+    let slots = cfg.batch.min(runner.batch_max()).max(1);
+    let cache: Option<SharedPrefixCache> = cfg.cache.build();
+    let publish_cache = |cache: &Option<SharedPrefixCache>| {
+        if let Some(c) = cache {
+            metrics.record_cache(id, c.borrow().stats());
+        }
+    };
+    // request bookkeeping parallel to the runner's device lanes
+    let mut lanes: Vec<Option<BatchLane>> =
+        (0..runner.batch_max()).map(|_| None).collect();
+    // family-mismatched arrivals wait here; they still count as queued
+    // (`queued_hint` drops only at admission ack) so `load()` is exact
+    let mut pending: VecDeque<WorkItem> = VecDeque::new();
+    loop {
+        if ctl.shutdown.load(Ordering::Relaxed)
+            && runner.is_empty()
+            && pending.is_empty()
+        {
+            return;
+        }
+        // ---- intake: drain the channel into the arrival queue ---------
+        if runner.is_empty() && pending.is_empty() {
+            match work.recv_timeout(Duration::from_millis(50)) {
+                Ok(i) => pending.push_back(i),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        while let Ok(i) = work.try_recv() {
+            pending.push_back(i);
+        }
+        // ---- admission at the round boundary --------------------------
+        let families: Vec<&str> = pending
+            .iter()
+            .map(|it| it.request.params.method.batch_exec_name())
+            .collect();
+        let plan = plan_admissions(
+            runner.occupancy(),
+            slots,
+            runner.family(),
+            &families,
+        );
+        let mut admitted = 0usize;
+        for &idx in &plan {
+            // `plan` is ascending, so each removal shifts the rest left
+            let mut item = pending
+                .remove(idx - admitted)
+                .expect("planned index in range");
+            admitted += 1;
+            let queue_seconds = Instant::now()
+                .duration_since(item.submitted_at)
+                .as_secs_f64();
+            let toks = crate::tokenizer::encode(&item.request.prompt);
+            let req_cache = if item.request.params.cache {
+                cache.clone()
+            } else {
+                None
+            };
+            // same packing-aware admission as the interleaved loop: the
+            // server default applies only when the request didn't pin
+            // "rounds_per_call" itself
+            if !item.request.pack_specified
+                && item.request.params.rounds_per_call <= 1
+            {
+                item.request.params.rounds_per_call = cfg.pack.max(1);
+            }
+            match runner.admit(&toks, &item.request.params, req_cache) {
+                Ok(slot) => {
+                    // streaming lanes never pack (per-round deltas); the
+                    // *other* lanes keep their own pack budgets — packing
+                    // is per-lane under `*_batch_multi`
+                    if item.request.stream {
+                        runner.set_pack_cap(slot, 1);
+                    }
+                    item.request.params.rounds_per_call =
+                        runner.effective_rounds_per_call(slot);
+                    if let Some(mut sink) = item.stream.take() {
+                        let rid = item.request.id;
+                        let mut seen_tokens = 0usize;
+                        runner.set_on_commit(
+                            slot,
+                            Box::new(move |committed: &[u32]| {
+                                if committed.len() <= seen_tokens {
+                                    return;
+                                }
+                                let delta = crate::tokenizer::decode(
+                                    &committed[seen_tokens..],
+                                );
+                                seen_tokens = committed.len();
+                                if !delta.is_empty() {
+                                    sink(StreamDelta {
+                                        id: rid,
+                                        delta,
+                                        tokens: committed.len(),
+                                    });
+                                }
+                            }),
+                        );
+                    }
+                    lanes[slot] = Some(BatchLane {
+                        item,
+                        queue_seconds,
+                        ttft_seconds: None,
+                    });
+                    ctl.active.store(runner.occupancy(), Ordering::Relaxed);
+                }
+                Err(e) => {
+                    let resp = Response::from_error(
+                        item.request.id,
+                        &format!("prefill failed: {e:#}"),
+                    );
+                    metrics.record(failed_metrics(&item, queue_seconds));
+                    let _ = item.reply.send(resp);
+                }
+            }
+            ctl.queued.fetch_sub(1, Ordering::Relaxed);
+            publish_cache(&cache);
+        }
+        if runner.is_empty() {
+            continue;
+        }
+        // ---- cooperative cancel: finalize at this round boundary ------
+        for slot in 0..lanes.len() {
+            let canceled = lanes[slot]
+                .as_ref()
+                .map_or(false, |l| l.item.cancel.load(Ordering::Relaxed));
+            if !canceled {
+                continue;
+            }
+            let done = runner.finish_early(slot);
+            let lane = lanes[slot].take().expect("canceled lane is live");
+            deliver_batched(lane, done, true, metrics);
+            ctl.active.store(runner.occupancy(), Ordering::Relaxed);
+            publish_cache(&cache);
+        }
+        if runner.is_empty() {
+            continue;
+        }
+        // ---- one shared dispatch for every live lane ------------------
+        metrics.record_occupancy(runner.occupancy());
+        match runner.step() {
+            Ok(finished) => {
+                for (slot, result) in finished {
+                    let lane =
+                        lanes[slot].take().expect("finished lane was live");
+                    deliver_batched(lane, Ok(result), false, metrics);
+                    publish_cache(&cache);
+                }
+                // stamp TTFT on lanes whose first token landed this turn
+                for slot in 0..lanes.len() {
+                    if let Some(lane) = lanes[slot].as_mut() {
+                        if lane.ttft_seconds.is_none()
+                            && runner.committed(slot) > 0
+                        {
+                            lane.ttft_seconds = Some(
+                                lane.item
+                                    .submitted_at
+                                    .elapsed()
+                                    .as_secs_f64(),
+                            );
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                // a dispatch failure poisons the whole stacked state:
+                // fail every live lane, then restart with a fresh batch
+                let msg = format!("{e:#}");
+                for slot in 0..lanes.len() {
+                    if let Some(lane) = lanes[slot].take() {
+                        metrics.record(failed_metrics(
+                            &lane.item,
+                            lane.queue_seconds,
+                        ));
+                        let _ = lane.item.reply.send(Response::from_error(
+                            lane.item.request.id,
+                            &format!("decode failed: {msg}"),
+                        ));
+                    }
+                }
+                match BatchRunner::new(rt) {
+                    Ok(r) => runner = r,
+                    Err(e2) => {
+                        eprintln!(
+                            "replica {id}: batch session lost ({e2:#})"
+                        );
+                        for item in pending.drain(..) {
+                            metrics.record(failed_metrics(&item, 0.0));
+                            let _ = item.reply.send(Response::from_error(
+                                item.request.id,
+                                "replica lost its device batch",
+                            ));
+                            ctl.queued.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        ctl.active.store(0, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
+        }
+        ctl.active.store(runner.occupancy(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::plan_admissions;
+
+    #[test]
+    fn empty_batch_admits_head_and_its_family() {
+        let q = ["sps_batch", "ar_batch", "sps_batch", "sps_batch"];
+        assert_eq!(plan_admissions(0, 4, None, &q), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn running_family_filters_mismatches() {
+        let q = ["ar_batch", "sps_batch", "ar_batch"];
+        assert_eq!(plan_admissions(2, 4, Some("sps_batch"), &q), vec![1]);
+    }
+
+    #[test]
+    fn never_admits_past_the_lane_budget() {
+        let q = ["sps_batch"; 10];
+        assert_eq!(plan_admissions(3, 4, Some("sps_batch"), &q), vec![0]);
+        assert!(plan_admissions(4, 4, Some("sps_batch"), &q).is_empty());
+        assert_eq!(plan_admissions(0, 2, None, &q), vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_queue_or_zero_slots_is_a_noop() {
+        assert!(plan_admissions(0, 4, None, &[]).is_empty());
+        assert!(
+            plan_admissions(8, 8, Some("sps_batch"), &["sps_batch"])
+                .is_empty()
+        );
     }
 }

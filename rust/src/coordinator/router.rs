@@ -116,7 +116,10 @@ impl Router {
     /// Spin up `n_replicas` engine threads and wait until every runtime
     /// has compiled its executables. `pack` is the server-side round
     /// packing default (`--pack`, DESIGN.md §9.6) replicas apply to
-    /// requests that don't carry their own `"rounds_per_call"`.
+    /// requests that don't carry their own `"rounds_per_call"`; `batch`
+    /// is the cross-sequence batch width (`--batch`, DESIGN.md §9.5) —
+    /// replicas with batching-capable artifacts decode up to that many
+    /// lanes per device dispatch, 1 keeps the interleaved loop.
     pub fn start(
         artifact_dir: &Path,
         n_replicas: usize,
@@ -125,6 +128,7 @@ impl Router {
         policy: RouterPolicy,
         cache: crate::cache::CacheConfig,
         pack: usize,
+        batch: usize,
     ) -> Result<Router> {
         let metrics = Arc::new(MetricsRegistry::new());
         let mut replicas = Vec::new();
@@ -141,6 +145,7 @@ impl Router {
                     hostloop,
                     cache,
                     pack,
+                    batch,
                 },
                 rx,
                 metrics.clone(),

@@ -21,6 +21,13 @@
 //! path, minus the per-round dispatch tax. Host-drafted methods and
 //! artifacts without the `*_multi` programs fall back to single rounds.
 //!
+//! Cross-sequence batching (DESIGN.md §9.5) is the other dispatch
+//! amortization axis: a [`BatchRunner`] steps up to `batch_max` lanes
+//! per `*_batch` dispatch, each lane a [`SeqRunner`]-equivalent view
+//! (same prefill path, same commit callbacks, same [`effective_pack`]
+//! budget per lane via `*_batch_multi`). Requests join and leave at
+//! round boundaries — the replica's continuous-batching admission loop.
+//!
 //! MARS is a *verification policy* ([`GenParams::policy`]), not a method:
 //! it changes only the accept/reject rule inside the device-side
 //! verification, exactly as in the paper. Every policy of the
@@ -143,8 +150,17 @@ pub struct GenResult {
     pub snapshot: Snapshot,
     /// Probe-ring dump when [`GenParams::probe`] was set.
     pub probe: Option<ProbeDump>,
-    /// Total device executions this request issued.
+    /// Total device executions this request issued (under batching: the
+    /// dispatches this request's stream participated in — a shared
+    /// batched dispatch counts once per participating lane).
     pub device_calls: u64,
+    /// This request's *amortized* dispatch count: each device dispatch
+    /// contributes `1 / occupancy` to every lane it stepped, so a B=4
+    /// batched round costs each lane a quarter dispatch. Equal to
+    /// `device_calls` on the solo path (occupancy 1). The simulated-cost
+    /// model charges its per-dispatch overhead against this, not
+    /// `device_calls` (DESIGN.md §9.5; `bench::simclock`).
+    pub dispatch_share: f64,
 }
 
 impl GenResult {
@@ -211,6 +227,76 @@ pub struct SeqRunner<'a> {
 /// tail, so sinks can diff text without tracking token state.
 pub type OnCommit = Box<dyn FnMut(&[u32]) + Send>;
 
+/// Clamp the requested `rounds_per_call` to the artifact's `PACK_MAX`:
+/// the device clamps its fused loop to the same bound, so the round
+/// accounting (`spins`), the lowered cfg slot and the echoed value all
+/// describe rounds the device can actually run. Artifact sets that
+/// predate packing carry no `pack_max` const (and no `*_multi`
+/// programs) — treat their bound as 1.
+fn clamp_rounds_per_call(rt: &Runtime, params: &mut GenParams) {
+    if params.rounds_per_call > 1 {
+        let pack_max =
+            rt.layout().consts.get("pack_max").copied().unwrap_or(1);
+        params.rounds_per_call = params.rounds_per_call.min(pack_max.max(1));
+    }
+}
+
+/// Prefill one request's solo session, consulting the replica's prefix
+/// cache (DESIGN.md §8) — the path [`SeqRunner::new_with_cache`] always
+/// ran, factored out so [`BatchRunner::admit`] prefills lanes through
+/// the *identical* logic (a batched lane is a solo prefill spliced into
+/// the stacked state via `batch_join`). Returns the session plus the
+/// restored-prefix length (0 on a cold prefill); a failed restore falls
+/// back to a cold prefill, and a freshly prefilled prompt is exported
+/// back into the cache for future requests.
+fn prefill_session<'a>(
+    rt: &'a Runtime,
+    prompt: &[u32],
+    params: &GenParams,
+    cache: &Option<SharedPrefixCache>,
+) -> Result<(crate::runtime::Session<'a>, usize)> {
+    let full_only = !rt.supports_suffix_prefill();
+    let hit = cache.as_ref().and_then(|c| {
+        let mut c = c.borrow_mut();
+        let hit = c.lookup(prompt, full_only);
+        if hit.is_none() {
+            c.note_miss();
+        }
+        hit
+    });
+    let mut prefill_cached_tokens = 0;
+    let mut sess = match hit {
+        Some((l, state)) => {
+            match rt.session_from_state(&state, l, prompt, params) {
+                Ok(s) => {
+                    prefill_cached_tokens = l;
+                    s
+                }
+                Err(_) => {
+                    // the fallback is a cold prefill: take the hit's
+                    // accounting back so metrics only report reuse
+                    // that actually happened
+                    if let Some(c) = cache {
+                        c.borrow_mut().rescind_hit(l);
+                    }
+                    rt.session(prompt, params)?
+                }
+            }
+        }
+        None => rt.session(prompt, params)?,
+    };
+    // snapshot the freshly prefilled prompt for future requests
+    // (skipped when the whole prompt was already cached)
+    if let Some(c) = cache {
+        if prefill_cached_tokens < prompt.len() {
+            if let Ok(state) = sess.export_state() {
+                c.borrow_mut().insert(prompt, state);
+            }
+        }
+    }
+    Ok((sess, prefill_cached_tokens))
+}
+
 impl<'a> SeqRunner<'a> {
     /// Prefill `prompt` and set up the per-request draft source from the
     /// method descriptor.
@@ -239,60 +325,12 @@ impl<'a> SeqRunner<'a> {
         cache: Option<SharedPrefixCache>,
     ) -> Result<Self> {
         let mut params = params.clone();
-        // the device clamps its fused loop to the artifact's PACK_MAX;
-        // clamp the host knob to the same bound so the round accounting
-        // (`spins`), the lowered cfg slot and the echoed value all
-        // describe rounds the device can actually run. Artifact sets
-        // that predate packing carry no `pack_max` const (and no
-        // `*_multi` programs) — treat their bound as 1.
-        if params.rounds_per_call > 1 {
-            let pack_max =
-                rt.layout().consts.get("pack_max").copied().unwrap_or(1);
-            params.rounds_per_call =
-                params.rounds_per_call.min(pack_max.max(1));
-        }
+        clamp_rounds_per_call(rt, &mut params);
         let t0 = Instant::now();
-        let full_only = !rt.supports_suffix_prefill();
-        let hit = cache.as_ref().and_then(|c| {
-            let mut c = c.borrow_mut();
-            let hit = c.lookup(prompt, full_only);
-            if hit.is_none() {
-                c.note_miss();
-            }
-            hit
-        });
-        let mut prefill_cached_tokens = 0;
-        let mut sess = match hit {
-            Some((l, state)) => {
-                match rt.session_from_state(&state, l, prompt, &params) {
-                    Ok(s) => {
-                        prefill_cached_tokens = l;
-                        s
-                    }
-                    Err(_) => {
-                        // the fallback is a cold prefill: take the hit's
-                        // accounting back so metrics only report reuse
-                        // that actually happened
-                        if let Some(c) = &cache {
-                            c.borrow_mut().rescind_hit(l);
-                        }
-                        rt.session(prompt, &params)?
-                    }
-                }
-            }
-            None => rt.session(prompt, &params)?,
-        };
+        let (mut sess, prefill_cached_tokens) =
+            prefill_session(rt, prompt, &params, &cache)?;
         if hostloop {
             sess.set_hostloop(true)?;
-        }
-        // snapshot the freshly prefilled prompt for future requests
-        // (skipped when the whole prompt was already cached)
-        if let Some(c) = &cache {
-            if prefill_cached_tokens < prompt.len() {
-                if let Ok(state) = sess.export_state() {
-                    c.borrow_mut().insert(prompt, state);
-                }
-            }
         }
         let prefill_seconds = t0.elapsed().as_secs_f64();
         let source = params.method.draft_source();
@@ -479,6 +517,393 @@ impl<'a> SeqRunner<'a> {
             snapshot: snap,
             probe,
             device_calls: self.sess.device_calls,
+            // solo decode: every dispatch served this one sequence
+            dispatch_share: self.sess.device_calls as f64,
+        })
+    }
+}
+
+/// One lane of a [`BatchRunner`]: the per-sequence bookkeeping a
+/// [`SeqRunner`] keeps, minus the session — the device state is one
+/// slot of the shared stacked [`crate::runtime::BatchSession`].
+struct Lane {
+    params: GenParams,
+    source: Box<dyn DraftSource>,
+    /// This lane drives a per-lane `*_batch_multi` round budget
+    /// (`rounds_per_call > 1` on a packable family).
+    packs: bool,
+    pack_cap: usize,
+    prompt: Vec<u32>,
+    history: Vec<u32>,
+    spins: usize,
+    round_cap: usize,
+    prefill_seconds: f64,
+    prefill_cached_tokens: usize,
+    cache: Option<SharedPrefixCache>,
+    decode_seconds: f64,
+    on_commit: Option<OnCommit>,
+    reported: usize,
+    /// Dispatches this lane's stream participated in (prefill + join are
+    /// dedicated; batched rounds count once per participating lane).
+    device_calls: u64,
+    /// Σ `1 / occupancy` over this lane's dispatches (the amortized
+    /// dispatch count, see [`GenResult::dispatch_share`]).
+    dispatch_share: f64,
+    /// Finalize at the next round boundary without further rounds.
+    cancel: bool,
+}
+
+impl Lane {
+    fn committed(&self) -> usize {
+        (self.history.len() - self.prompt.len()).min(self.params.max_new)
+    }
+
+    fn fire_on_commit(&mut self, snap: &Snapshot) {
+        let n = snap.tokens.len().min(self.params.max_new);
+        if n > self.reported {
+            if let Some(cb) = &mut self.on_commit {
+                cb(&snap.tokens[..n]);
+            }
+            self.reported = n;
+        }
+    }
+}
+
+/// Cross-sequence batched decoding (DESIGN.md §9.5): up to `batch_max`
+/// sequences share one `*_batch` dispatch per round, each lane carrying
+/// its own policy/method-knob/temperature/seed/`rounds_per_call` scalars
+/// (mixed per-request configs batch together; only the method *family* —
+/// the program identity — must match, see [`BatchRunner::can_admit`]).
+///
+/// The continuous-batching contract: sequences [`BatchRunner::admit`] and
+/// leave only at round boundaries ([`BatchRunner::step`] returns the
+/// finished lanes and frees their slots), exactly the vLLM-style
+/// iteration-level scheduling the coordinator's replica loop drives.
+/// [`SeqRunner`] semantics are preserved per lane: lanes prefill through
+/// the same cache-aware path, per-slot commit callbacks fire after every
+/// batched extract, and each lane packs by its own
+/// [`effective_pack`] budget (TTFT guard and budget shrink included) via
+/// the `*_batch_multi` per-lane `pack` vector.
+pub struct BatchRunner<'a> {
+    rt: &'a Runtime,
+    sess: crate::runtime::BatchSession<'a>,
+    /// The batched program every live lane shares (`None` while empty —
+    /// the first admission of an empty batch picks the family).
+    batch_exec: Option<&'static str>,
+    /// The family's fused per-lane-budget variant, when the artifact set
+    /// carries it and the family packs.
+    batch_multi_exec: Option<&'static str>,
+    lanes: Vec<Option<Lane>>,
+}
+
+impl<'a> BatchRunner<'a> {
+    /// Start an empty batch over the artifact's `batch_max` lanes.
+    /// Fails when the artifact set predates the `*_batch` programs
+    /// (callers gate on [`Runtime::supports_batching`]).
+    pub fn new(rt: &'a Runtime) -> Result<Self> {
+        let sess = rt.batch_session()?;
+        let n = sess.batch_max;
+        Ok(BatchRunner {
+            rt,
+            sess,
+            batch_exec: None,
+            batch_multi_exec: None,
+            lanes: (0..n).map(|_| None).collect(),
+        })
+    }
+
+    /// Lane capacity (the layout's `batch_max` constant).
+    pub fn batch_max(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Live (admitted, not yet retired) lane count — the occupancy each
+    /// batched dispatch amortizes over.
+    pub fn occupancy(&self) -> usize {
+        self.lanes.iter().flatten().count()
+    }
+
+    /// No live lanes.
+    pub fn is_empty(&self) -> bool {
+        self.occupancy() == 0
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.lanes.iter().position(|l| l.is_none())
+    }
+
+    /// At least one slot is free for admission.
+    pub fn has_free_slot(&self) -> bool {
+        self.free_slot().is_some()
+    }
+
+    /// Can a request of `method` join now? One dispatch runs one
+    /// program, so every lane must share the method's *batched program*
+    /// identity ([`SpecMethod::batch_exec_name`]); knobs, policies,
+    /// temperatures and budgets are per-lane state and always mix. An
+    /// empty batch admits any family.
+    pub fn can_admit(&self, method: &SpecMethod) -> bool {
+        self.has_free_slot()
+            && match self.batch_exec {
+                None => true,
+                Some(exec) => exec == method.batch_exec_name(),
+            }
+    }
+
+    /// The batched program the live lanes share (`None` while empty) —
+    /// the admission "family" key the coordinator's planner matches
+    /// queued requests against.
+    pub fn family(&self) -> Option<&'static str> {
+        self.batch_exec
+    }
+
+    /// Admit one request: prefill it solo (cache-aware, exactly the
+    /// [`SeqRunner`] path) and splice the prefilled state into a free
+    /// slot on device. Returns the slot index. The prefill + join
+    /// dispatches are dedicated to this lane; everything after is
+    /// shared and amortized.
+    pub fn admit(
+        &mut self,
+        prompt: &[u32],
+        params: &GenParams,
+        cache: Option<SharedPrefixCache>,
+    ) -> Result<usize> {
+        if !self.can_admit(&params.method) {
+            anyhow::bail!(
+                "batch cannot admit method '{}' now",
+                params.method.name()
+            );
+        }
+        let slot = self.free_slot().expect("can_admit checked a free slot");
+        let mut params = params.clone();
+        clamp_rounds_per_call(self.rt, &mut params);
+        let t0 = Instant::now();
+        let (mut solo, prefill_cached_tokens) =
+            prefill_session(self.rt, prompt, &params, &cache)?;
+        let solo_calls = solo.device_calls;
+        self.sess.join(&mut solo, slot)?;
+        let prefill_seconds = t0.elapsed().as_secs_f64();
+        self.batch_exec = Some(params.method.batch_exec_name());
+        self.batch_multi_exec = params
+            .method
+            .batch_multi_exec_name()
+            .filter(|name| self.rt.supports_round_packing(name));
+        let source = params.method.draft_source();
+        // generous hard cap: even tau=1 finishes within max_new rounds
+        let round_cap = params.max_new * 2 + 8;
+        let dedicated = solo_calls + 2; // prefill traffic + join splice
+        self.lanes[slot] = Some(Lane {
+            packs: params.rounds_per_call > 1
+                && self.batch_multi_exec.is_some(),
+            pack_cap: usize::MAX,
+            source,
+            prompt: prompt.to_vec(),
+            history: prompt.to_vec(),
+            spins: 0,
+            round_cap,
+            prefill_seconds,
+            prefill_cached_tokens,
+            cache,
+            decode_seconds: 0.0,
+            on_commit: None,
+            reported: 0,
+            device_calls: dedicated,
+            dispatch_share: dedicated as f64,
+            cancel: false,
+            params,
+        });
+        Ok(slot)
+    }
+
+    /// Install `slot`'s round-commit callback (streaming deltas; same
+    /// contract as [`SeqRunner::set_on_commit`]).
+    pub fn set_on_commit(&mut self, slot: usize, cb: OnCommit) {
+        if let Some(l) = self.lanes.get_mut(slot).and_then(|l| l.as_mut()) {
+            l.on_commit = Some(cb);
+        }
+    }
+
+    /// Cap `slot`'s pack externally (streaming slots cap at 1, exactly
+    /// as [`SeqRunner::set_pack_cap`]).
+    pub fn set_pack_cap(&mut self, slot: usize, cap: usize) {
+        if let Some(l) = self.lanes.get_mut(slot).and_then(|l| l.as_mut()) {
+            l.pack_cap = cap.max(1);
+        }
+    }
+
+    /// The steady-state packing `slot` actually runs (the echoed
+    /// `"rounds_per_call"`; mirrors
+    /// [`SeqRunner::effective_rounds_per_call`]).
+    pub fn effective_rounds_per_call(&self, slot: usize) -> usize {
+        match self.lanes.get(slot).and_then(|l| l.as_ref()) {
+            Some(l) if l.packs => {
+                l.params.rounds_per_call.clamp(1, l.pack_cap)
+            }
+            _ => 1,
+        }
+    }
+
+    /// Tokens `slot` has committed so far (clamped to its `max_new`).
+    pub fn committed(&self, slot: usize) -> usize {
+        self.lanes
+            .get(slot)
+            .and_then(|l| l.as_ref())
+            .map(|l| l.committed())
+            .unwrap_or(0)
+    }
+
+    /// One batched device turn: a single `*_batch` (or `*_batch_multi`)
+    /// dispatch stepping every live lane, then one `extract_batch`
+    /// snapshot pull. Returns the finished lanes' `(slot, result)`
+    /// pairs; their slots are free for re-admission on return — this is
+    /// the round boundary where continuous batching joins and leaves.
+    pub fn step(&mut self) -> Result<Vec<(usize, GenResult)>> {
+        let occ = self.occupancy();
+        if occ == 0 {
+            return Ok(Vec::new());
+        }
+        let t = Instant::now();
+        let calls_before = self.sess.device_calls;
+        let exec = self.batch_exec.expect("live lanes imply a family");
+        if exec == "verify_ext_batch" {
+            // host-drafted lanes: fresh per-lane draft blocks each round
+            let drafts: Vec<Vec<u32>> = self
+                .lanes
+                .iter_mut()
+                .map(|l| match l {
+                    Some(l) if !l.cancel => {
+                        l.spins += 1;
+                        l.source.next_drafts(&l.history).unwrap_or_default()
+                    }
+                    _ => Vec::new(),
+                })
+                .collect();
+            self.sess.round_ext(&drafts)?;
+        } else {
+            let packs: Vec<usize> = self
+                .lanes
+                .iter_mut()
+                .map(|l| match l {
+                    Some(l) if !l.cancel => {
+                        let pack = if l.packs {
+                            effective_pack(
+                                l.params.rounds_per_call,
+                                l.pack_cap,
+                                l.committed(),
+                                l.params.max_new,
+                            )
+                        } else {
+                            1
+                        };
+                        l.spins += pack;
+                        pack
+                    }
+                    _ => 1,
+                })
+                .collect();
+            match self.batch_multi_exec {
+                Some(multi) if packs.iter().any(|&p| p > 1) => {
+                    self.sess.round_packed(multi, &packs)?
+                }
+                _ => self.sess.round(exec)?,
+            }
+        }
+        let snaps = self.sess.extract_all()?;
+        let dt = t.elapsed().as_secs_f64();
+        let turn_calls = self.sess.device_calls - calls_before;
+        // the §9.5 amortization: this turn's dispatches served `occ`
+        // lanes at once, so each lane's share is 1/occ of each
+        let share = turn_calls as f64 / occ as f64;
+        let mut done = Vec::new();
+        for slot in 0..self.lanes.len() {
+            let Some(lane) = self.lanes[slot].as_mut() else { continue };
+            let snap = &snaps[slot];
+            lane.decode_seconds += dt;
+            lane.device_calls += turn_calls;
+            lane.dispatch_share += share;
+            lane.history = lane.prompt.clone();
+            lane.history.extend(&snap.tokens);
+            lane.fire_on_commit(snap);
+            if snap.finished || lane.cancel || lane.spins >= lane.round_cap
+            {
+                done.push(slot);
+            }
+        }
+        let mut out = Vec::new();
+        for slot in done {
+            let result = self.retire(slot, snaps[slot].clone())?;
+            out.push((slot, result));
+        }
+        Ok(out)
+    }
+
+    /// Finalize `slot` mid-flight with whatever has committed (the
+    /// cancel path — mirrors [`SeqRunner::finish_early`]): one batched
+    /// extract, no further rounds for this lane, slot freed on return.
+    pub fn finish_early(&mut self, slot: usize) -> Result<GenResult> {
+        if self.lanes.get(slot).and_then(|l| l.as_ref()).is_none() {
+            anyhow::bail!("no live lane in slot {slot}");
+        }
+        let snaps = self.sess.extract_all()?;
+        {
+            let lane = self.lanes[slot].as_mut().expect("checked above");
+            lane.device_calls += 1;
+            lane.dispatch_share += 1.0; // dedicated extract
+            lane.history = lane.prompt.clone();
+            lane.history.extend(&snaps[slot].tokens);
+            lane.fire_on_commit(&snaps[slot]);
+        }
+        self.retire(slot, snaps[slot].clone())
+    }
+
+    /// Retire one lane: export its cache snapshot, re-mask the slot if
+    /// the device never set its `finished` flag, and build the result.
+    fn retire(&mut self, slot: usize, snap: Snapshot) -> Result<GenResult> {
+        let lane = self.lanes[slot].take().expect("live lane");
+        // cache export under the same guards as the solo finalize: key
+        // pinned to the device's own row count and the client-visible
+        // (max_new-truncated) tokens
+        if let Some(c) = &lane.cache {
+            if !snap.tokens.is_empty()
+                && snap.tokens.len() <= lane.params.max_new
+                && snap.pos == lane.prompt.len() + snap.tokens.len()
+            {
+                let mut key = lane.prompt.clone();
+                key.extend(&snap.tokens);
+                if let Ok(state) = self.sess.export_slot(slot) {
+                    c.borrow_mut().insert(&key, state);
+                }
+            }
+        }
+        // a lane retired before its device flag set (cancel / round-cap
+        // overrun) would keep decoding in place; splice a zeroed
+        // finished lane over it so the slot is truly masked again
+        if !snap.finished {
+            let lay = self.rt.layout();
+            let mut dead = vec![0f32; lay.state_len];
+            dead[lay.scalar("finished")] = 1.0;
+            self.sess.join_host(&dead, slot)?;
+        }
+        if self.is_empty() {
+            // empty batch: the next admission may bring any family
+            self.batch_exec = None;
+            self.batch_multi_exec = None;
+        }
+        let mut tokens = snap.tokens.clone();
+        tokens.truncate(lane.params.max_new);
+        let text = crate::tokenizer::decode(&tokens);
+        Ok(GenResult {
+            tokens,
+            text,
+            decode_seconds: lane.decode_seconds,
+            prefill_seconds: lane.prefill_seconds,
+            prefill_cached_tokens: lane.prefill_cached_tokens,
+            snapshot: snap,
+            // the probe ring is pulled by a solo-state program; batched
+            // lanes don't dump probes (GenParams::probe is a bench knob)
+            probe: None,
+            device_calls: lane.device_calls,
+            dispatch_share: lane.dispatch_share,
         })
     }
 }

@@ -4,7 +4,7 @@
 //! mars info                          artifact + model summary
 //! mars generate --prompt "..."       one-shot generation
 //! mars serve --bind 127.0.0.1:7071   line-JSON TCP serving
-//! mars bench <table1..table7|fig3|policies|packing|perf|serve|all>
+//! mars bench <table1..table7|fig3|policies|packing|batch|perf|serve|all>
 //! mars analyze <fig1|fig4>           probe-ring dumps + ASCII plots
 //! mars eval --task arith --method eagle_tree [--policy mars:0.9]
 //! ```
@@ -64,18 +64,23 @@ USAGE: mars <cmd> [flags]
       [--cache-mb 256]   per-replica prefix-cache budget (0 disables)
       [--pack 1]   server default rounds_per_call (requests override
           with \"rounds_per_call\"; streaming slots always run unpacked)
+      [--batch 1]  cross-sequence batch width: decode up to N requests
+          per device dispatch (needs batching-capable artifacts;
+          requests join/leave at round boundaries)
       line-JSON protocol: pipelined ids, \"stream\": true deltas,
       \"cache\": false opt-out, {{\"cmd\": \"cancel\", \"id\": N}} —
       see coordinator/server.rs docs
-  bench table1|..|table7|fig3|perf|policies|packing|serve|all
+  bench table1|..|table7|fig3|perf|policies|packing|batch|serve|all
       [--n 16] [--seed 7] [--max-new 96]
-      [--methods sps:k=6,eagle_tree,pld]      (policies/packing/serve;
-          defaults: every speculative method in the registry /
+      [--methods sps:k=6,eagle_tree,pld]      (policies/packing/batch/
+          serve; defaults: every speculative method in the registry /
           sps + eagle_tree / the default tree)
       [--policies strict,mars:0.9,topk:2,entropy:1.5]   (policies/
-          packing/serve; packing defaults to strict,mars:0.9)
+          packing/batch/serve; packing + batch default to strict,mars:0.9)
       [--packs 1,2,4,8,16]   rounds_per_call sweep list     (packing)
-      [--connections 4] [--rate 8.0] [--replicas 1] [--slots 4]  (serve)
+      [--batches 1,2,4,8]    occupancy sweep list            (batch)
+      [--connections 4] [--rate 8.0] [--replicas 1] [--slots 4]
+          [--batch 1]   cross-sequence batch width per replica   (serve)
       [--scenario sweep|chat] [--turns 3] [--cache-mb 256]        (serve;
           chat = multi-turn conversations, cache-on vs cache-off waves)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
@@ -201,6 +206,7 @@ fn run(args: &Args) -> Result<()> {
                 policy,
                 cache,
                 args.get_usize("pack", 1).max(1),
+                args.get_usize("batch", 1).max(1),
             )?);
             let handle = server::serve(router.clone(), &bind)?;
             println!("serving on {} ({} replicas)", handle.addr, replicas);
@@ -273,6 +279,7 @@ fn run(args: &Args) -> Result<()> {
                     artifact_dir: dir.clone(),
                     replicas: args.get_usize("replicas", 1),
                     slots: args.get_usize("slots", 4),
+                    batch: args.get_usize("batch", 1).max(1),
                     connections: args.get_usize("connections", 4),
                     n_requests: args.get_usize("n", 24),
                     rate_per_s: args.get_f64("rate", 8.0),
@@ -334,6 +341,35 @@ fn run(args: &Args) -> Result<()> {
                         ])?,
                         &policies,
                         &packs,
+                    )?
+                }
+                "batch" => {
+                    // the occupancy sweep mirrors `packing`'s grid: the
+                    // two acceptance families x the two headline
+                    // policies (override with --methods / --policies)
+                    let spec = args.get_or("batches", "1,2,4,8");
+                    let batches: Vec<usize> = spec
+                        .split(',')
+                        .map(|s| {
+                            s.trim().parse::<usize>().ok().filter(|&b| b >= 1)
+                        })
+                        .collect::<Option<Vec<usize>>>()
+                        .ok_or_else(|| anyhow!("bad --batches list '{spec}'"))?;
+                    let policies = match args.get("policies") {
+                        None => vec![
+                            VerifyPolicy::Strict,
+                            VerifyPolicy::Mars { theta: 0.9 },
+                        ],
+                        Some(_) => sweep()?,
+                    };
+                    bench::batch(
+                        &ctx,
+                        &msweep(vec![
+                            SpecMethod::Sps { k: 7 },
+                            SpecMethod::default(),
+                        ])?,
+                        &policies,
+                        &batches,
                     )?
                 }
                 "all" => {

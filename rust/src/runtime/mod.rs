@@ -353,6 +353,45 @@ impl Runtime {
         self.has_exec("prefill_ext")
     }
 
+    /// Does this artifact set carry the cross-sequence batched programs
+    /// (`*_batch`, DESIGN.md §9.5)? Requires the layout's `batch_max`
+    /// constant plus the admission/extract splice programs; older
+    /// artifact sets fall back to interleaved solo sessions.
+    pub fn supports_batching(&self) -> bool {
+        self.layout().batch_max() > 0
+            && self.has_exec("batch_join")
+            && self.has_exec("batch_slot")
+            && self.has_exec("extract_batch")
+    }
+
+    /// Start an empty batched decode over `batch_max` lanes (DESIGN.md
+    /// §9.5): every lane is zeroed with `finished = 1`, so the `*_batch`
+    /// programs treat it as a masked no-op until [`BatchSession::join`]
+    /// splices a prefilled sequence in.
+    pub fn batch_session(&self) -> Result<BatchSession<'_>> {
+        if !self.supports_batching() {
+            bail!("artifacts lack the *_batch programs (DESIGN.md §9.5)");
+        }
+        let lay = self.layout();
+        let b = lay.batch_max();
+        let fin = lay.scalar("finished");
+        let mut host = vec![0f32; b * lay.state_len];
+        for lane in 0..b {
+            host[lane * lay.state_len + fin] = 1.0;
+        }
+        let state = self.upload(&host)?;
+        Ok(BatchSession {
+            rt: self,
+            state,
+            batch_max: b,
+            pack_buf: None,
+            ext_staging: Vec::new(),
+            ext_buf: None,
+            rounds_run: 0,
+            device_calls: 1,
+        })
+    }
+
     /// Resume a prefix-cache snapshot as a fresh session (DESIGN.md §8):
     /// restamp the request's cfg scalars onto the cached state host-side
     /// ([`state::restamp_resumed`]), upload it, and run `prefill_ext`
@@ -615,5 +654,212 @@ impl<'a> Session<'a> {
         let raw = self.rt.pull(&out)?;
         self.state = DeviceState::Buffer(sb);
         ProbeDump::decode(self.rt.layout(), &raw)
+    }
+}
+
+/// A cross-sequence batched decode (DESIGN.md §9.5): `batch_max` stacked
+/// flat states stepped by one `*_batch` dispatch per round, so B
+/// independent sequences draft-and-verify for the price of one device
+/// call. Sequences join at round boundaries via the `batch_join` device
+/// splice (device-to-device; the only host traffic is a one-float slot
+/// index) and leave by finishing — the programs whole-lane mask a
+/// finished lane, which then idles bit-frozen until a new sequence
+/// reuses its slot. Per-lane knobs (policy triple, method slots, temp,
+/// seed, `rounds_per_call`) ride in each lane's own scalars, stamped by
+/// that lane's prefill, so mixed configs share a dispatch; only the
+/// method *family* (the program identity) must match across lanes.
+pub struct BatchSession<'a> {
+    rt: &'a Runtime,
+    /// Stacked `[batch_max * state_len]` device state.
+    state: xla::PjRtBuffer,
+    /// Lane count (the layout's `batch_max` constant).
+    pub batch_max: usize,
+    /// Cached per-lane `pack` argument of the last
+    /// [`BatchSession::round_packed`] call (reuploaded only on change).
+    pack_buf: Option<(Vec<f32>, xla::PjRtBuffer)>,
+    /// Staging for the per-lane `verify_ext_batch` draft blocks.
+    ext_staging: Vec<f32>,
+    ext_buf: Option<xla::PjRtBuffer>,
+    /// Batched round dispatches issued (each steps every live lane; a
+    /// fused `*_batch_multi` call still counts once).
+    pub rounds_run: u64,
+    /// Device executions + buffer uploads this session issued.
+    pub device_calls: u64,
+}
+
+impl<'a> BatchSession<'a> {
+    /// Splice one prefilled solo session into `slot` (device-to-device
+    /// `batch_join`). The lane's own cfg scalars ride in with its state,
+    /// so per-lane policy/method/temperature/seed/`rounds_per_call` all
+    /// come from the joined request. The caller should read the lane
+    /// session's `device_calls` (its prefill traffic) before dropping it.
+    pub fn join(&mut self, lane: &mut Session<'a>, slot: usize) -> Result<()> {
+        if slot >= self.batch_max {
+            bail!("slot {slot} out of range (batch_max {})", self.batch_max);
+        }
+        let lane_buf = lane.state_buf()?;
+        let slot_buf = self.rt.upload(&[slot as f32])?;
+        let out = self
+            .rt
+            .run("batch_join", Some(&self.state), &[&lane_buf, &slot_buf])?;
+        self.state = out;
+        self.device_calls += 2;
+        Ok(())
+    }
+
+    /// Splice a host-provided flat lane state into `slot`. Used to
+    /// retire a lane whose device `finished` flag never set (cancel,
+    /// round-cap overrun): splicing a zeroed `finished = 1` lane over it
+    /// re-masks the slot. Costs one state-sized upload, so it is the
+    /// exception path; normal leaves are free (the lane finishes and the
+    /// programs mask it).
+    pub fn join_host(&mut self, lane: &[f32], slot: usize) -> Result<()> {
+        if slot >= self.batch_max {
+            bail!("slot {slot} out of range (batch_max {})", self.batch_max);
+        }
+        if lane.len() != self.rt.layout().state_len {
+            bail!(
+                "lane state length {} != layout state_len {}",
+                lane.len(),
+                self.rt.layout().state_len
+            );
+        }
+        let lane_buf = self.rt.upload(lane)?;
+        let slot_buf = self.rt.upload(&[slot as f32])?;
+        let out = self
+            .rt
+            .run("batch_join", Some(&self.state), &[&lane_buf, &slot_buf])?;
+        self.state = out;
+        self.device_calls += 3;
+        Ok(())
+    }
+
+    /// One batched round of the named `*_batch` executable: every
+    /// unfinished lane drafts-and-verifies, finished and empty lanes are
+    /// masked no-ops.
+    pub fn round(&mut self, exec_name: &str) -> Result<()> {
+        let out = self.rt.run(exec_name, Some(&self.state), &[])?;
+        self.state = out;
+        self.device_calls += 1;
+        self.rounds_run += 1;
+        Ok(())
+    }
+
+    /// One batched fused multi-round call (`*_batch_multi`, §9.5 × §9.6)
+    /// with a per-lane round budget: the device loops while any lane has
+    /// budget left and is unfinished, masking lanes whose budget ran out.
+    /// The per-lane budget buffer is cached and reuploaded only when the
+    /// budgets change (steady-state packing costs no upload).
+    pub fn round_packed(
+        &mut self,
+        exec_name: &str,
+        packs: &[usize],
+    ) -> Result<()> {
+        if packs.len() != self.batch_max {
+            bail!(
+                "pack vector length {} != batch_max {}",
+                packs.len(),
+                self.batch_max
+            );
+        }
+        let vals: Vec<f32> = packs.iter().map(|&p| p.max(1) as f32).collect();
+        let reuse = matches!(&self.pack_buf, Some((v, _)) if *v == vals);
+        if !reuse {
+            let buf = self.rt.upload(&vals)?;
+            self.device_calls += 1;
+            self.pack_buf = Some((vals, buf));
+        }
+        let out = {
+            let (_, pack_buf) =
+                self.pack_buf.as_ref().expect("pack buffer present");
+            self.rt.run(exec_name, Some(&self.state), &[pack_buf])?
+        };
+        self.state = out;
+        self.device_calls += 1;
+        self.rounds_run += 1;
+        Ok(())
+    }
+
+    /// One batched `verify_ext_batch` round with per-lane host draft
+    /// blocks (`[len, tok...]`, `k_max + 1` floats per lane). Lanes
+    /// without a live host-drafted request pass an empty draft (their
+    /// finished mask makes the AR fallback a no-op anyway). As in the
+    /// solo path, the staging buffer is reuploaded only when some lane's
+    /// drafts actually changed.
+    pub fn round_ext(&mut self, drafts: &[Vec<u32>]) -> Result<()> {
+        if drafts.len() != self.batch_max {
+            bail!(
+                "draft vector count {} != batch_max {}",
+                drafts.len(),
+                self.batch_max
+            );
+        }
+        let k_max = self.rt.layout().konst("k_max");
+        let w = k_max + 1;
+        if self.ext_staging.len() != self.batch_max * w {
+            self.ext_staging = vec![0f32; self.batch_max * w];
+            self.ext_buf = None;
+        }
+        let mut changed = self.ext_buf.is_none();
+        for (lane, d) in drafts.iter().enumerate() {
+            let n = d.len().min(k_max);
+            let block = &mut self.ext_staging[lane * w..(lane + 1) * w];
+            if block[0] != n as f32 {
+                block[0] = n as f32;
+                changed = true;
+            }
+            for (i, slot) in block[1..].iter_mut().enumerate() {
+                let v = if i < n { d[i] as f32 } else { 0.0 };
+                if *slot != v {
+                    *slot = v;
+                    changed = true;
+                }
+            }
+        }
+        if changed {
+            self.ext_buf = Some(self.rt.upload(&self.ext_staging)?);
+            self.device_calls += 1;
+        }
+        let out = {
+            let ext_buf = self.ext_buf.as_ref().expect("ext buffer present");
+            self.rt.run("verify_ext_batch", Some(&self.state), &[ext_buf])?
+        };
+        self.state = out;
+        self.device_calls += 1;
+        self.rounds_run += 1;
+        Ok(())
+    }
+
+    /// Pull every lane's cheap snapshot in one `extract_batch` dispatch
+    /// (scalars + out ring per lane, decoded per lane).
+    pub fn extract_all(&mut self) -> Result<Vec<Snapshot>> {
+        let out = self.rt.run("extract_batch", Some(&self.state), &[])?;
+        self.device_calls += 1;
+        let raw = self.rt.pull(&out)?;
+        let lay = self.rt.layout();
+        let w = lay.extract_len;
+        if raw.len() != self.batch_max * w {
+            bail!(
+                "extract_batch length mismatch: got {}, want {}",
+                raw.len(),
+                self.batch_max * w
+            );
+        }
+        (0..self.batch_max)
+            .map(|lane| Snapshot::decode(lay, &raw[lane * w..(lane + 1) * w]))
+            .collect()
+    }
+
+    /// Pull one lane's full flat state to host (`batch_slot` + literal
+    /// transfer) — the prefix-cache snapshot of a batched lane.
+    pub fn export_slot(&mut self, slot: usize) -> Result<Vec<f32>> {
+        if slot >= self.batch_max {
+            bail!("slot {slot} out of range (batch_max {})", self.batch_max);
+        }
+        let slot_buf = self.rt.upload(&[slot as f32])?;
+        let out =
+            self.rt.run("batch_slot", Some(&self.state), &[&slot_buf])?;
+        self.device_calls += 2;
+        self.rt.pull(&out)
     }
 }

@@ -123,6 +123,19 @@ impl Layout {
     pub fn konst(&self, name: &str) -> usize {
         self.consts[name]
     }
+
+    /// Optional ABI constant — `None` when the artifact set predates the
+    /// constant (layouts are loaded, not hard-coded, so new consts must
+    /// degrade gracefully against old artifact dirs).
+    pub fn konst_opt(&self, name: &str) -> Option<usize> {
+        self.consts.get(name).copied()
+    }
+
+    /// Max sequences per batched dispatch (the `*_batch` programs,
+    /// DESIGN.md §9.5), or 0 when the artifact set predates batching.
+    pub fn batch_max(&self) -> usize {
+        self.konst_opt("batch_max").unwrap_or(0)
+    }
 }
 
 /// Per-request scalars zeroed when a prefix-cache snapshot is resumed as
@@ -371,6 +384,15 @@ mod tests {
         for name in RESUME_RESET_SCALARS {
             assert_eq!(state[lay.scalar(name)], 0.0, "{name}");
         }
+    }
+
+    #[test]
+    fn batch_max_defaults_to_zero_on_old_layouts() {
+        // the demo layout's consts predate batching
+        let lay = demo_layout();
+        assert_eq!(lay.konst_opt("batch_max"), None);
+        assert_eq!(lay.batch_max(), 0);
+        assert_eq!(lay.konst_opt("probe_w"), Some(3));
     }
 
     #[test]

@@ -574,6 +574,42 @@ impl SpecMethod {
         }
     }
 
+    /// Name of the cross-sequence batched round program (batched
+    /// decoding, DESIGN.md §9.5) that steps `BATCH_MAX` stacked lanes of
+    /// this method in one dispatch. Every family has one: host-drafted
+    /// families batch through `verify_ext_batch` with per-lane draft
+    /// vectors. Callers must gate on `Runtime::supports_batching` —
+    /// artifact sets lowered before §9.5 lack the `*_batch` programs.
+    pub fn batch_exec_name(&self) -> &'static str {
+        match self {
+            SpecMethod::Ar => "ar_batch",
+            SpecMethod::Sps { .. } => "sps_batch",
+            SpecMethod::EagleChain { .. } | SpecMethod::EagleTree { .. } => {
+                "eagle_tree_batch"
+            }
+            SpecMethod::Medusa { .. } => "medusa_batch",
+            SpecMethod::Pld { .. } | SpecMethod::Lookahead { .. } => {
+                "verify_ext_batch"
+            }
+        }
+    }
+
+    /// Name of the batched fused multi-round program (§9.5 × §9.6): up to
+    /// a per-lane round budget per dispatch across the whole batch, or
+    /// `None` for host-drafted families (fresh host drafts are needed
+    /// every round, exactly as for [`SpecMethod::multi_exec_name`]).
+    pub fn batch_multi_exec_name(&self) -> Option<&'static str> {
+        match self {
+            SpecMethod::Ar => Some("ar_batch_multi"),
+            SpecMethod::Sps { .. } => Some("sps_batch_multi"),
+            SpecMethod::EagleChain { .. } | SpecMethod::EagleTree { .. } => {
+                Some("eagle_tree_batch_multi")
+            }
+            SpecMethod::Medusa { .. } => Some("medusa_batch_multi"),
+            SpecMethod::Pld { .. } | SpecMethod::Lookahead { .. } => None,
+        }
+    }
+
     /// Encode into the `(kdraft, beam, branch)` config-slot triple the
     /// round programs read (see `python/compile/state_spec.py`). Chain
     /// methods lower to the degenerate `beam = branch = 1` tree; host
@@ -831,6 +867,54 @@ mod tests {
             Some("eagle_tree_multi")
         );
         assert_eq!(SpecMethod::Ar.multi_exec_name(), Some("ar_multi"));
+    }
+
+    #[test]
+    fn batch_exec_names_cover_every_family() {
+        // every family batches: device-coupled methods get their own
+        // `*_batch` program, host-drafted ones share verify_ext_batch
+        for info in METHODS {
+            let base = info.default.exec_name();
+            let batch = info.default.batch_exec_name();
+            if base == "verify_ext_round" {
+                assert_eq!(batch, "verify_ext_batch", "{}", info.name);
+                assert_eq!(
+                    info.default.batch_multi_exec_name(),
+                    None,
+                    "{}: host drafts cannot pack rounds",
+                    info.name
+                );
+            } else {
+                assert_eq!(
+                    batch,
+                    format!(
+                        "{}_batch",
+                        base.trim_end_matches("_round").trim_end_matches("_step")
+                    ),
+                    "{}",
+                    info.name
+                );
+                assert_eq!(
+                    info.default.batch_multi_exec_name(),
+                    Some(
+                        match batch {
+                            "ar_batch" => "ar_batch_multi",
+                            "sps_batch" => "sps_batch_multi",
+                            "eagle_tree_batch" => "eagle_tree_batch_multi",
+                            "medusa_batch" => "medusa_batch_multi",
+                            other => panic!("unexpected {other}"),
+                        }
+                    ),
+                    "{}",
+                    info.name
+                );
+            }
+        }
+        assert_eq!(
+            SpecMethod::EagleChain { depth: 5 }.batch_exec_name(),
+            "eagle_tree_batch"
+        );
+        assert_eq!(SpecMethod::Ar.batch_exec_name(), "ar_batch");
     }
 
     #[test]

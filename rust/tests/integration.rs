@@ -55,6 +55,19 @@ fn artifacts_metadata_consistent() {
         "medusa_multi",
         "extract",
         "extract_probe",
+        // cross-sequence batched decoding (DESIGN.md §9.5)
+        "ar_batch",
+        "sps_batch",
+        "eagle_tree_batch",
+        "medusa_batch",
+        "verify_ext_batch",
+        "ar_batch_multi",
+        "sps_batch_multi",
+        "eagle_tree_batch_multi",
+        "medusa_batch_multi",
+        "batch_join",
+        "batch_slot",
+        "extract_batch",
     ] {
         assert!(
             a.executable_names().iter().any(|n| n == name),
@@ -339,6 +352,7 @@ fn router_end_to_end_over_tcp() {
             RouterPolicy::RoundRobin,
             mars::cache::CacheConfig::default(),
             4,
+            1,
         )
         .expect("router"),
     );
@@ -654,4 +668,416 @@ fn router_end_to_end_over_tcp() {
             "streamed packed request diverged from unpacked"
         );
     }
+}
+
+/// Cross-sequence batched decoding (DESIGN.md §9.5): lanes stepped
+/// together through the `*_batch` programs must be token-identical to
+/// the same requests run solo at T=0, per-lane knobs must stay
+/// lane-local, mid-flight joins must splice cleanly, and shared
+/// dispatches must actually amortize.
+#[test]
+fn batched_decode_semantics_suite() {
+    use mars::engine::{BatchRunner, GenResult};
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = DecodeEngine::new(Runtime::new(&dir).expect("runtime"));
+    if !engine.rt.supports_batching() {
+        eprintln!(
+            "[skip] artifacts predate batched decoding — rerun `make \
+             artifacts`"
+        );
+        return;
+    }
+
+    let prompts =
+        ["Q: 21+17=?\nA: ", "Q: 3+4=?\nA: ", "Q: 12+7=?\nA: ", "Q: 9+5=?\nA: "];
+    let policies = [
+        VerifyPolicy::Strict,
+        VerifyPolicy::Mars { theta: 0.9 },
+        VerifyPolicy::TopK { k: 2, eps: 0.1 },
+        VerifyPolicy::Entropy { h_max: 1.0 },
+    ];
+    let solo = |p: &GenParams, i: usize| {
+        engine
+            .generate(prompts[i], p)
+            .unwrap_or_else(|e| panic!("solo {:?}: {e:#}", p.method))
+    };
+    // drive a runner until every live lane retires, collecting per-slot
+    // results
+    fn drain(runner: &mut BatchRunner<'_>) -> Vec<Option<GenResult>> {
+        let mut done: Vec<Option<GenResult>> =
+            (0..runner.batch_max()).map(|_| None).collect();
+        while !runner.is_empty() {
+            for (slot, r) in runner.step().expect("batched step") {
+                assert!(done[slot].is_none(), "slot {slot} retired twice");
+                done[slot] = Some(r);
+            }
+        }
+        done
+    }
+
+    // --- every method family x every verify policy: a two-lane batch at
+    //     T=0 is token- and decision-identical to solo decodes ----------
+    for method in SpecMethod::all_defaults() {
+        for policy in policies {
+            let mut runner =
+                BatchRunner::new(&engine.rt).expect("batch runner");
+            assert!(runner.batch_max() >= 2, "BATCH_MAX < 2");
+            let mut admitted = Vec::new();
+            for i in 0..2 {
+                let mut p = params(method, policy, 0.0);
+                p.max_new = 16;
+                p.seed = 20 + i as u64;
+                let toks = mars::tokenizer::encode(prompts[i]);
+                let slot = runner
+                    .admit(&toks, &p, None)
+                    .unwrap_or_else(|e| {
+                        panic!("{method:?}/{policy:?} admit: {e:#}")
+                    });
+                admitted.push((slot, i, p));
+            }
+            let mut done = drain(&mut runner);
+            for (slot, i, p) in admitted {
+                let b = done[slot].take().expect("lane retired");
+                let s = solo(&p, i);
+                assert_eq!(
+                    b.tokens, s.tokens,
+                    "{method:?}/{policy:?} lane {i}: batched decode \
+                     diverged from solo: {:?} vs {:?}",
+                    b.text, s.text
+                );
+                // decision scalars, not just tokens: the verify rule ran
+                // identically inside the batched program
+                assert_eq!(b.snapshot.rounds, s.snapshot.rounds);
+                assert_eq!(
+                    b.snapshot.exact_accepts,
+                    s.snapshot.exact_accepts
+                );
+                assert_eq!(
+                    b.snapshot.relaxed_accepts,
+                    s.snapshot.relaxed_accepts
+                );
+            }
+        }
+    }
+
+    // --- per-lane knobs are lane-local: one batch, four different verify
+    //     policies and seeds sharing the dispatch stream ----------------
+    {
+        let method = SpecMethod::Sps { k: 7 };
+        let mut runner = BatchRunner::new(&engine.rt).expect("batch runner");
+        let b = runner.batch_max().min(4);
+        let mut admitted = Vec::new();
+        for i in 0..b {
+            let mut p = params(method, policies[i % policies.len()], 0.0);
+            p.max_new = 16;
+            p.seed = 40 + i as u64;
+            let toks = mars::tokenizer::encode(prompts[i]);
+            let slot = runner.admit(&toks, &p, None).expect("mixed admit");
+            admitted.push((slot, i, p));
+        }
+        let mut done = drain(&mut runner);
+        for (slot, i, p) in admitted {
+            let r = done[slot].take().expect("lane retired");
+            let s = solo(&p, i);
+            assert_eq!(
+                r.tokens, s.tokens,
+                "mixed-policy lane {i} ({:?}) diverged",
+                p.policy
+            );
+            if b >= 2 {
+                // amortization: a lane in a shared batch pays strictly
+                // less than one dispatch per dispatch it rode in
+                assert!(
+                    r.dispatch_share < r.device_calls as f64,
+                    "lane {i}: dispatch_share {} not amortized over {} \
+                     calls",
+                    r.dispatch_share,
+                    r.device_calls
+                );
+            }
+        }
+    }
+
+    // --- continuous admission: a lane joining mid-flight at a round
+    //     boundary decodes exactly as it would solo ---------------------
+    {
+        let mut runner = BatchRunner::new(&engine.rt).expect("batch runner");
+        let mut admitted = Vec::new();
+        for i in 0..2 {
+            let mut p =
+                params(SpecMethod::default(), VerifyPolicy::Mars { theta: 0.9 }, 0.0);
+            p.max_new = 24;
+            p.seed = 60 + i as u64;
+            let toks = mars::tokenizer::encode(prompts[i]);
+            let slot = runner.admit(&toks, &p, None).expect("early admit");
+            admitted.push((slot, i, p));
+        }
+        let mut done: Vec<Option<GenResult>> =
+            (0..runner.batch_max()).map(|_| None).collect();
+        for _ in 0..3 {
+            for (slot, r) in runner.step().expect("warmup step") {
+                done[slot] = Some(r);
+            }
+        }
+        // the late joiner splices into a batch whose other lanes have
+        // already advanced several rounds
+        let mut p =
+            params(SpecMethod::default(), VerifyPolicy::Mars { theta: 0.9 }, 0.0);
+        p.max_new = 12;
+        p.seed = 62;
+        let toks = mars::tokenizer::encode(prompts[2]);
+        let slot = runner.admit(&toks, &p, None).expect("late join");
+        admitted.push((slot, 2, p));
+        while !runner.is_empty() {
+            for (slot, r) in runner.step().expect("drain step") {
+                done[slot] = Some(r);
+            }
+        }
+        for (slot, i, p) in admitted {
+            let r = done[slot].take().expect("lane retired");
+            let s = solo(&p, i);
+            assert_eq!(
+                r.tokens, s.tokens,
+                "lane {i} diverged after a mid-flight join: {:?} vs {:?}",
+                r.text, s.text
+            );
+        }
+    }
+
+    // --- dispatch amortization at full occupancy: a packed 4-lane sps
+    //     batch spends far fewer amortized dispatches per token than the
+    //     same packed requests run solo --------------------------------
+    if engine.rt.layout().batch_max() >= 4 {
+        let mk = |i: usize| {
+            let mut p =
+                params(SpecMethod::Sps { k: 7 }, VerifyPolicy::Strict, 0.0);
+            p.max_new = 24;
+            p.seed = 80 + i as u64;
+            p.rounds_per_call = 4;
+            p
+        };
+        let (mut solo_calls, mut solo_toks) = (0.0f64, 0usize);
+        for i in 0..4 {
+            let s = solo(&mk(i), i);
+            solo_calls += s.dispatch_share;
+            solo_toks += s.tokens.len();
+        }
+        let mut runner = BatchRunner::new(&engine.rt).expect("batch runner");
+        for i in 0..4 {
+            let toks = mars::tokenizer::encode(prompts[i]);
+            runner.admit(&toks, &mk(i), None).expect("full admit");
+        }
+        let (mut batch_share, mut batch_toks) = (0.0f64, 0usize);
+        for r in drain(&mut runner).into_iter().flatten() {
+            batch_share += r.dispatch_share;
+            batch_toks += r.tokens.len();
+        }
+        assert_eq!(batch_toks, solo_toks, "token counts diverged");
+        let ratio = (batch_share / batch_toks as f64)
+            / (solo_calls / solo_toks as f64);
+        assert!(
+            ratio < 0.6,
+            "B=4 amortized dispatches/token not < 0.6x solo: {ratio:.3} \
+             ({batch_share:.1} vs {solo_calls:.1} over {batch_toks} \
+             tokens)"
+        );
+    } else {
+        eprintln!("[skip] BATCH_MAX < 4 — amortization pin skipped");
+    }
+}
+
+/// The batched serving path end to end: `--batch 4` replica loop,
+/// concurrent requests sharing lanes, streaming delta reassembly from a
+/// batched slot, mixed-family queueing, cancel, and the exported
+/// occupancy histogram (DESIGN.md §9.5).
+#[test]
+fn batched_router_end_to_end_over_tcp() {
+    use mars::coordinator::router::{Router, RouterPolicy};
+    use mars::coordinator::server;
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::Arc;
+    let Some(dir) = artifacts_dir() else { return };
+    {
+        let a = Artifacts::load(&dir).expect("artifacts load");
+        if !a.executable_names().iter().any(|n| n == "batch_join") {
+            eprintln!("[skip] artifacts predate batched decoding");
+            return;
+        }
+    }
+    let router = Arc::new(
+        Router::start(
+            &dir,
+            1,
+            4,
+            false,
+            RouterPolicy::RoundRobin,
+            mars::cache::CacheConfig::default(),
+            4,
+            4,
+        )
+        .expect("router"),
+    );
+    let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+    let addr = handle.addr.to_string();
+
+    // ---- four concurrent identical requests share the batch and must
+    //      reply identically (join splice + masked lanes are inert) -----
+    let gen_req = |id: usize| {
+        format!(
+            "{{\"id\": {id}, \"prompt\": \"Q: 21+17=?\\nA: \", \"method\": \
+             \"eagle_tree\", \"policy\": \"mars:0.9\", \"max_new\": 16, \
+             \"seed\": 5, \"cache\": false}}\n"
+        )
+    };
+    let mut sock = std::net::TcpStream::connect(&addr).expect("connect");
+    let batch: String = (401..405).map(gen_req).collect();
+    sock.write_all(batch.as_bytes()).expect("write batch");
+    let mut reader = BufReader::new(sock);
+    let mut texts = std::collections::BTreeMap::new();
+    for _ in 0..4 {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read reply");
+        let v = mars::util::json::Value::parse(&line).expect("json");
+        assert_eq!(
+            v.get("ok").and_then(|b| b.as_bool()),
+            Some(true),
+            "{line}"
+        );
+        texts.insert(
+            v.get("id").and_then(|x| x.as_usize()).unwrap(),
+            v.get("text").and_then(|t| t.as_str()).unwrap().to_string(),
+        );
+    }
+    assert_eq!(texts.len(), 4, "a reply went missing: {texts:?}");
+    let reference = texts.values().next().unwrap().clone();
+    assert!(
+        texts.values().all(|t| *t == reference),
+        "concurrent batched lanes of one request diverged: {texts:?}"
+    );
+
+    // ---- the same request at occupancy 1 (queue now empty) matches ----
+    let lone = server::client_roundtrip(&addr, gen_req(409).trim())
+        .expect("lone");
+    assert_eq!(
+        lone.get("text").and_then(|t| t.as_str()),
+        Some(reference.as_str()),
+        "occupancy-1 batched decode diverged from occupancy-4"
+    );
+
+    // ---- streaming from a batched slot: per-round deltas reassemble to
+    //      exactly the final text --------------------------------------
+    let (deltas, fin) = server::client_stream(
+        &addr,
+        "{\"id\": 410, \"prompt\": \"Q: 21+17=?\\nA: \", \"method\": \
+         \"eagle_tree\", \"policy\": \"mars:0.9\", \"stream\": true, \
+         \"max_new\": 16, \"seed\": 5, \"cache\": false}",
+    )
+    .expect("batched stream");
+    assert!(!deltas.is_empty(), "no deltas from the batched slot");
+    let joined: String = deltas
+        .iter()
+        .map(|d| d.get("delta").and_then(|s| s.as_str()).unwrap().to_string())
+        .collect();
+    assert_eq!(
+        Some(joined.as_str()),
+        fin.get("text").and_then(|t| t.as_str()),
+        "batched-slot deltas must concatenate to the final text"
+    );
+    assert_eq!(
+        fin.get("text").and_then(|t| t.as_str()),
+        Some(reference.as_str()),
+        "streamed batched decode diverged"
+    );
+
+    // ---- a mixed-family arrival queues behind the running family and
+    //      still completes (admission skip-ahead never drops it) --------
+    {
+        let mut sock = std::net::TcpStream::connect(&addr).expect("connect");
+        let batch = format!(
+            "{}{{\"id\": 430, \"prompt\": \"Q: 3+4=?\\nA: \", \"method\": \
+             \"sps\", \"max_new\": 8, \"seed\": 6}}\n{}",
+            gen_req(428),
+            gen_req(429)
+        );
+        sock.write_all(batch.as_bytes()).expect("write mixed");
+        let mut reader = BufReader::new(sock);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read reply");
+            let v = mars::util::json::Value::parse(&line).expect("json");
+            assert_eq!(
+                v.get("ok").and_then(|b| b.as_bool()),
+                Some(true),
+                "{line}"
+            );
+            ids.push(v.get("id").and_then(|x| x.as_usize()).unwrap());
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![428, 429, 430]);
+    }
+
+    // ---- cancel retires one lane without disturbing its batchmates ----
+    {
+        let mut sock = std::net::TcpStream::connect(&addr).expect("connect");
+        let batch = format!(
+            "{{\"id\": 440, \"prompt\": \"Tell me a story. \", \
+             \"max_new\": 2048, \"seed\": 3}}\n{}{{\"cmd\": \"cancel\", \
+             \"id\": 440}}\n",
+            gen_req(441)
+        );
+        sock.write_all(batch.as_bytes()).expect("write cancel");
+        let mut reader = BufReader::new(sock);
+        let mut canceled = None;
+        let mut mate = None;
+        while canceled.is_none() || mate.is_none() {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read reply");
+            let v = mars::util::json::Value::parse(&line).expect("json");
+            match v.get("id").and_then(|x| x.as_usize()) {
+                Some(440) if v.get("cmd").is_none() => canceled = Some(v),
+                Some(441) => mate = Some(v),
+                _ => {}
+            }
+        }
+        let canceled = canceled.unwrap();
+        assert_eq!(
+            canceled.get("canceled").and_then(|b| b.as_bool()),
+            Some(true),
+            "cancel lost on the batched path: {}",
+            canceled.to_string_json()
+        );
+        let tokens =
+            canceled.get("tokens").and_then(|t| t.as_usize()).unwrap();
+        assert!(tokens < 2048, "cancel did not stop the lane: {tokens}");
+        let mate = mate.unwrap();
+        assert_eq!(mate.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(
+            mate.get("text").and_then(|t| t.as_str()),
+            Some(reference.as_str()),
+            "a batchmate's output changed when its neighbor was canceled"
+        );
+    }
+
+    // ---- the occupancy histogram is exported and saw shared work ------
+    let metrics =
+        server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#).expect("m");
+    let dispatches = metrics
+        .path(&["batch", "dispatches"])
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    assert!(
+        dispatches > 0,
+        "no batched dispatches recorded: {}",
+        metrics.to_string_json()
+    );
+    assert!(metrics.path(&["batch", "occupancy_mean"]).is_some());
+    let hist = metrics
+        .path(&["batch", "occupancy_hist"])
+        .and_then(|h| h.as_obj())
+        .expect("occupancy_hist");
+    assert!(
+        hist.keys().any(|k| k.parse::<usize>().unwrap_or(0) >= 2),
+        "no dispatch ever ran more than one lane: {hist:?}"
+    );
 }

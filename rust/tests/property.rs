@@ -647,6 +647,103 @@ fn prop_effective_pack_invariants() {
     }
 }
 
+// ------------------------------------------------- batched admission -------
+
+#[test]
+fn prop_plan_admissions_invariants() {
+    // the continuous-batching admission planner (replica::plan_admissions,
+    // DESIGN.md §9.5): over random occupancy / slot budgets / running
+    // families / queues, the plan (a) never over-admits past the free
+    // lanes, (b) admits exactly one method family per plan (matching the
+    // running family when the batch is non-empty), (c) is FIFO within the
+    // admitted family — it skips an index only for family mismatch — and
+    // (d) never starves the queue head: an empty batch with a free slot
+    // always admits index 0.
+    use mars::coordinator::replica::plan_admissions;
+    let families = ["sps_batch", "ar_batch", "medusa_batch", "eagle_tree_batch"];
+    let mut rng = Rng::new(646);
+    for case in 0..2000 {
+        let slots = rng.usize_below(9); // 0..=8, includes degenerate 0
+        let occupancy = rng.usize_below(slots + 2); // may exceed slots
+        let running_family = if occupancy > 0 && rng.bool(0.8) {
+            Some(*rng.pick(&families))
+        } else {
+            None
+        };
+        let queued: Vec<&str> = (0..rng.usize_below(12))
+            .map(|_| *rng.pick(&families))
+            .collect();
+        let plan =
+            plan_admissions(occupancy, slots, running_family, &queued);
+        let free = slots.saturating_sub(occupancy);
+        let ctx = format!(
+            "case {case}: occ={occupancy} slots={slots} \
+             running={running_family:?} queued={queued:?} plan={plan:?}"
+        );
+
+        // (a) lane budget: never admit more than the free slots
+        assert!(plan.len() <= free, "over-admitted: {ctx}");
+        // indices are valid, strictly ascending (FIFO order preserved)
+        for w in plan.windows(2) {
+            assert!(w[0] < w[1], "plan not ascending: {ctx}");
+        }
+        assert!(plan.iter().all(|&i| i < queued.len()), "{ctx}");
+
+        // (b) one family per plan, pinned to the running family when the
+        // batch already holds lanes of it
+        let admitted_family = plan.first().map(|&i| queued[i]);
+        if let Some(fam) = admitted_family {
+            assert!(
+                plan.iter().all(|&i| queued[i] == fam),
+                "mixed families admitted: {ctx}"
+            );
+            if let Some(run) = running_family {
+                assert_eq!(fam, run, "family switched mid-batch: {ctx}");
+            }
+        }
+
+        // (c) FIFO within the family: every skipped earlier index must be
+        // a family mismatch (greedy => no same-family arrival waits while
+        // a later one boards)
+        let target = admitted_family.or(running_family);
+        if let Some(fam) = target {
+            let matching: Vec<usize> = queued
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| **f == fam)
+                .map(|(i, _)| i)
+                .collect();
+            let want: Vec<usize> =
+                matching.into_iter().take(free).collect();
+            assert_eq!(plan, want, "not FIFO within family: {ctx}");
+        }
+
+        // (d) head never starves: empty batch + free slot => index 0 boards
+        if occupancy == 0 && free > 0 && !queued.is_empty() {
+            assert_eq!(plan.first(), Some(&0), "head starved: {ctx}");
+        }
+
+        // planning is idempotent on the post-admission state: after the
+        // plan boards, a re-plan over the remaining queue admits nothing
+        // new unless lanes are still free
+        if free > 0 && plan.len() == free {
+            let remaining: Vec<&str> = queued
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !plan.contains(i))
+                .map(|(_, f)| *f)
+                .collect();
+            let replan = plan_admissions(
+                occupancy + plan.len(),
+                slots,
+                admitted_family.or(running_family),
+                &remaining,
+            );
+            assert!(replan.is_empty(), "re-plan over full batch: {ctx}");
+        }
+    }
+}
+
 // ------------------------------------------------------- prefix cache ------
 
 #[test]
