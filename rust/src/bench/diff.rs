@@ -1,0 +1,461 @@
+//! `mars bench diff OLD.json NEW.json` — the trajectory comparator and
+//! regression gate (DESIGN.md §10).
+//!
+//! Two schema-2 documents ([`super::record`]) are paired record-by-record
+//! on [`super::record::Record::key_id`]; each pair gets a ratio and a
+//! verdict from the per-metric direction/threshold table
+//! ([`metric_rule`]):
+//!
+//! * throughput-like metrics may not **drop** more than their threshold;
+//! * latency-like metrics may not **rise** more than theirs (p99 gets a
+//!   wider band than p50 — tails are noisy at bench sample counts);
+//! * informational metrics (τ, error counts, unknown names) are reported
+//!   but never gate.
+//!
+//! The gate respects sample counts and provenance: a pair whose smaller
+//! side has fewer than [`DiffCfg::min_samples`] samples gets its
+//! tolerance widened by [`DiffCfg::wide_factor`], and when either
+//! document is `provenance: "estimated"` every would-be failure is
+//! downgraded to a warning (CI's soft gate while baselines remain
+//! hand-estimated — committing a measured baseline upgrades the gate to
+//! hard automatically). Unmatched keys are always reported as
+//! added/removed, never silently dropped. Schema invalidity is a hard
+//! error before any comparison happens.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::record::{Provenance, Record, RecordDoc};
+
+/// Which way a metric is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (throughput, accuracy): gate on drops.
+    Higher,
+    /// Smaller is better (latency, dispatch tax): gate on rises.
+    Lower,
+    /// Reported, never gated (τ, counters, unknown metrics).
+    Info,
+}
+
+/// Direction + allowed fractional regression for a metric name — the
+/// threshold table (documented user-facing in BENCHMARKS.md; keep the
+/// two in sync).
+pub fn metric_rule(metric: &str) -> (Direction, f64) {
+    match metric {
+        m if m.starts_with("tok_per_s") => (Direction::Higher, 0.15),
+        "req_per_s" => (Direction::Higher, 0.15),
+        m if m.starts_with("speedup") => (Direction::Higher, 0.15),
+        "accuracy" | "rouge_l" | "bleu" | "chrf" | "judge" | "hit_rate" => {
+            (Direction::Higher, 0.15)
+        }
+        "follow_cached_tok" => (Direction::Higher, 0.15),
+        "device_calls_per_token" | "dispatches_per_token" => {
+            (Direction::Lower, 0.15)
+        }
+        m if m.ends_with("_ms_p99") => (Direction::Lower, 0.50),
+        m if m.ends_with("_ms_p50") || m.ends_with("_ms") => {
+            (Direction::Lower, 0.25)
+        }
+        m if m.ends_with("_units") || m.contains("sim_units") => {
+            (Direction::Lower, 0.15)
+        }
+        // τ is a property of the method × workload, not a perf budget:
+        // policy changes move it on purpose
+        "tau" => (Direction::Info, 0.0),
+        _ => (Direction::Info, 0.0),
+    }
+}
+
+/// Knobs of the gate.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffCfg {
+    /// Below this sample count (on either side) the pair's tolerance is
+    /// widened by [`DiffCfg::wide_factor`].
+    pub min_samples: usize,
+    /// Tolerance multiplier for tiny-sample pairs.
+    pub wide_factor: f64,
+}
+
+impl Default for DiffCfg {
+    fn default() -> Self {
+        DiffCfg { min_samples: 8, wide_factor: 2.0 }
+    }
+}
+
+/// Outcome of one paired record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within tolerance (or improved).
+    Pass,
+    /// Outside tolerance, but either side is `estimated` — reported, not
+    /// gating.
+    Warn,
+    /// Outside tolerance on measured data: the gate fails.
+    Fail,
+    /// Informational metric (or no usable ratio): never gates.
+    Info,
+}
+
+impl Verdict {
+    fn tag(self) -> &'static str {
+        match self {
+            Verdict::Pass => "ok",
+            Verdict::Warn => "WARN",
+            Verdict::Fail => "FAIL",
+            Verdict::Info => "info",
+        }
+    }
+}
+
+/// One paired row of the diff table.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    /// Pairing identity ([`Record::key_id`]).
+    pub key: String,
+    /// Metric name (also part of the key; split out for the table).
+    pub metric: String,
+    /// Old/new values.
+    pub old: f64,
+    /// New value.
+    pub new: f64,
+    /// `new / old` (1.0 when both are zero).
+    pub ratio: f64,
+    /// Effective allowed fractional regression after sample widening
+    /// (0.0 for informational rows).
+    pub limit: f64,
+    /// Direction the rule applied.
+    pub direction: Direction,
+    /// The verdict.
+    pub verdict: Verdict,
+}
+
+/// Full diff outcome: paired rows plus the unmatched keys on each side.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Paired rows, in key order.
+    pub rows: Vec<DiffRow>,
+    /// Keys present only in the new document.
+    pub added: Vec<String>,
+    /// Keys present only in the old document.
+    pub removed: Vec<String>,
+    /// True when either side was `estimated` (failures downgraded).
+    pub soft: bool,
+}
+
+impl DiffReport {
+    /// Rows that hard-fail the gate.
+    pub fn failures(&self) -> Vec<&DiffRow> {
+        self.rows
+            .iter()
+            .filter(|r| r.verdict == Verdict::Fail)
+            .collect()
+    }
+
+    /// Rows that would fail but were softened by estimated provenance.
+    pub fn warnings(&self) -> Vec<&DiffRow> {
+        self.rows
+            .iter()
+            .filter(|r| r.verdict == Verdict::Warn)
+            .collect()
+    }
+
+    /// Does the gate fail (nonzero exit)?
+    pub fn regressed(&self) -> bool {
+        !self.failures().is_empty()
+    }
+
+    /// Readable table, worst rows first, unmatched keys always listed.
+    pub fn render(&self, old_name: &str, new_name: &str) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "## bench diff — {old_name} -> {new_name}\n");
+        if self.soft {
+            let _ = writeln!(
+                out,
+                "soft gate: a side is `estimated` — regressions WARN \
+                 instead of FAIL until a measured baseline is committed.\n"
+            );
+        }
+        let _ =
+            writeln!(out, "| verdict | key | old | new | ratio | allowed |");
+        let _ = writeln!(out, "|---|---|---|---|---|---|");
+        let sev = |v: Verdict| match v {
+            Verdict::Fail => 0,
+            Verdict::Warn => 1,
+            Verdict::Pass => 2,
+            Verdict::Info => 3,
+        };
+        let mut rows: Vec<&DiffRow> = self.rows.iter().collect();
+        rows.sort_by(|a, b| {
+            sev(a.verdict).cmp(&sev(b.verdict)).then(a.key.cmp(&b.key))
+        });
+        for r in rows {
+            let allowed = match r.direction {
+                Direction::Info => "-".to_string(),
+                Direction::Higher => format!(">= {:.2}x", 1.0 - r.limit),
+                Direction::Lower => format!("<= {:.2}x", 1.0 + r.limit),
+            };
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {} | {:.3}x | {} |",
+                r.verdict.tag(),
+                r.key,
+                fmt_num(r.old),
+                fmt_num(r.new),
+                r.ratio,
+                allowed
+            );
+        }
+        for key in &self.removed {
+            let _ = writeln!(out, "| removed | {key} | - | - | - | - |");
+        }
+        for key in &self.added {
+            let _ = writeln!(out, "| added | {key} | - | - | - | - |");
+        }
+        let fails = self.failures();
+        let warns = self.warnings();
+        let _ = writeln!(
+            out,
+            "\n{} compared, {} FAIL, {} WARN, {} added, {} removed",
+            self.rows.len(),
+            fails.len(),
+            warns.len(),
+            self.added.len(),
+            self.removed.len()
+        );
+        for r in fails {
+            let _ = writeln!(out, "FAIL: {}", r.key);
+        }
+        out
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    crate::util::json::Value::Num(v).to_string_json()
+}
+
+/// Pair two documents by record key and apply the threshold table.
+pub fn diff_docs(old: &RecordDoc, new: &RecordDoc, cfg: &DiffCfg) -> DiffReport {
+    let soft = old.env.provenance == Provenance::Estimated
+        || new.env.provenance == Provenance::Estimated;
+    let old_by = old.by_key();
+    let new_by = new.by_key();
+    let mut rows = Vec::new();
+    let mut added = Vec::new();
+    let mut removed = Vec::new();
+    for (key, o) in &old_by {
+        match new_by.get(key) {
+            None => removed.push(key.clone()),
+            Some(n) => rows.push(pair_row(key, o, n, soft, cfg)),
+        }
+    }
+    for key in new_by.keys() {
+        if !old_by.contains_key(key) {
+            added.push(key.clone());
+        }
+    }
+    DiffReport { rows, added, removed, soft }
+}
+
+/// Verdict for one (old, new) pair. Monotone by construction: for a
+/// fixed old value, direction and tolerance, a strictly worse new value
+/// can only keep or raise the severity (the property tests pin this).
+fn pair_row(
+    key: &str,
+    old: &Record,
+    new: &Record,
+    soft: bool,
+    cfg: &DiffCfg,
+) -> DiffRow {
+    let (direction, base) = metric_rule(&old.metric);
+    let n_min = old.n.min(new.n);
+    let mut limit = base;
+    if n_min < cfg.min_samples {
+        limit *= cfg.wide_factor;
+    }
+    let ratio = if old.value != 0.0 {
+        new.value / old.value
+    } else if new.value == 0.0 {
+        1.0
+    } else {
+        f64::INFINITY
+    };
+    let verdict = if direction == Direction::Info {
+        Verdict::Info
+    } else if n_min == 0 || old.value <= 0.0 {
+        // no samples, or no positive baseline magnitude to scale the
+        // tolerance band by: report, don't gate
+        Verdict::Info
+    } else {
+        let bad = match direction {
+            Direction::Higher => new.value < old.value * (1.0 - limit),
+            Direction::Lower => new.value > old.value * (1.0 + limit),
+            Direction::Info => false,
+        };
+        match (bad, soft) {
+            (false, _) => Verdict::Pass,
+            (true, true) => Verdict::Warn,
+            (true, false) => Verdict::Fail,
+        }
+    };
+    DiffRow {
+        key: key.to_string(),
+        metric: old.metric.clone(),
+        old: old.value,
+        new: new.value,
+        ratio,
+        limit: if direction == Direction::Info { 0.0 } else { limit },
+        direction,
+        verdict,
+    }
+}
+
+/// Load, validate and diff two snapshot files. Schema invalidity on
+/// either side is a hard error (the CI gate fails before any value
+/// comparison); on success returns the report plus its rendering.
+pub fn run_diff(
+    old_path: &Path,
+    new_path: &Path,
+    cfg: &DiffCfg,
+) -> Result<(DiffReport, String)> {
+    let load = |path: &Path| -> Result<RecordDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        RecordDoc::parse(&text)
+            .map_err(|e| anyhow!("{}: invalid schema: {e}", path.display()))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let report = diff_docs(&old, &new, cfg);
+    let mut rendered = report.render(
+        &old_path.display().to_string(),
+        &new_path.display().to_string(),
+    );
+    if old.env.host != new.env.host {
+        rendered.push_str(&format!(
+            "\nnote: hosts differ ({} vs {}) — wall-clock rows are not \
+             comparable across machines.\n",
+            old.env.host, new.env.host
+        ));
+    }
+    Ok((report, rendered))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::record::Env;
+
+    fn doc(provenance: Provenance, tok_per_s: f64, ttft: f64) -> RecordDoc {
+        let mut d = RecordDoc::new(
+            "packing",
+            Env {
+                provenance,
+                host: "h".into(),
+                artifact_hash: "x".into(),
+                created_by: "test".into(),
+                note: None,
+            },
+        );
+        let keys = [("method", "sps:k=7".to_string()), ("pack", "4".into())];
+        d.push("tok_per_s", tok_per_s, "tok/s", 16, 7, &keys);
+        d.push("ttft_ms_p50", ttft, "ms", 16, 7, &keys);
+        d.push("tau", 2.8, "tok/cycle", 16, 7, &keys);
+        d
+    }
+
+    #[test]
+    fn self_diff_passes_with_unit_ratios() {
+        let d = doc(Provenance::Measured, 650.0, 9.0);
+        let r = diff_docs(&d, &d, &DiffCfg::default());
+        assert!(!r.regressed());
+        assert!(r.added.is_empty() && r.removed.is_empty());
+        for row in &r.rows {
+            assert_eq!(row.ratio, 1.0, "{}", row.key);
+            assert_ne!(row.verdict, Verdict::Fail);
+        }
+    }
+
+    #[test]
+    fn throughput_drop_fails_and_names_the_key() {
+        let old = doc(Provenance::Measured, 650.0, 9.0);
+        let new = doc(Provenance::Measured, 400.0, 9.0);
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert!(r.regressed());
+        let rendered = r.render("old", "new");
+        assert!(
+            rendered.contains("FAIL: packing/tok_per_s"),
+            "{rendered}"
+        );
+        // the latency row stayed fine
+        assert_eq!(r.failures().len(), 1);
+    }
+
+    #[test]
+    fn latency_rise_fails_but_tau_never_gates() {
+        let old = doc(Provenance::Measured, 650.0, 9.0);
+        let mut new = doc(Provenance::Measured, 650.0, 12.0);
+        new.records[2].value = 99.0; // tau explodes — informational
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert_eq!(r.failures().len(), 1);
+        assert!(r.failures()[0].key.contains("ttft_ms_p50"));
+    }
+
+    #[test]
+    fn estimated_provenance_softens_failures_to_warnings() {
+        let old = doc(Provenance::Estimated, 650.0, 9.0);
+        let new = doc(Provenance::Measured, 300.0, 30.0);
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert!(r.soft);
+        assert!(!r.regressed());
+        assert_eq!(r.warnings().len(), 2);
+        let rendered = r.render("old", "new");
+        assert!(rendered.contains("WARN"), "{rendered}");
+        assert!(rendered.contains("soft gate"), "{rendered}");
+    }
+
+    #[test]
+    fn tiny_samples_widen_the_tolerance() {
+        let mut old = doc(Provenance::Measured, 650.0, 9.0);
+        let mut new = doc(Provenance::Measured, 520.0, 9.0);
+        // 20% drop: fails at the 15% base threshold with full samples...
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert!(r.regressed());
+        // ...passes the widened 30% band when samples are tiny
+        for d in [&mut old, &mut new] {
+            for rec in &mut d.records {
+                rec.n = 2;
+            }
+        }
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert!(!r.regressed());
+    }
+
+    #[test]
+    fn unmatched_keys_are_reported_as_added_and_removed() {
+        let old = doc(Provenance::Measured, 650.0, 9.0);
+        let mut new = doc(Provenance::Measured, 650.0, 9.0);
+        new.records.remove(1); // drop the latency row
+        let keys = [("method", "sps:k=7".to_string()), ("pack", "8".into())];
+        new.push("tok_per_s", 800.0, "tok/s", 16, 7, &keys);
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert_eq!(r.removed.len(), 1);
+        assert_eq!(r.added.len(), 1);
+        assert!(r.removed[0].contains("ttft_ms_p50"));
+        assert!(r.added[0].contains("pack=8"));
+        let rendered = r.render("old", "new");
+        assert!(rendered.contains("| removed |"), "{rendered}");
+        assert!(rendered.contains("| added |"), "{rendered}");
+    }
+
+    #[test]
+    fn improvements_never_fail() {
+        let old = doc(Provenance::Measured, 650.0, 9.0);
+        let new = doc(Provenance::Measured, 2000.0, 2.0);
+        let r = diff_docs(&old, &new, &DiffCfg::default());
+        assert!(!r.regressed());
+        assert!(r.warnings().is_empty());
+    }
+}

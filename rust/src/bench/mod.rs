@@ -15,15 +15,17 @@
 //! load) live in [`serve`] and run against a live TCP server rather than
 //! a bare engine; see BENCHMARKS.md for the full target index.
 
+pub mod diff;
+pub mod record;
 pub mod serve;
 pub mod simclock;
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::fs;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use crate::datasets::{dataset, Example, Task};
 use crate::engine::{DecodeEngine, GenParams, GenResult, SpecMethod};
@@ -40,6 +42,10 @@ pub struct BenchCtx<'a> {
     pub seed: u64,
     pub max_new: usize,
     pub out_dir: PathBuf,
+    /// where the machine-readable `BENCH_*.json` trajectories land
+    /// (default: the working directory, where CI's smoke waves and the
+    /// committed snapshots both expect them)
+    pub bench_dir: PathBuf,
     /// cache of AR baseline runs keyed by (task, temp-milli, seed)
     baseline: std::cell::RefCell<BTreeMap<(Task, i64, u64), TaskEval>>,
 }
@@ -52,6 +58,7 @@ impl<'a> BenchCtx<'a> {
             seed,
             max_new: 96,
             out_dir: PathBuf::from("results"),
+            bench_dir: PathBuf::from("."),
             baseline: Default::default(),
         }
     }
@@ -129,13 +136,42 @@ impl<'a> BenchCtx<'a> {
     }
 
     /// Write a rendered table to results/<name>.md and stdout.
-    pub fn emit(&self, name: &str, content: &str) {
+    pub fn emit(&self, name: &str, content: &str) -> Result<()> {
         println!("{content}");
-        let _ = fs::create_dir_all(&self.out_dir);
-        let path = self.out_dir.join(format!("{name}.md"));
-        let _ = fs::write(&path, content);
-        eprintln!("[written {}]", path.display());
+        emit_md(&self.out_dir, name, content)?;
+        Ok(())
     }
+
+    /// Provenance block every measured run stamps on its record doc:
+    /// `measured`, this host, the loaded artifact's layout hash, and the
+    /// refresh command — overwriting whatever (possibly `estimated`)
+    /// block the previous snapshot carried.
+    pub fn record_env(&self, created_by: &str) -> record::Env {
+        record::Env::measured(&self.engine.rt.layout().hash, created_by)
+    }
+
+    /// Write a schema-2 record doc to `bench_dir/BENCH_<target>.json`.
+    pub fn emit_records(&self, doc: &record::RecordDoc) -> Result<()> {
+        let path =
+            self.bench_dir.join(format!("BENCH_{}.json", doc.target));
+        record::write_doc(&path, doc)?;
+        eprintln!("[written {}]", path.display());
+        Ok(())
+    }
+}
+
+/// Write one rendered markdown table to `<out_dir>/<name>.md`, creating
+/// the directory if needed — the single emit path every bench target
+/// (including [`serve`]) funnels through.
+pub fn emit_md(out_dir: &Path, name: &str, content: &str) -> Result<PathBuf> {
+    fs::create_dir_all(out_dir).with_context(|| {
+        format!("creating results dir {}", out_dir.display())
+    })?;
+    let path = out_dir.join(format!("{name}.md"));
+    fs::write(&path, content)
+        .with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("[written {}]", path.display());
+    Ok(path)
 }
 
 /// Per-(task, method) evaluation outcome.
@@ -278,7 +314,7 @@ pub fn table1(ctx: &BenchCtx) -> Result<()> {
         "\nspeedup = simclock (wall-clock in parens); τ = tokens per \
          draft-verify cycle, ceiling K+1 = 8."
     )?;
-    ctx.emit("table1", &out);
+    ctx.emit("table1", &out)?;
     Ok(())
 }
 
@@ -325,7 +361,7 @@ pub fn table2(ctx: &BenchCtx) -> Result<()> {
         }
         writeln!(out)?;
     }
-    ctx.emit("table2", &out);
+    ctx.emit("table2", &out)?;
     Ok(())
 }
 
@@ -348,7 +384,7 @@ pub fn table3(ctx: &BenchCtx) -> Result<()> {
         let e = ctx.run_task(Task::Sum, &ctx.params(method, policy, 1.0))?;
         writeln!(out, "| {label} | {:.4} |", e.quality.rouge_l)?;
     }
-    ctx.emit("table3", &out);
+    ctx.emit("table3", &out)?;
     Ok(())
 }
 
@@ -391,7 +427,7 @@ pub fn table4(ctx: &BenchCtx) -> Result<()> {
             e.speedup_sim(&base)
         )?;
     }
-    ctx.emit("table4", &out);
+    ctx.emit("table4", &out)?;
     Ok(())
 }
 
@@ -429,7 +465,7 @@ pub fn table5(ctx: &BenchCtx) -> Result<()> {
             )?;
         }
     }
-    ctx.emit("table5", &out);
+    ctx.emit("table5", &out)?;
     Ok(())
 }
 
@@ -463,7 +499,7 @@ pub fn table6(ctx: &BenchCtx) -> Result<()> {
             )?;
         }
     }
-    ctx.emit("table6", &out);
+    ctx.emit("table6", &out)?;
     Ok(())
 }
 
@@ -493,7 +529,7 @@ pub fn table7(ctx: &BenchCtx) -> Result<()> {
             e.quality.judge, e.quality.accuracy
         )?;
     }
-    ctx.emit("table7", &out);
+    ctx.emit("table7", &out)?;
     Ok(())
 }
 
@@ -525,7 +561,7 @@ pub fn fig3(ctx: &BenchCtx) -> Result<()> {
             writeln!(out)?;
         }
     }
-    ctx.emit("fig3", &out);
+    ctx.emit("fig3", &out)?;
     Ok(())
 }
 
@@ -557,6 +593,13 @@ pub fn policy_sweep(
             .join(" | ")
     )?;
     writeln!(out, "|---|---|{}", "---|".repeat(tasks.len()))?;
+    let mut doc = record::RecordDoc::new(
+        "policies",
+        ctx.record_env("mars bench policies"),
+    );
+    doc.config_num("n", ctx.n as f64);
+    doc.config_num("seed", ctx.seed as f64);
+    doc.config_num("max_new", ctx.max_new as f64);
     for &method in methods {
         for &policy in policies {
             let mut cells = Vec::new();
@@ -564,6 +607,21 @@ pub fn policy_sweep(
                 let base = ctx.baseline(task, temp)?;
                 let e =
                     ctx.run_task(task, &ctx.params(method, policy, temp))?;
+                let keys = [
+                    ("method", method.label()),
+                    ("policy", policy.label()),
+                    ("task", task.name().to_string()),
+                ];
+                let push = |d: &mut record::RecordDoc,
+                            metric: &str,
+                            value: f64,
+                            unit: &str| {
+                    d.push(metric, value, unit, ctx.n, ctx.seed, &keys);
+                };
+                push(&mut doc, "speedup_sim", e.speedup_sim(&base), "x");
+                push(&mut doc, "tau", e.tau, "tok/cycle");
+                push(&mut doc, "accuracy", e.quality.accuracy, "frac");
+                push(&mut doc, "relaxed_total", e.relaxed_total, "tok");
                 cells.push(format!(
                     "{:.2}x / {:.2} / {:.3} / {:.0}",
                     e.speedup_sim(&base),
@@ -589,7 +647,8 @@ pub fn policy_sweep(
          every other policy row trades acceptance for quality per its own \
          knob, composed with every drafting method in the registry."
     )?;
-    ctx.emit("policy_sweep", &out);
+    ctx.emit("policy_sweep", &out)?;
+    ctx.emit_records(&doc)?;
     Ok(())
 }
 
@@ -796,36 +855,36 @@ pub fn packing(
          dispatch savings only. TTFT stays flat by construction: the \
          first turn of every sequence runs unpacked."
     )?;
-    ctx.emit("packing", &out);
+    ctx.emit("packing", &out)?;
 
-    // machine-readable trajectory for PR-to-PR diffing
-    use crate::util::json::Value as J;
-    let mut doc = J::obj();
-    doc.set("schema", J::Num(1.0));
-    doc.set("task", J::Str(task.name().into()));
-    doc.set("n", J::Num(ctx.n as f64));
-    doc.set("seed", J::Num(ctx.seed as f64));
-    doc.set("max_new", J::Num(ctx.max_new as f64));
-    let mut arr = Vec::new();
+    // machine-readable trajectory for PR-to-PR diffing (`bench diff`)
+    let mut doc = record::RecordDoc::new(
+        "packing",
+        ctx.record_env("mars bench packing"),
+    );
+    doc.config_str("task", task.name());
+    doc.config_num("n", ctx.n as f64);
+    doc.config_num("seed", ctx.seed as f64);
+    doc.config_num("max_new", ctx.max_new as f64);
+    doc.config_num("pack_max", pack_max as f64);
     for r in &rows {
-        let mut o = J::obj();
-        o.set("method", J::Str(r.method.label()));
-        o.set("policy", J::Str(r.policy.label()));
-        o.set("pack", J::Num(r.pack as f64));
-        o.set("ok", J::Num(r.ok as f64));
-        o.set("device_calls_per_token", J::Num(r.calls_per_tok));
-        o.set("tok_per_s", J::Num(r.tok_per_s));
-        o.set("tau", J::Num(r.tau));
-        o.set("ttft_ms_p50", J::Num(r.ttft_ms.p50()));
-        o.set("ttft_ms_p99", J::Num(r.ttft_ms.p99()));
-        o.set("tpot_ms_p50", J::Num(r.tpot_ms.p50()));
-        o.set("tpot_ms_p99", J::Num(r.tpot_ms.p99()));
-        arr.push(o);
+        let keys = [
+            ("method", r.method.label()),
+            ("policy", r.policy.label()),
+            ("pack", r.pack.to_string()),
+        ];
+        let mut push = |metric: &str, value: f64, unit: &str| {
+            doc.push(metric, value, unit, r.ok, ctx.seed, &keys);
+        };
+        push("device_calls_per_token", r.calls_per_tok, "calls/tok");
+        push("tok_per_s", r.tok_per_s, "tok/s");
+        push("tau", r.tau, "tok/cycle");
+        push("ttft_ms_p50", r.ttft_ms.p50(), "ms");
+        push("ttft_ms_p99", r.ttft_ms.p99(), "ms");
+        push("tpot_ms_p50", r.tpot_ms.p50(), "ms");
+        push("tpot_ms_p99", r.tpot_ms.p99(), "ms");
     }
-    doc.set("packing", J::Arr(arr));
-    let json_path = std::path::Path::new("BENCH_packing.json");
-    fs::write(json_path, doc.to_string_json())?;
-    eprintln!("[written {}]", json_path.display());
+    ctx.emit_records(&doc)?;
     Ok(())
 }
 
@@ -1045,37 +1104,34 @@ pub fn batch(
          at T=0 (the equivalence pins in tests), so every gain is \
          dispatch amortization, not different decoding."
     )?;
-    ctx.emit("batch", &out);
+    ctx.emit("batch", &out)?;
 
-    // machine-readable trajectory for PR-to-PR diffing
-    use crate::util::json::Value as J;
-    let mut doc = J::obj();
-    doc.set("schema", J::Num(1.0));
-    doc.set("task", J::Str(task.name().into()));
-    doc.set("n", J::Num(ctx.n as f64));
-    doc.set("seed", J::Num(ctx.seed as f64));
-    doc.set("max_new", J::Num(ctx.max_new as f64));
-    doc.set("batch_max", J::Num(batch_max as f64));
-    let mut arr = Vec::new();
+    // machine-readable trajectory for PR-to-PR diffing (`bench diff`)
+    let mut doc =
+        record::RecordDoc::new("batch", ctx.record_env("mars bench batch"));
+    doc.config_str("task", task.name());
+    doc.config_num("n", ctx.n as f64);
+    doc.config_num("seed", ctx.seed as f64);
+    doc.config_num("max_new", ctx.max_new as f64);
+    doc.config_num("batch_max", batch_max as f64);
     for r in &rows {
-        let mut o = J::obj();
-        o.set("method", J::Str(r.method.label()));
-        o.set("policy", J::Str(r.policy.label()));
-        o.set("batch", J::Num(r.b as f64));
-        o.set("ok", J::Num(r.ok as f64));
-        o.set("dispatches_per_token", J::Num(r.calls_per_tok));
-        o.set("tok_per_s_replica", J::Num(r.tok_per_s));
-        o.set("tau", J::Num(r.tau));
-        o.set("ttft_ms_p50", J::Num(r.ttft_ms.p50()));
-        o.set("ttft_ms_p99", J::Num(r.ttft_ms.p99()));
-        o.set("tpot_ms_p50", J::Num(r.tpot_ms.p50()));
-        o.set("tpot_ms_p99", J::Num(r.tpot_ms.p99()));
-        arr.push(o);
+        let keys = [
+            ("method", r.method.label()),
+            ("policy", r.policy.label()),
+            ("batch", r.b.to_string()),
+        ];
+        let mut push = |metric: &str, value: f64, unit: &str| {
+            doc.push(metric, value, unit, r.ok, ctx.seed, &keys);
+        };
+        push("dispatches_per_token", r.calls_per_tok, "calls/tok");
+        push("tok_per_s_replica", r.tok_per_s, "tok/s");
+        push("tau", r.tau, "tok/cycle");
+        push("ttft_ms_p50", r.ttft_ms.p50(), "ms");
+        push("ttft_ms_p99", r.ttft_ms.p99(), "ms");
+        push("tpot_ms_p50", r.tpot_ms.p50(), "ms");
+        push("tpot_ms_p99", r.tpot_ms.p99(), "ms");
     }
-    doc.set("batch", J::Arr(arr));
-    let json_path = std::path::Path::new("BENCH_batch.json");
-    fs::write(json_path, doc.to_string_json())?;
-    eprintln!("[written {}]", json_path.display());
+    ctx.emit_records(&doc)?;
     Ok(())
 }
 
@@ -1116,6 +1172,6 @@ pub fn perf(ctx: &BenchCtx, artifact_dir: &std::path::Path) -> Result<()> {
             calls as f64 / rounds.max(1) as f64
         )?;
     }
-    ctx.emit("perf", &out);
+    ctx.emit("perf", &out)?;
     Ok(())
 }

@@ -1,0 +1,577 @@
+//! Benchmark trajectory records — the one machine-readable result schema
+//! every `mars bench` target emits (DESIGN.md §10).
+//!
+//! A **record** is one measured (or estimated) scalar: target name,
+//! metric name, value, unit, sample count, seed, and the method/policy/
+//! config keys that identify the wave it came from. A **document**
+//! (`BENCH_<target>.json`) is a set of records plus an env/provenance
+//! block (`measured` vs `estimated`, artifact hash, host) and the sweep
+//! config. Records are paired across documents by
+//! [`Record::key_id`] — target + metric + sorted keys — which is what
+//! [`super::diff`] compares two snapshots by.
+//!
+//! The rendered form is canonical: sorted object keys, one record per
+//! line, integers without a fractional part. Encode → parse → encode is
+//! byte-identical (pinned by a property test), so committed snapshots
+//! never churn under rewrites.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// Current schema version of `BENCH_<target>.json` documents. Version 1
+/// was the ad-hoc per-target shape (a bare row array + freeform `note`);
+/// version 2 is the record format this module owns.
+pub const SCHEMA: u64 = 2;
+
+/// Where a document's numbers came from — the field the regression gate
+/// keys its hard/soft behavior on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// A real run of the emitting bench target on this host.
+    Measured,
+    /// Hand-derived from a cost model (e.g. a baseline authored on a box
+    /// without the toolchain). Diffs against estimated numbers report
+    /// regressions as warnings, never failures.
+    Estimated,
+}
+
+impl Provenance {
+    /// Canonical wire name (`"measured"` / `"estimated"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Provenance::Measured => "measured",
+            Provenance::Estimated => "estimated",
+        }
+    }
+
+    /// Parse the wire name back.
+    pub fn parse(s: &str) -> Option<Provenance> {
+        match s {
+            "measured" => Some(Provenance::Measured),
+            "estimated" => Some(Provenance::Estimated),
+            _ => None,
+        }
+    }
+}
+
+/// Document-level env/provenance block: every record in the document
+/// shares it (one bench invocation = one host + one artifact build).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Env {
+    /// Measured run vs hand-estimated baseline.
+    pub provenance: Provenance,
+    /// Hostname the numbers were produced on (wall-clock metrics are not
+    /// comparable across hosts; the diff table surfaces this).
+    pub host: String,
+    /// State-layout hash of the artifact build (`layout.hash`), or
+    /// `"unknown"` for documents authored without artifacts.
+    pub artifact_hash: String,
+    /// The command that produced (or would refresh) the document.
+    pub created_by: String,
+    /// Optional freeform context (refresh instructions, caveats).
+    pub note: Option<String>,
+}
+
+impl Env {
+    /// Env block for a real emitter run on this host: provenance is
+    /// stamped `measured`, overwriting whatever a committed estimated
+    /// baseline carried once the file is refreshed.
+    pub fn measured(artifact_hash: &str, created_by: &str) -> Env {
+        Env {
+            provenance: Provenance::Measured,
+            host: host_label(),
+            artifact_hash: artifact_hash.to_string(),
+            created_by: created_by.to_string(),
+            note: None,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("provenance", Value::Str(self.provenance.name().into()));
+        o.set("host", Value::Str(self.host.clone()));
+        o.set("artifact_hash", Value::Str(self.artifact_hash.clone()));
+        o.set("created_by", Value::Str(self.created_by.clone()));
+        if let Some(n) = &self.note {
+            o.set("note", Value::Str(n.clone()));
+        }
+        o
+    }
+}
+
+/// One benchmark scalar, identified by target + metric + keys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// Bench target that emitted it (`packing`, `batch`, `policies`,
+    /// `serve`).
+    pub target: String,
+    /// Metric name (`tok_per_s`, `ttft_ms_p50`, ...) — drives the diff
+    /// direction/threshold table ([`super::diff::metric_rule`]).
+    pub metric: String,
+    /// The scalar itself. Must be finite.
+    pub value: f64,
+    /// Unit label (`tok/s`, `ms`, `calls/tok`, ...) — documentation, not
+    /// identity.
+    pub unit: String,
+    /// Samples behind the value (requests that finished ok in the wave).
+    /// The diff gate widens its tolerance when this is small.
+    pub n: usize,
+    /// Workload seed the wave ran under.
+    pub seed: u64,
+    /// Wave identity: method/policy/config keys (`method`, `policy`,
+    /// `pack`, `batch`, `task`, `scenario`, ...), all values strings.
+    pub keys: BTreeMap<String, String>,
+}
+
+impl Record {
+    /// Canonical pairing identity: `target/metric{k1=v1,k2=v2}` with the
+    /// keys in sorted order (the map is a `BTreeMap`, so iteration is
+    /// already sorted).
+    pub fn key_id(&self) -> String {
+        let keys = self
+            .keys
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!("{}/{}{{{}}}", self.target, self.metric, keys)
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("target", Value::Str(self.target.clone()));
+        o.set("metric", Value::Str(self.metric.clone()));
+        o.set("value", Value::Num(self.value));
+        o.set("unit", Value::Str(self.unit.clone()));
+        o.set("n", Value::Num(self.n as f64));
+        o.set("seed", Value::Num(self.seed as f64));
+        let mut keys = Value::obj();
+        for (k, v) in &self.keys {
+            keys.set(k, Value::Str(v.clone()));
+        }
+        o.set("keys", keys);
+        o
+    }
+}
+
+/// One `BENCH_<target>.json` document: schema + env + config + records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordDoc {
+    /// Bench target the document snapshots.
+    pub target: String,
+    /// Shared env/provenance block.
+    pub env: Env,
+    /// Sweep configuration (`n`, `seed`, `max_new`, `task`, ...): shared
+    /// context for a human reading the file, not part of record identity.
+    pub config: BTreeMap<String, Value>,
+    /// The records.
+    pub records: Vec<Record>,
+}
+
+impl RecordDoc {
+    /// Empty document for `target` under `env`.
+    pub fn new(target: &str, env: Env) -> RecordDoc {
+        RecordDoc {
+            target: target.to_string(),
+            env,
+            config: BTreeMap::new(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Add a config entry (numbers and strings only, by convention).
+    pub fn config_num(&mut self, key: &str, v: f64) {
+        self.config.insert(key.to_string(), Value::Num(v));
+    }
+
+    /// Add a string config entry.
+    pub fn config_str(&mut self, key: &str, v: &str) {
+        self.config.insert(key.to_string(), Value::Str(v.to_string()));
+    }
+
+    /// Append one record; `keys` is the wave identity as label pairs.
+    pub fn push(
+        &mut self,
+        metric: &str,
+        value: f64,
+        unit: &str,
+        n: usize,
+        seed: u64,
+        keys: &[(&str, String)],
+    ) {
+        self.records.push(Record {
+            target: self.target.clone(),
+            metric: metric.to_string(),
+            value,
+            unit: unit.to_string(),
+            n,
+            seed,
+            keys: keys
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        });
+    }
+
+    /// Records indexed by [`Record::key_id`] — the diff pairing map.
+    /// Duplicate ids keep the last record (emitters never produce
+    /// duplicates; the validator rejects them).
+    pub fn by_key(&self) -> BTreeMap<String, &Record> {
+        self.records.iter().map(|r| (r.key_id(), r)).collect()
+    }
+
+    /// Canonical rendering: deterministic field order, one record per
+    /// line, sorted object keys. Re-rendering a parsed document
+    /// reproduces the input byte-for-byte.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {SCHEMA},\n"));
+        out.push_str(&format!(
+            "  \"target\": {},\n",
+            Value::Str(self.target.clone()).to_string_json()
+        ));
+        out.push_str(&format!(
+            "  \"env\": {},\n",
+            self.env.to_json().to_string_json()
+        ));
+        if !self.config.is_empty() {
+            let cfg = Value::Obj(self.config.clone());
+            out.push_str(&format!(
+                "  \"config\": {},\n",
+                cfg.to_string_json()
+            ));
+        }
+        out.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str("    ");
+            out.push_str(&r.to_json().to_string_json());
+            if i + 1 < self.records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse + validate a schema-2 document (the shared validator: CI,
+    /// `bench diff` and the test suites all go through here).
+    pub fn parse(text: &str) -> Result<RecordDoc, String> {
+        let v = Value::parse(text).map_err(|e| e.to_string())?;
+        validate(&v)
+    }
+}
+
+/// The shared schema validator: checks a parsed JSON value against the
+/// schema-2 shape and returns the typed document, or a readable error
+/// naming the offending field.
+pub fn validate(v: &Value) -> Result<RecordDoc, String> {
+    if v.as_obj().is_none() {
+        return Err("document is not a JSON object".into());
+    }
+    let schema = v
+        .get("schema")
+        .and_then(|s| s.as_f64())
+        .ok_or("missing numeric 'schema'")?;
+    if schema != SCHEMA as f64 {
+        return Err(format!(
+            "schema {schema} is not the supported schema {SCHEMA} \
+             (schema-1 files predate the record format — re-run the \
+             emitting bench target to refresh)"
+        ));
+    }
+    let target = non_empty_str(v, "target")?;
+    let env_v = v.get("env").ok_or("missing 'env' block")?;
+    if env_v.as_obj().is_none() {
+        return Err("'env' is not an object".into());
+    }
+    let prov_s = non_empty_str(env_v, "env.provenance")?;
+    let provenance = Provenance::parse(&prov_s).ok_or_else(|| {
+        format!(
+            "env.provenance {prov_s:?} is not \"measured\" or \"estimated\""
+        )
+    })?;
+    let env = Env {
+        provenance,
+        host: non_empty_str(env_v, "env.host")?,
+        artifact_hash: non_empty_str(env_v, "env.artifact_hash")?,
+        created_by: env_v
+            .get("created_by")
+            .and_then(|s| s.as_str())
+            .unwrap_or("")
+            .to_string(),
+        note: env_v
+            .get("note")
+            .and_then(|s| s.as_str())
+            .map(|s| s.to_string()),
+    };
+    let config = match v.get("config") {
+        None => BTreeMap::new(),
+        Some(c) => c
+            .as_obj()
+            .cloned()
+            .ok_or("'config' is not an object")?,
+    };
+    let arr = v
+        .get("records")
+        .and_then(|r| r.as_arr())
+        .ok_or("missing 'records' array")?;
+    if arr.is_empty() {
+        return Err("'records' is empty — an emitter produced no rows".into());
+    }
+    let mut records = Vec::with_capacity(arr.len());
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, rv) in arr.iter().enumerate() {
+        let r = validate_record(rv)
+            .map_err(|e| format!("records[{i}]: {e}"))?;
+        if r.target != target {
+            return Err(format!(
+                "records[{i}]: target {:?} != document target {target:?}",
+                r.target
+            ));
+        }
+        if !seen.insert(r.key_id()) {
+            return Err(format!(
+                "records[{i}]: duplicate key {}",
+                r.key_id()
+            ));
+        }
+        records.push(r);
+    }
+    // extra top-level fields are ignored so old readers survive
+    // additive schema evolution
+    Ok(RecordDoc { target, env, config, records })
+}
+
+fn validate_record(v: &Value) -> Result<Record, String> {
+    if v.as_obj().is_none() {
+        return Err("record is not an object".into());
+    }
+    let value = v
+        .get("value")
+        .and_then(|x| x.as_f64())
+        .ok_or("missing numeric 'value'")?;
+    if !value.is_finite() {
+        return Err(format!("'value' {value} is not finite"));
+    }
+    let n = v
+        .get("n")
+        .and_then(|x| x.as_f64())
+        .ok_or("missing numeric 'n' (sample count)")?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(format!("'n' {n} is not a non-negative integer"));
+    }
+    let seed = v
+        .get("seed")
+        .and_then(|x| x.as_f64())
+        .ok_or("missing numeric 'seed'")?;
+    let mut keys = BTreeMap::new();
+    if let Some(kv) = v.get("keys") {
+        let m = kv.as_obj().ok_or("'keys' is not an object")?;
+        for (k, val) in m {
+            // numbers tolerated on input, normalized to the string form
+            // the emitters write
+            let s = match val {
+                Value::Str(s) => s.clone(),
+                Value::Num(_) => val.to_string_json(),
+                _ => {
+                    return Err(format!(
+                        "keys.{k} is neither a string nor a number"
+                    ))
+                }
+            };
+            keys.insert(k.clone(), s);
+        }
+    } else {
+        return Err("missing 'keys' object".into());
+    }
+    Ok(Record {
+        target: non_empty_str(v, "target")?,
+        metric: non_empty_str(v, "metric")?,
+        value,
+        unit: v
+            .get("unit")
+            .and_then(|s| s.as_str())
+            .ok_or("missing string 'unit'")?
+            .to_string(),
+        n: n as usize,
+        seed: seed as u64,
+        keys,
+    })
+}
+
+fn non_empty_str(v: &Value, field: &str) -> Result<String, String> {
+    // nested field names ("env.provenance") index the leaf only — the
+    // caller already holds the right object
+    let leaf = field.rsplit('.').next().unwrap_or(field);
+    let s = v
+        .get(leaf)
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| format!("missing string '{field}'"))?;
+    if s.is_empty() {
+        return Err(format!("'{field}' is empty"));
+    }
+    Ok(s.to_string())
+}
+
+/// Write a document to `path` in the canonical rendering, creating any
+/// missing parent directories (the `results/`-style dirs are not assumed
+/// to exist).
+pub fn write_doc(path: &Path, doc: &RecordDoc) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent).with_context(|| {
+                format!("creating {}", parent.display())
+            })?;
+        }
+    }
+    fs::write(path, doc.render())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Best-effort hostname for the env block (`$HOSTNAME`, then the kernel
+/// gauge, then `"unknown"`). Wall-clock metrics are host-bound; the diff
+/// report prints both hosts so cross-host comparisons are visibly so.
+pub fn host_label() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = fs::read_to_string("/proc/sys/kernel/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    "unknown".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> RecordDoc {
+        let mut doc = RecordDoc::new(
+            "packing",
+            Env {
+                provenance: Provenance::Measured,
+                host: "testhost".into(),
+                artifact_hash: "abc123".into(),
+                created_by: "mars bench packing --n 2".into(),
+                note: Some("unit fixture".into()),
+            },
+        );
+        doc.config_str("task", "sum");
+        doc.config_num("n", 2.0);
+        let keys = [
+            ("method", "sps:k=7".to_string()),
+            ("policy", "mars:0.9".to_string()),
+            ("pack", "4".to_string()),
+        ];
+        doc.push("tok_per_s", 690.5, "tok/s", 2, 7, &keys);
+        doc.push("ttft_ms_p50", 9.0, "ms", 2, 7, &keys);
+        doc
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_byte_identical() {
+        let doc = sample_doc();
+        let text = doc.render();
+        let back = RecordDoc::parse(&text).expect("parses");
+        assert_eq!(back, doc);
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn key_id_is_sorted_and_total() {
+        let doc = sample_doc();
+        let id = doc.records[0].key_id();
+        assert_eq!(
+            id,
+            "packing/tok_per_s{method=sps:k=7,pack=4,policy=mars:0.9}"
+        );
+        assert_eq!(doc.by_key().len(), doc.records.len());
+    }
+
+    #[test]
+    fn validator_names_the_offending_field() {
+        let doc = sample_doc();
+        let mut v = Value::parse(&doc.render()).unwrap();
+        v.set("schema", Value::Num(1.0));
+        let err = validate(&v).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+
+        let mut v = Value::parse(&doc.render()).unwrap();
+        if let Value::Obj(m) = &mut v {
+            m.remove("env");
+        }
+        let err = validate(&v).unwrap_err();
+        assert!(err.contains("env"), "{err}");
+
+        let mut v = Value::parse(&doc.render()).unwrap();
+        if let Some(Value::Arr(a)) = match &mut v {
+            Value::Obj(m) => m.get_mut("records"),
+            _ => None,
+        } {
+            a[1].set("value", Value::Str("fast".into()));
+        }
+        let err = validate(&v).unwrap_err();
+        assert!(err.contains("records[1]"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_duplicate_keys_and_empty_records() {
+        let mut doc = sample_doc();
+        let dup = doc.records[0].clone();
+        doc.records.push(dup);
+        let err = RecordDoc::parse(&doc.render()).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+
+        let mut doc = sample_doc();
+        doc.records.clear();
+        let err = RecordDoc::parse(&doc.render()).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn numeric_keys_normalize_to_strings() {
+        let doc = sample_doc();
+        let mut v = Value::parse(&doc.render()).unwrap();
+        if let Some(Value::Arr(a)) = match &mut v {
+            Value::Obj(m) => m.get_mut("records"),
+            _ => None,
+        } {
+            if let Some(keys) = match &mut a[0] {
+                Value::Obj(m) => m.get_mut("keys"),
+                _ => None,
+            } {
+                keys.set("pack", Value::Num(4.0));
+            }
+        }
+        let back = validate(&v).expect("validates");
+        assert_eq!(back.records[0].keys["pack"], "4");
+    }
+
+    #[test]
+    fn write_doc_creates_missing_directories() {
+        let dir = std::env::temp_dir().join(format!(
+            "mars-record-test-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("deep/nested/BENCH_packing.json");
+        assert!(!dir.exists());
+        let doc = sample_doc();
+        write_doc(&path, &doc).expect("writes into missing dir");
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(RecordDoc::parse(&text).unwrap(), doc);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::record;
 use crate::cache::CacheConfig;
 use crate::coordinator::router::{Router, RouterPolicy};
 use crate::coordinator::scheduler::exp_arrival_gap;
@@ -104,6 +105,27 @@ pub struct ServeBenchCfg {
     pub cache_mb: usize,
     /// Where the rendered table lands (`results/serve.md`).
     pub out_dir: PathBuf,
+    /// Where the machine-readable `BENCH_serve.json` trajectory lands
+    /// (schema-2 records, [`super::record`]).
+    pub bench_dir: PathBuf,
+}
+
+/// Provenance block for a measured serve run: the artifact's layout hash
+/// plus the scenario's refresh command.
+fn serve_env(cfg: &ServeBenchCfg, created_by: &str) -> Result<record::Env> {
+    let arts = crate::runtime::Artifacts::load(&cfg.artifact_dir)?;
+    Ok(record::Env::measured(&arts.layout.hash, created_by))
+}
+
+/// Write the serve record doc to `bench_dir/BENCH_serve.json`.
+fn emit_serve_records(
+    cfg: &ServeBenchCfg,
+    doc: &record::RecordDoc,
+) -> Result<()> {
+    let path = cfg.bench_dir.join(format!("BENCH_{}.json", doc.target));
+    record::write_doc(&path, doc)?;
+    eprintln!("[written {}]", path.display());
+    Ok(())
 }
 
 /// Client-side record of one request's lifecycle.
@@ -193,6 +215,8 @@ impl Drop for BenchConn {
 /// Per-wave (method × policy) outcome row.
 struct PolicyRow {
     label: String,
+    method: SpecMethod,
+    policy: VerifyPolicy,
     ok: usize,
     err: usize,
     ttft_ms: Summary,
@@ -268,15 +292,40 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
 
     let table = render_table(cfg, &rows);
     println!("{table}");
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
-    let path = cfg.out_dir.join("serve.md");
-    std::fs::write(&path, &table)
-        .with_context(|| format!("writing {}", path.display()))?;
-    eprintln!("[written {}]", path.display());
+    super::emit_md(&cfg.out_dir, "serve", &table)?;
     eprintln!(
         "server metrics: {}",
         router.metrics.snapshot_json().to_string_json()
     );
+
+    // machine-readable trajectory for PR-to-PR diffing (`bench diff`)
+    let mut doc = record::RecordDoc::new(
+        "serve",
+        serve_env(cfg, "mars bench serve --scenario sweep")?,
+    );
+    doc.config_num("n", cfg.n_requests as f64);
+    doc.config_num("seed", cfg.seed as f64);
+    doc.config_num("max_new", cfg.max_new as f64);
+    doc.config_num("rate_per_s", cfg.rate_per_s);
+    doc.config_num("connections", cfg.connections as f64);
+    for r in &rows {
+        let keys = [
+            ("scenario", "sweep".to_string()),
+            ("method", r.method.label()),
+            ("policy", r.policy.label()),
+        ];
+        let mut push = |metric: &str, value: f64, unit: &str| {
+            doc.push(metric, value, unit, r.ok, cfg.seed, &keys);
+        };
+        push("ttft_ms_p50", r.ttft_ms.p50(), "ms");
+        push("ttft_ms_p99", r.ttft_ms.p99(), "ms");
+        push("tpot_ms_p50", r.tpot_ms.p50(), "ms");
+        push("tpot_ms_p99", r.tpot_ms.p99(), "ms");
+        push("tok_per_s", r.tok_per_s, "tok/s");
+        push("req_per_s", r.req_per_s, "req/s");
+        push("err", r.err as f64, "count");
+    }
+    emit_serve_records(cfg, &doc)?;
     Ok(())
 }
 
@@ -349,6 +398,8 @@ fn drive_wave(
     let g = probes.lock().unwrap();
     let mut row = PolicyRow {
         label: format!("{} / {}", method.label(), policy.label()),
+        method,
+        policy,
         ok: 0,
         err: 0,
         ttft_ms: Summary::new(),
@@ -578,11 +629,40 @@ fn run_chat(cfg: &ServeBenchCfg, turns: usize) -> Result<()> {
 
     let table = render_chat_table(cfg, turns, max_new, method, policy, &rows);
     println!("{table}");
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
-    let path = cfg.out_dir.join("serve.md");
-    std::fs::write(&path, &table)
-        .with_context(|| format!("writing {}", path.display()))?;
-    eprintln!("[written {}]", path.display());
+    super::emit_md(&cfg.out_dir, "serve", &table)?;
+
+    // machine-readable trajectory for PR-to-PR diffing (`bench diff`)
+    let mut doc = record::RecordDoc::new(
+        "serve",
+        serve_env(cfg, "mars bench serve --scenario chat")?,
+    );
+    doc.config_num("n", cfg.n_requests as f64);
+    doc.config_num("seed", cfg.seed as f64);
+    doc.config_num("max_new", max_new as f64);
+    doc.config_num("turns", turns as f64);
+    doc.config_num("rate_per_s", cfg.rate_per_s);
+    for r in &rows {
+        let cache = if r.label.ends_with("on") { "on" } else { "off" };
+        let keys = [
+            ("scenario", "chat".to_string()),
+            ("cache", cache.to_string()),
+            ("method", method.label()),
+            ("policy", policy.label()),
+        ];
+        let mut push = |metric: &str, value: f64, unit: &str| {
+            doc.push(metric, value, unit, r.ok, cfg.seed, &keys);
+        };
+        push("ttft_ms_p50", r.ttft_ms.p50(), "ms");
+        push("ttft_ms_p99", r.ttft_ms.p99(), "ms");
+        push("tpot_ms_p50", r.tpot_ms.p50(), "ms");
+        push("first_sim_units", r.first_sim_units.mean(), "units");
+        push("follow_prefill_ms", r.follow_prefill_ms.mean(), "ms");
+        push("follow_cached_tok", r.follow_cached_tok.mean(), "tok");
+        push("follow_sim_units", r.follow_sim_units.mean(), "units");
+        push("tok_per_s", r.tok_per_s, "tok/s");
+        push("err", r.err as f64, "count");
+    }
+    emit_serve_records(cfg, &doc)?;
     Ok(())
 }
 

@@ -26,6 +26,12 @@
 //! one dispatch across every occupied lane, so the model charges each
 //! request its amortized [`GenResult::dispatch_share`] (Σ 1/occupancy),
 //! not its raw `device_calls`.
+//!
+//! The model is pure — it emits nothing itself. Bench targets fold its
+//! outputs (`tau`, `*_sim_units`, `speedup_sim`) into their schema-2
+//! trajectory records ([`super::record`], DESIGN.md §10), where the
+//! sim-unit metrics gate PR-to-PR via `mars bench diff` and τ stays
+//! informational.
 
 use crate::engine::{GenResult, SpecMethod};
 

@@ -5,6 +5,7 @@
 //! mars generate --prompt "..."       one-shot generation
 //! mars serve --bind 127.0.0.1:7071   line-JSON TCP serving
 //! mars bench <table1..table7|fig3|policies|packing|batch|perf|serve|all>
+//! mars bench diff old.json new.json  schema-2 snapshot regression gate
 //! mars analyze <fig1|fig4>           probe-ring dumps + ASCII plots
 //! mars eval --task arith --method eagle_tree [--policy mars:0.9]
 //! ```
@@ -83,6 +84,12 @@ USAGE: mars <cmd> [flags]
           [--batch 1]   cross-sequence batch width per replica   (serve)
       [--scenario sweep|chat] [--turns 3] [--cache-mb 256]        (serve;
           chat = multi-turn conversations, cache-on vs cache-off waves)
+      [--out DIR]   redirect emit paths: BENCH_*.json trajectories
+          into DIR, rendered tables into DIR/results
+  bench diff OLD.json NEW.json [--out FILE]
+      pair two schema-2 snapshots by record key, apply per-metric
+      direction thresholds (see BENCHMARKS.md), exit nonzero on
+      regression; `estimated` baselines soft-gate (WARN, exit 0)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
   eval --task arith|code|chat|sum|mt [--method M] [--policy P] [--n 16]
 
@@ -263,6 +270,41 @@ fn run(args: &Args) -> Result<()> {
                         .ok_or_else(|| anyhow!("bad --methods list '{spec}'")),
                 }
             };
+            // `bench diff` compares two committed snapshot files — no
+            // artifacts, no engine: handle it before Runtime::new
+            if which == "diff" {
+                let usage = "usage: mars bench diff OLD.json NEW.json";
+                let old = args
+                    .positional
+                    .get(1)
+                    .ok_or_else(|| anyhow!("{usage}"))?;
+                let new = args
+                    .positional
+                    .get(2)
+                    .ok_or_else(|| anyhow!("{usage}"))?;
+                let (report, rendered) = bench::diff::run_diff(
+                    &PathBuf::from(old),
+                    &PathBuf::from(new),
+                    &bench::diff::DiffCfg::default(),
+                )?;
+                println!("{rendered}");
+                if let Some(out) = args.get("out") {
+                    std::fs::write(out, &rendered)?;
+                    eprintln!("[written {out}]");
+                }
+                if report.regressed() {
+                    let fails = report.failures();
+                    bail!(
+                        "{} regression(s) past threshold, first: {}",
+                        fails.len(),
+                        fails[0].key
+                    );
+                }
+                return Ok(());
+            }
+            // `--out DIR`: redirect both emit paths (BENCH_*.json
+            // trajectories into DIR, rendered tables into DIR/results)
+            let out_dir = args.get("out").map(PathBuf::from);
             // the serving benchmark owns its own router/replicas (each
             // replica builds a Runtime), so handle it before the bare
             // single-engine context below
@@ -290,7 +332,13 @@ fn run(args: &Args) -> Result<()> {
                     scenario,
                     cache_mb: args
                         .get_usize("cache-mb", mars::cache::DEFAULT_CACHE_MB),
-                    out_dir: PathBuf::from("results"),
+                    out_dir: out_dir
+                        .as_ref()
+                        .map(|d| d.join("results"))
+                        .unwrap_or_else(|| PathBuf::from("results")),
+                    bench_dir: out_dir
+                        .clone()
+                        .unwrap_or_else(|| PathBuf::from(".")),
                 };
                 return bench::serve::run(&cfg);
             }
@@ -299,6 +347,10 @@ fn run(args: &Args) -> Result<()> {
             let mut ctx =
                 BenchCtx::new(&engine, args.get_usize("n", 16), args.get_usize("seed", 7) as u64);
             ctx.max_new = args.get_usize("max-new", 96);
+            if let Some(d) = &out_dir {
+                ctx.out_dir = d.join("results");
+                ctx.bench_dir = d.clone();
+            }
             match which {
                 "table1" => bench::table1(&ctx)?,
                 "table2" => bench::table2(&ctx)?,

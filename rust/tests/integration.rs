@@ -1081,3 +1081,148 @@ fn batched_router_end_to_end_over_tcp() {
         "no dispatch ever ran more than one lane: {hist:?}"
     );
 }
+
+// ------------------------------------------- bench record/diff harness -----
+
+/// Every bench target emits schema-valid records on real artifacts, and
+/// `bench diff` behaves as the regression gate promises: exit-clean on
+/// self-compare, loud (naming the key) on a perturbation past threshold.
+/// One engine build covers all targets (PJRT handles are not `Send`).
+#[test]
+fn bench_harness_suite() {
+    use mars::bench::diff::{diff_docs, DiffCfg};
+    use mars::bench::record::{Provenance, RecordDoc};
+    use mars::bench::{self, BenchCtx};
+
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir().join(format!(
+        "mars-bench-test-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let engine = DecodeEngine::new(Runtime::new(&dir).expect("runtime"));
+    let mut ctx = BenchCtx::new(&engine, 2, 7);
+    ctx.max_new = 16;
+    // out_dir intentionally missing: the emitter must create it
+    ctx.out_dir = tmp.join("results");
+    ctx.bench_dir = tmp.clone();
+    assert!(!ctx.out_dir.exists());
+
+    let methods = [SpecMethod::Sps { k: 7 }];
+    let policies = [VerifyPolicy::Mars { theta: 0.9 }];
+    bench::packing(&ctx, &methods, &policies, &[1, 2]).expect("packing");
+    if engine.rt.supports_batching() {
+        bench::batch(&ctx, &methods, &policies, &[1, 2]).expect("batch");
+    }
+    bench::policy_sweep(&ctx, &methods, &policies).expect("policies");
+    assert!(ctx.out_dir.join("packing.md").exists(), "emit-into-missing-dir");
+
+    // every emitted doc passes the shared validator, provenance measured
+    let mut docs = Vec::new();
+    for target in ["packing", "batch", "policies"] {
+        let path = tmp.join(format!("BENCH_{target}.json"));
+        if target == "batch" && !engine.rt.supports_batching() {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{target}: {e}"));
+        let doc = RecordDoc::parse(&text)
+            .unwrap_or_else(|e| panic!("{target}: {e}"));
+        assert_eq!(doc.target, target);
+        assert_eq!(doc.env.provenance, Provenance::Measured, "{target}");
+        assert_eq!(
+            doc.env.artifact_hash,
+            engine.rt.layout().hash,
+            "{target}"
+        );
+        assert!(!doc.records.is_empty(), "{target}");
+        docs.push(doc);
+    }
+
+    // self-compare: clean pass, every ratio exactly 1.0
+    for doc in &docs {
+        let r = diff_docs(doc, doc, &DiffCfg::default());
+        assert!(!r.regressed(), "{}: diff(x, x) regressed", doc.target);
+        assert!(r.added.is_empty() && r.removed.is_empty(), "{}", doc.target);
+        for row in &r.rows {
+            assert_eq!(row.ratio, 1.0, "{}: {}", doc.target, row.key);
+        }
+    }
+
+    // perturb past threshold: tok_per_s halved (n=2 widens 15% -> 30%,
+    // a 50% drop still fails), ttft tripled — both named in the output
+    let packing = &docs[0];
+    let mut bad = packing.clone();
+    let mut hit_tok = false;
+    let mut hit_ttft = false;
+    for r in &mut bad.records {
+        if r.metric == "tok_per_s" && !hit_tok {
+            r.value *= 0.5;
+            hit_tok = true;
+        } else if r.metric == "ttft_ms_p50" && !hit_ttft {
+            r.value *= 3.0;
+            hit_ttft = true;
+        }
+    }
+    assert!(hit_tok && hit_ttft, "fixture rows missing");
+    let r = diff_docs(packing, &bad, &DiffCfg::default());
+    assert!(r.regressed(), "perturbed copy must fail the gate");
+    let rendered = r.render("old", "new");
+    for f in r.failures() {
+        assert!(rendered.contains(&f.key), "key {} not named", f.key);
+    }
+    assert!(
+        r.failures().iter().any(|f| f.key.contains("tok_per_s")),
+        "tok_per_s drop not flagged"
+    );
+    assert!(
+        r.failures().iter().any(|f| f.key.contains("ttft_ms_p50")),
+        "ttft rise not flagged"
+    );
+
+    // key-pairing totality: a removed record is reported, never dropped
+    let mut shrunk = packing.clone();
+    let gone = shrunk.records.pop().expect("has records").key_id();
+    let r = diff_docs(packing, &shrunk, &DiffCfg::default());
+    assert_eq!(r.removed, vec![gone]);
+
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// Simclock determinism pin: the same seed and config produce identical
+/// simulated_units across two independent runs — including the
+/// DISPATCH_OVERHEAD / dispatch_share terms that packing (DESIGN.md
+/// §9.6) and batching (§9.5) feed through the cost model.
+#[test]
+fn simclock_determinism_pin() {
+    use mars::bench::simclock;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = DecodeEngine::new(Runtime::new(&dir).expect("runtime"));
+    let prompt = "Sum the list: 3 1 4 1 5 9 2 6.\nAnswer: ";
+    let mut p = params(
+        SpecMethod::Sps { k: 7 },
+        VerifyPolicy::Mars { theta: 0.9 },
+        1.0,
+    );
+    p.seed = 7;
+    p.cache = false; // a warm prefix must not skew run b's accounting
+    p.rounds_per_call = 2; // exercise the packed-dispatch accounting
+    let a = engine.generate(prompt, &p).expect("run a");
+    let b = engine.generate(prompt, &p).expect("run b");
+    assert_eq!(a.tokens, b.tokens, "token stream must be seed-determined");
+    assert_eq!(a.device_calls, b.device_calls);
+    assert_eq!(a.dispatch_share, b.dispatch_share);
+    assert_eq!(a.snapshot.rounds, b.snapshot.rounds);
+    assert_eq!(a.snapshot.draft_steps, b.snapshot.draft_steps);
+    let ua = simclock::simulated_units(p.method, &a);
+    let ub = simclock::simulated_units(p.method, &b);
+    assert_eq!(ua, ub, "simulated_units must be bit-identical");
+    // the dispatch term is live: zeroing dispatch_share changes the cost
+    let mut free = a.clone();
+    free.dispatch_share = 0.0;
+    assert!(
+        simclock::simulated_units(p.method, &free) < ua,
+        "DISPATCH_OVERHEAD term missing from simulated_units"
+    );
+}

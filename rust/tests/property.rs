@@ -1047,3 +1047,227 @@ fn prop_cached_prefix_decode_token_identical_on_host_reference() {
         }
     }
 }
+
+// ------------------------------------------------ bench record schema ------
+
+use mars::bench::diff::{diff_docs, metric_rule, DiffCfg, Direction, Verdict};
+use mars::bench::record::{Env, Provenance, RecordDoc};
+
+const METRIC_POOL: [&str; 9] = [
+    "tok_per_s",
+    "ttft_ms_p50",
+    "ttft_ms_p99",
+    "tpot_ms_p50",
+    "tau",
+    "device_calls_per_token",
+    "accuracy",
+    "speedup_sim",
+    "weird_custom_metric",
+];
+
+fn random_word(rng: &mut Rng) -> String {
+    let len = 1 + rng.usize_below(8);
+    (0..len)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+fn random_value(rng: &mut Rng) -> f64 {
+    match rng.below(3) {
+        // integral values exercise the int rendering path
+        0 => rng.below(100_000) as f64,
+        1 => (rng.f64() - 0.5) * 2e6,
+        _ => rng.f64() * 1e-3,
+    }
+}
+
+/// Random schema-valid document: unique key ids by construction.
+fn random_doc(rng: &mut Rng) -> RecordDoc {
+    let target = ["packing", "batch", "policies", "serve"]
+        [rng.usize_below(4)]
+    .to_string();
+    let mut doc = RecordDoc::new(
+        &target,
+        Env {
+            provenance: if rng.below(2) == 0 {
+                Provenance::Measured
+            } else {
+                Provenance::Estimated
+            },
+            host: random_word(rng),
+            artifact_hash: random_word(rng),
+            created_by: format!("mars bench {target}"),
+            note: if rng.below(2) == 0 {
+                Some(random_word(rng))
+            } else {
+                None
+            },
+        },
+    );
+    for _ in 0..rng.usize_below(3) {
+        doc.config_num(&random_word(rng), random_value(rng));
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..1 + rng.usize_below(12) {
+        let metric = METRIC_POOL[rng.usize_below(METRIC_POOL.len())];
+        let keys = [
+            ("method", random_word(rng)),
+            ("policy", random_word(rng)),
+        ];
+        doc.push(
+            metric,
+            random_value(rng),
+            "u",
+            rng.usize_below(32),
+            rng.below(1000),
+            &keys,
+        );
+        let id = doc.records.last().unwrap().key_id();
+        if !seen.insert(id) {
+            doc.records.pop();
+        }
+    }
+    if doc.records.is_empty() {
+        doc.push("tok_per_s", 1.0, "tok/s", 4, 7, &[("method", "m".into())]);
+    }
+    doc
+}
+
+#[test]
+fn prop_record_doc_round_trips_byte_identical() {
+    let mut rng = Rng::new(700);
+    for case in 0..300 {
+        let doc = random_doc(&mut rng);
+        let text = doc.render();
+        let back = RecordDoc::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back, doc, "case {case}: typed round-trip");
+        assert_eq!(back.render(), text, "case {case}: byte round-trip");
+    }
+}
+
+#[test]
+fn prop_diff_reflexivity() {
+    let mut rng = Rng::new(701);
+    for case in 0..300 {
+        let doc = random_doc(&mut rng);
+        let r = diff_docs(&doc, &doc, &DiffCfg::default());
+        assert!(!r.regressed(), "case {case}: diff(x, x) regressed");
+        assert!(r.warnings().is_empty(), "case {case}: diff(x, x) warned");
+        assert!(
+            r.added.is_empty() && r.removed.is_empty(),
+            "case {case}: diff(x, x) reported unmatched keys"
+        );
+        assert_eq!(r.rows.len(), doc.records.len(), "case {case}");
+        for row in &r.rows {
+            assert_eq!(row.ratio, 1.0, "case {case}: {}", row.key);
+        }
+    }
+}
+
+#[test]
+fn prop_diff_threshold_monotonic() {
+    // for a fixed baseline, a strictly worse new value is never judged
+    // less severely than a better one (severity: Pass < Warn < Fail)
+    let sev = |v: Verdict| match v {
+        Verdict::Pass | Verdict::Info => 0,
+        Verdict::Warn => 1,
+        Verdict::Fail => 2,
+    };
+    let mut rng = Rng::new(702);
+    for case in 0..400 {
+        let metric = METRIC_POOL[rng.usize_below(METRIC_POOL.len())];
+        let (dir, _) = metric_rule(metric);
+        if dir == Direction::Info {
+            continue;
+        }
+        let old_v = 1.0 + rng.f64() * 1000.0;
+        let a = old_v * (0.1 + rng.f64() * 1.8);
+        let b = old_v * (0.1 + rng.f64() * 1.8);
+        // `worse` is the value farther in the metric's bad direction
+        let (worse, better) = match dir {
+            Direction::Higher => (a.min(b), a.max(b)),
+            _ => (a.max(b), a.min(b)),
+        };
+        let n = 1 + rng.usize_below(32);
+        let estimated = rng.below(2) == 0;
+        let mk = |value: f64| {
+            let mut d = RecordDoc::new(
+                "packing",
+                Env {
+                    provenance: if estimated {
+                        Provenance::Estimated
+                    } else {
+                        Provenance::Measured
+                    },
+                    host: "h".into(),
+                    artifact_hash: "x".into(),
+                    created_by: "t".into(),
+                    note: None,
+                },
+            );
+            d.push(metric, value, "u", n, 7, &[("method", "m".into())]);
+            d
+        };
+        let old = mk(old_v);
+        let vw = diff_docs(&old, &mk(worse), &DiffCfg::default()).rows[0]
+            .verdict;
+        let vb = diff_docs(&old, &mk(better), &DiffCfg::default()).rows[0]
+            .verdict;
+        assert!(
+            sev(vw) >= sev(vb),
+            "case {case}: {metric} old={old_v} worse={worse} ({vw:?}) \
+             better={better} ({vb:?})"
+        );
+    }
+}
+
+#[test]
+fn prop_diff_key_pairing_total() {
+    // every key on either side lands in exactly one of rows/added/removed
+    let mut rng = Rng::new(703);
+    for case in 0..200 {
+        let mut old = random_doc(&mut rng);
+        let mut new = random_doc(&mut rng);
+        // force the same target so keys can actually collide
+        new.target = old.target.clone();
+        for r in &mut new.records {
+            r.target = old.target.clone();
+        }
+        // splice some shared records in so all three buckets are hit
+        for r in old.records.iter().take(rng.usize_below(4)) {
+            let mut shared = r.clone();
+            shared.value += 1.0;
+            if !new.records.iter().any(|x| x.key_id() == shared.key_id()) {
+                new.records.push(shared);
+            }
+        }
+        let report = diff_docs(&old, &new, &DiffCfg::default());
+        let paired: std::collections::BTreeSet<String> =
+            report.rows.iter().map(|r| r.key.clone()).collect();
+        let added: std::collections::BTreeSet<String> =
+            report.added.iter().cloned().collect();
+        let removed: std::collections::BTreeSet<String> =
+            report.removed.iter().cloned().collect();
+        for r in &old.records {
+            let id = r.key_id();
+            assert!(
+                paired.contains(&id) ^ removed.contains(&id),
+                "case {case}: old key {id} dropped or double-counted"
+            );
+            assert!(!added.contains(&id), "case {case}: old key {id} added");
+        }
+        for r in &new.records {
+            let id = r.key_id();
+            assert!(
+                paired.contains(&id) ^ added.contains(&id),
+                "case {case}: new key {id} dropped or double-counted"
+            );
+        }
+        assert_eq!(
+            paired.len() + added.len() + removed.len(),
+            old.by_key().len() + new.by_key().len() - paired.len(),
+            "case {case}: bucket sizes disagree"
+        );
+    }
+}
