@@ -10,6 +10,7 @@ Artifacts written to --out:
     state_layout.json      flat-state ABI (offsets, scalar ids, hash)
     vocab.json             tokenizer spec
     manifest.json          executable index: parameter lists, weight specs
+    contracts.json         cross-layer contract manifest (mars check)
 
 Usage: cd python && python -m compile.aot --weights ../artifacts/weights \
            --out ../artifacts
@@ -23,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
+from . import exec_registry as X
 from . import model as M
 from . import rounds as R
 from . import state_spec as S
@@ -49,79 +51,61 @@ def weight_spec_structs(which: str):
     return [f32(*shape) for _, shape in R.weight_specs(which)]
 
 
+# Lowering inputs per executable: (fn, extra-inputs [(name, shape)]).
+# Names, stateless/batched flags and weight families are single-sourced
+# from exec_registry.EXECS (exported to artifacts/contracts.json and
+# cross-checked against the rust mirrors by `mars check contracts`).
 EXECUTABLES = {
-    # name: (fn, extra-inputs [(name, shape)], weight families in order)
     "prefill": (
-        R.prefill,
-        [("prompt", (M.P_MAX,)), ("cfg", (S.N_CFG,))],
-        ["target", "eagle", "sps"],
+        R.prefill, [("prompt", (M.P_MAX,)), ("cfg", (S.N_CFG,))]
     ),
-    "prefill_ext": (
-        R.prefill_ext,
-        [("ext", (M.P_MAX + 1,))],
-        ["target", "eagle", "sps"],
-    ),
-    "ar_step": (R.ar_step, [], ["target"]),
-    "sps_round": (R.sps_round, [], ["target", "sps"]),
-    "eagle_tree_round": (R.eagle_tree_round, [], ["target", "eagle"]),
-    "medusa_round": (R.medusa_round, [], ["target", "medusa"]),
-    "verify_ext_round": (
-        R.verify_ext_round, [("ext", (S.K_MAX + 1,))], ["target"]
-    ),
+    "prefill_ext": (R.prefill_ext, [("ext", (M.P_MAX + 1,))]),
+    "ar_step": (R.ar_step, []),
+    "sps_round": (R.sps_round, []),
+    "eagle_tree_round": (R.eagle_tree_round, []),
+    "medusa_round": (R.medusa_round, []),
+    "verify_ext_round": (R.verify_ext_round, [("ext", (S.K_MAX + 1,))]),
     # round packing (DESIGN.md §9.6): fused multi-round variants; `pack`
     # is the host's per-call round budget, clamped on device
-    "ar_multi": (R.ar_multi, [("pack", (1,))], ["target"]),
-    "sps_multi": (R.sps_multi, [("pack", (1,))], ["target", "sps"]),
-    "eagle_tree_multi": (
-        R.eagle_tree_multi, [("pack", (1,))], ["target", "eagle"]
-    ),
-    "medusa_multi": (R.medusa_multi, [("pack", (1,))], ["target", "medusa"]),
-    "extract": (R.extract, [], []),
-    "extract_probe": (R.extract_probe, [], []),
+    "ar_multi": (R.ar_multi, [("pack", (1,))]),
+    "sps_multi": (R.sps_multi, [("pack", (1,))]),
+    "eagle_tree_multi": (R.eagle_tree_multi, [("pack", (1,))]),
+    "medusa_multi": (R.medusa_multi, [("pack", (1,))]),
+    "extract": (R.extract, []),
+    "extract_probe": (R.extract_probe, []),
     # cross-sequence batching (DESIGN.md §9.5): BATCH_MAX stacked states
     # per dispatch; finished lanes are whole-lane selected back (masked
     # no-ops), per-lane cfg rides in each lane's own scalars
-    "ar_batch": (R.ar_batch, [], ["target"]),
-    "sps_batch": (R.sps_batch, [], ["target", "sps"]),
-    "eagle_tree_batch": (R.eagle_tree_batch, [], ["target", "eagle"]),
-    "medusa_batch": (R.medusa_batch, [], ["target", "medusa"]),
+    "ar_batch": (R.ar_batch, []),
+    "sps_batch": (R.sps_batch, []),
+    "eagle_tree_batch": (R.eagle_tree_batch, []),
+    "medusa_batch": (R.medusa_batch, []),
     "verify_ext_batch": (
-        R.verify_ext_batch,
-        [("ext", (S.BATCH_MAX * (S.K_MAX + 1),))],
-        ["target"],
+        R.verify_ext_batch, [("ext", (S.BATCH_MAX * (S.K_MAX + 1),))]
     ),
     # batched round packing (§9.5 x §9.6): per-lane round budgets
-    "ar_batch_multi": (
-        R.ar_batch_multi, [("pack", (S.BATCH_MAX,))], ["target"]
-    ),
-    "sps_batch_multi": (
-        R.sps_batch_multi, [("pack", (S.BATCH_MAX,))], ["target", "sps"]
-    ),
+    "ar_batch_multi": (R.ar_batch_multi, [("pack", (S.BATCH_MAX,))]),
+    "sps_batch_multi": (R.sps_batch_multi, [("pack", (S.BATCH_MAX,))]),
     "eagle_tree_batch_multi": (
-        R.eagle_tree_batch_multi,
-        [("pack", (S.BATCH_MAX,))],
-        ["target", "eagle"],
+        R.eagle_tree_batch_multi, [("pack", (S.BATCH_MAX,))]
     ),
-    "medusa_batch_multi": (
-        R.medusa_batch_multi, [("pack", (S.BATCH_MAX,))], ["target", "medusa"]
-    ),
+    "medusa_batch_multi": (R.medusa_batch_multi, [("pack", (S.BATCH_MAX,))]),
     # admission splices (device-to-device, no host traffic)
     "batch_join": (
-        R.batch_join, [("lane", (S.STATE_LEN,)), ("slot", (1,))], []
+        R.batch_join, [("lane", (S.STATE_LEN,)), ("slot", (1,))]
     ),
-    "batch_slot": (R.batch_slot, [("slot", (1,))], []),
-    "extract_batch": (R.extract_batch, [], []),
+    "batch_slot": (R.batch_slot, [("slot", (1,))]),
+    "extract_batch": (R.extract_batch, []),
 }
 
-STATELESS = {"prefill"}  # no leading state argument
+assert set(EXECUTABLES) == set(X.EXECS), (
+    "aot.EXECUTABLES and exec_registry.EXECS must cover the same names: "
+    f"{set(EXECUTABLES) ^ set(X.EXECS)}"
+)
 
+STATELESS = X.stateless()  # no leading state argument
 # leading state argument is the stacked batch state, not a solo state
-BATCH_STATE = {
-    "ar_batch", "sps_batch", "eagle_tree_batch", "medusa_batch",
-    "verify_ext_batch", "ar_batch_multi", "sps_batch_multi",
-    "eagle_tree_batch_multi", "medusa_batch_multi",
-    "batch_join", "batch_slot", "extract_batch",
-}
+BATCH_STATE = X.batched()
 
 
 def lower_all(out_dir: str) -> dict:
@@ -130,7 +114,8 @@ def lower_all(out_dir: str) -> dict:
         manifest["weights"][fam] = [
             {"name": n, "shape": list(s)} for n, s in R.weight_specs(fam)
         ]
-    for name, (fn, extras, fams) in EXECUTABLES.items():
+    for name, (fn, extras) in EXECUTABLES.items():
+        fams = list(X.weight_families(name))
         if name in STATELESS:
             specs = []
         elif name in BATCH_STATE:
@@ -186,6 +171,8 @@ def main():
 
     with open(os.path.join(args.out, "state_layout.json"), "w") as f:
         f.write(S.layout_json())
+    with open(os.path.join(args.out, "contracts.json"), "w") as f:
+        f.write(S.contracts_json())
     with open(os.path.join(args.out, "vocab.json"), "w") as f:
         json.dump(tokenizer.vocab_spec(), f, indent=1)
     with open(os.path.join(args.out, "manifest.json"), "w") as f:

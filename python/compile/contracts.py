@@ -1,0 +1,30 @@
+"""Standalone contract-manifest exporter.
+
+Writes artifacts/contracts.json without touching weights or lowering any
+HLO — seconds, not minutes — so the CI `check` job (and anyone running
+`mars check contracts` locally) can regenerate the manifest from the
+python source of truth cheaply. `aot.py` writes the identical document
+alongside the HLO artifacts.
+
+Usage: cd python && python -m compile.contracts --out ../artifacts
+"""
+
+import argparse
+import os
+
+from . import state_spec as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "contracts.json")
+    with open(path, "w") as f:
+        f.write(S.contracts_json())
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

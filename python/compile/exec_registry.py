@@ -1,0 +1,66 @@
+"""Single-source registry of every lowered executable.
+
+This module is deliberately jax-free: it is the machine-readable half of
+the exec-name contract. `aot.py` derives its STATELESS / BATCH_STATE sets
+and per-executable weight families from here (and asserts its lowering
+table covers exactly this set), `contracts.py` exports it into
+`artifacts/contracts.json`, and `mars check contracts` diffs the rust
+sources against that export — so renaming or adding a round program in
+`rounds.py` without updating every mirror fails a gate instead of failing
+at artifact-load time (or worse, silently dispatching the wrong program).
+
+Each entry: name -> (stateless, batched, weight_families)
+  stateless        no leading flat-state argument (prefill builds one)
+  batched          leading state is the BATCH_MAX-stacked vector (§9.5)
+  weight_families  parameter pytrees appended after state+extras, in order
+"""
+
+# fmt: off
+EXECS = {
+    # prefill + solo rounds
+    "prefill":           (True,  False, ("target", "eagle", "sps")),
+    "prefill_ext":       (False, False, ("target", "eagle", "sps")),
+    "ar_step":           (False, False, ("target",)),
+    "sps_round":         (False, False, ("target", "sps")),
+    "eagle_tree_round":  (False, False, ("target", "eagle")),
+    "medusa_round":      (False, False, ("target", "medusa")),
+    "verify_ext_round":  (False, False, ("target",)),
+    # fused multi-round variants (DESIGN.md §9.6)
+    "ar_multi":          (False, False, ("target",)),
+    "sps_multi":         (False, False, ("target", "sps")),
+    "eagle_tree_multi":  (False, False, ("target", "eagle")),
+    "medusa_multi":      (False, False, ("target", "medusa")),
+    # host-side result extraction
+    "extract":           (False, False, ()),
+    "extract_probe":     (False, False, ()),
+    # cross-sequence batching (DESIGN.md §9.5)
+    "ar_batch":          (False, True,  ("target",)),
+    "sps_batch":         (False, True,  ("target", "sps")),
+    "eagle_tree_batch":  (False, True,  ("target", "eagle")),
+    "medusa_batch":      (False, True,  ("target", "medusa")),
+    "verify_ext_batch":  (False, True,  ("target",)),
+    # batched round packing (§9.5 x §9.6)
+    "ar_batch_multi":         (False, True, ("target",)),
+    "sps_batch_multi":        (False, True, ("target", "sps")),
+    "eagle_tree_batch_multi": (False, True, ("target", "eagle")),
+    "medusa_batch_multi":     (False, True, ("target", "medusa")),
+    # admission splices + batched extraction
+    "batch_join":        (False, True,  ()),
+    "batch_slot":        (False, True,  ()),
+    "extract_batch":     (False, True,  ()),
+}
+# fmt: on
+
+
+def stateless() -> set:
+    """Names lowered without a leading flat-state argument."""
+    return {n for n, (s, _, _) in EXECS.items() if s}
+
+
+def batched() -> set:
+    """Names whose leading state is the stacked batch vector."""
+    return {n for n, (_, b, _) in EXECS.items() if b}
+
+
+def weight_families(name: str) -> tuple:
+    return EXECS[name][2]

@@ -167,6 +167,44 @@ def layout_json() -> str:
     return json.dumps(doc, indent=1, sort_keys=True)
 
 
+def contracts_json() -> str:
+    """Machine-readable contract manifest for `mars check contracts`.
+
+    Everything the rust side hand-mirrors, in one document: the full
+    state layout (slot names+indices, consts incl. PACK_MAX/BATCH_MAX/
+    K_MAX/N_CFG), the verification-policy id table, and the exec-name
+    registry with stateless/batched flags and weight families. Exported
+    to artifacts/contracts.json by aot.py (and standalone, weights-free,
+    by `python -m compile.contracts`); a committed copy lives at
+    rust/tests/fixtures/contracts.json so the rust gates run without a
+    python toolchain (tests/test_contracts.py pins its freshness).
+    """
+    from . import exec_registry as X
+
+    doc = {
+        "schema": 1,
+        "layout": json.loads(layout_json()),
+        "policies": {
+            "strict": POLICY_STRICT,
+            "mars": POLICY_MARS,
+            "topk": POLICY_TOPK,
+            "entropy": POLICY_ENTROPY,
+        },
+        "executables": {
+            name: {
+                "stateless": st,
+                "batched": bt,
+                "weight_families": list(fams),
+            }
+            for name, (st, bt, fams) in sorted(X.EXECS.items())
+        },
+    }
+    doc["hash"] = hashlib.sha256(
+        json.dumps(doc, sort_keys=True).encode()
+    ).hexdigest()[:16]
+    return json.dumps(doc, indent=1, sort_keys=True)
+
+
 # ------------------------------------------------------ pack / unpack ------
 
 

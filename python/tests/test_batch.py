@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import pytest
 
 from compile import aot
+from compile import exec_registry as X
 from compile import model as M
 from compile import rounds as R
 from compile import state_spec as S
@@ -320,10 +321,10 @@ def test_all_batch_programs_aot_lower(world):
     (stablehlo -> HLO text via the xla_extension parser) with the exact
     manifest specs — the shape contract the rust runtime loads."""
     for name in sorted(aot.BATCH_STATE):
-        fn, extras, fams = aot.EXECUTABLES[name]
+        fn, extras = aot.EXECUTABLES[name]
         specs = [aot.f32(S.BATCH_STATE_LEN)]
         specs += [aot.f32(*shape) for _, shape in extras]
-        for fam in fams:
+        for fam in X.weight_families(name):
             specs += aot.weight_spec_structs(fam)
         text = aot.to_hlo_text(fn, specs)
         assert "ENTRY" in text, name

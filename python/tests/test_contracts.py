@@ -1,0 +1,89 @@
+"""Contract-manifest tests (the `mars check contracts` input side).
+
+The manifest is the machine-readable export of every hand-mirrored
+surface: state layout, policy ids, exec registry. These tests pin its
+shape, its internal consistency (the invariants the rust checker builds
+on), and the freshness of the committed rust fixture so the rust gates
+can run without a python toolchain.
+"""
+
+import json
+import os
+
+from compile import aot
+from compile import exec_registry as X
+from compile import state_spec as S
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__),
+    "..", "..", "rust", "tests", "fixtures", "contracts.json",
+)
+
+
+def manifest():
+    return json.loads(S.contracts_json())
+
+
+def test_manifest_shape():
+    doc = manifest()
+    assert doc["schema"] == 1
+    lay = doc["layout"]
+    for key in ("scalars", "cfg", "consts", "sections", "hash"):
+        assert key in lay, key
+    assert doc["policies"] == {
+        "strict": 0.0, "mars": 1.0, "topk": 2.0, "entropy": 3.0
+    }
+    assert set(doc["executables"]) == set(X.EXECS)
+    for name, entry in doc["executables"].items():
+        st, bt, fams = X.EXECS[name]
+        assert entry["stateless"] is st, name
+        assert entry["batched"] is bt, name
+        assert entry["weight_families"] == list(fams), name
+
+
+def test_manifest_consts_cover_rust_mirrors():
+    # every const the rust runtime/engine reads by name must be exported
+    consts = manifest()["layout"]["consts"]
+    for name in (
+        "pack_max", "batch_max", "k_max", "n_cfg", "probe_max", "probe_w"
+    ):
+        assert name in consts, name
+    assert consts["pack_max"] == S.PACK_MAX
+    assert consts["batch_max"] == S.BATCH_MAX
+    assert consts["k_max"] == S.K_MAX
+    assert consts["n_cfg"] == S.N_CFG
+
+
+def test_cfg_names_are_scalar_names():
+    # restamp_resumed (rust) copies cfg[i] onto the *scalar of the same
+    # name*; a cfg slot without a scalar twin would panic at resume time
+    assert set(S.CFG) <= set(S.SCALARS)
+
+
+def test_registry_matches_aot_lowering_table():
+    assert set(aot.EXECUTABLES) == set(X.EXECS)
+    assert aot.STATELESS == X.stateless()
+    assert aot.BATCH_STATE == X.batched()
+    # exactly one stateless program (prefill builds the state)
+    assert X.stateless() == {"prefill"}
+
+
+def test_manifest_deterministic():
+    a, b = manifest(), manifest()
+    assert a == b
+    assert a["hash"] == b["hash"]
+    assert a["layout"]["hash"] == json.loads(S.layout_json())["hash"]
+
+
+def test_committed_fixture_is_fresh():
+    # rust/tests/fixtures/contracts.json is consumed by the rust property
+    # tests and by `mars check contracts` when no artifacts dir exists;
+    # regenerate with `python -m compile.contracts --out ../rust/tests/
+    # fixtures` whenever this fails
+    with open(FIXTURE) as f:
+        committed = f.read()
+    assert committed == S.contracts_json(), (
+        "committed contracts fixture is stale — regenerate it: "
+        "cd python && python -m compile.contracts "
+        "--out ../rust/tests/fixtures"
+    )

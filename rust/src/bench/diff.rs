@@ -39,33 +39,161 @@ pub enum Direction {
     Info,
 }
 
-/// Direction + allowed fractional regression for a metric name — the
-/// threshold table (documented user-facing in BENCHMARKS.md; keep the
-/// two in sync).
-pub fn metric_rule(metric: &str) -> (Direction, f64) {
-    match metric {
-        m if m.starts_with("tok_per_s") => (Direction::Higher, 0.15),
-        "req_per_s" => (Direction::Higher, 0.15),
-        m if m.starts_with("speedup") => (Direction::Higher, 0.15),
-        "accuracy" | "rouge_l" | "bleu" | "chrf" | "judge" | "hit_rate" => {
-            (Direction::Higher, 0.15)
+/// How one pattern of the threshold table matches a metric name.
+#[derive(Debug, Clone, Copy)]
+pub enum MetricPattern {
+    /// The metric name equals the string.
+    Exact(&'static str),
+    /// The metric name starts with the string (rendered `name*`).
+    Prefix(&'static str),
+    /// The metric name ends with the string (rendered `*name`).
+    Suffix(&'static str),
+    /// The metric name contains the string (rendered `*name*`).
+    Contains(&'static str),
+}
+
+impl MetricPattern {
+    fn matches(&self, metric: &str) -> bool {
+        match *self {
+            MetricPattern::Exact(s) => metric == s,
+            MetricPattern::Prefix(s) => metric.starts_with(s),
+            MetricPattern::Suffix(s) => metric.ends_with(s),
+            MetricPattern::Contains(s) => metric.contains(s),
         }
-        "follow_cached_tok" => (Direction::Higher, 0.15),
-        "device_calls_per_token" | "dispatches_per_token" => {
-            (Direction::Lower, 0.15)
-        }
-        m if m.ends_with("_ms_p99") => (Direction::Lower, 0.50),
-        m if m.ends_with("_ms_p50") || m.ends_with("_ms") => {
-            (Direction::Lower, 0.25)
-        }
-        m if m.ends_with("_units") || m.contains("sim_units") => {
-            (Direction::Lower, 0.15)
-        }
-        // τ is a property of the method × workload, not a perf budget:
-        // policy changes move it on purpose
-        "tau" => (Direction::Info, 0.0),
-        _ => (Direction::Info, 0.0),
     }
+
+    fn label(&self) -> String {
+        match *self {
+            MetricPattern::Exact(s) => format!("`{s}`"),
+            MetricPattern::Prefix(s) => format!("`{s}*`"),
+            MetricPattern::Suffix(s) => format!("`*{s}`"),
+            MetricPattern::Contains(s) => format!("`*{s}*`"),
+        }
+    }
+}
+
+/// One row of the threshold table: any matching pattern applies the
+/// row's direction + allowed fractional regression.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricRule {
+    /// Patterns sharing this rule (one rendered table row).
+    pub patterns: &'static [MetricPattern],
+    /// Which way the metric may move.
+    pub direction: Direction,
+    /// Allowed fractional regression (0.15 = 15%).
+    pub threshold: f64,
+    /// Rendered parenthetical, e.g. why a band is wider.
+    pub note: &'static str,
+}
+
+/// The threshold table itself. First matching row wins; metrics matching
+/// no row (τ, error counters, unknown names) are informational. This
+/// table is the single source: [`metric_rule`] evaluates it and
+/// [`thresholds_markdown`] renders it (`mars bench diff
+/// --print-thresholds`) — BENCHMARKS.md embeds that rendering verbatim,
+/// which `mars check contracts` verifies.
+pub const RULES: &[MetricRule] = &[
+    MetricRule {
+        patterns: &[
+            MetricPattern::Prefix("tok_per_s"),
+            MetricPattern::Exact("req_per_s"),
+            MetricPattern::Prefix("speedup"),
+        ],
+        direction: Direction::Higher,
+        threshold: 0.15,
+        note: "",
+    },
+    MetricRule {
+        patterns: &[
+            MetricPattern::Exact("accuracy"),
+            MetricPattern::Exact("rouge_l"),
+            MetricPattern::Exact("bleu"),
+            MetricPattern::Exact("chrf"),
+            MetricPattern::Exact("judge"),
+            MetricPattern::Exact("hit_rate"),
+            MetricPattern::Exact("follow_cached_tok"),
+        ],
+        direction: Direction::Higher,
+        threshold: 0.15,
+        note: "",
+    },
+    MetricRule {
+        patterns: &[
+            MetricPattern::Exact("device_calls_per_token"),
+            MetricPattern::Exact("dispatches_per_token"),
+        ],
+        direction: Direction::Lower,
+        threshold: 0.15,
+        note: "",
+    },
+    MetricRule {
+        patterns: &[MetricPattern::Suffix("_ms_p99")],
+        direction: Direction::Lower,
+        threshold: 0.50,
+        note: "tails are noisy",
+    },
+    MetricRule {
+        patterns: &[
+            MetricPattern::Suffix("_ms_p50"),
+            MetricPattern::Suffix("_ms"),
+        ],
+        direction: Direction::Lower,
+        threshold: 0.25,
+        note: "",
+    },
+    MetricRule {
+        patterns: &[
+            MetricPattern::Suffix("_units"),
+            MetricPattern::Contains("sim_units"),
+        ],
+        direction: Direction::Lower,
+        threshold: 0.15,
+        note: "",
+    },
+];
+
+/// Direction + allowed fractional regression for a metric name: the
+/// first matching [`RULES`] row, else informational. τ never gates — it
+/// is a property of the method × workload, not a perf budget: policy
+/// changes move it on purpose.
+pub fn metric_rule(metric: &str) -> (Direction, f64) {
+    for rule in RULES {
+        if rule.patterns.iter().any(|p| p.matches(metric)) {
+            return (rule.direction, rule.threshold);
+        }
+    }
+    (Direction::Info, 0.0)
+}
+
+/// Canonical markdown rendering of [`RULES`] — what `mars bench diff
+/// --print-thresholds` emits and BENCHMARKS.md must contain verbatim
+/// (checked by `mars check contracts`).
+pub fn thresholds_markdown() -> String {
+    let mut out = String::from("| metric | direction | gate |\n|---|---|---|\n");
+    for rule in RULES {
+        let pats = rule
+            .patterns
+            .iter()
+            .map(|p| p.label())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let (dir, verb) = match rule.direction {
+            Direction::Higher => ("higher is better", "drop"),
+            Direction::Lower => ("lower is better", "rise"),
+            Direction::Info => ("informational", "move"),
+        };
+        let pct = (rule.threshold * 100.0).round() as usize;
+        let mut gate = format!("may not {verb} > {pct}%");
+        if !rule.note.is_empty() {
+            gate.push_str(&format!(" ({})", rule.note));
+        }
+        out.push_str(&format!("| {pats} | {dir} | {gate} |\n"));
+    }
+    out.push_str(
+        "| `tau`, `err`, anything unrecognized | informational | \
+         reported, never gates |\n",
+    );
+    out
 }
 
 /// Knobs of the gate.
@@ -448,6 +576,38 @@ mod tests {
         let rendered = r.render("old", "new");
         assert!(rendered.contains("| removed |"), "{rendered}");
         assert!(rendered.contains("| added |"), "{rendered}");
+    }
+
+    #[test]
+    fn metric_rules_keep_their_table_semantics() {
+        // first-match-wins ordering: p99 before the generic *_ms rows
+        assert_eq!(metric_rule("tok_per_s"), (Direction::Higher, 0.15));
+        assert_eq!(metric_rule("tok_per_s_mean"), (Direction::Higher, 0.15));
+        assert_eq!(metric_rule("speedup_vs_ar"), (Direction::Higher, 0.15));
+        assert_eq!(metric_rule("ttft_ms_p99"), (Direction::Lower, 0.50));
+        assert_eq!(metric_rule("ttft_ms_p50"), (Direction::Lower, 0.25));
+        assert_eq!(metric_rule("decode_ms"), (Direction::Lower, 0.25));
+        assert_eq!(metric_rule("sim_units"), (Direction::Lower, 0.15));
+        assert_eq!(
+            metric_rule("device_calls_per_token"),
+            (Direction::Lower, 0.15)
+        );
+        assert_eq!(metric_rule("tau"), (Direction::Info, 0.0));
+        assert_eq!(metric_rule("err"), (Direction::Info, 0.0));
+        assert_eq!(metric_rule("brand_new_metric"), (Direction::Info, 0.0));
+    }
+
+    #[test]
+    fn thresholds_markdown_renders_every_rule() {
+        let md = thresholds_markdown();
+        assert!(md.starts_with("| metric | direction | gate |\n|---|---|---|\n"));
+        // header (2 lines) + one row per rule + the informational row
+        assert_eq!(md.lines().count(), 2 + RULES.len() + 1);
+        assert!(md.contains("`tok_per_s*`"), "{md}");
+        assert!(md.contains("`*_ms_p99`"), "{md}");
+        assert!(md.contains("`*sim_units*`"), "{md}");
+        assert!(md.contains("may not rise > 50% (tails are noisy)"), "{md}");
+        assert!(md.contains("reported, never gates"), "{md}");
     }
 
     #[test]

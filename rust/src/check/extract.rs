@@ -1,0 +1,260 @@
+//! Lightweight line/region-level extraction from rust sources — no
+//! syn/proc-macro machinery. The mirrors the contract checker cares
+//! about are all simple, stylized surfaces (string-list consts, `f32`
+//! id consts, match arms returning string literals, `.get("...")` /
+//! `.set("...")` call sites), so plain text scanning is both sufficient
+//! and robust against formatting churn (`cargo fmt` output is stable).
+
+/// Cut the source at its `#[cfg(test)]` module: contract surfaces live
+/// in non-test code, and test fixtures would otherwise contribute
+/// false positives.
+pub fn strip_tests(src: &str) -> &str {
+    match src.find("#[cfg(test)]") {
+        Some(pos) => &src[..pos],
+        None => src,
+    }
+}
+
+/// The module doc block: every `//!` line, joined. (The wire-protocol
+/// doc in `coordinator/server.rs` is one of the checked surfaces.)
+pub fn module_doc(src: &str) -> String {
+    src.lines()
+        .map(str::trim_start)
+        .filter(|l| l.starts_with("//!"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Every string literal in `text`, in order. Handles `\"` escapes; the
+/// surfaces scanned here contain no raw strings outside tests.
+pub fn quoted(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c != '"' {
+            continue;
+        }
+        let mut lit = String::new();
+        loop {
+            match chars.next() {
+                None => return out, // unterminated: ignore the tail
+                Some('\\') => {
+                    // keep the escaped char verbatim; contract names
+                    // never contain escapes, so fidelity is moot
+                    if let Some(e) = chars.next() {
+                        lit.push(e);
+                    }
+                }
+                Some('"') => break,
+                Some(ch) => lit.push(ch),
+            }
+        }
+        out.push(lit);
+    }
+    out
+}
+
+/// The string items of `pub const NAME: &[&str] = &[ ... ];`.
+pub fn str_list_const(src: &str, name: &str) -> Option<Vec<String>> {
+    let start = src.find(&format!("const {name}:"))?;
+    let rest = &src[start..];
+    let end = rest.find("];")?;
+    Some(quoted(&rest[..end]))
+}
+
+/// `pub const <PREFIX><NAME>: f32 = <value>;` lines → (NAME, value).
+pub fn f32_consts(src: &str, prefix: &str) -> Vec<(String, f64)> {
+    let needle = format!("pub const {prefix}");
+    let mut out = Vec::new();
+    for line in src.lines() {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix(&needle) else { continue };
+        // rest is e.g. `STRICT: f32 = 0.0;`
+        let Some((name, tail)) = rest.split_once(':') else { continue };
+        let Some((_, val)) = tail.split_once('=') else { continue };
+        let val = val.trim().trim_end_matches(';').trim();
+        if let Ok(v) = val.parse::<f64>() {
+            out.push((name.trim().to_string(), v));
+        }
+    }
+    out
+}
+
+/// The body of `fn <name>(...) { ... }` — brace-matched from the first
+/// `{` after the signature, skipping braces inside string/char literals
+/// and `//` comments. A `pub fn <name>(` match wins over a plain
+/// `fn <name>(` one: trait declarations and private impls of the same
+/// name (e.g. `DraftSource::exec_name`) precede the public inherent
+/// method that actually carries the contract surface.
+pub fn fn_body<'a>(src: &'a str, name: &str) -> Option<&'a str> {
+    let sig = src
+        .find(&format!("pub fn {name}("))
+        .or_else(|| src.find(&format!("fn {name}(")))?;
+    let rest = &src[sig..];
+    let open = rest.find('{')?;
+    let body = &rest[open..];
+    let bytes = body.as_bytes();
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&body[..=i]);
+                }
+            }
+            b'"' => {
+                i += 1;
+                while i < bytes.len() && bytes[i] != b'"' {
+                    if bytes[i] == b'\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                // char literal ('{' or '\x') vs lifetime ('a): a literal
+                // closes within 4 bytes; lifetimes have no closing quote
+                if i + 2 < bytes.len() && bytes[i + 2] == b'\'' {
+                    i += 2;
+                } else if i + 3 < bytes.len()
+                    && bytes[i + 1] == b'\\'
+                    && bytes[i + 3] == b'\''
+                {
+                    i += 3;
+                }
+            }
+            b'/' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                    while i < bytes.len() && bytes[i] != b'\n' {
+                        i += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// String literals passed to any of `callees` — occurrences of
+/// `<callee>("<lit>"` anywhere in `src` (e.g. `run`, `has_exec`,
+/// `konst`, `.get`, `.set`).
+pub fn called_with_str(src: &str, callees: &[&str]) -> Vec<String> {
+    let mut out = Vec::new();
+    for callee in callees {
+        let needle = format!("{callee}(");
+        let mut at = 0usize;
+        while let Some(pos) = src[at..].find(&needle) {
+            let after = at + pos + needle.len();
+            // tolerate rustfmt line breaks between `(` and the literal
+            let arg = src[after..].trim_start();
+            if let Some(lit) = arg.strip_prefix('"') {
+                if let Some(end) = lit.find('"') {
+                    out.push(lit[..end].to_string());
+                }
+            }
+            at = after;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoted_extracts_in_order() {
+        assert_eq!(
+            quoted(r#"a "one" b "two" c"#),
+            vec!["one".to_string(), "two".to_string()]
+        );
+        assert_eq!(quoted(r#""es\"caped""#), vec!["es\"caped".to_string()]);
+        assert_eq!(quoted("none here"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn str_list_const_reads_the_items() {
+        let src = r#"
+            pub const NAMES: &[&str] = &[
+                "pos", "out_len",
+                "seed",
+            ];
+            pub const OTHER: &[&str] = &["x"];
+        "#;
+        assert_eq!(
+            str_list_const(src, "NAMES").unwrap(),
+            vec!["pos", "out_len", "seed"]
+        );
+        assert_eq!(str_list_const(src, "OTHER").unwrap(), vec!["x"]);
+        assert!(str_list_const(src, "MISSING").is_none());
+    }
+
+    #[test]
+    fn f32_consts_parse_name_and_value() {
+        let src = "
+            pub const POLICY_ID_STRICT: f32 = 0.0;
+            pub const POLICY_ID_MARS: f32 = 1.0;
+            const UNRELATED: usize = 4;
+        ";
+        let got = f32_consts(src, "POLICY_ID_");
+        assert_eq!(
+            got,
+            vec![("STRICT".to_string(), 0.0), ("MARS".to_string(), 1.0)]
+        );
+    }
+
+    #[test]
+    fn fn_body_brace_matches() {
+        let src = r#"
+            fn outer() { inner(); }
+            fn target(x: usize) -> &'static str {
+                if x > 0 { "deep" } else { "other" }
+            }
+        "#;
+        let body = fn_body(src, "target").unwrap();
+        assert!(body.contains("deep") && body.contains("other"));
+        assert!(!body.contains("inner"));
+        assert!(fn_body(src, "missing").is_none());
+    }
+
+    #[test]
+    fn fn_body_requires_exact_name() {
+        let src = "
+            fn multi_exec_name() { a(\"multi\"); }
+            fn exec_name() { b(\"solo\"); }
+        ";
+        let body = fn_body(src, "exec_name").unwrap();
+        assert!(body.contains("solo") && !body.contains("multi"));
+    }
+
+    #[test]
+    fn called_with_str_finds_call_sites() {
+        let src = r#"
+            self.run("prefill", None)?;
+            rt.has_exec("batch_join");
+            let x = other("not_this");
+        "#;
+        let mut got = called_with_str(src, &["run", "has_exec"]);
+        got.sort();
+        assert_eq!(got, vec!["batch_join", "prefill"]);
+    }
+
+    #[test]
+    fn strip_tests_cuts_the_module() {
+        let src = "real();\n#[cfg(test)]\nmod tests { fake(); }";
+        assert!(!strip_tests(src).contains("fake"));
+    }
+
+    #[test]
+    fn module_doc_collects_bang_lines() {
+        let src = "//! line one\n//! `\"field\"` two\nuse std::fmt;\n";
+        let doc = module_doc(src);
+        assert!(doc.contains("line one") && doc.contains("\"field\""));
+        assert!(!doc.contains("std::fmt"));
+    }
+}

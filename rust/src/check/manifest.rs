@@ -1,0 +1,140 @@
+//! Parsed form of `contracts.json` — the machine-readable contract
+//! manifest exported by `python/compile/state_spec.py::contracts_json`
+//! (via `python -m compile.contracts` or as a side effect of
+//! `compile.aot`). See DESIGN.md §11.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+/// One executable of the registry (`compile/exec_registry.py`).
+#[derive(Debug, Clone)]
+pub struct ExecEntry {
+    /// Lowered without a leading flat-state argument (`prefill`).
+    pub stateless: bool,
+    /// Leading state is the `BATCH_MAX`-stacked vector (§9.5).
+    pub batched: bool,
+    /// Weight-family parameter pytrees appended after state+extras.
+    pub weight_families: Vec<String>,
+}
+
+/// The whole contract manifest.
+#[derive(Debug, Clone)]
+pub struct ContractManifest {
+    /// Scalar slot name → index (`state_spec.SCALARS`).
+    pub scalars: BTreeMap<String, usize>,
+    /// Prefill cfg-vector name → index (`state_spec.CFG`).
+    pub cfg: BTreeMap<String, usize>,
+    /// Layout constants (`pack_max`, `batch_max`, `k_max`, `n_cfg`, ...).
+    pub consts: BTreeMap<String, usize>,
+    /// Verification-policy name → device id (`POLICY_*`).
+    pub policies: BTreeMap<String, f64>,
+    /// Exec-name registry with per-executable flags.
+    pub executables: BTreeMap<String, ExecEntry>,
+    /// The embedded full layout document (consumable by
+    /// [`crate::runtime::state::Layout::from_json`]).
+    pub layout_doc: Value,
+    /// Manifest self-hash (python-side, sha256[:16] of the document).
+    pub hash: String,
+}
+
+impl ContractManifest {
+    /// Parse the manifest from its JSON text.
+    pub fn parse(text: &str) -> Result<ContractManifest> {
+        let doc = Value::parse(text)
+            .map_err(|e| anyhow!("contracts.json: bad json: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Parse the manifest from a parsed JSON document.
+    pub fn from_json(doc: &Value) -> Result<ContractManifest> {
+        let schema = doc
+            .get("schema")
+            .and_then(|s| s.as_usize())
+            .context("contracts.json: missing schema")?;
+        if schema != 1 {
+            anyhow::bail!("contracts.json: unsupported schema {schema}");
+        }
+        let layout_doc = doc
+            .get("layout")
+            .context("contracts.json: missing layout")?
+            .clone();
+        let index_map = |v: &Value, key: &str| -> Result<BTreeMap<String, usize>> {
+            let obj = v
+                .get(key)
+                .and_then(|x| x.as_obj())
+                .with_context(|| format!("contracts.json: layout.{key}"))?;
+            obj.iter()
+                .map(|(k, x)| {
+                    x.as_usize()
+                        .map(|n| (k.clone(), n))
+                        .with_context(|| format!("layout.{key}.{k}"))
+                })
+                .collect()
+        };
+        let mut policies = BTreeMap::new();
+        for (k, v) in doc
+            .get("policies")
+            .and_then(|p| p.as_obj())
+            .context("contracts.json: missing policies")?
+        {
+            policies.insert(
+                k.clone(),
+                v.as_f64().with_context(|| format!("policies.{k}"))?,
+            );
+        }
+        let mut executables = BTreeMap::new();
+        for (name, e) in doc
+            .get("executables")
+            .and_then(|x| x.as_obj())
+            .context("contracts.json: missing executables")?
+        {
+            let flag = |key: &str| -> Result<bool> {
+                e.get(key)
+                    .and_then(|b| b.as_bool())
+                    .with_context(|| format!("executables.{name}.{key}"))
+            };
+            let fams = e
+                .get("weight_families")
+                .and_then(|f| f.as_arr())
+                .with_context(|| {
+                    format!("executables.{name}.weight_families")
+                })?
+                .iter()
+                .map(|f| f.as_str().unwrap_or("").to_string())
+                .collect();
+            executables.insert(
+                name.clone(),
+                ExecEntry {
+                    stateless: flag("stateless")?,
+                    batched: flag("batched")?,
+                    weight_families: fams,
+                },
+            );
+        }
+        Ok(ContractManifest {
+            scalars: index_map(&layout_doc, "scalars")?,
+            cfg: index_map(&layout_doc, "cfg")?,
+            consts: index_map(&layout_doc, "consts")?,
+            policies,
+            executables,
+            layout_doc,
+            hash: doc
+                .get("hash")
+                .and_then(|h| h.as_str())
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<ContractManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}

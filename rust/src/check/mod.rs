@@ -1,0 +1,595 @@
+//! Cross-layer contract checker (`mars check contracts`, DESIGN.md §11).
+//!
+//! The stack has three hand-mirrored contract surfaces: the python↔rust
+//! flat-state ABI (`python/compile/state_spec.py` ↔
+//! `runtime/state.rs` / `verify/mod.rs` / the exec-name tables in
+//! `spec/mod.rs`), the wire protocol (`coordinator/request.rs` fields ↔
+//! the `coordinator/server.rs` protocol doc), and the bench gate
+//! (`bench/diff.rs` threshold table ↔ BENCHMARKS.md). The layout hash
+//! guards slot *indices* only; everything else used to be convention.
+//!
+//! This module machine-checks all of it: the python side exports a
+//! contract manifest (`artifacts/contracts.json`, see
+//! `compile/contracts.py`), and [`run_all`] diffs that manifest against
+//! the rust sources using lightweight text extraction
+//! ([`extract`] — no proc-macro machinery). Every drift is reported
+//! with the offending key named; `mars check contracts` exits nonzero
+//! on any drift. A committed manifest fixture
+//! (`rust/tests/fixtures/contracts.json`, freshness-pinned by the
+//! python suite) lets the checker and the integration tests run
+//! without a python toolchain.
+
+pub mod extract;
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use manifest::ContractManifest;
+
+/// One detected contract drift: which surface, which key, and what
+/// exactly disagrees.
+#[derive(Debug, Clone)]
+pub struct Drift {
+    /// The checked surface (e.g. `"state-scalars"`, `"wire-fields"`).
+    pub surface: &'static str,
+    /// The offending key (scalar/policy/exec/field/const name).
+    pub key: String,
+    /// Human-readable disagreement.
+    pub detail: String,
+}
+
+impl Drift {
+    fn new(surface: &'static str, key: &str, detail: String) -> Drift {
+        Drift { surface, key: key.to_string(), detail }
+    }
+}
+
+/// Outcome of a full checker run.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// Every drift found, in surface order.
+    pub drifts: Vec<Drift>,
+    /// Surfaces that ran (for the summary line).
+    pub surfaces: Vec<&'static str>,
+}
+
+impl CheckReport {
+    /// Did every surface hold?
+    pub fn ok(&self) -> bool {
+        self.drifts.is_empty()
+    }
+
+    /// Render the report: one line per drift, then a summary.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for d in &self.drifts {
+            let _ = writeln!(
+                out,
+                "DRIFT [{}] {}: {}",
+                d.surface, d.key, d.detail
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{} surfaces checked, {} drift(s)",
+            self.surfaces.len(),
+            self.drifts.len()
+        );
+        out
+    }
+}
+
+/// The rust sources the checker extracts from, loaded as text.
+pub struct Sources {
+    /// `runtime/state.rs` — `REQUIRED_SCALARS`, `RESUME_RESET_SCALARS`.
+    pub state: String,
+    /// `verify/mod.rs` — the `POLICY_ID_*` constants.
+    pub verify: String,
+    /// `spec/mod.rs` — the exec-name tables.
+    pub spec: String,
+    /// `runtime/mod.rs` — pinned exec names, `cfg_vector`, consts.
+    pub runtime: String,
+    /// `engine/mod.rs` — the `pack_max` clamp, batch exec dispatch.
+    pub engine: String,
+    /// `coordinator/replica.rs` — server-side exec/const references.
+    pub replica: String,
+    /// `coordinator/request.rs` — the wire field codec.
+    pub request: String,
+    /// `coordinator/server.rs` — the wire protocol doc.
+    pub server: String,
+}
+
+impl Sources {
+    /// Load every checked source under `src_root` (`rust/src`).
+    pub fn load(src_root: &Path) -> Result<Sources> {
+        let read = |rel: &str| -> Result<String> {
+            let path = src_root.join(rel);
+            std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))
+        };
+        Ok(Sources {
+            state: read("runtime/state.rs")?,
+            verify: read("verify/mod.rs")?,
+            spec: read("spec/mod.rs")?,
+            runtime: read("runtime/mod.rs")?,
+            engine: read("engine/mod.rs")?,
+            replica: read("coordinator/replica.rs")?,
+            request: read("coordinator/request.rs")?,
+            server: read("coordinator/server.rs")?,
+        })
+    }
+}
+
+/// Layout consts the rust side reads by name — all must be exported.
+const REQUIRED_CONSTS: &[&str] = &[
+    "pack_max", "batch_max", "k_max", "n_cfg", "probe_max", "probe_w",
+    "p_max", "out_max", "s_max", "vocab",
+];
+
+/// `state.rs` scalar-name lists vs the manifest's scalar table.
+pub fn check_state_scalars(
+    m: &ContractManifest,
+    state_src: &str,
+) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    for list in ["REQUIRED_SCALARS", "RESUME_RESET_SCALARS"] {
+        match extract::str_list_const(state_src, list) {
+            None => drifts.push(Drift::new(
+                "state-scalars",
+                list,
+                "const not found in runtime/state.rs".into(),
+            )),
+            Some(names) => {
+                for name in names {
+                    if !m.scalars.contains_key(&name) {
+                        drifts.push(Drift::new(
+                            "state-scalars",
+                            &name,
+                            format!(
+                                "{list} lists '{name}' but the manifest \
+                                 has no such scalar slot"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    drifts
+}
+
+/// Cfg-table invariants: every cfg slot has a same-named scalar twin
+/// (the device prefill and `restamp_resumed` copy cfg→scalar by name),
+/// cfg indices fit `n_cfg`, and every name `encode_cfg` writes or reads
+/// is a known cfg slot or const.
+pub fn check_cfg(m: &ContractManifest, runtime_src: &str) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    for (name, &idx) in &m.cfg {
+        if !m.scalars.contains_key(name) {
+            drifts.push(Drift::new(
+                "cfg-slots",
+                name,
+                format!(
+                    "cfg slot '{name}' has no scalar twin — \
+                     restamp_resumed would misaddress it"
+                ),
+            ));
+        }
+        if let Some(&n_cfg) = m.consts.get("n_cfg") {
+            if idx >= n_cfg {
+                drifts.push(Drift::new(
+                    "cfg-slots",
+                    name,
+                    format!("cfg index {idx} >= n_cfg {n_cfg}"),
+                ));
+            }
+        }
+    }
+    match extract::fn_body(extract::strip_tests(runtime_src), "encode_cfg") {
+        None => drifts.push(Drift::new(
+            "cfg-slots",
+            "encode_cfg",
+            "fn encode_cfg not found in runtime/mod.rs".into(),
+        )),
+        Some(body) => {
+            for name in
+                extract::called_with_str(body, &["c", "konst", ".get"])
+            {
+                if !m.cfg.contains_key(&name)
+                    && !m.consts.contains_key(&name)
+                {
+                    drifts.push(Drift::new(
+                        "cfg-slots",
+                        &name,
+                        format!(
+                            "encode_cfg references '{name}' — neither a \
+                             manifest cfg slot nor a const"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    drifts
+}
+
+/// `POLICY_ID_*` constants vs the manifest's policy-id table, both
+/// directions.
+pub fn check_policies(
+    m: &ContractManifest,
+    verify_src: &str,
+) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    let consts =
+        extract::f32_consts(extract::strip_tests(verify_src), "POLICY_ID_");
+    if consts.is_empty() {
+        drifts.push(Drift::new(
+            "policy-ids",
+            "POLICY_ID_*",
+            "no POLICY_ID_* constants found in verify/mod.rs".into(),
+        ));
+        return drifts;
+    }
+    for (name, value) in &consts {
+        let key = name.to_lowercase();
+        match m.policies.get(&key) {
+            None => drifts.push(Drift::new(
+                "policy-ids",
+                &key,
+                format!(
+                    "rust defines POLICY_ID_{name} but the manifest has \
+                     no policy '{key}'"
+                ),
+            )),
+            Some(&want) if want != *value => drifts.push(Drift::new(
+                "policy-ids",
+                &key,
+                format!("rust id {value} != manifest id {want}"),
+            )),
+            Some(_) => {}
+        }
+    }
+    for key in m.policies.keys() {
+        if !consts.iter().any(|(n, _)| n.to_lowercase() == *key) {
+            drifts.push(Drift::new(
+                "policy-ids",
+                key,
+                format!(
+                    "manifest policy '{key}' has no POLICY_ID_\
+                     {} constant in verify/mod.rs",
+                    key.to_uppercase()
+                ),
+            ));
+        }
+    }
+    drifts
+}
+
+/// Layout consts: the required set is exported, and every const the
+/// rust sources read by name exists — including the engine's `pack_max`
+/// round-packing clamp, which must both exist and be referenced.
+pub fn check_consts(
+    m: &ContractManifest,
+    sources: &[(&str, &str)],
+) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    for name in REQUIRED_CONSTS {
+        if !m.consts.contains_key(*name) {
+            drifts.push(Drift::new(
+                "layout-consts",
+                name,
+                "required const missing from the manifest".into(),
+            ));
+        }
+    }
+    let mut engine_refs_pack_max = false;
+    for (label, src) in sources {
+        let refs = extract::called_with_str(
+            extract::strip_tests(src),
+            &["konst", "konst_opt", "consts.get"],
+        );
+        for name in refs {
+            if *label == "engine" && name == "pack_max" {
+                engine_refs_pack_max = true;
+            }
+            if !m.consts.contains_key(&name) {
+                drifts.push(Drift::new(
+                    "layout-consts",
+                    &name,
+                    format!(
+                        "{label} reads const '{name}' — not in the \
+                         manifest"
+                    ),
+                ));
+            }
+        }
+    }
+    if !engine_refs_pack_max
+        && sources.iter().any(|(label, _)| *label == "engine")
+    {
+        drifts.push(Drift::new(
+            "layout-consts",
+            "pack_max",
+            "engine no longer clamps rounds_per_call to the layout's \
+             pack_max const"
+                .into(),
+        ));
+    }
+    drifts
+}
+
+/// Exec-name registry, both directions: every name the rust sources
+/// dispatch is in the manifest (soundness — a renamed python program
+/// would orphan the rust caller), and every manifest executable is
+/// referenced somewhere in the rust sources (completeness — a new
+/// program nobody dispatches is dead weight or a missed hook-up).
+pub fn check_exec_names(
+    m: &ContractManifest,
+    spec_src: &str,
+    other_srcs: &[(&str, &str)],
+) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    let mut referenced: Vec<(String, String)> = Vec::new(); // (name, site)
+    let spec_nontest = extract::strip_tests(spec_src);
+    for fn_name in [
+        "exec_name",
+        "multi_exec_name",
+        "batch_exec_name",
+        "batch_multi_exec_name",
+    ] {
+        match extract::fn_body(spec_nontest, fn_name) {
+            None => drifts.push(Drift::new(
+                "exec-names",
+                fn_name,
+                "fn not found in spec/mod.rs".into(),
+            )),
+            Some(body) => {
+                for lit in extract::quoted(body) {
+                    referenced.push((lit, format!("spec::{fn_name}")));
+                }
+            }
+        }
+    }
+    for (label, src) in other_srcs {
+        for lit in extract::called_with_str(
+            extract::strip_tests(src),
+            &["run", "has_exec"],
+        ) {
+            referenced.push((lit, (*label).to_string()));
+        }
+    }
+    for (name, site) in &referenced {
+        if !m.executables.contains_key(name) {
+            drifts.push(Drift::new(
+                "exec-names",
+                name,
+                format!(
+                    "{site} dispatches '{name}' — not in the manifest's \
+                     executable registry"
+                ),
+            ));
+        }
+    }
+    // completeness: every registered executable must appear as a quoted
+    // literal somewhere in the scanned non-test sources
+    let mut all_literals: std::collections::BTreeSet<String> =
+        referenced.into_iter().map(|(n, _)| n).collect();
+    all_literals.extend(extract::quoted(spec_nontest));
+    for (_, src) in other_srcs {
+        all_literals.extend(extract::quoted(extract::strip_tests(src)));
+    }
+    for name in m.executables.keys() {
+        if !all_literals.contains(name) {
+            drifts.push(Drift::new(
+                "exec-names",
+                name,
+                format!(
+                    "manifest registers '{name}' but no scanned rust \
+                     source references it"
+                ),
+            ));
+        }
+    }
+    drifts
+}
+
+/// Wire protocol: every field name `request.rs` reads or writes must be
+/// documented (quoted) in the `server.rs` module doc.
+pub fn check_wire_fields(
+    request_src: &str,
+    server_src: &str,
+) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    let doc = extract::module_doc(server_src);
+    if doc.is_empty() {
+        drifts.push(Drift::new(
+            "wire-fields",
+            "server.rs",
+            "no module doc (//!) found to check against".into(),
+        ));
+        return drifts;
+    }
+    let mut fields: Vec<String> = extract::called_with_str(
+        extract::strip_tests(request_src),
+        &[".set", ".get", "fget"],
+    );
+    fields.sort();
+    fields.dedup();
+    for field in fields {
+        if !doc.contains(&format!("\"{field}\"")) {
+            drifts.push(Drift::new(
+                "wire-fields",
+                &field,
+                format!(
+                    "request.rs carries wire field \"{field}\" but the \
+                     server.rs protocol doc never mentions it"
+                ),
+            ));
+        }
+    }
+    drifts
+}
+
+/// BENCHMARKS.md must contain the canonical threshold table verbatim
+/// (`mars bench diff --print-thresholds` regenerates it).
+pub fn check_thresholds(benchmarks_md: &str) -> Vec<Drift> {
+    let canonical = crate::bench::diff::thresholds_markdown();
+    if benchmarks_md.contains(&canonical) {
+        Vec::new()
+    } else {
+        vec![Drift::new(
+            "bench-thresholds",
+            "BENCHMARKS.md",
+            "the regression-threshold table drifted from bench/diff.rs — \
+             re-embed `mars bench diff --print-thresholds` output"
+                .into(),
+        )]
+    }
+}
+
+/// Run every surface. `benchmarks_md` is `None` when the file could not
+/// be located (reported as a drift — the gate must not silently skip).
+pub fn run_all(
+    m: &ContractManifest,
+    s: &Sources,
+    benchmarks_md: Option<&str>,
+) -> CheckReport {
+    let mut report = CheckReport::default();
+    let mut push = |surface: &'static str, drifts: Vec<Drift>| {
+        report.surfaces.push(surface);
+        report.drifts.extend(drifts);
+    };
+    push("state-scalars", check_state_scalars(m, &s.state));
+    push("cfg-slots", check_cfg(m, &s.runtime));
+    push("policy-ids", check_policies(m, &s.verify));
+    push(
+        "layout-consts",
+        check_consts(
+            m,
+            &[
+                ("runtime", s.runtime.as_str()),
+                ("engine", s.engine.as_str()),
+                ("state", s.state.as_str()),
+                ("replica", s.replica.as_str()),
+            ],
+        ),
+    );
+    push(
+        "exec-names",
+        check_exec_names(
+            m,
+            &s.spec,
+            &[
+                ("runtime", s.runtime.as_str()),
+                ("engine", s.engine.as_str()),
+                ("replica", s.replica.as_str()),
+            ],
+        ),
+    );
+    push("wire-fields", check_wire_fields(&s.request, &s.server));
+    push(
+        "bench-thresholds",
+        match benchmarks_md {
+            Some(text) => check_thresholds(text),
+            None => vec![Drift::new(
+                "bench-thresholds",
+                "BENCHMARKS.md",
+                "file not found — cannot verify the threshold table"
+                    .into(),
+            )],
+        },
+    );
+    report
+}
+
+/// Resolved checker inputs (for the CLI's provenance line).
+pub struct CheckPaths {
+    /// The manifest actually loaded.
+    pub manifest: PathBuf,
+    /// The `rust/src` root the sources were read from.
+    pub src_root: PathBuf,
+    /// BENCHMARKS.md, when found.
+    pub benchmarks: Option<PathBuf>,
+}
+
+/// Locate checker inputs relative to `repo_root`: an explicit
+/// `--manifest` wins, then a freshly exported `<artifacts>/
+/// contracts.json`, then the committed fixture
+/// `rust/tests/fixtures/contracts.json` (so the gate runs on a bare
+/// checkout). The source root tries `rust/src` then `src` (running
+/// from the repo root vs from `rust/`).
+pub fn resolve_paths(
+    repo_root: &Path,
+    manifest_flag: Option<&str>,
+    src_flag: Option<&str>,
+    artifact_dir: &Path,
+) -> Result<CheckPaths> {
+    let manifest = match manifest_flag {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let exported = artifact_dir.join("contracts.json");
+            let fixtures = [
+                repo_root.join("rust/tests/fixtures/contracts.json"),
+                repo_root.join("tests/fixtures/contracts.json"),
+            ];
+            if exported.is_file() {
+                exported
+            } else {
+                fixtures
+                    .iter()
+                    .find(|p| p.is_file())
+                    .cloned()
+                    .with_context(|| {
+                        format!(
+                            "no contracts.json: tried {} and the \
+                             committed fixtures (export one with \
+                             `python -m compile.contracts`)",
+                            exported.display()
+                        )
+                    })?
+            }
+        }
+    };
+    let src_root = match src_flag {
+        Some(p) => PathBuf::from(p),
+        None => [repo_root.join("rust/src"), repo_root.join("src")]
+            .into_iter()
+            .find(|p| p.is_dir())
+            .context("no rust source root (try --src DIR)")?,
+    };
+    let benchmarks = [
+        repo_root.join("BENCHMARKS.md"),
+        repo_root.join("../BENCHMARKS.md"),
+    ]
+    .into_iter()
+    .find(|p| p.is_file());
+    Ok(CheckPaths { manifest, src_root, benchmarks })
+}
+
+/// CLI entry: resolve paths, load everything, run, render. Returns the
+/// report (the caller decides the exit code) plus the rendering.
+pub fn run_cli(paths: &CheckPaths) -> Result<(CheckReport, String)> {
+    let m = ContractManifest::load(&paths.manifest)?;
+    let s = Sources::load(&paths.src_root)?;
+    let bench_text = match &paths.benchmarks {
+        Some(p) => Some(std::fs::read_to_string(p).with_context(|| {
+            format!("reading {}", p.display())
+        })?),
+        None => None,
+    };
+    let report = run_all(&m, &s, bench_text.as_deref());
+    let mut rendered = format!(
+        "manifest: {} (hash {})\nsources:  {}\n",
+        paths.manifest.display(),
+        m.hash,
+        paths.src_root.display(),
+    );
+    rendered.push_str(&report.render());
+    Ok((report, rendered))
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,241 @@
+//! Perturbation tests: each hand-mirrored surface gets a fixture with
+//! one injected drift, and the checker must fail naming the offending
+//! key. The clean-tree integration test lives in
+//! `rust/tests/contracts.rs`.
+
+use super::*;
+
+/// A minimal but well-formed manifest covering every surface.
+fn mini_manifest() -> ContractManifest {
+    let text = r#"{
+        "schema": 1,
+        "hash": "feedfacefeedface",
+        "layout": {
+            "scalars": {"pos": 0, "out_len": 1, "temp": 2, "kdraft": 3},
+            "cfg": {"temp": 0, "kdraft": 1},
+            "consts": {
+                "pack_max": 4, "batch_max": 8, "k_max": 8, "n_cfg": 2,
+                "probe_max": 4, "probe_w": 8, "p_max": 64, "out_max": 64,
+                "s_max": 128, "vocab": 100
+            }
+        },
+        "policies": {"strict": 0.0, "mars": 1.0},
+        "executables": {
+            "ar_step": {"stateless": false, "batched": false,
+                        "weight_families": ["target"]},
+            "sps_round": {"stateless": false, "batched": false,
+                          "weight_families": ["target", "sps"]}
+        }
+    }"#;
+    ContractManifest::parse(text).unwrap()
+}
+
+const CLEAN_STATE: &str = r#"
+    pub const REQUIRED_SCALARS: &[&str] = &["pos", "out_len"];
+    pub const RESUME_RESET_SCALARS: &[&str] = &["out_len"];
+"#;
+
+const CLEAN_VERIFY: &str = "
+    pub const POLICY_ID_STRICT: f32 = 0.0;
+    pub const POLICY_ID_MARS: f32 = 1.0;
+";
+
+const CLEAN_SPEC: &str = r#"
+    fn exec_name(&self) -> &'static str {
+        match self { M::Ar => "ar_step", M::Sps => "sps_round" }
+    }
+    fn multi_exec_name(&self) -> &'static str { "ar_step" }
+    fn batch_exec_name(&self) -> &'static str { "ar_step" }
+    fn batch_multi_exec_name(&self) -> &'static str { "sps_round" }
+"#;
+
+const CLEAN_RUNTIME: &str = r#"
+    pub fn encode_cfg(lay: &Layout) -> Vec<f32> {
+        c("temp");
+        c("kdraft");
+        let _ = lay.cfg.get("kdraft");
+        out
+    }
+    fn kick(&self) { self.run("ar_step").unwrap(); }
+"#;
+
+const CLEAN_ENGINE: &str = r#"
+    let cap = rt.layout().consts.get("pack_max").copied().unwrap_or(1);
+    let _ = rt.has_exec("sps_round");
+"#;
+
+const CLEAN_REQUEST: &str = r#"
+    let id = v.get("id");
+    o.set("tau", Value::Num(1.0));
+"#;
+
+const CLEAN_SERVER: &str = r#"//! Protocol: requests carry "id" and
+//! responses carry "tau" per line.
+fn serve() {}
+"#;
+
+fn mini_sources() -> Sources {
+    Sources {
+        state: CLEAN_STATE.into(),
+        verify: CLEAN_VERIFY.into(),
+        spec: CLEAN_SPEC.into(),
+        runtime: CLEAN_RUNTIME.into(),
+        engine: CLEAN_ENGINE.into(),
+        replica: String::new(),
+        request: CLEAN_REQUEST.into(),
+        server: CLEAN_SERVER.into(),
+    }
+}
+
+fn keys(drifts: &[Drift]) -> Vec<&str> {
+    drifts.iter().map(|d| d.key.as_str()).collect()
+}
+
+#[test]
+fn clean_fixtures_pass_every_surface() {
+    let m = mini_manifest();
+    let s = mini_sources();
+    let report = run_all(
+        &m,
+        &s,
+        Some(&crate::bench::diff::thresholds_markdown()),
+    );
+    assert!(report.ok(), "unexpected drifts:\n{}", report.render());
+    assert_eq!(report.surfaces.len(), 7);
+}
+
+#[test]
+fn perturbed_scalar_slot_names_the_slot() {
+    // rust grows a scalar the manifest doesn't have (a python-side
+    // rename would look identical from this end)
+    let m = mini_manifest();
+    let state = CLEAN_STATE
+        .replace(r#""pos", "out_len""#, r#""pos", "out_len", "acc_ema""#);
+    let drifts = check_state_scalars(&m, &state);
+    assert!(keys(&drifts).contains(&"acc_ema"), "{drifts:?}");
+}
+
+#[test]
+fn perturbed_policy_id_names_the_policy() {
+    let m = mini_manifest();
+    // value drift
+    let verify =
+        CLEAN_VERIFY.replace("MARS: f32 = 1.0", "MARS: f32 = 5.0");
+    let drifts = check_policies(&m, &verify);
+    assert!(keys(&drifts).contains(&"mars"), "{drifts:?}");
+    // missing-constant drift
+    let verify = CLEAN_VERIFY.replace(
+        "pub const POLICY_ID_MARS: f32 = 1.0;",
+        "",
+    );
+    let drifts = check_policies(&m, &verify);
+    assert!(keys(&drifts).contains(&"mars"), "{drifts:?}");
+}
+
+#[test]
+fn perturbed_exec_name_names_the_exec() {
+    let m = mini_manifest();
+    // rust dispatches a name the registry doesn't know (soundness)
+    let spec = CLEAN_SPEC.replace("\"sps_round\" }", "\"sps_round_v2\" }");
+    let drifts = check_exec_names(
+        &m,
+        &spec,
+        &[("runtime", CLEAN_RUNTIME), ("engine", CLEAN_ENGINE)],
+    );
+    assert!(keys(&drifts).contains(&"sps_round_v2"), "{drifts:?}");
+}
+
+#[test]
+fn unreferenced_exec_names_the_exec() {
+    // the registry grows a program nothing in rust dispatches
+    // (completeness)
+    let mut m = mini_manifest();
+    m.executables.insert(
+        "ghost_round".into(),
+        manifest::ExecEntry {
+            stateless: false,
+            batched: false,
+            weight_families: vec!["target".into()],
+        },
+    );
+    let drifts = check_exec_names(
+        &m,
+        CLEAN_SPEC,
+        &[("runtime", CLEAN_RUNTIME), ("engine", CLEAN_ENGINE)],
+    );
+    assert!(keys(&drifts).contains(&"ghost_round"), "{drifts:?}");
+}
+
+#[test]
+fn perturbed_wire_field_names_the_field() {
+    // request.rs reads a field the server protocol doc never mentions
+    let request = format!(
+        "{CLEAN_REQUEST}\n    let extra = v.get(\"cached_tokens\");\n"
+    );
+    let drifts = check_wire_fields(&request, CLEAN_SERVER);
+    assert!(keys(&drifts).contains(&"cached_tokens"), "{drifts:?}");
+    // and the doc fix clears it
+    let server = CLEAN_SERVER
+        .replace("\"tau\" per line.", "\"tau\", \"cached_tokens\".");
+    assert!(check_wire_fields(&request, &server).is_empty());
+}
+
+#[test]
+fn cfg_slot_without_scalar_twin_is_named() {
+    let mut m = mini_manifest();
+    m.cfg.insert("orphan_cfg".into(), 1);
+    let drifts = check_cfg(&m, CLEAN_RUNTIME);
+    assert!(keys(&drifts).contains(&"orphan_cfg"), "{drifts:?}");
+}
+
+#[test]
+fn cfg_vector_unknown_name_is_named() {
+    let m = mini_manifest();
+    let runtime = CLEAN_RUNTIME.replace("c(\"kdraft\")", "c(\"krafted\")");
+    let drifts = check_cfg(&m, &runtime);
+    assert!(keys(&drifts).contains(&"krafted"), "{drifts:?}");
+}
+
+#[test]
+fn missing_required_const_is_named() {
+    let mut m = mini_manifest();
+    m.consts.remove("pack_max");
+    let drifts = check_consts(&m, &[("engine", CLEAN_ENGINE)]);
+    assert!(keys(&drifts).contains(&"pack_max"), "{drifts:?}");
+}
+
+#[test]
+fn engine_without_pack_clamp_is_named() {
+    let m = mini_manifest();
+    let engine = CLEAN_ENGINE.replace("pack_max", "hack_max");
+    let drifts = check_consts(&m, &[("engine", &engine)]);
+    // both the unknown-const read and the missing-clamp checks fire
+    let k = keys(&drifts);
+    assert!(k.contains(&"hack_max") && k.contains(&"pack_max"), "{drifts:?}");
+}
+
+#[test]
+fn thresholds_drift_is_reported() {
+    assert_eq!(check_thresholds("no table here").len(), 1);
+    let doc = format!(
+        "intro\n\n{}\ntail",
+        crate::bench::diff::thresholds_markdown()
+    );
+    assert!(check_thresholds(&doc).is_empty());
+}
+
+#[test]
+fn report_renders_keys_and_summary() {
+    let report = CheckReport {
+        drifts: vec![Drift::new(
+            "policy-ids",
+            "mars",
+            "rust id 5 != manifest id 1".into(),
+        )],
+        surfaces: vec!["policy-ids"],
+    };
+    assert!(!report.ok());
+    let text = report.render();
+    assert!(text.contains("DRIFT [policy-ids] mars"));
+    assert!(text.contains("1 surfaces checked, 1 drift(s)"));
+}

@@ -30,6 +30,12 @@
 //! shrinks the pack near the generation budget; in the batched loop the
 //! pack budget is *per-lane* (`*_batch_multi`).
 
+// Serving-layer lint wall (DESIGN.md §11): a panic here takes the whole
+// connection or replica down, so unwrap/expect are denied outright in
+// non-test code — recover or propagate instead.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
+
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -105,7 +111,8 @@ impl EngineReplica {
         let sd = shutdown.clone();
         let act = active.clone();
         let queued = queued_hint.clone();
-        let handle = std::thread::Builder::new()
+        let ready_err = ready.clone();
+        let spawned = std::thread::Builder::new()
             .name(format!("mars-replica-{id}"))
             .spawn(move || {
                 let rt = match Runtime::new(&cfg.artifact_dir) {
@@ -124,11 +131,20 @@ impl EngineReplica {
                     queued: &queued,
                 };
                 replica_loop(id, &rt, &cfg, &work, &metrics, &ctl);
-            })
-            .expect("spawn replica thread");
+            });
+        let handle = match spawned {
+            Ok(h) => Some(h),
+            Err(e) => {
+                // no thread, no runtime: report through the ready channel
+                // (Router::start bails) instead of panicking the caller
+                let _ = ready_err
+                    .send(Err(format!("spawn replica thread: {e}")));
+                None
+            }
+        };
         EngineReplica {
             id,
-            handle: Some(handle),
+            handle,
             shutdown,
             active,
             queued_hint,
@@ -572,10 +588,13 @@ fn batched_loop(
         );
         let mut admitted = 0usize;
         for &idx in &plan {
-            // `plan` is ascending, so each removal shifts the rest left
-            let mut item = pending
-                .remove(idx - admitted)
-                .expect("planned index in range");
+            // `plan` is ascending, so each removal shifts the rest left;
+            // a planner index past the queue would be a planner bug —
+            // skip it rather than panic the replica thread mid-batch
+            let Some(mut item) = pending.remove(idx - admitted) else {
+                debug_assert!(false, "planned index {idx} out of range");
+                continue;
+            };
             admitted += 1;
             let queue_seconds = Instant::now()
                 .duration_since(item.submitted_at)
@@ -658,7 +677,9 @@ fn batched_loop(
                 continue;
             }
             let done = runner.finish_early(slot);
-            let lane = lanes[slot].take().expect("canceled lane is live");
+            // the cancel scan above only selects occupied slots, so the
+            // lane is live; a None here would be a bookkeeping bug
+            let Some(lane) = lanes[slot].take() else { continue };
             deliver_batched(lane, done, true, metrics);
             ctl.active.store(runner.occupancy(), Ordering::Relaxed);
             publish_cache(&cache);
@@ -671,8 +692,9 @@ fn batched_loop(
         match runner.step() {
             Ok(finished) => {
                 for (slot, result) in finished {
-                    let lane =
-                        lanes[slot].take().expect("finished lane was live");
+                    // the runner only reports slots it stepped, which are
+                    // exactly the occupied lanes
+                    let Some(lane) = lanes[slot].take() else { continue };
                     deliver_batched(lane, Ok(result), false, metrics);
                     publish_cache(&cache);
                 }

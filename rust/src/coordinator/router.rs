@@ -10,6 +10,12 @@
 //! incremented at submit and decremented by the replica's admission ack,
 //! so `LeastLoaded` sees queued backlog, not just active slots.
 
+// Serving-layer lint wall (DESIGN.md §11): a panic here takes the whole
+// connection or replica down, so unwrap/expect are denied outright in
+// non-test code — recover or propagate instead.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
+
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -27,7 +27,9 @@
 //!
 //! A reply additionally carries `"cached_tokens"` when the replica's
 //! prefix cache (DESIGN.md §8) restored part of the prompt instead of
-//! prefilling it; `"cache": false` opts a request out of reuse.
+//! prefilling it; `"cache": false` opts a request out of reuse. A
+//! failed request's terminal reply carries `"ok": false` and an
+//! `"error"` string in place of the result fields.
 //!
 //! `"rounds_per_call"` (alias `"pack"`) opts a request into round
 //! packing (DESIGN.md §9.6): up to N draft-verify rounds fused per
@@ -86,6 +88,12 @@
 //! replies are flushed before the connection closes (`mars serve` polls
 //! [`Router::active_total`] down to zero, bounded at 60 s, before
 //! exiting).
+
+// Serving-layer lint wall (DESIGN.md §11): a panic here takes the whole
+// connection or replica down, so unwrap/expect are denied outright in
+// non-test code — recover or propagate instead.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -168,6 +176,17 @@ pub fn serve(router: Arc<Router>, bind: &str) -> Result<ServerHandle> {
 /// (deregister on completion).
 type Inflight = Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>;
 
+/// Lock the in-flight map, recovering from poisoning: its invariants are
+/// per-entry (id → cancel flag), so a holder that panicked between
+/// operations cannot leave cross-entry state half-updated — continuing
+/// with the map as-is is strictly better than taking the whole
+/// connection down.
+fn lock_inflight(
+    map: &Mutex<HashMap<u64, Arc<AtomicBool>>>,
+) -> std::sync::MutexGuard<'_, HashMap<u64, Arc<AtomicBool>>> {
+    map.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Requests without a client `"id"` get connection-local ids from this
 /// reserved base. Client ids are validated below [`CLIENT_ID_MAX`]
 /// (`request::wire_id`), so the two namespaces cannot collide in the
@@ -235,7 +254,7 @@ fn handle_conn(
     // cancel whatever is still in flight so replicas stop burning rounds
     // for a reader that no longer exists.
     if !stop.load(Ordering::Relaxed) {
-        for flag in inflight.lock().unwrap().values() {
+        for flag in lock_inflight(inflight).values() {
             flag.store(true, Ordering::Relaxed);
         }
     }
@@ -266,7 +285,7 @@ fn handle_cmd(
             let id = wire_id(v);
             let found = match id {
                 None => false,
-                Some(id) => match inflight.lock().unwrap().get(&id) {
+                Some(id) => match lock_inflight(inflight).get(&id) {
                     Some(flag) => {
                         flag.store(true, Ordering::Relaxed);
                         true
@@ -318,7 +337,7 @@ fn submit_request(
     let streaming = req.stream;
     // a duplicate in-flight id would clobber the first request's cancel
     // flag in the map and make the two replies uncorrelatable — reject
-    if inflight.lock().unwrap().contains_key(&id) {
+    if lock_inflight(inflight).contains_key(&id) {
         let _ = wtx.send(
             err_json(id, "duplicate in-flight id").to_string_json(),
         );
@@ -341,7 +360,7 @@ fn submit_request(
             pack_specified: req.pack_specified,
         },
     );
-    inflight.lock().unwrap().insert(id, handle.cancel.clone());
+    lock_inflight(inflight).insert(id, handle.cancel.clone());
     // Per-request waiter: forwards the terminal reply once the replica is
     // done. Cheap (one blocked thread per in-flight request) and keeps
     // the read loop free to accept more pipelined requests.
@@ -357,7 +376,7 @@ fn submit_request(
                     "replica dropped request",
                 )
             });
-            inflight2.lock().unwrap().remove(&id);
+            lock_inflight(&inflight2).remove(&id);
             let mut o = resp.to_json();
             if streaming {
                 o.set("done", Value::Bool(true));
@@ -369,7 +388,7 @@ fn submit_request(
         // cancel the already-submitted work, deregister, and tell the
         // client rather than leaving its id hanging forever
         cancel.store(true, Ordering::Relaxed);
-        inflight.lock().unwrap().remove(&id);
+        lock_inflight(inflight).remove(&id);
         let _ = wtx.send(
             err_json(id, "server busy: could not spawn reply waiter")
                 .to_string_json(),

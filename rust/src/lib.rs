@@ -35,9 +35,17 @@
 //!   synthetic task analogs, quality metrics, one harness per table and
 //!   figure of the evaluation section, a policy-sweep axis, and the
 //!   `bench serve` open-loop serving-latency harness (BENCHMARKS.md).
+//! * [`check`] — the cross-layer contract checker (`mars check
+//!   contracts`, DESIGN.md §11): diffs the python-exported contract
+//!   manifest (`contracts.json`) against the rust mirrors — state
+//!   scalars, cfg slots, policy ids, layout consts, exec names, wire
+//!   fields, bench thresholds — and names every drift.
+
+#![forbid(unsafe_code)]
 
 pub mod bench;
 pub mod cache;
+pub mod check;
 pub mod coordinator;
 pub mod datasets;
 pub mod engine;

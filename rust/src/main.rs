@@ -8,9 +8,12 @@
 //! mars bench diff old.json new.json  schema-2 snapshot regression gate
 //! mars analyze <fig1|fig4>           probe-ring dumps + ASCII plots
 //! mars eval --task arith --method eagle_tree [--policy mars:0.9]
+//! mars check contracts               cross-layer contract checker
 //! ```
 
-use std::path::PathBuf;
+#![forbid(unsafe_code)]
+
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
@@ -24,11 +27,23 @@ use mars::runtime::{Artifacts, Runtime};
 use mars::util::cli::Args;
 use mars::verify::VerifyPolicy;
 
+// the one sanctioned `process::exit` site (clippy.toml disallows it
+// elsewhere: bypassing drop handlers mid-stack loses buffered replies)
+#[allow(clippy::disallowed_methods)]
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(
         &argv,
-        &["mars", "no-mars", "hostloop", "probe", "quiet", "help", "no-cache"],
+        &[
+            "mars",
+            "no-mars",
+            "hostloop",
+            "probe",
+            "quiet",
+            "help",
+            "no-cache",
+            "print-thresholds",
+        ],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -92,6 +107,11 @@ USAGE: mars <cmd> [flags]
       regression; `estimated` baselines soft-gate (WARN, exit 0)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
   eval --task arith|code|chat|sum|mt [--method M] [--policy P] [--n 16]
+  check contracts [--manifest FILE] [--src DIR]
+      diff the python-exported contract manifest (contracts.json; export
+      with `python -m compile.contracts`) against the rust mirrors:
+      state scalars, cfg slots, policy ids, layout consts, exec names,
+      wire fields, bench thresholds; exits nonzero naming every drift
 
   global: --artifacts DIR (default ./artifacts or $MARS_ARTIFACTS)"
     );
@@ -273,6 +293,12 @@ fn run(args: &Args) -> Result<()> {
             // `bench diff` compares two committed snapshot files — no
             // artifacts, no engine: handle it before Runtime::new
             if which == "diff" {
+                // canonical threshold table — what BENCHMARKS.md embeds
+                // verbatim (`mars check contracts` verifies)
+                if args.has("print-thresholds") {
+                    print!("{}", bench::diff::thresholds_markdown());
+                    return Ok(());
+                }
                 let usage = "usage: mars bench diff OLD.json NEW.json";
                 let old = args
                     .positional
@@ -451,6 +477,32 @@ fn run(args: &Args) -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("fig1");
             analyze(args, &dir, which)
+        }
+        "check" => {
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("contracts");
+            if which != "contracts" {
+                bail!("unknown check '{which}' (try contracts)");
+            }
+            let paths = mars::check::resolve_paths(
+                Path::new("."),
+                args.get("manifest"),
+                args.get("src"),
+                &dir,
+            )?;
+            let (report, rendered) = mars::check::run_cli(&paths)?;
+            print!("{rendered}");
+            if !report.ok() {
+                bail!(
+                    "{} contract drift(s) — rust mirrors disagree with \
+                     the python-exported manifest",
+                    report.drifts.len()
+                );
+            }
+            Ok(())
         }
         "eval" => {
             let task = Task::parse(&args.get_or("task", "arith"))

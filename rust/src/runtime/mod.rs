@@ -100,6 +100,51 @@ struct Exec {
     weight_bufs: Vec<xla::PjRtBuffer>,
 }
 
+/// Encode one request's generation parameters into the prefill `cfg`
+/// vector for `lay` — the host side of the cfg-slot contract
+/// (`state_spec.CFG`; checked against the manifest by `mars check
+/// contracts`, and round-tripped against [`VerifyPolicy::decode_slots`]
+/// / [`SpecMethod::encode_slots`] by the property tests in
+/// `tests/contracts.rs`). Free of any device handle so tests can drive
+/// it from a manifest-built [`Layout`] alone.
+///
+/// [`VerifyPolicy::decode_slots`]: crate::verify::VerifyPolicy::decode_slots
+/// [`SpecMethod::encode_slots`]: crate::spec::SpecMethod::encode_slots
+pub fn encode_cfg(
+    lay: &Layout,
+    prompt_len: usize,
+    params: &crate::engine::GenParams,
+) -> Vec<f32> {
+    let n_cfg = lay.konst("n_cfg");
+    let mut cfg = vec![0f32; n_cfg];
+    let c = |name: &str| lay.cfg[name];
+    cfg[c("temp")] = params.temperature;
+    let [policy_id, p0, p1] = params.policy.encode_slots();
+    cfg[c("policy_id")] = policy_id;
+    cfg[c("p0")] = p0;
+    cfg[c("p1")] = p1;
+    // method lowering: the descriptor's knobs become config slots
+    // (the method identity lowers to the executable name; see
+    // `SpecMethod::encode_slots` / `SpecMethod::exec_name`)
+    let [kdraft, beam, branch] = params.method.encode_slots();
+    cfg[c("kdraft")] = kdraft;
+    cfg[c("max_new")] = params.max_new as f32;
+    cfg[c("eos")] = crate::tokenizer::EOS as f32;
+    cfg[c("beam")] = beam;
+    cfg[c("branch")] = branch;
+    cfg[c("probe_on")] = if params.probe { 1.0 } else { 0.0 };
+    cfg[c("greedy")] = if params.temperature <= 0.0 { 1.0 } else { 0.0 };
+    cfg[c("seed")] = (params.seed % (1 << 24)) as f32;
+    cfg[c("prompt_len")] = prompt_len as f32;
+    // round packing (DESIGN.md §9.6): the configured pack cap; old
+    // artifact layouts predate the slot, so write it only when known
+    // (those artifacts lack the *_multi programs anyway)
+    if let Some(&ci) = lay.cfg.get("rounds_per_call") {
+        cfg[ci] = params.rounds_per_call as f32;
+    }
+    cfg
+}
+
 /// A live PJRT CPU client with every executable compiled and all weight
 /// families resident on device. Owns all device objects — PJRT handles are
 /// not `Send`, so a `Runtime` must be created and used on one thread (the
@@ -281,35 +326,7 @@ impl Runtime {
         prompt_len: usize,
         params: &crate::engine::GenParams,
     ) -> Vec<f32> {
-        let lay = self.layout();
-        let n_cfg = lay.konst("n_cfg");
-        let mut cfg = vec![0f32; n_cfg];
-        let c = |name: &str| lay.cfg[name];
-        cfg[c("temp")] = params.temperature;
-        let [policy_id, p0, p1] = params.policy.encode_slots();
-        cfg[c("policy_id")] = policy_id;
-        cfg[c("p0")] = p0;
-        cfg[c("p1")] = p1;
-        // method lowering: the descriptor's knobs become config slots
-        // (the method identity lowers to the executable name; see
-        // `SpecMethod::encode_slots` / `SpecMethod::exec_name`)
-        let [kdraft, beam, branch] = params.method.encode_slots();
-        cfg[c("kdraft")] = kdraft;
-        cfg[c("max_new")] = params.max_new as f32;
-        cfg[c("eos")] = crate::tokenizer::EOS as f32;
-        cfg[c("beam")] = beam;
-        cfg[c("branch")] = branch;
-        cfg[c("probe_on")] = if params.probe { 1.0 } else { 0.0 };
-        cfg[c("greedy")] = if params.temperature <= 0.0 { 1.0 } else { 0.0 };
-        cfg[c("seed")] = (params.seed % (1 << 24)) as f32;
-        cfg[c("prompt_len")] = prompt_len as f32;
-        // round packing (DESIGN.md §9.6): the configured pack cap; old
-        // artifact layouts predate the slot, so write it only when known
-        // (those artifacts lack the *_multi programs anyway)
-        if let Some(&ci) = lay.cfg.get("rounds_per_call") {
-            cfg[ci] = params.rounds_per_call as f32;
-        }
-        cfg
+        encode_cfg(self.layout(), prompt_len, params)
     }
 
     /// Start a decode session for one request.

@@ -1,0 +1,256 @@
+//! Contract-checker integration tests: run `mars check contracts`
+//! in-process against the *committed* tree — the fixture manifest
+//! (`tests/fixtures/contracts.json`, freshness-pinned by the python
+//! suite) against the real rust sources and BENCHMARKS.md — plus
+//! manifest-driven property tests of the cfg-slot codec. No artifacts
+//! and no python toolchain needed, so plain `cargo test` gates all of
+//! it.
+
+use std::path::{Path, PathBuf};
+
+use mars::check::{run_all, ContractManifest, Sources};
+use mars::runtime::state::Layout;
+use mars::spec::METHODS;
+use mars::util::json::Value;
+use mars::verify::VerifyPolicy;
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_manifest() -> ContractManifest {
+    ContractManifest::load(
+        &crate_root().join("tests/fixtures/contracts.json"),
+    )
+    .expect("fixture manifest parses")
+}
+
+fn real_sources() -> Sources {
+    Sources::load(&crate_root().join("src")).expect("sources load")
+}
+
+/// The committed tree must be drift-free: this is the same check the CI
+/// `check` job runs via the CLI (there against a freshly exported
+/// manifest; the python suite pins the fixture to that export).
+#[test]
+fn committed_tree_has_no_contract_drift() {
+    let m = fixture_manifest();
+    let s = real_sources();
+    let bench = std::fs::read_to_string(crate_root().join("../BENCHMARKS.md"))
+        .expect("BENCHMARKS.md readable");
+    let report = run_all(&m, &s, Some(&bench));
+    assert!(report.ok(), "contract drift:\n{}", report.render());
+}
+
+/// The manifest embeds the full layout document — the same shape the
+/// runtime loads from `state_layout.json` — so `Layout::from_json`
+/// must accept it verbatim.
+#[test]
+fn manifest_layout_doc_builds_a_runtime_layout() {
+    let m = fixture_manifest();
+    let lay = Layout::from_json(&m.layout_doc).expect("layout builds");
+    assert_eq!(lay.konst("n_cfg"), m.consts["n_cfg"]);
+    assert_eq!(lay.hash.len(), 16);
+    for (name, &idx) in &m.scalars {
+        assert_eq!(lay.scalars[name], idx, "scalar {name}");
+    }
+}
+
+/// Property: for every registered method family × verification policy,
+/// the host cfg encoding round-trips through the manifest's slot
+/// indices — the policy triple decodes back to the same policy, the
+/// method knobs land in the method slots, and bounds hold.
+#[test]
+fn cfg_encoding_round_trips_every_method_x_policy() {
+    let m = fixture_manifest();
+    let lay = Layout::from_json(&m.layout_doc).expect("layout builds");
+    let policies = VerifyPolicy::parse_list(
+        "strict,mars:0.9,mars:0.5,topk:2:0.1,entropy:1.5",
+    )
+    .expect("policy list parses");
+    let prompt_len = 11usize;
+    for info in METHODS {
+        for &policy in &policies {
+            let policy = policy.normalize_for_device();
+            let params = mars::engine::GenParams {
+                method: info.default,
+                policy,
+                seed: 42,
+                rounds_per_call: 3,
+                ..Default::default()
+            };
+            let cfg =
+                mars::runtime::encode_cfg(&lay, prompt_len, &params);
+            assert_eq!(cfg.len(), m.consts["n_cfg"], "{}", info.name);
+            let at = |slot: &str| cfg[m.cfg[slot]];
+            // policy triple decodes back to the same policy
+            let decoded = VerifyPolicy::decode_slots([
+                at("policy_id"),
+                at("p0"),
+                at("p1"),
+            ])
+            .unwrap_or_else(|e| {
+                panic!("{}: policy decode failed: {e}", info.name)
+            });
+            assert_eq!(decoded, policy, "{}", info.name);
+            // the device policy id is one of the manifest's ids
+            assert!(
+                m.policies.values().any(|&v| v == at("policy_id") as f64),
+                "{}: policy_id {} not in manifest",
+                info.name,
+                at("policy_id")
+            );
+            // method knobs land in the method slots
+            let [kdraft, beam, branch] = info.default.encode_slots();
+            assert_eq!(at("kdraft"), kdraft, "{}", info.name);
+            assert_eq!(at("beam"), beam, "{}", info.name);
+            assert_eq!(at("branch"), branch, "{}", info.name);
+            // request plumbing
+            assert_eq!(at("prompt_len"), prompt_len as f32);
+            assert_eq!(at("rounds_per_call"), 3.0);
+            assert_eq!(at("seed"), 42.0);
+        }
+    }
+}
+
+/// Drift injected into a *copy* of the committed manifest must be
+/// caught, with the offending key named — one perturbation per
+/// hand-mirrored surface (the in-crate unit tests cover the same on
+/// synthetic fixtures; this exercises the real sources end to end).
+#[test]
+fn injected_manifest_drift_fails_the_checker_naming_the_key() {
+    let text = std::fs::read_to_string(
+        crate_root().join("tests/fixtures/contracts.json"),
+    )
+    .expect("fixture readable");
+    let s = real_sources();
+    let bench = std::fs::read_to_string(crate_root().join("../BENCHMARKS.md"))
+        .expect("BENCHMARKS.md readable");
+    let perturbed = |from: &str, to: &str| -> ContractManifest {
+        assert!(text.contains(from), "fixture lacks {from}");
+        ContractManifest::parse(&text.replace(from, to))
+            .expect("perturbed manifest still parses")
+    };
+    struct Case {
+        label: &'static str,
+        from: &'static str,
+        to: &'static str,
+        surface: &'static str,
+        key: &'static str,
+    }
+    let cases = [
+        // scalar slot renamed out from under REQUIRED_SCALARS
+        Case {
+            label: "scalar slot",
+            from: "\"pos\":",
+            to: "\"pos_renamed\":",
+            surface: "state-scalars",
+            key: "pos",
+        },
+        // policy id renumbered on the python side only
+        Case {
+            label: "policy id",
+            from: "\"mars\": 1.0",
+            to: "\"mars\": 5.0",
+            surface: "policy-ids",
+            key: "mars",
+        },
+        // executable renamed in the registry
+        Case {
+            label: "exec name",
+            from: "\"sps_round\":",
+            to: "\"sps_round_v2\":",
+            surface: "exec-names",
+            key: "sps_round",
+        },
+        // layout const dropped (the engine's pack clamp reads it)
+        Case {
+            label: "layout const",
+            from: "\"pack_max\":",
+            to: "\"pack_max_gone\":",
+            surface: "layout-consts",
+            key: "pack_max",
+        },
+    ];
+    for case in cases {
+        let m = perturbed(case.from, case.to);
+        let report = run_all(&m, &s, Some(&bench));
+        assert!(
+            !report.ok(),
+            "{}: checker passed on perturbed manifest",
+            case.label
+        );
+        assert!(
+            report
+                .drifts
+                .iter()
+                .any(|d| d.surface == case.surface && d.key == case.key),
+            "{}: no [{}] drift naming '{}' — got:\n{}",
+            case.label,
+            case.surface,
+            case.key,
+            report.render()
+        );
+    }
+}
+
+/// Wire-field drift: a field added to the codec but not the protocol
+/// doc must be caught. Perturbs the *source* side (a fixture request
+/// codec with one extra field) against the real server doc.
+#[test]
+fn undocumented_wire_field_fails_the_checker_naming_the_field() {
+    let m = fixture_manifest();
+    let mut s = real_sources();
+    s.request
+        .push_str("\nfn probe(v: &Value) { let _ = v.get(\"turbo_mode\"); }\n");
+    let bench = std::fs::read_to_string(crate_root().join("../BENCHMARKS.md"))
+        .expect("BENCHMARKS.md readable");
+    let report = run_all(&m, &s, Some(&bench));
+    assert!(
+        report
+            .drifts
+            .iter()
+            .any(|d| d.surface == "wire-fields" && d.key == "turbo_mode"),
+        "no wire-field drift naming 'turbo_mode':\n{}",
+        report.render()
+    );
+}
+
+/// Threshold-table drift: BENCHMARKS.md without the canonical table
+/// must fail the bench-thresholds surface.
+#[test]
+fn stale_threshold_table_fails_the_checker() {
+    let m = fixture_manifest();
+    let s = real_sources();
+    let report = run_all(&m, &s, Some("# BENCHMARKS\n\nno table\n"));
+    assert!(report
+        .drifts
+        .iter()
+        .any(|d| d.surface == "bench-thresholds"));
+}
+
+/// The fixture manifest's embedded layout hash must match the committed
+/// artifact layout when one is present (same python export lineage).
+#[test]
+fn fixture_layout_hash_matches_committed_artifacts() {
+    let m = fixture_manifest();
+    let lay_path = Path::new("artifacts/state_layout.json");
+    let committed = crate_root().join("..").join(lay_path);
+    let path = if committed.is_file() {
+        committed
+    } else {
+        eprintln!("[skip] no committed artifacts/state_layout.json");
+        return;
+    };
+    let doc = Value::parse(
+        &std::fs::read_to_string(path).expect("layout readable"),
+    )
+    .expect("layout parses");
+    let hash = doc.get("hash").and_then(|h| h.as_str()).unwrap_or("");
+    let embedded = m
+        .layout_doc
+        .get("hash")
+        .and_then(|h| h.as_str())
+        .unwrap_or("");
+    assert_eq!(hash, embedded, "manifest layout lineage != artifacts");
+}

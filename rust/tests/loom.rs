@@ -1,0 +1,225 @@
+#![cfg(feature = "loom")]
+//! Loom model of the router ↔ batched-replica admission hand-off
+//! (`cargo test --features loom --test loom --release`; the nightly CI
+//! job runs it, see .github/workflows/nightly.yml).
+//!
+//! What is modeled — the exact atomics protocol of
+//! `coordinator/router.rs` / `coordinator/replica.rs`, with the device
+//! work abstracted away:
+//!
+//! * the router increments `queued_hint` *before* publishing the item
+//!   (submit), and decrements it on a failed send;
+//! * the replica moves items into lanes per [`plan_admissions`] and
+//!   decrements `queued_hint` only at the admission ack — after the
+//!   item landed in a lane or errored out;
+//! * a dispatch failure fails every live lane and, when the batch
+//!   session cannot be rebuilt, drains the still-queued items with one
+//!   decrement each (the queue-gauge repair path) before the replica
+//!   dies.
+//!
+//! Checked invariants, across every interleaving loom explores:
+//!
+//! * **no lost or double decrement** — `queued_hint` is exactly zero
+//!   once all submitted items are acked or drained (an underflowing
+//!   `fetch_sub` on the `usize` gauge would wrap and make the replica
+//!   look infinitely loaded to least-loaded routing, starving it);
+//! * **no lost item** — every submitted item is either admitted once or
+//!   error-replied once, never both, never neither (a lost wakeup);
+//! * **gauge never wraps mid-flight** — the hint stays below the wrap
+//!   region at every decrement.
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+use mars::coordinator::replica::plan_admissions;
+
+/// One modeled request: its batched-program family, and its outcome
+/// cell (None = unanswered, Some(true) = admitted, Some(false) =
+/// error-replied). The cell stands in for the reply channel.
+struct Item {
+    family: &'static str,
+    outcome: Mutex<Option<bool>>,
+}
+
+/// Shared router/replica state: the work queue models the mpsc channel
+/// (loom has no channels; a mutexed deque has the same happens-before
+/// edges via its lock), the gauges are the real protocol's atomics.
+struct Shared {
+    queue: Mutex<Vec<usize>>,
+    queued_hint: AtomicUsize,
+    active: AtomicUsize,
+    items: Vec<Item>,
+}
+
+fn submit(s: &Shared, idx: usize) {
+    // router: hint up *before* publish — the replica may ack (and
+    // decrement) the instant the item is visible
+    s.queued_hint.fetch_add(1, Ordering::Relaxed);
+    s.queue.lock().unwrap().push(idx);
+}
+
+/// One admission pass of the batched loop: drain the queue, plan, ack.
+/// `fail_dispatch` models a step error on a non-empty batch: every lane
+/// fails, the session rebuild fails, and the drain path repairs the
+/// queue gauge before the replica exits.
+fn replica_pass(s: &Shared, slots: usize, fail_dispatch: bool) {
+    let mut pending: Vec<usize> = s.queue.lock().unwrap().drain(..).collect();
+    let mut occupancy = 0usize;
+    let mut admitted: Vec<usize> = Vec::new();
+    while !pending.is_empty() {
+        let families: Vec<&str> =
+            pending.iter().map(|&i| s.items[i].family).collect();
+        let running = admitted.first().map(|&i| s.items[i].family);
+        let plan = plan_admissions(occupancy, slots, running, &families);
+        if plan.is_empty() {
+            break;
+        }
+        let mut taken = 0usize;
+        for &idx in &plan {
+            let item_idx = pending.remove(idx - taken);
+            taken += 1;
+            // admission ack: outcome lands, then the hint drops —
+            // exactly one decrement per submitted item
+            *s.items[item_idx].outcome.lock().unwrap() = Some(true);
+            admitted.push(item_idx);
+            occupancy += 1;
+            let before = s.queued_hint.fetch_sub(1, Ordering::Relaxed);
+            assert!(before > 0, "queued_hint underflow at admission ack");
+            s.active.store(occupancy, Ordering::Relaxed);
+        }
+    }
+    if fail_dispatch && !admitted.is_empty() {
+        // step error: every live lane is failed (their hints already
+        // dropped at admission), and the queue-gauge repair drains the
+        // family-mismatched leftovers with one decrement each
+        for &i in &admitted {
+            *s.items[i].outcome.lock().unwrap() = Some(false);
+        }
+        for item_idx in pending.drain(..) {
+            *s.items[item_idx].outcome.lock().unwrap() = Some(false);
+            let before = s.queued_hint.fetch_sub(1, Ordering::Relaxed);
+            assert!(before > 0, "queued_hint underflow in gauge repair");
+        }
+        s.active.store(0, Ordering::Relaxed);
+    }
+}
+
+fn check_final(s: &Shared, submitted: usize) {
+    // drain whatever a pass has not consumed yet (a real replica loops)
+    let leftover = s.queue.lock().unwrap().len();
+    let hint = s.queued_hint.load(Ordering::Relaxed);
+    assert!(
+        hint < usize::MAX / 2,
+        "queued_hint wrapped: {hint} (double decrement)"
+    );
+    // conservation: unacked items are exactly the queued leftovers
+    let answered = s
+        .items
+        .iter()
+        .take(submitted)
+        .filter(|it| it.outcome.lock().unwrap().is_some())
+        .count();
+    assert_eq!(
+        hint, leftover,
+        "gauge out of sync: hint {hint} vs {leftover} still queued"
+    );
+    assert_eq!(
+        answered + leftover,
+        submitted,
+        "lost or duplicated item: {answered} answered, {leftover} queued"
+    );
+}
+
+fn items(families: &[&'static str]) -> Vec<Item> {
+    families
+        .iter()
+        .map(|f| Item { family: f, outcome: Mutex::new(None) })
+        .collect()
+}
+
+/// Two racing submitters, one replica pass: the hint-before-publish
+/// ordering must hold for every interleaving (submit racing ack).
+#[test]
+fn loom_admission_ack_never_double_decrements() {
+    loom::model(|| {
+        let s = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            queued_hint: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            items: items(&["sps_batch", "sps_batch"]),
+        });
+        let s1 = s.clone();
+        let t1 = thread::spawn(move || submit(&s1, 0));
+        let s2 = s.clone();
+        let t2 = thread::spawn(move || submit(&s2, 1));
+        let s3 = s.clone();
+        let t3 = thread::spawn(move || replica_pass(&s3, 2, false));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        t3.join().unwrap();
+        // a real replica loops; one final pass consumes what the racing
+        // pass may have missed, then the books must balance
+        replica_pass(&s, 2, false);
+        check_final(&s, 2);
+    });
+}
+
+/// Submission racing a failing dispatch: the batch-wide restart path
+/// (fail lanes + drain queue with gauge repair) must neither lose an
+/// ack nor decrement twice, whatever the interleaving.
+#[test]
+fn loom_step_error_restart_repairs_the_queue_gauge() {
+    loom::model(|| {
+        let s = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            queued_hint: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            // mixed families: the second item is skipped by the planner
+            // (family mismatch) and must be caught by the repair drain
+            items: items(&["sps_batch", "eagle_tree_batch"]),
+        });
+        let s1 = s.clone();
+        let t1 = thread::spawn(move || submit(&s1, 0));
+        let s2 = s.clone();
+        let t2 = thread::spawn(move || submit(&s2, 1));
+        let s3 = s.clone();
+        let t3 = thread::spawn(move || replica_pass(&s3, 2, true));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        t3.join().unwrap();
+        replica_pass(&s, 2, true);
+        check_final(&s, 2);
+    });
+}
+
+/// The dead-replica path: when the send fails (receiver gone), the
+/// router undoes its own hint — racing that undo against a normal
+/// submit+ack on the same gauge must stay balanced.
+#[test]
+fn loom_failed_send_undo_balances_the_gauge() {
+    loom::model(|| {
+        let s = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            queued_hint: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            items: items(&["sps_batch"]),
+        });
+        // normal submit+ack on one thread
+        let s1 = s.clone();
+        let t1 = thread::spawn(move || {
+            submit(&s1, 0);
+        });
+        // failed-send undo on another: hint up, send fails, hint down
+        let s2 = s.clone();
+        let t2 = thread::spawn(move || {
+            s2.queued_hint.fetch_add(1, Ordering::Relaxed);
+            let before = s2.queued_hint.fetch_sub(1, Ordering::Relaxed);
+            assert!(before > 0, "undo underflow");
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        replica_pass(&s, 1, false);
+        check_final(&s, 1);
+    });
+}
