@@ -665,6 +665,10 @@ struct PackRow {
     tau: f64,
     ttft_ms: Summary,
     tpot_ms: Summary,
+    /// relaxed accepts / all verify decisions over the wave (from the
+    /// engine snapshots) — the acceptance-behavior record the packing
+    /// equivalence pins ride on (DESIGN.md §12)
+    relaxed_share: f64,
 }
 
 /// `mars bench packing` — the round-packing sweep (DESIGN.md §9.6):
@@ -737,11 +741,14 @@ pub fn packing(
                     tau: 0.0,
                     ttft_ms: Summary::new(),
                     tpot_ms: Summary::new(),
+                    relaxed_share: 0.0,
                 };
                 let mut tokens = 0usize;
                 let mut calls = 0u64;
                 let mut secs = 0.0;
                 let mut tau = Summary::new();
+                // (relaxed, all-decisions) across the wave's snapshots
+                let mut decisions = (0.0f64, 0.0f64);
                 for (i, ex) in examples.iter().enumerate() {
                     let mut p = ctx.params(method, policy, 1.0);
                     p.rounds_per_call = pack;
@@ -780,10 +787,15 @@ pub fn packing(
                     if method.is_speculative() {
                         tau.push(r.tau());
                     }
+                    decisions.0 += r.snapshot.relaxed_accepts;
+                    decisions.1 += r.snapshot.exact_accepts
+                        + r.snapshot.relaxed_accepts
+                        + r.snapshot.rejects;
                 }
                 row.tok_per_s = tokens as f64 / secs.max(1e-9);
                 row.calls_per_tok = calls as f64 / tokens.max(1) as f64;
                 row.tau = tau.mean();
+                row.relaxed_share = decisions.0 / decisions.1.max(1.0);
                 println!(
                     "  {} / {} / pack={pack}: {:.2} calls/tok, {:.1} tok/s",
                     method.label(),
@@ -879,6 +891,7 @@ pub fn packing(
         push("device_calls_per_token", r.calls_per_tok, "calls/tok");
         push("tok_per_s", r.tok_per_s, "tok/s");
         push("tau", r.tau, "tok/cycle");
+        push("relaxed_share", r.relaxed_share, "frac");
         push("ttft_ms_p50", r.ttft_ms.p50(), "ms");
         push("ttft_ms_p99", r.ttft_ms.p99(), "ms");
         push("tpot_ms_p50", r.tpot_ms.p50(), "ms");
@@ -904,6 +917,10 @@ struct BatchWaveRow {
     tau: f64,
     ttft_ms: Summary,
     tpot_ms: Summary,
+    /// relaxed accepts / all verify decisions over the wave (DESIGN.md
+    /// §12) — batching must not change acceptance behavior, and this
+    /// record pins that PR-to-PR
+    relaxed_share: f64,
 }
 
 /// `mars bench batch` — the cross-sequence batching sweep (DESIGN.md
@@ -969,7 +986,9 @@ pub fn batch(
                     tau: 0.0,
                     ttft_ms: Summary::new(),
                     tpot_ms: Summary::new(),
+                    relaxed_share: 0.0,
                 };
+                let mut decisions = (0.0f64, 0.0f64);
                 let mut runner = BatchRunner::new(&ctx.engine.rt)?;
                 let nmax = runner.batch_max();
                 let mut admit_t: Vec<Option<Instant>> = vec![None; nmax];
@@ -1019,6 +1038,10 @@ pub fn batch(
                         if method.is_speculative() {
                             tau.push(r.tau());
                         }
+                        decisions.0 += r.snapshot.relaxed_accepts;
+                        decisions.1 += r.snapshot.exact_accepts
+                            + r.snapshot.relaxed_accepts
+                            + r.snapshot.rejects;
                     }
                     // stamp first-commit on the survivors
                     for slot in 0..nmax {
@@ -1034,6 +1057,7 @@ pub fn batch(
                 row.tok_per_s = tokens as f64 / wall.max(1e-9);
                 row.calls_per_tok = share / tokens.max(1) as f64;
                 row.tau = tau.mean();
+                row.relaxed_share = decisions.0 / decisions.1.max(1.0);
                 println!(
                     "  {} / {} / B={b}: {:.2} calls/tok, {:.1} tok/s",
                     method.label(),
@@ -1126,6 +1150,7 @@ pub fn batch(
         push("dispatches_per_token", r.calls_per_tok, "calls/tok");
         push("tok_per_s_replica", r.tok_per_s, "tok/s");
         push("tau", r.tau, "tok/cycle");
+        push("relaxed_share", r.relaxed_share, "frac");
         push("ttft_ms_p50", r.ttft_ms.p50(), "ms");
         push("ttft_ms_p99", r.ttft_ms.p99(), "ms");
         push("tpot_ms_p50", r.tpot_ms.p50(), "ms");

@@ -99,6 +99,12 @@ pub struct ServeBenchCfg {
     pub policies: Vec<VerifyPolicy>,
     /// Workload shape (`sweep` grid vs multi-turn `chat`).
     pub scenario: ServeScenario,
+    /// Zero the server's metrics between waves (`--reset`) via
+    /// `{"cmd": "metrics", "reset": true}` (DESIGN.md §12): each wave's
+    /// scraped margin/round records then cover exactly that wave instead
+    /// of everything since the server came up. Off by default so the
+    /// end-of-run `server metrics` line still shows run totals.
+    pub reset: bool,
     /// Per-replica prefix-cache budget (`--cache-mb`) for the `chat`
     /// scenario's cache-on wave. The sweep scenario always runs cache-off
     /// so every wave's prefills are uniformly cold and rows compare.
@@ -223,6 +229,66 @@ struct PolicyRow {
     tpot_ms: Summary,
     tok_per_s: f64,
     req_per_s: f64,
+    /// Server-side aggregates scraped post-wave over the `metrics` RPC
+    /// (DESIGN.md §12); `None` when the wave produced no such samples.
+    scrape: WaveScrape,
+}
+
+/// Margin/round aggregates lifted from one wave's `{"cmd": "metrics"}`
+/// snapshot.
+#[derive(Debug, Default, Clone, Copy)]
+struct WaveScrape {
+    /// p50 of the z2/z1 margin ratio over *relaxed* acceptances for the
+    /// wave's policy × method (the MARS decisive-margin headline).
+    margin_relaxed_p50: Option<f64>,
+    /// Relaxed acceptances / all verify decisions for the wave's
+    /// policy × method.
+    relaxed_share: Option<f64>,
+    /// p50 of the per-round decode wall time across traced rounds.
+    round_wall_ms_p50: Option<f64>,
+}
+
+/// Scrape the server's post-wave snapshot over the same wire RPC a real
+/// scraper would use, optionally zeroing the counters for the next wave
+/// (`--reset`), and lift the wave's margin/round aggregates out of it.
+fn scrape_wave(
+    addr: &str,
+    method: SpecMethod,
+    policy: VerifyPolicy,
+    reset: bool,
+) -> Result<WaveScrape> {
+    let req = if reset {
+        r#"{"cmd": "metrics", "reset": true}"#
+    } else {
+        r#"{"cmd": "metrics"}"#
+    };
+    let snap = server::client_roundtrip(addr, req)?;
+    let margin = |outcome: &str, field: &str| -> Option<f64> {
+        snap.path(&["margin", policy.name(), method.name(), outcome, field])
+            .and_then(|v| v.as_f64())
+    };
+    let counts = (
+        margin("exact", "count"),
+        margin("relaxed", "count"),
+        margin("reject", "count"),
+    );
+    let relaxed_share = match counts {
+        (Some(e), Some(r), Some(j)) if e + r + j > 0.0 => {
+            Some(r / (e + r + j))
+        }
+        _ => None,
+    };
+    Ok(WaveScrape {
+        margin_relaxed_p50: margin("relaxed", "p50").filter(|_| {
+            // an empty relaxed histogram answers 0.0 — don't record a
+            // fake margin when the policy never fired a relaxation
+            margin("relaxed", "count").unwrap_or(0.0) > 0.0
+        }),
+        relaxed_share,
+        round_wall_ms_p50: snap
+            .path(&["rounds", "wall_ms_p50"])
+            .and_then(|v| v.as_f64()),
+    })
 }
 
 /// Run the serving benchmark for the configured scenario, rendered into
@@ -276,7 +342,8 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
         .flat_map(|&m| cfg.policies.iter().map(move |&p| (m, p)))
         .collect();
     for (wi, &(method, policy)) in waves.iter().enumerate() {
-        let row = drive_wave(cfg, &addr, wi, method, policy)?;
+        let mut row = drive_wave(cfg, &addr, wi, method, policy)?;
+        row.scrape = scrape_wave(&addr, method, policy, cfg.reset)?;
         println!(
             "  {}: {} ok / {} err, ttft p50 {:.0} ms, tpot p50 {:.2} ms, \
              {:.1} tok/s",
@@ -324,6 +391,18 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
         push("tok_per_s", r.tok_per_s, "tok/s");
         push("req_per_s", r.req_per_s, "req/s");
         push("err", r.err as f64, "count");
+        // server-side margin/round aggregates (DESIGN.md §12) — present
+        // only when the wave produced the underlying samples, so the
+        // record set stays stable under `bench diff` self-pairing
+        if let Some(v) = r.scrape.margin_relaxed_p50 {
+            push("margin_relaxed_p50", v, "ratio");
+        }
+        if let Some(v) = r.scrape.relaxed_share {
+            push("relaxed_share", v, "frac");
+        }
+        if let Some(v) = r.scrape.round_wall_ms_p50 {
+            push("round_wall_ms_p50", v, "ms");
+        }
     }
     emit_serve_records(cfg, &doc)?;
     Ok(())
@@ -359,6 +438,9 @@ fn drive_wave(
         o.set("policy", Value::Str(policy.label()));
         o.set("max_new", Value::Num(cfg.max_new as f64));
         o.set("seed", Value::Num(i as f64));
+        // probe rings feed the server's margin-by-outcome histograms
+        // (DESIGN.md §12) that the wave scrape below turns into records
+        o.set("probe", Value::Bool(true));
         probes.lock().unwrap().insert(
             id,
             ReqProbe {
@@ -406,6 +488,7 @@ fn drive_wave(
         tpot_ms: Summary::new(),
         tok_per_s: 0.0,
         req_per_s: 0.0,
+        scrape: WaveScrape::default(),
     };
     let mut tokens_total = 0usize;
     for id in &ids {

@@ -1,32 +1,75 @@
-//! Serving metrics registry: latency histograms (including the serving
-//! percentiles TTFT — submit → first committed token — and TPOT — decode
-//! time per output token), throughput counters and speculative-decoding
-//! acceptance statistics, shared across replicas via a mutex (recording
-//! is a handful of float ops; not hot enough to need sharding on this
-//! substrate). Acceptance stats are additionally broken out per
-//! verification-policy family so a mixed-policy workload exposes the
-//! per-rule τ / relaxation picture, and per speculative-method family
-//! (`SpecMethod::name`) so a mixed-method workload exposes the per-
-//! drafter τ / TTFT picture, and per-replica prefix-cache gauges
-//! (hits/misses/tokens-saved/bytes-resident — DESIGN.md §8) summed into
-//! one `"cache"` object. `mars bench serve` reports the same
-//! quantities measured client-side (see BENCHMARKS.md).
+//! Serving metrics registry (DESIGN.md §12): sharded per-replica
+//! recording into fixed-bucket streaming histograms, merged at snapshot.
+//!
+//! The hot path is [`record`]/[`record_occupancy`]/[`record_round`]: a
+//! replica locks only its own shard (`replica % N_SHARDS`), and every
+//! distribution lands in an O(buckets) [`StreamHistogram`] — memory is
+//! bounded by the bucket count times the live (policy × method) key
+//! set, *not* by request volume (regression-pinned by
+//! `memory_is_bounded_by_buckets_not_requests`). Snapshots merge the
+//! shards element-wise; [`reset`] zeroes counters and the
+//! `started`-at-first-record elapsed stamp between bench waves.
+//!
+//! What is tracked, per merged snapshot:
+//!
+//! * latency histograms — TTFT (submit → first committed token), TPOT,
+//!   decode/prefill/queue, per-token µs;
+//! * acceptance statistics — τ, relaxed-accept counts, broken out per
+//!   verification-policy family and per speculative-method family;
+//! * **margin-by-outcome histograms** — the decisive z2/z1 target
+//!   margin split strict-accept / relaxed-accept / reject per
+//!   policy × method ([`record_margins`]), the paper's low-margin-regime
+//!   evidence as a live distribution;
+//! * per-round aggregates — device-turn wall time and accepted-per-turn
+//!   from the engine's [`RoundEvent`] stream ([`record_round`]);
+//! * batch-occupancy histogram (DESIGN.md §9.5) and per-replica
+//!   prefix-cache gauges (DESIGN.md §8) summed into one `"cache"`
+//!   object.
+//!
+//! Export surfaces: [`snapshot_json`] (the `{"cmd":"metrics"}` RPC and
+//! the `mars serve` shutdown print) and [`render_prometheus`] (the
+//! `{"cmd":"prom"}` RPC and the `--prom-addr` scrape endpoint).
+//! `mars bench serve` reports the same quantities measured client-side
+//! (see BENCHMARKS.md).
+//!
+//! [`record`]: MetricsRegistry::record
+//! [`record_occupancy`]: MetricsRegistry::record_occupancy
+//! [`record_round`]: MetricsRegistry::record_round
+//! [`record_margins`]: MetricsRegistry::record_margins
+//! [`snapshot_json`]: MetricsRegistry::snapshot_json
+//! [`render_prometheus`]: MetricsRegistry::render_prometheus
+//! [`reset`]: MetricsRegistry::reset
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cache::CacheStats;
+use crate::obs::hist::StreamHistogram;
+use crate::obs::prom::PromText;
+use crate::obs::round::RoundEvent;
 use crate::util::json::Value;
-use crate::util::stats::{LogHistogram, Summary};
+use crate::verify::AcceptFlag;
+
+/// Registry shard count. Replica `r` records into shard
+/// `r % N_SHARDS`, so up to 8 replicas never contend on a record.
+const N_SHARDS: usize = 8;
+
+/// Upper bounds for the Prometheus latency histograms, milliseconds.
+const LAT_BOUNDS_MS: [f64; 10] =
+    [1.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 1000.0, 5000.0, 20000.0];
+
+/// Upper bounds for the Prometheus margin histograms (z2/z1 ratio).
+const MARGIN_BOUNDS: [f64; 7] = [0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 1.0];
 
 /// Per-policy-family aggregates (keyed by `VerifyPolicy::name`).
 #[derive(Debug, Default)]
 struct PolicyAgg {
     requests: u64,
     tokens: u64,
-    tau: Summary,
-    relaxed: Summary,
+    tau: StreamHistogram,
+    relaxed: StreamHistogram,
 }
 
 /// Per-method-family aggregates (keyed by `SpecMethod::name`).
@@ -34,24 +77,44 @@ struct PolicyAgg {
 struct MethodAgg {
     requests: u64,
     tokens: u64,
-    tau: Summary,
-    ttft_ms: Summary,
+    tau: StreamHistogram,
+    ttft_ms: StreamHistogram,
 }
 
+/// Margin-by-outcome histograms for one policy × method pair.
 #[derive(Debug, Default)]
-struct Inner {
-    started: Option<Instant>,
+struct MarginAgg {
+    exact: StreamHistogram,
+    relaxed: StreamHistogram,
+    reject: StreamHistogram,
+}
+
+/// Aggregates over the engine's per-turn [`RoundEvent`] stream.
+#[derive(Debug, Default)]
+struct RoundAgg {
+    turns: u64,
+    rounds: u64,
+    drafted: u64,
+    accepted: u64,
+    relaxed_turns: u64,
+    wall_ms: StreamHistogram,
+    accepted_per_turn: StreamHistogram,
+}
+
+/// One replica-sharded slice of the registry.
+#[derive(Debug, Default)]
+struct Shard {
     requests_ok: u64,
     requests_err: u64,
     tokens_out: u64,
-    decode_ms: Summary,
-    prefill_ms: Summary,
-    queue_ms: Summary,
-    ttft_ms: Summary,
-    tpot_ms: Summary,
-    per_token_us: LogHistogram,
-    tau: Summary,
-    relaxed: Summary,
+    decode_ms: StreamHistogram,
+    prefill_ms: StreamHistogram,
+    queue_ms: StreamHistogram,
+    ttft_ms: StreamHistogram,
+    tpot_ms: StreamHistogram,
+    per_token_us: StreamHistogram,
+    tau: StreamHistogram,
+    relaxed: StreamHistogram,
     by_policy: BTreeMap<&'static str, PolicyAgg>,
     by_method: BTreeMap<&'static str, MethodAgg>,
     /// Batch-occupancy histogram (DESIGN.md §9.5): how many batched
@@ -60,15 +123,99 @@ struct Inner {
     /// once, so the distribution shows how full the batch actually ran
     /// (the amortization factor the occupancy sweep measures).
     occupancy: BTreeMap<usize, u64>,
+    /// Margin-by-outcome histograms per (policy, method).
+    margins: BTreeMap<(&'static str, &'static str), MarginAgg>,
+    rounds: RoundAgg,
+}
+
+impl Shard {
+    /// Element-wise merge (snapshot-time shard reduction).
+    fn merge(&mut self, o: &Shard) {
+        self.requests_ok += o.requests_ok;
+        self.requests_err += o.requests_err;
+        self.tokens_out += o.tokens_out;
+        self.decode_ms.merge(&o.decode_ms);
+        self.prefill_ms.merge(&o.prefill_ms);
+        self.queue_ms.merge(&o.queue_ms);
+        self.ttft_ms.merge(&o.ttft_ms);
+        self.tpot_ms.merge(&o.tpot_ms);
+        self.per_token_us.merge(&o.per_token_us);
+        self.tau.merge(&o.tau);
+        self.relaxed.merge(&o.relaxed);
+        for (name, agg) in &o.by_policy {
+            let p = self.by_policy.entry(name).or_default();
+            p.requests += agg.requests;
+            p.tokens += agg.tokens;
+            p.tau.merge(&agg.tau);
+            p.relaxed.merge(&agg.relaxed);
+        }
+        for (name, agg) in &o.by_method {
+            let m = self.by_method.entry(name).or_default();
+            m.requests += agg.requests;
+            m.tokens += agg.tokens;
+            m.tau.merge(&agg.tau);
+            m.ttft_ms.merge(&agg.ttft_ms);
+        }
+        for (occ, n) in &o.occupancy {
+            *self.occupancy.entry(*occ).or_insert(0) += n;
+        }
+        for (key, agg) in &o.margins {
+            let m = self.margins.entry(*key).or_default();
+            m.exact.merge(&agg.exact);
+            m.relaxed.merge(&agg.relaxed);
+            m.reject.merge(&agg.reject);
+        }
+        self.rounds.turns += o.rounds.turns;
+        self.rounds.rounds += o.rounds.rounds;
+        self.rounds.drafted += o.rounds.drafted;
+        self.rounds.accepted += o.rounds.accepted;
+        self.rounds.relaxed_turns += o.rounds.relaxed_turns;
+        self.rounds.wall_ms.merge(&o.rounds.wall_ms);
+        self.rounds.accepted_per_turn.merge(&o.rounds.accepted_per_turn);
+    }
+
+    /// Resident bytes of this shard's histogram storage (the
+    /// memory-bound regression test sums this across shards).
+    fn approx_bytes(&self) -> usize {
+        let h = StreamHistogram::approx_bytes();
+        let fixed = 10 * h + std::mem::size_of::<Shard>();
+        fixed
+            + self.by_policy.len() * 2 * h
+            + self.by_method.len() * 2 * h
+            + self.margins.len() * 3 * h
+            + self.occupancy.len()
+                * std::mem::size_of::<(usize, u64)>()
+    }
+}
+
+/// Cross-shard state: the elapsed stamp and the per-replica cache
+/// gauges (latest-value semantics, not mergeable counters).
+#[derive(Debug, Default)]
+struct Global {
+    started: Option<Instant>,
     /// Latest prefix-cache stats per replica (each replica owns its own
     /// store — DESIGN.md §8 — and republishes after every admission).
     cache_by_replica: BTreeMap<usize, CacheStats>,
 }
 
 /// Shared serving-metrics registry (one per router, shared by replicas).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct MetricsRegistry {
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Shard>>,
+    global: Mutex<Global>,
+    /// Fast-path guard so records skip the global lock once the
+    /// elapsed stamp exists.
+    started_stamped: AtomicBool,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            global: Mutex::new(Global::default()),
+            started_stamped: AtomicBool::new(false),
+        }
+    }
 }
 
 /// One request's measurements.
@@ -76,6 +223,8 @@ pub struct MetricsRegistry {
 pub struct RequestMetrics {
     /// Whether the request completed successfully.
     pub ok: bool,
+    /// Replica that served the request (shard selector).
+    pub replica: usize,
     /// Committed output tokens.
     pub tokens: usize,
     /// Wall-clock decode time (prefill excluded), seconds.
@@ -103,49 +252,62 @@ impl MetricsRegistry {
         Self::default()
     }
 
-    /// Record one finished request (errors count separately).
-    pub fn record(&self, m: RequestMetrics) {
-        let mut g = self.inner.lock().unwrap();
+    fn stamp_started(&self) {
+        if self.started_stamped.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut g = self.global.lock().unwrap();
         if g.started.is_none() {
             g.started = Some(Instant::now());
         }
+        self.started_stamped.store(true, Ordering::Relaxed);
+    }
+
+    fn shard(&self, replica: usize) -> &Mutex<Shard> {
+        &self.shards[replica % N_SHARDS]
+    }
+
+    /// Record one finished request (errors count separately).
+    pub fn record(&self, m: RequestMetrics) {
+        self.stamp_started();
+        let mut g = self.shard(m.replica).lock().unwrap();
         if !m.ok {
             g.requests_err += 1;
             return;
         }
         g.requests_ok += 1;
         g.tokens_out += m.tokens as u64;
-        g.decode_ms.push(m.decode_seconds * 1e3);
-        g.prefill_ms.push(m.prefill_seconds * 1e3);
-        g.queue_ms.push(m.queue_seconds * 1e3);
-        g.ttft_ms.push(m.ttft_seconds * 1e3);
+        g.decode_ms.record(m.decode_seconds * 1e3);
+        g.prefill_ms.record(m.prefill_seconds * 1e3);
+        g.queue_ms.record(m.queue_seconds * 1e3);
+        g.ttft_ms.record(m.ttft_seconds * 1e3);
         if m.tokens > 0 {
             // TPOT: decode time amortized over committed tokens
-            g.tpot_ms.push(m.decode_seconds * 1e3 / m.tokens as f64);
+            g.tpot_ms.record(m.decode_seconds * 1e3 / m.tokens as f64);
             g.per_token_us
                 .record(m.decode_seconds * 1e6 / m.tokens as f64);
         }
         if m.tau > 0.0 {
-            g.tau.push(m.tau);
+            g.tau.record(m.tau);
         }
-        g.relaxed.push(m.relaxed_accepts);
+        g.relaxed.record(m.relaxed_accepts);
         if !m.policy.is_empty() {
             let p = g.by_policy.entry(m.policy).or_default();
             p.requests += 1;
             p.tokens += m.tokens as u64;
             if m.tau > 0.0 {
-                p.tau.push(m.tau);
+                p.tau.record(m.tau);
             }
-            p.relaxed.push(m.relaxed_accepts);
+            p.relaxed.record(m.relaxed_accepts);
         }
         if !m.method.is_empty() {
             let a = g.by_method.entry(m.method).or_default();
             a.requests += 1;
             a.tokens += m.tokens as u64;
             if m.tau > 0.0 {
-                a.tau.push(m.tau);
+                a.tau.record(m.tau);
             }
-            a.ttft_ms.push(m.ttft_seconds * 1e3);
+            a.ttft_ms.record(m.ttft_seconds * 1e3);
         }
     }
 
@@ -153,12 +315,54 @@ impl MetricsRegistry {
     /// lanes (DESIGN.md §9.5). Called by the replica's batched loop once
     /// per round dispatch; the resulting histogram is the occupancy
     /// distribution the `"batch"` snapshot object reports.
-    pub fn record_occupancy(&self, occupied: usize) {
-        let mut g = self.inner.lock().unwrap();
-        if g.started.is_none() {
-            g.started = Some(Instant::now());
-        }
+    pub fn record_occupancy(&self, replica: usize, occupied: usize) {
+        self.stamp_started();
+        let mut g = self.shard(replica).lock().unwrap();
         *g.occupancy.entry(occupied).or_insert(0) += 1;
+    }
+
+    /// Record one sequence's probe-surfaced decision margins, split by
+    /// outcome: `samples` pairs the decisive position's z2/z1 target
+    /// margin with its [`AcceptFlag`]. Strict accepts, policy-relaxed
+    /// accepts and rejects land in separate histograms per
+    /// policy × method — the low-margin-regime picture.
+    pub fn record_margins(
+        &self,
+        replica: usize,
+        policy: &'static str,
+        method: &'static str,
+        samples: &[(f64, AcceptFlag)],
+    ) {
+        if samples.is_empty() {
+            return;
+        }
+        self.stamp_started();
+        let mut g = self.shard(replica).lock().unwrap();
+        let agg = g.margins.entry((policy, method)).or_default();
+        for &(margin, flag) in samples {
+            match flag {
+                AcceptFlag::Exact => agg.exact.record(margin),
+                AcceptFlag::Relaxed => agg.relaxed.record(margin),
+                AcceptFlag::Reject => agg.reject.record(margin),
+            }
+        }
+    }
+
+    /// Record one engine device turn (the [`RoundEvent`] stream the
+    /// replicas install on their runners).
+    pub fn record_round(&self, replica: usize, ev: &RoundEvent) {
+        self.stamp_started();
+        let mut g = self.shard(replica).lock().unwrap();
+        let r = &mut g.rounds;
+        r.turns += 1;
+        r.rounds += ev.rounds;
+        r.drafted += ev.drafted;
+        r.accepted += ev.accepted;
+        if ev.relaxed > 0 {
+            r.relaxed_turns += 1;
+        }
+        r.wall_ms.record(ev.wall_ms);
+        r.accepted_per_turn.record(ev.accepted as f64);
     }
 
     /// Publish one replica's prefix-cache stats (the replica re-sends its
@@ -167,19 +371,69 @@ impl MetricsRegistry {
     ///
     /// [`snapshot_json`]: MetricsRegistry::snapshot_json
     pub fn record_cache(&self, replica: usize, stats: CacheStats) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.global.lock().unwrap();
         g.cache_by_replica.insert(replica, stats);
+    }
+
+    /// Zero every counter, histogram and the `started` elapsed stamp
+    /// (the `{"cmd":"metrics","reset":true}` RPC and the bench serve
+    /// `--reset` scraper use this between waves so scenarios do not
+    /// smear). Cache gauges clear too; replicas republish them on their
+    /// next admission.
+    pub fn reset(&self) {
+        // global first: a racing stamp_started after this point re-arms
+        // the elapsed clock for the new wave, which is what reset means
+        let mut g = self.global.lock().unwrap();
+        g.started = None;
+        g.cache_by_replica.clear();
+        self.started_stamped.store(false, Ordering::Relaxed);
+        drop(g);
+        for s in &self.shards {
+            *s.lock().unwrap() = Shard::default();
+        }
+    }
+
+    /// Merge every shard into one (snapshot-time reduction).
+    fn merged(&self) -> Shard {
+        let mut all = Shard::default();
+        for s in &self.shards {
+            all.merge(&s.lock().unwrap());
+        }
+        all
+    }
+
+    /// Resident bytes of the registry's metric storage — O(buckets ×
+    /// live key set), independent of request volume.
+    pub fn approx_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().approx_bytes())
+            .sum()
     }
 
     /// Aggregate snapshot as JSON (served by the `metrics` RPC and printed
     /// by `mars serve` on shutdown).
     pub fn snapshot_json(&self) -> Value {
-        let g = self.inner.lock().unwrap();
-        let elapsed = g
-            .started
-            .map(|t| t.elapsed().as_secs_f64())
-            .unwrap_or(0.0)
-            .max(1e-9);
+        let g = self.merged();
+        let (elapsed, cache_agg) = {
+            let gl = self.global.lock().unwrap();
+            let elapsed = gl
+                .started
+                .map(|t| t.elapsed().as_secs_f64())
+                .unwrap_or(0.0)
+                .max(1e-9);
+            let mut agg = CacheStats::default();
+            for s in gl.cache_by_replica.values() {
+                agg.hits += s.hits;
+                agg.misses += s.misses;
+                agg.insertions += s.insertions;
+                agg.evictions += s.evictions;
+                agg.tokens_saved += s.tokens_saved;
+                agg.bytes_resident += s.bytes_resident;
+                agg.entries += s.entries;
+            }
+            (elapsed, agg)
+        };
         let mut o = Value::obj();
         o.set("requests_ok", Value::Num(g.requests_ok as f64));
         o.set("requests_err", Value::Num(g.requests_err as f64));
@@ -229,25 +483,18 @@ impl MetricsRegistry {
             met.set(name, m);
         }
         o.set("method", met);
-        let mut agg = CacheStats::default();
-        for s in g.cache_by_replica.values() {
-            agg.hits += s.hits;
-            agg.misses += s.misses;
-            agg.insertions += s.insertions;
-            agg.evictions += s.evictions;
-            agg.tokens_saved += s.tokens_saved;
-            agg.bytes_resident += s.bytes_resident;
-            agg.entries += s.entries;
-        }
         let mut cache = Value::obj();
-        cache.set("hits", Value::Num(agg.hits as f64));
-        cache.set("misses", Value::Num(agg.misses as f64));
-        cache.set("hit_rate", Value::Num(agg.hit_rate()));
-        cache.set("tokens_saved", Value::Num(agg.tokens_saved as f64));
-        cache.set("insertions", Value::Num(agg.insertions as f64));
-        cache.set("evictions", Value::Num(agg.evictions as f64));
-        cache.set("bytes_resident", Value::Num(agg.bytes_resident as f64));
-        cache.set("entries", Value::Num(agg.entries as f64));
+        cache.set("hits", Value::Num(cache_agg.hits as f64));
+        cache.set("misses", Value::Num(cache_agg.misses as f64));
+        cache.set("hit_rate", Value::Num(cache_agg.hit_rate()));
+        cache.set("tokens_saved", Value::Num(cache_agg.tokens_saved as f64));
+        cache.set("insertions", Value::Num(cache_agg.insertions as f64));
+        cache.set("evictions", Value::Num(cache_agg.evictions as f64));
+        cache.set(
+            "bytes_resident",
+            Value::Num(cache_agg.bytes_resident as f64),
+        );
+        cache.set("entries", Value::Num(cache_agg.entries as f64));
         o.set("cache", cache);
         let dispatches: u64 = g.occupancy.values().sum();
         if dispatches > 0 {
@@ -271,13 +518,160 @@ impl MetricsRegistry {
             batch.set("occupancy_hist", hist);
             o.set("batch", batch);
         }
+        if !g.margins.is_empty() {
+            let mut margin = Value::obj();
+            for ((policy, method), agg) in &g.margins {
+                let mut per_outcome = Value::obj();
+                for (outcome, h) in [
+                    ("exact", &agg.exact),
+                    ("relaxed", &agg.relaxed),
+                    ("reject", &agg.reject),
+                ] {
+                    let mut v = Value::obj();
+                    v.set("count", Value::Num(h.count() as f64));
+                    v.set("mean", Value::Num(h.mean()));
+                    v.set("p50", Value::Num(h.p50()));
+                    v.set("p90", Value::Num(h.p90()));
+                    per_outcome.set(outcome, v);
+                }
+                // nested policy -> method -> outcome objects
+                let entry = match margin.get(*policy) {
+                    Some(v) => v.clone(),
+                    None => Value::obj(),
+                };
+                let mut entry = entry;
+                entry.set(method, per_outcome);
+                margin.set(policy, entry);
+            }
+            o.set("margin", margin);
+        }
+        if g.rounds.turns > 0 {
+            let r = &g.rounds;
+            let mut rounds = Value::obj();
+            rounds.set("turns", Value::Num(r.turns as f64));
+            rounds.set("rounds", Value::Num(r.rounds as f64));
+            rounds.set("drafted", Value::Num(r.drafted as f64));
+            rounds.set("accepted", Value::Num(r.accepted as f64));
+            rounds.set("relaxed_turns", Value::Num(r.relaxed_turns as f64));
+            rounds.set("wall_ms_p50", Value::Num(r.wall_ms.p50()));
+            rounds.set("wall_ms_p99", Value::Num(r.wall_ms.p99()));
+            rounds.set(
+                "accepted_per_turn_mean",
+                Value::Num(r.accepted_per_turn.mean()),
+            );
+            o.set("rounds", rounds);
+        }
         o
+    }
+
+    /// Prometheus text exposition 0.0.4 of the merged snapshot (served
+    /// by the `{"cmd":"prom"}` RPC and the `--prom-addr` endpoint).
+    pub fn render_prometheus(&self) -> String {
+        let g = self.merged();
+        let gl = self.global.lock().unwrap();
+        let elapsed = gl
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        let mut agg = CacheStats::default();
+        for s in gl.cache_by_replica.values() {
+            agg.hits += s.hits;
+            agg.misses += s.misses;
+            agg.tokens_saved += s.tokens_saved;
+            agg.bytes_resident += s.bytes_resident;
+            agg.entries += s.entries;
+        }
+        drop(gl);
+        let mut p = PromText::new();
+        p.counter("mars_requests_ok", &[], g.requests_ok as f64);
+        p.counter("mars_requests_err", &[], g.requests_err as f64);
+        p.counter("mars_tokens_out", &[], g.tokens_out as f64);
+        p.gauge("mars_uptime_seconds", &[], elapsed);
+        p.gauge("mars_tau_mean", &[], g.tau.mean());
+        p.counter("mars_relaxed_accepts_total", &[], g.relaxed.sum());
+        for (name, h) in [
+            ("mars_ttft_ms", &g.ttft_ms),
+            ("mars_tpot_ms", &g.tpot_ms),
+            ("mars_queue_ms", &g.queue_ms),
+            ("mars_decode_ms", &g.decode_ms),
+        ] {
+            p.histogram(name, &[], h, &LAT_BOUNDS_MS);
+        }
+        for (name, agg) in &g.by_policy {
+            p.counter(
+                "mars_policy_requests",
+                &[("policy", name)],
+                agg.requests as f64,
+            );
+            p.gauge(
+                "mars_policy_tau_mean",
+                &[("policy", name)],
+                agg.tau.mean(),
+            );
+        }
+        for (name, agg) in &g.by_method {
+            p.counter(
+                "mars_method_requests",
+                &[("method", name)],
+                agg.requests as f64,
+            );
+        }
+        for ((policy, method), agg) in &g.margins {
+            for (outcome, h) in [
+                ("exact", &agg.exact),
+                ("relaxed", &agg.relaxed),
+                ("reject", &agg.reject),
+            ] {
+                p.histogram(
+                    "mars_margin",
+                    &[
+                        ("policy", policy),
+                        ("method", method),
+                        ("outcome", outcome),
+                    ],
+                    h,
+                    &MARGIN_BOUNDS,
+                );
+            }
+        }
+        if g.rounds.turns > 0 {
+            p.counter("mars_round_turns", &[], g.rounds.turns as f64);
+            p.counter(
+                "mars_round_relaxed_turns",
+                &[],
+                g.rounds.relaxed_turns as f64,
+            );
+            p.histogram(
+                "mars_round_wall_ms",
+                &[],
+                &g.rounds.wall_ms,
+                &LAT_BOUNDS_MS,
+            );
+        }
+        let dispatches: u64 = g.occupancy.values().sum();
+        if dispatches > 0 {
+            p.counter("mars_batch_dispatches", &[], dispatches as f64);
+        }
+        p.gauge("mars_cache_hits", &[], agg.hits as f64);
+        p.gauge("mars_cache_misses", &[], agg.misses as f64);
+        p.gauge("mars_cache_tokens_saved", &[], agg.tokens_saved as f64);
+        p.gauge(
+            "mars_cache_bytes_resident",
+            &[],
+            agg.bytes_resident as f64,
+        );
+        p.finish()
     }
 
     /// Total requests recorded (ok + errors) — used by drain loops.
     pub fn requests_done(&self) -> u64 {
-        let g = self.inner.lock().unwrap();
-        g.requests_ok + g.requests_err
+        self.shards
+            .iter()
+            .map(|s| {
+                let g = s.lock().unwrap();
+                g.requests_ok + g.requests_err
+            })
+            .sum()
     }
 }
 
@@ -288,6 +682,7 @@ mod tests {
     fn m(tokens: usize, decode: f64) -> RequestMetrics {
         RequestMetrics {
             ok: true,
+            replica: 0,
             tokens,
             decode_seconds: decode,
             prefill_seconds: 0.01,
@@ -310,7 +705,8 @@ mod tests {
         assert_eq!(v.get("tokens_out").unwrap().as_usize(), Some(40));
         assert_eq!(v.get("tau_mean").unwrap().as_f64(), Some(5.0));
         assert!(v.get("decode_ms_p99").unwrap().as_f64().unwrap() >= 100.0);
-        // ttft is the measured submit→first-token time, 20 ms here
+        // ttft is the measured submit→first-token time, 20 ms here (a
+        // constant stream is quantile-exact: min/max clamping)
         let ttft = v.get("ttft_ms_p50").unwrap().as_f64().unwrap();
         assert!((ttft - 20.0).abs() < 1e-9, "{ttft}");
         // tpot = decode / tokens = 10 ms/tok for both samples
@@ -318,6 +714,22 @@ mod tests {
             let tpot = v.get(q).unwrap().as_f64().unwrap();
             assert!((tpot - 10.0).abs() < 1e-9, "{q} = {tpot}");
         }
+    }
+
+    #[test]
+    fn shards_merge_across_replicas() {
+        let r = MetricsRegistry::new();
+        for replica in 0..20 {
+            r.record(RequestMetrics { replica, ..m(10, 0.1) });
+        }
+        let v = r.snapshot_json();
+        assert_eq!(v.get("requests_ok").unwrap().as_usize(), Some(20));
+        assert_eq!(v.get("tokens_out").unwrap().as_usize(), Some(200));
+        assert_eq!(
+            v.path(&["policy", "mars", "requests"]).unwrap().as_usize(),
+            Some(20)
+        );
+        assert_eq!(r.requests_done(), 20);
     }
 
     #[test]
@@ -374,6 +786,77 @@ mod tests {
     }
 
     #[test]
+    fn margin_histograms_split_by_outcome() {
+        let r = MetricsRegistry::new();
+        // no margins recorded -> no "margin" object at all
+        assert!(r.snapshot_json().get("margin").is_none());
+        r.record_margins(
+            0,
+            "mars",
+            "eagle_tree",
+            &[
+                (0.95, AcceptFlag::Relaxed),
+                (0.92, AcceptFlag::Relaxed),
+                (0.99, AcceptFlag::Exact),
+                (0.30, AcceptFlag::Reject),
+            ],
+        );
+        // a second replica's samples for the same pair must merge in
+        r.record_margins(1, "mars", "eagle_tree", &[(0.91, AcceptFlag::Relaxed)]);
+        let v = r.snapshot_json();
+        let mk = |outcome: &str, field: &str| {
+            v.path(&["margin", "mars", "eagle_tree", outcome, field])
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(mk("relaxed", "count"), 3.0);
+        assert_eq!(mk("exact", "count"), 1.0);
+        assert_eq!(mk("reject", "count"), 1.0);
+        // exact means survive bucketing
+        let mean = mk("relaxed", "mean");
+        assert!((mean - (0.95 + 0.92 + 0.91) / 3.0).abs() < 1e-12, "{mean}");
+        // relaxed accepts concentrate high, rejects low — the paper's
+        // low-margin-regime split must be visible in the snapshot
+        assert!(mk("relaxed", "p50") > mk("reject", "p50"));
+    }
+
+    #[test]
+    fn round_events_aggregate() {
+        let r = MetricsRegistry::new();
+        assert!(r.snapshot_json().get("rounds").is_none());
+        for turn in 0..4u64 {
+            r.record_round(
+                0,
+                &RoundEvent {
+                    turn,
+                    rounds: 1,
+                    drafted: 7,
+                    accepted: 5,
+                    relaxed: u64::from(turn % 2 == 0),
+                    wall_ms: 2.0,
+                    ..Default::default()
+                },
+            );
+        }
+        let v = r.snapshot_json();
+        assert_eq!(
+            v.path(&["rounds", "turns"]).unwrap().as_usize(),
+            Some(4)
+        );
+        assert_eq!(
+            v.path(&["rounds", "drafted"]).unwrap().as_usize(),
+            Some(28)
+        );
+        assert_eq!(
+            v.path(&["rounds", "relaxed_turns"]).unwrap().as_usize(),
+            Some(2)
+        );
+        let wall = v.path(&["rounds", "wall_ms_p50"]).unwrap().as_f64().unwrap();
+        assert!((wall - 2.0).abs() < 1e-9, "{wall}");
+    }
+
+    #[test]
     fn cache_gauges_sum_across_replicas() {
         let r = MetricsRegistry::new();
         let one = CacheStats {
@@ -405,7 +888,7 @@ mod tests {
         // no batched dispatches recorded -> no "batch" object at all
         assert!(r.snapshot_json().get("batch").is_none());
         for occ in [1, 4, 4, 4, 3] {
-            r.record_occupancy(occ);
+            r.record_occupancy(0, occ);
         }
         let v = r.snapshot_json();
         let b = v.get("batch").unwrap();
@@ -426,5 +909,71 @@ mod tests {
         assert_eq!(v.get("requests_err").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("requests_ok").unwrap().as_usize(), Some(0));
         assert_eq!(r.requests_done(), 1);
+    }
+
+    #[test]
+    fn reset_zeroes_counters_and_elapsed_stamp() {
+        let r = MetricsRegistry::new();
+        r.record(m(10, 0.1));
+        r.record_occupancy(0, 4);
+        r.record_margins(0, "mars", "eagle_tree", &[(0.9, AcceptFlag::Relaxed)]);
+        r.record_cache(0, CacheStats { hits: 1, ..CacheStats::default() });
+        assert_eq!(r.requests_done(), 1);
+        r.reset();
+        let v = r.snapshot_json();
+        assert_eq!(v.get("requests_ok").unwrap().as_usize(), Some(0));
+        assert!(v.get("batch").is_none());
+        assert!(v.get("margin").is_none());
+        assert_eq!(v.path(&["cache", "hits"]).unwrap().as_usize(), Some(0));
+        assert_eq!(r.requests_done(), 0);
+        // the elapsed stamp re-arms: the next record restarts the clock
+        r.record(m(10, 0.1));
+        assert_eq!(r.requests_done(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_carries_margin_histograms() {
+        let r = MetricsRegistry::new();
+        r.record(m(10, 0.1));
+        r.record_margins(
+            0,
+            "mars",
+            "eagle_tree",
+            &[(0.95, AcceptFlag::Relaxed), (0.2, AcceptFlag::Reject)],
+        );
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE mars_requests_ok counter"), "{text}");
+        assert!(text.contains("mars_requests_ok 1"), "{text}");
+        assert!(text.contains("# TYPE mars_margin histogram"), "{text}");
+        assert!(
+            text.contains(
+                "mars_margin_bucket{policy=\"mars\",method=\"eagle_tree\",\
+                 outcome=\"relaxed\",le=\"+Inf\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("mars_ttft_ms_count 1"), "{text}");
+    }
+
+    #[test]
+    fn memory_is_bounded_by_buckets_not_requests() {
+        let r = MetricsRegistry::new();
+        for i in 0..1_000usize {
+            r.record(RequestMetrics { replica: i % 4, ..m(10, 0.1) });
+        }
+        let before = r.approx_bytes();
+        // a further million requests over the same key set must not
+        // grow the registry at all — O(buckets), not O(requests)
+        for i in 0..1_000_000usize {
+            r.record(RequestMetrics { replica: i % 4, ..m(10, 0.1) });
+        }
+        let after = r.approx_bytes();
+        assert_eq!(
+            before, after,
+            "registry grew with request volume: {before} -> {after}"
+        );
+        // fixed ceiling: 8 shards of fixed histograms + one live
+        // policy/method/margin key set stays well under 8 MB
+        assert!(after < 8 << 20, "registry resident bytes {after}");
     }
 }

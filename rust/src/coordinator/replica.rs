@@ -47,8 +47,11 @@ use std::time::{Duration, Instant};
 use crate::cache::{CacheConfig, SharedPrefixCache};
 use crate::coordinator::metrics::{MetricsRegistry, RequestMetrics};
 use crate::coordinator::request::{Response, StreamDelta, WorkItem};
-use crate::engine::{BatchRunner, SeqRunner};
+use crate::engine::{BatchRunner, GenParams, GenResult, SeqRunner};
+use crate::obs::round::RoundEvent;
+use crate::obs::trace::{Phase, TraceEvent, TraceWriter};
 use crate::runtime::Runtime;
+use crate::verify::AcceptFlag;
 
 /// Handle to one engine-replica thread (see the module doc).
 pub struct EngineReplica {
@@ -93,6 +96,11 @@ pub struct ReplicaConfig {
     /// interleaved loop; so do pre-batching artifact sets, silently —
     /// capability is detected, not configured.
     pub batch: usize,
+    /// Shared JSONL span-trace writer (`mars serve --trace FILE`,
+    /// DESIGN.md §12): when set, every request logs queue → prefill →
+    /// round → commit lines through it. `None` = tracing off (the
+    /// default); the replica pays nothing beyond the `Option` check.
+    pub trace: Option<Arc<TraceWriter>>,
 }
 
 impl EngineReplica {
@@ -196,7 +204,7 @@ fn replica_loop(
     rt: &Runtime,
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
-    metrics: &MetricsRegistry,
+    metrics: &Arc<MetricsRegistry>,
     ctl: &LoopCtl<'_>,
 ) {
     // capability-gated dispatch (module doc): `--batch N` only engages
@@ -210,9 +218,14 @@ fn replica_loop(
 }
 
 /// Error-path metrics for a request that never produced tokens.
-fn failed_metrics(item: &WorkItem, queue_seconds: f64) -> RequestMetrics {
+fn failed_metrics(
+    replica: usize,
+    item: &WorkItem,
+    queue_seconds: f64,
+) -> RequestMetrics {
     RequestMetrics {
         ok: false,
+        replica,
         tokens: 0,
         decode_seconds: 0.0,
         prefill_seconds: 0.0,
@@ -225,12 +238,91 @@ fn failed_metrics(item: &WorkItem, queue_seconds: f64) -> RequestMetrics {
     }
 }
 
+/// Log one span line through the optional trace writer (DESIGN.md §12).
+fn trace_span(
+    trace: &Option<Arc<TraceWriter>>,
+    id: u64,
+    replica: usize,
+    phase: Phase,
+    fill: impl FnOnce(&mut TraceEvent),
+) {
+    if let Some(t) = trace {
+        let mut ev = TraceEvent::new(t.now_ms(), id, replica, phase);
+        fill(&mut ev);
+        t.log(&ev);
+    }
+}
+
+/// Terminal accounting of one successful request (shared by both
+/// loops): request id + the queue/TTFT stamps the loop kept.
+struct DoneStamps {
+    rid: u64,
+    queue_seconds: f64,
+    ttft_seconds: f64,
+}
+
+/// Success-path bookkeeping shared by both loops: the counter record,
+/// the probe-surfaced decision margins split by outcome (when the
+/// request carried `"probe": true`), and the terminal trace line.
+fn record_success(
+    replica: usize,
+    metrics: &MetricsRegistry,
+    trace: &Option<Arc<TraceWriter>>,
+    done: DoneStamps,
+    params: &GenParams,
+    result: &GenResult,
+) {
+    metrics.record(RequestMetrics {
+        ok: true,
+        replica,
+        tokens: result.tokens.len(),
+        decode_seconds: result.decode_seconds,
+        prefill_seconds: result.prefill_seconds,
+        queue_seconds: done.queue_seconds,
+        ttft_seconds: done.ttft_seconds,
+        tau: result.tau(),
+        relaxed_accepts: result.snapshot.relaxed_accepts,
+        policy: params.policy.name(),
+        method: params.method.name(),
+    });
+    if let Some(p) = &result.probe {
+        // decisive-position target margin z2/z1 — the same ratio the
+        // offline analyze figures plot, now split by accept outcome
+        let samples: Vec<(f64, AcceptFlag)> = p
+            .entries
+            .iter()
+            .map(|e| {
+                let m = if e.z1 > 0.0 && e.z2 > 0.0 {
+                    (e.z2 / e.z1) as f64
+                } else {
+                    0.0
+                };
+                (m, e.flag)
+            })
+            .collect();
+        metrics.record_margins(
+            replica,
+            params.policy.name(),
+            params.method.name(),
+            &samples,
+        );
+    }
+    trace_span(trace, done.rid, replica, Phase::Commit, |ev| {
+        ev.wall_ms = Some(result.decode_seconds * 1e3);
+        ev.tokens = Some(result.tokens.len() as u64);
+        ev.tau = Some(result.tau());
+        ev.ok = Some(true);
+        ev.policy = Some(params.policy.name().to_string());
+        ev.method = Some(params.method.name().to_string());
+    });
+}
+
 fn interleaved_loop(
     id: usize,
     rt: &Runtime,
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
-    metrics: &MetricsRegistry,
+    metrics: &Arc<MetricsRegistry>,
     ctl: &LoopCtl<'_>,
 ) {
     let mut active: Vec<Active<'_>> = Vec::new();
@@ -328,6 +420,44 @@ fn interleaved_loop(
                             }
                         }));
                     }
+                    // per-turn telemetry: fan each RoundEvent into the
+                    // sharded registry and (when tracing) the span log
+                    {
+                        let mreg = metrics.clone();
+                        let tr = cfg.trace.clone();
+                        let rid = item.request.id;
+                        runner.set_round_sink(Box::new(
+                            move |ev: &RoundEvent| {
+                                mreg.record_round(id, ev);
+                                trace_span(
+                                    &tr,
+                                    rid,
+                                    id,
+                                    Phase::Round,
+                                    |te| te.round = Some(*ev),
+                                );
+                            },
+                        ));
+                    }
+                    trace_span(
+                        &cfg.trace,
+                        item.request.id,
+                        id,
+                        Phase::Queue,
+                        |te| te.wall_ms = Some(queue_seconds * 1e3),
+                    );
+                    trace_span(
+                        &cfg.trace,
+                        item.request.id,
+                        id,
+                        Phase::Prefill,
+                        |te| {
+                            te.wall_ms =
+                                Some(runner.prefill_seconds * 1e3);
+                            te.cached_tokens =
+                                Some(runner.prefill_cached_tokens as u64);
+                        },
+                    );
                     active.push(Active {
                         runner,
                         item,
@@ -341,7 +471,14 @@ fn interleaved_loop(
                         item.request.id,
                         &format!("prefill failed: {e:#}"),
                     );
-                    metrics.record(failed_metrics(&item, queue_seconds));
+                    metrics.record(failed_metrics(id, &item, queue_seconds));
+                    trace_span(
+                        &cfg.trace,
+                        item.request.id,
+                        id,
+                        Phase::Error,
+                        |te| te.ok = Some(false),
+                    );
                     let _ = item.reply.send(resp);
                 }
             }
@@ -383,20 +520,20 @@ fn interleaved_loop(
                         params,
                     );
                     resp.canceled = canceled;
-                    metrics.record(RequestMetrics {
-                        ok: true,
-                        tokens: result.tokens.len(),
-                        decode_seconds: result.decode_seconds,
-                        prefill_seconds: result.prefill_seconds,
-                        queue_seconds: a.queue_seconds,
-                        ttft_seconds: a.ttft_seconds.unwrap_or(
-                            a.queue_seconds + result.prefill_seconds,
-                        ),
-                        tau: result.tau(),
-                        relaxed_accepts: result.snapshot.relaxed_accepts,
-                        policy: params.policy.name(),
-                        method: params.method.name(),
-                    });
+                    record_success(
+                        id,
+                        metrics,
+                        &cfg.trace,
+                        DoneStamps {
+                            rid: a.item.request.id,
+                            queue_seconds: a.queue_seconds,
+                            ttft_seconds: a.ttft_seconds.unwrap_or(
+                                a.queue_seconds + result.prefill_seconds,
+                            ),
+                        },
+                        params,
+                        &result,
+                    );
                     let _ = a.item.reply.send(resp);
                     true
                 }
@@ -406,7 +543,15 @@ fn interleaved_loop(
                         a.item.request.id,
                         &format!("decode failed: {e:#}"),
                     ));
-                    metrics.record(failed_metrics(&a.item, a.queue_seconds));
+                    metrics
+                        .record(failed_metrics(id, &a.item, a.queue_seconds));
+                    trace_span(
+                        &cfg.trace,
+                        a.item.request.id,
+                        id,
+                        Phase::Error,
+                        |te| te.ok = Some(false),
+                    );
                     true
                 }
             };
@@ -475,10 +620,12 @@ struct BatchLane {
 
 /// Send the final response + metrics for one finished batched lane.
 fn deliver_batched(
+    id: usize,
     lane: BatchLane,
-    result: anyhow::Result<crate::engine::GenResult>,
+    result: anyhow::Result<GenResult>,
     canceled: bool,
     metrics: &MetricsRegistry,
+    trace: &Option<Arc<TraceWriter>>,
 ) {
     match result {
         Ok(result) => {
@@ -497,22 +644,25 @@ fn deliver_batched(
                     lane.item.submitted_at.elapsed().as_secs_f64()
                 }
             });
-            metrics.record(RequestMetrics {
-                ok: true,
-                tokens: result.tokens.len(),
-                decode_seconds: result.decode_seconds,
-                prefill_seconds: result.prefill_seconds,
-                queue_seconds: lane.queue_seconds,
-                ttft_seconds: ttft,
-                tau: result.tau(),
-                relaxed_accepts: result.snapshot.relaxed_accepts,
-                policy: params.policy.name(),
-                method: params.method.name(),
-            });
+            record_success(
+                id,
+                metrics,
+                trace,
+                DoneStamps {
+                    rid: lane.item.request.id,
+                    queue_seconds: lane.queue_seconds,
+                    ttft_seconds: ttft,
+                },
+                params,
+                &result,
+            );
             let _ = lane.item.reply.send(resp);
         }
         Err(e) => {
-            metrics.record(failed_metrics(&lane.item, lane.queue_seconds));
+            metrics.record(failed_metrics(id, &lane.item, lane.queue_seconds));
+            trace_span(trace, lane.item.request.id, id, Phase::Error, |te| {
+                te.ok = Some(false)
+            });
             let _ = lane.item.reply.send(Response::from_error(
                 lane.item.request.id,
                 &format!("decode failed: {e:#}"),
@@ -529,7 +679,7 @@ fn batched_loop(
     rt: &Runtime,
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
-    metrics: &MetricsRegistry,
+    metrics: &Arc<MetricsRegistry>,
     ctl: &LoopCtl<'_>,
 ) {
     let mut runner = match BatchRunner::new(rt) {
@@ -646,6 +796,45 @@ fn batched_loop(
                             }),
                         );
                     }
+                    // per-turn telemetry (same fan-out as the
+                    // interleaved loop; events carry the occupancy)
+                    {
+                        let mreg = metrics.clone();
+                        let tr = cfg.trace.clone();
+                        let rid = item.request.id;
+                        runner.set_round_sink(
+                            slot,
+                            Box::new(move |ev: &RoundEvent| {
+                                mreg.record_round(id, ev);
+                                trace_span(
+                                    &tr,
+                                    rid,
+                                    id,
+                                    Phase::Round,
+                                    |te| te.round = Some(*ev),
+                                );
+                            }),
+                        );
+                    }
+                    trace_span(
+                        &cfg.trace,
+                        item.request.id,
+                        id,
+                        Phase::Queue,
+                        |te| te.wall_ms = Some(queue_seconds * 1e3),
+                    );
+                    if let Some((pf, cached)) = runner.prefill_stats(slot) {
+                        trace_span(
+                            &cfg.trace,
+                            item.request.id,
+                            id,
+                            Phase::Prefill,
+                            |te| {
+                                te.wall_ms = Some(pf * 1e3);
+                                te.cached_tokens = Some(cached as u64);
+                            },
+                        );
+                    }
                     lanes[slot] = Some(BatchLane {
                         item,
                         queue_seconds,
@@ -658,7 +847,14 @@ fn batched_loop(
                         item.request.id,
                         &format!("prefill failed: {e:#}"),
                     );
-                    metrics.record(failed_metrics(&item, queue_seconds));
+                    metrics.record(failed_metrics(id, &item, queue_seconds));
+                    trace_span(
+                        &cfg.trace,
+                        item.request.id,
+                        id,
+                        Phase::Error,
+                        |te| te.ok = Some(false),
+                    );
                     let _ = item.reply.send(resp);
                 }
             }
@@ -680,7 +876,7 @@ fn batched_loop(
             // the cancel scan above only selects occupied slots, so the
             // lane is live; a None here would be a bookkeeping bug
             let Some(lane) = lanes[slot].take() else { continue };
-            deliver_batched(lane, done, true, metrics);
+            deliver_batched(id, lane, done, true, metrics, &cfg.trace);
             ctl.active.store(runner.occupancy(), Ordering::Relaxed);
             publish_cache(&cache);
         }
@@ -688,14 +884,21 @@ fn batched_loop(
             continue;
         }
         // ---- one shared dispatch for every live lane ------------------
-        metrics.record_occupancy(runner.occupancy());
+        metrics.record_occupancy(id, runner.occupancy());
         match runner.step() {
             Ok(finished) => {
                 for (slot, result) in finished {
                     // the runner only reports slots it stepped, which are
                     // exactly the occupied lanes
                     let Some(lane) = lanes[slot].take() else { continue };
-                    deliver_batched(lane, Ok(result), false, metrics);
+                    deliver_batched(
+                        id,
+                        lane,
+                        Ok(result),
+                        false,
+                        metrics,
+                        &cfg.trace,
+                    );
                     publish_cache(&cache);
                 }
                 // stamp TTFT on lanes whose first token landed this turn
@@ -721,6 +924,7 @@ fn batched_loop(
                 for slot in 0..lanes.len() {
                     if let Some(lane) = lanes[slot].take() {
                         metrics.record(failed_metrics(
+                            id,
                             &lane.item,
                             lane.queue_seconds,
                         ));
@@ -737,7 +941,7 @@ fn batched_loop(
                             "replica {id}: batch session lost ({e2:#})"
                         );
                         for item in pending.drain(..) {
-                            metrics.record(failed_metrics(&item, 0.0));
+                            metrics.record(failed_metrics(id, &item, 0.0));
                             let _ = item.reply.send(Response::from_error(
                                 item.request.id,
                                 "replica lost its device batch",

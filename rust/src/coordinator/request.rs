@@ -252,6 +252,14 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
         None => true,
         Some(x) => x.as_bool().ok_or("'cache' must be a boolean")?,
     };
+    // margin telemetry opt-in (DESIGN.md §12): dump the device probe
+    // ring at finalize so the registry's margin-by-outcome histograms
+    // see this request's decisive z2/z1 ratios (solo/interleaved lanes
+    // only; batched lanes don't dump probes)
+    let probe = match v.get("probe") {
+        None => false,
+        Some(x) => x.as_bool().ok_or("'probe' must be a boolean")?,
+    };
     // the policy is clamped to device-executable form so the echoed
     // label and the per-policy metrics describe the rule that actually ran
     let mut params = GenParams {
@@ -282,6 +290,7 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
             .ok_or("'rounds_per_call' must be a positive integer")?;
     }
     params.cache = cache;
+    params.probe = probe;
     Ok(Request { id, prompt, params, stream, pack_specified })
 }
 
@@ -504,6 +513,16 @@ mod tests {
             let v = Value::parse(bad).unwrap();
             assert!(parse_request_json(1, &v).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn parses_probe_opt_in() {
+        let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert!(!parse_request_json(1, &v).unwrap().params.probe);
+        let v = Value::parse(r#"{"prompt": "hi", "probe": true}"#).unwrap();
+        assert!(parse_request_json(1, &v).unwrap().params.probe);
+        let v = Value::parse(r#"{"prompt": "hi", "probe": 1}"#).unwrap();
+        assert!(parse_request_json(1, &v).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::coordinator::request::{
     Request, RequestId, Response, StreamSink, WorkItem,
 };
 use crate::engine::GenParams;
+use crate::obs::trace::TraceWriter;
 
 /// Replica-assignment policy (`--route rr|ll|prefix`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,6 +137,34 @@ impl Router {
         pack: usize,
         batch: usize,
     ) -> Result<Router> {
+        Router::start_traced(
+            artifact_dir,
+            n_replicas,
+            slots,
+            hostloop,
+            policy,
+            cache,
+            pack,
+            batch,
+            None,
+        )
+    }
+
+    /// [`Router::start`] with a shared span-trace writer (`mars serve
+    /// --trace FILE`, DESIGN.md §12): every replica logs queue →
+    /// prefill → round → commit lines for each request it serves.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_traced(
+        artifact_dir: &Path,
+        n_replicas: usize,
+        slots: usize,
+        hostloop: bool,
+        policy: RouterPolicy,
+        cache: crate::cache::CacheConfig,
+        pack: usize,
+        batch: usize,
+        trace: Option<Arc<TraceWriter>>,
+    ) -> Result<Router> {
         let metrics = Arc::new(MetricsRegistry::new());
         let mut replicas = Vec::new();
         let mut senders = Vec::new();
@@ -152,6 +181,7 @@ impl Router {
                     cache,
                     pack,
                     batch,
+                    trace: trace.clone(),
                 },
                 rx,
                 metrics.clone(),

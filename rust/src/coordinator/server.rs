@@ -75,6 +75,8 @@
 //! ```text
 //! -> {"cmd": "ping"}                  <- {"pong": true}
 //! -> {"cmd": "metrics"}               <- {"requests_ok": ..., "ttft_ms_p50": ...}
+//! -> {"cmd": "metrics", "reset": true} <- snapshot, then counters zeroed
+//! -> {"cmd": "prom"}                  <- {"prom": "# TYPE mars_requests_ok counter\n..."}
 //! -> {"cmd": "cancel", "id": 2}       <- {"cmd": "cancel", "id": 2, "ok": true}
 //! -> {"cmd": "shutdown"}              <- {"ok": true}
 //! ```
@@ -88,6 +90,22 @@
 //! replies are flushed before the connection closes (`mars serve` polls
 //! [`Router::active_total`] down to zero, bounded at 60 s, before
 //! exiting).
+//!
+//! ## Telemetry (DESIGN.md §12)
+//!
+//! `{"cmd": "metrics", "reset": true}` replies with the snapshot *then*
+//! zeroes every counter, histogram and the elapsed stamp — the bench
+//! serve `--reset` scraper uses it between waves so scenarios don't
+//! smear into each other. `{"cmd": "prom"}` replies with the Prometheus
+//! text exposition (format 0.0.4) in a `"prom"` string field — the same
+//! body `mars serve --prom-addr` serves over HTTP. A generation request
+//! may carry `"probe": true` to opt into the margin telemetry: the
+//! device probe ring is dumped at finalize and the decisive z2/z1
+//! margins land in the registry's margin-by-outcome histograms
+//! (solo/interleaved lanes only; batched lanes don't dump probes).
+//! `mars serve --trace FILE` additionally logs every request's
+//! queue → prefill → round → commit spans as JSONL
+//! (`crate::obs::trace`; summarize with `mars trace summarize FILE`).
 
 // Serving-layer lint wall (DESIGN.md §11): a panic here takes the whole
 // connection or replica down, so unwrap/expect are denied outright in
@@ -275,7 +293,23 @@ fn handle_cmd(
     wtx: &Sender<String>,
 ) -> bool {
     let reply = match cmd {
-        "metrics" => router.metrics.snapshot_json(),
+        "metrics" => {
+            let snap = router.metrics.snapshot_json();
+            // snapshot-then-zero: the reply carries the pre-reset truth,
+            // so a scraper loses nothing across the wave boundary
+            if v.get("reset").and_then(|b| b.as_bool()) == Some(true) {
+                router.metrics.reset();
+            }
+            snap
+        }
+        "prom" => {
+            let mut o = Value::obj();
+            o.set(
+                "prom",
+                Value::Str(router.metrics.render_prometheus()),
+            );
+            o
+        }
         "ping" => {
             let mut o = Value::obj();
             o.set("pong", Value::Bool(true));

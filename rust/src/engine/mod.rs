@@ -43,6 +43,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::SharedPrefixCache;
+use crate::obs::round::{RoundEvent, RoundSink};
 use crate::runtime::state::{ProbeDump, Snapshot};
 use crate::runtime::Runtime;
 #[allow(unused_imports)]
@@ -220,12 +221,73 @@ pub struct SeqRunner<'a> {
     on_commit: Option<OnCommit>,
     /// Tokens already reported through `on_commit`.
     reported: usize,
+    /// Per-turn telemetry sink (DESIGN.md §12): receives one
+    /// [`RoundEvent`] after every snapshot pull.
+    round_sink: Option<Box<dyn RoundSink>>,
+    /// Previous-snapshot counters backing the sink's per-turn deltas.
+    cursor: RoundCursor,
 }
 
 /// Round-commit callback type (see [`SeqRunner::set_on_commit`]). The
 /// argument is the *entire* committed token prefix, not just the new
 /// tail, so sinks can diff text without tracking token state.
 pub type OnCommit = Box<dyn FnMut(&[u32]) + Send>;
+
+/// Snapshot counters at the previous commit: subtracting them from the
+/// fresh snapshot yields one device turn's [`RoundEvent`] deltas
+/// (DESIGN.md §12). The device counters are monotone f64 accumulators
+/// holding small integers, so clamped rounded differences are exact.
+#[derive(Debug, Clone, Copy, Default)]
+struct RoundCursor {
+    turn: u64,
+    rounds: f64,
+    draft_steps: f64,
+    exact: f64,
+    relaxed: f64,
+    rejects: f64,
+    committed: f64,
+}
+
+impl RoundCursor {
+    /// Build this turn's event from the fresh snapshot and advance the
+    /// cursor past it.
+    fn advance(
+        &mut self,
+        snap: &Snapshot,
+        wall_ms: f64,
+        pack: u64,
+        occupancy: u64,
+    ) -> RoundEvent {
+        let d = |now: f64, before: f64| (now - before).max(0.0) as u64;
+        let exact = d(snap.exact_accepts, self.exact);
+        let relaxed = d(snap.relaxed_accepts, self.relaxed);
+        let ev = RoundEvent {
+            turn: self.turn,
+            rounds: d(snap.rounds, self.rounds),
+            drafted: d(snap.draft_steps, self.draft_steps),
+            accepted: exact + relaxed,
+            exact,
+            relaxed,
+            rejects: d(snap.rejects, self.rejects),
+            committed: d(snap.committed, self.committed),
+            last_accept: snap.last_accept.max(0.0) as u64,
+            margin: None,
+            wall_ms,
+            sim_units: None,
+            pack,
+            occupancy,
+            finished: snap.finished,
+        };
+        self.turn += 1;
+        self.rounds = snap.rounds;
+        self.draft_steps = snap.draft_steps;
+        self.exact = snap.exact_accepts;
+        self.relaxed = snap.relaxed_accepts;
+        self.rejects = snap.rejects;
+        self.committed = snap.committed;
+        ev
+    }
+}
 
 /// Clamp the requested `rounds_per_call` to the artifact's `PACK_MAX`:
 /// the device clamps its fused loop to the same bound, so the round
@@ -361,6 +423,8 @@ impl<'a> SeqRunner<'a> {
             decode_seconds: 0.0,
             on_commit: None,
             reported: 0,
+            round_sink: None,
+            cursor: RoundCursor::default(),
         })
     }
 
@@ -372,6 +436,15 @@ impl<'a> SeqRunner<'a> {
     /// decodes each token independently, so prefixes are stable).
     pub fn set_on_commit(&mut self, cb: OnCommit) {
         self.on_commit = Some(cb);
+    }
+
+    /// Install the per-turn telemetry sink: after every
+    /// [`SeqRunner::step`] snapshot pull, the sink receives one
+    /// [`RoundEvent`] carrying that turn's counter deltas, wall time and
+    /// pack (DESIGN.md §12). Orthogonal to [`SeqRunner::set_on_commit`]
+    /// — streaming reports tokens, the sink reports accept behavior.
+    pub fn set_round_sink(&mut self, sink: Box<dyn RoundSink>) {
+        self.round_sink = Some(sink);
     }
 
     /// Tokens committed so far (clamped to `max_new`).
@@ -423,17 +496,19 @@ impl<'a> SeqRunner<'a> {
         if self.decode_started.is_none() {
             self.decode_started = Some(t);
         }
+        let pack;
         match self.multi_exec {
             Some(exec) => {
-                let pack = self.next_pack();
-                if pack > 1 {
-                    self.sess.round_packed(exec, pack)?;
+                let p = self.next_pack();
+                if p > 1 {
+                    self.sess.round_packed(exec, p)?;
                 } else {
                     // a single round needs no pack argument — drive the
                     // plain program (also what the TTFT guard runs)
                     self.sess.round(self.source.exec_name())?;
                 }
-                self.spins += pack;
+                self.spins += p;
+                pack = p as u64;
             }
             None => {
                 let every = self.params.extract_every.max(1);
@@ -444,13 +519,20 @@ impl<'a> SeqRunner<'a> {
                     }
                     self.spins += 1;
                 }
+                pack = 1;
             }
         }
         let snap = self.sess.extract()?;
         self.history = self.prompt.clone();
         self.history.extend(&snap.tokens);
-        self.decode_seconds += t.elapsed().as_secs_f64();
+        let dt = t.elapsed().as_secs_f64();
+        self.decode_seconds += dt;
         self.fire_on_commit(&snap);
+        if let Some(sink) = &mut self.round_sink {
+            // solo decode: occupancy 1 by construction
+            let ev = self.cursor.advance(&snap, dt * 1e3, pack, 1);
+            sink.on_round(&ev);
+        }
         if snap.finished || self.spins >= self.round_cap {
             return Ok(Some(self.finalize(snap)?));
         }
@@ -543,6 +625,10 @@ struct Lane {
     decode_seconds: f64,
     on_commit: Option<OnCommit>,
     reported: usize,
+    /// Per-turn telemetry sink (mirrors [`SeqRunner`]'s; DESIGN.md §12).
+    round_sink: Option<Box<dyn RoundSink>>,
+    /// Previous-snapshot counters backing the sink's per-turn deltas.
+    cursor: RoundCursor,
     /// Dispatches this lane's stream participated in (prefill + join are
     /// dedicated; batched rounds count once per participating lane).
     device_calls: u64,
@@ -565,6 +651,19 @@ impl Lane {
                 cb(&snap.tokens[..n]);
             }
             self.reported = n;
+        }
+    }
+
+    fn fire_round(
+        &mut self,
+        snap: &Snapshot,
+        wall_ms: f64,
+        pack: u64,
+        occupancy: u64,
+    ) {
+        if let Some(sink) = &mut self.round_sink {
+            let ev = self.cursor.advance(snap, wall_ms, pack, occupancy);
+            sink.on_round(&ev);
         }
     }
 }
@@ -707,6 +806,8 @@ impl<'a> BatchRunner<'a> {
             decode_seconds: 0.0,
             on_commit: None,
             reported: 0,
+            round_sink: None,
+            cursor: RoundCursor::default(),
             device_calls: dedicated,
             dispatch_share: dedicated as f64,
             cancel: false,
@@ -720,6 +821,15 @@ impl<'a> BatchRunner<'a> {
     pub fn set_on_commit(&mut self, slot: usize, cb: OnCommit) {
         if let Some(l) = self.lanes.get_mut(slot).and_then(|l| l.as_mut()) {
             l.on_commit = Some(cb);
+        }
+    }
+
+    /// Install `slot`'s per-turn telemetry sink (same contract as
+    /// [`SeqRunner::set_round_sink`]; events carry the batch occupancy
+    /// of each dispatch).
+    pub fn set_round_sink(&mut self, slot: usize, sink: Box<dyn RoundSink>) {
+        if let Some(l) = self.lanes.get_mut(slot).and_then(|l| l.as_mut()) {
+            l.round_sink = Some(sink);
         }
     }
 
@@ -741,6 +851,16 @@ impl<'a> BatchRunner<'a> {
             }
             _ => 1,
         }
+    }
+
+    /// `slot`'s prefill accounting: (wall seconds, cache-restored
+    /// tokens). `None` for an empty slot. The serving layer logs this as
+    /// the prefill span of the request's trace (DESIGN.md §12).
+    pub fn prefill_stats(&self, slot: usize) -> Option<(f64, usize)> {
+        self.lanes
+            .get(slot)
+            .and_then(|l| l.as_ref())
+            .map(|l| (l.prefill_seconds, l.prefill_cached_tokens))
     }
 
     /// Tokens `slot` has committed so far (clamped to its `max_new`).
@@ -765,7 +885,7 @@ impl<'a> BatchRunner<'a> {
         let t = Instant::now();
         let calls_before = self.sess.device_calls;
         let exec = self.batch_exec.expect("live lanes imply a family");
-        if exec == "verify_ext_batch" {
+        let turn_packs: Vec<usize> = if exec == "verify_ext_batch" {
             // host-drafted lanes: fresh per-lane draft blocks each round
             let drafts: Vec<Vec<u32>> = self
                 .lanes
@@ -779,6 +899,7 @@ impl<'a> BatchRunner<'a> {
                 })
                 .collect();
             self.sess.round_ext(&drafts)?;
+            vec![1; self.lanes.len()]
         } else {
             let packs: Vec<usize> = self
                 .lanes
@@ -807,7 +928,8 @@ impl<'a> BatchRunner<'a> {
                 }
                 _ => self.sess.round(exec)?,
             }
-        }
+            packs
+        };
         let snaps = self.sess.extract_all()?;
         let dt = t.elapsed().as_secs_f64();
         let turn_calls = self.sess.device_calls - calls_before;
@@ -824,6 +946,12 @@ impl<'a> BatchRunner<'a> {
             lane.history = lane.prompt.clone();
             lane.history.extend(&snap.tokens);
             lane.fire_on_commit(snap);
+            lane.fire_round(
+                snap,
+                dt * 1e3,
+                turn_packs[slot] as u64,
+                occ as u64,
+            );
             if snap.finished || lane.cancel || lane.spins >= lane.round_cap
             {
                 done.push(slot);
@@ -966,6 +1094,47 @@ mod tests {
         // at/past the budget the caller finalizes; never return 0
         assert_eq!(effective_pack(8, usize::MAX, 64, 64), 1);
         assert_eq!(effective_pack(8, usize::MAX, 80, 64), 1);
+    }
+
+    #[test]
+    fn round_cursor_emits_snapshot_deltas() {
+        let mut c = RoundCursor::default();
+        let mut snap = Snapshot {
+            pos: 10,
+            out_len: 3,
+            finished: false,
+            rounds: 2.0,
+            committed: 3.0,
+            target_calls: 2.0,
+            draft_steps: 8.0,
+            exact_accepts: 2.0,
+            relaxed_accepts: 1.0,
+            rejects: 1.0,
+            bonus: 1.0,
+            last_accept: 2.0,
+            tokens: vec![1, 2, 3],
+        };
+        let ev = c.advance(&snap, 1.5, 2, 1);
+        assert_eq!(ev.turn, 0);
+        assert_eq!(ev.rounds, 2);
+        assert_eq!(ev.drafted, 8);
+        assert_eq!((ev.exact, ev.relaxed, ev.accepted), (2, 1, 3));
+        assert_eq!(ev.committed, 3);
+        assert_eq!(ev.pack, 2);
+        // second turn reports deltas, not running totals
+        snap.rounds = 3.0;
+        snap.draft_steps = 12.0;
+        snap.exact_accepts = 5.0;
+        snap.committed = 7.0;
+        snap.finished = true;
+        let ev = c.advance(&snap, 0.5, 1, 4);
+        assert_eq!(ev.turn, 1);
+        assert_eq!(ev.rounds, 1);
+        assert_eq!(ev.drafted, 4);
+        assert_eq!((ev.exact, ev.relaxed, ev.accepted), (3, 0, 3));
+        assert_eq!(ev.committed, 4);
+        assert_eq!(ev.occupancy, 4);
+        assert!(ev.finished);
     }
 
     #[test]

@@ -35,6 +35,11 @@
 //!   synthetic task analogs, quality metrics, one harness per table and
 //!   figure of the evaluation section, a policy-sweep axis, and the
 //!   `bench serve` open-loop serving-latency harness (BENCHMARKS.md).
+//! * [`obs`] — the observability subsystem (DESIGN.md §12): per-round
+//!   [`obs::RoundEvent`]s from the engine's commit paths, mergeable
+//!   fixed-bucket [`obs::StreamHistogram`]s backing the sharded metrics
+//!   registry, the `--trace` JSONL span log, and the Prometheus
+//!   text-exposition surface (`{"cmd":"prom"}` / `--prom-addr`).
 //! * [`check`] — the cross-layer contract checker (`mars check
 //!   contracts`, DESIGN.md §11): diffs the python-exported contract
 //!   manifest (`contracts.json`) against the rust mirrors — state
@@ -50,6 +55,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod engine;
 pub mod eval;
+pub mod obs;
 pub mod runtime;
 pub mod spec;
 pub mod tokenizer;

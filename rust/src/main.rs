@@ -7,6 +7,7 @@
 //! mars bench <table1..table7|fig3|policies|packing|batch|perf|serve|all>
 //! mars bench diff old.json new.json  schema-2 snapshot regression gate
 //! mars analyze <fig1|fig4>           probe-ring dumps + ASCII plots
+//! mars trace summarize FILE          aggregate a --trace JSONL span log
 //! mars eval --task arith --method eagle_tree [--policy mars:0.9]
 //! mars check contracts               cross-layer contract checker
 //! ```
@@ -43,6 +44,7 @@ fn main() {
             "help",
             "no-cache",
             "print-thresholds",
+            "reset",
         ],
     ) {
         Ok(a) => a,
@@ -83,8 +85,13 @@ USAGE: mars <cmd> [flags]
       [--batch 1]  cross-sequence batch width: decode up to N requests
           per device dispatch (needs batching-capable artifacts;
           requests join/leave at round boundaries)
+      [--trace FILE]     per-request JSONL span log (queue -> prefill ->
+          rounds -> commit); summarize with `mars trace summarize FILE`
+      [--prom-addr ADDR] Prometheus text exposition on
+          http://ADDR/metrics (same payload as {{\"cmd\": \"prom\"}})
       line-JSON protocol: pipelined ids, \"stream\": true deltas,
-      \"cache\": false opt-out, {{\"cmd\": \"cancel\", \"id\": N}} —
+      \"cache\": false opt-out, {{\"cmd\": \"cancel\", \"id\": N}},
+      {{\"cmd\": \"metrics\", \"reset\": true}}, {{\"cmd\": \"prom\"}} —
       see coordinator/server.rs docs
   bench table1|..|table7|fig3|perf|policies|packing|batch|serve|all
       [--n 16] [--seed 7] [--max-new 96]
@@ -99,6 +106,8 @@ USAGE: mars <cmd> [flags]
           [--batch 1]   cross-sequence batch width per replica   (serve)
       [--scenario sweep|chat] [--turns 3] [--cache-mb 256]        (serve;
           chat = multi-turn conversations, cache-on vs cache-off waves)
+      [--reset]   zero server metrics between serve waves via
+          {{\"cmd\": \"metrics\", \"reset\": true}}              (serve)
       [--out DIR]   redirect emit paths: BENCH_*.json trajectories
           into DIR, rendered tables into DIR/results
   bench diff OLD.json NEW.json [--out FILE]
@@ -106,6 +115,9 @@ USAGE: mars <cmd> [flags]
       direction thresholds (see BENCHMARKS.md), exit nonzero on
       regression; `estimated` baselines soft-gate (WARN, exit 0)
   analyze fig1|fig4 [--n 24] [--policy mars:0.9]
+  trace summarize FILE
+      aggregate a serve --trace JSONL span log: per-phase span counts,
+      wall-time quantiles, acceptance mix across traced rounds
   eval --task arith|code|chat|sum|mt [--method M] [--policy P] [--n 16]
   check contracts [--manifest FILE] [--src DIR]
       diff the python-exported contract manifest (contracts.json; export
@@ -225,7 +237,13 @@ fn run(args: &Args) -> Result<()> {
             let cache = mars::cache::CacheConfig::with_mb(
                 args.get_usize("cache-mb", mars::cache::DEFAULT_CACHE_MB),
             );
-            let router = Arc::new(Router::start(
+            let trace = match args.get("trace") {
+                None => None,
+                Some(p) => Some(Arc::new(
+                    mars::obs::trace::TraceWriter::create(Path::new(p))?,
+                )),
+            };
+            let router = Arc::new(Router::start_traced(
                 &dir,
                 replicas,
                 slots,
@@ -234,9 +252,19 @@ fn run(args: &Args) -> Result<()> {
                 cache,
                 args.get_usize("pack", 1).max(1),
                 args.get_usize("batch", 1).max(1),
+                trace,
             )?);
             let handle = server::serve(router.clone(), &bind)?;
             println!("serving on {} ({} replicas)", handle.addr, replicas);
+            // the prom endpoint thread holds its own Arc<Router>; it dies
+            // with the process after the drain below
+            if let Some(addr) = args.get("prom-addr") {
+                let r = router.clone();
+                let srv = mars::obs::prom::serve_http(addr, move || {
+                    r.metrics.render_prometheus()
+                })?;
+                println!("prometheus exposition on http://{}/metrics", srv.addr);
+            }
             println!(
                 "protocol: one JSON object per line; pipelined \"id\"s, \
                  \"stream\": true for deltas, {{\"cmd\":\"cancel\",\"id\":N}}, \
@@ -356,6 +384,7 @@ fn run(args: &Args) -> Result<()> {
                     methods: msweep(vec![SpecMethod::default()])?,
                     policies: sweep()?,
                     scenario,
+                    reset: args.has("reset"),
                     cache_mb: args
                         .get_usize("cache-mb", mars::cache::DEFAULT_CACHE_MB),
                     out_dir: out_dir
@@ -477,6 +506,23 @@ fn run(args: &Args) -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("fig1");
             analyze(args, &dir, which)
+        }
+        "trace" => {
+            let usage = "usage: mars trace summarize FILE";
+            let verb = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("{usage}"))?;
+            if verb != "summarize" {
+                bail!("unknown trace verb '{verb}' (try summarize)");
+            }
+            let file = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("{usage}"))?;
+            let s = mars::obs::trace::summarize(Path::new(file))?;
+            print!("{}", mars::obs::trace::render_summary(&s));
+            Ok(())
         }
         "check" => {
             let which = args

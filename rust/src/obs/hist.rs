@@ -1,0 +1,292 @@
+//! Fixed-bucket mergeable streaming histogram (DESIGN.md §12).
+//!
+//! HDR-style log-spaced buckets: [`SUB_BUCKETS`] sub-buckets per octave
+//! over [`OCTAVES`] octaves starting at [`BUCKET_MIN`], so one histogram
+//! is a flat `[u64; 640]` — O(buckets) memory no matter how many samples
+//! it absorbs, which is the whole point: the metrics registry used to
+//! keep every latency sample in an unbounded `Vec<f64>`.
+//!
+//! Properties the registry and the property tests rely on:
+//!
+//! * **bounded relative quantile error** — a bucket spans a factor of
+//!   2^(1/16), and [`quantile`] answers the geometric midpoint of the
+//!   nearest-rank bucket, so the error vs the exact nearest-rank sample
+//!   is at most 2^(1/32) − 1 ≈ 2.2% (then clamped into the exact
+//!   observed `[min, max]`, which makes single-valued streams exact);
+//! * **exact mean** — `sum`/`count` are carried exactly, so means do not
+//!   degrade with bucketing;
+//! * **mergeable** — [`merge`] is element-wise bucket addition: bucket
+//!   counts merge associatively and commutatively (the per-replica
+//!   shards of the registry merge at snapshot time, not on the hot
+//!   path).
+//!
+//! [`quantile`]: StreamHistogram::quantile
+//! [`merge`]: StreamHistogram::merge
+
+/// Sub-buckets per octave (per factor-of-two of value range).
+pub const SUB_BUCKETS: usize = 16;
+/// Octaves covered above [`BUCKET_MIN`].
+pub const OCTAVES: usize = 40;
+/// Total fixed bucket count.
+pub const BUCKETS: usize = SUB_BUCKETS * OCTAVES;
+/// Lower edge of bucket 0: values at or below it land in bucket 0.
+/// 2^-20 ≈ 9.5e-7 — with milliseconds that is sub-nanosecond, with
+/// margin ratios it is indistinguishable-from-zero; the top edge is
+/// 2^20 ≈ 1.05e6 (≈ 17 minutes in ms).
+pub const BUCKET_MIN: f64 = 1.0 / (1u64 << 20) as f64;
+
+/// Streaming histogram with fixed log-spaced buckets, exact moments and
+/// exact min/max.
+#[derive(Debug, Clone)]
+pub struct StreamHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for StreamHistogram {
+    fn default() -> Self {
+        StreamHistogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bucket index for a value (callers map NaN to 0.0 first; negatives
+/// and the sub-resolution tail saturate into bucket 0).
+fn bucket_index(v: f64) -> usize {
+    if v <= BUCKET_MIN {
+        return 0;
+    }
+    let idx = ((v / BUCKET_MIN).log2() * SUB_BUCKETS as f64) as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Geometric midpoint of a bucket — the value a quantile answers with.
+fn bucket_mid(i: usize) -> f64 {
+    BUCKET_MIN * ((i as f64 + 0.5) / SUB_BUCKETS as f64).exp2()
+}
+
+impl StreamHistogram {
+    /// Fresh, empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. NaN and negative values saturate into bucket 0
+    /// (they still count — a margin of exactly 0.0 is a real outcome).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_nan() { 0.0 } else { v };
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise merge of another histogram into this one.
+    pub fn merge(&mut self, other: &StreamHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether any sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum observed (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum observed (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile, `q` in [0, 1]: the geometric midpoint of
+    /// the bucket holding the rank-⌈q·n⌉ sample, clamped into the exact
+    /// observed `[min, max]`. Relative error ≤ 2^(1/32) − 1 ≈ 2.2%.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count as f64 * q).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// p50 shorthand.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// p90 shorthand.
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    /// p99 shorthand.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Approximate count of samples ≤ `x`: every bucket whose geometric
+    /// midpoint is ≤ `x` counts. Monotone in `x` — what the Prometheus
+    /// cumulative-`le` exposition needs.
+    pub fn count_le(&self, x: f64) -> u64 {
+        let mut n = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 && bucket_mid(i) <= x {
+                n += c;
+            }
+        }
+        n
+    }
+
+    /// Resident bytes of one histogram (the memory-bound regression test
+    /// multiplies this out across the registry).
+    pub fn approx_bytes() -> usize {
+        BUCKETS * std::mem::size_of::<u64>()
+            + std::mem::size_of::<StreamHistogram>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_answers_zeros() {
+        let h = StreamHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn single_valued_stream_is_exact() {
+        // min/max clamping makes a constant stream quantile-exact — the
+        // registry tests rely on this for their pinned assertions
+        let mut h = StreamHistogram::new();
+        for _ in 0..10 {
+            h.record(20.0);
+        }
+        assert_eq!(h.quantile(0.5), 20.0);
+        assert_eq!(h.quantile(0.99), 20.0);
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn quantile_error_is_bounded() {
+        let mut h = StreamHistogram::new();
+        let mut vals: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let rank = ((vals.len() as f64 * q).ceil() as usize).max(1);
+            let exact = vals[rank - 1];
+            let got = h.quantile(q);
+            let rel = (got / exact - 1.0).abs();
+            assert!(rel < 0.025, "q={q}: {got} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_recording() {
+        let mut a = StreamHistogram::new();
+        let mut b = StreamHistogram::new();
+        let mut all = StreamHistogram::new();
+        for i in 0..500 {
+            let v = (i as f64 + 1.0) * 1.7;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.quantile(0.5), all.quantile(0.5));
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        assert!((a.sum() - all.sum()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saturating_edges_still_count() {
+        let mut h = StreamHistogram::new();
+        h.record(-3.0);
+        h.record(0.0);
+        h.record(f64::NAN);
+        h.record(1e12);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.count_le(1e13), 4);
+    }
+
+    #[test]
+    fn count_le_is_monotone() {
+        let mut h = StreamHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let mut prev = 0;
+        for x in [0.5, 1.0, 10.0, 50.0, 200.0] {
+            let n = h.count_le(x);
+            assert!(n >= prev, "count_le not monotone at {x}");
+            prev = n;
+        }
+        assert_eq!(h.count_le(1e6), 100);
+    }
+}

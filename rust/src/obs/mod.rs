@@ -1,0 +1,37 @@
+//! Margin-aware observability subsystem (DESIGN.md §12).
+//!
+//! MARS's premise is that targets spend much of their time in low-margin
+//! regimes where strict rejection buys nothing — this layer makes that
+//! claim *visible* at runtime instead of only in offline figures. Four
+//! pieces, each a peer of the other subsystems rather than a patch on
+//! the serving layer:
+//!
+//! * [`round`] — per-device-turn [`round::RoundEvent`]s emitted by the
+//!   engine's commit paths through a cheap [`round::RoundSink`] trait,
+//!   plus a bounded per-sequence [`round::FlightRecorder`];
+//! * [`hist`] — fixed-bucket, mergeable, log-spaced
+//!   [`hist::StreamHistogram`]s: O(buckets) memory, bounded-error
+//!   quantiles, exact means — what the metrics registry shards record
+//!   into instead of unbounded sample vectors;
+//! * [`trace`] — the `--trace FILE` JSONL span log (queue → prefill →
+//!   rounds → commit) with a render ↔ parse round-trip and the
+//!   `mars trace summarize` aggregation;
+//! * [`prom`] — Prometheus text-exposition rendering and the
+//!   `--prom-addr` HTTP scrape endpoint.
+//!
+//! The margin-by-outcome histograms themselves (strict-accept /
+//! relaxed-accept / reject per policy × method) live in
+//! [`crate::coordinator::MetricsRegistry`], built from these
+//! primitives; they surface through the `{"cmd":"metrics"}` snapshot,
+//! the `{"cmd":"prom"}` exposition, and the schema-2 bench records.
+
+#![warn(missing_docs)]
+
+pub mod hist;
+pub mod prom;
+pub mod round;
+pub mod trace;
+
+pub use hist::StreamHistogram;
+pub use round::{FlightRecorder, RoundEvent, RoundSink};
+pub use trace::{TraceEvent, TraceWriter};

@@ -1,0 +1,255 @@
+//! Prometheus text-exposition rendering + the `--prom-addr` scrape
+//! endpoint (DESIGN.md §12).
+//!
+//! Hand-rolled text format 0.0.4 — no client library in the offline
+//! registry, and the format is three line shapes:
+//!
+//! ```text
+//! # TYPE mars_requests_ok counter
+//! mars_requests_ok 42
+//! mars_margin_bucket{policy="mars",outcome="relaxed",le="0.9"} 17
+//! ```
+//!
+//! [`PromText`] accumulates families (one `# TYPE` header per metric
+//! name, label escaping per the spec); [`serve_http`] binds a minimal
+//! HTTP/1.1 listener that answers every `GET` with a freshly rendered
+//! exposition — enough for a real Prometheus scraper or the CI smoke's
+//! parser, with none of a web framework.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener};
+
+use anyhow::{Context, Result};
+
+use super::hist::StreamHistogram;
+
+/// Accumulating text-exposition writer.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+    typed: BTreeSet<String>,
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Format a sample value (Prometheus has no NaN-safe consumers here).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "0".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl PromText {
+    /// Fresh, empty exposition.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn type_header(&mut self, name: &str, kind: &str) {
+        if self.typed.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# TYPE {name} {kind}");
+        }
+    }
+
+    /// One counter sample.
+    pub fn counter(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.type_header(name, "counter");
+        let _ = writeln!(
+            self.out,
+            "{name}{} {}",
+            label_block(labels),
+            fmt_value(value)
+        );
+    }
+
+    /// One gauge sample.
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.type_header(name, "gauge");
+        let _ = writeln!(
+            self.out,
+            "{name}{} {}",
+            label_block(labels),
+            fmt_value(value)
+        );
+    }
+
+    /// One histogram family member: cumulative `_bucket` lines at the
+    /// given upper bounds (plus `+Inf`), then `_sum` and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        h: &StreamHistogram,
+        bounds: &[f64],
+    ) {
+        self.type_header(name, "histogram");
+        let base = labels.to_vec();
+        for &b in bounds {
+            let le = format!("{b}");
+            let mut ls = base.clone();
+            ls.push(("le", &le));
+            let _ = writeln!(
+                self.out,
+                "{name}_bucket{} {}",
+                label_block(&ls),
+                h.count_le(b)
+            );
+        }
+        let mut ls = base.clone();
+        ls.push(("le", "+Inf"));
+        let _ = writeln!(
+            self.out,
+            "{name}_bucket{} {}",
+            label_block(&ls),
+            h.count()
+        );
+        let _ = writeln!(
+            self.out,
+            "{name}_sum{} {}",
+            label_block(&base),
+            fmt_value(h.sum())
+        );
+        let _ = writeln!(
+            self.out,
+            "{name}_count{} {}",
+            label_block(&base),
+            h.count()
+        );
+    }
+
+    /// Finish and return the exposition body.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Handle of a running scrape endpoint.
+#[derive(Debug)]
+pub struct PromServer {
+    /// The bound address (`--prom-addr 127.0.0.1:0` picks a free port).
+    pub addr: SocketAddr,
+}
+
+/// Bind `addr` and answer every HTTP request with `render()`'s output
+/// as `text/plain; version=0.0.4`. The accept loop runs on a detached
+/// thread for the life of the process — scrape endpoints have no
+/// drain-on-shutdown obligations.
+pub fn serve_http<F>(addr: &str, render: F) -> Result<PromServer>
+where
+    F: Fn() -> String + Send + 'static,
+{
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding prom endpoint {addr}"))?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("mars-prom".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                // consume the request head (line + headers) so the
+                // client's write never sees a reset before our reply
+                let mut r = BufReader::new(match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                });
+                let mut line = String::new();
+                while r.read_line(&mut line).is_ok() {
+                    if line == "\r\n" || line == "\n" || line.is_empty() {
+                        break;
+                    }
+                    line.clear();
+                }
+                let body = render();
+                let _ = write!(
+                    stream,
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; \
+                     version=0.0.4\r\nContent-Length: {}\r\nConnection: \
+                     close\r\n\r\n{body}",
+                    body.len()
+                );
+            }
+        })
+        .context("spawning prom endpoint thread")?;
+    Ok(PromServer { addr: bound })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_header_emitted_once_per_family() {
+        let mut p = PromText::new();
+        p.counter("mars_requests_ok", &[], 1.0);
+        p.counter("mars_requests_ok", &[("policy", "mars")], 2.0);
+        let s = p.finish();
+        assert_eq!(s.matches("# TYPE mars_requests_ok counter").count(), 1);
+        assert!(s.contains("mars_requests_ok{policy=\"mars\"} 2"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = PromText::new();
+        p.gauge("g", &[("m", "a\"b\\c")], 1.0);
+        assert!(p.finish().contains("g{m=\"a\\\"b\\\\c\"} 1"));
+    }
+
+    #[test]
+    fn histogram_lines_are_cumulative_and_terminated() {
+        let mut h = StreamHistogram::new();
+        for v in [0.1, 0.5, 0.9, 0.95] {
+            h.record(v);
+        }
+        let mut p = PromText::new();
+        p.histogram("mars_margin", &[("outcome", "relaxed")], &h, &[0.5, 0.9]);
+        let s = p.finish();
+        assert!(s.contains("# TYPE mars_margin histogram"));
+        assert!(s.contains("le=\"+Inf\"} 4"));
+        assert!(s.contains("mars_margin_count{outcome=\"relaxed\"} 4"));
+        // cumulative: the le=0.9 bucket holds at least the le=0.5 one
+        let count_at = |needle: &str| -> u64 {
+            s.lines()
+                .find(|l| l.contains(needle))
+                .and_then(|l| l.split(' ').next_back())
+                .and_then(|n| n.parse().ok())
+                .unwrap_or(u64::MAX)
+        };
+        assert!(count_at("le=\"0.5\"") <= count_at("le=\"0.9\""));
+    }
+
+    #[test]
+    fn http_endpoint_serves_the_rendered_body() {
+        let srv = serve_http("127.0.0.1:0", || "mars_up 1\n".to_string())
+            .expect("bind");
+        let mut s = std::net::TcpStream::connect(srv.addr).expect("connect");
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        use std::io::Read as _;
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200 OK"), "{buf}");
+        assert!(buf.contains("mars_up 1"), "{buf}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Per-round telemetry events (DESIGN.md §12).
+//!
+//! The engine's commit paths (`SeqRunner::step` and the per-lane half of
+//! `BatchRunner::step`) emit one [`RoundEvent`] per device turn through
+//! an installed [`RoundSink`]. The sink is deliberately cheap — a boxed
+//! `FnMut` qualifies via the blanket impl — so the serving layer can
+//! fan one event into the sharded metrics registry and the JSONL trace
+//! writer without the engine knowing either exists.
+//!
+//! [`FlightRecorder`] is the bounded per-sequence buffer the coordinator
+//! keeps when it wants the recent round history of a live sequence: a
+//! ring of the last [`FlightRecorder::DEFAULT_CAP`] events, O(cap)
+//! memory however long the sequence runs.
+
+use crate::util::json::Value;
+
+/// One device turn of one sequence, as seen at commit time.
+///
+/// A "turn" is one device dispatch (`pack` fused draft-verify rounds);
+/// the counters are deltas of the engine snapshot across the dispatch,
+/// so summing events over a sequence reproduces its end-of-request
+/// aggregates.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundEvent {
+    /// 0-based device-turn index within the sequence.
+    pub turn: u64,
+    /// Draft-verify rounds retired by this turn (= pack, except the
+    /// final partial turn).
+    pub rounds: u64,
+    /// Draft tokens proposed this turn.
+    pub drafted: u64,
+    /// Draft tokens accepted this turn (exact + policy-relaxed).
+    pub accepted: u64,
+    /// Exact (strict-rule) acceptances this turn.
+    pub exact: u64,
+    /// Policy-relaxed acceptances this turn — whether the margin rule
+    /// fired.
+    pub relaxed: u64,
+    /// Rejections this turn; the reject position within the last round
+    /// is `last_accept` (tokens accepted before the first mismatch).
+    pub rejects: u64,
+    /// Tokens committed this turn (accepted + bonus/fallback tokens).
+    pub committed: u64,
+    /// Accepted prefix length of the turn's last round — the accept/
+    /// reject position the paper's τ statistics are built from.
+    pub last_accept: u64,
+    /// Decisive-position target margin (z2/z1) when a probe surfaced
+    /// it; `None` on the plain decode path (probes cost a device call).
+    pub margin: Option<f64>,
+    /// Wall-clock time of the dispatch, milliseconds.
+    pub wall_ms: f64,
+    /// Simclock cost of the dispatch in model units, when the caller
+    /// runs under the simulated clock; `None` in real serving.
+    pub sim_units: Option<f64>,
+    /// Rounds fused per device call at dispatch time.
+    pub pack: u64,
+    /// Occupied lanes of the dispatch (1 on the solo/interleaved path).
+    pub occupancy: u64,
+    /// Whether the sequence finished at this turn.
+    pub finished: bool,
+}
+
+impl RoundEvent {
+    /// JSON object mirror (the trace writer embeds it per round line).
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("turn", Value::Num(self.turn as f64));
+        o.set("rounds", Value::Num(self.rounds as f64));
+        o.set("drafted", Value::Num(self.drafted as f64));
+        o.set("accepted", Value::Num(self.accepted as f64));
+        o.set("exact", Value::Num(self.exact as f64));
+        o.set("relaxed", Value::Num(self.relaxed as f64));
+        o.set("rejects", Value::Num(self.rejects as f64));
+        o.set("committed", Value::Num(self.committed as f64));
+        o.set("last_accept", Value::Num(self.last_accept as f64));
+        if let Some(m) = self.margin {
+            o.set("margin", Value::Num(m));
+        }
+        o.set("wall_ms", Value::Num(self.wall_ms));
+        if let Some(u) = self.sim_units {
+            o.set("sim_units", Value::Num(u));
+        }
+        o.set("pack", Value::Num(self.pack as f64));
+        o.set("occupancy", Value::Num(self.occupancy as f64));
+        o.set("finished", Value::Bool(self.finished));
+        o
+    }
+}
+
+/// Where round events go. Installed on a runner by the serving layer;
+/// the engine calls it once per device turn, synchronously, on the
+/// decode thread — implementations must be cheap (a histogram record, a
+/// buffered write), never blocking on I/O flushes.
+pub trait RoundSink: Send {
+    /// Observe one committed device turn.
+    fn on_round(&mut self, ev: &RoundEvent);
+}
+
+impl<F: FnMut(&RoundEvent) + Send> RoundSink for F {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        self(ev)
+    }
+}
+
+/// Bounded ring of the most recent round events of one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct FlightRecorder {
+    events: std::collections::VecDeque<RoundEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    /// Default ring capacity: enough for any max_new at pack 1 on the
+    /// default artifact build, small enough to be per-sequence state.
+    pub const DEFAULT_CAP: usize = 256;
+
+    /// Recorder with the default capacity.
+    pub fn new() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAP)
+    }
+
+    /// Recorder with an explicit ring capacity (min 1).
+    pub fn with_capacity(cap: usize) -> Self {
+        FlightRecorder {
+            events: std::collections::VecDeque::new(),
+            cap: cap.max(1),
+            dropped: 0,
+        }
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &RoundEvent> {
+        self.events.iter()
+    }
+
+    /// Events evicted by the ring bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// JSON array of the retained events plus a drop marker.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set(
+            "events",
+            Value::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+        );
+        o.set("dropped", Value::Num(self.dropped as f64));
+        o
+    }
+}
+
+impl RoundSink for FlightRecorder {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(*ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(turn: u64) -> RoundEvent {
+        RoundEvent { turn, rounds: 1, drafted: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn flight_recorder_is_bounded() {
+        let mut fr = FlightRecorder::with_capacity(4);
+        for t in 0..10 {
+            fr.on_round(&ev(t));
+        }
+        let turns: Vec<u64> = fr.events().map(|e| e.turn).collect();
+        assert_eq!(turns, vec![6, 7, 8, 9]);
+        assert_eq!(fr.dropped(), 6);
+    }
+
+    #[test]
+    fn closure_sink_via_blanket_impl() {
+        let mut seen = 0u64;
+        {
+            let mut sink = |e: &RoundEvent| seen += e.drafted;
+            sink.on_round(&ev(0));
+            sink.on_round(&ev(1));
+        }
+        assert_eq!(seen, 14);
+    }
+
+    #[test]
+    fn event_json_carries_optional_fields_conditionally() {
+        let mut e = ev(3);
+        let v = e.to_json();
+        assert!(v.get("margin").is_none());
+        assert!(v.get("sim_units").is_none());
+        e.margin = Some(0.93);
+        e.sim_units = Some(1.25);
+        let v = e.to_json();
+        assert_eq!(v.get("margin").unwrap().as_f64(), Some(0.93));
+        assert_eq!(v.get("sim_units").unwrap().as_f64(), Some(1.25));
+    }
+}

@@ -1,0 +1,435 @@
+//! Per-request JSONL span log (DESIGN.md §12): `mars serve --trace FILE`.
+//!
+//! One JSON object per line, one line per lifecycle phase of a request
+//! as it moves through a replica:
+//!
+//! ```text
+//! {"phase":"queue",...}    admission — wall_ms = router-submit → admit
+//! {"phase":"prefill",...}  session built — wall_ms = prefill time
+//! {"phase":"round",...}    one device turn — embeds the RoundEvent
+//! {"phase":"commit",...}   terminal — tokens, tau, ok
+//! {"phase":"error",...}    terminal failure path
+//! ```
+//!
+//! Every line carries `ts_ms` (milliseconds since the writer was
+//! created), `id` (the wire request id) and `replica`. The render ↔
+//! parse pair round-trips (property-tested), so `mars trace summarize
+//! FILE` and any jq pipeline read the same truth the server wrote.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Write as _};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::hist::StreamHistogram;
+use super::round::RoundEvent;
+use crate::util::json::Value;
+
+/// Request lifecycle phase of one trace line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Router submit → replica admission.
+    Queue,
+    /// Prompt prefill (or cache-restore + suffix prefill).
+    Prefill,
+    /// One device turn (embeds the [`RoundEvent`]).
+    Round,
+    /// Successful terminal commit.
+    Commit,
+    /// Terminal failure.
+    Error,
+}
+
+impl Phase {
+    /// Wire name of the phase.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::Prefill => "prefill",
+            Phase::Round => "round",
+            Phase::Commit => "commit",
+            Phase::Error => "error",
+        }
+    }
+
+    /// Inverse of [`as_str`](Phase::as_str).
+    pub fn parse(s: &str) -> Option<Phase> {
+        Some(match s {
+            "queue" => Phase::Queue,
+            "prefill" => Phase::Prefill,
+            "round" => Phase::Round,
+            "commit" => Phase::Commit,
+            "error" => Phase::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// One trace line. Optional fields render only when present, so lines
+/// stay short and phase-shaped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Milliseconds since the trace writer was created.
+    pub ts_ms: f64,
+    /// Wire request id.
+    pub id: u64,
+    /// Replica that processed the phase.
+    pub replica: usize,
+    /// Lifecycle phase.
+    pub phase: Phase,
+    /// Phase duration, ms (queue wait, prefill time, decode time on the
+    /// terminal line).
+    pub wall_ms: Option<f64>,
+    /// Committed tokens (terminal lines).
+    pub tokens: Option<u64>,
+    /// Prefix-cache tokens restored (prefill lines).
+    pub cached_tokens: Option<u64>,
+    /// Mean accepted tokens per round (terminal lines).
+    pub tau: Option<f64>,
+    /// Terminal outcome.
+    pub ok: Option<bool>,
+    /// Verification-policy family (terminal lines).
+    pub policy: Option<String>,
+    /// Speculative-method family (terminal lines).
+    pub method: Option<String>,
+    /// The per-turn counters (round lines).
+    pub round: Option<RoundEvent>,
+}
+
+impl TraceEvent {
+    /// Minimal event for a phase; callers fill the optional fields.
+    pub fn new(ts_ms: f64, id: u64, replica: usize, phase: Phase) -> Self {
+        TraceEvent {
+            ts_ms,
+            id,
+            replica,
+            phase,
+            wall_ms: None,
+            tokens: None,
+            cached_tokens: None,
+            tau: None,
+            ok: None,
+            policy: None,
+            method: None,
+            round: None,
+        }
+    }
+
+    /// Render one JSONL line (no trailing newline).
+    pub fn render(&self) -> String {
+        let mut o = Value::obj();
+        o.set("ts_ms", Value::Num(self.ts_ms));
+        o.set("id", Value::Num(self.id as f64));
+        o.set("replica", Value::Num(self.replica as f64));
+        o.set("phase", Value::Str(self.phase.as_str().to_string()));
+        if let Some(w) = self.wall_ms {
+            o.set("wall_ms", Value::Num(w));
+        }
+        if let Some(t) = self.tokens {
+            o.set("tokens", Value::Num(t as f64));
+        }
+        if let Some(c) = self.cached_tokens {
+            o.set("cached_tokens", Value::Num(c as f64));
+        }
+        if let Some(t) = self.tau {
+            o.set("tau", Value::Num(t));
+        }
+        if let Some(k) = self.ok {
+            o.set("ok", Value::Bool(k));
+        }
+        if let Some(p) = &self.policy {
+            o.set("policy", Value::Str(p.clone()));
+        }
+        if let Some(m) = &self.method {
+            o.set("method", Value::Str(m.clone()));
+        }
+        if let Some(r) = &self.round {
+            o.set("round", r.to_json());
+        }
+        o.to_string_json()
+    }
+
+    /// Parse one JSONL line back into an event.
+    pub fn parse_line(line: &str) -> Result<TraceEvent> {
+        let v = Value::parse(line)
+            .map_err(|e| anyhow::anyhow!("bad trace line: {e}"))?;
+        let phase_str = v
+            .get("phase")
+            .and_then(|p| p.as_str())
+            .context("trace line without \"phase\"")?;
+        let phase = Phase::parse(phase_str)
+            .with_context(|| format!("unknown trace phase '{phase_str}'"))?;
+        let fnum = |k: &str| v.get(k).and_then(|x| x.as_f64());
+        let mut ev = TraceEvent::new(
+            fnum("ts_ms").context("trace line without \"ts_ms\"")?,
+            fnum("id").context("trace line without \"id\"")? as u64,
+            fnum("replica").unwrap_or(0.0) as usize,
+            phase,
+        );
+        ev.wall_ms = fnum("wall_ms");
+        ev.tokens = fnum("tokens").map(|t| t as u64);
+        ev.cached_tokens = fnum("cached_tokens").map(|t| t as u64);
+        ev.tau = fnum("tau");
+        ev.ok = v.get("ok").and_then(|b| b.as_bool());
+        ev.policy =
+            v.get("policy").and_then(|p| p.as_str()).map(str::to_string);
+        ev.method =
+            v.get("method").and_then(|m| m.as_str()).map(str::to_string);
+        if let Some(r) = v.get("round") {
+            let rnum = |k: &str| r.get(k).and_then(|x| x.as_f64());
+            ev.round = Some(RoundEvent {
+                turn: rnum("turn").unwrap_or(0.0) as u64,
+                rounds: rnum("rounds").unwrap_or(0.0) as u64,
+                drafted: rnum("drafted").unwrap_or(0.0) as u64,
+                accepted: rnum("accepted").unwrap_or(0.0) as u64,
+                exact: rnum("exact").unwrap_or(0.0) as u64,
+                relaxed: rnum("relaxed").unwrap_or(0.0) as u64,
+                rejects: rnum("rejects").unwrap_or(0.0) as u64,
+                committed: rnum("committed").unwrap_or(0.0) as u64,
+                last_accept: rnum("last_accept").unwrap_or(0.0) as u64,
+                margin: rnum("margin"),
+                wall_ms: rnum("wall_ms").unwrap_or(0.0),
+                sim_units: rnum("sim_units"),
+                pack: rnum("pack").unwrap_or(0.0) as u64,
+                occupancy: rnum("occupancy").unwrap_or(0.0) as u64,
+                finished: r.get("finished").and_then(|b| b.as_bool())
+                    == Some(true),
+            });
+        }
+        Ok(ev)
+    }
+}
+
+/// Shared, append-only JSONL writer: one per server process, `Arc`-ed
+/// into every replica. Writes are line-atomic under the mutex;
+/// I/O errors are swallowed (tracing must never fail a request).
+#[derive(Debug)]
+pub struct TraceWriter {
+    file: Mutex<File>,
+    epoch: Instant,
+}
+
+impl TraceWriter {
+    /// Create (truncate) the trace file.
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(TraceWriter { file: Mutex::new(file), epoch: Instant::now() })
+    }
+
+    /// Milliseconds since the writer was created — the `ts_ms` clock.
+    pub fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Append one event as one line. Best-effort: a poisoned lock or a
+    /// full disk drops the line, never the request.
+    pub fn log(&self, ev: &TraceEvent) {
+        let line = ev.render();
+        let mut g = match self.file.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let _ = writeln!(g, "{line}");
+    }
+}
+
+/// Aggregates `mars trace summarize` prints.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Distinct request ids seen.
+    pub requests: usize,
+    /// Terminal lines with `ok == true` / `ok == false`.
+    pub ok: usize,
+    /// Failed terminals (`commit` with ok=false, or `error` lines).
+    pub err: usize,
+    /// Round lines seen.
+    pub round_events: u64,
+    /// Lines that did not parse (corrupt tail, foreign lines).
+    pub bad_lines: usize,
+    /// Queue-phase wall, ms.
+    pub queue_ms: StreamHistogram,
+    /// Prefill-phase wall, ms.
+    pub prefill_ms: StreamHistogram,
+    /// Per-turn wall, ms.
+    pub round_ms: StreamHistogram,
+    /// Accepted tokens per turn.
+    pub accepted: StreamHistogram,
+    /// Turns where the relaxed rule fired.
+    pub relaxed_rounds: u64,
+    /// Committed tokens across ok terminals.
+    pub tokens: u64,
+}
+
+/// Parse and aggregate a trace file.
+pub fn summarize(path: &Path) -> Result<TraceSummary> {
+    let f = File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let mut s = TraceSummary::default();
+    let mut ids = std::collections::BTreeSet::new();
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(ev) = TraceEvent::parse_line(&line) else {
+            s.bad_lines += 1;
+            continue;
+        };
+        ids.insert(ev.id);
+        match ev.phase {
+            Phase::Queue => {
+                if let Some(w) = ev.wall_ms {
+                    s.queue_ms.record(w);
+                }
+            }
+            Phase::Prefill => {
+                if let Some(w) = ev.wall_ms {
+                    s.prefill_ms.record(w);
+                }
+            }
+            Phase::Round => {
+                s.round_events += 1;
+                if let Some(r) = &ev.round {
+                    s.round_ms.record(r.wall_ms);
+                    s.accepted.record(r.accepted as f64);
+                    if r.relaxed > 0 {
+                        s.relaxed_rounds += 1;
+                    }
+                }
+            }
+            Phase::Commit => {
+                if ev.ok == Some(true) {
+                    s.ok += 1;
+                    s.tokens += ev.tokens.unwrap_or(0);
+                } else {
+                    s.err += 1;
+                }
+            }
+            Phase::Error => s.err += 1,
+        }
+    }
+    s.requests = ids.len();
+    Ok(s)
+}
+
+/// Render the summary as the `mars trace summarize` table.
+pub fn render_summary(s: &TraceSummary) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "## Trace summary — {} request(s), {} ok / {} err, {} round \
+         event(s), {} committed token(s)",
+        s.requests, s.ok, s.err, s.round_events, s.tokens
+    );
+    let _ = writeln!(out);
+    let _ = writeln!(out, "| phase | events | p50 (ms) | p99 (ms) | mean (ms) |");
+    let _ = writeln!(out, "|---|---|---|---|---|");
+    for (name, h) in [
+        ("queue", &s.queue_ms),
+        ("prefill", &s.prefill_ms),
+        ("round", &s.round_ms),
+    ] {
+        let _ = writeln!(
+            out,
+            "| {name} | {} | {:.2} | {:.2} | {:.2} |",
+            h.count(),
+            h.p50(),
+            h.p99(),
+            h.mean()
+        );
+    }
+    if s.round_events > 0 {
+        let _ = writeln!(
+            out,
+            "\naccepted/turn p50 {:.1} (mean {:.2}); relaxed rule fired in \
+             {} of {} turns ({:.1}%)",
+            s.accepted.p50(),
+            s.accepted.mean(),
+            s.relaxed_rounds,
+            s.round_events,
+            100.0 * s.relaxed_rounds as f64 / s.round_events as f64
+        );
+    }
+    if s.bad_lines > 0 {
+        let _ = writeln!(out, "\n{} unparseable line(s) skipped", s.bad_lines);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_parse_round_trip() {
+        let mut ev = TraceEvent::new(12.5, 42, 1, Phase::Round);
+        ev.round = Some(RoundEvent {
+            turn: 3,
+            rounds: 1,
+            drafted: 7,
+            accepted: 5,
+            exact: 4,
+            relaxed: 1,
+            rejects: 1,
+            committed: 6,
+            last_accept: 5,
+            margin: Some(0.94),
+            wall_ms: 1.5,
+            sim_units: None,
+            pack: 1,
+            occupancy: 1,
+            finished: false,
+        });
+        let back = TraceEvent::parse_line(&ev.render()).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn phase_names_round_trip() {
+        for p in
+            [Phase::Queue, Phase::Prefill, Phase::Round, Phase::Commit, Phase::Error]
+        {
+            assert_eq!(Phase::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Phase::parse("warp"), None);
+    }
+
+    #[test]
+    fn writer_and_summarize_end_to_end() {
+        let dir = std::env::temp_dir()
+            .join(format!("mars-trace-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let w = TraceWriter::create(&path).unwrap();
+        let mut q = TraceEvent::new(w.now_ms(), 7, 0, Phase::Queue);
+        q.wall_ms = Some(2.0);
+        w.log(&q);
+        let mut r = TraceEvent::new(w.now_ms(), 7, 0, Phase::Round);
+        r.round = Some(RoundEvent {
+            accepted: 4,
+            relaxed: 1,
+            wall_ms: 1.0,
+            ..Default::default()
+        });
+        w.log(&r);
+        let mut c = TraceEvent::new(w.now_ms(), 7, 0, Phase::Commit);
+        c.ok = Some(true);
+        c.tokens = Some(12);
+        w.log(&c);
+        drop(w);
+        let s = summarize(&path).unwrap();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.ok, 1);
+        assert_eq!(s.round_events, 1);
+        assert_eq!(s.relaxed_rounds, 1);
+        assert_eq!(s.tokens, 12);
+        let table = render_summary(&s);
+        assert!(table.contains("1 request(s)"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

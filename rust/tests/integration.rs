@@ -1226,3 +1226,115 @@ fn simclock_determinism_pin() {
         "DISPATCH_OVERHEAD term missing from simulated_units"
     );
 }
+
+/// Telemetry surfaces end to end (DESIGN.md §12): probe-driven margin
+/// histograms, the `prom` and `metrics`+`reset` RPCs, and the `--trace`
+/// JSONL span log, all against a live traced server.
+#[test]
+fn telemetry_surfaces_over_tcp() {
+    use mars::coordinator::router::{Router, RouterPolicy};
+    use mars::coordinator::server;
+    use mars::obs::trace::{summarize, TraceWriter};
+    use std::sync::Arc;
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir()
+        .join(format!("mars-telemetry-test-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).expect("tmp dir");
+    let trace_path = tmp.join("trace.jsonl");
+    let trace =
+        Some(Arc::new(TraceWriter::create(&trace_path).expect("trace")));
+    let router = Arc::new(
+        Router::start_traced(
+            &dir,
+            1,
+            2,
+            false,
+            RouterPolicy::RoundRobin,
+            mars::cache::CacheConfig::default(),
+            1,
+            1,
+            trace,
+        )
+        .expect("router"),
+    );
+    let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+    let addr = handle.addr.to_string();
+
+    // two probe-enabled requests under MARS: every verify decision flows
+    // into the margin-by-outcome histograms
+    for seed in [4, 5] {
+        let resp = server::client_roundtrip(
+            &addr,
+            &format!(
+                "{{\"prompt\": \"Q: 2+2=?\\nA: \", \"method\": \
+                 \"eagle_tree\", \"policy\": \"mars:0.9\", \"probe\": true, \
+                 \"max_new\": 12, \"seed\": {seed}}}"
+            ),
+        )
+        .expect("gen");
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+    }
+
+    // margin histograms in the JSON snapshot, split by outcome, counts
+    // covering every decision (exact + relaxed + reject >= accepted)
+    let snap =
+        server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#).expect("m");
+    let count = |outcome: &str| {
+        snap.path(&["margin", "mars", "eagle_tree", outcome, "count"])
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| {
+                panic!("missing margin.{outcome}: {}", snap.to_string_json())
+            })
+    };
+    let total = count("exact") + count("relaxed") + count("reject");
+    assert!(total > 0.0, "no margin samples: {}", snap.to_string_json());
+    // per-round telemetry flowed through the sink into the snapshot
+    let turns = snap
+        .path(&["rounds", "turns"])
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    assert!(turns > 0, "no round events: {}", snap.to_string_json());
+
+    // the prom RPC serves the text exposition with the same truth
+    let prom = server::client_roundtrip(&addr, r#"{"cmd": "prom"}"#)
+        .expect("prom");
+    let text = prom.get("prom").and_then(|p| p.as_str()).expect("prom text");
+    for needle in [
+        "# TYPE mars_requests_ok counter",
+        "mars_requests_ok 2",
+        "# TYPE mars_margin histogram",
+        "outcome=\"exact\"",
+        "mars_round_turns",
+        "mars_ttft_ms_bucket",
+        "le=\"+Inf\"",
+    ] {
+        assert!(text.contains(needle), "prom missing {needle:?}:\n{text}");
+    }
+
+    // metrics + reset: the reply carries the pre-reset truth, the next
+    // scrape starts from zero
+    let pre = server::client_roundtrip(
+        &addr,
+        r#"{"cmd": "metrics", "reset": true}"#,
+    )
+    .expect("reset");
+    assert_eq!(pre.get("requests_ok").and_then(|v| v.as_usize()), Some(2));
+    let post =
+        server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#).expect("m2");
+    assert_eq!(post.get("requests_ok").and_then(|v| v.as_usize()), Some(0));
+    assert!(
+        post.get("margin").is_none(),
+        "reset left margin histograms: {}",
+        post.to_string_json()
+    );
+
+    // the trace file carries the full span lifecycle for both requests
+    let s = summarize(&trace_path).expect("summarize");
+    assert_eq!(s.bad_lines, 0, "trace log has unparseable lines");
+    assert_eq!(s.ok, 2, "expected 2 ok commits");
+    assert!(s.round_events > 0, "no round spans traced");
+    assert!(s.queue_ms.count() >= 2, "queue spans missing");
+    assert!(s.prefill_ms.count() >= 2, "prefill spans missing");
+    assert!(s.tokens > 0, "commit spans carried no tokens");
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -27,8 +27,14 @@
 //!   error-replied once, never both, never neither (a lost wakeup);
 //! * **gauge never wraps mid-flight** — the hint stays below the wrap
 //!   region at every decrement.
+//!
+//! A fourth model covers the sharded metrics registry
+//! (`coordinator/metrics.rs`, DESIGN.md §12): racing per-replica
+//! recorders vs merge-on-snapshot vs the `reset` RPC, with the real
+//! lock order (global stamp first, then shards in index order) — every
+//! record must land in exactly one of {wiped-by-reset, final merge}.
 
-use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use loom::sync::{Arc, Mutex};
 use loom::thread;
 
@@ -221,5 +227,101 @@ fn loom_failed_send_undo_balances_the_gauge() {
         t2.join().unwrap();
         replica_pass(&s, 1, false);
         check_final(&s, 1);
+    });
+}
+
+// ------------------------------------------- sharded metrics registry -----
+
+/// Minimal model of `MetricsRegistry`: per-replica shards behind their
+/// own mutexes, a global mutex holding the elapsed stamp, and the
+/// `started_stamped` fast-path atomic. Lock order mirrors the real
+/// code: `record` touches global (stamp) then its shard; `reset` locks
+/// global, drops it, then sweeps the shards in index order; `merged`
+/// locks shards in index order only.
+struct ShardedReg {
+    shards: [Mutex<u64>; 2],
+    /// `Some(_)` models the armed `started` stamp.
+    global: Mutex<Option<u64>>,
+    stamped: AtomicBool,
+}
+
+impl ShardedReg {
+    fn new() -> Self {
+        ShardedReg {
+            shards: [Mutex::new(0), Mutex::new(0)],
+            global: Mutex::new(None),
+            stamped: AtomicBool::new(false),
+        }
+    }
+
+    fn record(&self, replica: usize) {
+        // stamp fast path: only the first recorder after a reset takes
+        // the global lock (same shape as `stamp_started`)
+        if !self.stamped.swap(true, Ordering::Relaxed) {
+            *self.global.lock().unwrap() = Some(1);
+        }
+        *self.shards[replica % 2].lock().unwrap() += 1;
+    }
+
+    fn merged(&self) -> u64 {
+        self.shards.iter().map(|s| *s.lock().unwrap()).sum()
+    }
+
+    /// Zero everything; returns the counts wiped (the real reset drops
+    /// them — the model keeps them to assert conservation).
+    fn reset(&self) -> u64 {
+        let mut g = self.global.lock().unwrap();
+        *g = None;
+        self.stamped.store(false, Ordering::Relaxed);
+        drop(g);
+        let mut wiped = 0u64;
+        for s in &self.shards {
+            let mut c = s.lock().unwrap();
+            wiped += *c;
+            *c = 0;
+        }
+        wiped
+    }
+}
+
+/// Racing recorders on distinct shards vs a snapshot-merge vs a reset:
+/// no deadlock under the real lock order, snapshots never over-count,
+/// and every record lands in exactly one of {wiped, final merge}.
+#[test]
+fn loom_sharded_metrics_merge_conserves_counts() {
+    loom::model(|| {
+        let r = Arc::new(ShardedReg::new());
+        let r1 = r.clone();
+        let t1 = thread::spawn(move || r1.record(0));
+        let r2 = r.clone();
+        let t2 = thread::spawn(move || r2.record(1));
+        let r3 = r.clone();
+        let t3 = thread::spawn(move || {
+            // a mid-flight scrape must see a prefix of the truth
+            let seen = r3.merged();
+            assert!(seen <= 2, "snapshot over-counted: {seen}");
+            r3.reset()
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let wiped = t3.join().unwrap();
+        let rest = r.merged();
+        assert_eq!(
+            wiped + rest,
+            2,
+            "records lost or double-counted: wiped {wiped}, merged {rest}"
+        );
+        // a record whose stamp fast-path raced the reset may land its
+        // count after the sweep with the stamp momentarily disarmed —
+        // benign (the next record re-arms it). The invariant that must
+        // hold: an armed stamp always has a populated global cell,
+        // because every false→true swap is followed by a locked store
+        // and any later reset would have disarmed the stamp again.
+        if r.stamped.load(Ordering::Relaxed) {
+            assert!(
+                r.global.lock().unwrap().is_some(),
+                "stamp armed but the global started cell is empty"
+            );
+        }
     });
 }

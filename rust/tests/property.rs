@@ -1271,3 +1271,299 @@ fn prop_diff_key_pairing_total() {
         );
     }
 }
+
+// ------------------------------------------------ observability (§12) ------
+
+use mars::coordinator::metrics::{MetricsRegistry, RequestMetrics};
+use mars::obs::hist::StreamHistogram;
+use mars::obs::round::RoundEvent;
+use mars::obs::trace::{Phase, TraceEvent};
+
+/// A random histogram over a wide dynamic range (sub-bucket-min tail,
+/// mid-range, and saturating top included).
+fn random_hist(rng: &mut Rng, n: usize) -> (StreamHistogram, Vec<f64>) {
+    let mut h = StreamHistogram::new();
+    let mut vals = Vec::with_capacity(n);
+    for _ in 0..n {
+        // log-uniform across ~12 decades plus occasional edge values
+        let v = match rng.below(20) {
+            0 => 0.0,
+            1 => -rng.f64(),
+            2 => 1e9 * (1.0 + rng.f64()),
+            _ => 10f64.powf(rng.f64() * 12.0 - 6.0),
+        };
+        h.record(v);
+        vals.push(v);
+    }
+    (h, vals)
+}
+
+/// Two histograms agree observably: same count/sum/min/max, same
+/// quantiles, same cumulative counts.
+fn assert_hist_eq(a: &StreamHistogram, b: &StreamHistogram, ctx: &str) {
+    assert_eq!(a.count(), b.count(), "{ctx}: count");
+    assert!((a.sum() - b.sum()).abs() <= 1e-9 * a.sum().abs().max(1.0), "{ctx}: sum");
+    assert_eq!(a.min(), b.min(), "{ctx}: min");
+    assert_eq!(a.max(), b.max(), "{ctx}: max");
+    for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+        assert_eq!(a.quantile(q), b.quantile(q), "{ctx}: q{q}");
+    }
+    for x in [1e-7, 1e-3, 1.0, 42.0, 1e4, 1e9] {
+        assert_eq!(a.count_le(x), b.count_le(x), "{ctx}: count_le({x})");
+    }
+}
+
+#[test]
+fn prop_histogram_merge_commutative() {
+    let mut rng = Rng::new(800);
+    for case in 0..200 {
+        let (a, _) = random_hist(&mut rng, 1 + rng.usize_below(200));
+        let (b, _) = random_hist(&mut rng, rng.usize_below(200));
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_hist_eq(&ab, &ba, &format!("case {case}: a+b vs b+a"));
+    }
+}
+
+#[test]
+fn prop_histogram_merge_associative() {
+    let mut rng = Rng::new(801);
+    for case in 0..200 {
+        let (a, _) = random_hist(&mut rng, rng.usize_below(150));
+        let (b, _) = random_hist(&mut rng, rng.usize_below(150));
+        let (c, _) = random_hist(&mut rng, 1 + rng.usize_below(150));
+        let mut left = a.clone(); // (a + b) + c
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone(); // a + (b + c)
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_hist_eq(&left, &right, &format!("case {case}: assoc"));
+    }
+}
+
+#[test]
+fn prop_histogram_merge_matches_single_stream() {
+    // splitting a stream across shards and merging loses nothing — the
+    // per-replica sharding of the metrics registry relies on this
+    let mut rng = Rng::new(802);
+    for case in 0..100 {
+        let n = 1 + rng.usize_below(400);
+        let mut shards: Vec<StreamHistogram> =
+            (0..4).map(|_| StreamHistogram::new()).collect();
+        let mut all = StreamHistogram::new();
+        for i in 0..n {
+            let v = 10f64.powf(rng.f64() * 8.0 - 4.0);
+            shards[i % 4].record(v);
+            all.record(v);
+        }
+        let mut merged = shards[0].clone();
+        for s in &shards[1..] {
+            merged.merge(s);
+        }
+        assert_hist_eq(&merged, &all, &format!("case {case}: shard split"));
+    }
+}
+
+#[test]
+fn prop_histogram_quantile_error_bounded() {
+    // vs the exact nearest-rank sample: relative error <= 2^(1/32)-1
+    // (~2.2%), asserted with a little float headroom at 2.5%
+    let mut rng = Rng::new(803);
+    for case in 0..60 {
+        let n = 10 + rng.usize_below(2000);
+        let mut h = StreamHistogram::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = 10f64.powf(rng.f64() * 7.0 - 3.0);
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            let rank = ((n as f64 * q).ceil() as usize).clamp(1, n);
+            let exact = vals[rank - 1];
+            let got = h.quantile(q);
+            let rel = (got / exact - 1.0).abs();
+            assert!(
+                rel < 0.025,
+                "case {case}: n={n} q={q}: {got} vs exact {exact} \
+                 (rel {rel:.4})"
+            );
+        }
+    }
+}
+
+fn random_trace_event(rng: &mut Rng) -> TraceEvent {
+    let phase = match rng.below(5) {
+        0 => Phase::Queue,
+        1 => Phase::Prefill,
+        2 => Phase::Round,
+        3 => Phase::Commit,
+        _ => Phase::Error,
+    };
+    let mut ev = TraceEvent::new(
+        rng.f64() * 1e6,
+        rng.below(1 << 30),
+        rng.usize_below(16),
+        phase,
+    );
+    let mut opt_f64 = |rng: &mut Rng| {
+        if rng.below(2) == 0 { Some(rng.f64() * 1e4) } else { None }
+    };
+    ev.wall_ms = opt_f64(rng);
+    ev.tau = opt_f64(rng);
+    if rng.below(2) == 0 {
+        ev.tokens = Some(rng.below(100_000));
+    }
+    if rng.below(2) == 0 {
+        ev.cached_tokens = Some(rng.below(100_000));
+    }
+    if rng.below(2) == 0 {
+        ev.ok = Some(rng.below(2) == 0);
+    }
+    if rng.below(2) == 0 {
+        ev.policy = Some(random_policy(rng).name().to_string());
+    }
+    if rng.below(2) == 0 {
+        ev.method = Some(random_method(rng).name().to_string());
+    }
+    if phase == Phase::Round {
+        ev.round = Some(RoundEvent {
+            turn: rng.below(1000),
+            rounds: rng.below(16),
+            drafted: rng.below(64),
+            accepted: rng.below(64),
+            exact: rng.below(64),
+            relaxed: rng.below(8),
+            rejects: rng.below(2),
+            committed: rng.below(64),
+            last_accept: rng.below(64),
+            margin: if rng.below(2) == 0 { Some(rng.f64()) } else { None },
+            wall_ms: rng.f64() * 100.0,
+            sim_units: if rng.below(2) == 0 {
+                Some(rng.f64() * 10.0)
+            } else {
+                None
+            },
+            pack: 1 + rng.below(16),
+            occupancy: 1 + rng.below(8),
+            finished: rng.below(2) == 0,
+        });
+    }
+    ev
+}
+
+#[test]
+fn prop_trace_render_parse_round_trips() {
+    let mut rng = Rng::new(804);
+    for case in 0..500 {
+        let ev = random_trace_event(&mut rng);
+        let line = ev.render();
+        let back = TraceEvent::parse_line(&line)
+            .unwrap_or_else(|e| panic!("case {case}: {line} -> {e}"));
+        assert_eq!(back, ev, "case {case}: {line}");
+    }
+}
+
+/// Reference verifier: run random decisive-position probes through
+/// `VerifyPolicy::accept` exactly like the device-side verify does, and
+/// feed the (margin, flag) pairs into the registry.
+#[test]
+fn prop_margin_histograms_split_exhaustively_by_outcome() {
+    // strict + relaxed + reject histogram counts must equal the verify
+    // decisions fed in — no decision may vanish or double-count
+    let mut rng = Rng::new(805);
+    for case in 0..50 {
+        let reg = MetricsRegistry::new();
+        let n = 1 + rng.usize_below(300);
+        let mut want = [0u64; 3]; // exact, relaxed, reject
+        let mut samples: Vec<(f64, AcceptFlag)> = Vec::new();
+        for _ in 0..n {
+            let z1 = (rng.f64() * 8.0) as f32;
+            let z2 = z1 * rng.f64() as f32; // z2 <= z1, the sorted truth
+            let v1 = rng.below(100) as u32;
+            let v2 = v1 + 1 + rng.below(100) as u32;
+            let draft = if rng.below(2) == 0 {
+                v1
+            } else if rng.below(2) == 0 {
+                v2
+            } else {
+                v2 + 1 + rng.below(100) as u32
+            };
+            let theta = rng.f64() as f32;
+            let flag = VerifyPolicy::Mars { theta }
+                .accept(draft, v1, &[(v1, z1), (v2, z2)]);
+            match flag {
+                AcceptFlag::Exact => want[0] += 1,
+                AcceptFlag::Relaxed => want[1] += 1,
+                AcceptFlag::Reject => want[2] += 1,
+            }
+            let margin = if z1 > 0.0 && z2 > 0.0 {
+                (z2 / z1) as f64
+            } else {
+                0.0
+            };
+            samples.push((margin, flag));
+        }
+        // spread across replicas: the shard merge must conserve counts
+        for (i, chunk) in samples.chunks(64).enumerate() {
+            reg.record_margins(i, "mars", "eagle_tree", chunk);
+        }
+        let snap = reg.snapshot_json();
+        let count = |outcome: &str| {
+            snap.path(&["margin", "mars", "eagle_tree", outcome, "count"])
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64
+        };
+        let got = [count("exact"), count("relaxed"), count("reject")];
+        assert_eq!(got, want, "case {case}: outcome split leaked decisions");
+        assert_eq!(
+            got.iter().sum::<u64>(),
+            n as u64,
+            "case {case}: decisions lost"
+        );
+    }
+}
+
+#[test]
+fn prop_registry_memory_stays_bounded_under_load() {
+    // the sharded registry's byte footprint depends on label cardinality
+    // (policies x methods x outcomes), never on request volume
+    let reg = MetricsRegistry::new();
+    let mut rng = Rng::new(806);
+    let mut m = RequestMetrics {
+        ok: true,
+        replica: 0,
+        tokens: 32,
+        decode_seconds: 0.1,
+        prefill_seconds: 0.01,
+        queue_seconds: 0.001,
+        ttft_seconds: 0.02,
+        tau: 3.0,
+        relaxed_accepts: 1.0,
+        policy: "mars",
+        method: "eagle_tree",
+    };
+    // settle the label space first: one record per shard creates the
+    // per-policy/per-method entries, which is the only growth allowed
+    for r in 0..8 {
+        m.replica = r;
+        reg.record(m);
+    }
+    let settled = reg.approx_bytes();
+    for i in 0..50_000usize {
+        m.replica = i % 8;
+        m.decode_seconds = rng.f64();
+        m.queue_seconds = rng.f64() * 0.01;
+        reg.record(m);
+    }
+    let after = reg.approx_bytes();
+    assert_eq!(
+        after, settled,
+        "registry grew {settled} -> {after} bytes under pure request load"
+    );
+}

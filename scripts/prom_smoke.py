@@ -1,0 +1,263 @@
+#!/usr/bin/env python3
+"""Prometheus-exposition smoke checker for `mars serve` (DESIGN.md §12).
+
+Drives a few probe generations over the line-JSON TCP port, scrapes the
+exposition — both the `{"cmd": "prom"}` RPC and, when --prom-url is
+given, the `--prom-addr` HTTP endpoint — and validates the subset of
+text format 0.0.4 the server emits:
+
+* every non-comment line parses as ``name{labels} value``;
+* every sample belongs to a ``# TYPE``-declared family, and only
+  histogram families use the ``_bucket`` / ``_sum`` / ``_count``
+  suffixes;
+* every histogram label-set carries cumulative ``le`` buckets that are
+  monotone non-decreasing, end at ``le="+Inf"``, and agree with the
+  family's ``_count``; ``_sum`` is present;
+* the core request families exist, and with --expect-margin the
+  margin-by-outcome histogram (``mars_margin{policy,method,outcome}``)
+  carries all three outcomes.
+
+Stdlib only (CI runs it bare). Exit 0 on success; the first violation
+is printed to stderr and exits 1.
+"""
+
+import argparse
+import json
+import math
+import re
+import socket
+import sys
+import time
+import urllib.request
+
+SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"  # metric name
+    r"(?:\{(.*)\})?"  # optional label body
+    r" (-?(?:[0-9]*\.?[0-9]+(?:[eE][+-]?[0-9]+)?)|[+-]Inf|NaN)$"
+)
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+TYPE_RE = re.compile(
+    r"^# TYPE ([a-zA-Z_:][a-zA-Z0-9_:]*) (counter|gauge|histogram)$"
+)
+
+
+def die(msg: str) -> None:
+    print(f"prom_smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def rpc(addr: str, payload: dict, timeout: float = 60.0) -> dict:
+    """One line-JSON request/reply round trip on a fresh connection."""
+    host, port = addr.rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=timeout) as s:
+        s.sendall((json.dumps(payload) + "\n").encode())
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = s.recv(65536)
+            if not chunk:
+                die(f"connection closed mid-reply to {payload}")
+            buf += chunk
+    return json.loads(buf.decode())
+
+
+def wait_ready(addr: str, timeout_s: float) -> None:
+    deadline = time.monotonic() + timeout_s
+    last = "never connected"
+    while time.monotonic() < deadline:
+        try:
+            if rpc(addr, {"cmd": "ping"}, timeout=2.0).get("pong"):
+                return
+            last = "ping reply without pong"
+        except OSError as e:
+            last = str(e)
+        time.sleep(0.25)
+    die(f"server at {addr} not ready after {timeout_s:.0f}s ({last})")
+
+
+def parse_value(raw: str) -> float:
+    if raw == "+Inf":
+        return math.inf
+    if raw == "-Inf":
+        return -math.inf
+    return float(raw)  # NaN parses fine
+
+
+def parse_labels(body: str) -> dict:
+    labels = dict(LABEL_RE.findall(body or ""))
+    # the label body must be nothing but well-formed pairs + separators
+    leftovers = LABEL_RE.sub("", body or "").replace(",", "").strip()
+    if leftovers:
+        die(f"malformed label body: {{{body}}}")
+    return labels
+
+
+def parse_exposition(text: str, origin: str):
+    """Return (families, samples): declared types and parsed samples."""
+    families = {}
+    samples = []  # (name, labels, value)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP"):
+            continue
+        if line.startswith("# TYPE"):
+            m = TYPE_RE.match(line)
+            if not m:
+                die(f"{origin}:{lineno}: bad TYPE line: {line!r}")
+            name, kind = m.groups()
+            if name in families:
+                die(f"{origin}:{lineno}: duplicate TYPE for {name}")
+            families[name] = kind
+            continue
+        if line.startswith("#"):
+            die(f"{origin}:{lineno}: unknown comment form: {line!r}")
+        m = SAMPLE_RE.match(line)
+        if not m:
+            die(f"{origin}:{lineno}: unparseable sample: {line!r}")
+        name, label_body, raw = m.groups()
+        samples.append((name, parse_labels(label_body), parse_value(raw)))
+    return families, samples
+
+
+def family_of(name: str, families: dict) -> str:
+    """Resolve a sample name to its declared family, or die."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            base = name[: -len(suffix)]
+            if families.get(base) == "histogram":
+                return base
+    if name in families:
+        if families[name] == "histogram":
+            die(f"histogram {name} sampled without a suffix")
+        return name
+    die(f"sample {name} has no # TYPE declaration")
+    raise AssertionError  # unreachable; die() exits
+
+
+def check_histograms(families: dict, samples: list) -> None:
+    """Cumulative-bucket discipline per histogram label set."""
+    by_series = {}  # (family, frozen labels sans le) -> dict
+    for name, labels, value in samples:
+        fam = family_of(name, families)
+        if families[fam] != "histogram":
+            if math.isnan(value):
+                die(f"{name}: NaN sample")
+            if families[fam] == "counter" and value < 0:
+                die(f"{name}: negative counter {value}")
+            continue
+        key_labels = {k: v for k, v in labels.items() if k != "le"}
+        series = by_series.setdefault(
+            (fam, tuple(sorted(key_labels.items()))),
+            {"buckets": [], "sum": None, "count": None},
+        )
+        if name.endswith("_bucket"):
+            if "le" not in labels:
+                die(f"{name}: bucket sample without an le label")
+            series["buckets"].append((parse_value(labels["le"]), value))
+        elif name.endswith("_sum"):
+            series["sum"] = value
+        elif name.endswith("_count"):
+            series["count"] = value
+    if not by_series and any(k == "histogram" for k in families.values()):
+        die("histogram families declared but no bucket samples found")
+    for (fam, key), series in by_series.items():
+        where = f"{fam}{{{dict(key)}}}"
+        buckets = series["buckets"]
+        if not buckets:
+            die(f"{where}: no _bucket samples")
+        if series["sum"] is None or series["count"] is None:
+            die(f"{where}: missing _sum or _count")
+        les = [le for le, _ in buckets]
+        if les != sorted(les):
+            die(f"{where}: le bounds out of order: {les}")
+        if les[-1] != math.inf:
+            die(f"{where}: last bucket is not le=\"+Inf\"")
+        counts = [c for _, c in buckets]
+        if any(b < a for a, b in zip(counts, counts[1:])):
+            die(f"{where}: cumulative bucket counts decrease: {counts}")
+        if counts[-1] != series["count"]:
+            die(
+                f"{where}: +Inf bucket {counts[-1]} != _count "
+                f"{series['count']}"
+            )
+
+
+def check_exposition(text: str, origin: str, expect_margin: bool) -> None:
+    families, samples = parse_exposition(text, origin)
+    check_histograms(families, samples)
+    for required in ("mars_requests_ok", "mars_uptime_seconds", "mars_ttft_ms"):
+        if required not in families:
+            die(f"{origin}: required family {required} missing")
+    ok = sum(v for n, _, v in samples if n == "mars_requests_ok")
+    if ok < 1:
+        die(f"{origin}: mars_requests_ok is {ok}, expected >= 1")
+    if expect_margin:
+        if families.get("mars_margin") != "histogram":
+            die(f"{origin}: mars_margin histogram missing")
+        outcomes = {
+            labels.get("outcome")
+            for n, labels, _ in samples
+            if n == "mars_margin_count"
+        }
+        missing = {"exact", "relaxed", "reject"} - outcomes
+        if missing:
+            die(f"{origin}: mars_margin outcomes missing: {sorted(missing)}")
+        decided = sum(
+            v for n, labels, v in samples if n == "mars_margin_count"
+        )
+        if decided < 1:
+            die(f"{origin}: mars_margin recorded no verify decisions")
+    print(f"prom_smoke: {origin}: {len(families)} families, "
+          f"{len(samples)} samples OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--addr", required=True, help="line-JSON TCP host:port")
+    ap.add_argument("--prom-url", help="HTTP exposition URL to also scrape")
+    ap.add_argument("--requests", type=int, default=2,
+                    help="probe generations to drive before scraping")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--expect-margin", action="store_true",
+                    help="require the margin-by-outcome histogram")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="server readiness timeout, seconds")
+    ap.add_argument("--shutdown", action="store_true",
+                    help='send {"cmd": "shutdown"} after the checks pass')
+    args = ap.parse_args()
+
+    wait_ready(args.addr, args.timeout)
+    for i in range(args.requests):
+        reply = rpc(args.addr, {
+            "id": i + 1,
+            "prompt": f"telemetry smoke {i}",
+            "policy": "mars:0.9",
+            "max_new": args.max_new,
+            "seed": i + 1,
+            "probe": True,
+        })
+        if not reply.get("ok"):
+            die(f"generation {i + 1} failed: {reply.get('error')}")
+
+    via_rpc = rpc(args.addr, {"cmd": "prom"}).get("prom")
+    if not isinstance(via_rpc, str):
+        die('{"cmd": "prom"} reply carries no "prom" string')
+    check_exposition(via_rpc, "rpc", args.expect_margin)
+
+    if args.prom_url:
+        with urllib.request.urlopen(args.prom_url, timeout=30) as resp:
+            ctype = resp.headers.get("Content-Type", "")
+            if not ctype.startswith("text/plain"):
+                die(f"http: Content-Type {ctype!r} is not text/plain")
+            if "version=0.0.4" not in ctype:
+                die(f"http: Content-Type {ctype!r} lacks version=0.0.4")
+            body = resp.read().decode()
+        check_exposition(body, "http", args.expect_margin)
+
+    if args.shutdown:
+        rpc(args.addr, {"cmd": "shutdown"})
+    print("prom_smoke: PASS")
+
+
+if __name__ == "__main__":
+    main()
