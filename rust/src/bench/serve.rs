@@ -40,7 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use super::record;
 use crate::cache::CacheConfig;
-use crate::coordinator::router::{Router, RouterPolicy};
+use crate::coordinator::router::{Router, RouterConfig, RouterPolicy};
 use crate::coordinator::scheduler::exp_arrival_gap;
 use crate::coordinator::server;
 use crate::datasets::{chat_conversations, dataset, Task};
@@ -55,6 +55,13 @@ use crate::verify::VerifyPolicy;
 /// budget of the default artifact build (see
 /// `datasets::chat_conversations`).
 pub const CHAT_MAX_NEW_CAP: usize = 12;
+
+/// Hard client-side wall deadline per request: a request that has not
+/// reached its terminal reply this long after being sent is abandoned
+/// with the named *client wall deadline* error instead of hanging the
+/// wave (and CI) forever — the failure mode a chaos wave that downs
+/// every replica would otherwise hit.
+pub const CLIENT_WALL_DEADLINE: Duration = Duration::from_secs(120);
 
 /// Which workload shape `mars bench serve` drives (`--scenario`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,6 +112,19 @@ pub struct ServeBenchCfg {
     /// of everything since the server came up. Off by default so the
     /// end-of-run `server metrics` line still shows run totals.
     pub reset: bool,
+    /// Deterministic fault-injection plan (`--fault-plan`, DESIGN.md
+    /// §13) installed on every replica — chaos benchmarking: measures
+    /// the serving percentiles *under* injected dispatch faults,
+    /// latency, and rebuild failures.
+    pub fault: Option<crate::fault::FaultSpec>,
+    /// Server-side default per-request wall budget (`--deadline-ms`);
+    /// also echoed on each benchmark request as `"deadline_ms"` so the
+    /// wire path is exercised, not just the server default.
+    pub deadline_ms: Option<u64>,
+    /// Queue-depth shedding threshold (`--shed-above`): past it new
+    /// requests get `{"busy": true}` replies, which the wave counts as
+    /// errors.
+    pub shed_above: Option<usize>,
     /// Per-replica prefix-cache budget (`--cache-mb`) for the `chat`
     /// scenario's cache-on wave. The sweep scenario always runs cache-off
     /// so every wave's prefills are uniformly cold and rows compare.
@@ -143,6 +163,8 @@ struct ReqProbe {
     tokens: usize,
     done: bool,
     ok: bool,
+    /// Abandoned at [`CLIENT_WALL_DEADLINE`] without a terminal reply.
+    timed_out: bool,
 }
 
 type ProbeMap = Arc<Mutex<HashMap<u64, ReqProbe>>>;
@@ -225,6 +247,10 @@ struct PolicyRow {
     policy: VerifyPolicy,
     ok: usize,
     err: usize,
+    /// Of `err`: requests abandoned at [`CLIENT_WALL_DEADLINE`] with no
+    /// terminal reply (named separately so a wedged server is
+    /// distinguishable from server-reported failures).
+    client_timeouts: usize,
     ttft_ms: Summary,
     tpot_ms: Summary,
     tok_per_s: f64,
@@ -322,16 +348,16 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
     // prefix cache OFF: every wave replays the same seeded prompts, so a
     // shared warm cache would hand later waves full-prompt hits and skew
     // the cross-wave TTFT comparison the sweep table exists for
-    let router = Arc::new(Router::start(
-        &cfg.artifact_dir,
-        cfg.replicas,
-        cfg.slots,
-        false,
-        RouterPolicy::LeastLoaded,
-        CacheConfig::disabled(),
-        1,
-        cfg.batch.max(1),
-    )?);
+    let mut rcfg = RouterConfig::new(&cfg.artifact_dir);
+    rcfg.replicas = cfg.replicas;
+    rcfg.slots = cfg.slots;
+    rcfg.policy = RouterPolicy::LeastLoaded;
+    rcfg.cache = CacheConfig::disabled();
+    rcfg.batch = cfg.batch.max(1);
+    rcfg.fault = cfg.fault.clone();
+    rcfg.deadline_ms = cfg.deadline_ms;
+    rcfg.shed_above = cfg.shed_above;
+    let router = Arc::new(Router::start(rcfg)?);
     let handle = server::serve(router.clone(), "127.0.0.1:0")?;
     let addr = handle.addr.to_string();
 
@@ -354,6 +380,14 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
             row.tpot_ms.p50(),
             row.tok_per_s
         );
+        if row.client_timeouts > 0 {
+            eprintln!(
+                "  warning: {} request(s) hit the {} s client wall \
+                 deadline without a terminal reply",
+                row.client_timeouts,
+                CLIENT_WALL_DEADLINE.as_secs()
+            );
+        }
         rows.push(row);
     }
 
@@ -391,6 +425,9 @@ fn run_sweep(cfg: &ServeBenchCfg) -> Result<()> {
         push("tok_per_s", r.tok_per_s, "tok/s");
         push("req_per_s", r.req_per_s, "req/s");
         push("err", r.err as f64, "count");
+        if r.client_timeouts > 0 {
+            push("client_timeouts", r.client_timeouts as f64, "count");
+        }
         // server-side margin/round aggregates (DESIGN.md §12) — present
         // only when the wave produced the underlying samples, so the
         // record set stays stable under `bench diff` self-pairing
@@ -438,6 +475,10 @@ fn drive_wave(
         o.set("policy", Value::Str(policy.label()));
         o.set("max_new", Value::Num(cfg.max_new as f64));
         o.set("seed", Value::Num(i as f64));
+        if let Some(ms) = cfg.deadline_ms {
+            // exercise the wire field, not just the server-side default
+            o.set("deadline_ms", Value::Num(ms as f64));
+        }
         // probe rings feed the server's margin-by-outcome histograms
         // (DESIGN.md §12) that the wave scrape below turns into records
         o.set("probe", Value::Bool(true));
@@ -450,6 +491,7 @@ fn drive_wave(
                 tokens: 0,
                 done: false,
                 ok: false,
+                timed_out: false,
             },
         );
         conns[i % conns.len()].send_line(&o.to_string_json())?;
@@ -460,18 +502,31 @@ fn drive_wave(
         }
     }
 
-    // wait for every request of the wave (bounded: the workload is small
-    // and the replicas drain monotonically)
-    let deadline = Instant::now() + Duration::from_secs(600);
+    // wait for every request of the wave; a request that outlives
+    // CLIENT_WALL_DEADLINE is abandoned in place with the named *client
+    // wall deadline* error, so a downed or wedged server bounds the
+    // wave at send-time + deadline instead of hanging CI
     loop {
+        let now = Instant::now();
+        let mut all_done = true;
         {
-            let g = probes.lock().unwrap();
-            if ids.iter().all(|id| g.get(id).is_some_and(|p| p.done)) {
-                break;
+            let mut g = probes.lock().unwrap();
+            for id in &ids {
+                let Some(p) = g.get_mut(id) else { continue };
+                if p.done {
+                    continue;
+                }
+                if now.duration_since(p.sent_at) > CLIENT_WALL_DEADLINE {
+                    p.done = true;
+                    p.ok = false;
+                    p.timed_out = true;
+                } else {
+                    all_done = false;
+                }
             }
         }
-        if Instant::now() > deadline {
-            bail!("bench serve wave timed out after 600 s");
+        if all_done {
+            break;
         }
         std::thread::sleep(Duration::from_millis(5));
     }
@@ -484,6 +539,7 @@ fn drive_wave(
         policy,
         ok: 0,
         err: 0,
+        client_timeouts: 0,
         ttft_ms: Summary::new(),
         tpot_ms: Summary::new(),
         tok_per_s: 0.0,
@@ -495,6 +551,9 @@ fn drive_wave(
         let p = &g[id];
         if !p.ok {
             row.err += 1;
+            if p.timed_out {
+                row.client_timeouts += 1;
+            }
             continue;
         }
         row.ok += 1;
@@ -566,6 +625,10 @@ fn drive_turn(
     let sent = Instant::now();
     let mut stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting {addr}"))?;
+    // the chat path reads the socket directly, so the client wall
+    // deadline lands as a read timeout: a wedged server errors the turn
+    // (the worker abandons the conversation) instead of hanging it
+    stream.set_read_timeout(Some(CLIENT_WALL_DEADLINE))?;
     writeln!(stream, "{}", o.to_string_json())?;
     let reader = BufReader::new(stream);
     let mut first_delta: Option<Instant> = None;
@@ -678,16 +741,16 @@ fn run_chat(cfg: &ServeBenchCfg, turns: usize) -> Result<()> {
             cfg.slots,
             cache.label()
         );
-        let router = Arc::new(Router::start(
-            &cfg.artifact_dir,
-            cfg.replicas,
-            cfg.slots,
-            false,
-            RouterPolicy::PrefixAffinity,
-            cache,
-            1,
-            cfg.batch.max(1),
-        )?);
+        let mut rcfg = RouterConfig::new(&cfg.artifact_dir);
+        rcfg.replicas = cfg.replicas;
+        rcfg.slots = cfg.slots;
+        rcfg.policy = RouterPolicy::PrefixAffinity;
+        rcfg.cache = cache;
+        rcfg.batch = cfg.batch.max(1);
+        rcfg.fault = cfg.fault.clone();
+        rcfg.deadline_ms = cfg.deadline_ms;
+        rcfg.shed_above = cfg.shed_above;
+        let router = Arc::new(Router::start(rcfg)?);
         let handle = server::serve(router.clone(), "127.0.0.1:0")?;
         let addr = handle.addr.to_string();
         let row =

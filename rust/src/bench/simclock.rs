@@ -122,6 +122,7 @@ mod tests {
             probe: None,
             device_calls: 0,
             dispatch_share: 0.0,
+            deadline_exceeded: false,
         }
     }
 

@@ -26,6 +26,13 @@
 //!   prefix-cache gauges (DESIGN.md §8) summed into one `"cache"`
 //!   object.
 //!
+//! Failure semantics (DESIGN.md §13): every failure outcome in the
+//! serving stack lands in the [`FailureKind`] counters
+//! ([`record_failure`]) and every replica health transition in the
+//! per-replica health gauge ([`record_health`]) — both exported on the
+//! same snapshot/Prometheus surfaces as the latency metrics, so a chaos
+//! run can assert its injected faults were counted, not swallowed.
+//!
 //! Export surfaces: [`snapshot_json`] (the `{"cmd":"metrics"}` RPC and
 //! the `mars serve` shutdown print) and [`render_prometheus`] (the
 //! `{"cmd":"prom"}` RPC and the `--prom-addr` scrape endpoint).
@@ -36,13 +43,23 @@
 //! [`record_occupancy`]: MetricsRegistry::record_occupancy
 //! [`record_round`]: MetricsRegistry::record_round
 //! [`record_margins`]: MetricsRegistry::record_margins
+//! [`record_failure`]: MetricsRegistry::record_failure
+//! [`record_health`]: MetricsRegistry::record_health
 //! [`snapshot_json`]: MetricsRegistry::snapshot_json
 //! [`render_prometheus`]: MetricsRegistry::render_prometheus
 //! [`reset`]: MetricsRegistry::reset
 
+// Serving-layer lint wall (DESIGN.md §11): a panic while holding a
+// registry lock poisons it for every replica, so unwrap/expect are
+// denied in non-test code — locks recover from poisoning instead
+// (metrics are monotone counters/histograms; a shard interrupted
+// mid-update is still safe to keep recording into).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::cache::CacheStats;
@@ -55,6 +72,63 @@ use crate::verify::AcceptFlag;
 /// Registry shard count. Replica `r` records into shard
 /// `r % N_SHARDS`, so up to 8 replicas never contend on a record.
 const N_SHARDS: usize = 8;
+
+/// Poison-recovering lock (the `lock_inflight` idiom, DESIGN.md §11):
+/// a replica that panicked while recording must not take the whole
+/// metrics surface down with it — counters and histograms stay valid
+/// under interruption, so recovering the guard is safe.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Failure taxonomy for the serving stack (DESIGN.md §13). Every
+/// terminal or recovered failure in router/replica/server increments
+/// exactly one of these counters via
+/// [`MetricsRegistry::record_failure`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FailureKind {
+    /// A device dispatch returned an error (injected or real),
+    /// poisoning the replica's stacked batch state.
+    DispatchFailed,
+    /// An innocent batchmate of a failed dispatch was requeued for
+    /// re-execution.
+    LaneRequeued,
+    /// A lane exhausted its requeue budget and was failed retriable.
+    RequeueBudgetExhausted,
+    /// A batch-session rebuild attempt failed (the supervisor backs
+    /// off and retries).
+    SessionRebuildFailed,
+    /// A replica transitioned to `Down` (rebuild budget exhausted);
+    /// also counts each request it refuses while down.
+    ReplicaDown,
+    /// The router lost a replica mid-submit (work channel closed).
+    ReplicaLost,
+    /// A submit found no routable replica at all.
+    AllReplicasDown,
+    /// A request ran out of its deadline budget (partial commit).
+    DeadlineExceeded,
+    /// A request was refused at admission (queue-depth shedding).
+    Shed,
+}
+
+impl FailureKind {
+    /// Stable wire/label name of the failure kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FailureKind::DispatchFailed => "dispatch_failed",
+            FailureKind::LaneRequeued => "lane_requeued",
+            FailureKind::RequeueBudgetExhausted => {
+                "requeue_budget_exhausted"
+            }
+            FailureKind::SessionRebuildFailed => "session_rebuild_failed",
+            FailureKind::ReplicaDown => "replica_down",
+            FailureKind::ReplicaLost => "replica_lost",
+            FailureKind::AllReplicasDown => "all_replicas_down",
+            FailureKind::DeadlineExceeded => "deadline_exceeded",
+            FailureKind::Shed => "shed",
+        }
+    }
+}
 
 /// Upper bounds for the Prometheus latency histograms, milliseconds.
 const LAT_BOUNDS_MS: [f64; 10] =
@@ -196,6 +270,12 @@ struct Global {
     /// Latest prefix-cache stats per replica (each replica owns its own
     /// store — DESIGN.md §8 — and republishes after every admission).
     cache_by_replica: BTreeMap<usize, CacheStats>,
+    /// Failure counters by [`FailureKind`] label (DESIGN.md §13).
+    /// Low-frequency — failures take the global lock, not a shard.
+    failures: BTreeMap<&'static str, u64>,
+    /// Latest health state per replica (`"up"`/`"draining"`/`"down"`,
+    /// latest-value semantics like the cache gauges).
+    health_by_replica: BTreeMap<usize, &'static str>,
 }
 
 /// Shared serving-metrics registry (one per router, shared by replicas).
@@ -256,7 +336,7 @@ impl MetricsRegistry {
         if self.started_stamped.load(Ordering::Relaxed) {
             return;
         }
-        let mut g = self.global.lock().unwrap();
+        let mut g = relock(&self.global);
         if g.started.is_none() {
             g.started = Some(Instant::now());
         }
@@ -270,7 +350,7 @@ impl MetricsRegistry {
     /// Record one finished request (errors count separately).
     pub fn record(&self, m: RequestMetrics) {
         self.stamp_started();
-        let mut g = self.shard(m.replica).lock().unwrap();
+        let mut g = relock(self.shard(m.replica));
         if !m.ok {
             g.requests_err += 1;
             return;
@@ -317,7 +397,7 @@ impl MetricsRegistry {
     /// distribution the `"batch"` snapshot object reports.
     pub fn record_occupancy(&self, replica: usize, occupied: usize) {
         self.stamp_started();
-        let mut g = self.shard(replica).lock().unwrap();
+        let mut g = relock(self.shard(replica));
         *g.occupancy.entry(occupied).or_insert(0) += 1;
     }
 
@@ -337,7 +417,7 @@ impl MetricsRegistry {
             return;
         }
         self.stamp_started();
-        let mut g = self.shard(replica).lock().unwrap();
+        let mut g = relock(self.shard(replica));
         let agg = g.margins.entry((policy, method)).or_default();
         for &(margin, flag) in samples {
             match flag {
@@ -352,7 +432,7 @@ impl MetricsRegistry {
     /// replicas install on their runners).
     pub fn record_round(&self, replica: usize, ev: &RoundEvent) {
         self.stamp_started();
-        let mut g = self.shard(replica).lock().unwrap();
+        let mut g = relock(self.shard(replica));
         let r = &mut g.rounds;
         r.turns += 1;
         r.rounds += ev.rounds;
@@ -365,13 +445,40 @@ impl MetricsRegistry {
         r.accepted_per_turn.record(ev.accepted as f64);
     }
 
+    /// Count one failure outcome (DESIGN.md §13). Failures are
+    /// low-frequency relative to requests, so they take the global
+    /// lock instead of a shard — one counter per [`FailureKind`],
+    /// exported as the `"failures"` snapshot object and the
+    /// `mars_failures_total{kind=...}` Prometheus series.
+    pub fn record_failure(&self, kind: FailureKind) {
+        let mut g = relock(&self.global);
+        *g.failures.entry(kind.as_str()).or_insert(0) += 1;
+    }
+
+    /// Current count for one failure kind (drain/chaos assertions).
+    pub fn failure_count(&self, kind: FailureKind) -> u64 {
+        relock(&self.global)
+            .failures
+            .get(kind.as_str())
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Publish one replica's health state (`"up"` / `"draining"` /
+    /// `"down"`) — latest-value gauge semantics, exported as the
+    /// `"health"` snapshot object and `mars_replica_health` series.
+    pub fn record_health(&self, replica: usize, state: &'static str) {
+        let mut g = relock(&self.global);
+        g.health_by_replica.insert(replica, state);
+    }
+
     /// Publish one replica's prefix-cache stats (the replica re-sends its
     /// whole [`CacheStats`] gauge set; the registry keeps the latest per
     /// replica and sums across replicas in [`snapshot_json`]).
     ///
     /// [`snapshot_json`]: MetricsRegistry::snapshot_json
     pub fn record_cache(&self, replica: usize, stats: CacheStats) {
-        let mut g = self.global.lock().unwrap();
+        let mut g = relock(&self.global);
         g.cache_by_replica.insert(replica, stats);
     }
 
@@ -383,13 +490,16 @@ impl MetricsRegistry {
     pub fn reset(&self) {
         // global first: a racing stamp_started after this point re-arms
         // the elapsed clock for the new wave, which is what reset means
-        let mut g = self.global.lock().unwrap();
+        let mut g = relock(&self.global);
         g.started = None;
         g.cache_by_replica.clear();
+        // failure counters zero between waves; health is a live gauge
+        // of current replica state, so it survives the reset
+        g.failures.clear();
         self.started_stamped.store(false, Ordering::Relaxed);
         drop(g);
         for s in &self.shards {
-            *s.lock().unwrap() = Shard::default();
+            *relock(s) = Shard::default();
         }
     }
 
@@ -397,7 +507,7 @@ impl MetricsRegistry {
     fn merged(&self) -> Shard {
         let mut all = Shard::default();
         for s in &self.shards {
-            all.merge(&s.lock().unwrap());
+            all.merge(&relock(s));
         }
         all
     }
@@ -407,7 +517,7 @@ impl MetricsRegistry {
     pub fn approx_bytes(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().approx_bytes())
+            .map(|s| relock(s).approx_bytes())
             .sum()
     }
 
@@ -415,8 +525,8 @@ impl MetricsRegistry {
     /// by `mars serve` on shutdown).
     pub fn snapshot_json(&self) -> Value {
         let g = self.merged();
-        let (elapsed, cache_agg) = {
-            let gl = self.global.lock().unwrap();
+        let (elapsed, cache_agg, failures, health) = {
+            let gl = relock(&self.global);
             let elapsed = gl
                 .started
                 .map(|t| t.elapsed().as_secs_f64())
@@ -432,7 +542,12 @@ impl MetricsRegistry {
                 agg.bytes_resident += s.bytes_resident;
                 agg.entries += s.entries;
             }
-            (elapsed, agg)
+            (
+                elapsed,
+                agg,
+                gl.failures.clone(),
+                gl.health_by_replica.clone(),
+            )
         };
         let mut o = Value::obj();
         o.set("requests_ok", Value::Num(g.requests_ok as f64));
@@ -496,6 +611,27 @@ impl MetricsRegistry {
         );
         cache.set("entries", Value::Num(cache_agg.entries as f64));
         o.set("cache", cache);
+        // failure counters + health gauges (DESIGN.md §13): emitted
+        // only once something failed / a replica published health, so
+        // pre-existing snapshot consumers see no new keys on the happy
+        // path
+        if !failures.is_empty() {
+            let mut f = Value::obj();
+            for (kind, n) in &failures {
+                f.set(kind, Value::Num(*n as f64));
+            }
+            o.set("failures", f);
+        }
+        if !health.is_empty() {
+            let mut h = Value::obj();
+            for (replica, state) in &health {
+                h.set(
+                    &replica.to_string(),
+                    Value::Str((*state).to_string()),
+                );
+            }
+            o.set("health", h);
+        }
         let dispatches: u64 = g.occupancy.values().sum();
         if dispatches > 0 {
             let lane_rounds: u64 = g
@@ -568,7 +704,7 @@ impl MetricsRegistry {
     /// by the `{"cmd":"prom"}` RPC and the `--prom-addr` endpoint).
     pub fn render_prometheus(&self) -> String {
         let g = self.merged();
-        let gl = self.global.lock().unwrap();
+        let gl = relock(&self.global);
         let elapsed = gl
             .started
             .map(|t| t.elapsed().as_secs_f64())
@@ -581,6 +717,8 @@ impl MetricsRegistry {
             agg.bytes_resident += s.bytes_resident;
             agg.entries += s.entries;
         }
+        let failures = gl.failures.clone();
+        let health = gl.health_by_replica.clone();
         drop(gl);
         let mut p = PromText::new();
         p.counter("mars_requests_ok", &[], g.requests_ok as f64);
@@ -652,6 +790,23 @@ impl MetricsRegistry {
         if dispatches > 0 {
             p.counter("mars_batch_dispatches", &[], dispatches as f64);
         }
+        for (kind, n) in &failures {
+            p.counter("mars_failures_total", &[("kind", kind)], *n as f64);
+        }
+        for (replica, state) in &health {
+            // numeric severity gauge: 0 up, 1 draining, 2 down — easy
+            // to alert on (`max(mars_replica_health) >= 2`)
+            let code = match *state {
+                "up" => 0.0,
+                "draining" => 1.0,
+                _ => 2.0,
+            };
+            p.gauge(
+                "mars_replica_health",
+                &[("replica", &replica.to_string()), ("state", state)],
+                code,
+            );
+        }
         p.gauge("mars_cache_hits", &[], agg.hits as f64);
         p.gauge("mars_cache_misses", &[], agg.misses as f64);
         p.gauge("mars_cache_tokens_saved", &[], agg.tokens_saved as f64);
@@ -668,7 +823,7 @@ impl MetricsRegistry {
         self.shards
             .iter()
             .map(|s| {
-                let g = s.lock().unwrap();
+                let g = relock(s);
                 g.requests_ok + g.requests_err
             })
             .sum()
@@ -953,6 +1108,54 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("mars_ttft_ms_count 1"), "{text}");
+    }
+
+    #[test]
+    fn failure_counters_and_health_gauges_export() {
+        let r = MetricsRegistry::new();
+        // nothing failed -> neither object exists in the snapshot
+        assert!(r.snapshot_json().get("failures").is_none());
+        assert!(r.snapshot_json().get("health").is_none());
+        r.record_failure(FailureKind::DispatchFailed);
+        r.record_failure(FailureKind::DispatchFailed);
+        r.record_failure(FailureKind::LaneRequeued);
+        r.record_health(0, "up");
+        r.record_health(1, "down");
+        r.record_health(1, "draining"); // latest value wins
+        assert_eq!(r.failure_count(FailureKind::DispatchFailed), 2);
+        assert_eq!(r.failure_count(FailureKind::Shed), 0);
+        let v = r.snapshot_json();
+        assert_eq!(
+            v.path(&["failures", "dispatch_failed"]).unwrap().as_usize(),
+            Some(2)
+        );
+        assert_eq!(
+            v.path(&["failures", "lane_requeued"]).unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            v.path(&["health", "1"]).unwrap().as_str(),
+            Some("draining")
+        );
+        let text = r.render_prometheus();
+        assert!(
+            text.contains(
+                "mars_failures_total{kind=\"dispatch_failed\"} 2"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "mars_replica_health{replica=\"1\",state=\"draining\"} 1"
+            ),
+            "{text}"
+        );
+        // reset zeroes failure counters; health is a live gauge of
+        // current replica state, so it survives
+        r.reset();
+        let v = r.snapshot_json();
+        assert!(v.get("failures").is_none());
+        assert_eq!(v.path(&["health", "0"]).unwrap().as_str(), Some("up"));
     }
 
     #[test]

@@ -30,5 +30,7 @@ pub mod server;
 pub use metrics::MetricsRegistry;
 pub use replica::EngineReplica;
 pub use request::{Request, RequestId, Response, StreamDelta, StreamSink};
-pub use router::{Router, RouterPolicy, SubmitHandle, SubmitOptions};
+pub use router::{
+    Router, RouterConfig, RouterPolicy, SubmitHandle, SubmitOptions,
+};
 pub use scheduler::{Scheduler, SubmitTarget};

@@ -38,20 +38,99 @@
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cache::{CacheConfig, SharedPrefixCache};
-use crate::coordinator::metrics::{MetricsRegistry, RequestMetrics};
+use crate::coordinator::metrics::{
+    FailureKind, MetricsRegistry, RequestMetrics,
+};
 use crate::coordinator::request::{Response, StreamDelta, WorkItem};
 use crate::engine::{BatchRunner, GenParams, GenResult, SeqRunner};
+use crate::fault::{backoff_ms, FaultSpec};
 use crate::obs::round::RoundEvent;
 use crate::obs::trace::{Phase, TraceEvent, TraceWriter};
 use crate::runtime::Runtime;
+use crate::util::prng::Rng;
 use crate::verify::AcceptFlag;
+
+/// Requeue budget (DESIGN.md §13): how often an innocent batchmate of a
+/// failed dispatch may be re-admitted before it fails retriable.
+pub const MAX_REQUEUES: u32 = 3;
+
+/// Pure requeue decision the batched supervisor applies per victim lane
+/// (property-tested): `Some(n)` re-admits the lane with retry count `n`;
+/// `None` means the budget is exhausted and the lane must get a
+/// terminal *retriable* error instead — never a silent drop, never an
+/// unbounded retry loop.
+pub fn requeue_next_retries(retries: u32) -> Option<u32> {
+    if retries >= MAX_REQUEUES {
+        None
+    } else {
+        Some(retries + 1)
+    }
+}
+
+/// Batch-session rebuild attempts before the replica goes `Down`.
+const REBUILD_ATTEMPTS: u32 = 5;
+
+/// First rebuild backoff bound, milliseconds (doubles per attempt).
+const BACKOFF_BASE_MS: u64 = 10;
+
+/// Rebuild backoff cap, milliseconds.
+const BACKOFF_CAP_MS: u64 = 500;
+
+/// Consecutive session-build failures at admission before the replica
+/// declares itself dead rather than error-replying forever (a gray
+/// failure the router would keep routing into).
+const ADMISSION_FAILURE_LIMIT: usize = 5;
+
+/// Seed for the supervisor's deterministic jitter PRNG (mixed with the
+/// replica id; no wall clock involved).
+const SUPERVISOR_SEED: u64 = 0x6d61_7273_7375_7065;
+
+/// Replica health state (DESIGN.md §13), published by the serving loop
+/// through an atomic so the router reads it lock-free on every pick.
+///
+/// * `Up` — serving normally.
+/// * `Draining` — a fault poisoned the device state; the supervisor is
+///   rebuilding the session (capped, jittered backoff) after requeueing
+///   the innocent lanes. Still routable: queued work serves after the
+///   rebuild.
+/// * `Down` — the rebuild budget is exhausted. The thread stays alive
+///   to drain its channel with typed *retriable* errors (no client
+///   ever hangs on a corpse), but the router stops selecting it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Serving normally.
+    Up,
+    /// Supervisor is rebuilding the device session.
+    Draining,
+    /// Dead for good; drains its queue with retriable errors.
+    Down,
+}
+
+impl ReplicaHealth {
+    /// Stable label (metrics gauge + trace `detail`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaHealth::Up => "up",
+            ReplicaHealth::Draining => "draining",
+            ReplicaHealth::Down => "down",
+        }
+    }
+
+    fn from_u8(v: u8) -> ReplicaHealth {
+        match v {
+            0 => ReplicaHealth::Up,
+            1 => ReplicaHealth::Draining,
+            _ => ReplicaHealth::Down,
+        }
+    }
+}
 
 /// Handle to one engine-replica thread (see the module doc).
 pub struct EngineReplica {
@@ -66,6 +145,9 @@ pub struct EngineReplica {
     /// item lands in an active slot or errors out), so `load()` counts
     /// queued backlog exactly instead of "best effort".
     pub queued_hint: Arc<AtomicUsize>,
+    /// Current [`ReplicaHealth`] discriminant (DESIGN.md §13), written
+    /// by the serving loop, read lock-free by the router on every pick.
+    health: Arc<AtomicU8>,
 }
 
 /// Startup configuration for one replica.
@@ -101,6 +183,15 @@ pub struct ReplicaConfig {
     /// round → commit lines through it. `None` = tracing off (the
     /// default); the replica pays nothing beyond the `Option` check.
     pub trace: Option<Arc<TraceWriter>>,
+    /// Deterministic fault-injection spec (`--fault-plan`, DESIGN.md
+    /// §13): built into a per-replica `FaultPlan` inside the thread and
+    /// installed on the runtime's dispatch choke point. `None` = no
+    /// injection (the default; the hot path pays one `Option` check).
+    pub fault: Option<FaultSpec>,
+    /// Server-side default deadline (`--deadline-ms`): requests whose
+    /// wire object omitted `"deadline_ms"` inherit this budget,
+    /// measured from router submit. `None` = no default.
+    pub deadline_ms: Option<u64>,
 }
 
 impl EngineReplica {
@@ -116,14 +207,16 @@ impl EngineReplica {
         let shutdown = Arc::new(AtomicBool::new(false));
         let active = Arc::new(AtomicUsize::new(0));
         let queued_hint = Arc::new(AtomicUsize::new(0));
+        let health = Arc::new(AtomicU8::new(ReplicaHealth::Up as u8));
         let sd = shutdown.clone();
         let act = active.clone();
         let queued = queued_hint.clone();
+        let hlt = health.clone();
         let ready_err = ready.clone();
         let spawned = std::thread::Builder::new()
             .name(format!("mars-replica-{id}"))
             .spawn(move || {
-                let rt = match Runtime::new(&cfg.artifact_dir) {
+                let mut rt = match Runtime::new(&cfg.artifact_dir) {
                     Ok(rt) => {
                         let _ = ready.send(Ok(()));
                         rt
@@ -133,10 +226,20 @@ impl EngineReplica {
                         return;
                     }
                 };
-                let ctl = LoopCtl {
+                // deterministic fault injection (DESIGN.md §13): the
+                // spec forks its seed per replica, so the same plan
+                // replays the same fault schedule run over run
+                if let Some(spec) = &cfg.fault {
+                    if let Some(plan) = spec.build(id) {
+                        rt.install_fault_plan(Arc::new(plan));
+                    }
+                }
+                metrics.record_health(id, ReplicaHealth::Up.as_str());
+                let ctl = ReplicaCtl {
                     shutdown: &sd,
                     active: &act,
                     queued: &queued,
+                    health: &hlt,
                 };
                 replica_loop(id, &rt, &cfg, &work, &metrics, &ctl);
             });
@@ -156,6 +259,7 @@ impl EngineReplica {
             shutdown,
             active,
             queued_hint,
+            health,
         }
     }
 
@@ -163,6 +267,18 @@ impl EngineReplica {
     pub fn load(&self) -> usize {
         self.active.load(Ordering::Relaxed)
             + self.queued_hint.load(Ordering::Relaxed)
+    }
+
+    /// Current health state (lock-free; the router reads this on every
+    /// pick and routes around `Down` replicas — DESIGN.md §13).
+    pub fn health(&self) -> ReplicaHealth {
+        ReplicaHealth::from_u8(self.health.load(Ordering::Relaxed))
+    }
+
+    /// Submitted-but-not-admitted backlog (overload shedding reads the
+    /// sum of these across replicas).
+    pub fn queued(&self) -> usize {
+        self.queued_hint.load(Ordering::Relaxed)
     }
 
     /// Signal shutdown and join the replica thread (drains active work).
@@ -191,12 +307,44 @@ struct Active<'rt> {
     ttft_seconds: Option<f64>,
 }
 
-/// Shutdown flag + load gauges shared with the [`EngineReplica`] handle.
-struct LoopCtl<'a> {
+/// Shutdown flag + load/health gauges shared with the
+/// [`EngineReplica`] handle — everything the serving loop publishes
+/// back to the router side.
+struct ReplicaCtl<'a> {
     shutdown: &'a AtomicBool,
     active: &'a AtomicUsize,
     /// submitted-but-not-admitted items (see [`EngineReplica::queued_hint`])
     queued: &'a AtomicUsize,
+    /// current [`ReplicaHealth`] as its `u8` discriminant
+    health: &'a AtomicU8,
+}
+
+impl ReplicaCtl<'_> {
+    /// Publish a health transition on every surface at once: the
+    /// router-visible atomic, the metrics gauge and the span trace.
+    fn set_health(
+        &self,
+        id: usize,
+        h: ReplicaHealth,
+        metrics: &MetricsRegistry,
+        trace: &Option<Arc<TraceWriter>>,
+    ) {
+        self.health.store(h as u8, Ordering::Relaxed);
+        metrics.record_health(id, h.as_str());
+        trace_span(trace, 0, id, Phase::Health, |ev| {
+            ev.detail = Some(h.as_str().to_string());
+        });
+    }
+}
+
+/// Absolute deadline for one item (DESIGN.md §13): the request's own
+/// `"deadline_ms"`, else the server default — measured from router
+/// submit, so queue time counts against the budget.
+fn item_deadline(item: &WorkItem, cfg: &ReplicaConfig) -> Option<Instant> {
+    item.request
+        .deadline_ms
+        .or(cfg.deadline_ms)
+        .map(|ms| item.submitted_at + Duration::from_millis(ms))
 }
 
 fn replica_loop(
@@ -205,7 +353,7 @@ fn replica_loop(
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
     metrics: &Arc<MetricsRegistry>,
-    ctl: &LoopCtl<'_>,
+    ctl: &ReplicaCtl<'_>,
 ) {
     // capability-gated dispatch (module doc): `--batch N` only engages
     // the batched loop on artifact sets that carry the `*_batch`
@@ -307,6 +455,14 @@ fn record_success(
             &samples,
         );
     }
+    if result.deadline_exceeded {
+        // the commit above is partial: the deadline fired at a round
+        // boundary (DESIGN.md §13) — count it and log its own line
+        metrics.record_failure(FailureKind::DeadlineExceeded);
+        trace_span(trace, done.rid, replica, Phase::Deadline, |ev| {
+            ev.tokens = Some(result.tokens.len() as u64);
+        });
+    }
     trace_span(trace, done.rid, replica, Phase::Commit, |ev| {
         ev.wall_ms = Some(result.decode_seconds * 1e3);
         ev.tokens = Some(result.tokens.len() as u64);
@@ -323,10 +479,13 @@ fn interleaved_loop(
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
     metrics: &Arc<MetricsRegistry>,
-    ctl: &LoopCtl<'_>,
+    ctl: &ReplicaCtl<'_>,
 ) {
     let mut active: Vec<Active<'_>> = Vec::new();
     let slots = cfg.slots.max(1);
+    // consecutive session-build failures (DESIGN.md §13): a streak
+    // means the device is gone, not that one request was unlucky
+    let mut admission_failures = 0usize;
     // the prefix cache lives and dies on this thread, like the runtime
     let cache: Option<SharedPrefixCache> = cfg.cache.build();
     let publish_cache = |cache: &Option<SharedPrefixCache>| {
@@ -337,6 +496,27 @@ fn interleaved_loop(
     loop {
         if ctl.shutdown.load(Ordering::Relaxed) && active.is_empty() {
             return;
+        }
+        // a replica whose session builds fail back-to-back is dead,
+        // not degraded: go Down and drain with retriable errors
+        // instead of error-replying forever (DESIGN.md §13)
+        if admission_failures >= ADMISSION_FAILURE_LIMIT
+            && active.is_empty()
+        {
+            ctl.set_health(id, ReplicaHealth::Down, metrics, &cfg.trace);
+            metrics.record_failure(FailureKind::ReplicaDown);
+            eprintln!(
+                "replica {id}: {admission_failures} consecutive \
+                 session failures; draining"
+            );
+            return drain_down(
+                id,
+                work,
+                VecDeque::new(),
+                metrics,
+                ctl,
+                &cfg.trace,
+            );
         }
         // ---- admission: fill free slots -------------------------------
         while active.len() < slots {
@@ -383,6 +563,10 @@ fn interleaved_loop(
             );
             match admitted {
                 Ok(mut runner) => {
+                    admission_failures = 0;
+                    // per-request deadline (DESIGN.md §13): measured
+                    // from router submit, enforced at round boundaries
+                    runner.set_deadline(item_deadline(&item, cfg));
                     // streaming slots never pack: a fused call would
                     // collapse per-round deltas into one chunk and hold
                     // the device pack× longer before the next delta
@@ -467,6 +651,8 @@ fn interleaved_loop(
                     ctl.active.store(active.len(), Ordering::Relaxed);
                 }
                 Err(e) => {
+                    admission_failures += 1;
+                    metrics.record_failure(FailureKind::DispatchFailed);
                     let resp = Response::from_error(
                         item.request.id,
                         &format!("prefill failed: {e:#}"),
@@ -487,6 +673,9 @@ fn interleaved_loop(
             // reflects it, so `load()` never dips mid-admission
             ctl.queued.fetch_sub(1, Ordering::Relaxed);
             publish_cache(&cache);
+            if admission_failures >= ADMISSION_FAILURE_LIMIT {
+                break; // fall through to the dead-streak check above
+            }
         }
         if active.is_empty() {
             continue;
@@ -539,6 +728,7 @@ fn interleaved_loop(
                 }
                 Ok(None) => false,
                 Err(e) => {
+                    metrics.record_failure(FailureKind::DispatchFailed);
                     let _ = a.item.reply.send(Response::from_error(
                         a.item.request.id,
                         &format!("decode failed: {e:#}"),
@@ -680,13 +870,14 @@ fn batched_loop(
     cfg: &ReplicaConfig,
     work: &Receiver<WorkItem>,
     metrics: &Arc<MetricsRegistry>,
-    ctl: &LoopCtl<'_>,
+    ctl: &ReplicaCtl<'_>,
 ) {
     let mut runner = match BatchRunner::new(rt) {
         Ok(r) => r,
         Err(e) => {
             // supports_batching() said yes but the session bring-up
             // failed — serve interleaved rather than killing the replica
+            metrics.record_failure(FailureKind::SessionRebuildFailed);
             eprintln!(
                 "replica {id}: batch session failed ({e:#}); \
                  serving interleaved"
@@ -707,12 +898,27 @@ fn batched_loop(
     // family-mismatched arrivals wait here; they still count as queued
     // (`queued_hint` drops only at admission ack) so `load()` is exact
     let mut pending: VecDeque<WorkItem> = VecDeque::new();
+    // consecutive solo-prefill failures at admission (DESIGN.md §13)
+    let mut admission_failures = 0usize;
     loop {
         if ctl.shutdown.load(Ordering::Relaxed)
             && runner.is_empty()
             && pending.is_empty()
         {
             return;
+        }
+        // back-to-back session failures mean the device is gone: go
+        // Down and drain with retriable errors (DESIGN.md §13)
+        if admission_failures >= ADMISSION_FAILURE_LIMIT
+            && runner.is_empty()
+        {
+            ctl.set_health(id, ReplicaHealth::Down, metrics, &cfg.trace);
+            metrics.record_failure(FailureKind::ReplicaDown);
+            eprintln!(
+                "replica {id}: {admission_failures} consecutive \
+                 session failures; draining"
+            );
+            return drain_down(id, work, pending, metrics, ctl, &cfg.trace);
         }
         // ---- intake: drain the channel into the arrival queue ---------
         if runner.is_empty() && pending.is_empty() {
@@ -765,6 +971,10 @@ fn batched_loop(
             }
             match runner.admit(&toks, &item.request.params, req_cache) {
                 Ok(slot) => {
+                    admission_failures = 0;
+                    // per-request deadline (DESIGN.md §13): measured
+                    // from router submit, enforced at round boundaries
+                    runner.set_deadline(slot, item_deadline(&item, cfg));
                     // streaming lanes never pack (per-round deltas); the
                     // *other* lanes keep their own pack budgets — packing
                     // is per-lane under `*_batch_multi`
@@ -843,6 +1053,8 @@ fn batched_loop(
                     ctl.active.store(runner.occupancy(), Ordering::Relaxed);
                 }
                 Err(e) => {
+                    admission_failures += 1;
+                    metrics.record_failure(FailureKind::DispatchFailed);
                     let resp = Response::from_error(
                         item.request.id,
                         &format!("prefill failed: {e:#}"),
@@ -918,38 +1130,141 @@ fn batched_loop(
                 }
             }
             Err(e) => {
-                // a dispatch failure poisons the whole stacked state:
-                // fail every live lane, then restart with a fresh batch
+                // ---- supervisor (DESIGN.md §13) -----------------------
+                // a dispatch failure poisons the whole stacked state,
+                // but the *requests* riding it are innocent: requeue
+                // them front-of-queue with a bounded retry budget and
+                // rebuild the device session under capped, jittered
+                // backoff. Health is published at every transition so
+                // the router routes around us while we recover.
                 let msg = format!("{e:#}");
-                for slot in 0..lanes.len() {
-                    if let Some(lane) = lanes[slot].take() {
+                metrics.record_failure(FailureKind::DispatchFailed);
+                trace_span(&cfg.trace, 0, id, Phase::Fault, |ev| {
+                    ev.detail = Some(msg.clone());
+                });
+                ctl.set_health(
+                    id,
+                    ReplicaHealth::Draining,
+                    metrics,
+                    &cfg.trace,
+                );
+                // requeue victims in arrival order at the queue front
+                // (FIFO survives the fault); greedy decode re-executes
+                // deterministically, so a requeued lane's final text is
+                // token-identical to an unfaulted run
+                let mut victims: Vec<BatchLane> =
+                    lanes.iter_mut().filter_map(|l| l.take()).collect();
+                victims.sort_by_key(|l| l.item.submitted_at);
+                for lane in victims.into_iter().rev() {
+                    let queue_seconds = lane.queue_seconds;
+                    let mut item = lane.item;
+                    let Some(next_retries) =
+                        requeue_next_retries(item.retries)
+                    else {
+                        metrics.record_failure(
+                            FailureKind::RequeueBudgetExhausted,
+                        );
                         metrics.record(failed_metrics(
                             id,
-                            &lane.item,
-                            lane.queue_seconds,
+                            &item,
+                            queue_seconds,
                         ));
-                        let _ = lane.item.reply.send(Response::from_error(
-                            lane.item.request.id,
-                            &format!("decode failed: {msg}"),
+                        trace_span(
+                            &cfg.trace,
+                            item.request.id,
+                            id,
+                            Phase::Error,
+                            |te| te.ok = Some(false),
+                        );
+                        let _ = item.reply.send(Response::retriable_error(
+                            item.request.id,
+                            &format!(
+                                "decode failed after {MAX_REQUEUES} \
+                                 retries: {msg}"
+                            ),
                         ));
+                        continue;
+                    };
+                    item.retries = next_retries;
+                    metrics.record_failure(FailureKind::LaneRequeued);
+                    trace_span(
+                        &cfg.trace,
+                        item.request.id,
+                        id,
+                        Phase::Requeue,
+                        |te| {
+                            te.detail =
+                                Some(format!("retry {}", item.retries));
+                        },
+                    );
+                    // the lane re-enters the queue: its hint comes
+                    // back up here and drops again at re-admission,
+                    // so `load()` stays exact through the fault
+                    ctl.queued.fetch_add(1, Ordering::Relaxed);
+                    pending.push_front(item);
+                }
+                ctl.active.store(0, Ordering::Relaxed);
+                // ---- rebuild under capped, jittered backoff -----------
+                let mut rng = Rng::new(SUPERVISOR_SEED ^ id as u64);
+                let mut rebuilt = None;
+                for attempt in 0..REBUILD_ATTEMPTS {
+                    if ctl.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match BatchRunner::new(rt) {
+                        Ok(r) => {
+                            rebuilt = Some(r);
+                            break;
+                        }
+                        Err(e2) => {
+                            metrics.record_failure(
+                                FailureKind::SessionRebuildFailed,
+                            );
+                            let wait = backoff_ms(
+                                attempt,
+                                BACKOFF_BASE_MS,
+                                BACKOFF_CAP_MS,
+                                &mut rng,
+                            );
+                            eprintln!(
+                                "replica {id}: batch session rebuild \
+                                 attempt {attempt} failed ({e2:#}); \
+                                 retrying in {wait} ms"
+                            );
+                            std::thread::sleep(Duration::from_millis(
+                                wait,
+                            ));
+                        }
                     }
                 }
-                match BatchRunner::new(rt) {
-                    Ok(r) => runner = r,
-                    Err(e2) => {
-                        eprintln!(
-                            "replica {id}: batch session lost ({e2:#})"
+                match rebuilt {
+                    Some(r) => {
+                        runner = r;
+                        ctl.set_health(
+                            id,
+                            ReplicaHealth::Up,
+                            metrics,
+                            &cfg.trace,
                         );
-                        for item in pending.drain(..) {
-                            metrics.record(failed_metrics(id, &item, 0.0));
-                            let _ = item.reply.send(Response::from_error(
-                                item.request.id,
-                                "replica lost its device batch",
-                            ));
-                            ctl.queued.fetch_sub(1, Ordering::Relaxed);
-                        }
-                        ctl.active.store(0, Ordering::Relaxed);
-                        return;
+                    }
+                    None => {
+                        // rebuild budget exhausted: go Down but stay
+                        // alive, draining the channel with typed
+                        // retriable errors — no client ever hangs on a
+                        // corpse and the gauges reconcile to zero
+                        ctl.set_health(
+                            id,
+                            ReplicaHealth::Down,
+                            metrics,
+                            &cfg.trace,
+                        );
+                        metrics.record_failure(FailureKind::ReplicaDown);
+                        eprintln!(
+                            "replica {id}: batch session lost; draining"
+                        );
+                        return drain_down(
+                            id, work, pending, metrics, ctl, &cfg.trace,
+                        );
                     }
                 }
             }
@@ -958,9 +1273,71 @@ fn batched_loop(
     }
 }
 
+/// Down-state drain loop (DESIGN.md §13): the replica's device session
+/// is gone for good, but the thread stays alive until shutdown so every
+/// queued and still-arriving item gets a typed *retriable* error reply
+/// — the router has already stopped selecting this replica, and racing
+/// submits still in flight land here instead of hanging — and the
+/// queued gauge reconciles to zero (the pre-§13 loop returned with the
+/// channel open, leaking one `queued_hint` per in-flight submit).
+fn drain_down(
+    id: usize,
+    work: &Receiver<WorkItem>,
+    mut pending: VecDeque<WorkItem>,
+    metrics: &Arc<MetricsRegistry>,
+    ctl: &ReplicaCtl<'_>,
+    trace: &Option<Arc<TraceWriter>>,
+) {
+    let reject = |item: WorkItem| {
+        metrics.record_failure(FailureKind::ReplicaDown);
+        metrics.record(failed_metrics(
+            id,
+            &item,
+            item.submitted_at.elapsed().as_secs_f64(),
+        ));
+        trace_span(trace, item.request.id, id, Phase::Error, |te| {
+            te.ok = Some(false);
+        });
+        let _ = item.reply.send(Response::retriable_error(
+            item.request.id,
+            &format!("replica {id} is down; retry another replica"),
+        ));
+        ctl.queued.fetch_sub(1, Ordering::Relaxed);
+    };
+    for item in pending.drain(..) {
+        reject(item);
+    }
+    loop {
+        if ctl.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match work.recv_timeout(Duration::from_millis(50)) {
+            Ok(item) => reject(item),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::plan_admissions;
+    use super::{plan_admissions, ReplicaHealth};
+
+    #[test]
+    fn health_discriminants_round_trip() {
+        for h in [
+            ReplicaHealth::Up,
+            ReplicaHealth::Draining,
+            ReplicaHealth::Down,
+        ] {
+            assert_eq!(ReplicaHealth::from_u8(h as u8), h);
+        }
+        assert_eq!(ReplicaHealth::Up.as_str(), "up");
+        assert_eq!(ReplicaHealth::Draining.as_str(), "draining");
+        assert_eq!(ReplicaHealth::Down.as_str(), "down");
+        // unknown discriminants degrade to Down, never to healthy
+        assert_eq!(ReplicaHealth::from_u8(7), ReplicaHealth::Down);
+    }
 
     #[test]
     fn empty_batch_admits_head_and_its_family() {

@@ -55,6 +55,12 @@ pub struct Request {
     /// default. Programmatic submissions set `true`: their
     /// [`GenParams`] are authoritative as given.
     pub pack_specified: bool,
+    /// Per-request wall deadline in milliseconds, measured from router
+    /// submission (wire field `"deadline_ms"`; absent means the server's
+    /// `--deadline-ms` default, or none). Enforced at round boundaries:
+    /// an expired request finalizes with its partial committed prefix
+    /// and `"deadline_exceeded": true` on the reply (DESIGN.md §13).
+    pub deadline_ms: Option<u64>,
 }
 
 /// Terminal response for a request.
@@ -95,6 +101,21 @@ pub struct Response {
     /// > 1; the first call of any sequence still runs unpacked, the
     /// TTFT guard of DESIGN.md §9.6).
     pub rounds_per_call: usize,
+    /// The request's deadline fired before it finished naturally: `text`
+    /// holds the partial committed prefix and the wire reply carries
+    /// `"deadline_exceeded": true` (DESIGN.md §13).
+    pub deadline_exceeded: bool,
+    /// The server shed this request at admission (queue depth above
+    /// `--shed-above`): wire reply `{"busy": true, "retry_after_ms": N}`
+    /// with `ok == false`.
+    pub busy: bool,
+    /// Client back-off hint accompanying a shed reply, milliseconds
+    /// (wire field `"retry_after_ms"`, emitted alongside `"busy"`).
+    pub retry_after_ms: Option<u64>,
+    /// The failure is transient — shed, replica lost mid-flight, or all
+    /// replicas down — and the client may safely resubmit (wire field
+    /// `"retriable": true`; never set on request-shaped errors).
+    pub retriable: bool,
 }
 
 /// One incremental streaming event: the text committed since the previous
@@ -150,6 +171,10 @@ impl Response {
             canceled: false,
             cached_tokens: r.prefill_cached_tokens,
             rounds_per_call: params.rounds_per_call,
+            deadline_exceeded: r.deadline_exceeded,
+            busy: false,
+            retry_after_ms: None,
+            retriable: false,
         }
     }
 
@@ -170,7 +195,33 @@ impl Response {
             canceled: false,
             cached_tokens: 0,
             rounds_per_call: 1,
+            deadline_exceeded: false,
+            busy: false,
+            retry_after_ms: None,
+            retriable: false,
         }
+    }
+
+    /// Build a *retriable* error response (`ok == false`,
+    /// `"retriable": true`): the failure is transient — the replica was
+    /// lost mid-flight, the requeue budget ran out, or every replica is
+    /// down — and the client may safely resubmit (DESIGN.md §13).
+    pub fn retriable_error(id: RequestId, msg: &str) -> Response {
+        let mut r = Response::from_error(id, msg);
+        r.retriable = true;
+        r
+    }
+
+    /// Build the overload-shed reply (`ok == false`, `"busy": true`,
+    /// `"retriable": true`, `"retry_after_ms"` back-off hint): the queue
+    /// depth crossed `--shed-above` and the request was rejected at
+    /// admission instead of blocking the accept path (DESIGN.md §13).
+    pub fn busy(id: RequestId, retry_after_ms: u64) -> Response {
+        let mut r = Response::from_error(id, "server overloaded");
+        r.busy = true;
+        r.retriable = true;
+        r.retry_after_ms = Some(retry_after_ms);
+        r
     }
 
     /// Wire form of the terminal reply line (one JSON object).
@@ -205,6 +256,18 @@ impl Response {
                 Value::Num(self.rounds_per_call as f64),
             );
         }
+        if self.deadline_exceeded {
+            o.set("deadline_exceeded", Value::Bool(true));
+        }
+        if self.busy {
+            o.set("busy", Value::Bool(true));
+        }
+        if let Some(ms) = self.retry_after_ms {
+            o.set("retry_after_ms", Value::Num(ms as f64));
+        }
+        if self.retriable {
+            o.set("retriable", Value::Bool(true));
+        }
         o
     }
 }
@@ -232,6 +295,11 @@ impl Response {
 /// (DESIGN.md §9.6). Absent means the server's `--pack` default;
 /// streaming requests are capped to 1 by the replica so every round
 /// still emits its delta, and the reply echoes the effective value.
+///
+/// `"deadline_ms"` sets the request's wall deadline, measured from
+/// router submission; absent means the server's `--deadline-ms` default
+/// (or none). An expired request finalizes at the next round boundary
+/// with its partial text and `"deadline_exceeded": true`.
 pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
     let prompt = v
         .get("prompt")
@@ -289,9 +357,21 @@ pub fn parse_request_json(id: RequestId, v: &Value) -> Result<Request, String> {
             .map(|f| f as usize)
             .ok_or("'rounds_per_call' must be a positive integer")?;
     }
+    // per-request wall deadline (DESIGN.md §13); 0 is rejected — a
+    // request that can spend no time at all is a client bug, not a
+    // degenerate shed
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => Some(
+            x.as_f64()
+                .filter(|f| f.is_finite() && *f >= 1.0 && f.fract() == 0.0)
+                .map(|f| f as u64)
+                .ok_or("'deadline_ms' must be a positive integer")?,
+        ),
+    };
     params.cache = cache;
     params.probe = probe;
-    Ok(Request { id, prompt, params, stream, pack_specified })
+    Ok(Request { id, prompt, params, stream, pack_specified, deadline_ms })
 }
 
 /// Work item flowing to a replica: the request, its reply channel, and the
@@ -310,6 +390,11 @@ pub struct WorkItem {
     /// Cooperative cancel flag: the replica checks it between rounds and
     /// finalizes early with the committed prefix when set.
     pub cancel: Arc<AtomicBool>,
+    /// Requeue attempts consumed so far (DESIGN.md §13): incremented
+    /// each time a batch dispatch failure re-admits this innocent lane;
+    /// past the supervisor's budget the request fails retriably instead
+    /// of looping forever.
+    pub retries: u32,
 }
 
 #[cfg(test)]
@@ -446,6 +531,10 @@ mod tests {
             canceled: false,
             cached_tokens: 0,
             rounds_per_call: 1,
+            deadline_exceeded: false,
+            busy: false,
+            retry_after_ms: None,
+            retriable: false,
         };
         let v = resp.to_json();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
@@ -481,6 +570,59 @@ mod tests {
                 .and_then(|t| t.as_usize()),
             Some(8)
         );
+        // the failure-semantics fields only appear when set
+        for field in ["deadline_exceeded", "busy", "retry_after_ms", "retriable"]
+        {
+            assert!(v.get(field).is_none(), "{field} emitted unset");
+        }
+        let mut d = resp.clone();
+        d.deadline_exceeded = true;
+        assert_eq!(
+            d.to_json().get("deadline_exceeded").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn busy_reply_carries_the_shed_fields() {
+        let v = Response::busy(4, 150).to_json();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(v.get("busy").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(
+            v.get("retry_after_ms").and_then(|t| t.as_usize()),
+            Some(150)
+        );
+        assert_eq!(v.get("retriable").and_then(|b| b.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn retriable_error_sets_only_the_retriable_flag() {
+        let v = Response::retriable_error(7, "replica lost").to_json();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(v.get("retriable").and_then(|b| b.as_bool()), Some(true));
+        assert!(v.get("busy").is_none());
+        assert!(v.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn parses_deadline_ms() {
+        let v = Value::parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(parse_request_json(1, &v).unwrap().deadline_ms, None);
+        let v = Value::parse(r#"{"prompt": "hi", "deadline_ms": 2500}"#)
+            .unwrap();
+        assert_eq!(
+            parse_request_json(1, &v).unwrap().deadline_ms,
+            Some(2500)
+        );
+        for bad in [
+            r#"{"prompt": "hi", "deadline_ms": 0}"#,
+            r#"{"prompt": "hi", "deadline_ms": -5}"#,
+            r#"{"prompt": "hi", "deadline_ms": 1.5}"#,
+            r#"{"prompt": "hi", "deadline_ms": "soon"}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(parse_request_json(1, &v).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! replica's decode loop. Load accounting is exact: `queued_hint` is
 //! incremented at submit and decremented by the replica's admission ack,
 //! so `LeastLoaded` sees queued backlog, not just active slots.
+//!
+//! Failover (DESIGN.md §13): [`pick_replica`] skips `Down` replicas
+//! (`PrefixAffinity` degrades to least-loaded-among-healthy when its
+//! pinned replica is unhealthy), an all-replicas-down submit returns a
+//! typed retriable error instead of hanging, and `--shed-above N`
+//! rejects new work with `{"busy": true, "retry_after_ms": ...}` once
+//! the queued backlog crosses the threshold.
 
 // Serving-layer lint wall (DESIGN.md §11): a panic here takes the whole
 // connection or replica down, so unwrap/expect are denied outright in
@@ -23,12 +30,15 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::metrics::MetricsRegistry;
-use crate::coordinator::replica::{EngineReplica, ReplicaConfig};
+use crate::coordinator::metrics::{FailureKind, MetricsRegistry};
+use crate::coordinator::replica::{
+    EngineReplica, ReplicaConfig, ReplicaHealth,
+};
 use crate::coordinator::request::{
     Request, RequestId, Response, StreamSink, WorkItem,
 };
 use crate::engine::GenParams;
+use crate::fault::FaultSpec;
 use crate::obs::trace::TraceWriter;
 
 /// Replica-assignment policy (`--route rr|ll|prefix`).
@@ -61,24 +71,53 @@ impl RouterPolicy {
 
 /// Pure replica-choice rule — unit-testable without live replicas.
 /// `loads` are active + queued counts per replica, `rr` the round-robin
-/// ticket, `prompt` the request text (only `PrefixAffinity` reads it).
+/// ticket, `prompt` the request text (only `PrefixAffinity` reads it),
+/// `up[i]` whether replica `i` is routable (health != `Down`,
+/// DESIGN.md §13). Returns `None` when every replica is down — the
+/// caller replies with a typed retriable error instead of queueing onto
+/// a corpse.
+///
+/// Failover semantics per policy:
+/// * `RoundRobin` rotates across the routable replicas only;
+/// * `LeastLoaded` takes the minimum over routable replicas;
+/// * `PrefixAffinity` pins `affinity_hash(prompt) % n` while that
+///   replica is routable and *degrades to least-loaded among the
+///   routable* when it is not (the pinned replica's prefix cache is
+///   gone with it — any healthy replica serves the turn cold).
 pub fn pick_replica(
     policy: RouterPolicy,
     loads: &[usize],
     rr: usize,
     prompt: &str,
-) -> usize {
-    let n = loads.len().max(1);
-    match policy {
-        RouterPolicy::RoundRobin => rr % n,
-        RouterPolicy::LeastLoaded => loads
+    up: &[bool],
+) -> Option<usize> {
+    let n = loads.len();
+    let routable = |i: usize| up.get(i).copied().unwrap_or(true);
+    let least_loaded = || {
+        loads
             .iter()
             .enumerate()
-            .min_by_key(|(_, &l)| l)
+            .filter(|&(i, _)| routable(i))
+            .min_by_key(|&(_, &l)| l)
             .map(|(i, _)| i)
-            .unwrap_or(0),
+    };
+    match policy {
+        RouterPolicy::RoundRobin => {
+            let alive: Vec<usize> = (0..n).filter(|&i| routable(i)).collect();
+            (!alive.is_empty()).then(|| alive[rr % alive.len()])
+        }
+        RouterPolicy::LeastLoaded => least_loaded(),
         RouterPolicy::PrefixAffinity => {
-            (crate::cache::key::affinity_hash(prompt) % n as u64) as usize
+            if n == 0 {
+                return None;
+            }
+            let pinned =
+                (crate::cache::key::affinity_hash(prompt) % n as u64) as usize;
+            if routable(pinned) {
+                Some(pinned)
+            } else {
+                least_loaded()
+            }
         }
     }
 }
@@ -95,6 +134,10 @@ pub struct SubmitOptions {
     /// request carried `"rounds_per_call"`/`"pack"`, even an explicit
     /// 1): the replica must not apply its `--pack` server default.
     pub pack_specified: bool,
+    /// Per-request wall deadline in milliseconds from submission
+    /// (`"deadline_ms"` on the wire; `None` lets the replica apply the
+    /// server's `--deadline-ms` default).
+    pub deadline_ms: Option<u64>,
 }
 
 /// Live handle to one submitted request.
@@ -108,6 +151,66 @@ pub struct SubmitHandle {
     pub id: RequestId,
 }
 
+/// Everything [`Router::start`] needs to spin up the serving topology —
+/// one struct instead of the 9-positional-argument `start_traced` this
+/// replaced, so the failure-semantics knobs (`fault`, `deadline_ms`,
+/// `shed_above`, DESIGN.md §13) ride along without another signature
+/// bump.
+#[derive(Clone)]
+pub struct RouterConfig {
+    /// Compiled-artifact directory every replica loads.
+    pub artifact_dir: std::path::PathBuf,
+    /// Engine replica count (threads; min 1).
+    pub replicas: usize,
+    /// Interleaved sequence slots per replica.
+    pub slots: usize,
+    /// Force the host-roundtrip runtime (§Perf baseline).
+    pub hostloop: bool,
+    /// Replica-assignment policy (`--route`).
+    pub policy: RouterPolicy,
+    /// Per-replica prefix-cache budget (DESIGN.md §8).
+    pub cache: crate::cache::CacheConfig,
+    /// Server-side round-packing default (`--pack`, DESIGN.md §9.6).
+    pub pack: usize,
+    /// Cross-sequence batch width (`--batch`, DESIGN.md §9.5); 1 keeps
+    /// the interleaved loop.
+    pub batch: usize,
+    /// Shared span-trace writer (`--trace FILE`, DESIGN.md §12).
+    pub trace: Option<Arc<TraceWriter>>,
+    /// Fault-injection spec (`--fault-plan`, DESIGN.md §13) installed on
+    /// every replica runtime the spec applies to.
+    pub fault: Option<FaultSpec>,
+    /// Server-default per-request deadline (`--deadline-ms`): applied to
+    /// requests that carry no `"deadline_ms"` of their own.
+    pub deadline_ms: Option<u64>,
+    /// Overload-shedding threshold (`--shed-above N`): once the queued
+    /// backlog across replicas reaches N, new submissions are rejected
+    /// with `{"busy": true, "retry_after_ms": ...}`.
+    pub shed_above: Option<usize>,
+}
+
+impl RouterConfig {
+    /// Config with every knob at its serving default (one replica, two
+    /// slots, least-loaded routing, default cache, no packing, no
+    /// batching, no trace, no faults, no deadline, no shedding).
+    pub fn new(artifact_dir: &Path) -> RouterConfig {
+        RouterConfig {
+            artifact_dir: artifact_dir.to_path_buf(),
+            replicas: 1,
+            slots: 2,
+            hostloop: false,
+            policy: RouterPolicy::LeastLoaded,
+            cache: crate::cache::CacheConfig::default(),
+            pack: 1,
+            batch: 1,
+            trace: None,
+            fault: None,
+            deadline_ms: None,
+            shed_above: None,
+        }
+    }
+}
+
 /// Front of the serving topology: owns the replicas and their queues.
 pub struct Router {
     replicas: Vec<EngineReplica>,
@@ -115,73 +218,36 @@ pub struct Router {
     policy: RouterPolicy,
     rr_next: AtomicUsize,
     next_id: AtomicU64,
+    /// Overload-shedding threshold (see [`RouterConfig::shed_above`]).
+    shed_above: Option<usize>,
     /// Shared serving-metrics registry (also served by `{"cmd":"metrics"}`).
     pub metrics: Arc<MetricsRegistry>,
 }
 
 impl Router {
-    /// Spin up `n_replicas` engine threads and wait until every runtime
-    /// has compiled its executables. `pack` is the server-side round
-    /// packing default (`--pack`, DESIGN.md §9.6) replicas apply to
-    /// requests that don't carry their own `"rounds_per_call"`; `batch`
-    /// is the cross-sequence batch width (`--batch`, DESIGN.md §9.5) —
-    /// replicas with batching-capable artifacts decode up to that many
-    /// lanes per device dispatch, 1 keeps the interleaved loop.
-    pub fn start(
-        artifact_dir: &Path,
-        n_replicas: usize,
-        slots: usize,
-        hostloop: bool,
-        policy: RouterPolicy,
-        cache: crate::cache::CacheConfig,
-        pack: usize,
-        batch: usize,
-    ) -> Result<Router> {
-        Router::start_traced(
-            artifact_dir,
-            n_replicas,
-            slots,
-            hostloop,
-            policy,
-            cache,
-            pack,
-            batch,
-            None,
-        )
-    }
-
-    /// [`Router::start`] with a shared span-trace writer (`mars serve
-    /// --trace FILE`, DESIGN.md §12): every replica logs queue →
-    /// prefill → round → commit lines for each request it serves.
-    #[allow(clippy::too_many_arguments)]
-    pub fn start_traced(
-        artifact_dir: &Path,
-        n_replicas: usize,
-        slots: usize,
-        hostloop: bool,
-        policy: RouterPolicy,
-        cache: crate::cache::CacheConfig,
-        pack: usize,
-        batch: usize,
-        trace: Option<Arc<TraceWriter>>,
-    ) -> Result<Router> {
+    /// Spin up `cfg.replicas` engine threads and wait until every
+    /// runtime has compiled its executables (a replica that cannot even
+    /// start is a config error, not a fault to supervise — bail).
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
         let metrics = Arc::new(MetricsRegistry::new());
         let mut replicas = Vec::new();
         let mut senders = Vec::new();
         let mut readys: Vec<Receiver<Result<(), String>>> = Vec::new();
-        for id in 0..n_replicas.max(1) {
+        for id in 0..cfg.replicas.max(1) {
             let (tx, rx) = channel::<WorkItem>();
             let (ready_tx, ready_rx) = channel();
             let rep = EngineReplica::spawn(
                 id,
                 ReplicaConfig {
-                    artifact_dir: artifact_dir.to_path_buf(),
-                    slots,
-                    hostloop,
-                    cache,
-                    pack,
-                    batch,
-                    trace: trace.clone(),
+                    artifact_dir: cfg.artifact_dir.clone(),
+                    slots: cfg.slots,
+                    hostloop: cfg.hostloop,
+                    cache: cfg.cache,
+                    pack: cfg.pack,
+                    batch: cfg.batch,
+                    trace: cfg.trace.clone(),
+                    fault: cfg.fault.clone(),
+                    deadline_ms: cfg.deadline_ms,
                 },
                 rx,
                 metrics.clone(),
@@ -201,9 +267,10 @@ impl Router {
         Ok(Router {
             replicas,
             senders,
-            policy,
+            policy: cfg.policy,
             rr_next: AtomicUsize::new(0),
             next_id: AtomicU64::new(1),
+            shed_above: cfg.shed_above,
             metrics,
         })
     }
@@ -225,12 +292,46 @@ impl Router {
         self.replicas.iter().map(|r| r.load()).collect()
     }
 
-    fn pick(&self, prompt: &str) -> usize {
+    /// Per-replica supervision health (DESIGN.md §13).
+    pub fn healths(&self) -> Vec<ReplicaHealth> {
+        self.replicas.iter().map(|r| r.health()).collect()
+    }
+
+    /// Queued-but-unadmitted backlog across every replica — the depth
+    /// `--shed-above` compares against (active slots are working, not
+    /// waiting; shedding is about the line, not the tills).
+    pub fn queued_total(&self) -> usize {
+        self.replicas.iter().map(|r| r.queued()).sum()
+    }
+
+    /// Should a new submission be shed right now (DESIGN.md §13)?
+    /// Returns the `retry_after_ms` hint to reply with when yes: a
+    /// deterministic back-off proportional to how far past the
+    /// threshold the backlog is, so deeper overload pushes clients
+    /// further away.
+    pub fn should_shed(&self) -> Option<u64> {
+        let threshold = self.shed_above?;
+        let queued = self.queued_total();
+        if queued >= threshold {
+            let over = queued.saturating_sub(threshold) as u64;
+            Some((50 * (over + 1)).min(5_000))
+        } else {
+            None
+        }
+    }
+
+    fn pick(&self, prompt: &str) -> Option<usize> {
+        let up: Vec<bool> = self
+            .replicas
+            .iter()
+            .map(|r| r.health() != ReplicaHealth::Down)
+            .collect();
         pick_replica(
             self.policy,
             &self.loads(),
             self.rr_next.fetch_add(1, Ordering::Relaxed),
             prompt,
+            &up,
         )
     }
 
@@ -248,7 +349,18 @@ impl Router {
             .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
-        let idx = self.pick(prompt);
+        let Some(idx) = self.pick(prompt) else {
+            // every replica is Down: reply with a typed retriable error
+            // immediately instead of queueing onto a corpse (the handle
+            // contract is unchanged — the terminal reply just arrives
+            // before the caller's first recv)
+            self.metrics.record_failure(FailureKind::AllReplicasDown);
+            let _ = tx.send(Response::retriable_error(
+                id,
+                "all replicas down; retry later",
+            ));
+            return SubmitHandle { rx, cancel, id };
+        };
         self.replicas[idx]
             .queued_hint
             .fetch_add(1, Ordering::Relaxed);
@@ -259,23 +371,31 @@ impl Router {
                 params,
                 stream: opts.stream.is_some(),
                 pack_specified: opts.pack_specified,
+                deadline_ms: opts.deadline_ms,
             },
             reply: tx,
             submitted_at: std::time::Instant::now(),
             stream: opts.stream,
             cancel: cancel.clone(),
+            retries: 0,
         };
         // the hint stays up until the replica's admission ack (it
         // decrements after moving the item into an active slot, or after
         // replying with a prefill error), so least-loaded routing sees
         // queued backlog exactly — a burst spreads instead of piling onto
         // the first replica whose gauges had not caught up yet
-        if self.senders[idx].send(item).is_err() {
+        if let Err(failed) = self.senders[idx].send(item) {
             // replica gone: the receiver hung up and will never ack —
-            // undo the hint so the dead replica doesn't look loaded
+            // undo the hint so the dead replica doesn't look loaded, and
+            // reply retriably instead of letting the request hang
             self.replicas[idx]
                 .queued_hint
                 .fetch_sub(1, Ordering::Relaxed);
+            self.metrics.record_failure(FailureKind::ReplicaLost);
+            let _ = failed
+                .0
+                .reply
+                .send(Response::retriable_error(id, "replica queue closed"));
         }
         SubmitHandle { rx, cancel, id }
     }
@@ -338,22 +458,24 @@ impl Router {
 mod tests {
     use super::*;
 
+    const UP4: [bool; 4] = [true; 4];
+
     #[test]
     fn least_loaded_picks_the_min_under_skew() {
         // the queued_hint regression shape: replica 0 has a backlog that
         // only exact accounting exposes — the pick must not tie-break to 0
         assert_eq!(
-            pick_replica(RouterPolicy::LeastLoaded, &[5, 0], 0, ""),
-            1
+            pick_replica(RouterPolicy::LeastLoaded, &[5, 0], 0, "", &[true; 2]),
+            Some(1)
         );
         assert_eq!(
-            pick_replica(RouterPolicy::LeastLoaded, &[3, 2, 7, 1], 0, ""),
-            3
+            pick_replica(RouterPolicy::LeastLoaded, &[3, 2, 7, 1], 0, "", &UP4),
+            Some(3)
         );
         // ties go to the first minimum (stable)
         assert_eq!(
-            pick_replica(RouterPolicy::LeastLoaded, &[2, 2, 2], 9, ""),
-            0
+            pick_replica(RouterPolicy::LeastLoaded, &[2, 2, 2], 9, "", &[true; 3]),
+            Some(0)
         );
     }
 
@@ -361,8 +483,14 @@ mod tests {
     fn round_robin_cycles() {
         for rr in 0..6 {
             assert_eq!(
-                pick_replica(RouterPolicy::RoundRobin, &[0, 0, 0], rr, ""),
-                rr % 3
+                pick_replica(
+                    RouterPolicy::RoundRobin,
+                    &[0, 0, 0],
+                    rr,
+                    "",
+                    &[true; 3]
+                ),
+                Some(rr % 3)
             );
         }
     }
@@ -373,8 +501,10 @@ mod tests {
         let turn1 = "Sys: be brief.\nU: capital of Zorland?\nB:";
         let turn2 = "Sys: be brief.\nU: capital of Zorland?\nB: Mirefal\n\
                      U: and of Quovia?\nB:";
-        let a = pick_replica(RouterPolicy::PrefixAffinity, &loads, 0, turn1);
-        let b = pick_replica(RouterPolicy::PrefixAffinity, &loads, 7, turn2);
+        let a = pick_replica(RouterPolicy::PrefixAffinity, &loads, 0, turn1, &UP4)
+            .unwrap();
+        let b = pick_replica(RouterPolicy::PrefixAffinity, &loads, 7, turn2, &UP4)
+            .unwrap();
         assert_eq!(a, b, "later turns must follow their conversation");
         assert!(a < 4);
         // load skew must not move an affinity pick
@@ -383,8 +513,66 @@ mod tests {
             &[9, 9, 9, 9],
             0,
             turn1,
-        );
+            &UP4,
+        )
+        .unwrap();
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn every_policy_skips_down_replicas() {
+        // replica 0 is Down: no policy may route to it
+        let up = [false, true, true];
+        for rr in 0..6 {
+            let got =
+                pick_replica(RouterPolicy::RoundRobin, &[0, 0, 0], rr, "", &up)
+                    .unwrap();
+            assert_ne!(got, 0, "round-robin routed to a Down replica");
+        }
+        assert_eq!(
+            pick_replica(RouterPolicy::LeastLoaded, &[0, 5, 3], 0, "", &up),
+            Some(2),
+            "least-loaded must take the min over routable replicas only"
+        );
+    }
+
+    #[test]
+    fn prefix_affinity_degrades_to_least_loaded_when_pinned_is_down() {
+        let prompt = "Sys: be brief.\nU: capital of Zorland?\nB:";
+        let pinned = pick_replica(
+            RouterPolicy::PrefixAffinity,
+            &[0; 4],
+            0,
+            prompt,
+            &UP4,
+        )
+        .unwrap();
+        // kill the pinned replica; load the others unevenly
+        let mut up = UP4;
+        up[pinned] = false;
+        let mut loads = [7usize; 4];
+        let fallback = (pinned + 1) % 4;
+        loads[fallback] = 0;
+        let got =
+            pick_replica(RouterPolicy::PrefixAffinity, &loads, 0, prompt, &up)
+                .unwrap();
+        assert_eq!(got, fallback, "degraded pick must be least-loaded healthy");
+    }
+
+    #[test]
+    fn all_replicas_down_yields_none() {
+        let down = [false; 3];
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+        ] {
+            assert_eq!(
+                pick_replica(policy, &[0, 0, 0], 0, "hi", &down),
+                None,
+                "{policy:?} must not pick among corpses"
+            );
+        }
     }
 
     #[test]

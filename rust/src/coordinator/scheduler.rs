@@ -6,6 +6,13 @@
 //! active sequences) lives in `replica.rs`; this module decides *what gets
 //! in* — the split mirrors vLLM's router/engine division.
 
+// Serving-layer lint wall (DESIGN.md §11): a panic here takes the whole
+// admission path down, so unwrap/expect are denied outright in non-test
+// code — locks recover from poisoning instead (the queue's invariant is
+// per-entry FIFO order, which a panicked holder cannot half-update).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
+
 use std::collections::VecDeque;
 use std::sync::mpsc::Receiver;
 use std::sync::{Condvar, Mutex};
@@ -58,9 +65,15 @@ impl<'r, T: SubmitTarget> Scheduler<'r, T> {
 
     /// Enqueue; blocks while the queue is at capacity (backpressure).
     pub fn enqueue(&self, prompt: String, params: GenParams) {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self
+            .queue
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
         while q.len() >= self.capacity {
-            q = self.cv.wait(q).unwrap();
+            q = self
+                .cv
+                .wait(q)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
         }
         q.push_back((prompt, params));
         self.cv.notify_all();
@@ -69,7 +82,10 @@ impl<'r, T: SubmitTarget> Scheduler<'r, T> {
     /// Drain everything to the target, returning response receivers in
     /// submission order.
     pub fn dispatch_all(&self) -> Vec<Receiver<Response>> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self
+            .queue
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
         let items: Vec<_> = q.drain(..).collect();
         self.cv.notify_all();
         drop(q);
@@ -81,7 +97,10 @@ impl<'r, T: SubmitTarget> Scheduler<'r, T> {
 
     /// Current queue depth (enqueued, not yet dispatched).
     pub fn depth(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.queue
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .len()
     }
 }
 

@@ -31,6 +31,27 @@
 //! failed request's terminal reply carries `"ok": false` and an
 //! `"error"` string in place of the result fields.
 //!
+//! ## Failure semantics (DESIGN.md §13)
+//!
+//! A request may carry `"deadline_ms"` (positive integer): a wall
+//! budget measured from submission, queue time included. When it runs
+//! out the replica finalizes at the next round boundary and the
+//! terminal reply carries the text committed so far plus
+//! `"deadline_exceeded": true` — a deadline reply is `"ok": true` with
+//! partial text, not an error. Requests without the field inherit the
+//! server's `--deadline-ms` default, when set.
+//!
+//! Under overload (`--shed-above N`: queued backlog across replicas at
+//! or past N) a new request is refused immediately with
+//! `"busy": true`, `"retry_after_ms"` (a backoff hint that grows with
+//! the backlog) and `"retriable": true` — nothing was executed and
+//! resubmitting later is safe. Transient replica failures (a lane that
+//! exhausted its requeue budget, a downed replica draining its queue,
+//! no routable replica at submit) also reply `"ok": false` with
+//! `"retriable": true`: the failure is the serving stack's, not the
+//! request's, and the same request may succeed on retry. Permanent
+//! errors (bad params, prefill failure) stay plain `"ok": false`.
+//!
 //! `"rounds_per_call"` (alias `"pack"`) opts a request into round
 //! packing (DESIGN.md §9.6): up to N draft-verify rounds fused per
 //! device dispatch. Absent means the server's `--pack` default applies;
@@ -122,8 +143,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::metrics::FailureKind;
 use crate::coordinator::request::{
-    parse_request_json, wire_id, StreamSink, CLIENT_ID_MAX,
+    parse_request_json, wire_id, Response, StreamSink, CLIENT_ID_MAX,
 };
 use crate::coordinator::router::{Router, SubmitOptions};
 use crate::util::json::Value;
@@ -377,6 +399,16 @@ fn submit_request(
         );
         return;
     }
+    // overload shedding (DESIGN.md §13): refuse before submitting so
+    // the backlog never grows past the operator's bound — the reply is
+    // a typed, retriable "busy" with a backoff hint
+    if let Some(retry_after_ms) = router.should_shed() {
+        router.metrics.record_failure(FailureKind::Shed);
+        let _ = wtx.send(
+            Response::busy(id, retry_after_ms).to_json().to_string_json(),
+        );
+        return;
+    }
     let sink: Option<StreamSink> = if streaming {
         let dtx = wtx.clone();
         Some(Box::new(move |delta: crate::coordinator::request::StreamDelta| {
@@ -392,6 +424,7 @@ fn submit_request(
             id: Some(id),
             stream: sink,
             pack_specified: req.pack_specified,
+            deadline_ms: req.deadline_ms,
         },
     );
     lock_inflight(inflight).insert(id, handle.cancel.clone());

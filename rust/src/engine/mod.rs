@@ -162,6 +162,11 @@ pub struct GenResult {
     /// model charges its per-dispatch overhead against this, not
     /// `device_calls` (DESIGN.md §9.5; `bench::simclock`).
     pub dispatch_share: f64,
+    /// The per-request deadline fired before the sequence finished
+    /// naturally (DESIGN.md §13): `tokens`/`text` hold the partial
+    /// committed prefix, and the serving layer echoes
+    /// `"deadline_exceeded": true` on the wire.
+    pub deadline_exceeded: bool,
 }
 
 impl GenResult {
@@ -226,6 +231,11 @@ pub struct SeqRunner<'a> {
     round_sink: Option<Box<dyn RoundSink>>,
     /// Previous-snapshot counters backing the sink's per-turn deltas.
     cursor: RoundCursor,
+    /// Absolute per-request deadline ([`SeqRunner::set_deadline`],
+    /// DESIGN.md §13), checked at every round boundary.
+    deadline: Option<Instant>,
+    /// Set once the deadline check fired; copied into the result.
+    deadline_exceeded: bool,
 }
 
 /// Round-commit callback type (see [`SeqRunner::set_on_commit`]). The
@@ -425,7 +435,18 @@ impl<'a> SeqRunner<'a> {
             reported: 0,
             round_sink: None,
             cursor: RoundCursor::default(),
+            deadline: None,
+            deadline_exceeded: false,
         })
+    }
+
+    /// Install an absolute per-request deadline (DESIGN.md §13): checked
+    /// before every [`SeqRunner::step`] device turn, so a sequence past
+    /// its deadline finalizes at the round boundary with its partial
+    /// committed prefix and [`GenResult::deadline_exceeded`] set. `None`
+    /// clears the deadline.
+    pub fn set_deadline(&mut self, deadline: Option<Instant>) {
+        self.deadline = deadline;
     }
 
     /// Install the round-commit callback driving token streaming: after
@@ -493,6 +514,14 @@ impl<'a> SeqRunner<'a> {
     /// final result once the sequence has finished.
     pub fn step(&mut self) -> Result<Option<GenResult>> {
         let t = Instant::now();
+        // deadline enforcement at the round boundary: no further device
+        // turns; finalize with whatever has committed
+        if let Some(dl) = self.deadline {
+            if t >= dl {
+                self.deadline_exceeded = true;
+                return Ok(Some(self.finish_early()?));
+            }
+        }
         if self.decode_started.is_none() {
             self.decode_started = Some(t);
         }
@@ -601,6 +630,7 @@ impl<'a> SeqRunner<'a> {
             device_calls: self.sess.device_calls,
             // solo decode: every dispatch served this one sequence
             dispatch_share: self.sess.device_calls as f64,
+            deadline_exceeded: self.deadline_exceeded,
         })
     }
 }
@@ -637,6 +667,11 @@ struct Lane {
     dispatch_share: f64,
     /// Finalize at the next round boundary without further rounds.
     cancel: bool,
+    /// Absolute per-request deadline (DESIGN.md §13); a lane past it is
+    /// canceled at the next round boundary with the flag below set.
+    deadline: Option<Instant>,
+    /// The deadline fired; copied into the lane's [`GenResult`].
+    deadline_exceeded: bool,
 }
 
 impl Lane {
@@ -811,9 +846,21 @@ impl<'a> BatchRunner<'a> {
             device_calls: dedicated,
             dispatch_share: dedicated as f64,
             cancel: false,
+            deadline: None,
+            deadline_exceeded: false,
             params,
         });
         Ok(slot)
+    }
+
+    /// Install `slot`'s absolute deadline (mirrors
+    /// [`SeqRunner::set_deadline`]): a lane past it is retired at the
+    /// next round boundary with its partial prefix and
+    /// [`GenResult::deadline_exceeded`] set.
+    pub fn set_deadline(&mut self, slot: usize, deadline: Option<Instant>) {
+        if let Some(l) = self.lanes.get_mut(slot).and_then(|l| l.as_mut()) {
+            l.deadline = deadline;
+        }
     }
 
     /// Install `slot`'s round-commit callback (streaming deltas; same
@@ -883,6 +930,16 @@ impl<'a> BatchRunner<'a> {
             return Ok(Vec::new());
         }
         let t = Instant::now();
+        // deadline enforcement at the round boundary: a lane past its
+        // deadline runs no further budget and retires after this turn
+        for lane in self.lanes.iter_mut().flatten() {
+            if let Some(dl) = lane.deadline {
+                if t >= dl {
+                    lane.cancel = true;
+                    lane.deadline_exceeded = true;
+                }
+            }
+        }
         let calls_before = self.sess.device_calls;
         let exec = self.batch_exec.expect("live lanes imply a family");
         let turn_packs: Vec<usize> = if exec == "verify_ext_batch" {
@@ -1032,6 +1089,7 @@ impl<'a> BatchRunner<'a> {
             probe: None,
             device_calls: lane.device_calls,
             dispatch_share: lane.dispatch_share,
+            deadline_exceeded: lane.deadline_exceeded,
         })
     }
 }

@@ -1,0 +1,369 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §13).
+//!
+//! A [`FaultSpec`] is parsed once from the `--fault-plan` CLI string and
+//! handed to every replica; each replica that the spec applies to builds
+//! its own [`FaultPlan`] with a seed forked from `(spec seed, replica
+//! id)`, so a run is reproducible end-to-end without any wall-clock
+//! entropy (`Date::now` is deliberately never consulted — the only
+//! randomness is [`crate::util::prng::Rng`]).
+//!
+//! Injection points (all inside [`crate::runtime::Runtime`]):
+//! * **dispatch** — `Runtime::run` fails with an `injected:`-prefixed
+//!   error at the configured rate, modeling a transient device-dispatch
+//!   fault (the error every batchmate of a faulted lane sees);
+//! * **latency** — `Runtime::run` sleeps a fixed number of milliseconds
+//!   at the configured rate, modeling a hung dispatch (what per-request
+//!   deadlines exist to bound);
+//! * **rebuild** — `Runtime::batch_session` fails at the configured
+//!   rate, modeling an unrecoverable device session (what drives a
+//!   replica to `Down` and the router to fail over).
+//!
+//! Spec grammar (comma-separated `key=value`, all keys optional):
+//!
+//! ```text
+//! dispatch=0.2,latency=0.05:250,rebuild=0.5,seed=7,only=0
+//! ```
+//!
+//! `dispatch`/`rebuild` are probabilities in `[0, 1]`; `latency` is
+//! `rate:millis`; `seed` is the base PRNG seed (default 0); `only`
+//! restricts injection to a single replica id (the chaos suite uses it
+//! to kill one replica while its peers stay healthy).
+//!
+//! The capped-exponential [`backoff_ms`] helper used by the replica
+//! supervisor lives here too so the property tests can drive it as a
+//! pure function.
+
+#![deny(clippy::unwrap_used)]
+#![deny(clippy::expect_used)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::prng::Rng;
+
+/// Marker prefix on every injected error message, so tests (and humans
+/// reading traces) can tell an injected fault from a real one.
+pub const INJECTED_PREFIX: &str = "injected:";
+
+/// Parsed `--fault-plan` spec. Plain data: cloneable, comparable,
+/// carried on the replica config; [`FaultSpec::build`] turns it into a
+/// live per-replica [`FaultPlan`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Probability a `Runtime::run` dispatch fails.
+    pub dispatch_rate: f64,
+    /// Probability a `Runtime::run` dispatch sleeps `latency_ms`.
+    pub latency_rate: f64,
+    /// Artificial dispatch latency, milliseconds.
+    pub latency_ms: u64,
+    /// Probability a `Runtime::batch_session` rebuild fails.
+    pub rebuild_rate: f64,
+    /// Base PRNG seed; each replica forks `seed ^ mix(replica)`.
+    pub seed: u64,
+    /// Restrict injection to this replica id (None = all replicas).
+    pub only: Option<usize>,
+}
+
+fn parse_rate(key: &str, v: &str) -> Result<f64, String> {
+    let r: f64 = v
+        .parse()
+        .map_err(|_| format!("fault-plan: {key} wants a number, got {v:?}"))?;
+    if !(0.0..=1.0).contains(&r) {
+        return Err(format!("fault-plan: {key} rate {r} outside [0, 1]"));
+    }
+    Ok(r)
+}
+
+impl FaultSpec {
+    /// Parse the CLI spec string. Empty string is an error (pass no
+    /// `--fault-plan` at all for a fault-free run).
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let mut out = FaultSpec::default();
+        if spec.trim().is_empty() {
+            return Err("fault-plan: empty spec".into());
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan: {part:?} is not key=value"))?;
+            match key {
+                "dispatch" => out.dispatch_rate = parse_rate(key, val)?,
+                "rebuild" => out.rebuild_rate = parse_rate(key, val)?,
+                "latency" => {
+                    let (rate, ms) = val.split_once(':').ok_or_else(|| {
+                        format!("fault-plan: latency wants rate:millis, got {val:?}")
+                    })?;
+                    out.latency_rate = parse_rate("latency", rate)?;
+                    out.latency_ms = ms.parse().map_err(|_| {
+                        format!("fault-plan: latency millis {ms:?} is not an integer")
+                    })?;
+                }
+                "seed" => {
+                    out.seed = val
+                        .parse()
+                        .map_err(|_| format!("fault-plan: seed {val:?} is not an integer"))?;
+                }
+                "only" => {
+                    out.only = Some(val.parse().map_err(|_| {
+                        format!("fault-plan: only wants a replica id, got {val:?}")
+                    })?);
+                }
+                other => return Err(format!("fault-plan: unknown key {other:?}")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical spec string (parse round-trips through it).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.dispatch_rate > 0.0 {
+            parts.push(format!("dispatch={}", self.dispatch_rate));
+        }
+        if self.latency_rate > 0.0 {
+            parts.push(format!("latency={}:{}", self.latency_rate, self.latency_ms));
+        }
+        if self.rebuild_rate > 0.0 {
+            parts.push(format!("rebuild={}", self.rebuild_rate));
+        }
+        parts.push(format!("seed={}", self.seed));
+        if let Some(id) = self.only {
+            parts.push(format!("only={id}"));
+        }
+        parts.join(",")
+    }
+
+    /// Does this spec inject anything on the given replica?
+    pub fn applies_to(&self, replica: usize) -> bool {
+        self.only.map_or(true, |id| id == replica)
+    }
+
+    /// Build the live per-replica plan. Returns `None` when the spec is
+    /// filtered away from this replica (`only=` mismatch), so callers
+    /// skip installing a plan entirely.
+    pub fn build(&self, replica: usize) -> Option<FaultPlan> {
+        if !self.applies_to(replica) {
+            return None;
+        }
+        // fork the seed per replica so peers draw independent streams
+        // but the whole fleet stays reproducible from one spec
+        let mut base = Rng::new(self.seed);
+        let mut forked = base.fork();
+        for _ in 0..replica {
+            forked = base.fork();
+        }
+        Some(FaultPlan {
+            spec: self.clone(),
+            rng: Mutex::new(forked),
+            dispatch_injected: AtomicU64::new(0),
+            latency_injected: AtomicU64::new(0),
+            rebuild_injected: AtomicU64::new(0),
+        })
+    }
+}
+
+/// Injection counters, snapshot via [`FaultPlan::counts`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultCounts {
+    pub dispatch: u64,
+    pub latency: u64,
+    pub rebuild: u64,
+}
+
+/// Live, thread-safe fault injector. `Runtime::run` takes `&self`, so
+/// the PRNG sits behind a poison-recovering mutex; the draw itself is
+/// a few dozen nanoseconds and only taken when a plan is installed.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rng: Mutex<Rng>,
+    dispatch_injected: AtomicU64,
+    latency_injected: AtomicU64,
+    rebuild_injected: AtomicU64,
+}
+
+impl FaultPlan {
+    fn draw(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = self
+            .rng
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        rng.bool(p)
+    }
+
+    /// Should this dispatch fail? Increments the dispatch counter when
+    /// it fires.
+    pub fn dispatch_fault(&self) -> bool {
+        let hit = self.draw(self.spec.dispatch_rate);
+        if hit {
+            self.dispatch_injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Artificial latency to apply to this dispatch, if any.
+    pub fn latency(&self) -> Option<u64> {
+        if self.draw(self.spec.latency_rate) {
+            self.latency_injected.fetch_add(1, Ordering::Relaxed);
+            Some(self.spec.latency_ms)
+        } else {
+            None
+        }
+    }
+
+    /// Should this batch-session rebuild fail? Increments the rebuild
+    /// counter when it fires.
+    pub fn rebuild_fault(&self) -> bool {
+        let hit = self.draw(self.spec.rebuild_rate);
+        if hit {
+            self.rebuild_injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Snapshot the injection counters.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            dispatch: self.dispatch_injected.load(Ordering::Relaxed),
+            latency: self.latency_injected.load(Ordering::Relaxed),
+            rebuild: self.rebuild_injected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The spec this plan was built from.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+}
+
+/// Pre-jitter backoff bound for rebuild `attempt` (0-based): capped
+/// exponential, `base_ms * 2^attempt` clamped to `cap_ms`. Pure and
+/// monotone non-decreasing in `attempt` — the property tests pin both.
+pub fn backoff_bound_ms(attempt: u32, base_ms: u64, cap_ms: u64) -> u64 {
+    let base = base_ms.max(1);
+    let shifted = if attempt >= 63 {
+        u64::MAX
+    } else {
+        base.saturating_mul(1u64 << attempt.min(62))
+    };
+    shifted.min(cap_ms.max(1))
+}
+
+/// Jittered backoff for rebuild `attempt`: uniform in
+/// `[bound/2, bound]` where `bound = backoff_bound_ms(...)` — "equal
+/// jitter", so consecutive attempts never collapse to zero sleep and
+/// the cap is a hard ceiling.
+pub fn backoff_ms(attempt: u32, base_ms: u64, cap_ms: u64, rng: &mut Rng) -> u64 {
+    let bound = backoff_bound_ms(attempt, base_ms, cap_ms);
+    let lo = bound / 2;
+    lo + rng.below(bound - lo + 1)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_round_trips_through_label() {
+        let spec = FaultSpec::parse("dispatch=0.2,latency=0.05:250,rebuild=0.5,seed=7,only=0")
+            .unwrap();
+        assert_eq!(spec.dispatch_rate, 0.2);
+        assert_eq!(spec.latency_rate, 0.05);
+        assert_eq!(spec.latency_ms, 250);
+        assert_eq!(spec.rebuild_rate, 0.5);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.only, Some(0));
+        let reparsed = FaultSpec::parse(&spec.label()).unwrap();
+        assert_eq!(spec, reparsed);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "",
+            "dispatch",
+            "dispatch=2.0",
+            "dispatch=-0.1",
+            "latency=0.5",
+            "latency=0.5:abc",
+            "seed=x",
+            "only=x",
+            "bogus=1",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn only_filter_gates_plan_construction() {
+        let spec = FaultSpec::parse("dispatch=1.0,only=1,seed=3").unwrap();
+        assert!(spec.build(0).is_none());
+        assert!(spec.build(2).is_none());
+        let plan = spec.build(1).unwrap();
+        assert!(plan.dispatch_fault());
+        assert_eq!(plan.counts().dispatch, 1);
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_and_replica() {
+        let spec = FaultSpec::parse("dispatch=0.5,seed=42").unwrap();
+        let a = spec.build(0).unwrap();
+        let b = spec.build(0).unwrap();
+        let seq_a: Vec<bool> = (0..64).map(|_| a.dispatch_fault()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.dispatch_fault()).collect();
+        assert_eq!(seq_a, seq_b, "same seed+replica must draw identically");
+        let c = spec.build(1).unwrap();
+        let seq_c: Vec<bool> = (0..64).map(|_| c.dispatch_fault()).collect();
+        assert_ne!(seq_a, seq_c, "replicas must fork distinct streams");
+    }
+
+    #[test]
+    fn zero_rates_never_fire() {
+        let spec = FaultSpec::parse("seed=1").unwrap();
+        let plan = spec.build(0).unwrap();
+        for _ in 0..128 {
+            assert!(!plan.dispatch_fault());
+            assert!(plan.latency().is_none());
+            assert!(!plan.rebuild_fault());
+        }
+        assert_eq!(plan.counts(), FaultCounts::default());
+    }
+
+    #[test]
+    fn latency_fires_with_configured_millis() {
+        let spec = FaultSpec::parse("latency=1.0:250,seed=9").unwrap();
+        let plan = spec.build(0).unwrap();
+        assert_eq!(plan.latency(), Some(250));
+        assert_eq!(plan.counts().latency, 1);
+    }
+
+    #[test]
+    fn backoff_bound_is_capped_and_monotone() {
+        let mut prev = 0u64;
+        for attempt in 0..80 {
+            let b = backoff_bound_ms(attempt, 50, 5_000);
+            assert!(b <= 5_000, "attempt {attempt}: bound {b} above cap");
+            assert!(b >= prev, "attempt {attempt}: bound {b} shrank from {prev}");
+            prev = b;
+        }
+        assert_eq!(backoff_bound_ms(0, 50, 5_000), 50);
+        assert_eq!(backoff_bound_ms(63, 50, 5_000), 5_000);
+    }
+
+    #[test]
+    fn backoff_jitter_stays_in_the_equal_jitter_band() {
+        let mut rng = Rng::new(11);
+        for attempt in 0..20 {
+            let bound = backoff_bound_ms(attempt, 50, 5_000);
+            for _ in 0..32 {
+                let ms = backoff_ms(attempt, 50, 5_000, &mut rng);
+                assert!(ms >= bound / 2 && ms <= bound, "{ms} outside [{}, {bound}]", bound / 2);
+            }
+        }
+    }
+}

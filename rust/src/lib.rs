@@ -45,6 +45,11 @@
 //!   manifest (`contracts.json`) against the rust mirrors — state
 //!   scalars, cfg slots, policy ids, layout consts, exec names, wire
 //!   fields, bench thresholds — and names every drift.
+//! * [`fault`] — deterministic fault injection (DESIGN.md §13): a
+//!   seed-driven [`fault::FaultPlan`] installed on the runtime injects
+//!   dispatch errors, hung-dispatch latency, and session-rebuild
+//!   failures, driving the replica supervisor, router failover,
+//!   per-request deadlines, and overload shedding under test.
 
 #![forbid(unsafe_code)]
 
@@ -54,6 +59,7 @@ pub mod check;
 pub mod coordinator;
 pub mod datasets;
 pub mod engine;
+pub mod fault;
 pub mod eval;
 pub mod obs;
 pub mod runtime;

@@ -89,6 +89,14 @@ USAGE: mars <cmd> [flags]
           rounds -> commit); summarize with `mars trace summarize FILE`
       [--prom-addr ADDR] Prometheus text exposition on
           http://ADDR/metrics (same payload as {{\"cmd\": \"prom\"}})
+      [--deadline-ms N]  default per-request wall budget (requests
+          override with \"deadline_ms\"; partial text is returned with
+          \"deadline_exceeded\": true when it runs out)
+      [--shed-above N]   refuse new requests with {{\"busy\": true,
+          \"retry_after_ms\": ...}} once the queued backlog reaches N
+      [--fault-plan SPEC] deterministic fault injection, e.g.
+          dispatch=0.2,latency=0.05:250,rebuild=0.5,seed=7,only=0
+          (DESIGN.md §13; chaos testing — not for production)
       line-JSON protocol: pipelined ids, \"stream\": true deltas,
       \"cache\": false opt-out, {{\"cmd\": \"cancel\", \"id\": N}},
       {{\"cmd\": \"metrics\", \"reset\": true}}, {{\"cmd\": \"prom\"}} —
@@ -106,6 +114,8 @@ USAGE: mars <cmd> [flags]
           [--batch 1]   cross-sequence batch width per replica   (serve)
       [--scenario sweep|chat] [--turns 3] [--cache-mb 256]        (serve;
           chat = multi-turn conversations, cache-on vs cache-off waves)
+      [--fault-plan SPEC] [--deadline-ms N] [--shed-above N]      (serve;
+          chaos benchmarking — same grammar as `mars serve`)
       [--reset]   zero server metrics between serve waves via
           {{\"cmd\": \"metrics\", \"reset\": true}}              (serve)
       [--out DIR]   redirect emit paths: BENCH_*.json trajectories
@@ -133,6 +143,17 @@ fn artifact_dir(args: &Args) -> PathBuf {
     args.get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(Artifacts::default_dir)
+}
+
+/// Parse `--fault-plan SPEC` (fault-injection grammar, DESIGN.md §13);
+/// `None` when the flag is absent.
+fn fault_from_args(args: &Args) -> Result<Option<mars::fault::FaultSpec>> {
+    match args.get("fault-plan") {
+        None => Ok(None),
+        Some(s) => mars::fault::FaultSpec::parse(s)
+            .map(Some)
+            .map_err(|e| anyhow!("bad --fault-plan '{s}': {e}")),
+    }
 }
 
 /// Resolve the verification policy: `--policy STR` wins; the legacy
@@ -243,17 +264,21 @@ fn run(args: &Args) -> Result<()> {
                     mars::obs::trace::TraceWriter::create(Path::new(p))?,
                 )),
             };
-            let router = Arc::new(Router::start_traced(
-                &dir,
-                replicas,
-                slots,
-                args.has("hostloop"),
-                policy,
-                cache,
-                args.get_usize("pack", 1).max(1),
-                args.get_usize("batch", 1).max(1),
-                trace,
-            )?);
+            let mut rcfg = mars::coordinator::router::RouterConfig::new(&dir);
+            rcfg.replicas = replicas;
+            rcfg.slots = slots;
+            rcfg.hostloop = args.has("hostloop");
+            rcfg.policy = policy;
+            rcfg.cache = cache;
+            rcfg.pack = args.get_usize("pack", 1).max(1);
+            rcfg.batch = args.get_usize("batch", 1).max(1);
+            rcfg.trace = trace;
+            rcfg.fault = fault_from_args(args)?;
+            rcfg.deadline_ms =
+                args.get("deadline-ms").and_then(|s| s.parse::<u64>().ok());
+            rcfg.shed_above =
+                args.get("shed-above").and_then(|s| s.parse::<usize>().ok());
+            let router = Arc::new(Router::start(rcfg)?);
             let handle = server::serve(router.clone(), &bind)?;
             println!("serving on {} ({} replicas)", handle.addr, replicas);
             // the prom endpoint thread holds its own Arc<Router>; it dies
@@ -385,6 +410,13 @@ fn run(args: &Args) -> Result<()> {
                     policies: sweep()?,
                     scenario,
                     reset: args.has("reset"),
+                    fault: fault_from_args(args)?,
+                    deadline_ms: args
+                        .get("deadline-ms")
+                        .and_then(|s| s.parse::<u64>().ok()),
+                    shed_above: args
+                        .get("shed-above")
+                        .and_then(|s| s.parse::<usize>().ok()),
                     cache_mb: args
                         .get_usize("cache-mb", mars::cache::DEFAULT_CACHE_MB),
                     out_dir: out_dir

@@ -9,6 +9,11 @@
 //! {"phase":"round",...}    one device turn — embeds the RoundEvent
 //! {"phase":"commit",...}   terminal — tokens, tau, ok
 //! {"phase":"error",...}    terminal failure path
+//! {"phase":"fault",...}    a dispatch fault hit the replica (§13)
+//! {"phase":"requeue",...}  innocent lane re-admitted after a fault
+//! {"phase":"health",...}   replica health transition (detail = state)
+//! {"phase":"deadline",...} request exceeded its deadline budget
+//! {"phase":"shed",...}     request refused at admission (overload)
 //! ```
 //!
 //! Every line carries `ts_ms` (milliseconds since the writer was
@@ -41,6 +46,16 @@ pub enum Phase {
     Commit,
     /// Terminal failure.
     Error,
+    /// A dispatch fault poisoned the replica's state (DESIGN.md §13).
+    Fault,
+    /// An innocent batchmate was requeued after a fault.
+    Requeue,
+    /// Replica health transition (`detail` carries the new state).
+    Health,
+    /// The request ran out of its deadline budget (partial commit).
+    Deadline,
+    /// The request was refused at admission (overload shedding).
+    Shed,
 }
 
 impl Phase {
@@ -52,6 +67,11 @@ impl Phase {
             Phase::Round => "round",
             Phase::Commit => "commit",
             Phase::Error => "error",
+            Phase::Fault => "fault",
+            Phase::Requeue => "requeue",
+            Phase::Health => "health",
+            Phase::Deadline => "deadline",
+            Phase::Shed => "shed",
         }
     }
 
@@ -63,6 +83,11 @@ impl Phase {
             "round" => Phase::Round,
             "commit" => Phase::Commit,
             "error" => Phase::Error,
+            "fault" => Phase::Fault,
+            "requeue" => Phase::Requeue,
+            "health" => Phase::Health,
+            "deadline" => Phase::Deadline,
+            "shed" => Phase::Shed,
             _ => return None,
         })
     }
@@ -95,6 +120,9 @@ pub struct TraceEvent {
     pub policy: Option<String>,
     /// Speculative-method family (terminal lines).
     pub method: Option<String>,
+    /// Free-form qualifier (health state on `health` lines, the fault
+    /// message on `fault` lines, the retry count on `requeue` lines).
+    pub detail: Option<String>,
     /// The per-turn counters (round lines).
     pub round: Option<RoundEvent>,
 }
@@ -114,6 +142,7 @@ impl TraceEvent {
             ok: None,
             policy: None,
             method: None,
+            detail: None,
             round: None,
         }
     }
@@ -145,6 +174,9 @@ impl TraceEvent {
         }
         if let Some(m) = &self.method {
             o.set("method", Value::Str(m.clone()));
+        }
+        if let Some(d) = &self.detail {
+            o.set("detail", Value::Str(d.clone()));
         }
         if let Some(r) = &self.round {
             o.set("round", r.to_json());
@@ -178,6 +210,8 @@ impl TraceEvent {
             v.get("policy").and_then(|p| p.as_str()).map(str::to_string);
         ev.method =
             v.get("method").and_then(|m| m.as_str()).map(str::to_string);
+        ev.detail =
+            v.get("detail").and_then(|d| d.as_str()).map(str::to_string);
         if let Some(r) = v.get("round") {
             let rnum = |k: &str| r.get(k).and_then(|x| x.as_f64());
             ev.round = Some(RoundEvent {
@@ -250,6 +284,9 @@ pub struct TraceSummary {
     pub round_events: u64,
     /// Lines that did not parse (corrupt tail, foreign lines).
     pub bad_lines: usize,
+    /// Failure-semantics lines (fault / requeue / health / deadline /
+    /// shed, DESIGN.md §13).
+    pub fault_events: u64,
     /// Queue-phase wall, ms.
     pub queue_ms: StreamHistogram,
     /// Prefill-phase wall, ms.
@@ -310,6 +347,12 @@ pub fn summarize(path: &Path) -> Result<TraceSummary> {
                 }
             }
             Phase::Error => s.err += 1,
+            // non-terminal failure-semantics lines: counted, not latency
+            Phase::Fault
+            | Phase::Requeue
+            | Phase::Health
+            | Phase::Deadline
+            | Phase::Shed => s.fault_events += 1,
         }
     }
     s.requests = ids.len();
@@ -355,6 +398,14 @@ pub fn render_summary(s: &TraceSummary) -> String {
             100.0 * s.relaxed_rounds as f64 / s.round_events as f64
         );
     }
+    if s.fault_events > 0 {
+        let _ = writeln!(
+            out,
+            "\n{} failure-semantics line(s) (fault/requeue/health/\
+             deadline/shed)",
+            s.fault_events
+        );
+    }
     if s.bad_lines > 0 {
         let _ = writeln!(out, "\n{} unparseable line(s) skipped", s.bad_lines);
     }
@@ -391,12 +442,44 @@ mod tests {
 
     #[test]
     fn phase_names_round_trip() {
-        for p in
-            [Phase::Queue, Phase::Prefill, Phase::Round, Phase::Commit, Phase::Error]
-        {
+        for p in [
+            Phase::Queue,
+            Phase::Prefill,
+            Phase::Round,
+            Phase::Commit,
+            Phase::Error,
+            Phase::Fault,
+            Phase::Requeue,
+            Phase::Health,
+            Phase::Deadline,
+            Phase::Shed,
+        ] {
             assert_eq!(Phase::parse(p.as_str()), Some(p));
         }
         assert_eq!(Phase::parse("warp"), None);
+    }
+
+    #[test]
+    fn failure_phase_lines_round_trip_and_count() {
+        let mut ev = TraceEvent::new(3.0, 9, 2, Phase::Health);
+        ev.detail = Some("draining".to_string());
+        let back = TraceEvent::parse_line(&ev.render()).unwrap();
+        assert_eq!(back, ev);
+        assert_eq!(back.detail.as_deref(), Some("draining"));
+        let dir = std::env::temp_dir()
+            .join(format!("mars-trace-fault-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.jsonl");
+        let w = TraceWriter::create(&path).unwrap();
+        w.log(&ev);
+        let mut rq = TraceEvent::new(4.0, 9, 2, Phase::Requeue);
+        rq.detail = Some("retry 1".to_string());
+        w.log(&rq);
+        drop(w);
+        let s = summarize(&path).unwrap();
+        assert_eq!(s.fault_events, 2);
+        assert!(render_summary(&s).contains("failure-semantics"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -155,6 +155,11 @@ pub struct Runtime {
     execs: BTreeMap<String, Exec>,
     /// wall time spent compiling HLO at startup
     pub compile_seconds: f64,
+    /// Installed fault-injection plan (DESIGN.md §13). `None` in
+    /// production; the chaos harness installs one via
+    /// [`Runtime::install_fault_plan`] to inject dispatch errors,
+    /// hung-dispatch latency, and batch-session rebuild failures.
+    fault: Option<std::sync::Arc<crate::fault::FaultPlan>>,
 }
 
 impl Runtime {
@@ -251,7 +256,23 @@ impl Runtime {
             client,
             execs,
             compile_seconds: t0.elapsed().as_secs_f64(),
+            fault: None,
         })
+    }
+
+    /// Install a fault-injection plan: every subsequent [`Runtime::run`]
+    /// dispatch and [`Runtime::batch_session`] rebuild consults it.
+    pub fn install_fault_plan(
+        &mut self,
+        plan: std::sync::Arc<crate::fault::FaultPlan>,
+    ) {
+        self.fault = Some(plan);
+    }
+
+    /// The installed fault plan, if any (the replica supervisor reads
+    /// its injection counters into the metrics surface).
+    pub fn fault_plan(&self) -> Option<&std::sync::Arc<crate::fault::FaultPlan>> {
+        self.fault.as_ref()
     }
 
     pub fn layout(&self) -> &Layout {
@@ -289,6 +310,20 @@ impl Runtime {
         state: Option<&xla::PjRtBuffer>,
         extras: &[&xla::PjRtBuffer],
     ) -> Result<xla::PjRtBuffer> {
+        // fault injection (DESIGN.md §13): latency models a hung
+        // dispatch (what deadlines bound), the error models a transient
+        // device fault (what the supervisor requeues around)
+        if let Some(plan) = &self.fault {
+            if let Some(ms) = plan.latency() {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            if plan.dispatch_fault() {
+                bail!(
+                    "{} dispatch fault on {name}",
+                    crate::fault::INJECTED_PREFIX
+                );
+            }
+        }
         let ex = self.exec(name)?;
         if ex.state_input != state.is_some() {
             bail!("{name}: state argument mismatch");
@@ -388,6 +423,14 @@ impl Runtime {
     pub fn batch_session(&self) -> Result<BatchSession<'_>> {
         if !self.supports_batching() {
             bail!("artifacts lack the *_batch programs (DESIGN.md §9.5)");
+        }
+        if let Some(plan) = &self.fault {
+            if plan.rebuild_fault() {
+                bail!(
+                    "{} batch session rebuild fault",
+                    crate::fault::INJECTED_PREFIX
+                );
+            }
         }
         let lay = self.layout();
         let b = lay.batch_max();

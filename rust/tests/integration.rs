@@ -335,7 +335,7 @@ fn engine_semantics_suite() {
 
 #[test]
 fn router_end_to_end_over_tcp() {
-    use mars::coordinator::router::{Router, RouterPolicy};
+    use mars::coordinator::router::{Router, RouterConfig, RouterPolicy};
     use mars::coordinator::server;
     use std::sync::Arc;
     let Some(dir) = artifacts_dir() else { return };
@@ -343,19 +343,11 @@ fn router_end_to_end_over_tcp() {
     // run packed (exercising cache x packing composition throughout),
     // an explicit 1 opts out, streaming stays per-round — all pinned
     // below
-    let router = Arc::new(
-        Router::start(
-            &dir,
-            1,
-            2,
-            false,
-            RouterPolicy::RoundRobin,
-            mars::cache::CacheConfig::default(),
-            4,
-            1,
-        )
-        .expect("router"),
-    );
+    let mut rcfg = RouterConfig::new(&dir);
+    rcfg.slots = 2;
+    rcfg.policy = RouterPolicy::RoundRobin;
+    rcfg.pack = 4;
+    let router = Arc::new(Router::start(rcfg).expect("router"));
     let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
     let addr = handle.addr.to_string();
     let pong =
@@ -892,7 +884,7 @@ fn batched_decode_semantics_suite() {
 /// occupancy histogram (DESIGN.md §9.5).
 #[test]
 fn batched_router_end_to_end_over_tcp() {
-    use mars::coordinator::router::{Router, RouterPolicy};
+    use mars::coordinator::router::{Router, RouterConfig, RouterPolicy};
     use mars::coordinator::server;
     use std::io::{BufRead, BufReader, Write};
     use std::sync::Arc;
@@ -904,19 +896,12 @@ fn batched_router_end_to_end_over_tcp() {
             return;
         }
     }
-    let router = Arc::new(
-        Router::start(
-            &dir,
-            1,
-            4,
-            false,
-            RouterPolicy::RoundRobin,
-            mars::cache::CacheConfig::default(),
-            4,
-            4,
-        )
-        .expect("router"),
-    );
+    let mut rcfg = RouterConfig::new(&dir);
+    rcfg.slots = 4;
+    rcfg.policy = RouterPolicy::RoundRobin;
+    rcfg.pack = 4;
+    rcfg.batch = 4;
+    let router = Arc::new(Router::start(rcfg).expect("router"));
     let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
     let addr = handle.addr.to_string();
 
@@ -1232,7 +1217,7 @@ fn simclock_determinism_pin() {
 /// JSONL span log, all against a live traced server.
 #[test]
 fn telemetry_surfaces_over_tcp() {
-    use mars::coordinator::router::{Router, RouterPolicy};
+    use mars::coordinator::router::{Router, RouterConfig, RouterPolicy};
     use mars::coordinator::server;
     use mars::obs::trace::{summarize, TraceWriter};
     use std::sync::Arc;
@@ -1243,20 +1228,11 @@ fn telemetry_surfaces_over_tcp() {
     let trace_path = tmp.join("trace.jsonl");
     let trace =
         Some(Arc::new(TraceWriter::create(&trace_path).expect("trace")));
-    let router = Arc::new(
-        Router::start_traced(
-            &dir,
-            1,
-            2,
-            false,
-            RouterPolicy::RoundRobin,
-            mars::cache::CacheConfig::default(),
-            1,
-            1,
-            trace,
-        )
-        .expect("router"),
-    );
+    let mut rcfg = RouterConfig::new(&dir);
+    rcfg.slots = 2;
+    rcfg.policy = RouterPolicy::RoundRobin;
+    rcfg.trace = trace;
+    let router = Arc::new(Router::start(rcfg).expect("router"));
     let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
     let addr = handle.addr.to_string();
 
@@ -1337,4 +1313,358 @@ fn telemetry_surfaces_over_tcp() {
     assert!(s.prefill_ms.count() >= 2, "prefill spans missing");
     assert!(s.tokens > 0, "commit spans carried no tokens");
     std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// Fault-tolerance chaos suite (DESIGN.md §13) on real artifacts:
+/// injected dispatch faults under load, a replica killed outright with
+/// router failover, per-request deadlines, and overload shedding. The
+/// invariants throughout: every request reaches a terminal reply
+/// (success / busy / deadline / typed error — the suite finishing at
+/// all proves no connection hung), the router stops selecting a downed
+/// replica, load gauges reconcile to zero at drain, and the failure
+/// taxonomy shows up on the metrics and trace surfaces.
+#[test]
+fn chaos_fault_tolerance_suite() {
+    use mars::coordinator::replica::ReplicaHealth;
+    use mars::coordinator::router::{Router, RouterConfig, RouterPolicy};
+    use mars::coordinator::server;
+    use mars::fault::FaultSpec;
+    use mars::obs::trace::{summarize, TraceWriter};
+    use std::sync::Arc;
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir()
+        .join(format!("mars-chaos-test-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).expect("tmp dir");
+
+    let gen_req = |id: usize| {
+        format!(
+            "{{\"id\": {id}, \"prompt\": \"Q: 21+17=?\\nA: \", \"method\": \
+             \"eagle_tree\", \"policy\": \"mars:0.9\", \"max_new\": 12, \
+             \"seed\": 5, \"cache\": false}}"
+        )
+    };
+
+    // ---- wave 1: dispatch faults at rate 0.2 on every replica --------
+    // Every request must still reach a terminal reply (ok or a typed
+    // error naming the injected fault), the failure counters must land
+    // on the snapshot and the trace, and the gauges must reconcile.
+    {
+        let trace_path = tmp.join("chaos-trace.jsonl");
+        let mut rcfg = RouterConfig::new(&dir);
+        rcfg.replicas = 2;
+        rcfg.slots = 2;
+        rcfg.fault =
+            Some(FaultSpec::parse("dispatch=0.2,seed=11").expect("spec"));
+        rcfg.trace = Some(Arc::new(
+            TraceWriter::create(&trace_path).expect("trace"),
+        ));
+        let router = Arc::new(Router::start(rcfg).expect("router"));
+        let handle =
+            server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+        let addr = handle.addr.to_string();
+        let (mut ok, mut failed) = (0usize, 0usize);
+        for id in 0..16 {
+            let resp = server::client_roundtrip(&addr, &gen_req(500 + id))
+                .expect("terminal reply");
+            if resp.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+                ok += 1;
+            } else {
+                failed += 1;
+                assert!(
+                    resp.get("error").is_some(),
+                    "failed reply lacks an error: {}",
+                    resp.to_string_json()
+                );
+            }
+        }
+        assert_eq!(ok + failed, 16, "a request went missing");
+        assert!(ok > 0, "rate-0.2 faults killed every request");
+        let snap = server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#)
+            .expect("metrics");
+        if failed > 0 {
+            let dispatch_failed = snap
+                .path(&["failures", "dispatch_failed"])
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0);
+            assert!(
+                dispatch_failed > 0,
+                "failures absent from the snapshot: {}",
+                snap.to_string_json()
+            );
+        }
+        // health gauge: both replicas reported a state
+        assert!(
+            snap.path(&["health", "0"]).is_some()
+                && snap.path(&["health", "1"]).is_some(),
+            "replica health missing from the snapshot: {}",
+            snap.to_string_json()
+        );
+        // gauges reconcile at drain: nothing active, nothing queued
+        assert_eq!(router.active_total(), 0, "load gauge leaked");
+        assert_eq!(router.queued_total(), 0, "queued gauge leaked");
+        drop(handle);
+        if failed > 0 {
+            let s = summarize(&trace_path).expect("summarize");
+            assert!(
+                s.fault_events > 0,
+                "injected faults left no failure-semantics trace lines"
+            );
+        }
+    }
+
+    // ---- wave 2: kill replica 0 outright, router fails over ----------
+    // dispatch=1.0 scoped to replica 0: its admission-failure streak
+    // trips the supervisor into Down, the router's pick mask drops it,
+    // and later requests succeed on replica 1. Requests that died on
+    // replica 0 got typed (mostly retriable) errors, never silence.
+    {
+        let mut rcfg = RouterConfig::new(&dir);
+        rcfg.replicas = 2;
+        rcfg.slots = 2;
+        rcfg.fault = Some(
+            FaultSpec::parse("dispatch=1.0,rebuild=1.0,seed=3,only=0")
+                .expect("spec"),
+        );
+        let router = Arc::new(Router::start(rcfg).expect("router"));
+        let handle =
+            server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+        let addr = handle.addr.to_string();
+        let mut reference: Option<String> = None;
+        for id in 0..24 {
+            let resp = server::client_roundtrip(&addr, &gen_req(600 + id))
+                .expect("terminal reply");
+            if resp.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+                // survivors all ran the same T=0 request on replica 1
+                let text = resp
+                    .get("text")
+                    .and_then(|t| t.as_str())
+                    .expect("ok reply has text")
+                    .to_string();
+                if let Some(r) = &reference {
+                    assert_eq!(
+                        &text, r,
+                        "failover changed a deterministic output"
+                    );
+                } else {
+                    reference = Some(text);
+                }
+            }
+        }
+        assert!(
+            reference.is_some(),
+            "no request ever succeeded after failover"
+        );
+        let healths = router.healths();
+        assert_eq!(
+            healths[0],
+            ReplicaHealth::Down,
+            "replica 0 should be Down after its failure streak: {healths:?}"
+        );
+        assert_eq!(healths[1], ReplicaHealth::Up, "{healths:?}");
+        // once Down, the router must stop selecting replica 0: a fresh
+        // burst must be all-ok
+        for id in 0..4 {
+            let resp = server::client_roundtrip(&addr, &gen_req(650 + id))
+                .expect("terminal reply");
+            assert_eq!(
+                resp.get("ok").and_then(|b| b.as_bool()),
+                Some(true),
+                "router still routes to the downed replica: {}",
+                resp.to_string_json()
+            );
+        }
+        let snap = server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#)
+            .expect("metrics");
+        assert!(
+            snap.path(&["failures", "replica_down"])
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0)
+                > 0,
+            "replica_down not counted: {}",
+            snap.to_string_json()
+        );
+        assert_eq!(
+            snap.path(&["health", "0"]).and_then(|v| v.as_str()),
+            Some("down"),
+            "health gauge disagrees: {}",
+            snap.to_string_json()
+        );
+        assert_eq!(router.active_total(), 0, "load gauge leaked");
+    }
+
+    // ---- wave 3: per-request deadline — partial text, not an error ---
+    {
+        let mut rcfg = RouterConfig::new(&dir);
+        rcfg.slots = 2;
+        let router = Arc::new(Router::start(rcfg).expect("router"));
+        let handle =
+            server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+        let addr = handle.addr.to_string();
+        let resp = server::client_roundtrip(
+            &addr,
+            "{\"id\": 700, \"prompt\": \"Tell me a story. \", \
+             \"max_new\": 2048, \"seed\": 3, \"deadline_ms\": 1}",
+        )
+        .expect("deadline reply");
+        assert_eq!(
+            resp.get("ok").and_then(|b| b.as_bool()),
+            Some(true),
+            "a deadline reply is partial success, not an error: {}",
+            resp.to_string_json()
+        );
+        assert_eq!(
+            resp.get("deadline_exceeded").and_then(|b| b.as_bool()),
+            Some(true),
+            "deadline_exceeded missing: {}",
+            resp.to_string_json()
+        );
+        let tokens = resp.get("tokens").and_then(|t| t.as_usize()).unwrap();
+        assert!(tokens < 2048, "deadline did not stop generation: {tokens}");
+        // without the field, the same request runs to its budget
+        let resp = server::client_roundtrip(
+            &addr,
+            "{\"id\": 701, \"prompt\": \"Q: 2+2=?\\nA: \", \"max_new\": 8, \
+             \"seed\": 3}",
+        )
+        .expect("no-deadline reply");
+        assert!(resp.get("deadline_exceeded").is_none());
+        assert_eq!(router.active_total(), 0, "load gauge leaked");
+    }
+
+    // ---- wave 4: overload shedding — typed busy, nothing executed ----
+    {
+        let mut rcfg = RouterConfig::new(&dir);
+        rcfg.shed_above = Some(0); // shed everything: backlog >= 0
+        let router = Arc::new(Router::start(rcfg).expect("router"));
+        let handle =
+            server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+        let addr = handle.addr.to_string();
+        let resp = server::client_roundtrip(&addr, &gen_req(800))
+            .expect("busy reply");
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(
+            resp.get("busy").and_then(|b| b.as_bool()),
+            Some(true),
+            "shed reply not flagged busy: {}",
+            resp.to_string_json()
+        );
+        assert_eq!(
+            resp.get("retriable").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+        assert!(
+            resp.get("retry_after_ms")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0)
+                >= 50,
+            "retry_after_ms hint missing: {}",
+            resp.to_string_json()
+        );
+        let snap = server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#)
+            .expect("metrics");
+        assert!(
+            snap.path(&["failures", "shed"])
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0)
+                > 0,
+            "shed not counted: {}",
+            snap.to_string_json()
+        );
+        let _ = handle;
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// Chaos on the batched path (DESIGN.md §13): a mid-decode step fault
+/// drains the whole batch; the supervisor requeues the innocent lanes
+/// and, after the session rebuild, they decode to exactly the tokens a
+/// fault-free run produces (T=0) — requeue preserves determinism. Lanes
+/// that exhaust the requeue budget get a typed retriable error instead.
+#[test]
+fn chaos_batched_requeue_token_identity() {
+    use mars::coordinator::router::{Router, RouterConfig};
+    use mars::coordinator::server;
+    use mars::fault::FaultSpec;
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::Arc;
+    let Some(dir) = artifacts_dir() else { return };
+    {
+        let a = Artifacts::load(&dir).expect("artifacts load");
+        if !a.executable_names().iter().any(|n| n == "batch_join") {
+            eprintln!("[skip] artifacts predate batched decoding");
+            return;
+        }
+    }
+    let gen_req = |id: usize| {
+        format!(
+            "{{\"id\": {id}, \"prompt\": \"Q: 21+17=?\\nA: \", \"method\": \
+             \"eagle_tree\", \"policy\": \"mars:0.9\", \"max_new\": 16, \
+             \"seed\": 5, \"cache\": false}}\n"
+        )
+    };
+
+    // fault-free reference output for the T=0 request
+    let reference = {
+        let mut rcfg = RouterConfig::new(&dir);
+        rcfg.slots = 4;
+        rcfg.batch = 4;
+        let router = Arc::new(Router::start(rcfg).expect("router"));
+        let handle =
+            server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+        let resp = server::client_roundtrip(
+            &handle.addr.to_string(),
+            gen_req(900).trim(),
+        )
+        .expect("reference");
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+        resp.get("text").and_then(|t| t.as_str()).unwrap().to_string()
+    };
+
+    // same requests under injected step faults: every lane terminates,
+    // and every lane that terminates ok is token-identical to reference
+    let mut rcfg = RouterConfig::new(&dir);
+    rcfg.slots = 4;
+    rcfg.batch = 4;
+    rcfg.fault =
+        Some(FaultSpec::parse("dispatch=0.15,seed=23").expect("spec"));
+    let router = Arc::new(Router::start(rcfg).expect("router"));
+    let handle = server::serve(router.clone(), "127.0.0.1:0").expect("serve");
+    let addr = handle.addr.to_string();
+    let mut sock = std::net::TcpStream::connect(&addr).expect("connect");
+    let batch: String = (901..909).map(gen_req).collect();
+    sock.write_all(batch.as_bytes()).expect("write batch");
+    let mut reader = BufReader::new(sock);
+    let (mut ok, mut retriable, mut hard) = (0usize, 0usize, 0usize);
+    for _ in 0..8 {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read reply");
+        let v = mars::util::json::Value::parse(&line).expect("json");
+        if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+            ok += 1;
+            assert_eq!(
+                v.get("text").and_then(|t| t.as_str()),
+                Some(reference.as_str()),
+                "a requeued lane diverged from the fault-free output"
+            );
+        } else if v.get("retriable").and_then(|b| b.as_bool()) == Some(true)
+        {
+            retriable += 1;
+        } else {
+            hard += 1;
+        }
+    }
+    assert_eq!(ok + retriable + hard, 8, "a lane never terminated");
+    assert!(ok > 0, "every lane died under rate-0.15 faults");
+    // the supervisor left the gauges consistent after the drain/requeue
+    assert_eq!(router.active_total(), 0, "load gauge leaked");
+    assert_eq!(router.queued_total(), 0, "queued gauge leaked");
+    let snap = server::client_roundtrip(&addr, r#"{"cmd": "metrics"}"#)
+        .expect("metrics");
+    if ok < 8 || retriable > 0 {
+        assert!(
+            snap.get("failures").is_some(),
+            "faulted wave exported no failure counters: {}",
+            snap.to_string_json()
+        );
+    }
 }

@@ -28,6 +28,14 @@
 //! * **gauge never wraps mid-flight** — the hint stays below the wrap
 //!   region at every decrement.
 //!
+//! A kill/restart model layers the supervision protocol of
+//! `coordinator/replica.rs` on top: a dispatch fault kills the batch,
+//! the victim lane is error-replied, innocent lanes are *requeued*
+//! (gauge up **before** re-publish, exactly like `submit`) and the
+//! restarted replica re-admits them — the same conservation and
+//! no-double-decrement invariants must hold across the kill/restart
+//! boundary.
+//!
 //! A fourth model covers the sharded metrics registry
 //! (`coordinator/metrics.rs`, DESIGN.md §12): racing per-replica
 //! recorders vs merge-on-snapshot vs the `reset` RPC, with the real
@@ -227,6 +235,95 @@ fn loom_failed_send_undo_balances_the_gauge() {
         t2.join().unwrap();
         replica_pass(&s, 1, false);
         check_final(&s, 1);
+    });
+}
+
+/// One supervised kill: admit what the planner allows, then fail the
+/// dispatch. The first admitted lane is the victim (its requeue budget
+/// is exhausted → error reply); every other lane is innocent and goes
+/// back to the queue — outcome cell cleared and `queued_hint` bumped
+/// *before* the re-publish, the exact `ctl.queued.fetch_add(1)` /
+/// `pending.push_front` pairing of the real supervisor. Items the
+/// planner skipped keep their original hint and simply stay queued for
+/// the restarted replica.
+fn replica_kill_requeue(s: &Shared, slots: usize) {
+    let mut pending: Vec<usize> = s.queue.lock().unwrap().drain(..).collect();
+    let mut occupancy = 0usize;
+    let mut admitted: Vec<usize> = Vec::new();
+    while !pending.is_empty() {
+        let families: Vec<&str> =
+            pending.iter().map(|&i| s.items[i].family).collect();
+        let running = admitted.first().map(|&i| s.items[i].family);
+        let plan = plan_admissions(occupancy, slots, running, &families);
+        if plan.is_empty() {
+            break;
+        }
+        let mut taken = 0usize;
+        for &idx in &plan {
+            let item_idx = pending.remove(idx - taken);
+            taken += 1;
+            *s.items[item_idx].outcome.lock().unwrap() = Some(true);
+            admitted.push(item_idx);
+            occupancy += 1;
+            let before = s.queued_hint.fetch_sub(1, Ordering::Relaxed);
+            assert!(before > 0, "queued_hint underflow at admission ack");
+            s.active.store(occupancy, Ordering::Relaxed);
+        }
+    }
+    if let Some((&victim, innocent)) = admitted.split_first() {
+        // the victim's budget is spent: terminal error reply
+        *s.items[victim].outcome.lock().unwrap() = Some(false);
+        // innocent lanes: revoke the ack and requeue, gauge-first
+        for &i in innocent {
+            *s.items[i].outcome.lock().unwrap() = None;
+            s.queued_hint.fetch_add(1, Ordering::Relaxed);
+            s.queue.lock().unwrap().push(i);
+        }
+    }
+    // planner-skipped leftovers never lost their hint: back in queue
+    let mut q = s.queue.lock().unwrap();
+    for item_idx in pending.drain(..) {
+        q.push(item_idx);
+    }
+    drop(q);
+    s.active.store(0, Ordering::Relaxed);
+}
+
+/// Kill/restart interleaving (supervision protocol): submits race a
+/// replica kill that requeues its innocent lanes; the restarted
+/// replica then re-admits everything still queued. Whatever loom
+/// interleaves, every item must end admitted or error-replied exactly
+/// once and the queue gauge must balance — the requeue `fetch_add`
+/// must pair with exactly one later admission `fetch_sub`.
+#[test]
+fn loom_kill_restart_requeues_innocent_lanes_and_balances() {
+    loom::model(|| {
+        let s = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            queued_hint: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            // same family: both racing items are admissible into one
+            // batch, so the kill has an innocent batchmate to requeue
+            items: items(&["sps_batch", "sps_batch", "sps_batch"]),
+        });
+        let s1 = s.clone();
+        let t1 = thread::spawn(move || submit(&s1, 0));
+        let s2 = s.clone();
+        let t2 = thread::spawn(move || submit(&s2, 1));
+        let s3 = s.clone();
+        let t3 = thread::spawn(move || replica_kill_requeue(&s3, 2));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        t3.join().unwrap();
+        // restart era: a fresh request arrives and the rebuilt replica
+        // drains the queue (requeued innocents + whatever the kill
+        // pass never saw) without further faults
+        submit(&s, 2);
+        // the rebuilt replica is given enough slots to drain the whole
+        // backlog in one pass (the model's pass, unlike the real loop,
+        // does not iterate once occupancy hits the slot cap)
+        replica_pass(&s, 3, false);
+        check_final(&s, 3);
     });
 }
 

@@ -1398,11 +1398,16 @@ fn prop_histogram_quantile_error_bounded() {
 }
 
 fn random_trace_event(rng: &mut Rng) -> TraceEvent {
-    let phase = match rng.below(5) {
+    let phase = match rng.below(10) {
         0 => Phase::Queue,
         1 => Phase::Prefill,
         2 => Phase::Round,
         3 => Phase::Commit,
+        4 => Phase::Fault,
+        5 => Phase::Requeue,
+        6 => Phase::Health,
+        7 => Phase::Deadline,
+        8 => Phase::Shed,
         _ => Phase::Error,
     };
     let mut ev = TraceEvent::new(
@@ -1430,6 +1435,9 @@ fn random_trace_event(rng: &mut Rng) -> TraceEvent {
     }
     if rng.below(2) == 0 {
         ev.method = Some(random_method(rng).name().to_string());
+    }
+    if rng.below(2) == 0 {
+        ev.detail = Some(random_word(rng));
     }
     if phase == Phase::Round {
         ev.round = Some(RoundEvent {
@@ -1566,4 +1574,149 @@ fn prop_registry_memory_stays_bounded_under_load() {
         after, settled,
         "registry grew {settled} -> {after} bytes under pure request load"
     );
+}
+
+// ------------------------------------------ failure semantics (§13) -----
+
+use mars::coordinator::replica::{requeue_next_retries, MAX_REQUEUES};
+use mars::fault::{backoff_bound_ms, backoff_ms, FaultSpec};
+
+#[test]
+fn prop_backoff_bound_monotone_capped_over_random_configs() {
+    let mut rng = Rng::new(900);
+    for case in 0..200 {
+        let base = 1 + rng.below(200);
+        let cap = base + rng.below(20_000);
+        let mut prev = 0u64;
+        for attempt in 0..70u32 {
+            let b = backoff_bound_ms(attempt, base, cap);
+            assert!(
+                b >= prev,
+                "case {case}: bound shrank {prev} -> {b} at attempt \
+                 {attempt} (base={base}, cap={cap})"
+            );
+            assert!(b <= cap, "case {case}: bound {b} above cap {cap}");
+            assert!(b >= base.min(cap), "case {case}: bound {b} below base");
+            prev = b;
+        }
+        // the cap is reached, not just approached: exponential growth
+        // saturates well before attempt 70
+        assert_eq!(
+            backoff_bound_ms(69, base, cap),
+            cap,
+            "case {case}: bound never reached the cap"
+        );
+    }
+}
+
+#[test]
+fn prop_backoff_jitter_stays_in_equal_jitter_band() {
+    let mut rng = Rng::new(901);
+    for case in 0..500 {
+        let base = 1 + rng.below(100);
+        let cap = base + rng.below(10_000);
+        let attempt = rng.below(20) as u32;
+        let bound = backoff_bound_ms(attempt, base, cap);
+        let ms = backoff_ms(attempt, base, cap, &mut rng);
+        assert!(
+            ms >= bound / 2 && ms <= bound,
+            "case {case}: jittered {ms} outside [{}, {bound}]",
+            bound / 2
+        );
+    }
+}
+
+#[test]
+fn prop_fault_spec_label_parse_round_trips() {
+    let mut rng = Rng::new(902);
+    for case in 0..300 {
+        // rates as exact nonzero thousandths: `{}` on these f64s prints
+        // the same digits back, and a 0-rate part would be (correctly)
+        // dropped from the canonical label, breaking spec equality
+        fn rate(rng: &mut Rng) -> f64 {
+            (1 + rng.below(999)) as f64 / 1000.0
+        }
+        let mut parts = Vec::new();
+        if rng.below(2) == 0 {
+            parts.push(format!("dispatch={}", rate(&mut rng)));
+        }
+        if rng.below(2) == 0 {
+            parts.push(format!(
+                "latency={}:{}",
+                rate(&mut rng),
+                1 + rng.below(500)
+            ));
+        }
+        if rng.below(2) == 0 {
+            parts.push(format!("rebuild={}", rate(&mut rng)));
+        }
+        parts.push(format!("seed={}", rng.below(1 << 30)));
+        if rng.below(2) == 0 {
+            parts.push(format!("only={}", rng.below(8)));
+        }
+        let raw = parts.join(",");
+        let spec = FaultSpec::parse(&raw)
+            .unwrap_or_else(|e| panic!("case {case}: {raw:?}: {e}"));
+        let label = spec.label();
+        let back = FaultSpec::parse(&label)
+            .unwrap_or_else(|e| panic!("case {case}: label {label:?}: {e}"));
+        assert_eq!(spec, back, "case {case}: label round-trip changed the spec");
+        assert_eq!(back.label(), label, "case {case}: label not canonical");
+    }
+}
+
+#[test]
+fn prop_fault_plan_streams_deterministic_and_forked_per_replica() {
+    let mut rng = Rng::new(903);
+    for case in 0..50 {
+        let spec = FaultSpec {
+            dispatch_rate: 0.3 + rng.f64() * 0.4,
+            seed: rng.below(1 << 30),
+            ..FaultSpec::default()
+        };
+        let draws = |replica: usize| -> Vec<bool> {
+            let plan = spec
+                .build(replica)
+                .unwrap_or_else(|| panic!("case {case}: plan filtered"));
+            (0..96).map(|_| plan.dispatch_fault()).collect()
+        };
+        // same (seed, replica) twice -> identical stream (reproducible
+        // chaos runs); sibling replicas -> distinct forked streams
+        assert_eq!(draws(0), draws(0), "case {case}: stream not stable");
+        assert_eq!(draws(3), draws(3), "case {case}: stream not stable");
+        assert_ne!(
+            draws(0),
+            draws(1),
+            "case {case}: replicas share one fault stream"
+        );
+    }
+}
+
+#[test]
+fn prop_requeue_budget_exhausts_in_bounded_steps() {
+    // a lane that gets victimized by every single batch fault must reach
+    // a terminal outcome after exactly MAX_REQUEUES requeues — never an
+    // unbounded retry loop, never a silent drop — and the retry counter
+    // must climb one per requeue, monotone
+    let mut retries = 0u32;
+    let mut requeues = 0usize;
+    loop {
+        match requeue_next_retries(retries) {
+            Some(next) => {
+                assert_eq!(next, retries + 1, "retry counter must be monotone");
+                retries = next;
+                requeues += 1;
+                assert!(
+                    requeues <= MAX_REQUEUES as usize,
+                    "budget exceeded: {requeues} requeues"
+                );
+            }
+            None => break,
+        }
+    }
+    assert_eq!(requeues, MAX_REQUEUES as usize);
+    // exhaustion is absorbing: once over budget, always terminal
+    for r in MAX_REQUEUES..MAX_REQUEUES + 10 {
+        assert_eq!(requeue_next_retries(r), None, "budget not absorbing at {r}");
+    }
 }

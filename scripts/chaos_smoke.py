@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Chaos smoke checker for `mars serve` under fault injection
+(DESIGN.md §13).
+
+Drives generations against a server started with a deterministic
+`--fault-plan` (typically `dispatch=1.0,rebuild=1.0,seed=N,only=0`
+over two replicas, so replica 0 is killed early and the router must
+fail over) and checks the failure-semantics acceptance bar from the
+client's seat:
+
+* every request reaches exactly one terminal reply — `"ok": true`, a
+  typed retriable error (`"retriable": true`), or a busy rejection
+  (`"busy": true` with `"retry_after_ms"`); nothing hangs (a hard
+  per-request wall deadline aborts the run with a named error);
+* at least one request succeeds even with a replica down (failover);
+* a request carrying `"deadline_ms": 1` still replies `"ok": true`
+  with partial text and `"deadline_exceeded": true` — a truncation,
+  not a failure;
+* the final `{"cmd": "metrics"}` snapshot is written to --out for the
+  CI jq gate (failure counters + per-replica health).
+
+Stdlib only (CI runs it bare). Exit 0 on success; the first violation
+is printed to stderr and exits 1.
+"""
+
+import argparse
+import json
+import socket
+import sys
+import time
+
+
+def die(msg: str) -> None:
+    print(f"chaos_smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def rpc(addr: str, payload: dict, timeout: float = 120.0) -> dict:
+    """One line-JSON request/reply round trip on a fresh connection.
+
+    The socket timeout is the client-side wall deadline: a server that
+    wedges instead of replying fails the smoke with a named error
+    rather than hanging the CI job.
+    """
+    host, port = addr.rsplit(":", 1)
+    try:
+        with socket.create_connection((host, int(port)), timeout=timeout) as s:
+            s.sendall((json.dumps(payload) + "\n").encode())
+            buf = b""
+            while not buf.endswith(b"\n"):
+                chunk = s.recv(65536)
+                if not chunk:
+                    die(f"connection closed mid-reply to {payload}")
+                buf += chunk
+    except socket.timeout:
+        die(f"client wall deadline ({timeout:.0f}s) hit waiting on {payload}")
+    return json.loads(buf.decode())
+
+
+def wait_ready(addr: str, timeout_s: float) -> None:
+    deadline = time.monotonic() + timeout_s
+    last = "never connected"
+    while time.monotonic() < deadline:
+        try:
+            if rpc(addr, {"cmd": "ping"}, timeout=2.0).get("pong"):
+                return
+            last = "ping reply without pong"
+        except OSError as e:
+            last = str(e)
+        time.sleep(0.25)
+    die(f"server at {addr} not ready after {timeout_s:.0f}s ({last})")
+
+
+def classify(reply: dict) -> str:
+    """Bucket a reply into its terminal class, or die on a non-answer."""
+    if reply.get("busy"):
+        if not isinstance(reply.get("retry_after_ms"), int):
+            die(f"busy reply without retry_after_ms: {reply}")
+        return "busy"
+    if reply.get("ok"):
+        return "ok"
+    if reply.get("error"):
+        return "retriable" if reply.get("retriable") else "hard"
+    die(f"non-terminal reply shape: {reply}")
+    raise AssertionError  # unreachable; die() exits
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--addr", required=True, help="line-JSON TCP host:port")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="faulted generations to drive")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--out", help="write the final metrics snapshot here")
+    ap.add_argument("--wall", type=float, default=120.0,
+                    help="per-request client wall deadline, seconds")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="server readiness timeout, seconds")
+    ap.add_argument("--shutdown", action="store_true",
+                    help='send {"cmd": "shutdown"} after the checks pass')
+    args = ap.parse_args()
+
+    wait_ready(args.addr, args.timeout)
+
+    counts = {"ok": 0, "retriable": 0, "busy": 0, "hard": 0}
+    for i in range(args.requests):
+        reply = rpc(args.addr, {
+            "id": i + 1,
+            "prompt": f"chaos smoke {i}",
+            "policy": "mars:0.9",
+            "max_new": args.max_new,
+            "seed": i + 1,
+        }, timeout=args.wall)
+        counts[classify(reply)] += 1
+    total = sum(counts.values())
+    if total != args.requests:
+        die(f"lost replies: {total} terminal of {args.requests} sent")
+    if counts["hard"]:
+        die(f"{counts['hard']} hard (non-retriable) errors: {counts}")
+    if counts["ok"] < 1:
+        die(f"no request succeeded — failover broken: {counts}")
+    print(f"chaos_smoke: terminal accounting OK: {counts}")
+
+    # deadline semantics: with the dead replica skipped, a 1 ms budget
+    # must truncate, not fail — partial text plus the marker field
+    reply = rpc(args.addr, {
+        "id": 9001,
+        "prompt": "deadline probe",
+        "policy": "mars:0.9",
+        "max_new": 2048,
+        "seed": 1,
+        "deadline_ms": 1,
+    }, timeout=args.wall)
+    kind = classify(reply)
+    if kind == "ok":
+        if reply.get("deadline_exceeded") is not True:
+            die(f"1ms-deadline reply lacks deadline_exceeded: {reply}")
+        if reply.get("tokens", 2048) >= 2048:
+            die(f"deadline did not truncate: {reply.get('tokens')} tokens")
+        print("chaos_smoke: deadline truncation OK "
+              f"({reply.get('tokens')} tokens)")
+    elif kind != "retriable":
+        die(f"deadline probe reached a non-terminal class {kind}: {reply}")
+
+    snapshot = rpc(args.addr, {"cmd": "metrics"})
+    if not isinstance(snapshot.get("failures"), dict):
+        die(f'snapshot carries no "failures" object: {list(snapshot)}')
+    if not isinstance(snapshot.get("health"), dict):
+        die(f'snapshot carries no "health" object: {list(snapshot)}')
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(snapshot, f)
+
+    if args.shutdown:
+        rpc(args.addr, {"cmd": "shutdown"})
+    print("chaos_smoke: PASS")
+
+
+if __name__ == "__main__":
+    main()
